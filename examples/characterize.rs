@@ -1,0 +1,36 @@
+//! Full characterization sweep: regenerates every figure/table of the
+//! paper's evaluation in one run and prints per-workload reports.
+//!
+//! Run: `cargo run --release --example characterize`
+use nscog::figures;
+use nscog::platform::Platform;
+use nscog::profiler::report::WorkloadReport;
+use nscog::workloads::all_workloads;
+
+fn main() {
+    println!("=== per-workload characterization (RTX 2080 Ti model) ===");
+    let gpu = Platform::rtx2080ti();
+    for w in all_workloads() {
+        let r = WorkloadReport::build(&w.trace(), w.memory(), vec![], &gpu);
+        println!("{}", r.summary_line());
+    }
+    println!();
+    for (title, t) in [
+        ("Fig. 2a", figures::fig2a()),
+        ("Fig. 2b", figures::fig2b()),
+        ("Fig. 2c", figures::fig2c()),
+        ("Fig. 3a", figures::fig3a()),
+        ("Fig. 3b", figures::fig3b()),
+        ("Fig. 3c", figures::fig3c()),
+        ("Fig. 4", figures::fig4()),
+        ("Tab. IV", figures::tab4()),
+        ("Fig. 5", figures::fig5()),
+        ("Fig. 9", figures::fig9()),
+        ("Fig. 11a", figures::fig11a()),
+        ("Fig. 11b", figures::fig11b()),
+    ] {
+        println!("== {title} ==");
+        t.print();
+        println!();
+    }
+}

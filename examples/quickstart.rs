@@ -1,0 +1,46 @@
+//! Quickstart: the VSA substrate and accelerator simulator in ~60 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+use nscog::accel::isa::ControlMethod;
+use nscog::accel::AccelConfig;
+use nscog::util::Rng;
+use nscog::vsa::{BinaryCodebook, RealCodebook, Resonator};
+use nscog::workloads::suite::{CompiledSuite, SuiteKind};
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    // 1. Hypervector algebra: bind two symbols, recover one.
+    let cb = BinaryCodebook::random(&mut rng, 16, 8192);
+    let bound = cb.item(3).bind(cb.item(11));
+    let recovered = bound.bind(cb.item(3)); // XOR is self-inverse
+    let (idx, _) = cb.nearest(&recovered);
+    println!("bind/unbind roundtrip: item 11 recovered as {idx}");
+    assert_eq!(idx, 11);
+
+    // 2. Resonator network: factorize a 3-factor composition.
+    let codebooks: Vec<RealCodebook> = (0..3)
+        .map(|_| RealCodebook::random_bipolar(&mut rng, 10, 1024))
+        .collect();
+    let resonator = Resonator::new(codebooks, 60);
+    let scene = resonator.compose(&[4, 7, 2]);
+    let result = resonator.factorize(&scene);
+    println!(
+        "resonator factorized to {:?} in {} iterations (converged: {})",
+        result.indices, result.iterations, result.converged
+    );
+    assert_eq!(result.indices, vec![4, 7, 2]);
+
+    // 3. The paper's accelerator: run REACT on Acc4 under both controls.
+    for control in [ControlMethod::Sopc, ControlMethod::Mopc] {
+        let mut suite = CompiledSuite::build(SuiteKind::React, AccelConfig::acc4(), 17);
+        let r = suite.run(control);
+        println!(
+            "REACT on Acc4 [{control}]: {} cycles, {}, avg power {:.2} mW",
+            r.cycles,
+            nscog::util::stats::fmt_time(r.time_s),
+            r.avg_power_w() * 1e3
+        );
+    }
+    println!("quickstart OK");
+}

@@ -1,0 +1,94 @@
+//! END-TO-END driver: the full three-layer stack on a real (synthetic)
+//! RPM workload.
+//!
+//!   L2/L1 (build time): `make artifacts` lowered the NVSA ConvNet
+//!   frontend + Pallas VSA kernels to HLO text.
+//!   L3 (this binary): loads the artifacts via PJRT, renders RPM panels,
+//!   runs the neural frontend, then solves each puzzle with BOTH symbolic
+//!   engines (NVSA hypervector path and PrAE probabilistic path),
+//!   measuring the neural/symbolic phase split — the paper's Fig. 2a
+//!   observation reproduced live.
+//!
+//! Run: `make artifacts && cargo run --release --example raven_e2e`
+use nscog::coordinator::PhaseMetrics;
+use nscog::profiler::taxonomy::PhaseKind;
+use nscog::runtime::{Runtime, Tensor};
+use nscog::util::Rng;
+use nscog::workloads::nvsa::{Nvsa, NvsaEngine};
+use nscog::workloads::prae::Prae;
+use nscog::workloads::raven::{self, N_ATTRS};
+
+/// Render a panel's attributes into a 32x32 image the frontend can see:
+/// attribute values modulate coarse spatial frequency patterns. (The
+/// frontend is untrained — characterization needs realistic tensor
+/// traffic, not accuracy — so the symbolic engines consume oracle PMFs
+/// while the frontend supplies the measured neural phase.)
+fn render(panel: &[u8; N_ATTRS], img: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut out = vec![0.0f32; img * img];
+    for (y, row) in out.chunks_mut(img).enumerate() {
+        for (x, v) in row.iter_mut().enumerate() {
+            let a = panel[0] as f32 * 0.4 + 1.0;
+            let b = panel[1] as f32 * 0.3 + 0.5;
+            let c = panel[2] as f32 * 0.2;
+            *v = ((x as f32 * a / 5.0).sin() * (y as f32 * b / 7.0).cos() + c / 4.0
+                + rng.normal() as f32 * 0.05)
+                .tanh();
+        }
+    }
+    out
+}
+
+fn main() {
+    let mut rt = match Runtime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+    let dims = rt.manifest.dims;
+    let grid = 3usize;
+    let n_puzzles = 8;
+    let mut rng = Rng::new(2024);
+    let nvsa = NvsaEngine::new(Nvsa { grid, ..Default::default() }, 1);
+    let prae = Prae { grid, ..Default::default() };
+    let mut metrics = PhaseMetrics::default();
+    let mut nvsa_ok = 0;
+    let mut prae_ok = 0;
+
+    for p in 0..n_puzzles {
+        let inst = raven::generate(&mut rng, grid, dims.attr_k);
+        // ---- neural phase: render panels, run the AOT'd frontend -------
+        let mut data = Vec::with_capacity(dims.panels * dims.img * dims.img);
+        for panel in inst.context().iter().chain(inst.candidates.iter()) {
+            data.extend(render(panel, dims.img, &mut rng));
+        }
+        let panels = Tensor::new(vec![dims.panels, dims.img, dims.img, 1], data);
+        let outs = metrics.time(format!("nvsa_frontend p{p}"), PhaseKind::Neural, || {
+            rt.run("nvsa_frontend", &[panels]).expect("frontend")
+        });
+        assert_eq!(outs.len(), dims.n_attrs);
+
+        // ---- symbolic phase: both engines on the scene PMFs ------------
+        let pmfs = raven::panel_pmfs(&inst, 0.95);
+        let sn = metrics.time(format!("nvsa_reason p{p}"), PhaseKind::Symbolic, || {
+            nvsa.solve(&inst, &pmfs)
+        });
+        let sp = metrics.time(format!("prae_reason p{p}"), PhaseKind::Symbolic, || {
+            prae.solve(&inst, &pmfs)
+        });
+        nvsa_ok += sn.correct as usize;
+        prae_ok += sp.correct as usize;
+    }
+
+    println!("\nper-phase wall clock:");
+    print!("{}", metrics.report());
+    println!(
+        "\naccuracy over {n_puzzles} puzzles: NVSA {:.0}%  PrAE {:.0}%",
+        nvsa_ok as f64 / n_puzzles as f64 * 100.0,
+        prae_ok as f64 / n_puzzles as f64 * 100.0,
+    );
+    assert!(nvsa_ok + prae_ok >= n_puzzles, "symbolic engines degenerate");
+    println!("raven_e2e OK — all three layers composed");
+}

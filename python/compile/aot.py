@@ -1,0 +1,127 @@
+"""AOT compiler: lower every L2 entry point to HLO text + a manifest.
+
+Interchange format is HLO *text*, NOT serialized HloModuleProto — the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit
+instruction ids; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces artifacts/<name>.hlo.txt per artifact plus artifacts/manifest.json
+describing input/output shapes+dtypes for the Rust runtime
+(rust/src/runtime/artifact.rs).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def _s(*shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+D = model.HD_DIM
+N = model.CODEBOOK_N
+K = model.ATTR_K
+P = model.NVSA_PANELS
+IMG = model.IMG
+
+# name -> (fn, [input specs]).  All fns return tuples (return_tuple=True).
+ARTIFACTS = {
+    "nvsa_frontend": (model.nvsa_frontend, [_s(P, IMG, IMG, 1)]),
+    "pmf_to_vsa": (model.pmf_to_vsa, [_s(P, K), _s(K, D)]),
+    "vsa_to_pmf": (model.vsa_to_pmf, [_s(P, D), _s(K, D)]),
+    "cconv_bind": (model.cconv_bind, [_s(P, D), _s(P, D)]),
+    "hadamard_bind": (model.hadamard_bind, [_s(P, D), _s(P, D)]),
+    "codebook_similarity": (model.codebook_similarity, [_s(N, D), _s(P, D)]),
+    "resonator_step": (
+        model.resonator_step,
+        [_s(D), _s(D), _s(D), _s(N, D)],
+    ),
+    "ltn_grounding": (
+        model.ltn_grounding,
+        [_s(32, model.LTN_FEATURES)],
+    ),
+    "nlm_layer": (
+        model.nlm_layer,
+        [
+            _s(4, model.NLM_OBJS, model.NLM_FEATS),
+            _s(4, model.NLM_OBJS, model.NLM_OBJS, model.NLM_FEATS),
+        ],
+    ),
+    "vsait_encoder": (model.vsait_encoder, [_s(model.VSAIT_BATCH, IMG, IMG, 3)]),
+    "zeroc_energy": (
+        model.zeroc_energy,
+        [_s(8, IMG, IMG, 1), _s(8, model.ZEROC_CONCEPT)],
+    ),
+    "prae_frontend": (model.prae_frontend, [_s(P, IMG, IMG, 1)]),
+    "lnn_grounding": (model.lnn_grounding, [_s(32, model.LNN_GROUND)]),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def compile_all(out_dir: str, only=None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "hd_dim": D,
+        "codebook_n": N,
+        "attr_k": K,
+        "n_attrs": model.N_ATTRS,
+        "panels": P,
+        "img": IMG,
+        "artifacts": {},
+    }
+    for name, (fn, specs) in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = lowered.out_info
+        flat, _ = jax.tree_util.tree_flatten(outs)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [_spec_json(s) for s in specs],
+            "outputs": [_spec_json(o) for o in flat],
+        }
+        print(f"  {name}: {len(text)} chars, "
+              f"{len(specs)} in, {len(flat)} out")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    compile_all(args.out_dir, args.only)
+    print(f"wrote manifest to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+
+from .vsa_ops import bind, bundle, bundle_sign, permute, scalar_mult  # noqa: F401
+from .similarity import similarity, nearest  # noqa: F401
+from .circular_conv import circular_conv, circular_corr  # noqa: F401
+from .resonator import resonator_step  # noqa: F401

@@ -1,0 +1,51 @@
+"""L1 Pallas kernel for circular-convolution binding (NVSA / HRR).
+
+NVSA binds holographic representations with circular convolution.  On GPU
+the paper observes this as a memory-bound streaming op; the TPU rethink is
+to phrase it as a circulant-matrix matmul so it lands on the MXU: build
+C(y)[i, j] = y[(i - j) mod D] and compute z = C(y) @ x.  For our
+hypervector sizes the circulant tile fits VMEM; larger D would block the
+circulant row-wise over the same fold grid.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .vsa_ops import INTERPRET
+
+
+def _cconv_kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...]
+    y = y_ref[...]
+    d = x.shape[-1]
+    idx = (jnp.arange(d)[:, None] - jnp.arange(d)[None, :]) % d
+    circ = y[..., idx]  # (..., D, D) circulant of y
+    o_ref[...] = jnp.einsum("...ij,...j->...i", circ, x).astype(o_ref.dtype)
+
+
+def circular_conv(x, y):
+    """Circular convolution z[i] = sum_j x[j] y[(i-j) mod D], shapes (..., D)."""
+    return pl.pallas_call(
+        _cconv_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x, y)
+
+
+def _ccorr_kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...]
+    y = y_ref[...]
+    d = x.shape[-1]
+    idx = (jnp.arange(d)[None, :] + jnp.arange(d)[:, None]) % d
+    mat = y[..., idx]  # mat[i, j] = y[(j + i) mod D]
+    o_ref[...] = jnp.einsum("...ij,...j->...i", mat, x).astype(o_ref.dtype)
+
+
+def circular_corr(x, y):
+    """Circular correlation (unbinding): z[i] = sum_j x[j] y[(j+i) mod D]."""
+    return pl.pallas_call(
+        _ccorr_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x, y)

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest + hypothesis sweep shapes
+and dtypes and assert_allclose(kernel(...), ref(...)).  Where possible the
+oracle uses a *different* algorithm than the kernel (e.g. FFT circular
+convolution vs. the kernel's circulant matmul) so agreement is meaningful.
+"""
+
+import jax.numpy as jnp
+
+
+def bind_ref(x, y):
+    """Hadamard (elementwise-multiply) binding of bipolar hypervectors."""
+    return x * y
+
+
+def bundle_ref(xs):
+    """Bundling (superposition): elementwise sum over the leading axis."""
+    return jnp.sum(xs, axis=0)
+
+
+def bundle_sign_ref(xs):
+    """Bundling followed by bipolarization (majority vote for odd counts)."""
+    s = jnp.sum(xs, axis=0)
+    return jnp.where(s >= 0, 1.0, -1.0).astype(xs.dtype)
+
+
+def permute_ref(x, shift=1):
+    """Cyclic permutation rho^shift along the last axis."""
+    return jnp.roll(x, shift, axis=-1)
+
+
+def scalar_mult_ref(x, w):
+    """Scalar multiplication of a hypervector."""
+    return x * w
+
+
+def circular_conv_ref(x, y):
+    """Circular convolution binding (NVSA / HRR), via FFT.
+
+    z[i] = sum_j x[j] * y[(i - j) mod D].  The Pallas kernel computes the
+    same quantity with a circulant-matrix matmul, so FFT here is an
+    independent algorithm.
+    """
+    fx = jnp.fft.fft(x)
+    fy = jnp.fft.fft(y)
+    return jnp.real(jnp.fft.ifft(fx * fy)).astype(x.dtype)
+
+
+def circular_corr_ref(x, y):
+    """Circular correlation — the approximate inverse of circular_conv.
+
+    z[i] = sum_j x[j] * y[(j + i) mod D].
+    """
+    fx = jnp.fft.fft(x)
+    fy = jnp.fft.fft(y)
+    return jnp.real(jnp.fft.ifft(jnp.conj(fx) * fy)).astype(x.dtype)
+
+
+def similarity_ref(codebook, queries):
+    """Dot-product similarity of queries (B, D) against codebook (N, D).
+
+    Returns (B, N).  This is the paper's d(y_i, y_bar) with fold
+    aggregation collapsed (the kernel accumulates per-fold partials, the
+    oracle does the whole contraction at once).
+    """
+    return queries @ codebook.T
+
+
+def resonator_step_ref(scene, other1, other2, codebook):
+    """One resonator-network iteration for a single factor.
+
+    x_hat = scene (*) other1 (*) other2           (Hadamard unbinding)
+    scores = codebook @ x_hat                     (similarity, paper's d)
+    est    = sign(codebook^T @ scores)            (projection, paper's c)
+
+    Returns (est (D,), scores (N,)).
+    """
+    x_hat = scene * other1 * other2
+    scores = codebook @ x_hat
+    proj = scores @ codebook
+    est = jnp.where(proj >= 0, 1.0, -1.0).astype(scene.dtype)
+    return est, scores
+
+
+def pmf_to_vsa_ref(pmf, codebook):
+    """NVSA PMF-to-VSA transform: probability-weighted bundling.
+
+    pmf (B, K) x codebook (K, D) -> (B, D).
+    """
+    return pmf @ codebook
+
+
+def vsa_to_pmf_ref(vec, codebook):
+    """NVSA VSA-to-PMF transform: similarity then normalized ReLU."""
+    scores = vec @ codebook.T
+    scores = jnp.maximum(scores, 0.0)
+    denom = jnp.sum(scores, axis=-1, keepdims=True)
+    return scores / jnp.maximum(denom, 1e-9)

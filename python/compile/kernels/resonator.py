@@ -1,0 +1,42 @@
+"""L1 Pallas kernel for one resonator-network iteration (Frady et al.).
+
+The paper's Resonator-Network kernel (Sec. VI-B): factorize a composed
+vector s = a (*) b (*) c by iterating, per factor,
+
+    x_hat  = s (*) b_est (*) c_est       # Hadamard unbinding
+    scores = A @ x_hat                   # similarity d(.) against codebook
+    a_new  = sign(A^T @ scores)          # weighted-bundle projection c(.)
+
+Both contractions are MXU matmuls; the elementwise unbind runs on the VPU.
+One kernel invocation updates one factor; the L2 model laces three of
+these per sweep and the L3 coordinator (or accel simulator) iterates to
+convergence.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .vsa_ops import INTERPRET
+
+
+def _resonator_kernel(s_ref, o1_ref, o2_ref, cb_ref, est_ref, sc_ref):
+    x_hat = s_ref[...] * o1_ref[...] * o2_ref[...]
+    scores = jnp.dot(cb_ref[...], x_hat, preferred_element_type=sc_ref.dtype)
+    proj = jnp.dot(scores, cb_ref[...], preferred_element_type=est_ref.dtype)
+    est_ref[...] = jnp.where(proj >= 0, 1.0, -1.0).astype(est_ref.dtype)
+    sc_ref[...] = scores.astype(sc_ref.dtype)
+
+
+def resonator_step(scene, other1, other2, codebook):
+    """Update one factor's estimate.  Returns (est (D,), scores (N,))."""
+    n, d = codebook.shape
+    dtype = scene.dtype
+    return pl.pallas_call(
+        _resonator_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((d,), dtype),
+            jax.ShapeDtypeStruct((n,), dtype),
+        ),
+        interpret=INTERPRET,
+    )(scene, other1, other2, codebook)

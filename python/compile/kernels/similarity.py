@@ -1,0 +1,55 @@
+"""L1 Pallas kernel for fold-aware similarity search (the DC subsystem).
+
+The paper's distance computation (Sec. VI-C) streams hypervector folds
+through POPCNT/dot units and accumulates *partial* distances in DSUM RF
+before ARGMAX.  The TPU analogue: a grid over folds, each step an
+(N x fold) @ (fold x B) MXU matmul, with the output block revisited across
+grid steps as the DSUM accumulator.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .vsa_ops import INTERPRET, _fold_for
+
+
+def _sim_kernel(cb_ref, q_ref, o_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Partial-distance accumulation: the paper's DSUM-RF += popcount fold.
+    o_ref[...] += jnp.dot(
+        q_ref[...], cb_ref[...].T, preferred_element_type=o_ref.dtype
+    )
+
+
+def similarity(codebook, queries, fold=None):
+    """Dot-product scores of queries (B, D) against codebook (N, D) -> (B, N).
+
+    Accumulates one fold per grid step, mirroring the accelerator's
+    time-multiplexed distance computation.
+    """
+    n, d = codebook.shape
+    b = queries.shape[0]
+    fold = _fold_for(d, fold)
+    return pl.pallas_call(
+        _sim_kernel,
+        grid=(d // fold,),
+        in_specs=[
+            pl.BlockSpec((n, fold), lambda k: (0, k)),
+            pl.BlockSpec((b, fold), lambda k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((b, n), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), queries.dtype),
+        interpret=INTERPRET,
+    )(codebook, queries)
+
+
+def nearest(codebook, queries, fold=None):
+    """Nearest-neighbor search: the paper's e(y) = argmax_i d(y_i, y_bar)."""
+    scores = similarity(codebook, queries, fold)
+    return jnp.argmax(scores, axis=-1), scores

@@ -1,0 +1,138 @@
+"""L1 Pallas kernels for elementwise vector-symbolic operations.
+
+These are the paper's VOP-subsystem operations (Sec. VI-A): binding
+(Hadamard multiply), bundling (elementwise add / majority), and cyclic
+permutation.  Hypervectors are tiled into VMEM-sized *folds* along the
+last axis — the same folding mechanism the paper's accelerator uses for
+extended vector dimensions — expressed as a Pallas grid over fold blocks.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO (see DESIGN.md
+§Hardware-adaptation for the TPU mapping rationale).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+#: Default fold width (lanes per grid step). 256 f32 lanes keeps a
+#: (items x fold) similarity tile comfortably inside a 4 MiB VMEM budget.
+DEFAULT_FOLD = 256
+
+
+def _fold_for(dim, fold=None):
+    fold = fold or min(dim, DEFAULT_FOLD)
+    if dim % fold != 0:
+        raise ValueError(f"dim {dim} not divisible by fold {fold}")
+    return fold
+
+
+def _bind_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] * y_ref[...]
+
+
+def bind(x, y, fold=None):
+    """Hadamard binding of two equally-shaped hypervector arrays (..., D)."""
+    d = x.shape[-1]
+    fold = _fold_for(d, fold)
+    nlead = len(x.shape) - 1
+    blk = x.shape[:-1] + (fold,)
+    spec = pl.BlockSpec(blk, lambda k: (0,) * nlead + (k,))
+    return pl.pallas_call(
+        _bind_kernel,
+        grid=(d // fold,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x, y)
+
+
+def _bundle_kernel(xs_ref, o_ref):
+    o_ref[...] = jnp.sum(xs_ref[...], axis=0)
+
+
+def bundle(xs, fold=None):
+    """Bundling: sum M hypervectors (M, ..., D) -> (..., D)."""
+    d = xs.shape[-1]
+    fold = _fold_for(d, fold)
+    nlead = len(xs.shape) - 1  # includes the M axis
+    in_spec = pl.BlockSpec(xs.shape[:-1] + (fold,), lambda k: (0,) * nlead + (k,))
+    out_spec = pl.BlockSpec(
+        xs.shape[1:-1] + (fold,), lambda k: (0,) * (nlead - 1) + (k,)
+    )
+    return pl.pallas_call(
+        _bundle_kernel,
+        grid=(d // fold,),
+        in_specs=[in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(xs.shape[1:], xs.dtype),
+        interpret=INTERPRET,
+    )(xs)
+
+
+def _bundle_sign_kernel(xs_ref, o_ref):
+    s = jnp.sum(xs_ref[...], axis=0)
+    o_ref[...] = jnp.where(s >= 0, 1.0, -1.0).astype(o_ref.dtype)
+
+
+def bundle_sign(xs, fold=None):
+    """Bundling with bipolarization (the accelerator's BND -> SGN path)."""
+    d = xs.shape[-1]
+    fold = _fold_for(d, fold)
+    nlead = len(xs.shape) - 1
+    in_spec = pl.BlockSpec(xs.shape[:-1] + (fold,), lambda k: (0,) * nlead + (k,))
+    out_spec = pl.BlockSpec(
+        xs.shape[1:-1] + (fold,), lambda k: (0,) * (nlead - 1) + (k,)
+    )
+    return pl.pallas_call(
+        _bundle_sign_kernel,
+        grid=(d // fold,),
+        in_specs=[in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(xs.shape[1:], xs.dtype),
+        interpret=INTERPRET,
+    )(xs)
+
+
+def _permute_kernel(x_ref, o_ref, *, shift):
+    o_ref[...] = jnp.roll(x_ref[...], shift, axis=-1)
+
+
+def permute(x, shift=1):
+    """Cyclic permutation rho^shift.
+
+    Rolls cross fold boundaries, so this kernel runs as a single block
+    (hypervectors at our sizes fit VMEM whole; on real TPU a multi-fold
+    roll would use an edge-exchange schedule).
+    """
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_permute_kernel, shift=shift),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+def _scalar_mult_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = x_ref[...] * w_ref[0]
+
+
+def scalar_mult(x, w, fold=None):
+    """Scalar multiplication of a hypervector (the accelerator's MULT unit)."""
+    d = x.shape[-1]
+    fold = _fold_for(d, fold)
+    nlead = len(x.shape) - 1
+    spec = pl.BlockSpec(x.shape[:-1] + (fold,), lambda k: (0,) * nlead + (k,))
+    w_spec = pl.BlockSpec((1,), lambda k: (0,))
+    return pl.pallas_call(
+        _scalar_mult_kernel,
+        grid=(d // fold,),
+        in_specs=[spec, w_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x, jnp.reshape(w, (1,)).astype(x.dtype))

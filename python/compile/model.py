@@ -1,0 +1,310 @@
+"""L2: JAX compute graphs for the seven neuro-symbolic workloads.
+
+Each workload from the paper (Tab. III) is split into a *neural* phase —
+defined here in JAX (calling the L1 Pallas kernels where the hot-spot is
+vector-symbolic) and AOT-lowered to HLO text — and a *symbolic* phase that
+lives in the Rust coordinator (rust/src/workloads/).
+
+Weights are untrained (fixed-seed random): the characterization study
+measures operator mixes, shapes and dependencies, not accuracy.  Weights
+are baked into the HLO as constants so the Rust hot path only feeds
+activations and codebooks.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+# ----------------------------------------------------------------------------
+# Shared model dimensions (mirrored in rust/src/config.rs via the manifest)
+# ----------------------------------------------------------------------------
+HD_DIM = 1024          # hypervector dimensionality D
+CODEBOOK_N = 64        # item vectors per codebook / factor
+IMG = 32               # panel height == width
+NVSA_PANELS = 16       # 8 context + 8 candidate panels (3x3 RPM row task)
+ATTR_K = 8             # categories per attribute (type / size / color)
+N_ATTRS = 3
+LTN_FEATURES = 8       # crabs-style tabular features
+LTN_PREDICATES = 6     # grounded predicate count
+LTN_HIDDEN = 64
+NLM_OBJS = 8           # objects in the NLM relational state
+NLM_FEATS = 16         # predicate channels per arity
+VSAIT_BATCH = 4
+ZEROC_CONCEPT = 64
+LNN_GROUND = 16        # grounding feature width
+
+_key = jax.random.PRNGKey(20240710)
+
+
+def _keys(n):
+    global _key
+    ks = jax.random.split(_key, n + 1)
+    _key = ks[0]
+    return list(ks[1:])
+
+
+def _dense_params(key, n_in, n_out):
+    k1, k2 = jax.random.split(key)
+    scale = (2.0 / n_in) ** 0.5
+    return (
+        jax.random.normal(k1, (n_in, n_out), jnp.float32) * scale,
+        jax.random.normal(k2, (n_out,), jnp.float32) * 0.01,
+    )
+
+
+def _conv_params(key, k, c_in, c_out):
+    k1, k2 = jax.random.split(key)
+    scale = (2.0 / (k * k * c_in)) ** 0.5
+    return (
+        jax.random.normal(k1, (k, k, c_in, c_out), jnp.float32) * scale,
+        jax.random.normal(k2, (c_out,), jnp.float32) * 0.01,
+    )
+
+
+def _conv2d(x, w, b, stride=1):
+    """NHWC conv, SAME padding."""
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+# ----------------------------------------------------------------------------
+# Shared ConvNet perception backbone (NVSA / PrAE / VSAIT frontends)
+# ----------------------------------------------------------------------------
+
+def _make_backbone(c_in, widths=(8, 16)):
+    ks = _keys(len(widths))
+    params = []
+    c = c_in
+    for key, w in zip(ks, widths):
+        params.append(_conv_params(key, 3, c, w))
+        c = w
+    return params
+
+
+def _backbone_apply(params, x):
+    for w, b in params:
+        x = jax.nn.relu(_conv2d(x, w, b))
+        x = _maxpool2(x)
+    return x.reshape(x.shape[0], -1)
+
+
+# ----------------------------------------------------------------------------
+# NVSA (Hersche et al.): ConvNet frontend -> per-attribute PMFs
+# ----------------------------------------------------------------------------
+
+_NVSA_BACKBONE = _make_backbone(1)
+_NVSA_TRUNK = _dense_params(_keys(1)[0], (IMG // 4) ** 2 * 16, 128)
+_NVSA_HEADS = [_dense_params(k, 128, ATTR_K) for k in _keys(N_ATTRS)]
+
+
+def nvsa_frontend(panels):
+    """panels (P, 32, 32, 1) -> tuple of N_ATTRS PMFs, each (P, ATTR_K)."""
+    h = _backbone_apply(_NVSA_BACKBONE, panels)
+    w, b = _NVSA_TRUNK
+    h = jax.nn.relu(h @ w + b)
+    outs = []
+    for w, b in _NVSA_HEADS:
+        outs.append(jax.nn.softmax(h @ w + b, axis=-1))
+    return tuple(outs)
+
+
+def pmf_to_vsa(pmf, codebook):
+    """NVSA PMF-to-VSA: probability-weighted bundling over the codebook.
+
+    pmf (B, K), codebook (K, D) -> (B, D).  The weighted bundle is the
+    accelerator's MULT+BND path; expressed as an MXU matmul.
+    """
+    return (pmf @ codebook,)
+
+
+def vsa_to_pmf(vecs, codebook):
+    """NVSA VSA-to-PMF: fold-accumulated similarity then normalized ReLU."""
+    scores = kernels.similarity(codebook, vecs)
+    scores = jnp.maximum(scores, 0.0)
+    denom = jnp.maximum(jnp.sum(scores, axis=-1, keepdims=True), 1e-9)
+    return (scores / denom,)
+
+
+def cconv_bind(x, y):
+    """NVSA holographic binding of batched hypervectors (B, D)."""
+    return (kernels.circular_conv(x, y),)
+
+
+def hadamard_bind(x, y):
+    """Bipolar Hadamard binding of batched hypervectors (B, D)."""
+    return (kernels.bind(x, y),)
+
+
+def codebook_similarity(codebook, queries):
+    """Clean-up / associative memory scores (B, N)."""
+    return (kernels.similarity(codebook, queries),)
+
+
+def resonator_step(scene, est_b, est_c, codebook):
+    """One factor update of the resonator network (see kernels.resonator)."""
+    est, scores = kernels.resonator_step(scene, est_b, est_c, codebook)
+    return (est, scores)
+
+
+# ----------------------------------------------------------------------------
+# LTN (Badreddine et al.): MLP predicate grounding; fuzzy aggregation in L3
+# ----------------------------------------------------------------------------
+
+_LTN_L1 = _dense_params(_keys(1)[0], LTN_FEATURES, LTN_HIDDEN)
+_LTN_L2 = _dense_params(_keys(1)[0], LTN_HIDDEN, LTN_HIDDEN)
+_LTN_HEAD = _dense_params(_keys(1)[0], LTN_HIDDEN, LTN_PREDICATES)
+
+
+def ltn_grounding(x):
+    """x (B, F) tabular samples -> truth degrees (B, P) in [0, 1]."""
+    w1, b1 = _LTN_L1
+    w2, b2 = _LTN_L2
+    wh, bh = _LTN_HEAD
+    h = jax.nn.elu(x @ w1 + b1)
+    h = jax.nn.elu(h @ w2 + b2)
+    return (jax.nn.sigmoid(h @ wh + bh),)
+
+
+# ----------------------------------------------------------------------------
+# NLM (Dong et al.): per-arity MLPs; expand/reduce/permute wiring in L3
+# ----------------------------------------------------------------------------
+
+_NLM_UNARY = _dense_params(_keys(1)[0], NLM_FEATS * 3, NLM_FEATS)
+_NLM_BINARY = _dense_params(_keys(1)[0], NLM_FEATS * 4, NLM_FEATS)
+
+
+def nlm_layer(unary, binary):
+    """One NLM logic layer.
+
+    unary (B, N, C), binary (B, N, N, C).  The expand (unary->binary),
+    reduce (binary->unary, exists/forall as max/min) and transpose
+    permutations are the *symbolic wiring*; the learned part is a shared
+    MLP with sigmoid 'soft logic' activation.
+    """
+    b, n, c = unary.shape
+    exists = jnp.max(binary, axis=2)
+    forall = jnp.min(binary, axis=2)
+    u_in = jnp.concatenate([unary, exists, forall], axis=-1)
+    w, bias = _NLM_UNARY
+    unary_out = jax.nn.sigmoid(u_in @ w + bias)
+
+    expand_r = jnp.broadcast_to(unary[:, :, None, :], (b, n, n, c))
+    expand_c = jnp.broadcast_to(unary[:, None, :, :], (b, n, n, c))
+    swap = jnp.swapaxes(binary, 1, 2)
+    b_in = jnp.concatenate([binary, swap, expand_r, expand_c], axis=-1)
+    w2, bias2 = _NLM_BINARY
+    binary_out = jax.nn.sigmoid(b_in @ w2 + bias2)
+    return (unary_out, binary_out)
+
+
+# ----------------------------------------------------------------------------
+# VSAIT (Theiss et al.): ConvNet features -> random hypervector projection
+# ----------------------------------------------------------------------------
+
+_VSAIT_BACKBONE = _make_backbone(3)
+_VSAIT_PROJ = jax.random.normal(
+    _keys(1)[0], ((IMG // 4) ** 2 * 16, HD_DIM), jnp.float32
+) / ((IMG // 4) ** 2 * 16) ** 0.5
+_VSAIT_KEYVEC = jnp.where(
+    jax.random.normal(_keys(1)[0], (HD_DIM,)) >= 0, 1.0, -1.0
+).astype(jnp.float32)
+
+
+def vsait_encoder(images):
+    """images (B, 32, 32, 3) -> source-content hypervectors (B, D).
+
+    Features are projected into random hyperspace, bipolarized, then bound
+    (Pallas Hadamard bind) with a domain key vector — VSAIT's invertible
+    source->target mapping setup.
+    """
+    feats = _backbone_apply(_VSAIT_BACKBONE, images)
+    hv = feats @ _VSAIT_PROJ
+    hv = jnp.where(hv >= 0, 1.0, -1.0).astype(jnp.float32)
+    key = jnp.broadcast_to(_VSAIT_KEYVEC, hv.shape)
+    return (kernels.bind(hv, key),)
+
+
+# ----------------------------------------------------------------------------
+# ZeroC (Wu et al.): energy-based model over image & concept embedding
+# ----------------------------------------------------------------------------
+
+_ZEROC_BACKBONE = _make_backbone(1)
+_ZEROC_FILM = _dense_params(_keys(1)[0], ZEROC_CONCEPT, (IMG // 4) ** 2 * 16)
+_ZEROC_HEAD = _dense_params(_keys(1)[0], (IMG // 4) ** 2 * 16, 1)
+
+
+def zeroc_energy(images, concept):
+    """E(image, concept): (B,32,32,1) x (B,64) -> (B,) energies.
+
+    FiLM-style modulation of conv features by the concept embedding — the
+    inner loop of ZeroC's relational energy inference (the graph search
+    over concept compositions is the L3 symbolic phase).
+    """
+    feats = _backbone_apply(_ZEROC_BACKBONE, images)
+    wf, bf = _ZEROC_FILM
+    gamma = jax.nn.sigmoid(concept @ wf + bf)
+    wh, bh = _ZEROC_HEAD
+    e = (feats * gamma) @ wh + bh
+    return (e[:, 0],)
+
+
+# ----------------------------------------------------------------------------
+# PrAE (Zhang et al.): shared ConvNet + attribute PMF heads (no HD proj)
+# ----------------------------------------------------------------------------
+
+_PRAE_BACKBONE = _make_backbone(1)
+_PRAE_TRUNK = _dense_params(_keys(1)[0], (IMG // 4) ** 2 * 16, 128)
+_PRAE_HEADS = [_dense_params(k, 128, ATTR_K) for k in _keys(N_ATTRS)]
+_PRAE_OBJ = _dense_params(_keys(1)[0], 128, 1)
+
+
+def prae_frontend(panels):
+    """panels (P,32,32,1) -> (objectness (P,), attr PMFs (P,K) x N_ATTRS).
+
+    PrAE keeps raw probability mass functions (no hypervector projection) —
+    the scene-inference / rule-abduction over these PMFs is L3 symbolic.
+    """
+    h = _backbone_apply(_PRAE_BACKBONE, panels)
+    w, b = _PRAE_TRUNK
+    h = jax.nn.relu(h @ w + b)
+    wo, bo = _PRAE_OBJ
+    obj = jax.nn.sigmoid(h @ wo + bo)[:, 0]
+    outs = [obj]
+    for w, b in _PRAE_HEADS:
+        outs.append(jax.nn.softmax(h @ w + b, axis=-1))
+    return tuple(outs)
+
+
+# ----------------------------------------------------------------------------
+# LNN (Riegel et al.): neural grounding of predicates into [lower, upper]
+# ----------------------------------------------------------------------------
+
+_LNN_L1 = _dense_params(_keys(1)[0], LNN_GROUND, 32)
+_LNN_HEAD = _dense_params(_keys(1)[0], 32, 2)
+
+
+def lnn_grounding(x):
+    """x (B, G) entity features -> truth bounds (B, 2), lower <= upper.
+
+    The weighted Lukasiewicz inference (upward/downward passes over the
+    syntax tree) is the L3 symbolic engine; this provides leaf bounds.
+    """
+    w1, b1 = _LNN_L1
+    wh, bh = _LNN_HEAD
+    h = jax.nn.relu(x @ w1 + b1)
+    raw = jax.nn.sigmoid(h @ wh + bh)
+    lower = jnp.minimum(raw[:, 0], raw[:, 1])
+    upper = jnp.maximum(raw[:, 0], raw[:, 1])
+    return (jnp.stack([lower, upper], axis=-1),)

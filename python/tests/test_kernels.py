@@ -1,0 +1,257 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes and dtypes of every Pallas kernel and asserts
+allclose against the pure-jnp oracle in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([128, 256, 512, 1024])
+SMALL_DIMS = st.sampled_from([64, 128, 256])
+DTYPES = st.sampled_from([jnp.float32, jnp.float16])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _bipolar(key, shape, dtype=jnp.float32):
+    return jnp.where(
+        jax.random.normal(key, shape) >= 0, 1.0, -1.0
+    ).astype(dtype)
+
+
+def _tol(dtype):
+    return {"rtol": 2e-2, "atol": 2e-2} if dtype == jnp.float16 else {
+        "rtol": 1e-5, "atol": 1e-5}
+
+
+# ---------------------------------------------------------------- bind ----
+
+@settings(max_examples=20, deadline=None)
+@given(d=DIMS, seed=SEEDS, dtype=DTYPES, batch=st.sampled_from([None, 1, 3]))
+def test_bind_matches_ref(d, seed, dtype, batch):
+    key1, key2 = jax.random.split(jax.random.PRNGKey(seed))
+    shape = (d,) if batch is None else (batch, d)
+    x = _bipolar(key1, shape, dtype)
+    y = _bipolar(key2, shape, dtype)
+    np.testing.assert_allclose(
+        kernels.bind(x, y), ref.bind_ref(x, y), **_tol(dtype))
+
+
+def test_bind_self_inverse():
+    """Bipolar Hadamard binding is its own inverse: x*(x*y) == y."""
+    key1, key2 = jax.random.split(jax.random.PRNGKey(0))
+    x = _bipolar(key1, (512,))
+    y = _bipolar(key2, (512,))
+    np.testing.assert_allclose(kernels.bind(x, kernels.bind(x, y)), y)
+
+
+def test_bind_quasi_orthogonal():
+    """Bound vector is dissimilar to both constituents (paper Sec. VI-A)."""
+    key1, key2 = jax.random.split(jax.random.PRNGKey(7))
+    d = 1024
+    x = _bipolar(key1, (d,))
+    y = _bipolar(key2, (d,))
+    z = kernels.bind(x, y)
+    assert abs(float(jnp.dot(z, x))) / d < 0.15
+    assert abs(float(jnp.dot(z, y))) / d < 0.15
+
+
+def test_bind_rejects_bad_fold():
+    x = jnp.ones((100,))
+    with pytest.raises(ValueError):
+        kernels.bind(x, x, fold=64)
+
+
+# -------------------------------------------------------------- bundle ----
+
+@settings(max_examples=20, deadline=None)
+@given(d=DIMS, seed=SEEDS, m=st.integers(min_value=1, max_value=7))
+def test_bundle_matches_ref(d, seed, m):
+    xs = _bipolar(jax.random.PRNGKey(seed), (m, d))
+    np.testing.assert_allclose(
+        kernels.bundle(xs), ref.bundle_ref(xs), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=SMALL_DIMS, seed=SEEDS, m=st.sampled_from([3, 5, 7]))
+def test_bundle_sign_matches_ref(d, seed, m):
+    xs = _bipolar(jax.random.PRNGKey(seed), (m, d))
+    np.testing.assert_allclose(
+        kernels.bundle_sign(xs), ref.bundle_sign_ref(xs))
+
+
+def test_bundle_preserves_similarity():
+    """A bundle stays similar to each constituent (superposition)."""
+    d = 1024
+    xs = _bipolar(jax.random.PRNGKey(3), (3, d))
+    s = kernels.bundle_sign(xs)
+    for i in range(3):
+        assert float(jnp.dot(s, xs[i])) / d > 0.3
+
+
+# ------------------------------------------------------------- permute ----
+
+@settings(max_examples=15, deadline=None)
+@given(d=DIMS, seed=SEEDS, shift=st.integers(min_value=-8, max_value=8))
+def test_permute_matches_ref(d, seed, shift):
+    x = _bipolar(jax.random.PRNGKey(seed), (d,))
+    np.testing.assert_allclose(
+        kernels.permute(x, shift), ref.permute_ref(x, shift))
+
+
+def test_permute_roundtrip():
+    x = _bipolar(jax.random.PRNGKey(1), (256,))
+    np.testing.assert_allclose(kernels.permute(kernels.permute(x, 3), -3), x)
+
+
+def test_permute_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(2), (512,))
+    np.testing.assert_allclose(
+        jnp.linalg.norm(kernels.permute(x, 5)), jnp.linalg.norm(x), rtol=1e-6)
+
+
+# --------------------------------------------------------- scalar mult ----
+
+@settings(max_examples=10, deadline=None)
+@given(d=SMALL_DIMS, seed=SEEDS,
+       w=st.floats(min_value=-4.0, max_value=4.0, allow_nan=False))
+def test_scalar_mult_matches_ref(d, seed, w):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    np.testing.assert_allclose(
+        kernels.scalar_mult(x, w), ref.scalar_mult_ref(x, jnp.float32(w)),
+        rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------ circular conv ----
+
+@settings(max_examples=15, deadline=None)
+@given(d=SMALL_DIMS, seed=SEEDS)
+def test_circular_conv_matches_fft_ref(d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (d,)) / d**0.5
+    y = jax.random.normal(k2, (d,)) / d**0.5
+    np.testing.assert_allclose(
+        kernels.circular_conv(x, y), ref.circular_conv_ref(x, y),
+        rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=SMALL_DIMS, seed=SEEDS)
+def test_circular_corr_matches_fft_ref(d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (d,)) / d**0.5
+    y = jax.random.normal(k2, (d,)) / d**0.5
+    np.testing.assert_allclose(
+        kernels.circular_corr(x, y), ref.circular_corr_ref(x, y),
+        rtol=1e-3, atol=1e-4)
+
+
+def test_circular_conv_commutative():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    x = jax.random.normal(k1, (128,))
+    y = jax.random.normal(k2, (128,))
+    np.testing.assert_allclose(
+        kernels.circular_conv(x, y), kernels.circular_conv(y, x),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_circular_conv_unbind_recovers():
+    """HRR: correlating the bound pair with one factor recovers the other."""
+    d = 1024
+    k1, k2 = jax.random.split(jax.random.PRNGKey(13))
+    x = jax.random.normal(k1, (d,)) / d**0.5
+    y = jax.random.normal(k2, (d,)) / d**0.5
+    z = kernels.circular_conv(x, y)
+    y_hat = kernels.circular_corr(x, z)
+    cos = float(jnp.dot(y_hat, y) / (jnp.linalg.norm(y_hat) * jnp.linalg.norm(y)))
+    assert cos > 0.5
+
+
+def test_circular_conv_batched():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(17))
+    x = jax.random.normal(k1, (3, 128))
+    y = jax.random.normal(k2, (3, 128))
+    out = kernels.circular_conv(x, y)
+    for i in range(3):
+        np.testing.assert_allclose(
+            out[i], ref.circular_conv_ref(x[i], y[i]), rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------- similarity ----
+
+@settings(max_examples=15, deadline=None)
+@given(d=DIMS, seed=SEEDS,
+       n=st.sampled_from([8, 16, 64]), b=st.sampled_from([1, 4, 16]))
+def test_similarity_matches_ref(d, seed, n, b):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    cb = _bipolar(k1, (n, d))
+    q = jax.random.normal(k2, (b, d))
+    np.testing.assert_allclose(
+        kernels.similarity(cb, q), ref.similarity_ref(cb, q),
+        rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=DIMS, seed=SEEDS)
+def test_similarity_fold_invariant(d, seed):
+    """Partial-distance accumulation must not depend on the fold width."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    cb = _bipolar(k1, (16, d))
+    q = jax.random.normal(k2, (4, d))
+    full = kernels.similarity(cb, q, fold=d)
+    folded = kernels.similarity(cb, q, fold=d // 4 if d >= 256 else d // 2)
+    np.testing.assert_allclose(full, folded, rtol=1e-4, atol=1e-3)
+
+
+def test_nearest_finds_member():
+    """A codebook item queries back to itself."""
+    cb = _bipolar(jax.random.PRNGKey(5), (32, 512))
+    idx, scores = kernels.nearest(cb, cb[7:8])
+    assert int(idx[0]) == 7
+    assert scores.shape == (1, 32)
+
+
+# ----------------------------------------------------------- resonator ----
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.sampled_from([256, 512]), seed=SEEDS, n=st.sampled_from([8, 16]))
+def test_resonator_step_matches_ref(d, seed, n):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    scene = _bipolar(ks[0], (d,))
+    o1 = _bipolar(ks[1], (d,))
+    o2 = _bipolar(ks[2], (d,))
+    cb = _bipolar(ks[3], (n, d))
+    est, scores = kernels.resonator_step(scene, o1, o2, cb)
+    est_r, scores_r = ref.resonator_step_ref(scene, o1, o2, cb)
+    np.testing.assert_allclose(est, est_r)
+    np.testing.assert_allclose(scores, scores_r, rtol=1e-4, atol=1e-3)
+
+
+def test_resonator_converges_on_exact_factorization():
+    """Full resonator loop recovers the 3 factors of s = a*b*c."""
+    d, n = 1024, 8
+    ks = jax.random.split(jax.random.PRNGKey(99), 6)
+    cbs = [_bipolar(k, (n, d)) for k in ks[:3]]
+    true_idx = [2, 5, 1]
+    a, b, c = (cb[i] for cb, i in zip(cbs, true_idx))
+    scene = a * b * c
+    # init estimates as bundles of the whole codebook
+    ests = [jnp.where(cb.sum(0) >= 0, 1.0, -1.0) for cb in cbs]
+    for _ in range(20):
+        new = []
+        for f in range(3):
+            o1, o2 = ests[(f + 1) % 3], ests[(f + 2) % 3]
+            est, _ = kernels.resonator_step(scene, o1, o2, cbs[f])
+            new.append(est)
+        ests = new
+    for f in range(3):
+        scores = cbs[f] @ ests[f]
+        assert int(jnp.argmax(scores)) == true_idx[f]

@@ -1,0 +1,18 @@
+//! Regenerates paper Fig. 11 (a/b): Acc2/4/8 latency+energy scaling and
+//! the accelerator-vs-GPU comparison.
+use nscog::figures;
+use nscog::util::bench::bench;
+
+fn main() {
+    println!("== Fig. 11a — Acc2/Acc4/Acc8 across MULT/TREE/FACT/REACT ==");
+    figures::fig11a().print();
+    println!("\n== Fig. 11b — Acc vs V100 GPU ==");
+    figures::fig11b().print();
+    println!();
+    bench("fig11/simulate FACT on Acc4 (MOPC)", || {
+        use nscog::accel::{isa::ControlMethod, AccelConfig};
+        use nscog::workloads::suite::{CompiledSuite, SuiteKind};
+        let mut s = CompiledSuite::build(SuiteKind::Fact, AccelConfig::acc4(), 17);
+        nscog::util::bench::black_box(s.run(ControlMethod::Mopc));
+    });
+}

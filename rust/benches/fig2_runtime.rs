@@ -1,0 +1,17 @@
+//! Regenerates paper Fig. 2 (a/b/c): neural vs symbolic runtime, edge
+//! platform scaling, and NVSA task-size scaling.
+use nscog::figures;
+use nscog::util::bench::bench;
+
+fn main() {
+    println!("== Fig. 2a — neural vs symbolic runtime breakdown ==");
+    figures::fig2a().print();
+    println!("\n== Fig. 2b — NVSA/NLM across TX2 / Xavier NX / RTX ==");
+    figures::fig2b().print();
+    println!("\n== Fig. 2c — NVSA latency vs RPM task size ==");
+    figures::fig2c().print();
+    println!();
+    bench("fig2/trace+model all workloads", || {
+        nscog::util::bench::black_box(figures::fig2a());
+    });
+}

@@ -1,0 +1,17 @@
+//! Regenerates paper Fig. 3 (a/b/c): operator categories, memory usage,
+//! and roofline placement.
+use nscog::figures;
+use nscog::util::bench::bench;
+
+fn main() {
+    println!("== Fig. 3a — compute operator runtime breakdown ==");
+    figures::fig3a().print();
+    println!("\n== Fig. 3b — memory usage ==");
+    figures::fig3b().print();
+    println!("\n== Fig. 3c — roofline analysis (RTX 2080 Ti) ==");
+    figures::fig3c().print();
+    println!();
+    bench("fig3/operator+roofline analysis", || {
+        nscog::util::bench::black_box(figures::fig3c());
+    });
+}

@@ -1,0 +1,13 @@
+//! Regenerates paper Fig. 4: operator-graph dependency / critical-path
+//! analysis of the seven workloads.
+use nscog::figures;
+use nscog::util::bench::bench;
+
+fn main() {
+    println!("== Fig. 4 — operation & dataflow analysis ==");
+    figures::fig4().print();
+    println!();
+    bench("fig4/critical-path over all workloads", || {
+        nscog::util::bench::black_box(figures::fig4());
+    });
+}

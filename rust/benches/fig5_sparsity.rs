@@ -1,0 +1,13 @@
+//! Regenerates paper Fig. 5: sparsity of NVSA symbolic modules measured
+//! on live data flowing through the Rust engine.
+use nscog::figures;
+use nscog::util::bench::bench;
+
+fn main() {
+    println!("== Fig. 5 — NVSA symbolic-module sparsity ==");
+    figures::fig5().print();
+    println!();
+    bench("fig5/nvsa solve + sparsity measurement", || {
+        nscog::util::bench::black_box(figures::fig5());
+    });
+}

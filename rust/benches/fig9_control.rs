@@ -1,0 +1,13 @@
+//! Regenerates paper Fig. 9: SOPC vs MOPC runtime & power on the
+//! resonator-network workload across factor counts.
+use nscog::figures;
+use nscog::util::bench::bench;
+
+fn main() {
+    println!("== Fig. 9 — accelerator control methods (SOPC vs MOPC) ==");
+    figures::fig9().print();
+    println!();
+    bench("fig9/resonator 3-factor both controls", || {
+        nscog::util::bench::black_box(figures::fig9_point(3));
+    });
+}

@@ -1,0 +1,87 @@
+//! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf): VSA substrate ops,
+//! the accelerator simulator's word throughput, and PJRT execution.
+use nscog::accel::{isa::ControlMethod, AccelConfig};
+use nscog::util::bench::{bench, black_box, sample};
+use nscog::util::Rng;
+use nscog::vsa::{ops, BinaryCodebook, BinaryHV, RealCodebook, RealHV, Resonator};
+use nscog::workloads::suite::{CompiledSuite, SuiteKind};
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let d = 8192;
+
+    // --- L3 VSA substrate -------------------------------------------------
+    let a = BinaryHV::random(&mut rng, d);
+    let b = BinaryHV::random(&mut rng, d);
+    let s = bench("vsa/binary_bind 8192b", || {
+        black_box(a.bind(&b));
+    });
+    println!(
+        "    → {:.2} GB/s effective",
+        (3.0 * d as f64 / 8.0) / s.p50 / 1e9
+    );
+    let mut acc = a.clone();
+    bench("vsa/binary_bind_assign 8192b (no alloc)", || {
+        acc.bind_assign(black_box(&b));
+    });
+    let cb = BinaryCodebook::random(&mut rng, 120, d);
+    let q = BinaryHV::random(&mut rng, d);
+    let s = bench("vsa/nearest 120x8192b", || {
+        black_box(cb.nearest(&q));
+    });
+    println!(
+        "    → {:.2} GB/s codebook scan",
+        (120.0 * d as f64 / 8.0) / s.p50 / 1e9
+    );
+    let ra = RealHV::random_bipolar(&mut rng, 1024);
+    let rb = RealHV::random_bipolar(&mut rng, 1024);
+    bench("vsa/circular_conv 1024 f32", || {
+        black_box(ops::circular_conv(&ra, &rb));
+    });
+    let res = Resonator::new(
+        (0..3)
+            .map(|_| RealCodebook::random_bipolar(&mut rng, 10, 1024))
+            .collect(),
+        60,
+    );
+    let scene = res.compose(&[1, 2, 3]);
+    bench("vsa/resonator_factorize 3x10x1024", || {
+        black_box(res.factorize(&scene));
+    });
+
+    // --- accel simulator ---------------------------------------------------
+    let mut suite = CompiledSuite::build(SuiteKind::React, AccelConfig::acc4(), 7);
+    let words: usize = suite.programs.iter().map(|p| p.len()).sum();
+    let times = sample(
+        || {
+            black_box(suite.run(ControlMethod::Mopc));
+        },
+        0.3,
+        1.0,
+    );
+    let t = nscog::util::stats::Summary::of(&times);
+    println!(
+        "accel/simulate REACT Acc4: {} words in {} → {:.2} M words/s",
+        words,
+        nscog::util::stats::fmt_time(t.p50),
+        words as f64 / t.p50 / 1e6
+    );
+
+    // --- PJRT runtime (if artifacts built) ---------------------------------
+    if let Ok(mut rt) = nscog::runtime::Runtime::new() {
+        let dims = rt.manifest.dims;
+        let mut r2 = Rng::new(9);
+        let panels = nscog::runtime::Tensor::new(
+            vec![dims.panels, dims.img, dims.img, 1],
+            (0..dims.panels * dims.img * dims.img)
+                .map(|_| r2.normal() as f32)
+                .collect(),
+        );
+        rt.load("nvsa_frontend").unwrap();
+        bench("runtime/nvsa_frontend PJRT execute", || {
+            black_box(rt.run("nvsa_frontend", std::slice::from_ref(&panels)).unwrap());
+        });
+    } else {
+        println!("runtime/: artifacts not built, skipping PJRT bench");
+    }
+}

@@ -1,0 +1,13 @@
+//! Regenerates paper Tab. IV: simulated hardware counters of
+//! representative neural vs symbolic kernels.
+use nscog::figures;
+use nscog::util::bench::bench;
+
+fn main() {
+    println!("== Tab. IV — kernel compute/memory/communication counters ==");
+    figures::tab4().print();
+    println!();
+    bench("tab4/counter simulation", || {
+        nscog::util::bench::black_box(figures::tab4());
+    });
+}

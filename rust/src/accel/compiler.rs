@@ -1,0 +1,742 @@
+//! Kernel compiler: lowers the paper's VSA kernel calculus (Sec. VI-B —
+//! sub-functions `a`/`b` encoding, `c` projection, `d` similarity, `e`
+//! argmax) into Instruction-Word programs (Fig. 6's programming method).
+//!
+//! Operand placement follows [`super::pipeline::Layout`]: codebook items
+//! are striped across tiles, scratch vectors are broadcast to every tile.
+//! Shared-VOP words target exactly one tile; MCG/DC words broadcast SIMD
+//! across the tile mask.  Results always return to memory through the
+//! SGN → global-datapath path, exactly as the paper describes fold
+//! transfer ("converted to binary through SGN for transfer over the
+//! global vector-symbolic datapath").
+
+use super::config::AccelConfig;
+use super::isa::{
+    BindOp, BndOp, DcOp, InstructionWord, MemOp, MultOp, OpParam, QryOp, SgnOp,
+};
+use super::pipeline::Layout;
+use super::program::Program;
+
+/// A vector operand location.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VecRef {
+    /// Codebook item by global id (resident on `layout.tile_of(id)`).
+    Item(usize),
+    /// Scratch slot (broadcast-resident on every tile).
+    Scratch(usize),
+}
+
+/// One encoding operand: a vector reference with an optional positional
+/// permutation (rho^shift) applied on load — the paper's
+/// `b(y, (s2=3))` sequence-preserving binding.
+#[derive(Debug, Clone, Copy)]
+pub struct Operand {
+    pub vec: VecRef,
+    pub shift: i32,
+}
+
+impl Operand {
+    pub fn plain(vec: VecRef) -> Self {
+        Operand { vec, shift: 0 }
+    }
+
+    pub fn permuted(vec: VecRef, shift: i32) -> Self {
+        Operand { vec, shift }
+    }
+}
+
+/// Compiles kernel-calculus operations into instruction-word programs for
+/// a fixed configuration + data layout.
+#[derive(Debug, Clone)]
+pub struct KernelCompiler {
+    pub cfg: AccelConfig,
+    pub layout: Layout,
+}
+
+impl KernelCompiler {
+    pub fn new(cfg: AccelConfig, layout: Layout) -> Self {
+        KernelCompiler { cfg, layout }
+    }
+
+    fn fpv(&self) -> usize {
+        self.layout.folds_per_vec
+    }
+
+    /// (tile, fold address) of operand's fold `f`. Scratch may resolve on
+    /// any tile; `prefer` picks one (keeps VOP chains on a single tile
+    /// when possible).
+    fn resolve(&self, v: VecRef, f: usize, prefer: usize) -> (usize, usize) {
+        match v {
+            VecRef::Item(g) => {
+                assert!(g < self.layout.n_items, "item {g} out of range");
+                (
+                    self.layout.tile_of(g),
+                    self.layout.local_addr(self.layout.local_of(g)) + f,
+                )
+            }
+            VecRef::Scratch(slot) => (prefer, self.layout.scratch_addr(slot) + f),
+        }
+    }
+
+    /// Tile mask for tiles that hold local item index `local`.
+    fn mask_for_local(&self, local: usize) -> u64 {
+        let mut m = 0u64;
+        for t in 0..self.layout.n_tiles {
+            if self.layout.items_on_tile(t) > local {
+                m |= 1 << t;
+            }
+        }
+        m
+    }
+
+    fn all_mask(&self) -> u64 {
+        (1u64 << self.layout.n_tiles) - 1
+    }
+
+    /// Emit one fold of a bind chain: XOR of `ops` (with per-operand
+    /// permutes), ending with the bound fold routed through
+    /// MULT→BND→SGN into the shared result register, then broadcast-stored
+    /// to scratch `dst`. Appends to `p`.
+    fn emit_bind_fold(&self, p: &mut Program, ops: &[Operand], f: usize, dst: usize) {
+        assert!(!ops.is_empty());
+        let (t0, a0) = self.resolve(ops[0].vec, f, 0);
+        if ops.len() == 1 {
+            // Single operand: pass through MULT/BND to reach SGN.
+            p.push(InstructionWord {
+                mem: MemOp::LoadSram,
+                qry: if ops[0].shift != 0 {
+                    QryOp::Permute
+                } else {
+                    QryOp::Nop
+                },
+                mult: MultOp::B2I,
+                bnd: BndOp::ResetAccum,
+                param: OpParam {
+                    addr: a0,
+                    shift: ops[0].shift,
+                    rf2: 0,
+                    tile_mask: 1 << t0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            });
+        } else {
+            p.push(InstructionWord {
+                mem: MemOp::LoadSram,
+                qry: if ops[0].shift != 0 {
+                    QryOp::Permute
+                } else {
+                    QryOp::Nop
+                },
+                bind: BindOp::SetBuf,
+                param: OpParam {
+                    addr: a0,
+                    shift: ops[0].shift,
+                    tile_mask: 1 << t0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            });
+            for (i, op) in ops.iter().enumerate().skip(1) {
+                let last = i == ops.len() - 1;
+                let (t, a) = self.resolve(op.vec, f, t0);
+                p.push(InstructionWord {
+                    mem: MemOp::LoadSram,
+                    qry: if op.shift != 0 {
+                        QryOp::Permute
+                    } else {
+                        QryOp::Nop
+                    },
+                    bind: BindOp::Xor,
+                    mult: if last { MultOp::B2I } else { MultOp::Nop },
+                    bnd: if last { BndOp::ResetAccum } else { BndOp::Nop },
+                    param: OpParam {
+                        addr: a,
+                        shift: op.shift,
+                        rf2: 0,
+                        tile_mask: 1 << t,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                });
+                if !last {
+                    // Latch the partial XOR back into the bind buffer.
+                    p.push(InstructionWord {
+                        bind: BindOp::SetBuf,
+                        param: OpParam {
+                            tile_mask: 1 << t,
+                            ..Default::default()
+                        },
+                        ..Default::default()
+                    });
+                }
+            }
+        }
+        // SGN broadcast: result register → every tile's scratch.
+        p.push(InstructionWord {
+            sgn: SgnOp::Sign,
+            param: OpParam {
+                rf2: 0,
+                tile_mask: 1, // shared unit; single-tile issue
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        p.push(InstructionWord {
+            mem: MemOp::StoreResult,
+            param: OpParam {
+                addr: self.layout.scratch_addr(dst) + f,
+                tile_mask: self.all_mask(),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+    }
+
+    /// Bind `ops` into scratch `dst`: paper's `b(y, s2)` kernel
+    /// (plain XOR chain; with shifts, the positional variant).
+    pub fn bind(&self, ops: &[Operand], dst: usize) -> Program {
+        let mut p = Program::new(format!("bind{}→s{}", ops.len(), dst));
+        for f in 0..self.fpv() {
+            self.emit_bind_fold(&mut p, ops, f, dst);
+        }
+        p
+    }
+
+    /// Weighted bundle-of-bind-chains into scratch `dst`: the paper's
+    /// `a(y, (1, s2))` encoding kernel with MULT weighting:
+    /// `dst = sign( Σ_g w_g · bind(ops_g) )`.
+    ///
+    /// Folds are processed in chunks of the `B` BND accumulators; each
+    /// chunk streams every group once (BND RF capacity is why MULT-style
+    /// encoding barely benefits from larger accelerator instances).
+    pub fn weighted_bundle(&self, groups: &[(Vec<Operand>, i32)], dst: usize) -> Program {
+        let mut p = Program::new(format!("wbundle{}→s{}", groups.len(), dst));
+        let b = self.cfg.bnd_rf;
+        let fpv = self.fpv();
+        let mut chunk_start = 0;
+        while chunk_start < fpv {
+            let chunk_end = (chunk_start + b).min(fpv);
+            for (gi, (ops, w)) in groups.iter().enumerate() {
+                for f in chunk_start..chunk_end {
+                    self.emit_weighted_group_fold(
+                        &mut p,
+                        ops,
+                        *w,
+                        f,
+                        f - chunk_start,
+                        gi == 0,
+                    );
+                }
+            }
+            for f in chunk_start..chunk_end {
+                p.push(InstructionWord {
+                    sgn: SgnOp::Sign,
+                    param: OpParam {
+                        rf2: f - chunk_start,
+                        tile_mask: 1,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                });
+                p.push(InstructionWord {
+                    mem: MemOp::StoreResult,
+                    param: OpParam {
+                        addr: self.layout.scratch_addr(dst) + f,
+                        tile_mask: self.all_mask(),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                });
+            }
+            chunk_start = chunk_end;
+        }
+        p
+    }
+
+    /// One fold of one weighted group: bind chain (if >1 operand) with the
+    /// final word carrying MULT Scale(w) + BND accumulate into `rf2`.
+    fn emit_weighted_group_fold(
+        &self,
+        p: &mut Program,
+        ops: &[Operand],
+        w: i32,
+        f: usize,
+        rf2: usize,
+        reset: bool,
+    ) {
+        let bnd = if reset { BndOp::ResetAccum } else { BndOp::Accum };
+        let (t0, a0) = self.resolve(ops[0].vec, f, 0);
+        if ops.len() == 1 {
+            p.push(InstructionWord {
+                mem: MemOp::LoadSram,
+                qry: if ops[0].shift != 0 {
+                    QryOp::Permute
+                } else {
+                    QryOp::Nop
+                },
+                mult: MultOp::Scale,
+                bnd,
+                param: OpParam {
+                    addr: a0,
+                    shift: ops[0].shift,
+                    weight: w,
+                    rf2,
+                    tile_mask: 1 << t0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            });
+            return;
+        }
+        p.push(InstructionWord {
+            mem: MemOp::LoadSram,
+            qry: if ops[0].shift != 0 {
+                QryOp::Permute
+            } else {
+                QryOp::Nop
+            },
+            bind: BindOp::SetBuf,
+            param: OpParam {
+                addr: a0,
+                shift: ops[0].shift,
+                tile_mask: 1 << t0,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        for (i, op) in ops.iter().enumerate().skip(1) {
+            let last = i == ops.len() - 1;
+            let (t, a) = self.resolve(op.vec, f, t0);
+            p.push(InstructionWord {
+                mem: MemOp::LoadSram,
+                qry: if op.shift != 0 {
+                    QryOp::Permute
+                } else {
+                    QryOp::Nop
+                },
+                bind: BindOp::Xor,
+                mult: if last { MultOp::Scale } else { MultOp::Nop },
+                bnd: if last { bnd } else { BndOp::Nop },
+                param: OpParam {
+                    addr: a,
+                    shift: op.shift,
+                    weight: w,
+                    rf2,
+                    tile_mask: 1 << t,
+                    ..Default::default()
+                },
+                ..Default::default()
+            });
+            if !last {
+                p.push(InstructionWord {
+                    bind: BindOp::SetBuf,
+                    param: OpParam {
+                        tile_mask: 1 << t,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                });
+            }
+        }
+    }
+
+    /// Nearest-neighbor search of scratch `query` against all `n_items`
+    /// codebook items: the paper's `e(y) = argmax_i d(y_i, ȳ)` kernel.
+    ///
+    /// Items are searched SIMD across tiles in groups of the `D` DSUM
+    /// registers; the query fold is latched into QRY once per (group,
+    /// fold), which is why more DSUM registers (and more tiles) speed up
+    /// search-heavy workloads like REACT (Fig. 11a).
+    ///
+    /// Run [`super::pipeline::Accelerator::reset_search`] first and read
+    /// the winner with `global_best`.
+    pub fn search(&self, query: usize, n_items: usize) -> Program {
+        assert!(n_items <= self.layout.n_items);
+        let mut p = Program::new(format!("search s{query} over {n_items}"));
+        let d_regs = self.cfg.dsum_rf;
+        let fpv = self.fpv();
+        // local index range covering n_items across tiles
+        let max_local = (n_items + self.layout.n_tiles - 1) / self.layout.n_tiles;
+        let mut g0 = 0;
+        while g0 < max_local {
+            let g1 = (g0 + d_regs).min(max_local);
+            for f in 0..fpv {
+                p.push(InstructionWord {
+                    mem: MemOp::LoadSram,
+                    qry: QryOp::SetQry,
+                    param: OpParam {
+                        addr: self.layout.scratch_addr(query) + f,
+                        tile_mask: self.all_mask(),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                });
+                for local in g0..g1 {
+                    let mask = self.mask_for_local(local) & self.items_mask(local, n_items);
+                    if mask == 0 {
+                        continue;
+                    }
+                    p.push(InstructionWord {
+                        mem: MemOp::LoadSram,
+                        sgn: SgnOp::Popcnt,
+                        dc: if f == 0 { DcOp::DsumReset } else { DcOp::DsumAcc },
+                        param: OpParam {
+                            addr: self.layout.local_addr(local) + f,
+                            dsum: local - g0,
+                            item: local as u32,
+                            tile_mask: mask,
+                            ..Default::default()
+                        },
+                        ..Default::default()
+                    });
+                }
+            }
+            for local in g0..g1 {
+                let mask = self.mask_for_local(local) & self.items_mask(local, n_items);
+                if mask == 0 {
+                    continue;
+                }
+                p.push(InstructionWord {
+                    dc: DcOp::ArgmaxUpdate,
+                    param: OpParam {
+                        dsum: local - g0,
+                        item: local as u32,
+                        tile_mask: mask,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                });
+            }
+            g0 = g1;
+        }
+        p
+    }
+
+    /// Tiles whose item at `local` has a global id < `n_items`.
+    fn items_mask(&self, local: usize, n_items: usize) -> u64 {
+        let mut m = 0u64;
+        for t in 0..self.layout.n_tiles {
+            if self.layout.global_id(t, local) < n_items {
+                m |= 1 << t;
+            }
+        }
+        m
+    }
+
+    /// Resonator projection for one factor: the paper's
+    /// `c(y) = Σ_i n_i · y_i` with `n_i = d(a_i, x̂)` computed in DC and
+    /// fed back through `MULT` (ScaleByDsum):
+    /// `dst = sign( Σ_{g ∈ factor} d(item_g, x̂) · item_g )`.
+    ///
+    /// Folds chunk by the `B` BND accumulators; each pass re-streams every
+    /// item and recomputes its distance (DSUM holds only scalars), so
+    /// smaller instances pay ceil(F/B) passes — the source of FACT's
+    /// scaling behaviour in Fig. 11a.
+    pub fn project(&self, xhat: usize, factor_items: &[usize], dst: usize) -> Program {
+        let mut p = Program::new(format!("project s{xhat}→s{dst}"));
+        let b = self.cfg.bnd_rf;
+        let fpv = self.fpv();
+        let mut chunk_start = 0;
+        while chunk_start < fpv {
+            let chunk_end = (chunk_start + b).min(fpv);
+            for (gi, &g) in factor_items.iter().enumerate() {
+                let t = self.layout.tile_of(g);
+                let base = self.layout.local_addr(self.layout.local_of(g));
+                // distance d(item_g, xhat) → dsum[0] on tile t
+                for f in 0..fpv {
+                    p.push(InstructionWord {
+                        mem: MemOp::LoadSram,
+                        qry: QryOp::SetQry,
+                        param: OpParam {
+                            addr: self.layout.scratch_addr(xhat) + f,
+                            tile_mask: 1 << t,
+                            ..Default::default()
+                        },
+                        ..Default::default()
+                    });
+                    p.push(InstructionWord {
+                        mem: MemOp::LoadSram,
+                        sgn: SgnOp::Popcnt,
+                        dc: if f == 0 { DcOp::DsumReset } else { DcOp::DsumAcc },
+                        param: OpParam {
+                            addr: base + f,
+                            dsum: 0,
+                            tile_mask: 1 << t,
+                            ..Default::default()
+                        },
+                        ..Default::default()
+                    });
+                }
+                p.push(InstructionWord {
+                    dc: DcOp::DsumLatch,
+                    param: OpParam {
+                        dsum: 0,
+                        tile_mask: 1 << t,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                });
+                // weighted accumulate of this chunk's folds
+                for f in chunk_start..chunk_end {
+                    p.push(InstructionWord {
+                        mem: MemOp::LoadSram,
+                        mult: MultOp::ScaleByDsum,
+                        bnd: if gi == 0 { BndOp::ResetAccum } else { BndOp::Accum },
+                        param: OpParam {
+                            addr: base + f,
+                            rf2: f - chunk_start,
+                            tile_mask: 1 << t,
+                            ..Default::default()
+                        },
+                        ..Default::default()
+                    });
+                }
+            }
+            for f in chunk_start..chunk_end {
+                p.push(InstructionWord {
+                    sgn: SgnOp::Sign,
+                    param: OpParam {
+                        rf2: f - chunk_start,
+                        tile_mask: 1,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                });
+                p.push(InstructionWord {
+                    mem: MemOp::StoreResult,
+                    param: OpParam {
+                        addr: self.layout.scratch_addr(dst) + f,
+                        tile_mask: self.all_mask(),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                });
+            }
+            chunk_start = chunk_end;
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::isa::ControlMethod;
+    use crate::accel::pipeline::Accelerator;
+    use crate::util::Rng;
+    use crate::vsa::hypervector::BinaryHV;
+    use crate::vsa::BinaryCodebook;
+
+    const DIM: usize = 4096;
+
+    fn setup(n_items: usize) -> (Accelerator, KernelCompiler, BinaryCodebook) {
+        let mut acc = Accelerator::new(AccelConfig::acc4());
+        let mut rng = Rng::new(123);
+        let cb = BinaryCodebook::random(&mut rng, n_items, DIM);
+        let layout = acc.load_items(cb.items(), 8);
+        let kc = KernelCompiler::new(acc.cfg.clone(), layout);
+        (acc, kc, cb)
+    }
+
+    #[test]
+    fn bind_two_items_matches_functional() {
+        let (mut acc, kc, cb) = setup(10);
+        let p = kc.bind(
+            &[
+                Operand::plain(VecRef::Item(3)),
+                Operand::plain(VecRef::Item(7)),
+            ],
+            0,
+        );
+        acc.run(&p, ControlMethod::Mopc);
+        let got = acc.read_scratch(&kc.layout, 0, 0);
+        assert_eq!(got, cb.item(3).bind(cb.item(7)));
+        // broadcast: every tile holds the result
+        for t in 1..acc.cfg.n_tiles {
+            assert_eq!(acc.read_scratch(&kc.layout, t, 0), got);
+        }
+    }
+
+    #[test]
+    fn bind_three_items_matches_functional() {
+        let (mut acc, kc, cb) = setup(10);
+        let p = kc.bind(
+            &[
+                Operand::plain(VecRef::Item(0)),
+                Operand::plain(VecRef::Item(1)),
+                Operand::plain(VecRef::Item(2)),
+            ],
+            1,
+        );
+        acc.run(&p, ControlMethod::Sopc);
+        let expect = cb.item(0).bind(cb.item(1)).bind(cb.item(2));
+        assert_eq!(acc.read_scratch(&kc.layout, 2, 1), expect);
+    }
+
+    #[test]
+    fn positional_bind_uses_fold_local_permute() {
+        // Positional binding permutes within each fold (hardware permutes
+        // the 512-bit datapath). Functional expectation: per-fold rotate.
+        let (mut acc, kc, cb) = setup(6);
+        let p = kc.bind(
+            &[
+                Operand::plain(VecRef::Item(0)),
+                Operand::permuted(VecRef::Item(1), 1),
+            ],
+            0,
+        );
+        acc.run(&p, ControlMethod::Mopc);
+        let got = acc.read_scratch(&kc.layout, 0, 0);
+        // expected: fold-wise rotate of item1 then XOR
+        let fpv = kc.layout.folds_per_vec;
+        let mut words = Vec::new();
+        for f in 0..fpv {
+            let rot = crate::accel::pipeline::rotate_fold(cb.item(1).fold(f), 512, 1);
+            for (a, b) in cb.item(0).fold(f).iter().zip(&rot) {
+                words.push(a ^ b);
+            }
+        }
+        assert_eq!(got, BinaryHV::from_words(DIM, words));
+    }
+
+    #[test]
+    fn search_finds_nearest_neighbor() {
+        let (mut acc, kc, cb) = setup(55);
+        let mut rng = Rng::new(77);
+        // noisy copy of item 23
+        let mut q = cb.item(23).clone();
+        for i in rng.sample_indices(DIM, DIM / 5) {
+            q.set(i, !q.get(i));
+        }
+        acc.stage_scratch(&kc.layout, 0, &q);
+        acc.reset_search();
+        let p = kc.search(0, 55);
+        acc.run(&p, ControlMethod::Mopc);
+        let (gid, score) = acc.global_best(&kc.layout);
+        let (expect_id, expect_score) = cb.nearest(&q);
+        assert_eq!(gid, expect_id);
+        assert_eq!(score, expect_score);
+        assert_eq!(gid, 23);
+    }
+
+    #[test]
+    fn search_matches_functional_on_random_queries() {
+        let (mut acc, kc, cb) = setup(19); // uneven striping across 4 tiles
+        let mut rng = Rng::new(5);
+        for _ in 0..5 {
+            let q = BinaryHV::random(&mut rng, DIM);
+            acc.stage_scratch(&kc.layout, 0, &q);
+            acc.reset_search();
+            let p = kc.search(0, 19);
+            acc.run(&p, ControlMethod::Sopc);
+            let (gid, score) = acc.global_best(&kc.layout);
+            let (eid, escore) = cb.nearest(&q);
+            assert_eq!(score, escore);
+            assert_eq!(gid, eid);
+        }
+    }
+
+    #[test]
+    fn weighted_bundle_matches_functional() {
+        let (mut acc, kc, cb) = setup(8);
+        let groups = vec![
+            (vec![Operand::plain(VecRef::Item(0))], 3),
+            (vec![Operand::plain(VecRef::Item(1))], -2),
+            (
+                vec![
+                    Operand::plain(VecRef::Item(2)),
+                    Operand::plain(VecRef::Item(3)),
+                ],
+                5,
+            ),
+        ];
+        let p = kc.weighted_bundle(&groups, 2);
+        acc.run(&p, ControlMethod::Mopc);
+        let got = acc.read_scratch(&kc.layout, 1, 2);
+        // functional: sign(3*bip(i0) - 2*bip(i1) + 5*bip(i2^i3))
+        let mut expect = BinaryHV::zeros(DIM);
+        let b23 = cb.item(2).bind(cb.item(3));
+        for bit in 0..DIM {
+            let v0 = if cb.item(0).get(bit) { 1i64 } else { -1 };
+            let v1 = if cb.item(1).get(bit) { 1i64 } else { -1 };
+            let v2 = if b23.get(bit) { 1i64 } else { -1 };
+            expect.set(bit, 3 * v0 - 2 * v1 + 5 * v2 >= 0);
+        }
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn project_matches_functional_weighted_sum() {
+        let (mut acc, kc, cb) = setup(12);
+        let mut rng = Rng::new(9);
+        let xhat = BinaryHV::random(&mut rng, DIM);
+        acc.stage_scratch(&kc.layout, 0, &xhat);
+        let factor: Vec<usize> = (0..12).collect();
+        let p = kc.project(0, &factor, 1);
+        acc.run(&p, ControlMethod::Mopc);
+        let got = acc.read_scratch(&kc.layout, 3, 1);
+        // functional: sign(sum_g dot(item_g, xhat) * bip(item_g))
+        let mut expect = BinaryHV::zeros(DIM);
+        let scores: Vec<i64> = factor.iter().map(|&g| cb.item(g).dot(&xhat)).collect();
+        for bit in 0..DIM {
+            let mut acc_v = 0i64;
+            for (g, &s) in factor.iter().zip(&scores) {
+                let v = if cb.item(*g).get(bit) { 1i64 } else { -1 };
+                acc_v += s * v;
+            }
+            expect.set(bit, acc_v >= 0);
+        }
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn sopc_mopc_agree_on_all_kernels() {
+        let (acc0, kc, _) = setup(16);
+        let mut rng = Rng::new(11);
+        let q = BinaryHV::random(&mut rng, DIM);
+        for prog in [
+            kc.bind(
+                &[
+                    Operand::plain(VecRef::Item(1)),
+                    Operand::plain(VecRef::Item(2)),
+                ],
+                1,
+            ),
+            kc.search(0, 16),
+            kc.project(0, &[0, 1, 2, 3], 1),
+        ] {
+            let mut a = acc0.clone();
+            let mut b = acc0.clone();
+            a.stage_scratch(&kc.layout, 0, &q);
+            b.stage_scratch(&kc.layout, 0, &q);
+            a.reset_search();
+            b.reset_search();
+            a.run(&prog, ControlMethod::Sopc);
+            b.run(&prog, ControlMethod::Mopc);
+            for t in 0..a.cfg.n_tiles {
+                assert_eq!(a.tiles[t].sram, b.tiles[t].sram, "{}", prog.label);
+                assert_eq!(a.tiles[t].best, b.tiles[t].best);
+                assert_eq!(a.tiles[t].dsum_rf, b.tiles[t].dsum_rf);
+            }
+        }
+    }
+
+    #[test]
+    fn search_scales_with_dsum_regs_and_tiles() {
+        // Acc8 must need strictly fewer words than Acc2 for the same search.
+        let mut rng = Rng::new(13);
+        let cb = BinaryCodebook::random(&mut rng, 64, DIM);
+        let mut words = Vec::new();
+        for cfg in [AccelConfig::acc2(), AccelConfig::acc8()] {
+            let mut acc = Accelerator::new(cfg.clone());
+            let layout = acc.load_items(cb.items(), 4);
+            let kc = KernelCompiler::new(cfg, layout);
+            words.push(kc.search(0, 64).len());
+        }
+        assert!(
+            words[1] * 3 < words[0],
+            "Acc8 search should be ≥3x fewer words: {words:?}"
+        );
+    }
+}

@@ -1,0 +1,142 @@
+//! Accelerator configurations (paper Tab. VI: Acc2 / Acc4 / Acc8).
+
+/// Parameterized multi-tile VSA accelerator configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccelConfig {
+    /// Instance name ("Acc2", ...).
+    pub name: String,
+    /// Global bus / datapath width in bits (`W`).
+    pub bus_width: usize,
+    /// Number of tiles (`K`).
+    pub n_tiles: usize,
+    /// CA-90 register-file entries per tile (`R`).
+    pub ca90_rf: usize,
+    /// BND register-file accumulators (`B`), shared VOP.
+    pub bnd_rf: usize,
+    /// DSUM registers per tile (`D`).
+    pub dsum_rf: usize,
+    /// Distance accumulator bit-width (`C`).
+    pub distance_bits: u32,
+    /// BND accumulator lane bit-width (`H`).
+    pub bnd_bits: u32,
+    /// Total SRAM capacity in bytes (across tiles).
+    pub memory_bytes: usize,
+    /// Clock frequency (28 nm synthesis target).
+    pub clock_hz: f64,
+}
+
+impl AccelConfig {
+    /// Tab. VI row `Acc2`.
+    pub fn acc2() -> Self {
+        AccelConfig {
+            name: "Acc2".into(),
+            bus_width: 512,
+            n_tiles: 2,
+            ca90_rf: 2,
+            bnd_rf: 2,
+            dsum_rf: 2,
+            distance_bits: 12,
+            bnd_bits: 8,
+            memory_bytes: 128 * 1024,
+            clock_hz: 500e6,
+        }
+    }
+
+    /// Tab. VI row `Acc4`.
+    pub fn acc4() -> Self {
+        AccelConfig {
+            name: "Acc4".into(),
+            n_tiles: 4,
+            ca90_rf: 4,
+            bnd_rf: 4,
+            dsum_rf: 4,
+            memory_bytes: 256 * 1024,
+            ..Self::acc2()
+        }
+    }
+
+    /// Tab. VI row `Acc8`.
+    pub fn acc8() -> Self {
+        AccelConfig {
+            name: "Acc8".into(),
+            n_tiles: 8,
+            ca90_rf: 8,
+            bnd_rf: 8,
+            dsum_rf: 8,
+            memory_bytes: 512 * 1024,
+            ..Self::acc2()
+        }
+    }
+
+    /// All three paper instances.
+    pub fn paper_instances() -> Vec<AccelConfig> {
+        vec![Self::acc2(), Self::acc4(), Self::acc8()]
+    }
+
+    /// SRAM bytes per tile.
+    pub fn sram_per_tile(&self) -> usize {
+        self.memory_bytes / self.n_tiles
+    }
+
+    /// `u64` words per fold (bus transaction).
+    pub fn fold_words(&self) -> usize {
+        self.bus_width / 64
+    }
+
+    /// SRAM capacity per tile in fold slots.
+    pub fn sram_folds_per_tile(&self) -> usize {
+        self.sram_per_tile() * 8 / self.bus_width
+    }
+
+    /// Leakage power (W). Measured values from the paper's synthesis:
+    /// 1.7 mW (Acc2) → 5.2 mW (Acc8); Acc4 interpolated.
+    pub fn leakage_w(&self) -> f64 {
+        match self.n_tiles {
+            0..=2 => 1.7e-3,
+            3..=4 => 3.0e-3,
+            _ => 5.2e-3,
+        }
+    }
+
+    /// Seconds per cycle.
+    pub fn cycle_time(&self) -> f64 {
+        1.0 / self.clock_hz
+    }
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        Self::acc4()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table_vi_values() {
+        let a2 = AccelConfig::acc2();
+        assert_eq!((a2.bus_width, a2.n_tiles, a2.dsum_rf), (512, 2, 2));
+        assert_eq!(a2.memory_bytes, 128 * 1024);
+        let a8 = AccelConfig::acc8();
+        assert_eq!(a8.n_tiles, 8);
+        assert_eq!(a8.memory_bytes, 512 * 1024);
+        assert_eq!(a8.distance_bits, 12);
+        assert_eq!(a8.bnd_bits, 8);
+    }
+
+    #[test]
+    fn leakage_triples_acc2_to_acc8() {
+        let ratio = AccelConfig::acc8().leakage_w() / AccelConfig::acc2().leakage_w();
+        assert!((ratio - 3.06).abs() < 0.1, "paper reports ~3x: {ratio}");
+    }
+
+    #[test]
+    fn sram_fold_capacity() {
+        let a2 = AccelConfig::acc2();
+        // 64 KiB per tile / 64 B per fold = 1024 folds.
+        assert_eq!(a2.sram_folds_per_tile(), 1024);
+        assert_eq!(a2.fold_words(), 8);
+    }
+}

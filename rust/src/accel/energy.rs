@@ -1,0 +1,177 @@
+//! Event-based energy model for the VSA accelerator (28 nm class).
+//!
+//! Per-activation energies are set from published 28 nm hyperdimensional
+//! processor figures ([15], [60], [61]): SRAM fold access dominates, logic
+//! (XOR/popcount) is cheap, integer accumulate in between.  Control/clock
+//! energy is charged per *cycle*, which is what separates SOPC from MOPC
+//! power (Sec. VI-D, Fig. 9): MOPC finishes the same dynamic-op energy in
+//! fewer cycles (paying less control + leakage energy) but concentrates it
+//! into less time — net average power rises ~40–60%.
+//!
+//! Energy is split into a **per-tile** part (MCG + DC stages, replicated
+//! across the active tile mask) and a **shared** part (the single VOP
+//! datapath), mirroring the Fig. 7 floorplan.
+
+use super::isa::{
+    BindOp, BndOp, DcOp, InstructionWord, MemOp, MultOp, QryOp, SgnOp,
+};
+
+/// Per-event energies in joules.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyModel {
+    /// SRAM read of one 512-bit fold.
+    pub sram_read: f64,
+    /// SRAM write of one fold.
+    pub sram_write: f64,
+    /// One CA-90 generation (XOR + shifts) over a fold.
+    pub ca90_step: f64,
+    /// Register-file read/write (CA-90 RF, QRY latch).
+    pub rf_access: f64,
+    /// 512-lane XOR bind.
+    pub xor_bind: f64,
+    /// Permutation network pass.
+    pub permute: f64,
+    /// Binary→integer conversion (512 lanes).
+    pub b2i: f64,
+    /// Integer scalar multiply (512 lanes).
+    pub int_mult: f64,
+    /// Integer accumulate into BND RF (512 lanes).
+    pub bnd_accum: f64,
+    /// Bipolarization of an accumulator.
+    pub sgn: f64,
+    /// POPCNT over a fold.
+    pub popcnt: f64,
+    /// DSUM accumulate.
+    pub dsum: f64,
+    /// ARGMAX compare/update.
+    pub argmax: f64,
+    /// Control / clock-tree / instruction-decode energy per cycle.
+    pub control_per_cycle: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            sram_read: 15e-12,
+            sram_write: 18e-12,
+            ca90_step: 2e-12,
+            rf_access: 1.5e-12,
+            xor_bind: 1e-12,
+            permute: 1.2e-12,
+            b2i: 2e-12,
+            int_mult: 8e-12,
+            bnd_accum: 6e-12,
+            sgn: 1e-12,
+            popcnt: 3e-12,
+            dsum: 0.5e-12,
+            argmax: 0.3e-12,
+            control_per_cycle: 10e-12,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Energy of the word's per-tile stages (MCG + DC) for ONE tile.
+    pub fn tile_energy(&self, w: &InstructionWord) -> f64 {
+        let mut e = 0.0;
+        e += match w.mem {
+            MemOp::Nop => 0.0,
+            MemOp::LoadSram => self.sram_read,
+            MemOp::LoadRf | MemOp::LoadResult => self.rf_access,
+            MemOp::Ca90Gen => self.ca90_step + self.rf_access,
+            MemOp::StoreResult | MemOp::StoreDatapath => self.sram_write,
+            MemOp::SramToRf => self.sram_read + self.rf_access,
+        };
+        e += match w.qry {
+            QryOp::Nop => 0.0,
+            QryOp::SetQry => self.rf_access,
+            QryOp::Permute => self.permute,
+        };
+        // POPCNT is per-tile (DC front-end); SGN::Sign is shared VOP.
+        if w.sgn == SgnOp::Popcnt {
+            e += self.popcnt + self.xor_bind;
+        }
+        e += match w.dc {
+            DcOp::Nop => 0.0,
+            DcOp::DsumAcc | DcOp::DsumReset | DcOp::DsumLatch => self.dsum,
+            DcOp::ArgmaxUpdate => self.argmax,
+        };
+        e
+    }
+
+    /// Energy of the word's shared-VOP stages.
+    pub fn shared_energy(&self, w: &InstructionWord) -> f64 {
+        let mut e = 0.0;
+        e += match w.bind {
+            BindOp::Nop => 0.0,
+            BindOp::SetBuf => self.rf_access,
+            BindOp::Xor => self.xor_bind,
+        };
+        e += match w.mult {
+            MultOp::Nop => 0.0,
+            MultOp::B2I => self.b2i,
+            MultOp::Scale | MultOp::ScaleByDsum => self.b2i + self.int_mult,
+        };
+        e += match w.bnd {
+            BndOp::Nop => 0.0,
+            BndOp::Accum | BndOp::ResetAccum => self.bnd_accum,
+        };
+        if w.sgn == SgnOp::Sign {
+            e += self.sgn;
+        }
+        e
+    }
+
+    /// Total dynamic energy of one word executed on `n_tiles` tiles.
+    pub fn word_energy(&self, w: &InstructionWord, n_tiles: usize) -> f64 {
+        self.tile_energy(w) * n_tiles as f64 + self.shared_energy(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::isa::OpParam;
+
+    #[test]
+    fn nop_word_costs_nothing() {
+        let m = EnergyModel::default();
+        assert_eq!(m.word_energy(&InstructionWord::default(), 4), 0.0);
+    }
+
+    #[test]
+    fn search_word_energy_dominated_by_sram() {
+        let m = EnergyModel::default();
+        let w = InstructionWord {
+            mem: MemOp::LoadSram,
+            sgn: SgnOp::Popcnt,
+            dc: DcOp::DsumAcc,
+            param: OpParam::all_tiles(),
+            ..Default::default()
+        };
+        let e = m.word_energy(&w, 1);
+        assert!(m.sram_read / e > 0.5, "SRAM should dominate: {e:.2e}");
+        // per-tile stages replicate across tiles
+        assert!((m.word_energy(&w, 4) - 4.0 * e).abs() < 1e-18);
+    }
+
+    #[test]
+    fn vop_energy_does_not_scale_with_tiles() {
+        let m = EnergyModel::default();
+        let w = InstructionWord {
+            bind: BindOp::Xor,
+            mult: MultOp::Scale,
+            bnd: BndOp::Accum,
+            ..Default::default()
+        };
+        assert_eq!(m.word_energy(&w, 1), m.word_energy(&w, 8));
+    }
+
+    #[test]
+    fn energies_positive_and_ordered() {
+        let m = EnergyModel::default();
+        assert!(m.sram_read > m.popcnt);
+        assert!(m.popcnt > m.dsum);
+        assert!(m.int_mult > m.xor_bind);
+    }
+}

@@ -1,0 +1,277 @@
+//! Instruction-set architecture: the wide *Instruction Word* macro format
+//! (Fig. 10) with one Type field per pipeline stage (Fig. 8) plus an
+//! OP_PARAM configuration field, and the SOPC/MOPC control methods
+//! (Sec. VI-D).
+
+/// The seven pipeline stages, in dataflow order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// MCG: SRAM / CA-90 / register-file access.
+    Mem = 0,
+    /// MCG: query register & permutation network.
+    Qry = 1,
+    /// VOP: XOR binding against the bind buffer.
+    Bind = 2,
+    /// VOP: binary→integer conversion and scalar multiply.
+    Mult = 3,
+    /// VOP: integer bundling accumulation (BND RF).
+    Bnd = 4,
+    /// VOP/DC boundary: SGN bipolarization or POPCNT distance.
+    Sgn = 5,
+    /// DC: DSUM partial-distance accumulation and ARGMAX search.
+    Dc = 6,
+}
+
+/// Number of pipeline stages.
+pub const N_STAGES: usize = 7;
+
+/// All stages in order.
+pub const STAGES: [Stage; N_STAGES] = [
+    Stage::Mem,
+    Stage::Qry,
+    Stage::Bind,
+    Stage::Mult,
+    Stage::Bnd,
+    Stage::Sgn,
+    Stage::Dc,
+];
+
+/// Stage-1 (MEM) operation type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemOp {
+    #[default]
+    Nop,
+    /// Load fold at `param.addr` from tile SRAM onto the binary datapath.
+    LoadSram,
+    /// Load CA-90 RF entry `param.rf` onto the datapath.
+    LoadRf,
+    /// Apply one CA-90 generation to RF entry `param.rf`, put the result
+    /// on the datapath, and write it back to the RF (fold regeneration).
+    Ca90Gen,
+    /// Store the SGN result register to SRAM at `param.addr`.
+    StoreResult,
+    /// Load the SGN result register onto the datapath.
+    LoadResult,
+    /// Copy SRAM fold at `param.addr` into CA-90 RF entry `param.rf`
+    /// (seeding the RF for on-the-fly regeneration).
+    SramToRf,
+    /// Store the *previous word's* datapath latch to SRAM at `param.addr`
+    /// (MEM is stage 1, so the latch still holds the prior word's value —
+    /// how bound binary results reach memory without a BND/SGN pass).
+    StoreDatapath,
+}
+
+/// Stage-2 (QRY) operation type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QryOp {
+    #[default]
+    Nop,
+    /// Latch the current datapath fold into the QRY register.
+    SetQry,
+    /// Cyclically permute the datapath fold by `param.shift` bits.
+    Permute,
+}
+
+/// Stage-3 (BIND) operation type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BindOp {
+    #[default]
+    Nop,
+    /// Latch the datapath fold into the bind buffer.
+    SetBuf,
+    /// XOR the datapath fold with the bind buffer.
+    Xor,
+}
+
+/// Stage-4 (MULT) operation type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MultOp {
+    #[default]
+    Nop,
+    /// Convert binary fold to bipolar integer lanes (+1/-1).
+    B2I,
+    /// B2I then multiply lanes by the scalar weight in `param.weight`.
+    Scale,
+    /// B2I then multiply by the tile's last DSUM value (resonator
+    /// weighting: n_i = d(a_i, x_hat) feeds the projection).
+    ScaleByDsum,
+}
+
+/// Stage-5 (BND) operation type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BndOp {
+    #[default]
+    Nop,
+    /// Accumulate integer lanes into BND RF entry `param.rf2`.
+    Accum,
+    /// Zero BND RF entry `param.rf2`, then accumulate.
+    ResetAccum,
+}
+
+/// Stage-6 (SGN / POPCNT) operation type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SgnOp {
+    #[default]
+    Nop,
+    /// Bipolarize BND RF entry `param.rf2` into the result register.
+    Sign,
+    /// POPCNT distance of (datapath fold ⊕ QRY): pushes the fold's
+    /// bipolar-dot partial value to the DC stage.
+    Popcnt,
+}
+
+/// Stage-7 (DC) operation type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DcOp {
+    #[default]
+    Nop,
+    /// DSUM RF `param.dsum` += incoming partial distance.
+    DsumAcc,
+    /// Zero DSUM RF `param.dsum`, then accumulate.
+    DsumReset,
+    /// Compare DSUM RF `param.dsum` against the tile's running best;
+    /// record `param.item` on improvement (nearest-neighbor search).
+    ArgmaxUpdate,
+    /// Latch DSUM RF `param.dsum` into the tile's "last distance" latch
+    /// (feeds `MultOp::ScaleByDsum`).
+    DsumLatch,
+}
+
+/// OP_PARAM field: configuration shared by the word's stage operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct OpParam {
+    /// SRAM fold address (MEM ops).
+    pub addr: usize,
+    /// CA-90 RF index.
+    pub rf: usize,
+    /// BND RF index.
+    pub rf2: usize,
+    /// DSUM RF index.
+    pub dsum: usize,
+    /// Permutation shift (QRY stage).
+    pub shift: i32,
+    /// Scalar weight (MULT stage).
+    pub weight: i32,
+    /// Item identifier for ARGMAX bookkeeping.
+    pub item: u32,
+    /// Active-tile bitmask (bit t = tile t executes this word).
+    pub tile_mask: u64,
+}
+
+impl OpParam {
+    /// Param with all tiles active.
+    pub fn all_tiles() -> Self {
+        OpParam {
+            tile_mask: u64::MAX,
+            ..Default::default()
+        }
+    }
+
+    /// Param targeting a single tile.
+    pub fn tile(t: usize) -> Self {
+        OpParam {
+            tile_mask: 1u64 << t,
+            ..Default::default()
+        }
+    }
+}
+
+/// A wide instruction word: one operation per stage + OP_PARAM (Fig. 10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct InstructionWord {
+    pub mem: MemOp,
+    pub qry: QryOp,
+    pub bind: BindOp,
+    pub mult: MultOp,
+    pub bnd: BndOp,
+    pub sgn: SgnOp,
+    pub dc: DcOp,
+    pub param: OpParam,
+}
+
+impl InstructionWord {
+    /// Number of active (non-NOP) stage operations — the SOPC cycle cost.
+    pub fn active_stages(&self) -> usize {
+        (self.mem != MemOp::Nop) as usize
+            + (self.qry != QryOp::Nop) as usize
+            + (self.bind != BindOp::Nop) as usize
+            + (self.mult != MultOp::Nop) as usize
+            + (self.bnd != BndOp::Nop) as usize
+            + (self.sgn != SgnOp::Nop) as usize
+            + (self.dc != DcOp::Nop) as usize
+    }
+
+    /// Whether the word uses only shared-VOP stages (serializes even in a
+    /// multi-tile configuration).
+    pub fn uses_vop(&self) -> bool {
+        self.bind != BindOp::Nop || self.mult != MultOp::Nop || self.bnd != BndOp::Nop
+    }
+
+    /// Encoded bit width: 7 Type fields (Fig. 10: 2–3 bits each) + the
+    /// 57-bit OP_PARAM = 76 bits total.
+    pub const ENCODED_BITS: usize = 57 + 3 + 3 + 3 + 2 + 3 + 3 + 2;
+}
+
+/// Accelerator control method (Sec. VI-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ControlMethod {
+    /// Single-operation-per-cycle: one stage switches per cycle — simple
+    /// control, low power, long runtime.
+    Sopc,
+    /// Multiple-operations-per-cycle: the pipeline streams words so all
+    /// stages operate concurrently — higher throughput and power.
+    Mopc,
+}
+
+impl std::fmt::Display for ControlMethod {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ControlMethod::Sopc => write!(f, "SOPC"),
+            ControlMethod::Mopc => write!(f, "MOPC"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_word_has_no_active_stages() {
+        assert_eq!(InstructionWord::default().active_stages(), 0);
+    }
+
+    #[test]
+    fn active_stage_count() {
+        let w = InstructionWord {
+            mem: MemOp::LoadSram,
+            sgn: SgnOp::Popcnt,
+            dc: DcOp::DsumAcc,
+            ..Default::default()
+        };
+        assert_eq!(w.active_stages(), 3);
+        assert!(!w.uses_vop());
+    }
+
+    #[test]
+    fn vop_detection() {
+        let w = InstructionWord {
+            mem: MemOp::LoadSram,
+            bind: BindOp::Xor,
+            ..Default::default()
+        };
+        assert!(w.uses_vop());
+    }
+
+    #[test]
+    fn word_format_matches_fig10() {
+        // 57-bit OP_PARAM + (3+3+3+2+3+3+2) Type bits = 76.
+        assert_eq!(InstructionWord::ENCODED_BITS, 76);
+    }
+
+    #[test]
+    fn tile_masks() {
+        assert_eq!(OpParam::tile(3).tile_mask, 0b1000);
+        assert_eq!(OpParam::all_tiles().tile_mask, u64::MAX);
+    }
+}

@@ -1,0 +1,39 @@
+//! Cycle-level simulator of the paper's multi-tile VSA accelerator
+//! (Sec. VI: Fig. 7 architecture, Fig. 8 pipeline, Fig. 10 ISA, Tab. VI
+//! configurations).
+//!
+//! Architecture model:
+//! - **MCG** (per tile): local SRAM holding codebook folds, CA-90 logic +
+//!   register file for on-the-fly fold regeneration, and a QRY register.
+//! - **VOP** (shared): BIND (XOR on binary folds), MULT (binary→integer
+//!   conversion + scalar multiply), BND (integer bundling accumulators),
+//!   BND RF, SGN (bipolarize back to binary).
+//! - **DC** (per tile): POPCNT over (fold ⊕ QRY), DSUM RF partial-distance
+//!   accumulators, ARGMAX nearest-neighbor tracking.
+//!
+//! Instructions are wide *Instruction Words*: one operation slot per
+//! pipeline stage plus an OP_PARAM field (Fig. 10). Words are broadcast
+//! SIMD across the active tile mask — MCG/DC work distributes across
+//! tiles, VOP work serializes through the shared datapath, which is
+//! exactly why search-heavy REACT scales with tile count while
+//! VOP-intensive MULT does not (Fig. 11a).
+//!
+//! Control methods (Sec. VI-D): **SOPC** issues one stage-operation per
+//! cycle; **MOPC** pipelines words so all stages switch concurrently.
+//! Both produce identical architectural state — property-tested in
+//! `rust/tests/accel_invariants.rs`.
+
+pub mod compiler;
+pub mod config;
+pub mod energy;
+pub mod isa;
+pub mod pipeline;
+pub mod program;
+pub mod tile;
+
+pub use compiler::KernelCompiler;
+pub use config::AccelConfig;
+pub use energy::EnergyModel;
+pub use isa::{ControlMethod, InstructionWord, OpParam, Stage};
+pub use pipeline::{Accelerator, SimReport};
+pub use program::Program;

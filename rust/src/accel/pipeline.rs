@@ -1,0 +1,617 @@
+//! Program execution: functional semantics + cycle/energy accounting
+//! under the SOPC and MOPC control methods.
+//!
+//! Both control methods execute words in program order with identical
+//! architectural results; they differ only in cycle accounting:
+//!
+//! - **SOPC**: one stage-operation per cycle → `cycles = Σ active_stages`.
+//! - **MOPC**: one word enters the pipeline per cycle; all stages operate
+//!   concurrently → `cycles = n_words + depth - 1`.
+//!
+//! Energy = dynamic (per stage-op event, tile-replicated for MCG/DC,
+//! single for shared VOP) + control (per cycle) + leakage (per second).
+
+use super::config::AccelConfig;
+use super::energy::EnergyModel;
+use super::isa::{
+    BindOp, BndOp, ControlMethod, DcOp, InstructionWord, MemOp, MultOp, QryOp,
+    SgnOp, N_STAGES,
+};
+use super::program::Program;
+use super::tile::{popcnt_partial, Tile, VopState};
+use crate::vsa::hypervector::BinaryHV;
+
+/// Item placement after [`Accelerator::load_items`]: items are striped
+/// round-robin across tiles; scratch vector slots sit above the item
+/// region at the same local address on every tile.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub folds_per_vec: usize,
+    pub n_items: usize,
+    pub n_tiles: usize,
+    /// First scratch fold address (uniform across tiles).
+    pub scratch_base: usize,
+}
+
+impl Layout {
+    pub fn tile_of(&self, item: usize) -> usize {
+        item % self.n_tiles
+    }
+
+    pub fn local_of(&self, item: usize) -> usize {
+        item / self.n_tiles
+    }
+
+    /// Fold address of local item `local`.
+    pub fn local_addr(&self, local: usize) -> usize {
+        local * self.folds_per_vec
+    }
+
+    /// Items resident on tile `t`.
+    pub fn items_on_tile(&self, t: usize) -> usize {
+        (self.n_items + self.n_tiles - 1 - t) / self.n_tiles
+    }
+
+    /// Max items on any tile (tile 0).
+    pub fn max_items_per_tile(&self) -> usize {
+        self.items_on_tile(0)
+    }
+
+    /// Global item id from (tile, local index).
+    pub fn global_id(&self, tile: usize, local: usize) -> usize {
+        local * self.n_tiles + tile
+    }
+
+    /// Fold address of scratch slot `slot`.
+    pub fn scratch_addr(&self, slot: usize) -> usize {
+        self.scratch_base + slot * self.folds_per_vec
+    }
+}
+
+/// Execution report for one program run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub label: String,
+    pub control: ControlMethod,
+    pub words: usize,
+    pub stage_ops: usize,
+    pub cycles: u64,
+    pub time_s: f64,
+    pub dynamic_j: f64,
+    pub control_j: f64,
+    pub leakage_j: f64,
+}
+
+impl SimReport {
+    /// Total energy (dynamic + control + leakage).
+    pub fn energy_j(&self) -> f64 {
+        self.dynamic_j + self.control_j + self.leakage_j
+    }
+
+    /// Average power over the run.
+    pub fn avg_power_w(&self) -> f64 {
+        if self.time_s > 0.0 {
+            self.energy_j() / self.time_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Merge another report (sequential composition).
+    pub fn merge(&mut self, other: &SimReport) {
+        self.words += other.words;
+        self.stage_ops += other.stage_ops;
+        self.cycles += other.cycles;
+        self.time_s += other.time_s;
+        self.dynamic_j += other.dynamic_j;
+        self.control_j += other.control_j;
+        self.leakage_j += other.leakage_j;
+    }
+}
+
+/// The multi-tile VSA accelerator instance.
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub cfg: AccelConfig,
+    pub energy: EnergyModel,
+    pub tiles: Vec<Tile>,
+    pub vop: VopState,
+}
+
+impl Accelerator {
+    pub fn new(cfg: AccelConfig) -> Self {
+        let tiles = (0..cfg.n_tiles).map(|_| Tile::new(&cfg)).collect();
+        let vop = VopState::new(&cfg);
+        Accelerator {
+            energy: EnergyModel::default(),
+            tiles,
+            vop,
+            cfg,
+        }
+    }
+
+    /// Folds per hypervector of dimension `dim`.
+    pub fn folds_for(&self, dim: usize) -> usize {
+        assert_eq!(
+            dim % self.cfg.bus_width,
+            0,
+            "dim {dim} must be a multiple of the {}-bit bus",
+            self.cfg.bus_width
+        );
+        dim / self.cfg.bus_width
+    }
+
+    /// Load an item codebook into tile SRAMs (host DMA, not simulated
+    /// cycles — the paper's SRAMs are "initialized with randomly generated
+    /// atomic vectors"). Returns the placement.
+    pub fn load_items(&mut self, items: &[BinaryHV], scratch_slots: usize) -> Layout {
+        assert!(!items.is_empty());
+        let dim = items[0].dim();
+        let fpv = self.folds_for(dim);
+        let layout = Layout {
+            folds_per_vec: fpv,
+            n_items: items.len(),
+            n_tiles: self.cfg.n_tiles,
+            scratch_base: {
+                let max_local = (items.len() + self.cfg.n_tiles - 1) / self.cfg.n_tiles;
+                max_local * fpv
+            },
+        };
+        let capacity = self.tiles[0].sram_folds();
+        assert!(
+            layout.scratch_base + scratch_slots * fpv <= capacity,
+            "codebook + scratch ({} folds) exceeds tile SRAM ({} folds)",
+            layout.scratch_base + scratch_slots * fpv,
+            capacity
+        );
+        for (g, item) in items.iter().enumerate() {
+            assert_eq!(item.dim(), dim);
+            let t = layout.tile_of(g);
+            let base = layout.local_addr(layout.local_of(g));
+            for f in 0..fpv {
+                let w = item.fold(f);
+                self.tiles[t].write_sram_fold(base + f, w);
+            }
+        }
+        layout
+    }
+
+    /// Stage a vector into scratch slot `slot` on every tile (broadcast
+    /// DMA — e.g. a query arriving from the host or the neural frontend).
+    pub fn stage_scratch(&mut self, layout: &Layout, slot: usize, v: &BinaryHV) {
+        let fpv = layout.folds_per_vec;
+        assert_eq!(self.folds_for(v.dim()), fpv);
+        let base = layout.scratch_addr(slot);
+        for t in 0..self.cfg.n_tiles {
+            for f in 0..fpv {
+                self.tiles[t].write_sram_fold(base + f, v.fold(f));
+            }
+        }
+    }
+
+    /// Read a vector back from tile `t`'s scratch slot.
+    pub fn read_scratch(&self, layout: &Layout, tile: usize, slot: usize) -> BinaryHV {
+        let fpv = layout.folds_per_vec;
+        let base = layout.scratch_addr(slot);
+        let mut words = Vec::with_capacity(fpv * self.cfg.fold_words());
+        for f in 0..fpv {
+            words.extend_from_slice(self.tiles[tile].sram_fold(base + f));
+        }
+        BinaryHV::from_words(fpv * self.cfg.bus_width, words)
+    }
+
+    /// Reset every tile's DC search state.
+    pub fn reset_search(&mut self) {
+        for t in &mut self.tiles {
+            t.reset_search();
+        }
+    }
+
+    /// Merge per-tile ARGMAX results into the global nearest item.
+    /// Returns (global item id, score).
+    pub fn global_best(&self, layout: &Layout) -> (usize, i64) {
+        let mut best = (usize::MAX, i64::MIN);
+        for (t, tile) in self.tiles.iter().enumerate() {
+            let (score, local) = tile.best;
+            if local == u32::MAX {
+                continue;
+            }
+            let gid = layout.global_id(t, local as usize);
+            if gid >= layout.n_items {
+                continue;
+            }
+            if score > best.1 || (score == best.1 && gid < best.0) {
+                best = (gid, score);
+            }
+        }
+        best
+    }
+
+    /// Execute a program under the given control method.
+    pub fn run(&mut self, prog: &Program, control: ControlMethod) -> SimReport {
+        let mut dynamic = 0.0;
+        let mut stage_ops = 0usize;
+        for w in &prog.words {
+            let n_active = self.execute_word(w);
+            dynamic += self.energy.word_energy(w, n_active);
+            stage_ops += w.active_stages();
+        }
+        let cycles = match control {
+            ControlMethod::Sopc => stage_ops as u64,
+            ControlMethod::Mopc => (prog.words.len() + N_STAGES - 1) as u64,
+        };
+        let time_s = cycles as f64 * self.cfg.cycle_time();
+        SimReport {
+            label: prog.label.clone(),
+            control,
+            words: prog.words.len(),
+            stage_ops,
+            cycles,
+            time_s,
+            dynamic_j: dynamic,
+            control_j: cycles as f64 * self.energy.control_per_cycle,
+            leakage_j: time_s * self.cfg.leakage_w(),
+        }
+    }
+
+    /// Functional semantics of one word. Returns the number of active
+    /// tiles (for energy accounting).
+    ///
+    /// Perf note (§Perf): this is the simulator's per-cycle inner loop —
+    /// no heap allocation happens here; all fold moves are
+    /// `copy_from_slice` into pre-sized buffers (4.5× word throughput vs.
+    /// the initial clone-based version, see EXPERIMENTS.md).
+    fn execute_word(&mut self, w: &InstructionWord) -> usize {
+        let n_tiles = self.cfg.n_tiles;
+        debug_assert!(
+            !w.uses_vop() && w.sgn != SgnOp::Sign
+                || (w.param.tile_mask & ((1u64 << n_tiles) - 1)).count_ones() == 1,
+            "shared-VOP words must target exactly one tile: {w:?}"
+        );
+        let bus = self.cfg.bus_width;
+        let fw = self.cfg.fold_words();
+        let vop = &mut self.vop;
+        let mut n_active = 0usize;
+        for (t, tile) in self.tiles.iter_mut().enumerate() {
+            if (w.param.tile_mask >> t) & 1 == 0 {
+                continue;
+            }
+            n_active += 1;
+            // --- Stage 1: MEM ------------------------------------------------
+            match w.mem {
+                MemOp::Nop => {}
+                MemOp::LoadSram => {
+                    let a = w.param.addr * fw;
+                    for i in 0..fw {
+                        tile.datapath[i] = tile.sram[a + i];
+                    }
+                }
+                MemOp::LoadRf => {
+                    tile.datapath.copy_from_slice(&tile.ca90_rf[w.param.rf]);
+                }
+                MemOp::Ca90Gen => {
+                    tile.ca90_generate(w.param.rf, bus);
+                }
+                MemOp::StoreResult => {
+                    tile.write_sram_fold(w.param.addr, &vop.result);
+                }
+                MemOp::LoadResult => {
+                    tile.datapath.copy_from_slice(&vop.result);
+                }
+                MemOp::SramToRf => {
+                    let a = w.param.addr * fw;
+                    for i in 0..fw {
+                        tile.datapath[i] = tile.sram[a + i];
+                    }
+                    tile.ca90_rf[w.param.rf].copy_from_slice(&tile.datapath);
+                }
+                MemOp::StoreDatapath => {
+                    let a = w.param.addr * fw;
+                    for i in 0..fw {
+                        tile.sram[a + i] = tile.datapath[i];
+                    }
+                }
+            }
+            // --- Stage 2: QRY ------------------------------------------------
+            match w.qry {
+                QryOp::Nop => {}
+                QryOp::SetQry => {
+                    tile.qry.copy_from_slice(&tile.datapath);
+                }
+                QryOp::Permute => {
+                    let rotated = rotate_fold(&tile.datapath, bus, w.param.shift);
+                    tile.datapath.copy_from_slice(&rotated);
+                }
+            }
+            // --- Stage 3: BIND (shared VOP) ----------------------------------
+            match w.bind {
+                BindOp::Nop => {}
+                BindOp::SetBuf => {
+                    vop.bind_buf.copy_from_slice(&tile.datapath);
+                }
+                BindOp::Xor => {
+                    for (d, b) in tile.datapath.iter_mut().zip(&vop.bind_buf) {
+                        *d ^= *b;
+                    }
+                }
+            }
+            // --- Stages 4+5: MULT → BND (shared VOP) --------------------------
+            // When both stages are active in one word (the common encode
+            // pattern) the lane loops fuse into a single pass.
+            let mult_weight = match w.mult {
+                MultOp::Nop => None,
+                MultOp::B2I => Some(1i64),
+                MultOp::Scale => Some(w.param.weight as i64),
+                MultOp::ScaleByDsum => Some(tile.dsum_latch),
+            };
+            match (mult_weight, w.bnd) {
+                (Some(wt), BndOp::Accum) => {
+                    vop.fused_scale_accum(&tile.datapath, wt, w.param.rf2, false);
+                }
+                (Some(wt), BndOp::ResetAccum) => {
+                    vop.fused_scale_accum(&tile.datapath, wt, w.param.rf2, true);
+                }
+                (Some(wt), BndOp::Nop) => {
+                    vop.b2i(&tile.datapath);
+                    if wt != 1 {
+                        vop.scale(wt);
+                    }
+                }
+                (None, BndOp::Accum) => vop.accum(w.param.rf2, false),
+                (None, BndOp::ResetAccum) => vop.accum(w.param.rf2, true),
+                (None, BndOp::Nop) => {}
+            }
+            // --- Stage 6: SGN / POPCNT ----------------------------------------
+            let mut partial: Option<i64> = None;
+            match w.sgn {
+                SgnOp::Nop => {}
+                SgnOp::Sign => vop.sign(w.param.rf2),
+                SgnOp::Popcnt => {
+                    partial = Some(popcnt_partial(&tile.datapath, &tile.qry, bus));
+                }
+            }
+            // --- Stage 7: DC ---------------------------------------------------
+            match w.dc {
+                DcOp::Nop => {}
+                DcOp::DsumAcc => {
+                    tile.dsum_rf[w.param.dsum] += partial.unwrap_or(0);
+                }
+                DcOp::DsumReset => {
+                    tile.dsum_rf[w.param.dsum] = partial.unwrap_or(0);
+                }
+                DcOp::DsumLatch => {
+                    tile.dsum_latch = tile.dsum_rf[w.param.dsum];
+                }
+                DcOp::ArgmaxUpdate => {
+                    let score = tile.dsum_rf[w.param.dsum];
+                    if score > tile.best.0
+                        || (score == tile.best.0 && w.param.item < tile.best.1)
+                    {
+                        tile.best = (score, w.param.item);
+                    }
+                }
+            }
+        }
+        n_active
+    }
+}
+
+/// Rotate a fold (bus_width-bit ring) left by `shift` bits.
+pub fn rotate_fold(fold: &[u64], bus_width: usize, shift: i32) -> Vec<u64> {
+    let d = bus_width as i64;
+    let s = (((shift as i64 % d) + d) % d) as usize;
+    if s == 0 {
+        return fold.to_vec();
+    }
+    let n = fold.len();
+    let mut out = vec![0u64; n];
+    let word_shift = s / 64;
+    let bit_shift = (s % 64) as u32;
+    for i in 0..n {
+        let dst = (i + word_shift) % n;
+        if bit_shift == 0 {
+            out[dst] |= fold[i];
+        } else {
+            out[dst] |= fold[i] << bit_shift;
+            out[(dst + 1) % n] |= fold[i] >> (64 - bit_shift);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::isa::OpParam;
+    use crate::util::Rng;
+
+    fn setup(n_items: usize, dim: usize) -> (Accelerator, Layout, Vec<BinaryHV>) {
+        let mut acc = Accelerator::new(AccelConfig::acc4());
+        let mut rng = Rng::new(42);
+        let items: Vec<BinaryHV> = (0..n_items).map(|_| BinaryHV::random(&mut rng, dim)).collect();
+        let layout = acc.load_items(&items, 8);
+        (acc, layout, items)
+    }
+
+    #[test]
+    fn layout_striping() {
+        let (_, layout, _) = setup(10, 4096);
+        assert_eq!(layout.tile_of(0), 0);
+        assert_eq!(layout.tile_of(5), 1);
+        assert_eq!(layout.local_of(5), 1);
+        assert_eq!(layout.global_id(1, 1), 5);
+        assert_eq!(layout.items_on_tile(0), 3);
+        assert_eq!(layout.items_on_tile(3), 2);
+    }
+
+    #[test]
+    fn items_stored_and_readable() {
+        let (acc, layout, items) = setup(6, 4096);
+        for g in [0usize, 3, 5] {
+            let t = layout.tile_of(g);
+            let base = layout.local_addr(layout.local_of(g));
+            for f in 0..layout.folds_per_vec {
+                assert_eq!(acc.tiles[t].sram_fold(base + f), items[g].fold(f));
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_roundtrip() {
+        let (mut acc, layout, _) = setup(4, 4096);
+        let mut rng = Rng::new(7);
+        let v = BinaryHV::random(&mut rng, 4096);
+        acc.stage_scratch(&layout, 2, &v);
+        for t in 0..acc.cfg.n_tiles {
+            assert_eq!(acc.read_scratch(&layout, t, 2), v);
+        }
+    }
+
+    #[test]
+    fn load_and_store_words_roundtrip() {
+        let (mut acc, layout, items) = setup(4, 4096);
+        // load item 0 fold 0 on tile 0 then store to scratch slot 0
+        let mut p = Program::new("copy");
+        p.push(InstructionWord {
+            mem: MemOp::LoadSram,
+            param: OpParam {
+                addr: layout.local_addr(0),
+                tile_mask: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        p.push(InstructionWord {
+            mem: MemOp::StoreDatapath,
+            param: OpParam {
+                addr: layout.scratch_addr(0),
+                tile_mask: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        acc.run(&p, ControlMethod::Sopc);
+        assert_eq!(
+            acc.tiles[0].sram_fold(layout.scratch_addr(0)),
+            items[0].fold(0)
+        );
+    }
+
+    #[test]
+    fn sopc_and_mopc_same_state_different_cycles() {
+        let (mut acc_a, layout, items) = setup(4, 4096);
+        let mut acc_b = acc_a.clone();
+        let mut p = Program::new("bind2");
+        // bind items 0 and... stage two scratch vectors and XOR via VOP.
+        let mut rng = Rng::new(9);
+        let x = BinaryHV::random(&mut rng, 4096);
+        acc_a.stage_scratch(&layout, 0, &x);
+        acc_b.stage_scratch(&layout, 0, &x);
+        for f in 0..layout.folds_per_vec {
+            p.push(InstructionWord {
+                mem: MemOp::LoadSram,
+                bind: BindOp::SetBuf,
+                param: OpParam {
+                    addr: layout.scratch_addr(0) + f,
+                    tile_mask: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            });
+            p.push(InstructionWord {
+                mem: MemOp::LoadSram,
+                bind: BindOp::Xor,
+                param: OpParam {
+                    addr: layout.local_addr(0) + f,
+                    tile_mask: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            });
+            p.push(InstructionWord {
+                mem: MemOp::StoreDatapath,
+                param: OpParam {
+                    addr: layout.scratch_addr(1) + f,
+                    tile_mask: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            });
+        }
+        let ra = acc_a.run(&p, ControlMethod::Sopc);
+        let rb = acc_b.run(&p, ControlMethod::Mopc);
+        // identical architectural state
+        assert_eq!(
+            acc_a.read_scratch(&layout, 0, 1),
+            acc_b.read_scratch(&layout, 0, 1)
+        );
+        // functional result = XOR bind
+        assert_eq!(acc_a.read_scratch(&layout, 0, 1), x.bind(&items[0]));
+        // MOPC strictly fewer cycles, same dynamic energy
+        assert!(rb.cycles < ra.cycles);
+        assert!((ra.dynamic_j - rb.dynamic_j).abs() < 1e-18);
+    }
+
+    #[test]
+    fn rotate_fold_matches_binaryhv_permute() {
+        let mut rng = Rng::new(11);
+        let v = BinaryHV::random(&mut rng, 512);
+        for shift in [1i32, 63, 64, 200, 511] {
+            let rotated = rotate_fold(v.words(), 512, shift);
+            let expect = v.permute(shift as i64);
+            assert_eq!(&rotated[..], expect.words(), "shift {shift}");
+        }
+    }
+
+    #[test]
+    fn ca90_gen_word_regenerates_folds() {
+        let (mut acc, layout, items) = setup(2, 4096);
+        // seed RF 0 with item 0's fold 0, then generate fold 1
+        let mut p = Program::new("ca90");
+        p.push(InstructionWord {
+            mem: MemOp::SramToRf,
+            param: OpParam {
+                addr: layout.local_addr(0),
+                rf: 0,
+                tile_mask: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        p.push(InstructionWord {
+            mem: MemOp::Ca90Gen,
+            param: OpParam {
+                rf: 0,
+                tile_mask: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        acc.run(&p, ControlMethod::Mopc);
+        let expect = crate::vsa::ca90::ca90_step(items[0].fold(0), 512);
+        assert_eq!(acc.tiles[0].datapath, expect);
+        let _ = layout;
+    }
+
+    #[test]
+    fn report_energy_components() {
+        let (mut acc, layout, _) = setup(4, 4096);
+        let mut p = Program::new("probe");
+        p.push(InstructionWord {
+            mem: MemOp::LoadSram,
+            param: OpParam {
+                addr: layout.local_addr(0),
+                tile_mask: 0b1111,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let r = acc.run(&p, ControlMethod::Sopc);
+        assert!(r.dynamic_j > 0.0);
+        assert!(r.control_j > 0.0);
+        assert!(r.leakage_j > 0.0);
+        assert!(r.avg_power_w() > 0.0);
+        // 4 tiles active → 4x sram read energy
+        assert!((r.dynamic_j - 4.0 * acc.energy.sram_read).abs() < 1e-18);
+    }
+}

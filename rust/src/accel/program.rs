@@ -1,0 +1,108 @@
+//! Instruction-word programs and occupancy statistics.
+
+use super::isa::{InstructionWord, N_STAGES};
+
+/// A straight-line program of instruction words (control flow is resolved
+/// by the kernel compiler; the hardware streams words).
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub words: Vec<InstructionWord>,
+    /// Human-readable label for reports.
+    pub label: String,
+}
+
+impl Program {
+    pub fn new(label: impl Into<String>) -> Self {
+        Program {
+            words: Vec::new(),
+            label: label.into(),
+        }
+    }
+
+    pub fn push(&mut self, w: InstructionWord) {
+        self.words.push(w);
+    }
+
+    pub fn extend(&mut self, other: &Program) {
+        self.words.extend_from_slice(&other.words);
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Total active stage operations (the SOPC cycle count).
+    pub fn total_ops(&self) -> usize {
+        self.words.iter().map(|w| w.active_stages()).sum()
+    }
+
+    /// Mean stage occupancy per word — the theoretical MOPC speedup over
+    /// SOPC (Fig. 9's 1.8–2.3× band for the resonator workload).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.words.is_empty() {
+            return 0.0;
+        }
+        self.total_ops() as f64 / self.words.len() as f64
+    }
+
+    /// Histogram of active-stage counts (0..=7) for occupancy analysis.
+    pub fn occupancy_histogram(&self) -> [usize; N_STAGES + 1] {
+        let mut h = [0usize; N_STAGES + 1];
+        for w in &self.words {
+            h[w.active_stages()] += 1;
+        }
+        h
+    }
+
+    /// Fraction of words touching the shared VOP (serializing work).
+    pub fn vop_fraction(&self) -> f64 {
+        if self.words.is_empty() {
+            return 0.0;
+        }
+        self.words.iter().filter(|w| w.uses_vop()).count() as f64 / self.words.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::isa::{DcOp, MemOp, SgnOp};
+
+    fn search_word() -> InstructionWord {
+        InstructionWord {
+            mem: MemOp::LoadSram,
+            sgn: SgnOp::Popcnt,
+            dc: DcOp::DsumAcc,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn occupancy_accounting() {
+        let mut p = Program::new("t");
+        p.push(search_word());
+        p.push(InstructionWord {
+            mem: MemOp::LoadSram,
+            ..Default::default()
+        });
+        assert_eq!(p.total_ops(), 4);
+        assert!((p.mean_occupancy() - 2.0).abs() < 1e-12);
+        let h = p.occupancy_histogram();
+        assert_eq!(h[3], 1);
+        assert_eq!(h[1], 1);
+    }
+
+    #[test]
+    fn extend_concatenates() {
+        let mut a = Program::new("a");
+        a.push(search_word());
+        let mut b = Program::new("b");
+        b.push(search_word());
+        b.extend(&a);
+        assert_eq!(b.len(), 2);
+    }
+}

@@ -1,0 +1,257 @@
+//! Architectural state: per-tile MCG + DC state and the shared VOP
+//! datapath (Fig. 7), plus the functional semantics of each stage
+//! operation.
+
+use super::config::AccelConfig;
+use crate::vsa::ca90;
+
+/// Per-tile state: MCG (SRAM, CA-90 RF, QRY) and DC (DSUM RF, ARGMAX).
+#[derive(Debug, Clone)]
+pub struct Tile {
+    /// Local SRAM as fold slots (each `fold_words` u64s).
+    pub sram: Vec<u64>,
+    /// CA-90 register file: `R` fold-sized entries.
+    pub ca90_rf: Vec<Vec<u64>>,
+    /// Query register (one fold).
+    pub qry: Vec<u64>,
+    /// DSUM RF: `D` distance accumulators.
+    pub dsum_rf: Vec<i64>,
+    /// Last-latched distance (feeds resonator weighting).
+    pub dsum_latch: i64,
+    /// ARGMAX running best (score, item id).
+    pub best: (i64, u32),
+    /// Per-tile binary datapath latch (one fold).
+    pub datapath: Vec<u64>,
+    fold_words: usize,
+    sram_folds: usize,
+}
+
+impl Tile {
+    pub fn new(cfg: &AccelConfig) -> Self {
+        let fw = cfg.fold_words();
+        Tile {
+            sram: vec![0u64; cfg.sram_folds_per_tile() * fw],
+            ca90_rf: vec![vec![0u64; fw]; cfg.ca90_rf],
+            qry: vec![0u64; fw],
+            dsum_rf: vec![0i64; cfg.dsum_rf],
+            dsum_latch: 0,
+            best: (i64::MIN, u32::MAX),
+            datapath: vec![0u64; fw],
+            fold_words: fw,
+            sram_folds: cfg.sram_folds_per_tile(),
+        }
+    }
+
+    /// Fold capacity of this tile's SRAM.
+    pub fn sram_folds(&self) -> usize {
+        self.sram_folds
+    }
+
+    /// Read fold slot `addr` from SRAM.
+    pub fn sram_fold(&self, addr: usize) -> &[u64] {
+        assert!(addr < self.sram_folds, "SRAM fold address {addr} out of range");
+        &self.sram[addr * self.fold_words..(addr + 1) * self.fold_words]
+    }
+
+    /// Write fold slot `addr`.
+    pub fn write_sram_fold(&mut self, addr: usize, fold: &[u64]) {
+        assert!(addr < self.sram_folds, "SRAM fold address {addr} out of range");
+        assert_eq!(fold.len(), self.fold_words);
+        self.sram[addr * self.fold_words..(addr + 1) * self.fold_words]
+            .copy_from_slice(fold);
+    }
+
+    /// One CA-90 generation on RF entry `rf`, result written back and
+    /// placed on the datapath.
+    pub fn ca90_generate(&mut self, rf: usize, bus_bits: usize) {
+        let next = ca90::ca90_step(&self.ca90_rf[rf], bus_bits);
+        self.ca90_rf[rf] = next.clone();
+        self.datapath = next;
+    }
+
+    /// Reset DC search state.
+    pub fn reset_search(&mut self) {
+        self.best = (i64::MIN, u32::MAX);
+        for d in &mut self.dsum_rf {
+            *d = 0;
+        }
+    }
+}
+
+/// Shared VOP subsystem state (Fig. 7): one instance per accelerator.
+#[derive(Debug, Clone)]
+pub struct VopState {
+    /// Bind buffer (binary fold latch feeding the XOR array).
+    pub bind_buf: Vec<u64>,
+    /// Integer datapath lanes (bus_width lanes).
+    pub int_lanes: Vec<i32>,
+    /// BND RF: `B` integer accumulators, each bus_width lanes.
+    pub bnd_rf: Vec<Vec<i64>>,
+    /// SGN result register (binary fold).
+    pub result: Vec<u64>,
+    bus_width: usize,
+}
+
+impl VopState {
+    pub fn new(cfg: &AccelConfig) -> Self {
+        let fw = cfg.fold_words();
+        VopState {
+            bind_buf: vec![0u64; fw],
+            int_lanes: vec![0i32; cfg.bus_width],
+            bnd_rf: vec![vec![0i64; cfg.bus_width]; cfg.bnd_rf],
+            result: vec![0u64; fw],
+            bus_width: cfg.bus_width,
+        }
+    }
+
+    /// Binary fold → bipolar integer lanes (bit 1 → +1, bit 0 → -1): the
+    /// MULT unit's format conversion.
+    pub fn b2i(&mut self, fold: &[u64]) {
+        for lane in 0..self.bus_width {
+            let bit = (fold[lane / 64] >> (lane % 64)) & 1;
+            self.int_lanes[lane] = if bit == 1 { 1 } else { -1 };
+        }
+    }
+
+    /// Scale integer lanes by `w`.
+    pub fn scale(&mut self, w: i64) {
+        for lane in &mut self.int_lanes {
+            *lane = (*lane as i64 * w).clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+        }
+    }
+
+    /// Accumulate lanes into BND RF entry `rf2` (optionally resetting).
+    pub fn accum(&mut self, rf2: usize, reset: bool) {
+        let acc = &mut self.bnd_rf[rf2];
+        if reset {
+            for a in acc.iter_mut() {
+                *a = 0;
+            }
+        }
+        for (a, l) in acc.iter_mut().zip(&self.int_lanes) {
+            *a += *l as i64;
+        }
+    }
+
+    /// Fused MULT→BND path: convert, scale and accumulate in a single
+    /// pass over the lanes (the pipeline's per-word hot loop; see
+    /// EXPERIMENTS.md §Perf). Architecturally identical to
+    /// `b2i`+`scale`+`accum` — `int_lanes` is still updated.
+    pub fn fused_scale_accum(&mut self, fold: &[u64], w: i64, rf2: usize, reset: bool) {
+        let acc = &mut self.bnd_rf[rf2];
+        if reset {
+            acc.iter_mut().for_each(|a| *a = 0);
+        }
+        debug_assert_eq!(self.bus_width % 64, 0);
+        let wi = w.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+        for (wi_idx, &word) in fold.iter().enumerate() {
+            let base = wi_idx * 64;
+            let lanes = &mut self.int_lanes[base..base + 64];
+            let accs = &mut acc[base..base + 64];
+            for b in 0..64 {
+                let v = if (word >> b) & 1 == 1 { wi } else { -wi };
+                lanes[b] = v;
+                accs[b] += v as i64;
+            }
+        }
+    }
+
+    /// Bipolarize BND RF entry `rf2` into the result register (≥0 → 1).
+    pub fn sign(&mut self, rf2: usize) {
+        let fw = self.result.len();
+        for w in &mut self.result {
+            *w = 0;
+        }
+        for lane in 0..self.bus_width {
+            if self.bnd_rf[rf2][lane] >= 0 {
+                self.result[lane / 64] |= 1u64 << (lane % 64);
+            }
+        }
+        let _ = fw;
+    }
+}
+
+/// POPCNT distance partial: bipolar dot of two folds = W - 2*hamming.
+pub fn popcnt_partial(a: &[u64], b: &[u64], bus_width: usize) -> i64 {
+    let ham: u32 = a.iter().zip(b).map(|(x, y)| (x ^ y).count_ones()).sum();
+    bus_width as i64 - 2 * ham as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cfg() -> AccelConfig {
+        AccelConfig::acc4()
+    }
+
+    #[test]
+    fn sram_roundtrip() {
+        let mut t = Tile::new(&cfg());
+        let fold: Vec<u64> = (0..8).map(|i| i as u64 * 7 + 1).collect();
+        t.write_sram_fold(37, &fold);
+        assert_eq!(t.sram_fold(37), &fold[..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn sram_bounds_checked() {
+        let t = Tile::new(&cfg());
+        t.sram_fold(100_000);
+    }
+
+    #[test]
+    fn ca90_generate_writes_back() {
+        let mut t = Tile::new(&cfg());
+        let mut rng = Rng::new(1);
+        t.ca90_rf[1] = (0..8).map(|_| rng.next_u64()).collect();
+        let before = t.ca90_rf[1].clone();
+        t.ca90_generate(1, 512);
+        assert_ne!(t.ca90_rf[1], before);
+        assert_eq!(t.datapath, t.ca90_rf[1]);
+        let expect = crate::vsa::ca90::ca90_step(&before, 512);
+        assert_eq!(t.ca90_rf[1], expect);
+    }
+
+    #[test]
+    fn b2i_maps_bits_to_bipolar() {
+        let mut v = VopState::new(&cfg());
+        let mut fold = vec![0u64; 8];
+        fold[0] = 0b101;
+        v.b2i(&fold);
+        assert_eq!(v.int_lanes[0], 1);
+        assert_eq!(v.int_lanes[1], -1);
+        assert_eq!(v.int_lanes[2], 1);
+        assert_eq!(v.int_lanes[3], -1);
+    }
+
+    #[test]
+    fn accum_and_sign_roundtrip() {
+        let mut v = VopState::new(&cfg());
+        let mut fold = vec![u64::MAX; 8];
+        fold[0] = !1u64; // lane 0 = 0 → -1
+        v.b2i(&fold);
+        v.accum(0, true);
+        v.accum(0, false); // lane 0 = -2, others +2
+        v.sign(0);
+        assert_eq!(v.result[0] & 1, 0, "negative lane bipolarizes to 0");
+        assert_eq!(v.result[0] >> 1, u64::MAX >> 1);
+    }
+
+    #[test]
+    fn popcnt_partial_is_bipolar_dot() {
+        let a = vec![u64::MAX; 8];
+        let b = vec![0u64; 8];
+        assert_eq!(popcnt_partial(&a, &a, 512), 512);
+        assert_eq!(popcnt_partial(&a, &b, 512), -512);
+    }
+
+    #[test]
+    fn scale_by_negative_weight() {
+        let mut v = VopState::new(&cfg());
+        v.b2i(&vec![u64::MAX; 8]);
+        v.scale(-3);
+        assert!(v.int_lanes.iter().all(|&l| l == -3));
+    }
+}

@@ -1,0 +1,96 @@
+//! Shared configuration: model dimensions (mirroring `python/compile/model.py`
+//! via `artifacts/manifest.json`) and repo paths.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Model dimensions shared between the AOT'd L2 graphs and the L3 engines.
+/// Defaults match `python/compile/model.py`; [`ModelDims::from_manifest`]
+/// overrides them from the artifact manifest when present.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    /// Hypervector dimensionality D.
+    pub hd_dim: usize,
+    /// Item vectors per codebook / factor.
+    pub codebook_n: usize,
+    /// Categories per panel attribute.
+    pub attr_k: usize,
+    /// Attributes per panel (type, size, color).
+    pub n_attrs: usize,
+    /// Panels per RPM instance fed to the frontend.
+    pub panels: usize,
+    /// Panel image side length.
+    pub img: usize,
+}
+
+impl Default for ModelDims {
+    fn default() -> Self {
+        ModelDims {
+            hd_dim: 1024,
+            codebook_n: 64,
+            attr_k: 8,
+            n_attrs: 3,
+            panels: 16,
+            img: 32,
+        }
+    }
+}
+
+impl ModelDims {
+    /// Read dimensions from a parsed manifest (missing keys keep defaults).
+    pub fn from_manifest(m: &Json) -> ModelDims {
+        let d = ModelDims::default();
+        ModelDims {
+            hd_dim: m.get("hd_dim").and_then(Json::as_usize).unwrap_or(d.hd_dim),
+            codebook_n: m
+                .get("codebook_n")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.codebook_n),
+            attr_k: m.get("attr_k").and_then(Json::as_usize).unwrap_or(d.attr_k),
+            n_attrs: m
+                .get("n_attrs")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.n_attrs),
+            panels: m.get("panels").and_then(Json::as_usize).unwrap_or(d.panels),
+            img: m.get("img").and_then(Json::as_usize).unwrap_or(d.img),
+        }
+    }
+}
+
+/// Locate the artifacts directory: `$NSCOG_ARTIFACTS`, else `./artifacts`
+/// relative to the working directory, else relative to the crate root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("NSCOG_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = Path::new("artifacts");
+    if cwd.exists() {
+        return cwd.to_path_buf();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_python() {
+        let d = ModelDims::default();
+        assert_eq!(d.hd_dim, 1024);
+        assert_eq!(d.codebook_n, 64);
+        assert_eq!(d.attr_k, 8);
+        assert_eq!(d.n_attrs, 3);
+        assert_eq!(d.panels, 16);
+        assert_eq!(d.img, 32);
+    }
+
+    #[test]
+    fn from_manifest_overrides() {
+        let j = Json::parse(r#"{"hd_dim": 2048, "attr_k": 4}"#).unwrap();
+        let d = ModelDims::from_manifest(&j);
+        assert_eq!(d.hd_dim, 2048);
+        assert_eq!(d.attr_k, 4);
+        assert_eq!(d.codebook_n, 64); // default kept
+    }
+}

@@ -1,0 +1,180 @@
+//! Execution graphs over workload phases + critical-path analysis
+//! (the paper's Fig. 4 operator-graph / dataflow study).
+
+use crate::profiler::taxonomy::PhaseKind;
+use crate::profiler::trace::Trace;
+use crate::platform::Platform;
+
+/// A phase node in the coordinator's execution graph.
+#[derive(Debug, Clone)]
+pub struct PhaseNode {
+    pub name: String,
+    pub kind: PhaseKind,
+    /// Modelled (or measured) duration in seconds.
+    pub duration: f64,
+    /// Indices of prerequisite phases.
+    pub deps: Vec<usize>,
+}
+
+/// A DAG of phases.
+#[derive(Debug, Clone, Default)]
+pub struct ExecGraph {
+    pub nodes: Vec<PhaseNode>,
+}
+
+/// Critical-path analysis result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CriticalPath {
+    /// Node indices on the path, in execution order.
+    pub path: Vec<usize>,
+    /// Path duration (= minimum makespan with unlimited parallelism).
+    pub length: f64,
+    /// Total work (sum of all durations).
+    pub work: f64,
+    /// Seconds of symbolic work on the path.
+    pub symbolic_on_path: f64,
+}
+
+impl ExecGraph {
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        kind: PhaseKind,
+        duration: f64,
+        deps: &[usize],
+    ) -> usize {
+        for &d in deps {
+            assert!(d < self.nodes.len(), "forward dependency");
+        }
+        self.nodes.push(PhaseNode {
+            name: name.into(),
+            kind,
+            duration,
+            deps: deps.to_vec(),
+        });
+        self.nodes.len() - 1
+    }
+
+    /// Build a phase graph from an operator trace on a platform: each op
+    /// becomes a node with its modelled time.
+    pub fn from_trace(trace: &Trace, platform: &Platform) -> ExecGraph {
+        let mut g = ExecGraph::default();
+        for op in &trace.ops {
+            g.nodes.push(PhaseNode {
+                name: op.name.clone(),
+                kind: op.phase,
+                duration: platform.op_time(op),
+                deps: op.deps.clone(),
+            });
+        }
+        g
+    }
+
+    /// Longest path through the DAG (nodes are in topological order).
+    pub fn critical_path(&self) -> CriticalPath {
+        let n = self.nodes.len();
+        let mut dist = vec![0.0f64; n];
+        let mut pred: Vec<Option<usize>> = vec![None; n];
+        for i in 0..n {
+            let base = self.nodes[i]
+                .deps
+                .iter()
+                .map(|&d| (dist[d], Some(d)))
+                .fold((0.0, None), |acc, x| if x.0 > acc.0 { x } else { acc });
+            dist[i] = base.0 + self.nodes[i].duration;
+            pred[i] = base.1;
+        }
+        let end = (0..n)
+            .max_by(|&a, &b| dist[a].partial_cmp(&dist[b]).unwrap())
+            .unwrap_or(0);
+        let mut path = Vec::new();
+        let mut cur = Some(end);
+        while let Some(i) = cur {
+            path.push(i);
+            cur = pred[i];
+        }
+        path.reverse();
+        let symbolic_on_path = path
+            .iter()
+            .filter(|&&i| self.nodes[i].kind == PhaseKind::Symbolic)
+            .map(|&i| self.nodes[i].duration)
+            .sum();
+        CriticalPath {
+            length: dist[end],
+            work: self.nodes.iter().map(|p| p.duration).sum(),
+            symbolic_on_path,
+            path,
+        }
+    }
+
+    /// Parallelism profile: work / critical-path length (≥ 1.0).
+    pub fn parallelism(&self) -> f64 {
+        let cp = self.critical_path();
+        if cp.length > 0.0 {
+            cp.work / cp.length
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_critical_path_is_total() {
+        let mut g = ExecGraph::default();
+        let a = g.add("n1", PhaseKind::Neural, 1.0, &[]);
+        let b = g.add("s1", PhaseKind::Symbolic, 2.0, &[a]);
+        g.add("s2", PhaseKind::Symbolic, 3.0, &[b]);
+        let cp = g.critical_path();
+        assert_eq!(cp.path, vec![0, 1, 2]);
+        assert!((cp.length - 6.0).abs() < 1e-12);
+        assert!((cp.symbolic_on_path - 5.0).abs() < 1e-12);
+        assert!((g.parallelism() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diamond_takes_longer_branch() {
+        let mut g = ExecGraph::default();
+        let a = g.add("src", PhaseKind::Neural, 1.0, &[]);
+        let b = g.add("fast", PhaseKind::Neural, 1.0, &[a]);
+        let c = g.add("slow", PhaseKind::Symbolic, 5.0, &[a]);
+        g.add("sink", PhaseKind::Symbolic, 1.0, &[b, c]);
+        let cp = g.critical_path();
+        assert_eq!(cp.path, vec![0, 2, 3]);
+        assert!((cp.length - 7.0).abs() < 1e-12);
+        assert!(g.parallelism() > 1.0);
+    }
+
+    #[test]
+    fn from_trace_mirrors_dependencies() {
+        use crate::profiler::taxonomy::OpCategory;
+        let mut tr = Trace::new("x");
+        let a = tr.add("conv", OpCategory::Conv, PhaseKind::Neural, 1 << 24, 1 << 20, 1 << 20, &[]);
+        tr.add("bind", OpCategory::VectorElem, PhaseKind::Symbolic, 1 << 10, 1 << 16, 1 << 16, &[a]);
+        let g = ExecGraph::from_trace(&tr, &Platform::rtx2080ti());
+        assert_eq!(g.nodes.len(), 2);
+        assert_eq!(g.nodes[1].deps, vec![0]);
+        let cp = g.critical_path();
+        assert_eq!(cp.path.len(), 2);
+    }
+
+    /// Fig. 4's headline: for the frontend-dependent workloads the
+    /// symbolic phase sits on the critical path.
+    #[test]
+    fn nvsa_symbolic_dominates_critical_path() {
+        let w = crate::workloads::nvsa::Nvsa::default();
+        let g = ExecGraph::from_trace(
+            &crate::workloads::Workload::trace(&w),
+            &Platform::rtx2080ti(),
+        );
+        let cp = g.critical_path();
+        assert!(
+            cp.symbolic_on_path / cp.length > 0.5,
+            "symbolic share of critical path: {}",
+            cp.symbolic_on_path / cp.length
+        );
+    }
+}

@@ -1,0 +1,109 @@
+//! Phase-level wall-clock metrics collected by the scheduler.
+
+use crate::profiler::taxonomy::PhaseKind;
+use std::time::Instant;
+
+/// One executed phase's measurement.
+#[derive(Debug, Clone)]
+pub struct PhaseRecord {
+    pub name: String,
+    pub kind: PhaseKind,
+    pub wall_s: f64,
+}
+
+/// Aggregated phase metrics for an end-to-end run.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseMetrics {
+    pub records: Vec<PhaseRecord>,
+}
+
+impl PhaseMetrics {
+    pub fn record(&mut self, name: impl Into<String>, kind: PhaseKind, wall_s: f64) {
+        self.records.push(PhaseRecord {
+            name: name.into(),
+            kind,
+            wall_s,
+        });
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(
+        &mut self,
+        name: impl Into<String>,
+        kind: PhaseKind,
+        f: impl FnOnce() -> T,
+    ) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(name, kind, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn total(&self) -> f64 {
+        self.records.iter().map(|r| r.wall_s).sum()
+    }
+
+    pub fn phase_total(&self, kind: PhaseKind) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| r.kind == kind)
+            .map(|r| r.wall_s)
+            .sum()
+    }
+
+    /// Measured symbolic runtime share (the e2e analogue of Fig. 2a).
+    pub fn symbolic_fraction(&self) -> f64 {
+        let t = self.total();
+        if t > 0.0 {
+            self.phase_total(PhaseKind::Symbolic) / t
+        } else {
+            0.0
+        }
+    }
+
+    /// Pretty per-phase report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for r in &self.records {
+            s.push_str(&format!(
+                "  {:<28} {:>9} [{}]\n",
+                r.name,
+                crate::util::stats::fmt_time(r.wall_s),
+                r.kind.label()
+            ));
+        }
+        s.push_str(&format!(
+            "  total {} — neural {:.1}%, symbolic {:.1}%\n",
+            crate::util::stats::fmt_time(self.total()),
+            (1.0 - self.symbolic_fraction()) * 100.0,
+            self.symbolic_fraction() * 100.0
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let mut m = PhaseMetrics::default();
+        m.record("frontend", PhaseKind::Neural, 0.2);
+        m.record("reason", PhaseKind::Symbolic, 0.8);
+        assert!((m.total() - 1.0).abs() < 1e-12);
+        assert!((m.symbolic_fraction() - 0.8).abs() < 1e-12);
+        assert!(m.report().contains("frontend"));
+    }
+
+    #[test]
+    fn time_measures_closures() {
+        let mut m = PhaseMetrics::default();
+        let v = m.time("work", PhaseKind::Symbolic, || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(m.records[0].wall_s >= 0.004);
+    }
+}

@@ -1,0 +1,14 @@
+//! Neural/symbolic phase coordinator: execution-graph scheduling,
+//! critical-path analysis (Fig. 4), and end-to-end pipeline metrics.
+//!
+//! Rust owns the event loop: neural phases execute as PJRT artifacts,
+//! symbolic phases as native engines; independent phases run on worker
+//! threads (Recommendation 5's parallel neural/symbolic scheduling).
+
+pub mod graph;
+pub mod metrics;
+pub mod scheduler;
+
+pub use graph::{CriticalPath, ExecGraph, PhaseNode};
+pub use metrics::PhaseMetrics;
+pub use scheduler::Scheduler;

@@ -1,0 +1,423 @@
+//! Figure/table regeneration: one function per paper artifact, each
+//! returning an aligned text table (consumed by `cargo bench` targets,
+//! the `nscog figures` CLI, and EXPERIMENTS.md).
+
+use crate::accel::isa::ControlMethod;
+use crate::accel::AccelConfig;
+use crate::coordinator::ExecGraph;
+use crate::platform::{counters, Platform};
+use crate::profiler::roofline;
+use crate::profiler::taxonomy::{OpCategory, PhaseKind};
+use crate::util::bench::Table;
+use crate::util::stats::{fmt_energy, fmt_time};
+use crate::workloads::suite::{gpu_trace, CompiledSuite, SuiteKind};
+use crate::workloads::{all_workloads, nvsa::Nvsa, nvsa::NvsaEngine, raven, Workload};
+
+/// Fig. 2a: neural vs symbolic runtime share per workload (RTX model).
+pub fn fig2a() -> Table {
+    let gpu = Platform::rtx2080ti();
+    let mut t = Table::new(&["workload", "total", "neural %", "symbolic %"]);
+    for w in all_workloads() {
+        let tb = gpu.trace_time(&w.trace(), None);
+        t.row(&[
+            w.name().into(),
+            fmt_time(tb.total),
+            format!("{:.1}", (1.0 - tb.symbolic_fraction()) * 100.0),
+            format!("{:.1}", tb.symbolic_fraction() * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 2b: NVSA + NLM end-to-end latency across platforms.
+pub fn fig2b() -> Table {
+    let mut t = Table::new(&["workload", "platform", "total", "vs RTX"]);
+    let rtx = Platform::rtx2080ti();
+    for w in all_workloads() {
+        if w.name() != "NVSA" && w.name() != "NLM" {
+            continue;
+        }
+        let tr = w.trace();
+        let base = rtx.trace_time(&tr, None).total;
+        for p in Platform::edge_sweep() {
+            let tb = p.trace_time(&tr, None);
+            t.row(&[
+                w.name().into(),
+                p.name.into(),
+                fmt_time(tb.total),
+                format!("{:.1}x", tb.total / base),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 2c: NVSA latency vs RPM task size (2×2 … 3×3).
+pub fn fig2c() -> Table {
+    let gpu = Platform::rtx2080ti();
+    let mut t = Table::new(&["task size", "total", "symbolic %", "vs 2x2"]);
+    let mut base = None;
+    for grid in [2usize, 3] {
+        let w = Nvsa {
+            grid,
+            ..Default::default()
+        };
+        let tb = gpu.trace_time(&Workload::trace(&w), None);
+        let b = *base.get_or_insert(tb.total);
+        t.row(&[
+            format!("{grid}x{grid}"),
+            fmt_time(tb.total),
+            format!("{:.1}", tb.symbolic_fraction() * 100.0),
+            format!("{:.2}x", tb.total / b),
+        ]);
+    }
+    t
+}
+
+/// Fig. 3a: operator-category runtime breakdown per workload & phase.
+pub fn fig3a() -> Table {
+    let gpu = Platform::rtx2080ti();
+    let mut headers = vec!["workload".to_string(), "phase".to_string()];
+    headers.extend(OpCategory::ALL.iter().map(|c| c.label().to_string()));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs);
+    for w in all_workloads() {
+        let tr = w.trace();
+        for phase in [PhaseKind::Neural, PhaseKind::Symbolic] {
+            let tb = gpu.trace_time(&tr, Some(phase));
+            let mut row = vec![w.name().to_string(), phase.label().to_string()];
+            for f in tb.category_fractions() {
+                row.push(format!("{:.1}%", f * 100.0));
+            }
+            t.row(&row);
+        }
+    }
+    t
+}
+
+/// Fig. 3b: memory usage per workload.
+pub fn fig3b() -> Table {
+    let mut t = Table::new(&[
+        "workload",
+        "weights",
+        "codebooks",
+        "neural work",
+        "symbolic work",
+        "static %",
+    ]);
+    for w in all_workloads() {
+        let m = w.memory();
+        let kb = |b: u64| format!("{:.1} KiB", b as f64 / 1024.0);
+        t.row(&[
+            w.name().into(),
+            kb(m.weights_bytes),
+            kb(m.codebook_bytes),
+            kb(m.neural_working_bytes),
+            kb(m.symbolic_working_bytes),
+            format!("{:.1}", m.static_fraction() * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 3c: roofline placement of each workload's phases.
+pub fn fig3c() -> Table {
+    let gpu = Platform::rtx2080ti();
+    let mut t = Table::new(&[
+        "workload",
+        "phase",
+        "intensity (FLOP/B)",
+        "attained GFLOP/s",
+        "bound",
+    ]);
+    for w in all_workloads() {
+        let tr = w.trace();
+        for phase in [PhaseKind::Neural, PhaseKind::Symbolic] {
+            let pt = roofline::place(&tr, phase, &gpu);
+            t.row(&[
+                w.name().into(),
+                phase.label().into(),
+                format!("{:.3}", pt.intensity),
+                format!("{:.1}", pt.attained_flops / 1e9),
+                if pt.memory_bound { "memory" } else { "compute" }.into(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 4: operator-graph / critical-path analysis.
+pub fn fig4() -> Table {
+    let gpu = Platform::rtx2080ti();
+    let mut t = Table::new(&[
+        "workload",
+        "symbolic after neural",
+        "critical path",
+        "symbolic on path %",
+        "parallelism",
+    ]);
+    for w in all_workloads() {
+        let g = ExecGraph::from_trace(&w.trace(), &gpu);
+        let cp = g.critical_path();
+        t.row(&[
+            w.name().into(),
+            if w.symbolic_depends_on_neural() {
+                "yes (critical path)"
+            } else {
+                "compiled-in"
+            }
+            .into(),
+            fmt_time(cp.length),
+            format!("{:.1}", cp.symbolic_on_path / cp.length * 100.0),
+            format!("{:.1}x", g.parallelism()),
+        ]);
+    }
+    t
+}
+
+/// Tab. IV: simulated kernel counters for representative NVSA kernels.
+pub fn tab4() -> Table {
+    let gpu = Platform::rtx2080ti();
+    let mut tr = crate::profiler::trace::Trace::new("kernels");
+    let n = 2048u64;
+    let gemm = tr.add("sgemm_nn", OpCategory::MatMul, PhaseKind::Neural, 2 * n * n * n, 12 * n * n, 4 * n * n, &[]);
+    let relu = tr.add("relu_nn", OpCategory::Conv, PhaseKind::Neural, 16 * n * n, 8 * n * n, 4 * n * n, &[]);
+    let velem = tr.add("vectorized_elem", OpCategory::VectorElem, PhaseKind::Symbolic, (64u64 << 20) / 4, 64 << 20, 64 << 20, &[]);
+    let elem = tr.add("elementwise", OpCategory::VectorElem, PhaseKind::Symbolic, (16u64 << 20) / 4, 16 << 20, 16 << 20, &[]);
+    let mut t = Table::new(&[
+        "kernel",
+        "compute %",
+        "ALU %",
+        "L1 tp %",
+        "L2 tp %",
+        "L1 hit %",
+        "L2 hit %",
+        "DRAM BW %",
+    ]);
+    for (idx, variant) in [(gemm, false), (relu, false), (velem, false), (elem, true)] {
+        let c = counters::simulate(&gpu, &tr.ops[idx], variant);
+        t.row(&[
+            c.kernel.clone(),
+            format!("{:.1}", c.compute_throughput_pct),
+            format!("{:.1}", c.alu_utilization_pct),
+            format!("{:.1}", c.l1_throughput_pct),
+            format!("{:.1}", c.l2_throughput_pct),
+            format!("{:.1}", c.l1_hit_rate_pct),
+            format!("{:.1}", c.l2_hit_rate_pct),
+            format!("{:.1}", c.dram_bw_utilization_pct),
+        ]);
+    }
+    t
+}
+
+/// Fig. 5: measured sparsity of NVSA symbolic modules per attribute.
+pub fn fig5() -> Table {
+    let engine = NvsaEngine::new(Nvsa::default(), 2024);
+    let mut rng = crate::util::Rng::new(55);
+    let inst = raven::generate(&mut rng, 3, 8);
+    let pmfs = raven::panel_pmfs(&inst, 0.95);
+    let sol = engine.solve(&inst, &pmfs);
+    let mut t = Table::new(&["module", "attribute", "sparsity %"]);
+    for p in &sol.sparsity {
+        t.row(&[
+            p.module.clone(),
+            p.attribute.clone(),
+            format!("{:.1}", p.sparsity * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 9: SOPC vs MOPC runtime & power for the resonator workload at
+/// increasing factor counts.
+pub fn fig9() -> Table {
+    let mut t = Table::new(&[
+        "factors",
+        "SOPC time",
+        "MOPC time",
+        "speedup",
+        "SOPC power",
+        "MOPC power",
+        "power +%",
+    ]);
+    for factors in [2usize, 3, 4, 5] {
+        let (rs, rm) = fig9_point(factors);
+        t.row(&[
+            format!("{factors}"),
+            fmt_time(rs.time_s),
+            fmt_time(rm.time_s),
+            format!("{:.2}x", rs.time_s / rm.time_s),
+            format!("{:.2} mW", rs.avg_power_w() * 1e3),
+            format!("{:.2} mW", rm.avg_power_w() * 1e3),
+            format!(
+                "+{:.0}%",
+                (rm.avg_power_w() / rs.avg_power_w() - 1.0) * 100.0
+            ),
+        ]);
+    }
+    t
+}
+
+/// One Fig. 9 measurement: resonator with `factors` factors under both
+/// control methods on Acc4.
+pub fn fig9_point(
+    factors: usize,
+) -> (crate::accel::SimReport, crate::accel::SimReport) {
+    use crate::accel::compiler::{KernelCompiler, Operand, VecRef};
+    use crate::accel::pipeline::Accelerator;
+    use crate::vsa::BinaryCodebook;
+
+    let cfg = AccelConfig::acc4();
+    let n = 8usize; // items per factor
+    let dim = 4096usize;
+    let mut rng = crate::util::Rng::new(factors as u64);
+    let cb = BinaryCodebook::random(&mut rng, n * factors, dim);
+    let build = || {
+        let mut acc = Accelerator::new(cfg.clone());
+        let layout = acc.load_items(cb.items(), factors + 3);
+        (acc, KernelCompiler::new(cfg.clone(), layout))
+    };
+    let run = |control: ControlMethod| {
+        let (mut acc, kc) = build();
+        let truth: Vec<usize> = (0..factors).map(|f| f * n + f % n).collect();
+        let scene_ops: Vec<Operand> = truth
+            .iter()
+            .map(|&g| Operand::plain(VecRef::Item(g)))
+            .collect();
+        let mut report = acc.run(&kc.bind(&scene_ops, 0), control);
+        for _it in 0..3 {
+            for f in 0..factors {
+                let mut ops = vec![Operand::plain(VecRef::Scratch(0))];
+                for of in 0..factors {
+                    if of != f {
+                        ops.push(Operand::plain(VecRef::Scratch(1 + of)));
+                    }
+                }
+                report.merge(&acc.run(&kc.bind(&ops, factors + 1), control));
+                let items: Vec<usize> = (f * n..(f + 1) * n).collect();
+                report.merge(&acc.run(&kc.project(factors + 1, &items, 1 + f), control));
+            }
+        }
+        report
+    };
+    (run(ControlMethod::Sopc), run(ControlMethod::Mopc))
+}
+
+/// Fig. 11a: Acc2/4/8 latency + energy across the four suite workloads.
+pub fn fig11a() -> Table {
+    let mut t = Table::new(&["workload", "config", "time", "energy", "vs Acc2"]);
+    for kind in SuiteKind::ALL {
+        let mut base = None;
+        for cfg in AccelConfig::paper_instances() {
+            let name = cfg.name.clone();
+            let mut s = CompiledSuite::build(kind, cfg, 17);
+            let r = s.run(ControlMethod::Mopc);
+            let b = *base.get_or_insert(r.time_s);
+            t.row(&[
+                kind.label().into(),
+                name,
+                fmt_time(r.time_s),
+                fmt_energy(r.energy_j()),
+                format!("{:.2}x", b / r.time_s),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 11b: Acc4 vs V100 GPU latency + energy per suite workload.
+pub fn fig11b() -> Table {
+    let gpu = Platform::v100();
+    let mut t = Table::new(&[
+        "workload",
+        "Acc4 time",
+        "GPU time",
+        "speedup",
+        "Acc4 energy",
+        "GPU energy",
+        "energy gain",
+    ]);
+    for kind in SuiteKind::ALL {
+        let mut s = CompiledSuite::build(kind, AccelConfig::acc4(), 17);
+        let r = s.run(ControlMethod::Mopc);
+        let tb = gpu.trace_time(&gpu_trace(kind), None);
+        t.row(&[
+            kind.label().into(),
+            fmt_time(r.time_s),
+            fmt_time(tb.total),
+            format!("{:.0}x", tb.total / r.time_s),
+            fmt_energy(r.energy_j()),
+            fmt_energy(tb.energy_j),
+            format!("{:.0e}x", tb.energy_j / r.energy_j()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_figures_render() {
+        for (name, table) in [
+            ("fig2a", fig2a()),
+            ("fig2b", fig2b()),
+            ("fig2c", fig2c()),
+            ("fig3a", fig3a()),
+            ("fig3b", fig3b()),
+            ("fig3c", fig3c()),
+            ("fig4", fig4()),
+            ("tab4", tab4()),
+            ("fig5", fig5()),
+            ("fig11b", fig11b()),
+        ] {
+            let s = table.to_string();
+            assert!(s.lines().count() > 2, "{name} table empty:\n{s}");
+        }
+    }
+
+    #[test]
+    fn fig2c_shows_superlinear_scaling() {
+        let gpu = Platform::rtx2080ti();
+        let t2 = gpu
+            .trace_time(&Workload::trace(&Nvsa { grid: 2, ..Default::default() }), None);
+        let t3 = gpu
+            .trace_time(&Workload::trace(&Nvsa { grid: 3, ..Default::default() }), None);
+        // paper: 5.02x runtime growth 2x2 → 3x3 with stable symbolic
+        // share; at our representative sizes the superlinear shape holds
+        // (panels x row/column rule contexts both grow)
+        // (the paper's full 5.02x also reflects 3x3 RAVEN panels holding
+        // more objects each; our panels keep a fixed attribute set)
+        let growth = t3.total / t2.total;
+        assert!(growth > 1.5, "growth {growth}");
+        assert!((t3.symbolic_fraction() - t2.symbolic_fraction()).abs() < 0.10);
+    }
+
+    #[test]
+    fn fig11b_orders_of_magnitude() {
+        let gpu = Platform::v100();
+        let mut worst_speedup = f64::INFINITY;
+        let mut worst_energy = f64::INFINITY;
+        for kind in SuiteKind::ALL {
+            let mut s = CompiledSuite::build(kind, AccelConfig::acc4(), 17);
+            let r = s.run(ControlMethod::Mopc);
+            let tb = gpu.trace_time(&gpu_trace(kind), None);
+            worst_speedup = worst_speedup.min(tb.total / r.time_s);
+            worst_energy = worst_energy.min(tb.energy_j / r.energy_j());
+        }
+        // paper: up to 3 orders latency, up to 6 orders energy; even the
+        // weakest workload should clear 1 and 3 orders respectively.
+        assert!(worst_speedup > 10.0, "speedup {worst_speedup}");
+        assert!(worst_energy > 1e3, "energy gain {worst_energy}");
+    }
+
+    #[test]
+    fn fig9_mopc_band() {
+        let (rs, rm) = fig9_point(3);
+        let speedup = rs.time_s / rm.time_s;
+        let power = rm.avg_power_w() / rs.avg_power_w();
+        assert!((1.4..3.2).contains(&speedup), "speedup {speedup}");
+        assert!((1.0..2.2).contains(&power), "power ratio {power}");
+    }
+}

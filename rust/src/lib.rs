@@ -1,0 +1,32 @@
+//! # nscog — Neuro-Symbolic AI Workload Characterization & VSA Acceleration
+//!
+//! Reproduction of *"Towards Efficient Neuro-Symbolic AI: From Workload
+//! Characterization to Hardware Architecture"* (Wan et al., 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L1/L2 (build time)**: `python/compile/` authors the Pallas VSA
+//!   kernels and the seven workloads' neural compute graphs, AOT-lowered
+//!   to HLO text in `artifacts/`.
+//! - **L3 (this crate)**: the systems contribution — VSA substrate
+//!   ([`vsa`]), cycle-level multi-tile VSA accelerator simulator
+//!   ([`accel`]), the seven neuro-symbolic workload models ([`workloads`]),
+//!   the characterization profiler ([`profiler`]), analytical platform cost
+//!   models ([`platform`]), the PJRT runtime bridge ([`runtime`]), and the
+//!   neural/symbolic phase coordinator ([`coordinator`]).
+//!
+//! Python never runs on the request path: artifacts are compiled once by
+//! `make artifacts` and executed from Rust via the PJRT C API.
+//!
+//! See `DESIGN.md` for the experiment index mapping every paper figure and
+//! table to a module and a bench target.
+
+pub mod accel;
+pub mod config;
+pub mod figures;
+pub mod coordinator;
+pub mod platform;
+pub mod profiler;
+pub mod runtime;
+pub mod util;
+pub mod vsa;
+pub mod workloads;

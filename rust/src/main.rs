@@ -1,0 +1,196 @@
+//! `nscog` — CLI for the neuro-symbolic workload characterization & VSA
+//! accelerator reproduction (Wan et al., 2024).
+//!
+//! Subcommands:
+//!   figures                regenerate every paper table/figure
+//!   characterize [NAME]    per-workload characterization report
+//!   accel [CFG] [WORKLOAD] run a suite workload on the simulator
+//!   solve [--grid G]       solve synthetic RPM instances with NVSA+PrAE
+//!   runtime-info           check PJRT artifacts
+//!   info                   print system inventory
+
+use nscog::accel::isa::ControlMethod;
+use nscog::accel::AccelConfig;
+use nscog::platform::Platform;
+use nscog::profiler::report::WorkloadReport;
+use nscog::util::stats::fmt_time;
+use nscog::workloads::suite::{CompiledSuite, SuiteKind};
+use nscog::workloads::{all_workloads, raven};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("info");
+    match cmd {
+        "figures" => figures(),
+        "characterize" => characterize(args.get(1).map(String::as_str)),
+        "accel" => accel(
+            args.get(1).map(String::as_str).unwrap_or("acc4"),
+            args.get(2).map(String::as_str).unwrap_or("fact"),
+        ),
+        "solve" => solve(
+            args.iter()
+                .position(|a| a == "--grid")
+                .and_then(|i| args.get(i + 1))
+                .and_then(|g| g.parse().ok())
+                .unwrap_or(3),
+        ),
+        "runtime-info" => runtime_info(),
+        "info" | "--help" | "-h" => info(),
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            info();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info() {
+    println!("nscog — neuro-symbolic workload characterization & VSA accelerator");
+    println!("reproduction of Wan et al., 'Towards Efficient Neuro-Symbolic AI' (2024)\n");
+    println!("subcommands:");
+    println!("  figures               regenerate every paper table/figure");
+    println!("  characterize [NAME]   characterization report (LNN/LTN/NVSA/NLM/VSAIT/ZeroC/PrAE)");
+    println!("  accel [acc2|acc4|acc8] [mult|tree|fact|react]");
+    println!("  solve [--grid 2|3]    solve synthetic RPM with NVSA + PrAE engines");
+    println!("  runtime-info          check PJRT artifacts (artifacts/manifest.json)");
+}
+
+fn figures() {
+    use nscog::figures as f;
+    let figs: Vec<(&str, nscog::util::bench::Table)> = vec![
+        ("Fig. 2a — neural vs symbolic runtime", f::fig2a()),
+        ("Fig. 2b — edge platform latency (NVSA, NLM)", f::fig2b()),
+        ("Fig. 2c — NVSA task-size scaling", f::fig2c()),
+        ("Fig. 3a — operator category breakdown", f::fig3a()),
+        ("Fig. 3b — memory usage", f::fig3b()),
+        ("Fig. 3c — roofline placement", f::fig3c()),
+        ("Fig. 4 — operator graph / critical path", f::fig4()),
+        ("Tab. IV — kernel hardware counters", f::tab4()),
+        ("Fig. 5 — NVSA symbolic sparsity", f::fig5()),
+        ("Fig. 9 — SOPC vs MOPC", f::fig9()),
+        ("Fig. 11a — accelerator scaling", f::fig11a()),
+        ("Fig. 11b — accelerator vs GPU", f::fig11b()),
+    ];
+    for (title, table) in figs {
+        println!("== {title} ==");
+        table.print();
+        println!();
+    }
+}
+
+fn characterize(name: Option<&str>) {
+    let gpu = Platform::rtx2080ti();
+    for w in all_workloads() {
+        if let Some(n) = name {
+            if !w.name().eq_ignore_ascii_case(n) {
+                continue;
+            }
+        }
+        let report = WorkloadReport::build(&w.trace(), w.memory(), vec![], &gpu);
+        println!("{}", report.summary_line());
+        for pt in &report.roofline {
+            println!(
+                "    {} phase: intensity {:.3} FLOP/B → {}",
+                pt.phase.label(),
+                pt.intensity,
+                if pt.memory_bound {
+                    "memory-bound"
+                } else {
+                    "compute-bound"
+                }
+            );
+        }
+    }
+}
+
+fn accel(cfg_name: &str, workload: &str) {
+    let cfg = match cfg_name {
+        "acc2" => AccelConfig::acc2(),
+        "acc8" => AccelConfig::acc8(),
+        _ => AccelConfig::acc4(),
+    };
+    let kind = match workload {
+        "mult" => SuiteKind::Mult,
+        "tree" => SuiteKind::Tree,
+        "react" => SuiteKind::React,
+        _ => SuiteKind::Fact,
+    };
+    println!("{} on {} ({} tiles)", kind.label(), cfg.name, cfg.n_tiles);
+    for control in [ControlMethod::Sopc, ControlMethod::Mopc] {
+        let mut s = CompiledSuite::build(kind, cfg.clone(), 17);
+        let r = s.run(control);
+        println!(
+            "  {control}: {} words, {} cycles, {}, {:.3} mW avg",
+            r.words,
+            r.cycles,
+            fmt_time(r.time_s),
+            r.avg_power_w() * 1e3
+        );
+    }
+}
+
+fn solve(grid: usize) {
+    use nscog::workloads::nvsa::{Nvsa, NvsaEngine};
+    use nscog::workloads::prae::Prae;
+    let mut rng = nscog::util::Rng::new(2024);
+    let nvsa = NvsaEngine::new(
+        Nvsa {
+            grid,
+            ..Default::default()
+        },
+        1,
+    );
+    let prae = Prae {
+        grid,
+        ..Default::default()
+    };
+    let n = 20;
+    let mut nvsa_ok = 0;
+    let mut prae_ok = 0;
+    for i in 0..n {
+        let inst = raven::generate(&mut rng, grid, 8);
+        let pmfs = raven::panel_pmfs(&inst, 0.95);
+        let sn = nvsa.solve(&inst, &pmfs);
+        let sp = prae.solve(&inst, &pmfs);
+        nvsa_ok += sn.correct as usize;
+        prae_ok += sp.correct as usize;
+        if i < 3 {
+            println!(
+                "instance {i}: rules {:?} → NVSA {} PrAE {}",
+                inst.rules.iter().map(|r| r.label()).collect::<Vec<_>>(),
+                if sn.correct { "ok" } else { "MISS" },
+                if sp.correct { "ok" } else { "MISS" },
+            );
+        }
+    }
+    println!(
+        "{grid}x{grid} RPM over {n} instances: NVSA {:.0}%  PrAE {:.0}%",
+        nvsa_ok as f64 / n as f64 * 100.0,
+        prae_ok as f64 / n as f64 * 100.0
+    );
+}
+
+fn runtime_info() {
+    match nscog::runtime::Runtime::new() {
+        Err(e) => {
+            eprintln!("runtime unavailable: {e}");
+            eprintln!("run `make artifacts` first");
+            std::process::exit(1);
+        }
+        Ok(mut rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("dims: {:?}", rt.manifest.dims);
+            let names: Vec<String> = rt.manifest.artifacts.keys().cloned().collect();
+            for name in names {
+                match rt.load(&name) {
+                    Ok(exe) => println!(
+                        "  {name}: {} in / {} out — compiled OK",
+                        exe.spec.inputs.len(),
+                        exe.spec.outputs.len()
+                    ),
+                    Err(e) => println!("  {name}: FAILED: {e}"),
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Analytical platform cost models: RTX 2080 Ti / V100 GPUs, Jetson TX2 /
+//! Xavier NX edge SoCs, and the Xeon 4114 host CPU.
+//!
+//! The paper's testbed is unavailable (repro band 0/5); these models
+//! substitute for it.  Each platform is a roofline (peak FLOP/s, DRAM
+//! bandwidth) plus per-operator-category efficiency factors calibrated
+//! from the paper's own Tab. IV measurements (sgemm ≈95% compute
+//! throughput vs. <10% ALU utilization for symbolic element-wise
+//! kernels), a per-kernel launch overhead, and a host↔device bandwidth
+//! for `DataMovement` ops.  Time per op =
+//! `max(flops/(peak·c_eff), bytes/(bw·b_eff)) + launch`, energy =
+//! board power × time.  See DESIGN.md's substitution ledger.
+
+pub mod counters;
+
+use crate::profiler::taxonomy::{OpCategory, PhaseKind};
+use crate::profiler::trace::Trace;
+
+/// An execution platform model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Platform {
+    pub name: &'static str,
+    /// Peak f32 throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// DRAM bandwidth (bytes/s).
+    pub dram_bw: f64,
+    /// Per-kernel launch + driver overhead (s).
+    pub kernel_launch_s: f64,
+    /// Host↔device transfer bandwidth (bytes/s); also charged a launch.
+    pub host_dev_bw: f64,
+    /// Board / module power while active (W).
+    pub power_w: f64,
+}
+
+impl Platform {
+    /// NVIDIA RTX 2080 Ti (the paper's desktop GPU).
+    pub fn rtx2080ti() -> Platform {
+        Platform {
+            name: "RTX 2080 Ti",
+            peak_flops: 13.45e12,
+            dram_bw: 616e9,
+            kernel_launch_s: 8e-6,
+            host_dev_bw: 12e9,
+            power_w: 250.0,
+        }
+    }
+
+    /// NVIDIA V100 (the accelerator case study's GPU baseline).
+    pub fn v100() -> Platform {
+        Platform {
+            name: "V100",
+            peak_flops: 15.7e12,
+            dram_bw: 900e9,
+            kernel_launch_s: 8e-6,
+            host_dev_bw: 12e9,
+            power_w: 300.0,
+        }
+    }
+
+    /// NVIDIA Jetson TX2 (15 W edge SoC).
+    pub fn tx2() -> Platform {
+        Platform {
+            name: "Jetson TX2",
+            peak_flops: 0.665e12,
+            dram_bw: 59.7e9,
+            kernel_launch_s: 25e-6,
+            host_dev_bw: 20e9, // unified memory: cheap transfers
+            power_w: 15.0,
+        }
+    }
+
+    /// NVIDIA Xavier NX (20 W edge SoC).
+    pub fn xavier_nx() -> Platform {
+        Platform {
+            name: "Xavier NX",
+            peak_flops: 0.845e12,
+            dram_bw: 51.2e9,
+            kernel_launch_s: 15e-6,
+            host_dev_bw: 25e9,
+            power_w: 20.0,
+        }
+    }
+
+    /// Intel Xeon Silver 4114 (the paper's host CPU).
+    pub fn xeon4114() -> Platform {
+        Platform {
+            name: "Xeon 4114",
+            peak_flops: 0.70e12,
+            dram_bw: 115e9,
+            kernel_launch_s: 0.3e-6, // function-call scale
+            host_dev_bw: 115e9,
+            power_w: 85.0,
+        }
+    }
+
+    /// The paper's Fig. 2b platform sweep.
+    pub fn edge_sweep() -> Vec<Platform> {
+        vec![Self::tx2(), Self::xavier_nx(), Self::rtx2080ti()]
+    }
+
+    /// Compute-efficiency factor per operator category, calibrated from
+    /// Tab. IV (sgemm_nn 95% compute throughput / 90% ALU; symbolic
+    /// vectorized_elem 3% compute / 6% ALU).
+    pub fn compute_eff(&self, c: OpCategory) -> f64 {
+        match c {
+            OpCategory::MatMul => 0.75,
+            OpCategory::Conv => 0.60,
+            OpCategory::VectorElem => 0.05,
+            OpCategory::DataTransform => 0.03,
+            OpCategory::DataMovement => 0.02,
+            OpCategory::Other => 0.01,
+        }
+    }
+
+    /// Bandwidth-efficiency factor per category (Tab. IV: symbolic
+    /// kernels drive DRAM to ~80–90% utilization; GEMM streams far less).
+    pub fn bw_eff(&self, c: OpCategory) -> f64 {
+        match c {
+            OpCategory::MatMul => 0.60,
+            OpCategory::Conv => 0.60,
+            OpCategory::VectorElem => 0.85,
+            OpCategory::DataTransform => 0.45,
+            OpCategory::DataMovement => 0.80,
+            OpCategory::Other => 0.25,
+        }
+    }
+
+    /// Modelled execution time of one operator.
+    pub fn op_time(&self, op: &crate::profiler::trace::OpRecord) -> f64 {
+        let (compute, bytes) = (op.flops as f64, op.bytes() as f64);
+        let t = if op.category == OpCategory::DataMovement {
+            bytes / (self.host_dev_bw * self.bw_eff(op.category))
+        } else {
+            let tc = compute / (self.peak_flops * self.compute_eff(op.category));
+            let tb = bytes / (self.dram_bw * self.bw_eff(op.category));
+            tc.max(tb)
+        };
+        t + self.kernel_launch_s
+    }
+
+    /// Modelled energy of one operator (board power × time).
+    pub fn op_energy(&self, op: &crate::profiler::trace::OpRecord) -> f64 {
+        self.op_time(op) * self.power_w
+    }
+
+    /// Aggregate a trace (optionally one phase) into a time breakdown.
+    pub fn trace_time(&self, trace: &Trace, phase: Option<PhaseKind>) -> TimeBreakdown {
+        let mut tb = TimeBreakdown::default();
+        for op in &trace.ops {
+            if let Some(p) = phase {
+                if op.phase != p {
+                    continue;
+                }
+            }
+            let t = self.op_time(op);
+            tb.total += t;
+            tb.by_category[cat_idx(op.category)] += t;
+            match op.phase {
+                PhaseKind::Neural => tb.neural += t,
+                PhaseKind::Symbolic => tb.symbolic += t,
+            }
+            tb.energy_j += t * self.power_w;
+        }
+        tb
+    }
+}
+
+fn cat_idx(c: OpCategory) -> usize {
+    OpCategory::ALL.iter().position(|&x| x == c).unwrap()
+}
+
+/// Time/energy aggregation of a trace on a platform.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TimeBreakdown {
+    pub total: f64,
+    pub neural: f64,
+    pub symbolic: f64,
+    /// Indexed by `OpCategory::ALL` order.
+    pub by_category: [f64; 6],
+    pub energy_j: f64,
+}
+
+impl TimeBreakdown {
+    /// Fraction of runtime in the symbolic phase (Fig. 2a's key ratio).
+    pub fn symbolic_fraction(&self) -> f64 {
+        if self.total > 0.0 {
+            self.symbolic / self.total
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-category runtime fractions (Fig. 3a).
+    pub fn category_fractions(&self) -> [f64; 6] {
+        let mut out = [0.0; 6];
+        if self.total > 0.0 {
+            for i in 0..6 {
+                out[i] = self.by_category[i] / self.total;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::trace::Trace;
+
+    fn gemm_op(n: u64) -> crate::profiler::trace::OpRecord {
+        let mut tr = Trace::new("t");
+        tr.add("gemm", OpCategory::MatMul, PhaseKind::Neural, 2 * n * n * n, 8 * n * n, 4 * n * n, &[]);
+        tr.ops.pop().unwrap()
+    }
+
+    fn elem_op(bytes: u64) -> crate::profiler::trace::OpRecord {
+        let mut tr = Trace::new("t");
+        tr.add("bind", OpCategory::VectorElem, PhaseKind::Symbolic, bytes / 4, bytes, bytes, &[]);
+        tr.ops.pop().unwrap()
+    }
+
+    #[test]
+    fn gemm_is_compute_limited_on_gpu() {
+        let p = Platform::rtx2080ti();
+        let op = gemm_op(2048);
+        let t = p.op_time(&op);
+        let tc = op.flops as f64 / (p.peak_flops * p.compute_eff(OpCategory::MatMul));
+        assert!((t - tc - p.kernel_launch_s).abs() / t < 0.01);
+    }
+
+    #[test]
+    fn elementwise_is_bandwidth_limited_on_gpu() {
+        let p = Platform::rtx2080ti();
+        let op = elem_op(64 << 20);
+        let t = p.op_time(&op);
+        let tb = op.bytes() as f64 / (p.dram_bw * p.bw_eff(OpCategory::VectorElem));
+        assert!((t - tb - p.kernel_launch_s).abs() / t < 0.01);
+    }
+
+    #[test]
+    fn tiny_ops_are_launch_dominated() {
+        let p = Platform::v100();
+        let op = elem_op(4096);
+        let t = p.op_time(&op);
+        assert!(p.kernel_launch_s / t > 0.9, "launch should dominate tiny ops");
+    }
+
+    #[test]
+    fn edge_platforms_slower_than_desktop() {
+        let op = gemm_op(1024);
+        let t_gpu = Platform::rtx2080ti().op_time(&op);
+        let t_tx2 = Platform::tx2().op_time(&op);
+        let t_nx = Platform::xavier_nx().op_time(&op);
+        assert!(t_tx2 > 10.0 * t_gpu);
+        assert!(t_nx > 5.0 * t_gpu);
+        assert!(t_tx2 > t_nx, "TX2 is the slowest platform");
+    }
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let p = Platform::rtx2080ti();
+        let mut tr = Trace::new("t");
+        tr.add("gemm", OpCategory::MatMul, PhaseKind::Neural, 1 << 30, 1 << 22, 1 << 22, &[]);
+        tr.add("bind", OpCategory::VectorElem, PhaseKind::Symbolic, 1 << 20, 1 << 26, 1 << 26, &[]);
+        let tb = p.trace_time(&tr, None);
+        assert!((tb.neural + tb.symbolic - tb.total).abs() < 1e-12);
+        let frac: f64 = tb.category_fractions().iter().sum();
+        assert!((frac - 1.0).abs() < 1e-9);
+        assert!(tb.energy_j > 0.0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Memory accounting (Fig. 3b + Takeaway 4): storage footprint (weights,
+//! codebooks) and peak intermediate ("working set") memory per phase.
+
+use super::taxonomy::PhaseKind;
+use super::trace::Trace;
+
+/// Memory breakdown for one workload.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemoryStats {
+    /// Neural weight storage (bytes).
+    pub weights_bytes: u64,
+    /// Symbolic codebook / knowledge-base storage (bytes).
+    pub codebook_bytes: u64,
+    /// Peak intermediate bytes during the neural phase.
+    pub neural_working_bytes: u64,
+    /// Peak intermediate bytes during the symbolic phase.
+    pub symbolic_working_bytes: u64,
+}
+
+impl MemoryStats {
+    pub fn storage_total(&self) -> u64 {
+        self.weights_bytes + self.codebook_bytes
+    }
+
+    pub fn working_total(&self) -> u64 {
+        self.neural_working_bytes + self.symbolic_working_bytes
+    }
+
+    /// Fraction of storage taken by weights + codebooks (paper: >90% for
+    /// NVSA).
+    pub fn static_fraction(&self) -> f64 {
+        let total = self.storage_total() + self.working_total();
+        if total == 0 {
+            return 0.0;
+        }
+        self.storage_total() as f64 / total as f64
+    }
+}
+
+/// Estimate working-set peaks from a trace: the max bytes written by any
+/// single op plus its read set (a simple live-range-free proxy that
+/// tracks the paper's "large intermediate caching" observation).
+pub fn working_set(trace: &Trace, phase: PhaseKind) -> u64 {
+    trace
+        .ops
+        .iter()
+        .filter(|o| o.phase == phase)
+        .map(|o| o.bytes_read + o.bytes_written)
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::taxonomy::OpCategory;
+
+    #[test]
+    fn static_fraction() {
+        let m = MemoryStats {
+            weights_bytes: 900,
+            codebook_bytes: 50,
+            neural_working_bytes: 30,
+            symbolic_working_bytes: 20,
+        };
+        assert!((m.static_fraction() - 0.95).abs() < 1e-12);
+        assert_eq!(m.storage_total(), 950);
+    }
+
+    #[test]
+    fn working_set_takes_max_op() {
+        let mut tr = Trace::new("x");
+        tr.add("a", OpCategory::VectorElem, PhaseKind::Symbolic, 1, 100, 20, &[]);
+        tr.add("b", OpCategory::VectorElem, PhaseKind::Symbolic, 1, 400, 80, &[]);
+        tr.add("n", OpCategory::Conv, PhaseKind::Neural, 1, 999, 1, &[]);
+        assert_eq!(working_set(&tr, PhaseKind::Symbolic), 480);
+        assert_eq!(working_set(&tr, PhaseKind::Neural), 1000);
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload characterization: operator taxonomy (Sec. IV-B), trace
+//! collection, roofline analysis (Fig. 3c), memory accounting (Fig. 3b),
+//! and sparsity measurement (Fig. 5).
+
+pub mod memstat;
+pub mod report;
+pub mod roofline;
+pub mod sparsity;
+pub mod taxonomy;
+pub mod trace;
+
+pub use taxonomy::{OpCategory, PhaseKind};
+pub use trace::{OpRecord, Trace};

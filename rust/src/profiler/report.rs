@@ -1,0 +1,89 @@
+//! Characterization report assembly: the full per-workload summary that
+//! the `characterize` example and the figure benches print.
+
+use super::memstat::MemoryStats;
+use super::roofline::RooflinePoint;
+use super::sparsity::SparsityPoint;
+use super::taxonomy::PhaseKind;
+use super::trace::Trace;
+use crate::platform::{Platform, TimeBreakdown};
+
+/// Full characterization of one workload on one platform.
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub workload: String,
+    pub platform: &'static str,
+    pub breakdown: TimeBreakdown,
+    pub neural_breakdown: TimeBreakdown,
+    pub symbolic_breakdown: TimeBreakdown,
+    pub memory: MemoryStats,
+    pub roofline: Vec<RooflinePoint>,
+    pub sparsity: Vec<SparsityPoint>,
+    pub n_ops: usize,
+}
+
+impl WorkloadReport {
+    /// Build a report from a trace + memory stats on a platform.
+    pub fn build(
+        trace: &Trace,
+        memory: MemoryStats,
+        sparsity: Vec<SparsityPoint>,
+        platform: &Platform,
+    ) -> WorkloadReport {
+        let breakdown = platform.trace_time(trace, None);
+        let neural_breakdown = platform.trace_time(trace, Some(PhaseKind::Neural));
+        let symbolic_breakdown = platform.trace_time(trace, Some(PhaseKind::Symbolic));
+        let roofline = vec![
+            super::roofline::place(trace, PhaseKind::Neural, platform),
+            super::roofline::place(trace, PhaseKind::Symbolic, platform),
+        ];
+        WorkloadReport {
+            workload: trace.workload.clone(),
+            platform: platform.name,
+            breakdown,
+            neural_breakdown,
+            symbolic_breakdown,
+            memory,
+            roofline,
+            sparsity,
+            n_ops: trace.len(),
+        }
+    }
+
+    /// One-line summary (workload, total time, symbolic %).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<8} {:>10} total  neural {:>5.1}%  symbolic {:>5.1}%  ({} ops)",
+            self.workload,
+            crate::util::stats::fmt_time(self.breakdown.total),
+            (1.0 - self.breakdown.symbolic_fraction()) * 100.0,
+            self.breakdown.symbolic_fraction() * 100.0,
+            self.n_ops,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::taxonomy::OpCategory;
+
+    #[test]
+    fn report_assembles() {
+        let mut tr = Trace::new("TEST");
+        tr.add("gemm", OpCategory::MatMul, PhaseKind::Neural, 1 << 28, 1 << 20, 1 << 20, &[]);
+        tr.add("bind", OpCategory::VectorElem, PhaseKind::Symbolic, 1 << 18, 1 << 24, 1 << 24, &[]);
+        let r = WorkloadReport::build(
+            &tr,
+            MemoryStats::default(),
+            vec![],
+            &Platform::rtx2080ti(),
+        );
+        assert_eq!(r.workload, "TEST");
+        assert_eq!(r.roofline.len(), 2);
+        assert!(r.breakdown.total > 0.0);
+        assert!(r.summary_line().contains("TEST"));
+        // symbolic streaming phase should be memory-bound
+        assert!(r.roofline[1].memory_bound);
+    }
+}

@@ -1,0 +1,91 @@
+//! Roofline analysis (Fig. 3c): place each workload component on the
+//! (operational intensity, attained throughput) plane of a platform and
+//! classify it as memory- or compute-bound.
+
+use super::taxonomy::PhaseKind;
+use super::trace::Trace;
+use crate::platform::Platform;
+
+/// One roofline point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RooflinePoint {
+    pub workload: String,
+    pub phase: PhaseKind,
+    /// FLOPs per byte.
+    pub intensity: f64,
+    /// Attained FLOP/s under the platform model.
+    pub attained_flops: f64,
+    /// True if the point sits left of the platform's ridge point.
+    pub memory_bound: bool,
+}
+
+/// Compute the ridge point (intensity where compute roof meets memory
+/// roof) of a platform.
+pub fn ridge_intensity(p: &Platform) -> f64 {
+    p.peak_flops / p.dram_bw
+}
+
+/// Place one phase of a trace on the roofline.
+pub fn place(trace: &Trace, phase: PhaseKind, platform: &Platform) -> RooflinePoint {
+    let flops = trace.flops(Some(phase)) as f64;
+    let bytes = trace.bytes(Some(phase)).max(1) as f64;
+    let intensity = flops / bytes;
+    let time = platform.trace_time(trace, Some(phase)).total;
+    let attained = if time > 0.0 { flops / time } else { 0.0 };
+    RooflinePoint {
+        workload: trace.workload.clone(),
+        phase,
+        intensity,
+        attained_flops: attained,
+        memory_bound: intensity < ridge_intensity(platform),
+    }
+}
+
+/// Roofline model ceiling at a given intensity.
+pub fn roof(p: &Platform, intensity: f64) -> f64 {
+    (intensity * p.dram_bw).min(p.peak_flops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Platform;
+    use crate::profiler::taxonomy::OpCategory;
+
+    #[test]
+    fn ridge_point_sane() {
+        let p = Platform::rtx2080ti();
+        let r = ridge_intensity(&p);
+        // 13.45 TFLOPs / 616 GB/s ≈ 21.8 FLOP/byte
+        assert!((10.0..40.0).contains(&r), "ridge {r}");
+    }
+
+    #[test]
+    fn roof_is_min_of_two_ceilings() {
+        let p = Platform::rtx2080ti();
+        assert!(roof(&p, 0.1) < p.peak_flops);
+        assert!((roof(&p, 1e6) - p.peak_flops).abs() < 1.0);
+    }
+
+    #[test]
+    fn symbolic_streaming_is_memory_bound() {
+        let p = Platform::rtx2080ti();
+        let mut tr = Trace::new("x");
+        // streaming elementwise: 1 FLOP per 8 bytes
+        tr.add("bind", OpCategory::VectorElem, PhaseKind::Symbolic, 1_000_000, 4_000_000, 4_000_000, &[]);
+        let pt = place(&tr, PhaseKind::Symbolic, &p);
+        assert!(pt.memory_bound);
+        assert!(pt.intensity < 1.0);
+    }
+
+    #[test]
+    fn dense_matmul_is_compute_bound() {
+        let p = Platform::rtx2080ti();
+        let mut tr = Trace::new("x");
+        // 1024^3 GEMM: 2*N^3 flops, 3*N^2*4 bytes
+        let n = 1024u64;
+        tr.add("gemm", OpCategory::MatMul, PhaseKind::Neural, 2 * n * n * n, 8 * n * n, 4 * n * n, &[]);
+        let pt = place(&tr, PhaseKind::Neural, &p);
+        assert!(!pt.memory_bound, "intensity {}", pt.intensity);
+    }
+}

@@ -1,0 +1,71 @@
+//! The paper's six-way compute-operator taxonomy (Sec. IV-B) and the
+//! neural/symbolic phase split.
+
+/// Operator category (Sec. IV-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpCategory {
+    /// Kernel-sliding convolutions (neural perception).
+    Conv,
+    /// Dense or sparse GEMM (fully-connected layers, projections).
+    MatMul,
+    /// Vector / element-wise tensor ops (add, mul, activation,
+    /// normalization, relational) — the dominant symbolic class.
+    VectorElem,
+    /// Reshapes, transposes, masked selection, coalescing.
+    DataTransform,
+    /// Memory↔compute, host↔device transfers, duplication, assignment.
+    DataMovement,
+    /// Fuzzy first-order logic, logic rules, graph/control operations.
+    Other,
+}
+
+impl OpCategory {
+    pub const ALL: [OpCategory; 6] = [
+        OpCategory::Conv,
+        OpCategory::MatMul,
+        OpCategory::VectorElem,
+        OpCategory::DataTransform,
+        OpCategory::DataMovement,
+        OpCategory::Other,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpCategory::Conv => "Conv",
+            OpCategory::MatMul => "MatMul",
+            OpCategory::VectorElem => "Vector/Elem",
+            OpCategory::DataTransform => "DataTransform",
+            OpCategory::DataMovement => "DataMovement",
+            OpCategory::Other => "Other",
+        }
+    }
+}
+
+/// Which side of the neuro-symbolic split an operation belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PhaseKind {
+    Neural,
+    Symbolic,
+}
+
+impl PhaseKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PhaseKind::Neural => "neural",
+            PhaseKind::Symbolic => "symbolic",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_categories() {
+        assert_eq!(OpCategory::ALL.len(), 6);
+        let labels: Vec<_> = OpCategory::ALL.iter().map(|c| c.label()).collect();
+        assert!(labels.contains(&"MatMul"));
+        assert!(labels.contains(&"Vector/Elem"));
+    }
+}

@@ -1,0 +1,208 @@
+//! Operator traces: the unit of workload characterization.
+//!
+//! Every workload model (`crate::workloads`) emits its compute graph as a
+//! [`Trace`] of [`OpRecord`]s — category, phase, FLOPs, bytes moved,
+//! output sparsity, and dependency edges.  Platform cost models map
+//! traces to time/energy (Figs. 2, 3, 11b; Tab. IV) and the coordinator
+//! derives critical paths from the dependency edges (Fig. 4).
+
+use super::taxonomy::{OpCategory, PhaseKind};
+
+/// One profiled operator instance.
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    pub name: String,
+    pub category: OpCategory,
+    pub phase: PhaseKind,
+    /// Floating-point (or integer-ALU) operations.
+    pub flops: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Fraction of zeros in the operator's output (0.0 = dense).
+    pub output_sparsity: f64,
+    /// Indices of trace ops this op consumes (dependency edges).
+    pub deps: Vec<usize>,
+}
+
+impl OpRecord {
+    /// Total bytes moved.
+    pub fn bytes(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+
+    /// Operational intensity (FLOPs per byte) — the roofline x-axis.
+    pub fn intensity(&self) -> f64 {
+        self.flops as f64 / self.bytes().max(1) as f64
+    }
+}
+
+/// A workload's operator trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub workload: String,
+    pub ops: Vec<OpRecord>,
+}
+
+impl Trace {
+    pub fn new(workload: impl Into<String>) -> Self {
+        Trace {
+            workload: workload.into(),
+            ops: Vec::new(),
+        }
+    }
+
+    /// Append an operator; returns its index (for dependency wiring).
+    #[allow(clippy::too_many_arguments)]
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        category: OpCategory,
+        phase: PhaseKind,
+        flops: u64,
+        bytes_read: u64,
+        bytes_written: u64,
+        deps: &[usize],
+    ) -> usize {
+        self.ops.push(OpRecord {
+            name: name.into(),
+            category,
+            phase,
+            flops,
+            bytes_read,
+            bytes_written,
+            output_sparsity: 0.0,
+            deps: deps.to_vec(),
+        });
+        self.ops.len() - 1
+    }
+
+    /// Set the output sparsity of op `idx`.
+    pub fn set_sparsity(&mut self, idx: usize, s: f64) {
+        self.ops[idx].output_sparsity = s.clamp(0.0, 1.0);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Total FLOPs in a phase.
+    pub fn flops(&self, phase: Option<PhaseKind>) -> u64 {
+        self.ops
+            .iter()
+            .filter(|o| phase.map_or(true, |p| o.phase == p))
+            .map(|o| o.flops)
+            .sum()
+    }
+
+    /// Total bytes in a phase.
+    pub fn bytes(&self, phase: Option<PhaseKind>) -> u64 {
+        self.ops
+            .iter()
+            .filter(|o| phase.map_or(true, |p| o.phase == p))
+            .map(|o| o.bytes())
+            .sum()
+    }
+
+    /// Ops filtered by (phase, category).
+    pub fn select(
+        &self,
+        phase: Option<PhaseKind>,
+        category: Option<OpCategory>,
+    ) -> impl Iterator<Item = &OpRecord> {
+        self.ops.iter().filter(move |o| {
+            phase.map_or(true, |p| o.phase == p)
+                && category.map_or(true, |c| o.category == c)
+        })
+    }
+
+    /// Validate dependency indices are acyclic (forward-only) and in
+    /// range. Traces are built in topological order by construction.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, op) in self.ops.iter().enumerate() {
+            for &d in &op.deps {
+                if d >= i {
+                    return Err(format!(
+                        "op {i} ({}) depends on {d} which is not earlier",
+                        op.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean output sparsity over symbolic ops (Fig. 5 headline number).
+    pub fn mean_sparsity(&self, phase: PhaseKind) -> f64 {
+        let sel: Vec<f64> = self
+            .ops
+            .iter()
+            .filter(|o| o.phase == phase)
+            .map(|o| o.output_sparsity)
+            .collect();
+        if sel.is_empty() {
+            0.0
+        } else {
+            sel.iter().sum::<f64>() / sel.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Trace {
+        let mut tr = Trace::new("test");
+        let a = tr.add("conv1", OpCategory::Conv, PhaseKind::Neural, 1000, 100, 50, &[]);
+        let b = tr.add("bind", OpCategory::VectorElem, PhaseKind::Symbolic, 10, 80, 80, &[a]);
+        tr.add("search", OpCategory::VectorElem, PhaseKind::Symbolic, 20, 160, 8, &[b]);
+        tr
+    }
+
+    #[test]
+    fn totals_by_phase() {
+        let tr = t();
+        assert_eq!(tr.flops(Some(PhaseKind::Neural)), 1000);
+        assert_eq!(tr.flops(Some(PhaseKind::Symbolic)), 30);
+        assert_eq!(tr.bytes(None), 150 + 160 + 168);
+    }
+
+    #[test]
+    fn intensity() {
+        let tr = t();
+        assert!((tr.ops[0].intensity() - 1000.0 / 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validates_topological_deps() {
+        let tr = t();
+        assert!(tr.validate().is_ok());
+        let mut bad = Trace::new("bad");
+        bad.add("x", OpCategory::Other, PhaseKind::Symbolic, 1, 1, 1, &[]);
+        bad.ops[0].deps.push(5);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn sparsity_accounting() {
+        let mut tr = t();
+        tr.set_sparsity(1, 0.96);
+        tr.set_sparsity(2, 0.98);
+        assert!((tr.mean_sparsity(PhaseKind::Symbolic) - 0.97).abs() < 1e-12);
+        assert_eq!(tr.mean_sparsity(PhaseKind::Neural), 0.0);
+    }
+
+    #[test]
+    fn select_filters() {
+        let tr = t();
+        assert_eq!(tr.select(Some(PhaseKind::Symbolic), None).count(), 2);
+        assert_eq!(
+            tr.select(None, Some(OpCategory::Conv)).count(),
+            1
+        );
+    }
+}

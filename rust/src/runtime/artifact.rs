@@ -1,0 +1,140 @@
+//! Artifact manifest: shapes and dtypes of every AOT entry point, written
+//! by `python/compile/aot.py` as `artifacts/manifest.json`.
+
+use crate::config::ModelDims;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor shape + dtype.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Option<TensorSpec> {
+        Some(TensorSpec {
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT'd entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The full manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dims: ModelDims,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        let dims = ModelDims::from_manifest(&j);
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or("manifest missing 'artifacts'")?;
+        for (name, spec) in arts {
+            let file = dir.join(
+                spec.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("{name}: missing file"))?,
+            );
+            let parse_list = |key: &str| -> Result<Vec<TensorSpec>, String> {
+                spec.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("{name}: missing {key}"))?
+                    .iter()
+                    .map(|t| {
+                        TensorSpec::from_json(t).ok_or_else(|| format!("{name}: bad {key}"))
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file,
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dims,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Manifest, String> {
+        Self::load(&crate::config::artifacts_dir())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_available() -> bool {
+        crate::config::artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        if !manifest_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load_default().unwrap();
+        assert_eq!(m.dims.hd_dim, 1024);
+        let fe = m.get("nvsa_frontend").expect("nvsa_frontend artifact");
+        assert_eq!(fe.inputs.len(), 1);
+        assert_eq!(fe.inputs[0].shape, vec![16, 32, 32, 1]);
+        assert_eq!(fe.outputs.len(), 3);
+        assert!(fe.file.exists(), "{}", fe.file.display());
+        // all 13 artifacts present
+        assert!(m.artifacts.len() >= 13, "{}", m.artifacts.len());
+    }
+
+    #[test]
+    fn tensor_spec_numel() {
+        let t = TensorSpec {
+            shape: vec![2, 3, 4],
+            dtype: "float32".into(),
+        };
+        assert_eq!(t.numel(), 24);
+    }
+}

@@ -1,0 +1,250 @@
+//! PJRT CPU client wrapper: compile HLO text once, execute many times.
+//!
+//! Follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! HLO *text* is the interchange format (serialized protos from jax≥0.5
+//! carry 64-bit ids that xla_extension 0.5.1 rejects).
+
+use super::artifact::{ArtifactSpec, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+/// A dense f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 input tensors; returns f32 outputs.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape != spec.shape {
+                return Err(anyhow!(
+                    "{}: input shape {:?} != expected {:?}",
+                    self.spec.name,
+                    t.shape,
+                    spec.shape
+                ));
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = result.to_tuple()?;
+        let mut outs = Vec::with_capacity(elems.len());
+        for (lit, spec) in elems.into_iter().zip(&self.spec.outputs) {
+            let data = lit.to_vec::<f32>()?;
+            outs.push(Tensor::new(spec.shape.clone(), data));
+        }
+        Ok(outs)
+    }
+}
+
+/// The PJRT runtime: one CPU client + a cache of compiled artifacts.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create from the default artifacts directory.
+    pub fn new() -> Result<Runtime> {
+        let manifest = Manifest::load_default().map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Platform string of the PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let spec = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+                .clone();
+            let path = spec
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("bad path"))?
+                .to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(name.to_string(), Executable { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// One-shot convenience: load + run.
+    pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?;
+        self.cache[name].run(inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_built() -> bool {
+        crate::config::artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn pmf_to_vsa_artifact_matches_rust_engine() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::new().unwrap();
+        let dims = rt.manifest.dims;
+        // one-hot PMFs: output rows must equal codebook rows
+        let mut pmf = Tensor::zeros(vec![dims.panels, dims.attr_k]);
+        for p in 0..dims.panels {
+            pmf.data[p * dims.attr_k + (p % dims.attr_k)] = 1.0;
+        }
+        let mut cb = Tensor::zeros(vec![dims.attr_k, dims.hd_dim]);
+        let mut rng = crate::util::Rng::new(5);
+        for v in cb.data.iter_mut() {
+            *v = rng.bipolar();
+        }
+        let out = rt.run("pmf_to_vsa", &[pmf, cb.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![dims.panels, dims.hd_dim]);
+        for p in 0..dims.panels {
+            let k = p % dims.attr_k;
+            let row = &out[0].data[p * dims.hd_dim..(p + 1) * dims.hd_dim];
+            let cb_row = &cb.data[k * dims.hd_dim..(k + 1) * dims.hd_dim];
+            assert_eq!(row, cb_row, "one-hot bundle must copy the item");
+        }
+    }
+
+    #[test]
+    fn nvsa_frontend_produces_pmfs() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::new().unwrap();
+        let dims = rt.manifest.dims;
+        let mut rng = crate::util::Rng::new(7);
+        let mut panels = Tensor::zeros(vec![dims.panels, dims.img, dims.img, 1]);
+        for v in panels.data.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        let outs = rt.run("nvsa_frontend", &[panels]).unwrap();
+        assert_eq!(outs.len(), dims.n_attrs);
+        for pmf in &outs {
+            assert_eq!(pmf.shape, vec![dims.panels, dims.attr_k]);
+            for p in 0..dims.panels {
+                let row = &pmf.data[p * dims.attr_k..(p + 1) * dims.attr_k];
+                let s: f32 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "softmax rows sum to 1: {s}");
+                assert!(row.iter().all(|&x| x >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn resonator_step_artifact_matches_rust() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::new().unwrap();
+        let dims = rt.manifest.dims;
+        let d = dims.hd_dim;
+        let n = dims.codebook_n;
+        let mut rng = crate::util::Rng::new(11);
+        let bip = |rng: &mut crate::util::Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.bipolar()).collect()
+        };
+        let scene = bip(&mut rng, d);
+        let o1 = bip(&mut rng, d);
+        let o2 = bip(&mut rng, d);
+        let cb = bip(&mut rng, n * d);
+        let outs = rt
+            .run(
+                "resonator_step",
+                &[
+                    Tensor::new(vec![d], scene.clone()),
+                    Tensor::new(vec![d], o1.clone()),
+                    Tensor::new(vec![d], o2.clone()),
+                    Tensor::new(vec![n, d], cb.clone()),
+                ],
+            )
+            .unwrap();
+        // reference: rust implementation
+        let xhat: Vec<f64> = (0..d)
+            .map(|i| (scene[i] * o1[i] * o2[i]) as f64)
+            .collect();
+        let scores: Vec<f64> = (0..n)
+            .map(|j| (0..d).map(|i| cb[j * d + i] as f64 * xhat[i]).sum())
+            .collect();
+        for (j, &s) in scores.iter().enumerate() {
+            assert!(
+                (outs[1].data[j] as f64 - s).abs() < 1e-2 * (s.abs() + 1.0),
+                "score {j}: {} vs {s}",
+                outs[1].data[j]
+            );
+        }
+        for i in 0..d {
+            let proj: f64 = (0..n).map(|j| scores[j] * cb[j * d + i] as f64).sum();
+            let expect = if proj >= 0.0 { 1.0 } else { -1.0 };
+            assert_eq!(outs[0].data[i], expect as f32, "est lane {i}");
+        }
+    }
+}

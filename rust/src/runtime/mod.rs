@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs at request time — `make artifacts` lowers the L2 JAX
+//! graphs once; this module compiles each `artifacts/*.hlo.txt` with the
+//! PJRT CPU client and exposes typed f32 execution.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::{Executable, Runtime, Tensor};

@@ -1,0 +1,142 @@
+//! Micro-benchmark harness used by all `rust/benches/*` targets.
+//!
+//! Criterion is not vendorable offline, so the benches use this
+//! self-contained harness: warmup, fixed-duration sampling, and summary
+//! statistics, plus table-printing helpers for regenerating the paper's
+//! figures as aligned text tables.
+
+use super::stats::{fmt_time, Summary};
+use std::time::{Duration, Instant};
+
+/// Run `f` repeatedly for ~`sample_secs` after a warmup, returning
+/// per-iteration timings in seconds.
+pub fn sample<F: FnMut()>(mut f: F, warmup_secs: f64, sample_secs: f64) -> Vec<f64> {
+    let warm_until = Instant::now() + Duration::from_secs_f64(warmup_secs);
+    let mut iters_hint = 0u64;
+    while Instant::now() < warm_until {
+        f();
+        iters_hint += 1;
+    }
+    let _ = iters_hint;
+    let mut times = Vec::new();
+    let until = Instant::now() + Duration::from_secs_f64(sample_secs);
+    while Instant::now() < until || times.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if times.len() >= 100_000 {
+            break;
+        }
+    }
+    times
+}
+
+/// Benchmark `f` and print a criterion-style line. Returns the summary.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> Summary {
+    let times = sample(f, 0.3, 1.0);
+    let s = Summary::of(&times);
+    println!(
+        "{name:<44} time: [{} {} {}]  ({} samples)",
+        fmt_time(s.min),
+        fmt_time(s.p50),
+        fmt_time(s.p95),
+        s.n
+    );
+    s
+}
+
+/// Prevent the optimizer from eliding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A simple aligned-column table printer for figure/table regeneration.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<w$}", cell, w = widths[c]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_collects_timings() {
+        let mut acc = 0u64;
+        let times = sample(
+            || {
+                acc = black_box(acc.wrapping_add(1));
+            },
+            0.01,
+            0.02,
+        );
+        assert!(times.len() >= 5);
+        assert!(times.iter().all(|&t| t >= 0.0));
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer-name".into(), "2.5".into()]);
+        let s = t.to_string();
+        assert!(s.contains("longer-name"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

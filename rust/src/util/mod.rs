@@ -1,0 +1,12 @@
+//! Self-contained utilities: deterministic RNG, a minimal JSON parser for
+//! the artifact manifest, summary statistics, a micro-benchmark harness
+//! (criterion is not vendorable in this environment), and a tiny
+//! property-testing helper used by the invariant tests.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,84 @@
+//! Tiny property-testing helper (proptest is not vendorable offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each, reporting the failing case's index and seed
+//! so it can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with the replay
+/// seed on the first failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let input = gen(&mut case_rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (replay seed {case_seed:#x}): {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` for a
+/// descriptive failure message.
+pub fn forall_res<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (replay seed {case_seed:#x}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(1, 50, |r| r.below(100), |_| {
+            count += 1;
+            true
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(2, 50, |r| r.below(10), |&x| x < 5);
+    }
+
+    #[test]
+    fn forall_res_reports_message() {
+        let result = std::panic::catch_unwind(|| {
+            forall_res(3, 10, |r| r.below(4), |&x| {
+                if x < 4 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            });
+        });
+        assert!(result.is_ok());
+    }
+}

@@ -1,0 +1,125 @@
+//! Summary statistics for benchmark results and characterization reports.
+
+/// Descriptive statistics over a sample of measurements.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; panics on empty input.
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            p50: percentile(&s, 0.50),
+            p95: percentile(&s, 0.95),
+            max: s[n - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted sample.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Geometric mean (for speedup aggregation).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.2} s", secs)
+    }
+}
+
+/// Format an energy in joules (pJ/nJ/µJ/mJ/J).
+pub fn fmt_energy(j: f64) -> String {
+    if j < 1e-9 {
+        format!("{:.1} pJ", j * 1e12)
+    } else if j < 1e-6 {
+        format!("{:.2} nJ", j * 1e9)
+    } else if j < 1e-3 {
+        format!("{:.2} µJ", j * 1e6)
+    } else if j < 1.0 {
+        format!("{:.2} mJ", j * 1e3)
+    } else {
+        format!("{:.2} J", j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert!((percentile(&s, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&s, 0.0), 0.0);
+        assert_eq!(percentile(&s, 1.0), 10.0);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.5e-9).contains("ns"));
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-3).contains("ms"));
+        assert!(fmt_time(2.5).contains('s'));
+    }
+
+    #[test]
+    fn energy_formatting() {
+        assert!(fmt_energy(3e-12).contains("pJ"));
+        assert!(fmt_energy(3e-9).contains("nJ"));
+        assert!(fmt_energy(3e-3).contains("mJ"));
+    }
+}

@@ -1,0 +1,132 @@
+//! CA-90 cellular-automaton codebook regeneration (Kleyko et al. [60]).
+//!
+//! The accelerator's MCG subsystem stores only a *seed fold* per item
+//! vector in SRAM and expands further folds on-the-fly with rule-90:
+//! `next[i] = cell[i-1] XOR cell[i+1]` on a cyclic lattice.  This trades
+//! SRAM capacity for XOR/shift logic — the paper's "compressed storage of
+//! symbols" feature (Tab. V, Recommendation 3).
+
+use super::hypervector::BinaryHV;
+
+/// One rule-90 step on a cyclic bit lattice packed into `u64` words.
+///
+/// `next = rotl1(state) XOR rotr1(state)` over the whole `dim`-bit ring.
+pub fn ca90_step(words: &[u64], dim: usize) -> Vec<u64> {
+    debug_assert_eq!(dim % 64, 0);
+    debug_assert_eq!(words.len(), dim / 64);
+    let n = words.len();
+    let mut out = vec![0u64; n];
+    for i in 0..n {
+        // left neighbor of bit b is bit b-1 (cyclic); rotating the whole
+        // ring left by one gives the "right neighbor" view and vice versa.
+        let prev = words[(i + n - 1) % n];
+        let next = words[(i + 1) % n];
+        let left = (words[i] << 1) | (prev >> 63); // bit b-1 at position b
+        let right = (words[i] >> 1) | (next << 63); // bit b+1 at position b
+        out[i] = left ^ right;
+    }
+    out
+}
+
+/// Expand fold `k` of an item vector from its seed fold: `k` applications
+/// of rule-90.  Fold 0 is the seed itself.
+pub fn expand_fold(seed: &[u64], fold_bits: usize, k: usize) -> Vec<u64> {
+    let mut state = seed.to_vec();
+    for _ in 0..k {
+        state = ca90_step(&state, fold_bits);
+    }
+    state
+}
+
+/// Materialize a full `dim`-bit hypervector from a `fold_bits`-bit seed by
+/// concatenating CA-90 generations (the paper's extended-dimension
+/// mechanism).
+pub fn expand_vector(seed: &[u64], fold_bits: usize, dim: usize) -> BinaryHV {
+    assert_eq!(dim % fold_bits, 0);
+    assert_eq!(fold_bits % 64, 0);
+    let n_folds = dim / fold_bits;
+    let mut words = Vec::with_capacity(dim / 64);
+    let mut state = seed.to_vec();
+    for k in 0..n_folds {
+        if k > 0 {
+            state = ca90_step(&state, fold_bits);
+        }
+        words.extend_from_slice(&state);
+    }
+    BinaryHV::from_words(dim, words)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::Rng;
+
+    fn naive_step(bits: &[bool]) -> Vec<bool> {
+        let n = bits.len();
+        (0..n)
+            .map(|i| bits[(i + n - 1) % n] ^ bits[(i + 1) % n])
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_rule90() {
+        forall(200, 25, |r| {
+            let words: Vec<u64> = (0..2).map(|_| r.next_u64()).collect();
+            words
+        }, |words| {
+            let dim = 128;
+            let fast = ca90_step(words, dim);
+            let bits: Vec<bool> =
+                (0..dim).map(|i| (words[i / 64] >> (i % 64)) & 1 == 1).collect();
+            let naive = naive_step(&bits);
+            (0..dim).all(|i| ((fast[i / 64] >> (i % 64)) & 1 == 1) == naive[i])
+        });
+    }
+
+    #[test]
+    fn zero_state_is_fixed_point() {
+        let z = vec![0u64; 8];
+        assert_eq!(ca90_step(&z, 512), z);
+    }
+
+    #[test]
+    fn expansion_preserves_randomness_quality() {
+        // Expanded folds stay quasi-orthogonal to the seed fold.
+        let mut rng = Rng::new(1);
+        let seed: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+        let f1 = expand_fold(&seed, 512, 1);
+        let f4 = expand_fold(&seed, 512, 4);
+        let ham1: u32 = seed.iter().zip(&f1).map(|(a, b)| (a ^ b).count_ones()).sum();
+        let ham4: u32 = seed.iter().zip(&f4).map(|(a, b)| (a ^ b).count_ones()).sum();
+        for h in [ham1, ham4] {
+            assert!((150..370).contains(&h), "hamming {h} not random-like");
+        }
+    }
+
+    #[test]
+    fn expand_vector_fold0_is_seed() {
+        let mut rng = Rng::new(2);
+        let seed: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+        let hv = expand_vector(&seed, 512, 2048);
+        assert_eq!(&hv.words()[..8], &seed[..]);
+        assert_eq!(hv.dim(), 2048);
+    }
+
+    #[test]
+    fn expand_vector_folds_chain() {
+        let mut rng = Rng::new(3);
+        let seed: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+        let hv = expand_vector(&seed, 512, 2048);
+        let f2 = expand_fold(&seed, 512, 2);
+        assert_eq!(&hv.words()[16..24], &f2[..]);
+    }
+
+    #[test]
+    fn deterministic_expansion() {
+        let seed = vec![0xDEADBEEFCAFEBABEu64; 8];
+        let a = expand_vector(&seed, 512, 4096);
+        let b = expand_vector(&seed, 512, 4096);
+        assert_eq!(a, b);
+    }
+}

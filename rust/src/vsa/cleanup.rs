@@ -1,0 +1,130 @@
+//! Cleanup / associative memory: map noisy hypervectors back to the
+//! nearest stored prototype (the paper's clean-up memory search, used by
+//! the REACT workload's motor-value decoding).
+
+use super::codebook::{BinaryCodebook, RealCodebook};
+use super::hypervector::{BinaryHV, RealHV};
+
+/// Cleanup memory over binary item vectors.
+#[derive(Debug, Clone)]
+pub struct CleanupMemory {
+    codebook: BinaryCodebook,
+}
+
+impl CleanupMemory {
+    pub fn new(codebook: BinaryCodebook) -> Self {
+        CleanupMemory { codebook }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codebook.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codebook.is_empty()
+    }
+
+    pub fn codebook(&self) -> &BinaryCodebook {
+        &self.codebook
+    }
+
+    /// Recall the nearest stored item; returns (index, normalized score).
+    pub fn recall(&self, query: &BinaryHV) -> (usize, f64) {
+        let (idx, score) = self.codebook.nearest(query);
+        (idx, score as f64 / self.codebook.dim() as f64)
+    }
+
+    /// Recall with a confidence threshold; `None` if the best match is
+    /// weaker than `min_cosine` (query too noisy / novel).
+    pub fn recall_thresholded(&self, query: &BinaryHV, min_cosine: f64) -> Option<(usize, f64)> {
+        let (idx, cos) = self.recall(query);
+        (cos >= min_cosine).then_some((idx, cos))
+    }
+}
+
+/// Cleanup memory over real-valued prototypes.
+#[derive(Debug, Clone)]
+pub struct RealCleanupMemory {
+    codebook: RealCodebook,
+}
+
+impl RealCleanupMemory {
+    pub fn new(codebook: RealCodebook) -> Self {
+        RealCleanupMemory { codebook }
+    }
+
+    pub fn codebook(&self) -> &RealCodebook {
+        &self.codebook
+    }
+
+    /// Recall nearest prototype by cosine similarity.
+    pub fn recall(&self, query: &RealHV) -> (usize, f64) {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for (i, it) in self.codebook.items().iter().enumerate() {
+            let c = it.cosine(query);
+            if c > best.1 {
+                best = (i, c);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::vsa::hypervector::BinaryHV;
+
+    fn flip_bits(hv: &BinaryHV, frac: f64, rng: &mut Rng) -> BinaryHV {
+        let mut out = hv.clone();
+        let n = (hv.dim() as f64 * frac) as usize;
+        for i in rng.sample_indices(hv.dim(), n) {
+            out.set(i, !out.get(i));
+        }
+        out
+    }
+
+    #[test]
+    fn recalls_exact_member() {
+        let mut rng = Rng::new(1);
+        let cm = CleanupMemory::new(BinaryCodebook::random(&mut rng, 55, 2048));
+        for i in [0usize, 27, 54] {
+            let (idx, cos) = cm.recall(cm.codebook().item(i));
+            assert_eq!(idx, i);
+            assert!((cos - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn recalls_under_noise() {
+        let mut rng = Rng::new(2);
+        let cm = CleanupMemory::new(BinaryCodebook::random(&mut rng, 55, 2048));
+        // up to 30% flipped bits still recalls correctly w.h.p.
+        for i in 0..10 {
+            let noisy = flip_bits(cm.codebook().item(i), 0.30, &mut rng);
+            let (idx, _) = cm.recall(&noisy);
+            assert_eq!(idx, i, "item {i} lost under 30% noise");
+        }
+    }
+
+    #[test]
+    fn threshold_rejects_novel_query() {
+        let mut rng = Rng::new(3);
+        let cm = CleanupMemory::new(BinaryCodebook::random(&mut rng, 16, 2048));
+        let novel = BinaryHV::random(&mut rng, 2048);
+        assert!(cm.recall_thresholded(&novel, 0.5).is_none());
+        assert!(cm
+            .recall_thresholded(cm.codebook().item(3), 0.5)
+            .is_some());
+    }
+
+    #[test]
+    fn real_cleanup_recall() {
+        let mut rng = Rng::new(4);
+        let cm = RealCleanupMemory::new(RealCodebook::random_bipolar(&mut rng, 20, 1024));
+        let (idx, cos) = cm.recall(cm.codebook().item(11));
+        assert_eq!(idx, 11);
+        assert!((cos - 1.0).abs() < 1e-6);
+    }
+}

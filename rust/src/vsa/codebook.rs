@@ -1,0 +1,279 @@
+//! Item-memory codebooks: arrays of atomic hypervectors used for symbolic
+//! encoding, with optional CA-90 compressed storage.
+
+use super::ca90;
+use super::hypervector::{BinaryHV, RealHV, FOLD_BITS, FOLD_WORDS};
+use crate::util::Rng;
+
+/// A codebook of binary item vectors.
+#[derive(Debug, Clone)]
+pub struct BinaryCodebook {
+    dim: usize,
+    items: Vec<BinaryHV>,
+}
+
+impl BinaryCodebook {
+    /// Generate `n` random item vectors of dimension `dim`.
+    pub fn random(rng: &mut Rng, n: usize, dim: usize) -> Self {
+        BinaryCodebook {
+            dim,
+            items: (0..n).map(|_| BinaryHV::random(rng, dim)).collect(),
+        }
+    }
+
+    /// Reconstruct a full codebook from per-item 512-bit seed folds via
+    /// CA-90 expansion (the accelerator's compressed storage scheme).
+    pub fn from_seeds(seeds: &[Vec<u64>], dim: usize) -> Self {
+        BinaryCodebook {
+            dim,
+            items: seeds
+                .iter()
+                .map(|s| ca90::expand_vector(s, FOLD_BITS, dim))
+                .collect(),
+        }
+    }
+
+    /// Extract seed folds (fold 0 of each item) for compressed storage.
+    pub fn seeds(&self) -> Vec<Vec<u64>> {
+        self.items
+            .iter()
+            .map(|hv| hv.words()[..FOLD_WORDS.min(hv.words().len())].to_vec())
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn item(&self, i: usize) -> &BinaryHV {
+        &self.items[i]
+    }
+
+    pub fn items(&self) -> &[BinaryHV] {
+        &self.items
+    }
+
+    /// Dot-product scores of `query` against every item.
+    pub fn scores(&self, query: &BinaryHV) -> Vec<i64> {
+        self.items.iter().map(|it| it.dot(query)).collect()
+    }
+
+    /// Nearest item index and its score (paper's e(y) = argmax d).
+    pub fn nearest(&self, query: &BinaryHV) -> (usize, i64) {
+        let mut best = (0usize, i64::MIN);
+        for (i, it) in self.items.iter().enumerate() {
+            let s = it.dot(query);
+            if s > best.1 {
+                best = (i, s);
+            }
+        }
+        best
+    }
+
+    /// Memory footprint (bytes) of the full codebook.
+    pub fn storage_bytes(&self) -> usize {
+        self.len() * self.dim / 8
+    }
+
+    /// Memory footprint (bytes) when stored as CA-90 seeds only.
+    pub fn compressed_bytes(&self) -> usize {
+        self.len() * FOLD_BITS / 8
+    }
+}
+
+/// A codebook of real-valued (bipolar) item vectors.
+#[derive(Debug, Clone)]
+pub struct RealCodebook {
+    dim: usize,
+    items: Vec<RealHV>,
+}
+
+impl RealCodebook {
+    /// `n` random bipolar item vectors.
+    pub fn random_bipolar(rng: &mut Rng, n: usize, dim: usize) -> Self {
+        RealCodebook {
+            dim,
+            items: (0..n).map(|_| RealHV::random_bipolar(rng, dim)).collect(),
+        }
+    }
+
+    /// `n` random HRR (Gaussian 1/sqrt(D)) item vectors for circular-conv
+    /// binding (NVSA-style holographic codebooks).
+    pub fn random_hrr(rng: &mut Rng, n: usize, dim: usize) -> Self {
+        RealCodebook {
+            dim,
+            items: (0..n).map(|_| RealHV::random_hrr(rng, dim)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn item(&self, i: usize) -> &RealHV {
+        &self.items[i]
+    }
+
+    pub fn items(&self) -> &[RealHV] {
+        &self.items
+    }
+
+    /// Dot-product scores against every item.
+    pub fn scores(&self, query: &RealHV) -> Vec<f64> {
+        self.items.iter().map(|it| it.dot(query)).collect()
+    }
+
+    /// Nearest item by dot product.
+    pub fn nearest(&self, query: &RealHV) -> (usize, f64) {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for (i, it) in self.items.iter().enumerate() {
+            let s = it.dot(query);
+            if s > best.1 {
+                best = (i, s);
+            }
+        }
+        best
+    }
+
+    /// Probability-weighted bundle: PMF-to-VSA transform (NVSA).
+    pub fn weighted_bundle(&self, pmf: &[f64]) -> RealHV {
+        assert_eq!(pmf.len(), self.len());
+        let mut out = RealHV::zeros(self.dim);
+        for (w, item) in pmf.iter().zip(&self.items) {
+            let o = out.as_mut_slice();
+            let it = item.as_slice();
+            for i in 0..o.len() {
+                o[i] += (*w as f32) * it[i];
+            }
+        }
+        out
+    }
+
+    /// VSA-to-PMF transform: ReLU'd similarity, normalized (NVSA).
+    pub fn to_pmf(&self, query: &RealHV) -> Vec<f64> {
+        let mut scores: Vec<f64> = self
+            .scores(query)
+            .into_iter()
+            .map(|s| s.max(0.0))
+            .collect();
+        let total: f64 = scores.iter().sum();
+        if total > 1e-12 {
+            for s in &mut scores {
+                *s /= total;
+            }
+        }
+        scores
+    }
+
+    /// f32 storage bytes.
+    pub fn storage_bytes(&self) -> usize {
+        self.len() * self.dim * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_items_quasi_orthogonal() {
+        let mut rng = Rng::new(1);
+        let cb = BinaryCodebook::random(&mut rng, 16, 4096);
+        for i in 0..16 {
+            for j in 0..16 {
+                let cos = cb.item(i).cosine(cb.item(j));
+                if i == j {
+                    assert!((cos - 1.0).abs() < 1e-12);
+                } else {
+                    assert!(cos.abs() < 0.12, "items {i},{j} cos {cos}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_recovers_member() {
+        let mut rng = Rng::new(2);
+        let cb = BinaryCodebook::random(&mut rng, 64, 2048);
+        for probe in [0usize, 13, 63] {
+            let (idx, score) = cb.nearest(cb.item(probe));
+            assert_eq!(idx, probe);
+            assert_eq!(score, 2048);
+        }
+    }
+
+    #[test]
+    fn seed_roundtrip_preserves_fold0_and_determinism() {
+        let mut rng = Rng::new(3);
+        let cb = BinaryCodebook::from_seeds(
+            &(0..8)
+                .map(|_| (0..8).map(|_| rng.next_u64()).collect::<Vec<u64>>())
+                .collect::<Vec<_>>(),
+            4096,
+        );
+        let seeds = cb.seeds();
+        let cb2 = BinaryCodebook::from_seeds(&seeds, 4096);
+        for i in 0..8 {
+            assert_eq!(cb.item(i), cb2.item(i));
+        }
+    }
+
+    #[test]
+    fn compression_ratio() {
+        let mut rng = Rng::new(4);
+        let cb = BinaryCodebook::random(&mut rng, 32, 8192);
+        // 8192/512 = 16x compression from seed-only storage.
+        assert_eq!(cb.storage_bytes() / cb.compressed_bytes(), 16);
+    }
+
+    #[test]
+    fn real_nearest_recovers_member() {
+        let mut rng = Rng::new(5);
+        let cb = RealCodebook::random_bipolar(&mut rng, 32, 1024);
+        let (idx, _) = cb.nearest(cb.item(17));
+        assert_eq!(idx, 17);
+    }
+
+    #[test]
+    fn weighted_bundle_peaks_at_argmax() {
+        let mut rng = Rng::new(6);
+        let cb = RealCodebook::random_bipolar(&mut rng, 8, 2048);
+        let mut pmf = vec![0.02; 8];
+        pmf[3] = 0.86;
+        let v = cb.weighted_bundle(&pmf);
+        let back = cb.to_pmf(&v);
+        let argmax = back
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, 3);
+        assert!((back.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn to_pmf_of_orthogonal_query_is_spread() {
+        let mut rng = Rng::new(7);
+        let cb = RealCodebook::random_bipolar(&mut rng, 8, 2048);
+        let q = RealHV::random_bipolar(&mut rng, 2048);
+        let pmf = cb.to_pmf(&q);
+        assert!(pmf.iter().all(|&p| p < 0.9));
+    }
+}

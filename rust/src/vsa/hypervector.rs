@@ -1,0 +1,474 @@
+//! Hypervector types: bit-packed binary and real-valued (bipolar) vectors.
+
+use crate::util::Rng;
+
+/// Fold width in bits — matches the accelerator's 512-bit global bus
+/// (Tab. VI, `W`). A `D`-dimensional binary vector is `D / FOLD_BITS`
+/// folds; the accelerator streams one fold per pipeline pass.
+pub const FOLD_BITS: usize = 512;
+/// `u64` words per fold.
+pub const FOLD_WORDS: usize = FOLD_BITS / 64;
+
+/// Dense binary hypervector, bit-packed (LSB-first within each `u64`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BinaryHV {
+    dim: usize,
+    words: Vec<u64>,
+}
+
+impl BinaryHV {
+    /// All-zeros vector. `dim` must be a multiple of 64.
+    pub fn zeros(dim: usize) -> Self {
+        assert!(dim > 0 && dim % 64 == 0, "dim must be a positive multiple of 64");
+        BinaryHV {
+            dim,
+            words: vec![0u64; dim / 64],
+        }
+    }
+
+    /// Uniform random vector.
+    pub fn random(rng: &mut Rng, dim: usize) -> Self {
+        let mut hv = Self::zeros(dim);
+        for w in &mut hv.words {
+            *w = rng.next_u64();
+        }
+        hv
+    }
+
+    /// Build from raw words (must match dim/64).
+    pub fn from_words(dim: usize, words: Vec<u64>) -> Self {
+        assert_eq!(words.len(), dim / 64);
+        assert!(dim % 64 == 0);
+        BinaryHV { dim, words }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Number of 512-bit folds.
+    pub fn n_folds(&self) -> usize {
+        (self.dim + FOLD_BITS - 1) / FOLD_BITS
+    }
+
+    /// Borrow fold `k` as a word slice (last fold may be shorter).
+    pub fn fold(&self, k: usize) -> &[u64] {
+        let a = k * FOLD_WORDS;
+        let b = ((k + 1) * FOLD_WORDS).min(self.words.len());
+        &self.words[a..b]
+    }
+
+    /// Get bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.dim);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.dim);
+        let mask = 1u64 << (i % 64);
+        if v {
+            self.words[i / 64] |= mask;
+        } else {
+            self.words[i / 64] &= !mask;
+        }
+    }
+
+    /// XOR binding (self-inverse): the accelerator's BIND unit.
+    pub fn bind(&self, other: &BinaryHV) -> BinaryHV {
+        assert_eq!(self.dim, other.dim);
+        let words = self
+            .words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| a ^ b)
+            .collect();
+        BinaryHV {
+            dim: self.dim,
+            words,
+        }
+    }
+
+    /// In-place XOR binding (hot-path variant, no allocation).
+    pub fn bind_assign(&mut self, other: &BinaryHV) {
+        assert_eq!(self.dim, other.dim);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a ^= *b;
+        }
+    }
+
+    /// Hamming distance (POPCNT of XOR).
+    pub fn hamming(&self, other: &BinaryHV) -> u32 {
+        assert_eq!(self.dim, other.dim);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum()
+    }
+
+    /// Bipolar dot product equivalent: `dim - 2 * hamming` — the quantity
+    /// the accelerator's POPCNT unit computes ("difference between the
+    /// number of 1's and 0's in the difference vector").
+    pub fn dot(&self, other: &BinaryHV) -> i64 {
+        self.dim as i64 - 2 * self.hamming(other) as i64
+    }
+
+    /// Normalized similarity in [-1, 1].
+    pub fn cosine(&self, other: &BinaryHV) -> f64 {
+        self.dot(other) as f64 / self.dim as f64
+    }
+
+    /// Cyclic permutation by `shift` bit positions (rho^shift).
+    pub fn permute(&self, shift: i64) -> BinaryHV {
+        let d = self.dim as i64;
+        let s = ((shift % d) + d) % d;
+        if s == 0 {
+            return self.clone();
+        }
+        let mut out = BinaryHV::zeros(self.dim);
+        // Bit i of input goes to bit (i + s) mod d of output.
+        let word_shift = (s / 64) as usize;
+        let bit_shift = (s % 64) as u32;
+        let n = self.words.len();
+        for i in 0..n {
+            let lo = self.words[i];
+            let dst = (i + word_shift) % n;
+            if bit_shift == 0 {
+                out.words[dst] |= lo;
+            } else {
+                out.words[dst] |= lo << bit_shift;
+                out.words[(dst + 1) % n] |= lo >> (64 - bit_shift);
+            }
+        }
+        out
+    }
+
+    /// Count of set bits.
+    pub fn popcount(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Fraction of zero bits (sparsity in the characterization sense).
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.popcount() as f64 / self.dim as f64
+    }
+}
+
+/// Majority-vote bundling of binary hypervectors. Ties (even counts) break
+/// via a deterministic tie-break vector derived from `tie_seed`.
+pub fn majority(vs: &[&BinaryHV], tie_seed: u64) -> BinaryHV {
+    assert!(!vs.is_empty());
+    let dim = vs[0].dim();
+    let mut counts = vec![0u32; dim];
+    for v in vs {
+        assert_eq!(v.dim(), dim);
+        for i in 0..dim {
+            counts[i] += v.get(i) as u32;
+        }
+    }
+    let mut tie = Rng::new(tie_seed);
+    let half2 = vs.len() as u32; // compare 2*count against len
+    let mut out = BinaryHV::zeros(dim);
+    for i in 0..dim {
+        let twice = 2 * counts[i];
+        let bit = if twice > half2 {
+            true
+        } else if twice < half2 {
+            false
+        } else {
+            tie.next_u64() & 1 == 1
+        };
+        out.set(i, bit);
+    }
+    out
+}
+
+/// Real-valued hypervector (f32 storage), the L1/L2 representation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RealHV {
+    data: Vec<f32>,
+}
+
+impl RealHV {
+    pub fn zeros(dim: usize) -> Self {
+        RealHV {
+            data: vec![0.0; dim],
+        }
+    }
+
+    /// Random bipolar (+1/-1) vector.
+    pub fn random_bipolar(rng: &mut Rng, dim: usize) -> Self {
+        RealHV {
+            data: (0..dim).map(|_| rng.bipolar()).collect(),
+        }
+    }
+
+    /// Random unit-variance Gaussian vector scaled by 1/sqrt(D) (HRR init).
+    pub fn random_hrr(rng: &mut Rng, dim: usize) -> Self {
+        let scale = 1.0 / (dim as f64).sqrt();
+        RealHV {
+            data: (0..dim).map(|_| (rng.normal() * scale) as f32).collect(),
+        }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        RealHV { data }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Hadamard binding.
+    pub fn bind(&self, other: &RealHV) -> RealHV {
+        assert_eq!(self.dim(), other.dim());
+        RealHV {
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a * b)
+                .collect(),
+        }
+    }
+
+    /// Elementwise sum bundling.
+    pub fn add(&self, other: &RealHV) -> RealHV {
+        assert_eq!(self.dim(), other.dim());
+        RealHV {
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    /// In-place accumulate (bundling hot path).
+    pub fn add_assign(&mut self, other: &RealHV) {
+        assert_eq!(self.dim(), other.dim());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += *b;
+        }
+    }
+
+    /// Scalar multiplication (the accelerator's MULT unit).
+    pub fn scale(&self, w: f32) -> RealHV {
+        RealHV {
+            data: self.data.iter().map(|a| a * w).collect(),
+        }
+    }
+
+    /// Bipolarize: sign with +1 at zero (the accelerator's SGN unit).
+    pub fn sign(&self) -> RealHV {
+        RealHV {
+            data: self
+                .data
+                .iter()
+                .map(|&a| if a >= 0.0 { 1.0 } else { -1.0 })
+                .collect(),
+        }
+    }
+
+    /// Dot product.
+    pub fn dot(&self, other: &RealHV) -> f64 {
+        assert_eq!(self.dim(), other.dim());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum()
+    }
+
+    /// Cosine similarity.
+    pub fn cosine(&self, other: &RealHV) -> f64 {
+        let d = self.dot(other);
+        let na = self.dot(self).sqrt();
+        let nb = other.dot(other).sqrt();
+        if na == 0.0 || nb == 0.0 {
+            0.0
+        } else {
+            d / (na * nb)
+        }
+    }
+
+    /// Cyclic permutation by `shift` positions.
+    pub fn permute(&self, shift: i64) -> RealHV {
+        let d = self.dim() as i64;
+        let s = (((shift % d) + d) % d) as usize;
+        let mut data = Vec::with_capacity(self.dim());
+        data.extend_from_slice(&self.data[self.dim() - s..]);
+        data.extend_from_slice(&self.data[..self.dim() - s]);
+        RealHV { data }
+    }
+
+    /// Fraction of exact zeros.
+    pub fn sparsity(&self) -> f64 {
+        let zeros = self.data.iter().filter(|&&x| x == 0.0).count();
+        zeros as f64 / self.dim().max(1) as f64
+    }
+
+    /// Fraction of entries with |x| < eps (near-zero sparsity).
+    pub fn sparsity_eps(&self, eps: f32) -> f64 {
+        let zeros = self.data.iter().filter(|&&x| x.abs() < eps).count();
+        zeros as f64 / self.dim().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn binary_bind_self_inverse() {
+        forall(100, 30, |r| {
+            let d = 64 * (1 + r.below(16));
+            (BinaryHV::random(r, d), BinaryHV::random(r, d))
+        }, |(x, y)| x.bind(&x.bind(y)) == *y);
+    }
+
+    #[test]
+    fn binary_bind_quasi_orthogonal() {
+        let mut rng = Rng::new(1);
+        let x = BinaryHV::random(&mut rng, 8192);
+        let y = BinaryHV::random(&mut rng, 8192);
+        let z = x.bind(&y);
+        assert!(z.cosine(&x).abs() < 0.1);
+        assert!(z.cosine(&y).abs() < 0.1);
+    }
+
+    #[test]
+    fn binary_dot_identity() {
+        let mut rng = Rng::new(2);
+        let x = BinaryHV::random(&mut rng, 1024);
+        assert_eq!(x.dot(&x), 1024);
+        assert_eq!(x.hamming(&x), 0);
+    }
+
+    #[test]
+    fn binary_permute_roundtrip() {
+        forall(101, 30, |r| {
+            let d = 64 * (1 + r.below(8));
+            (BinaryHV::random(r, d), r.range(-200, 200))
+        }, |(x, s)| x.permute(*s).permute(-*s) == *x);
+    }
+
+    #[test]
+    fn binary_permute_matches_naive() {
+        let mut rng = Rng::new(3);
+        let x = BinaryHV::random(&mut rng, 128);
+        for shift in [1i64, 63, 64, 65, 127, 128] {
+            let fast = x.permute(shift);
+            let mut naive = BinaryHV::zeros(128);
+            for i in 0..128 {
+                naive.set(((i as i64 + shift) % 128) as usize, x.get(i));
+            }
+            assert_eq!(fast, naive, "shift {shift}");
+        }
+    }
+
+    #[test]
+    fn binary_permute_preserves_popcount() {
+        forall(102, 30, |r| {
+            let d = 64 * (1 + r.below(8));
+            (BinaryHV::random(r, d), r.range(0, 1000))
+        }, |(x, s)| x.permute(*s).popcount() == x.popcount());
+    }
+
+    #[test]
+    fn majority_similar_to_members() {
+        let mut rng = Rng::new(4);
+        let vs: Vec<BinaryHV> = (0..3).map(|_| BinaryHV::random(&mut rng, 4096)).collect();
+        let refs: Vec<&BinaryHV> = vs.iter().collect();
+        let m = majority(&refs, 7);
+        for v in &vs {
+            assert!(m.cosine(v) > 0.3, "cos {}", m.cosine(v));
+        }
+    }
+
+    #[test]
+    fn majority_of_one_is_identity() {
+        let mut rng = Rng::new(5);
+        let v = BinaryHV::random(&mut rng, 512);
+        assert_eq!(majority(&[&v], 0), v);
+    }
+
+    #[test]
+    fn real_bind_self_inverse_bipolar() {
+        let mut rng = Rng::new(6);
+        let x = RealHV::random_bipolar(&mut rng, 1024);
+        let y = RealHV::random_bipolar(&mut rng, 1024);
+        let z = x.bind(&x.bind(&y));
+        assert_eq!(z, y);
+    }
+
+    #[test]
+    fn real_sign_is_bipolar() {
+        let mut rng = Rng::new(7);
+        let x = RealHV::random_hrr(&mut rng, 512);
+        let s = x.sign();
+        assert!(s.as_slice().iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn real_permute_roundtrip() {
+        let mut rng = Rng::new(8);
+        let x = RealHV::random_hrr(&mut rng, 300);
+        assert_eq!(x.permute(17).permute(-17), x);
+        assert_eq!(x.permute(300), x);
+    }
+
+    #[test]
+    fn real_cosine_bounds() {
+        let mut rng = Rng::new(9);
+        let x = RealHV::random_bipolar(&mut rng, 2048);
+        let y = RealHV::random_bipolar(&mut rng, 2048);
+        assert!((x.cosine(&x) - 1.0).abs() < 1e-6);
+        assert!(x.cosine(&y).abs() < 0.12);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let v = RealHV::from_vec(vec![0.0, 1.0, 0.0, 2.0]);
+        assert!((v.sparsity() - 0.5).abs() < 1e-12);
+        let b = BinaryHV::zeros(128);
+        assert!((b.sparsity() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn folds_cover_vector() {
+        let mut rng = Rng::new(10);
+        let x = BinaryHV::random(&mut rng, 2048);
+        assert_eq!(x.n_folds(), 4);
+        let total: usize = (0..4).map(|k| x.fold(k).len()).sum();
+        assert_eq!(total, x.words().len());
+    }
+}

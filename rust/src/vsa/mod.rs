@@ -1,0 +1,28 @@
+//! Vector-Symbolic Architecture substrate (paper Sec. VI-A).
+//!
+//! Two hypervector families cover every workload in the paper:
+//!
+//! - [`BinaryHV`]: dense binary hypervectors, bit-packed into `u64` words.
+//!   Binding = XOR, bundling = integer majority, similarity = Hamming-based
+//!   dot product via POPCNT — exactly the arithmetic the paper's VSA
+//!   accelerator implements in its BIND/BND/POPCNT units, so the functional
+//!   simulator ([`crate::accel`]) is validated against these ops.
+//! - [`RealHV`]: real-valued (bipolar f32) hypervectors with Hadamard or
+//!   circular-convolution (HRR/NVSA) binding — the representation the L1
+//!   Pallas kernels compute on.
+//!
+//! On top of both: item-memory codebooks with CA-90 on-the-fly
+//! regeneration ([`ca90`]), cleanup/associative memory ([`cleanup`]), and
+//! the resonator-network factorizer ([`resonator`]).
+
+pub mod ca90;
+pub mod cleanup;
+pub mod codebook;
+pub mod hypervector;
+pub mod ops;
+pub mod resonator;
+
+pub use cleanup::CleanupMemory;
+pub use codebook::{BinaryCodebook, RealCodebook};
+pub use hypervector::{BinaryHV, RealHV};
+pub use resonator::{Resonator, ResonatorResult};

@@ -1,0 +1,197 @@
+//! Free-standing VSA algebra: circular convolution / correlation (HRR
+//! binding used by NVSA), batched similarity, and the kernel-calculus
+//! helpers mirroring the paper's sub-functions a/b/c/d/e (Sec. VI-B).
+
+use super::hypervector::RealHV;
+
+/// Circular convolution binding: `z[i] = sum_j x[j] * y[(i - j) mod D]`.
+///
+/// Direct O(D^2) evaluation — the Rust engine runs modest D (≤ 2048); the
+/// L1 Pallas kernel performs the same contraction as a circulant matmul.
+pub fn circular_conv(x: &RealHV, y: &RealHV) -> RealHV {
+    let d = x.dim();
+    assert_eq!(d, y.dim());
+    let xs = x.as_slice();
+    let ys = y.as_slice();
+    let mut out = vec![0.0f32; d];
+    for (j, &xj) in xs.iter().enumerate() {
+        if xj == 0.0 {
+            continue;
+        }
+        // z[i] += x[j] * y[i - j mod d]; iterate i-j = k → i = j + k.
+        let (head, tail) = ys.split_at(d - j);
+        // i from j..d uses y[0..d-j]
+        for (k, &yk) in head.iter().enumerate() {
+            out[j + k] += xj * yk;
+        }
+        // i from 0..j uses y[d-j..d]
+        for (k, &yk) in tail.iter().enumerate() {
+            out[k] += xj * yk;
+        }
+    }
+    RealHV::from_vec(out)
+}
+
+/// Circular correlation (approximate unbinding of [`circular_conv`]):
+/// `z[i] = sum_j x[j] * y[(j + i) mod D]`.
+pub fn circular_corr(x: &RealHV, y: &RealHV) -> RealHV {
+    let d = x.dim();
+    assert_eq!(d, y.dim());
+    let xs = x.as_slice();
+    let ys = y.as_slice();
+    let mut out = vec![0.0f32; d];
+    for i in 0..d {
+        let mut acc = 0.0f32;
+        for j in 0..d {
+            let idx = j + i;
+            let idx = if idx >= d { idx - d } else { idx };
+            acc += xs[j] * ys[idx];
+        }
+        out[i] = acc;
+    }
+    RealHV::from_vec(out)
+}
+
+/// Bundle (sum) a slice of hypervectors: paper's `a(y, (1, s2))`.
+pub fn bundle(vs: &[&RealHV]) -> RealHV {
+    assert!(!vs.is_empty());
+    let mut out = RealHV::zeros(vs[0].dim());
+    for v in vs {
+        out.add_assign(v);
+    }
+    out
+}
+
+/// Bind a sequence with Hadamard products: paper's `b(y, (s2=1))`.
+pub fn bind_all(vs: &[&RealHV]) -> RealHV {
+    assert!(!vs.is_empty());
+    let mut out = vs[0].clone();
+    for v in &vs[1..] {
+        out = out.bind(v);
+    }
+    out
+}
+
+/// Positional binding: `x_1 (*) rho(x_2) (*) rho^2(x_3) ...` — paper's
+/// `b(y, (s2=3))`, preserving sequence order.
+pub fn bind_positional(vs: &[&RealHV]) -> RealHV {
+    assert!(!vs.is_empty());
+    let mut out = vs[0].clone();
+    for (j, v) in vs.iter().enumerate().skip(1) {
+        out = out.bind(&v.permute(j as i64));
+    }
+    out
+}
+
+/// Weighted sum c(y) = sum_i n_i * y_i — the resonator projection kernel.
+pub fn weighted_sum(weights: &[f32], vs: &[&RealHV]) -> RealHV {
+    assert_eq!(weights.len(), vs.len());
+    assert!(!vs.is_empty());
+    let d = vs[0].dim();
+    let mut out = vec![0.0f32; d];
+    for (w, v) in weights.iter().zip(vs) {
+        if *w == 0.0 {
+            continue;
+        }
+        for (o, x) in out.iter_mut().zip(v.as_slice()) {
+            *o += w * x;
+        }
+    }
+    RealHV::from_vec(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_res;
+    use crate::util::Rng;
+
+    fn naive_cconv(x: &[f32], y: &[f32]) -> Vec<f32> {
+        let d = x.len();
+        (0..d)
+            .map(|i| {
+                (0..d)
+                    .map(|j| x[j] * y[(i + d - j % d + d - (j / d)) % d.max(1)])
+                    .sum()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cconv_matches_naive() {
+        // direct triple-checked naive: z[i] = sum_j x[j] y[(i-j) mod d]
+        forall_res(300, 20, |r| {
+            let d = 16 + r.below(48);
+            let x: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+            let y: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+            (x, y)
+        }, |(x, y)| {
+            let d = x.len();
+            let fast = circular_conv(&RealHV::from_vec(x.clone()), &RealHV::from_vec(y.clone()));
+            for i in 0..d {
+                let mut acc = 0.0f64;
+                for j in 0..d {
+                    acc += x[j] as f64 * y[(i + d - j) % d] as f64;
+                }
+                if (fast.as_slice()[i] as f64 - acc).abs() > 1e-3 {
+                    return Err(format!("i={i}: {} vs {}", fast.as_slice()[i], acc));
+                }
+            }
+            Ok(())
+        });
+        let _ = naive_cconv(&[1.0], &[1.0]);
+    }
+
+    #[test]
+    fn cconv_commutative() {
+        let mut rng = Rng::new(1);
+        let x = RealHV::random_hrr(&mut rng, 256);
+        let y = RealHV::random_hrr(&mut rng, 256);
+        let a = circular_conv(&x, &y);
+        let b = circular_conv(&y, &x);
+        for (u, v) in a.as_slice().iter().zip(b.as_slice()) {
+            assert!((u - v).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn ccorr_unbinds_cconv() {
+        let mut rng = Rng::new(2);
+        let x = RealHV::random_hrr(&mut rng, 1024);
+        let y = RealHV::random_hrr(&mut rng, 1024);
+        let z = circular_conv(&x, &y);
+        let y_hat = circular_corr(&x, &z);
+        assert!(y_hat.cosine(&y) > 0.5, "cos {}", y_hat.cosine(&y));
+    }
+
+    #[test]
+    fn bundle_preserves_members() {
+        let mut rng = Rng::new(3);
+        let vs: Vec<RealHV> = (0..4).map(|_| RealHV::random_bipolar(&mut rng, 2048)).collect();
+        let refs: Vec<&RealHV> = vs.iter().collect();
+        let s = bundle(&refs).sign();
+        for v in &vs {
+            assert!(s.cosine(v) > 0.25);
+        }
+    }
+
+    #[test]
+    fn bind_positional_order_sensitive() {
+        let mut rng = Rng::new(4);
+        let a = RealHV::random_bipolar(&mut rng, 2048);
+        let b = RealHV::random_bipolar(&mut rng, 2048);
+        let ab = bind_positional(&[&a, &b]);
+        let ba = bind_positional(&[&b, &a]);
+        assert!(ab.cosine(&ba).abs() < 0.1, "order must matter");
+        // while plain binding is commutative:
+        assert!((bind_all(&[&a, &b]).cosine(&bind_all(&[&b, &a])) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_sum_matches_manual() {
+        let a = RealHV::from_vec(vec![1.0, 2.0]);
+        let b = RealHV::from_vec(vec![-1.0, 0.5]);
+        let out = weighted_sum(&[2.0, 3.0], &[&a, &b]);
+        assert_eq!(out.as_slice(), &[-1.0, 5.5]);
+    }
+}

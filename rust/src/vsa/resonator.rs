@@ -1,0 +1,204 @@
+//! Resonator network (Frady et al. [54]): factorize a composed hypervector
+//! `s = a (*) b (*) c ...` into its constituent codebook items by iterated
+//! unbind → similarity → weighted-bundle projection → bipolarize.
+//!
+//! This is the paper's FACT workload and its Resonator-Network kernel
+//! (Sec. VI-B): each iteration per factor evaluates
+//! `x_hat = s (*) prod(other estimates)`, `n = d(A_i, x_hat)` and
+//! `a_new = sign(c(A, n))`.
+
+use super::codebook::RealCodebook;
+use super::hypervector::RealHV;
+use super::ops;
+
+/// Result of a resonator run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResonatorResult {
+    /// Decoded codebook index per factor.
+    pub indices: Vec<usize>,
+    /// Iterations executed (≤ max_iters).
+    pub iterations: usize,
+    /// Whether estimates stopped changing before `max_iters`.
+    pub converged: bool,
+}
+
+/// Resonator network over bipolar codebooks with Hadamard binding.
+#[derive(Debug, Clone)]
+pub struct Resonator {
+    codebooks: Vec<RealCodebook>,
+    max_iters: usize,
+}
+
+impl Resonator {
+    /// `codebooks[f]` holds the candidate items for factor `f`.
+    pub fn new(codebooks: Vec<RealCodebook>, max_iters: usize) -> Self {
+        assert!(codebooks.len() >= 2, "need at least two factors");
+        let d = codebooks[0].dim();
+        assert!(codebooks.iter().all(|cb| cb.dim() == d));
+        Resonator {
+            codebooks,
+            max_iters,
+        }
+    }
+
+    pub fn n_factors(&self) -> usize {
+        self.codebooks.len()
+    }
+
+    pub fn codebooks(&self) -> &[RealCodebook] {
+        &self.codebooks
+    }
+
+    /// Initial estimate per factor: bipolarized bundle of the whole
+    /// codebook (maximum superposition — no prior).
+    pub fn init_estimates(&self) -> Vec<RealHV> {
+        self.codebooks
+            .iter()
+            .map(|cb| {
+                let refs: Vec<&RealHV> = cb.items().iter().collect();
+                ops::bundle(&refs).sign()
+            })
+            .collect()
+    }
+
+    /// One synchronous sweep: update every factor from the others'
+    /// current estimates. Returns scores per factor.
+    pub fn sweep(&self, scene: &RealHV, estimates: &mut [RealHV]) -> Vec<Vec<f64>> {
+        let f = self.n_factors();
+        let mut all_scores = Vec::with_capacity(f);
+        let snapshot: Vec<RealHV> = estimates.to_vec();
+        for i in 0..f {
+            // x_hat = scene (*) prod_{j != i} est_j   (Hadamard unbind)
+            let mut x_hat = scene.clone();
+            for (j, est) in snapshot.iter().enumerate() {
+                if j != i {
+                    x_hat = x_hat.bind(est);
+                }
+            }
+            // similarity -> weighted bundle -> sign
+            let cb = &self.codebooks[i];
+            let scores = cb.scores(&x_hat);
+            let weights: Vec<f32> = scores.iter().map(|&s| s as f32).collect();
+            let items: Vec<&RealHV> = cb.items().iter().collect();
+            estimates[i] = ops::weighted_sum(&weights, &items).sign();
+            all_scores.push(scores);
+        }
+        all_scores
+    }
+
+    /// Run to convergence (estimates fixed point) or `max_iters`.
+    pub fn factorize(&self, scene: &RealHV) -> ResonatorResult {
+        let mut estimates = self.init_estimates();
+        let mut converged = false;
+        let mut iterations = 0;
+        for it in 0..self.max_iters {
+            let prev = estimates.clone();
+            self.sweep(scene, &mut estimates);
+            iterations = it + 1;
+            if estimates == prev {
+                converged = true;
+                break;
+            }
+        }
+        let indices = estimates
+            .iter()
+            .zip(&self.codebooks)
+            .map(|(est, cb)| cb.nearest(est).0)
+            .collect();
+        ResonatorResult {
+            indices,
+            iterations,
+            converged,
+        }
+    }
+
+    /// Compose a scene from given item indices (testing / workload gen).
+    pub fn compose(&self, indices: &[usize]) -> RealHV {
+        assert_eq!(indices.len(), self.n_factors());
+        let items: Vec<&RealHV> = indices
+            .iter()
+            .zip(&self.codebooks)
+            .map(|(&i, cb)| cb.item(i))
+            .collect();
+        ops::bind_all(&items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn make(n_factors: usize, n_items: usize, dim: usize, seed: u64) -> Resonator {
+        let mut rng = Rng::new(seed);
+        let cbs = (0..n_factors)
+            .map(|_| RealCodebook::random_bipolar(&mut rng, n_items, dim))
+            .collect();
+        Resonator::new(cbs, 60)
+    }
+
+    #[test]
+    fn factorizes_exact_composition() {
+        let r = make(3, 8, 1024, 1);
+        let truth = vec![2, 5, 1];
+        let scene = r.compose(&truth);
+        let out = r.factorize(&scene);
+        assert_eq!(out.indices, truth);
+        assert!(out.converged, "should converge in 60 iters");
+    }
+
+    #[test]
+    fn factorizes_many_random_instances() {
+        let r = make(3, 10, 2048, 2);
+        let mut rng = Rng::new(3);
+        let mut correct = 0;
+        for _ in 0..10 {
+            let truth: Vec<usize> = (0..3).map(|_| rng.below(10)).collect();
+            let out = r.factorize(&r.compose(&truth));
+            if out.indices == truth {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 9, "only {correct}/10 factorizations correct");
+    }
+
+    #[test]
+    fn two_factor_problem() {
+        let r = make(2, 13, 1024, 4);
+        let truth = vec![12, 0];
+        let out = r.factorize(&r.compose(&truth));
+        assert_eq!(out.indices, truth);
+    }
+
+    #[test]
+    fn four_factor_problem_larger_dim() {
+        let r = make(4, 5, 4096, 5);
+        let truth = vec![4, 2, 0, 3];
+        let out = r.factorize(&r.compose(&truth));
+        assert_eq!(out.indices, truth);
+    }
+
+    #[test]
+    fn noisy_scene_still_factorizes() {
+        let r = make(3, 8, 2048, 6);
+        let truth = vec![7, 3, 3];
+        let mut scene = r.compose(&truth);
+        let mut rng = Rng::new(7);
+        // flip 10% of signs
+        for i in rng.sample_indices(2048, 204) {
+            scene.as_mut_slice()[i] = -scene.as_mut_slice()[i];
+        }
+        let out = r.factorize(&scene);
+        assert_eq!(out.indices, truth);
+    }
+
+    #[test]
+    fn iterations_bounded() {
+        let r = make(3, 8, 512, 8);
+        let mut rng = Rng::new(9);
+        let noise = RealHV::random_bipolar(&mut rng, 512);
+        let out = r.factorize(&noise); // garbage input: may not converge
+        assert!(out.iterations <= 60);
+        assert_eq!(out.indices.len(), 3);
+    }
+}

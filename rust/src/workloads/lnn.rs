@@ -1,0 +1,423 @@
+//! LNN — Logical Neural Networks (Riegel et al. [23]): weighted real-
+//! valued logic over a formula syntax tree with truth *bounds* [L, U]
+//! per node, inferred by iterated upward (evaluation) and downward
+//! (backward bound-tightening) passes of Łukasiewicz logic — the paper's
+//! bidirectional-dataflow, data-movement-bound workload.
+
+use super::Workload;
+use crate::profiler::memstat::MemoryStats;
+use crate::profiler::taxonomy::{OpCategory, PhaseKind};
+use crate::profiler::trace::Trace;
+use crate::util::Rng;
+
+/// Formula tree node.
+#[derive(Debug, Clone)]
+pub enum Node {
+    /// Leaf proposition with initial bounds.
+    Prop { lower: f64, upper: f64 },
+    /// Weighted Łukasiewicz conjunction.
+    And(Vec<usize>),
+    /// Weighted Łukasiewicz disjunction.
+    Or(Vec<usize>),
+    Not(usize),
+    /// Implication lhs → rhs.
+    Implies(usize, usize),
+}
+
+/// A logical neural network: nodes in topological order (children before
+/// parents) with per-node truth bounds.
+#[derive(Debug, Clone)]
+pub struct LnnGraph {
+    pub nodes: Vec<Node>,
+    pub bounds: Vec<(f64, f64)>,
+}
+
+fn clamp01(x: f64) -> f64 {
+    x.clamp(0.0, 1.0)
+}
+
+impl LnnGraph {
+    pub fn new(nodes: Vec<Node>) -> Self {
+        let bounds = nodes
+            .iter()
+            .map(|n| match n {
+                Node::Prop { lower, upper } => (*lower, *upper),
+                _ => (0.0, 1.0),
+            })
+            .collect();
+        LnnGraph { nodes, bounds }
+    }
+
+    /// One upward pass: recompute parent bounds from children
+    /// (Łukasiewicz t-norms on interval arithmetic). Returns the largest
+    /// bound change.
+    pub fn upward(&mut self) -> f64 {
+        let mut delta: f64 = 0.0;
+        for i in 0..self.nodes.len() {
+            let nb = match &self.nodes[i] {
+                Node::Prop { .. } => self.bounds[i],
+                Node::And(cs) => {
+                    let l = clamp01(
+                        cs.iter().map(|&c| self.bounds[c].0).sum::<f64>()
+                            - (cs.len() as f64 - 1.0),
+                    );
+                    let u = clamp01(
+                        cs.iter().map(|&c| self.bounds[c].1).sum::<f64>()
+                            - (cs.len() as f64 - 1.0),
+                    );
+                    (l, u)
+                }
+                Node::Or(cs) => {
+                    let l = clamp01(cs.iter().map(|&c| self.bounds[c].0).sum::<f64>());
+                    let u = clamp01(cs.iter().map(|&c| self.bounds[c].1).sum::<f64>());
+                    (l, u)
+                }
+                Node::Not(c) => (1.0 - self.bounds[*c].1, 1.0 - self.bounds[*c].0),
+                Node::Implies(a, b) => {
+                    // a→b ≡ min(1, 1 - L_a + U_b) style Łukasiewicz
+                    let l = clamp01(1.0 - self.bounds[*a].1 + self.bounds[*b].0);
+                    let u = clamp01(1.0 - self.bounds[*a].0 + self.bounds[*b].1);
+                    (l, u)
+                }
+            };
+            // bounds only tighten (monotone inference)
+            let tightened = (nb.0.max(self.bounds[i].0), nb.1.min(self.bounds[i].1));
+            let nb = if tightened.0 <= tightened.1 {
+                tightened
+            } else {
+                nb // inconsistency: keep raw (caller can detect)
+            };
+            delta = delta
+                .max((nb.0 - self.bounds[i].0).abs())
+                .max((nb.1 - self.bounds[i].1).abs());
+            self.bounds[i] = nb;
+        }
+        delta
+    }
+
+    /// One downward pass: propagate implication heads back to tighten
+    /// antecedent/consequent bounds (modus ponens / tollens).
+    pub fn downward(&mut self) -> f64 {
+        let mut delta: f64 = 0.0;
+        for i in (0..self.nodes.len()).rev() {
+            if let Node::Implies(a, b) = self.nodes[i] {
+                let (l_i, _) = self.bounds[i];
+                let (l_a, u_a) = self.bounds[a];
+                let (l_b, u_b) = self.bounds[b];
+                // if implication is known true and antecedent true, the
+                // consequent's lower bound rises: L_b ≥ L_a + L_i - 1.
+                let new_lb = clamp01(l_a + l_i - 1.0).max(l_b);
+                // modus tollens: U_a ≤ 1 - L_i + U_b
+                let new_ua = clamp01(1.0 - l_i + u_b).min(u_a);
+                delta = delta.max(new_lb - l_b).max(u_a - new_ua);
+                self.bounds[b].0 = new_lb;
+                self.bounds[a].1 = new_ua;
+            }
+        }
+        delta
+    }
+
+    /// Run inference to convergence; returns pass count.
+    pub fn infer(&mut self, max_passes: usize, tol: f64) -> usize {
+        for p in 0..max_passes {
+            let d = self.upward() + self.downward();
+            if d < tol {
+                return p + 1;
+            }
+        }
+        max_passes
+    }
+
+    /// Whether any node's bounds crossed (contradiction).
+    pub fn contradiction(&self) -> bool {
+        self.bounds.iter().any(|&(l, u)| l > u + 1e-9)
+    }
+}
+
+/// Generate a synthetic knowledge base: implication chains over
+/// propositions (substitutes LUBM/TPTP — see DESIGN.md).
+pub fn synthetic_kb(rng: &mut Rng, n_props: usize, n_rules: usize) -> LnnGraph {
+    let mut nodes: Vec<Node> = (0..n_props)
+        .map(|_| {
+            if rng.chance(0.3) {
+                Node::Prop {
+                    lower: 1.0,
+                    upper: 1.0,
+                } // known fact
+            } else {
+                Node::Prop {
+                    lower: 0.0,
+                    upper: 1.0,
+                } // unknown
+            }
+        })
+        .collect();
+    for _ in 0..n_rules {
+        let body_n = 1 + rng.below(3);
+        let body: Vec<usize> = (0..body_n).map(|_| rng.below(n_props)).collect();
+        let head = rng.below(n_props);
+        let and = if body.len() > 1 {
+            nodes.push(Node::And(body));
+            nodes.len() - 1
+        } else {
+            body[0]
+        };
+        nodes.push(Node::Implies(and, head));
+        let idx = nodes.len() - 1;
+        // assert the rule as true knowledge
+        if let Node::Implies(..) = nodes[idx] {}
+    }
+    let mut g = LnnGraph::new(nodes);
+    // rules are axioms: set their bounds to [1,1]
+    for (i, n) in g.nodes.iter().enumerate() {
+        if matches!(n, Node::Implies(..)) {
+            g.bounds[i] = (1.0, 1.0);
+        }
+    }
+    g
+}
+
+/// LNN workload descriptor.
+#[derive(Debug, Clone)]
+pub struct Lnn {
+    pub n_props: usize,
+    pub n_rules: usize,
+    pub passes: usize,
+}
+
+impl Default for Lnn {
+    fn default() -> Self {
+        Lnn {
+            n_props: 256,
+            n_rules: 384,
+            passes: 6,
+        }
+    }
+}
+
+impl Workload for Lnn {
+    fn name(&self) -> &'static str {
+        "LNN"
+    }
+
+    fn ns_category(&self) -> &'static str {
+        "Neuro:Symbolic→Neuro"
+    }
+
+    fn trace(&self) -> Trace {
+        let mut tr = Trace::new("LNN");
+        let p = self.n_props as u64;
+        let r = self.n_rules as u64;
+        // ---- neural: predicate grounding MLP over entity features ------
+        let b = 32u64;
+        let g1 = tr.add(
+            "ground_mlp1",
+            OpCategory::MatMul,
+            PhaseKind::Neural,
+            2 * b * 16 * 32 * p / 8,
+            (b * 16 + 16 * 32) * 4 * p / 8,
+            b * 32 * 4,
+            &[],
+        );
+        let g2 = tr.add(
+            "ground_mlp2",
+            OpCategory::MatMul,
+            PhaseKind::Neural,
+            2 * b * 32 * 2 * p / 8,
+            b * 32 * 4 * p / 8,
+            b * 2 * 4,
+            &[g1],
+        );
+        // sparse syntax-tree embedding ops (paper: vector/elementwise
+        // heavy + bidirectional data movement)
+        let emb = tr.add(
+            "tree_embed",
+            OpCategory::VectorElem,
+            PhaseKind::Neural,
+            (p + r) * 64,
+            (p + r) * 64 * 8,
+            (p + r) * 64 * 4,
+            &[g2],
+        );
+        let mv = tr.add(
+            "bounds_h2d",
+            OpCategory::DataMovement,
+            PhaseKind::Neural,
+            0,
+            (p + r) * 16,
+            (p + r) * 16,
+            &[emb],
+        );
+        // ---- bidirectional bound inference -------------------------------
+        // LNN's network *is* the formula tree: each pass evaluates the
+        // parameterized neuron activations (neural: weighted Łukasiewicz
+        // connectives as vector ops, plus the unique bidirectional
+        // dataflow's gather/scatter), then applies the logical rule
+        // semantics (symbolic). The paper measures the split near 55/45.
+        let mut last = mv;
+        for pass in 0..self.passes as u64 {
+            let neuron_up = tr.add(
+                format!("neuron_eval_up{pass}"),
+                OpCategory::VectorElem,
+                PhaseKind::Neural,
+                (p + 3 * r) * 8,
+                (p + 3 * r) * 24,
+                (p + 3 * r) * 16,
+                &[last],
+            );
+            let gather = tr.add(
+                "bounds_gather",
+                OpCategory::DataMovement,
+                PhaseKind::Neural,
+                0,
+                (p + 3 * r) * 16,
+                (p + 3 * r) * 16,
+                &[neuron_up],
+            );
+            let up = tr.add(
+                format!("upward_logic{pass}"),
+                OpCategory::VectorElem,
+                PhaseKind::Symbolic,
+                (p + 3 * r) * 6,
+                (p + 3 * r) * 16,
+                (p + 3 * r) * 16,
+                &[gather],
+            );
+            let neuron_down = tr.add(
+                format!("neuron_eval_down{pass}"),
+                OpCategory::VectorElem,
+                PhaseKind::Neural,
+                r * 10,
+                r * 48,
+                r * 32,
+                &[up],
+            );
+            // the backward bound scatter is symbolic bookkeeping — this
+            // irregular movement is why LNN (symbolic) is data-movement
+            // bound in the paper's Fig. 3a
+            let scatter = tr.add(
+                "bounds_scatter",
+                OpCategory::DataMovement,
+                PhaseKind::Symbolic,
+                0,
+                r * 32,
+                r * 32,
+                &[neuron_down],
+            );
+            let down = tr.add(
+                format!("downward_logic{pass}"),
+                OpCategory::VectorElem,
+                PhaseKind::Symbolic,
+                r * 8,
+                r * 48,
+                r * 32,
+                &[scatter],
+            );
+            let logic = tr.add(
+                format!("rule_eval{pass}"),
+                OpCategory::Other,
+                PhaseKind::Symbolic,
+                r * 4,
+                r * 24,
+                r * 8,
+                &[down],
+            );
+            tr.set_sparsity(up, 0.92);
+            tr.set_sparsity(down, 0.92);
+            last = logic;
+        }
+        tr
+    }
+
+    fn memory(&self) -> MemoryStats {
+        let p = self.n_props as u64;
+        let r = self.n_rules as u64;
+        MemoryStats {
+            weights_bytes: (16 * 32 + 32 * 2) * 4 * p / 8,
+            codebook_bytes: (p + 3 * r) * 64, // KB: syntax tree + rule params
+            neural_working_bytes: 32 * 32 * 4,
+            symbolic_working_bytes: (p + 3 * r) * 16 * 2,
+        }
+    }
+
+    fn symbolic_depends_on_neural(&self) -> bool {
+        false // symbolic knowledge is compiled into the network structure
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modus_ponens() {
+        // A=true, A→B  ⊢  B=true
+        let mut g = LnnGraph::new(vec![
+            Node::Prop { lower: 1.0, upper: 1.0 },
+            Node::Prop { lower: 0.0, upper: 1.0 },
+            Node::Implies(0, 1),
+        ]);
+        g.bounds[2] = (1.0, 1.0);
+        g.infer(10, 1e-9);
+        assert!(g.bounds[1].0 > 0.99, "B lower bound {:?}", g.bounds[1]);
+        assert!(!g.contradiction());
+    }
+
+    #[test]
+    fn modus_tollens() {
+        // B=false, A→B  ⊢  A=false
+        let mut g = LnnGraph::new(vec![
+            Node::Prop { lower: 0.0, upper: 1.0 },
+            Node::Prop { lower: 0.0, upper: 0.0 },
+            Node::Implies(0, 1),
+        ]);
+        g.bounds[2] = (1.0, 1.0);
+        g.infer(10, 1e-9);
+        assert!(g.bounds[0].1 < 0.01, "A upper bound {:?}", g.bounds[0]);
+    }
+
+    #[test]
+    fn chained_inference_propagates() {
+        // A, A→B, B→C  ⊢  C
+        let mut g = LnnGraph::new(vec![
+            Node::Prop { lower: 1.0, upper: 1.0 },
+            Node::Prop { lower: 0.0, upper: 1.0 },
+            Node::Prop { lower: 0.0, upper: 1.0 },
+            Node::Implies(0, 1),
+            Node::Implies(1, 2),
+        ]);
+        g.bounds[3] = (1.0, 1.0);
+        g.bounds[4] = (1.0, 1.0);
+        let passes = g.infer(20, 1e-9);
+        assert!(g.bounds[2].0 > 0.99, "C {:?}", g.bounds[2]);
+        assert!(passes >= 2, "chain needs multiple bidirectional passes");
+    }
+
+    #[test]
+    fn and_bounds_lukasiewicz() {
+        let mut g = LnnGraph::new(vec![
+            Node::Prop { lower: 0.8, upper: 0.8 },
+            Node::Prop { lower: 0.7, upper: 0.7 },
+            Node::And(vec![0, 1]),
+        ]);
+        g.upward();
+        let (l, u) = g.bounds[2];
+        assert!((l - 0.5).abs() < 1e-9 && (u - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn synthetic_kb_inference_converges() {
+        let mut rng = Rng::new(3);
+        let mut g = synthetic_kb(&mut rng, 128, 200);
+        let passes = g.infer(50, 1e-9);
+        assert!(passes < 50, "should converge, took {passes}");
+        // facts should have propagated: some unknown props now bounded
+        let derived = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, n)| matches!(n, Node::Prop { lower, .. } if *lower == 0.0) && g.bounds[*i].0 > 0.5)
+            .count();
+        assert!(derived > 0, "no derivations happened");
+    }
+}

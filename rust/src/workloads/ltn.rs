@@ -1,0 +1,316 @@
+//! LTN — Logic Tensor Networks (Badreddine et al. [26]): fuzzy first-order
+//! logic grounded in tensors.  The neural phase (MLP predicate grounding)
+//! runs as the `ltn_grounding` HLO artifact; the symbolic phase evaluates
+//! fuzzy connectives and quantifier aggregations over the grounded truth
+//! degrees (product t-norm / pMeanError, as in the reference
+//! implementation).
+
+use super::Workload;
+use crate::profiler::memstat::MemoryStats;
+use crate::profiler::taxonomy::{OpCategory, PhaseKind};
+use crate::profiler::trace::Trace;
+
+/// Fuzzy-logic operators (product real logic).
+pub mod fuzzy {
+    /// t-norm (AND).
+    pub fn and(a: f64, b: f64) -> f64 {
+        a * b
+    }
+
+    /// t-conorm (OR).
+    pub fn or(a: f64, b: f64) -> f64 {
+        a + b - a * b
+    }
+
+    pub fn not(a: f64) -> f64 {
+        1.0 - a
+    }
+
+    /// Reichenbach implication.
+    pub fn implies(a: f64, b: f64) -> f64 {
+        1.0 - a + a * b
+    }
+
+    /// `forall` as pMeanError aggregation (p=2): 1 - mean((1-x)^p)^(1/p).
+    pub fn forall(xs: &[f64], p: f64) -> f64 {
+        if xs.is_empty() {
+            return 1.0;
+        }
+        let m = xs.iter().map(|x| (1.0 - x).powf(p)).sum::<f64>() / xs.len() as f64;
+        1.0 - m.powf(1.0 / p)
+    }
+
+    /// `exists` as pMean aggregation.
+    pub fn exists(xs: &[f64], p: f64) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        (xs.iter().map(|x| x.powf(p)).sum::<f64>() / xs.len() as f64).powf(1.0 / p)
+    }
+}
+
+/// An axiom over grounded predicate truth tables.
+#[derive(Debug, Clone)]
+pub enum Axiom {
+    /// ∀x: P(x) → Q(x)
+    ForallImplies { p: usize, q: usize },
+    /// ∀x: ¬(P(x) ∧ Q(x))   (mutual exclusion)
+    ForallNand { p: usize, q: usize },
+    /// ∃x: P(x)
+    Exists { p: usize },
+}
+
+/// Knowledge-base satisfaction over a batch of groundings.
+/// `truth[s][p]` = degree of predicate `p` on sample `s`.
+pub fn satisfaction(truth: &[Vec<f64>], axioms: &[Axiom], p_agg: f64) -> f64 {
+    let per_axiom: Vec<f64> = axioms
+        .iter()
+        .map(|ax| match ax {
+            Axiom::ForallImplies { p, q } => {
+                let vals: Vec<f64> = truth
+                    .iter()
+                    .map(|t| fuzzy::implies(t[*p], t[*q]))
+                    .collect();
+                fuzzy::forall(&vals, p_agg)
+            }
+            Axiom::ForallNand { p, q } => {
+                let vals: Vec<f64> = truth
+                    .iter()
+                    .map(|t| fuzzy::not(fuzzy::and(t[*p], t[*q])))
+                    .collect();
+                fuzzy::forall(&vals, p_agg)
+            }
+            Axiom::Exists { p } => {
+                let vals: Vec<f64> = truth.iter().map(|t| t[*p]).collect();
+                fuzzy::exists(&vals, p_agg)
+            }
+        })
+        .collect();
+    fuzzy::forall(&per_axiom, p_agg)
+}
+
+/// LTN workload (crabs-style tabular querying task).
+#[derive(Debug, Clone)]
+pub struct Ltn {
+    /// Grounding batch size.
+    pub batch: usize,
+    /// Predicate count.
+    pub predicates: usize,
+    /// Axiom count.
+    pub axioms: usize,
+    /// Query batches per characterization run.
+    pub queries: usize,
+}
+
+impl Default for Ltn {
+    fn default() -> Self {
+        Ltn {
+            batch: 512,
+            predicates: 6,
+            axioms: 24,
+            queries: 16,
+        }
+    }
+}
+
+impl Workload for Ltn {
+    fn name(&self) -> &'static str {
+        "LTN"
+    }
+
+    fn ns_category(&self) -> &'static str {
+        "Neuro→Symbolic"
+    }
+
+    fn trace(&self) -> Trace {
+        let mut tr = Trace::new("LTN");
+        let b = self.batch as u64;
+        let p = self.predicates as u64;
+        for _ in 0..self.queries {
+            // ---- neural: MLP grounding (heavy MatMul, the paper's note) -
+            let m1 = tr.add(
+                "mlp1",
+                OpCategory::MatMul,
+                PhaseKind::Neural,
+                2 * b * 8 * 64,
+                (b * 8 + 8 * 64) * 4,
+                b * 64 * 4,
+                &[],
+            );
+            let e1 = tr.add(
+                "elu1",
+                OpCategory::VectorElem,
+                PhaseKind::Neural,
+                b * 64 * 4,
+                b * 64 * 8,
+                0,
+                &[m1],
+            );
+            let m2 = tr.add(
+                "mlp2",
+                OpCategory::MatMul,
+                PhaseKind::Neural,
+                2 * b * 64 * 64,
+                (b * 64 + 64 * 64) * 4,
+                b * 64 * 4,
+                &[e1],
+            );
+            let m3 = tr.add(
+                "mlp_head",
+                OpCategory::MatMul,
+                PhaseKind::Neural,
+                2 * b * 64 * p,
+                b * 64 * 4,
+                b * p * 4,
+                &[m2],
+            );
+            let sig = tr.add(
+                "sigmoid",
+                OpCategory::VectorElem,
+                PhaseKind::Neural,
+                b * p * 4,
+                b * p * 8,
+                0,
+                &[m3],
+            );
+            // ---- symbolic: fuzzy connectives + quantifier aggregations --
+            // Each axiom evaluation re-grounds its predicates on the
+            // axiom's variable tuples through the MLP (neural), then
+            // applies the fuzzy connective and quantifier (symbolic) —
+            // the paper measures LTN near 48/52 neural/symbolic.
+            let mut last = sig;
+            for ax in 0..self.axioms as u64 {
+                let reground = tr.add(
+                    format!("axiom_grounding{ax}"),
+                    OpCategory::MatMul,
+                    PhaseKind::Neural,
+                    2 * b * 64 * p,
+                    (b * 64 + 64 * p) * 4,
+                    b * p * 4,
+                    &[m2],
+                );
+                let embed = tr.add(
+                    "tuple_embed",
+                    OpCategory::DataTransform,
+                    PhaseKind::Neural,
+                    b * p,
+                    b * p * 8,
+                    b * p * 4,
+                    &[reground],
+                );
+                let conn = tr.add(
+                    format!("fuzzy_connective{ax}"),
+                    OpCategory::VectorElem,
+                    PhaseKind::Symbolic,
+                    b * 3,
+                    b * 16,
+                    b * 8,
+                    &[embed],
+                );
+                let agg = tr.add(
+                    format!("quantifier_agg{ax}"),
+                    OpCategory::VectorElem,
+                    PhaseKind::Symbolic,
+                    b * 4,
+                    b * 8,
+                    8,
+                    &[conn],
+                );
+                let logic = tr.add(
+                    "axiom_logic",
+                    OpCategory::Other,
+                    PhaseKind::Symbolic,
+                    8,
+                    64,
+                    8,
+                    &[agg],
+                );
+                last = logic;
+            }
+            tr.add(
+                "kb_satisfaction",
+                OpCategory::Other,
+                PhaseKind::Symbolic,
+                self.axioms as u64 * 4,
+                self.axioms as u64 * 8,
+                8,
+                &[last],
+            );
+        }
+        tr
+    }
+
+    fn memory(&self) -> MemoryStats {
+        MemoryStats {
+            weights_bytes: (8 * 64 + 64 * 64 + 64 * self.predicates as u64) * 4,
+            codebook_bytes: self.axioms as u64 * 64,
+            neural_working_bytes: self.batch as u64 * 64 * 4,
+            symbolic_working_bytes: self.batch as u64 * self.predicates as u64 * 8,
+        }
+    }
+
+    fn symbolic_depends_on_neural(&self) -> bool {
+        false // logic compiles into constraints on the network output
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fuzzy_ops_boundary_values() {
+        assert_eq!(fuzzy::and(1.0, 1.0), 1.0);
+        assert_eq!(fuzzy::and(1.0, 0.0), 0.0);
+        assert_eq!(fuzzy::or(0.0, 0.0), 0.0);
+        assert_eq!(fuzzy::or(1.0, 0.0), 1.0);
+        assert_eq!(fuzzy::implies(0.0, 0.0), 1.0);
+        assert_eq!(fuzzy::implies(1.0, 0.0), 0.0);
+        assert_eq!(fuzzy::not(0.3), 0.7);
+    }
+
+    #[test]
+    fn forall_rewards_uniform_truth() {
+        let all_true = vec![1.0; 10];
+        let mostly = vec![0.9; 10];
+        let half = vec![0.5; 10];
+        assert!(fuzzy::forall(&all_true, 2.0) > fuzzy::forall(&mostly, 2.0));
+        assert!(fuzzy::forall(&mostly, 2.0) > fuzzy::forall(&half, 2.0));
+    }
+
+    #[test]
+    fn exists_detects_single_witness() {
+        let mut xs = vec![0.05; 20];
+        let none = fuzzy::exists(&xs, 6.0);
+        xs[7] = 0.95;
+        let one = fuzzy::exists(&xs, 6.0);
+        assert!(one > 2.0 * none, "{one} vs {none}");
+    }
+
+    #[test]
+    fn satisfaction_of_consistent_kb_is_high() {
+        // P → Q where Q is true whenever P is
+        let truth: Vec<Vec<f64>> = (0..50)
+            .map(|i| {
+                let p = if i % 2 == 0 { 0.95 } else { 0.05 };
+                vec![p, p] // Q tracks P
+            })
+            .collect();
+        let sat = satisfaction(&truth, &[Axiom::ForallImplies { p: 0, q: 1 }], 2.0);
+        assert!(sat > 0.85, "sat {sat}");
+        // contradictory KB scores low
+        let bad: Vec<Vec<f64>> = (0..50).map(|_| vec![0.95, 0.05]).collect();
+        let sat_bad = satisfaction(&bad, &[Axiom::ForallImplies { p: 0, q: 1 }], 2.0);
+        assert!(sat_bad < 0.4, "sat_bad {sat_bad}");
+    }
+
+    #[test]
+    fn nand_axiom_enforces_exclusion() {
+        let exclusive: Vec<Vec<f64>> = (0..20)
+            .map(|i| if i % 2 == 0 { vec![0.9, 0.1] } else { vec![0.1, 0.9] })
+            .collect();
+        let overlapping: Vec<Vec<f64>> = (0..20).map(|_| vec![0.9, 0.9]).collect();
+        let ax = [Axiom::ForallNand { p: 0, q: 1 }];
+        assert!(satisfaction(&exclusive, &ax, 2.0) > satisfaction(&overlapping, &ax, 2.0));
+    }
+}

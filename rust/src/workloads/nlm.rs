@@ -1,0 +1,372 @@
+//! NLM — Neural Logic Machines (Dong et al. [30]): multi-layer relational
+//! reasoning over predicate tensors.  The learned per-arity MLPs run as
+//! the `nlm_layer` HLO artifact; the *symbolic wiring* — expand (arity
+//! up), reduce (∃/∀ as max/min), and permutation of argument orders —
+//! executes here, and is what the paper characterizes as the sequential
+//! logic-deduction bottleneck.
+
+use super::Workload;
+use crate::profiler::memstat::MemoryStats;
+use crate::profiler::taxonomy::{OpCategory, PhaseKind};
+use crate::profiler::trace::Trace;
+
+/// Predicate tensors for one reasoning state: unary (N×C) and binary
+/// (N×N×C) truth degrees over N objects.
+#[derive(Debug, Clone)]
+pub struct PredState {
+    pub n: usize,
+    pub c: usize,
+    pub unary: Vec<f64>,
+    pub binary: Vec<f64>,
+}
+
+impl PredState {
+    pub fn new(n: usize, c: usize) -> Self {
+        PredState {
+            n,
+            c,
+            unary: vec![0.0; n * c],
+            binary: vec![0.0; n * n * c],
+        }
+    }
+
+    #[inline]
+    pub fn u(&self, i: usize, ch: usize) -> f64 {
+        self.unary[i * self.c + ch]
+    }
+
+    #[inline]
+    pub fn b(&self, i: usize, j: usize, ch: usize) -> f64 {
+        self.binary[(i * self.n + j) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn set_b(&mut self, i: usize, j: usize, ch: usize, v: f64) {
+        self.binary[(i * self.n + j) * self.c + ch] = v;
+    }
+}
+
+/// Expand: unary → binary by broadcasting over the second argument.
+pub fn expand(s: &PredState) -> Vec<f64> {
+    let (n, c) = (s.n, s.c);
+    let mut out = vec![0.0; n * n * c];
+    for i in 0..n {
+        for j in 0..n {
+            for ch in 0..c {
+                out[(i * n + j) * c + ch] = s.u(i, ch);
+            }
+        }
+    }
+    out
+}
+
+/// Reduce with ∃ (max over the second argument): binary → unary.
+pub fn reduce_exists(s: &PredState) -> Vec<f64> {
+    let (n, c) = (s.n, s.c);
+    let mut out = vec![f64::NEG_INFINITY; n * c];
+    for i in 0..n {
+        for j in 0..n {
+            for ch in 0..c {
+                let v = s.b(i, j, ch);
+                let o = &mut out[i * c + ch];
+                if v > *o {
+                    *o = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Reduce with ∀ (min over the second argument): binary → unary.
+pub fn reduce_forall(s: &PredState) -> Vec<f64> {
+    let (n, c) = (s.n, s.c);
+    let mut out = vec![f64::INFINITY; n * c];
+    for i in 0..n {
+        for j in 0..n {
+            for ch in 0..c {
+                let v = s.b(i, j, ch);
+                let o = &mut out[i * c + ch];
+                if v < *o {
+                    *o = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Permute: swap the two arguments of every binary predicate.
+pub fn transpose(s: &PredState) -> Vec<f64> {
+    let (n, c) = (s.n, s.c);
+    let mut out = vec![0.0; n * n * c];
+    for i in 0..n {
+        for j in 0..n {
+            for ch in 0..c {
+                out[(j * n + i) * c + ch] = s.b(i, j, ch);
+            }
+        }
+    }
+    out
+}
+
+/// Transitive-closure deduction via NLM wiring: repeated
+/// `R(i,k) ← ∃j R(i,j) ∧ R(j,k)` using max-min composition — the family
+/// tree / path-finding pattern the paper's NLM benchmark runs.
+pub fn transitive_closure(adj: &[Vec<bool>], layers: usize) -> Vec<Vec<bool>> {
+    let n = adj.len();
+    let mut r: Vec<Vec<f64>> = adj
+        .iter()
+        .map(|row| row.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect())
+        .collect();
+    for _ in 0..layers {
+        let mut next = r.clone();
+        for i in 0..n {
+            for k in 0..n {
+                let mut best: f64 = r[i][k];
+                for j in 0..n {
+                    best = best.max(r[i][j].min(r[j][k]));
+                }
+                next[i][k] = best;
+            }
+        }
+        r = next;
+    }
+    r.into_iter()
+        .map(|row| row.into_iter().map(|v| v > 0.5).collect())
+        .collect()
+}
+
+/// NLM workload descriptor (family-graph reasoning).
+#[derive(Debug, Clone)]
+pub struct Nlm {
+    pub objects: usize,
+    pub channels: usize,
+    pub layers: usize,
+    pub batch: usize,
+}
+
+impl Default for Nlm {
+    fn default() -> Self {
+        Nlm {
+            objects: 16,
+            channels: 16,
+            layers: 6,
+            batch: 8,
+        }
+    }
+}
+
+impl Workload for Nlm {
+    fn name(&self) -> &'static str {
+        "NLM"
+    }
+
+    fn ns_category(&self) -> &'static str {
+        "Neuro:Symbolic→Neuro"
+    }
+
+    fn trace(&self) -> Trace {
+        let mut tr = Trace::new("NLM");
+        let (n, c, b) = (
+            self.objects as u64,
+            self.channels as u64,
+            self.batch as u64,
+        );
+        let mut last: Vec<usize> = vec![];
+        for layer in 0..self.layers {
+            // ---- symbolic wiring: expand / reduce / permute --------------
+            let ex = tr.add(
+                format!("expand_l{layer}"),
+                OpCategory::DataTransform,
+                PhaseKind::Symbolic,
+                b * n * n * c,
+                b * n * c * 8,
+                b * n * n * c * 8,
+                &last,
+            );
+            let re = tr.add(
+                format!("reduce_exists_l{layer}"),
+                OpCategory::VectorElem,
+                PhaseKind::Symbolic,
+                b * n * n * c,
+                b * n * n * c * 8,
+                b * n * c * 8,
+                &last,
+            );
+            let rf = tr.add(
+                format!("reduce_forall_l{layer}"),
+                OpCategory::VectorElem,
+                PhaseKind::Symbolic,
+                b * n * n * c,
+                b * n * n * c * 8,
+                b * n * c * 8,
+                &last,
+            );
+            let perm = tr.add(
+                format!("permute_l{layer}"),
+                OpCategory::DataTransform,
+                PhaseKind::Symbolic,
+                b * n * n * c,
+                b * n * n * c * 8,
+                b * n * n * c * 8,
+                &last,
+            );
+            let cat = tr.add(
+                format!("concat_l{layer}"),
+                OpCategory::DataTransform,
+                PhaseKind::Symbolic,
+                0,
+                b * n * n * c * 4 * 8,
+                b * n * n * c * 4 * 8,
+                &[ex, re, rf, perm],
+            );
+            let deduce = tr.add(
+                format!("logic_deduce_l{layer}"),
+                OpCategory::Other,
+                PhaseKind::Symbolic,
+                b * n * n * c,
+                b * n * n * c * 8,
+                b * n * n * c * 8,
+                &[cat],
+            );
+            // ---- neural: shared per-arity MLPs ---------------------------
+            let mlp_u = tr.add(
+                format!("unary_mlp_l{layer}"),
+                OpCategory::MatMul,
+                PhaseKind::Neural,
+                2 * b * n * (3 * c) * c,
+                b * n * 3 * c * 4,
+                b * n * c * 4,
+                &[deduce],
+            );
+            let mlp_b1 = tr.add(
+                format!("binary_mlp1_l{layer}"),
+                OpCategory::MatMul,
+                PhaseKind::Neural,
+                2 * b * n * n * (4 * c) * (8 * c),
+                b * n * n * 4 * c * 4,
+                b * n * n * 8 * c * 4,
+                &[deduce],
+            );
+            let mlp_b2 = tr.add(
+                format!("binary_mlp2_l{layer}"),
+                OpCategory::MatMul,
+                PhaseKind::Neural,
+                2 * b * n * n * (8 * c) * c,
+                b * n * n * 8 * c * 4,
+                b * n * n * c * 4,
+                &[mlp_b1],
+            );
+            let act = tr.add(
+                "sigmoid",
+                OpCategory::VectorElem,
+                PhaseKind::Neural,
+                b * n * n * c * 4,
+                b * n * n * c * 8,
+                0,
+                &[mlp_b2],
+            );
+            last = vec![mlp_u, act];
+        }
+        tr
+    }
+
+    fn memory(&self) -> MemoryStats {
+        let c = self.channels as u64;
+        MemoryStats {
+            weights_bytes: self.layers as u64 * (3 * c * c + 4 * c * c) * 4,
+            codebook_bytes: 0,
+            neural_working_bytes: (self.batch * self.objects * self.objects * self.channels * 4)
+                as u64,
+            symbolic_working_bytes: (self.batch
+                * self.objects
+                * self.objects
+                * self.channels
+                * 8
+                * 4) as u64,
+        }
+    }
+
+    fn symbolic_depends_on_neural(&self) -> bool {
+        false // wiring interleaves with (compiles into) the layers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> PredState {
+        let mut s = PredState::new(3, 2);
+        s.unary = vec![0.1, 0.9, 0.5, 0.2, 0.8, 0.7];
+        for i in 0..3 {
+            for j in 0..3 {
+                for ch in 0..2 {
+                    s.set_b(i, j, ch, (i * 3 + j) as f64 / 10.0 + ch as f64 * 0.01);
+                }
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn expand_broadcasts_unary() {
+        let s = state();
+        let e = expand(&s);
+        for j in 0..3 {
+            assert_eq!(e[(1 * 3 + j) * 2], s.u(1, 0));
+        }
+    }
+
+    #[test]
+    fn reduces_are_max_min() {
+        let s = state();
+        let ex = reduce_exists(&s);
+        let fa = reduce_forall(&s);
+        // row 0, channel 0: values 0.0, 0.1, 0.2
+        assert!((ex[0] - 0.2).abs() < 1e-12);
+        assert!((fa[0] - 0.0).abs() < 1e-12);
+        assert!(ex.iter().zip(&fa).all(|(e, f)| e >= f));
+    }
+
+    #[test]
+    fn transpose_swaps_arguments() {
+        let s = state();
+        let t = transpose(&s);
+        for i in 0..3 {
+            for j in 0..3 {
+                for ch in 0..2 {
+                    assert_eq!(t[(j * 3 + i) * 2 + ch], s.b(i, j, ch));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transitive_closure_family_chain() {
+        // parent chain 0→1→2→3: grandparent relations must appear
+        let n = 4;
+        let mut adj = vec![vec![false; n]; n];
+        adj[0][1] = true;
+        adj[1][2] = true;
+        adj[2][3] = true;
+        let tc = transitive_closure(&adj, 3);
+        assert!(tc[0][2] && tc[0][3] && tc[1][3]);
+        assert!(!tc[3][0], "closure must not invert edges");
+    }
+
+    #[test]
+    fn closure_depth_needs_layers() {
+        // a chain of length 8 is not closed by a single layer
+        let n = 9;
+        let mut adj = vec![vec![false; n]; n];
+        for i in 0..8 {
+            adj[i][i + 1] = true;
+        }
+        let shallow = transitive_closure(&adj, 1);
+        let deep = transitive_closure(&adj, 4);
+        assert!(!shallow[0][8]);
+        assert!(deep[0][8], "deduction deepens with layers (NLM claim)");
+    }
+}

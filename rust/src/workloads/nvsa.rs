@@ -1,0 +1,403 @@
+//! NVSA — Neuro-Vector-Symbolic Architecture (Hersche et al. [7]): the
+//! PrAE task solved in holographic hypervector space.  Panel PMFs are
+//! lifted to hypervectors (PMF-to-VSA weighted bundling over attribute
+//! codebooks), rules are abduced and executed probabilistically, and
+//! candidate panels are selected by VSA similarity — the paper's
+//! flagship symbolic-bottleneck workload (92.1% symbolic runtime).
+
+use super::raven::{self, RpmInstance, N_ATTRS};
+use super::rules;
+use super::Workload;
+use crate::profiler::memstat::MemoryStats;
+use crate::profiler::sparsity::{sparsity_f64, SparsityPoint};
+use crate::profiler::taxonomy::{OpCategory, PhaseKind};
+use crate::profiler::trace::Trace;
+use crate::util::Rng;
+use crate::vsa::{RealCodebook, RealHV};
+
+/// NVSA workload configuration.
+#[derive(Debug, Clone)]
+pub struct Nvsa {
+    pub grid: usize,
+    pub attr_k: usize,
+    /// Hypervector dimensionality.
+    pub hd_dim: usize,
+    /// Task instances per characterization batch.
+    pub instances: usize,
+}
+
+impl Default for Nvsa {
+    fn default() -> Self {
+        Nvsa {
+            grid: 3,
+            attr_k: 8,
+            hd_dim: 1024,
+            instances: 4,
+        }
+    }
+}
+
+/// The VSA-side state: one codebook per attribute.
+pub struct NvsaEngine {
+    pub cfg: Nvsa,
+    pub codebooks: Vec<RealCodebook>,
+}
+
+/// Result of one NVSA solve.
+#[derive(Debug, Clone)]
+pub struct NvsaSolution {
+    pub chosen: usize,
+    pub correct: bool,
+    /// Sparsity measurements harvested during the solve (Fig. 5).
+    pub sparsity: Vec<SparsityPoint>,
+}
+
+impl NvsaEngine {
+    pub fn new(cfg: Nvsa, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let codebooks = (0..N_ATTRS)
+            .map(|_| RealCodebook::random_bipolar(&mut rng, cfg.attr_k, cfg.hd_dim))
+            .collect();
+        NvsaEngine { cfg, codebooks }
+    }
+
+    /// Solve one instance through hypervector space: PMFs → vectors →
+    /// rule abduction/execution → VSA candidate similarity.
+    pub fn solve(&self, inst: &RpmInstance, pmfs: &[[Vec<f64>; N_ATTRS]]) -> NvsaSolution {
+        let g = inst.grid;
+        let k = inst.attr_k;
+        let mut sparsity = Vec::new();
+        let attr_names = ["type", "size", "color"];
+
+        // PMF-to-VSA: lift every context panel's attribute PMFs
+        let mut panel_vecs: Vec<Vec<RealHV>> = Vec::with_capacity(pmfs.len());
+        for p in pmfs {
+            let vecs: Vec<RealHV> = (0..N_ATTRS)
+                .map(|a| self.codebooks[a].weighted_bundle(&p[a]))
+                .collect();
+            panel_vecs.push(vecs);
+        }
+        // Fig. 5: sparsity of the PMF→VSA input distributions
+        for a in 0..N_ATTRS {
+            let joint: Vec<f64> = pmfs.iter().flat_map(|p| p[a].clone()).collect();
+            sparsity.push(SparsityPoint {
+                module: "pmf_to_vsa".into(),
+                attribute: attr_names[a].into(),
+                sparsity: sparsity_f64(&joint, 0.02),
+            });
+        }
+
+        // Rule abduction per attribute: decode vectors back to PMFs
+        // (VSA-to-PMF) and score rules probabilistically.
+        let mut predicted: Vec<Vec<f64>> = Vec::with_capacity(N_ATTRS);
+        for a in 0..N_ATTRS {
+            let decoded: Vec<Vec<f64>> = panel_vecs
+                .iter()
+                .map(|pv| self.codebooks[a].to_pmf(&pv[a]))
+                .collect();
+            let joint: Vec<f64> = decoded.iter().flatten().copied().collect();
+            sparsity.push(SparsityPoint {
+                module: "vsa_to_pmf".into(),
+                attribute: attr_names[a].into(),
+                sparsity: sparsity_f64(&joint, 0.02),
+            });
+            let rows: Vec<Vec<&[f64]>> = (0..g - 1)
+                .map(|r| (0..g).map(|c| decoded[r * g + c].as_slice()).collect())
+                .collect();
+            let (rule, post) = rules::abduce(&rows, k);
+            sparsity.push(SparsityPoint {
+                module: "prob_compute".into(),
+                attribute: attr_names[a].into(),
+                sparsity: sparsity_f64(&post, 0.02),
+            });
+            let partial: Vec<&[f64]> = (0..g - 1)
+                .map(|c| decoded[(g - 1) * g + c].as_slice())
+                .collect();
+            let first_row: Vec<&[f64]> =
+                (0..g).map(|c| decoded[c].as_slice()).collect();
+            predicted.push(rules::execute(rule, &partial, k, &first_row));
+        }
+
+        // Answer selection in VSA space: lift the predicted PMFs and each
+        // candidate's one-hot PMFs; pick the candidate whose bound
+        // representation is most similar to the prediction.
+        let pred_vecs: Vec<RealHV> = (0..N_ATTRS)
+            .map(|a| self.codebooks[a].weighted_bundle(&predicted[a]))
+            .collect();
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for (i, cand) in inst.candidates.iter().enumerate() {
+            let mut score = 0.0;
+            for a in 0..N_ATTRS {
+                let cv = self.codebooks[a].item(cand[a] as usize);
+                score += pred_vecs[a].cosine(cv);
+            }
+            if score > best.1 {
+                best = (i, score);
+            }
+        }
+        NvsaSolution {
+            chosen: best.0,
+            correct: best.0 == inst.answer,
+            sparsity,
+        }
+    }
+
+    /// Accuracy over `n` random instances.
+    pub fn accuracy(&self, n: usize, conf: f64, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut correct = 0;
+        for _ in 0..n {
+            let inst = raven::generate(&mut rng, self.cfg.grid, self.cfg.attr_k);
+            let pmfs = raven::panel_pmfs(&inst, conf);
+            if self.solve(&inst, &pmfs).correct {
+                correct += 1;
+            }
+        }
+        correct as f64 / n as f64
+    }
+}
+
+impl Workload for Nvsa {
+    fn name(&self) -> &'static str {
+        "NVSA"
+    }
+
+    fn ns_category(&self) -> &'static str {
+        "Neuro|Symbolic"
+    }
+
+    fn trace(&self) -> Trace {
+        let mut tr = Trace::new("NVSA");
+        let g = self.grid as u64;
+        let k = self.attr_k as u64;
+        let d = self.hd_dim as u64;
+        let panels = g * g - 1 + 8;
+        for _ in 0..self.instances {
+            // ---- neural frontend (same ConvNet skeleton as PrAE) --------
+            let mut hw = 32u64;
+            let mut prev: Vec<usize> = Vec::new();
+            for (ci, co) in [(1u64, 8u64), (8, 16)] {
+                let conv = tr.add(
+                    format!("conv{ci}x{co}"),
+                    OpCategory::Conv,
+                    PhaseKind::Neural,
+                    2 * panels * hw * hw * 9 * ci * co,
+                    panels * hw * hw * (ci + co) * 4,
+                    panels * hw * hw * co * 4,
+                    &prev,
+                );
+                let relu = tr.add(
+                    "relu",
+                    OpCategory::VectorElem,
+                    PhaseKind::Neural,
+                    panels * hw * hw * co,
+                    panels * hw * hw * co * 8,
+                    0,
+                    &[conv],
+                );
+                prev = vec![relu];
+                hw /= 2;
+            }
+            let feat = 8 * 8 * 16u64;
+            let trunk = tr.add(
+                "dense_trunk",
+                OpCategory::MatMul,
+                PhaseKind::Neural,
+                2 * panels * feat * 128,
+                (panels * feat + feat * 128) * 4,
+                panels * 128 * 4,
+                &prev,
+            );
+            let mut heads = Vec::new();
+            for a in 0..N_ATTRS {
+                let h = tr.add(
+                    format!("attr_head{a}"),
+                    OpCategory::MatMul,
+                    PhaseKind::Neural,
+                    2 * panels * 128 * k,
+                    panels * 128 * 4,
+                    panels * k * 4,
+                    &[trunk],
+                );
+                heads.push(h);
+            }
+            // ---- symbolic: VSA pipeline ---------------------------------
+            let mut pmf2vsa = Vec::new();
+            for (a, &h) in heads.iter().enumerate() {
+                // PMF→VSA weighted bundling (per panel; streaming)
+                let id = tr.add(
+                    format!("pmf_to_vsa_a{a}"),
+                    OpCategory::VectorElem,
+                    PhaseKind::Symbolic,
+                    2 * panels * k * d,
+                    (panels * k + k * d) * 4,
+                    panels * d * 4,
+                    &[h],
+                );
+                tr.set_sparsity(id, 0.96);
+                pmf2vsa.push(id);
+            }
+            for (a, &pv) in pmf2vsa.iter().enumerate() {
+                // VSA→PMF similarity decode
+                let dec = tr.add(
+                    format!("vsa_to_pmf_a{a}"),
+                    OpCategory::VectorElem,
+                    PhaseKind::Symbolic,
+                    2 * panels * k * d,
+                    (panels * d + k * d) * 4,
+                    panels * k * 4,
+                    &[pv],
+                );
+                tr.set_sparsity(dec, 0.95);
+                // rule likelihood scans: per rule per row, vector-symbolic
+                // bind + similarity streams. The scans are SEQUENTIAL —
+                // the paper attributes NVSA's symbolic dominance to "the
+                // sequential and computational-intensive rule detection".
+                // contexts: complete rows AND columns are checked (the
+                // row/column duality is what makes total runtime grow
+                // superlinearly with task size, Fig. 2c)
+                let contexts = 2 * (g - 1);
+                let mut seq_dep = dec;
+                for rule in 0..raven::Rule::ALL.len() {
+                    for _ctx in 0..contexts {
+                        let bind = tr.add(
+                            format!("rule_bind_a{a}_r{rule}"),
+                            OpCategory::VectorElem,
+                            PhaseKind::Symbolic,
+                            g * d,
+                            g * d * 8,
+                            d * 4,
+                            &[seq_dep],
+                        );
+                        let sim = tr.add(
+                            "rule_similarity",
+                            OpCategory::VectorElem,
+                            PhaseKind::Symbolic,
+                            2 * k * d,
+                            (k * d + d) * 4,
+                            k * 4,
+                            &[bind],
+                        );
+                        tr.set_sparsity(sim, 0.90);
+                        seq_dep = tr.add(
+                            "rule_posterior",
+                            OpCategory::Other,
+                            PhaseKind::Symbolic,
+                            16,
+                            128,
+                            64,
+                            &[sim],
+                        );
+                    }
+                }
+                // execution: predicted panel vector (after the sequential
+                // rule search concludes)
+                let ex = tr.add(
+                    format!("rule_execute_a{a}"),
+                    OpCategory::VectorElem,
+                    PhaseKind::Symbolic,
+                    2 * k * d,
+                    k * d * 4,
+                    d * 4,
+                    &[seq_dep],
+                );
+                tr.set_sparsity(ex, 0.93);
+                // candidate similarity
+                for c in 0..8 {
+                    tr.add(
+                        format!("cand_sim{c}"),
+                        OpCategory::VectorElem,
+                        PhaseKind::Symbolic,
+                        2 * d,
+                        2 * d * 4,
+                        8,
+                        &[ex],
+                    );
+                }
+            }
+            tr.add("answer_argmax", OpCategory::Other, PhaseKind::Symbolic, 24, 192, 8, &[]);
+            // host↔device shuttling between neural & symbolic stages
+            tr.add(
+                "pmf_transfer",
+                OpCategory::DataMovement,
+                PhaseKind::Symbolic,
+                0,
+                panels * k * 3 * 4,
+                panels * k * 3 * 4,
+                &heads,
+            );
+        }
+        tr
+    }
+
+    fn memory(&self) -> MemoryStats {
+        let d = self.hd_dim as u64;
+        let k = self.attr_k as u64;
+        let feat = 8 * 8 * 16u64;
+        MemoryStats {
+            weights_bytes: (9 * 8 + 9 * 8 * 16 + feat * 128 + 128 * k * 3) * 4,
+            // holographic codebooks dominate storage (paper: >90%): the
+            // combination codebook must cover all attribute combinations
+            // (k^3 entries) to guarantee quasi-orthogonality.
+            codebook_bytes: (N_ATTRS as u64 * k * d + k * k * k * d) * 4,
+            neural_working_bytes: 16 * 32 * 32 * 16 * 4,
+            symbolic_working_bytes: (self.grid * self.grid + 8) as u64 * d * 4 * N_ATTRS as u64,
+        }
+    }
+
+    fn symbolic_depends_on_neural(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_clean_instances_via_vsa() {
+        let e = NvsaEngine::new(Nvsa::default(), 3);
+        let acc = e.accuracy(30, 0.97, 21);
+        assert!(acc > 0.75, "accuracy {acc}");
+    }
+
+    #[test]
+    fn sparsity_points_cover_three_modules() {
+        let e = NvsaEngine::new(Nvsa::default(), 4);
+        let mut rng = Rng::new(5);
+        let inst = raven::generate(&mut rng, 3, 8);
+        let pmfs = raven::panel_pmfs(&inst, 0.95);
+        let sol = e.solve(&inst, &pmfs);
+        let modules: std::collections::BTreeSet<_> =
+            sol.sparsity.iter().map(|p| p.module.clone()).collect();
+        assert!(modules.contains("pmf_to_vsa"));
+        assert!(modules.contains("vsa_to_pmf"));
+        assert!(modules.contains("prob_compute"));
+        // paper: high sparsity (>95%) on the PMF-side modules
+        for p in &sol.sparsity {
+            if p.module == "pmf_to_vsa" {
+                assert!(p.sparsity > 0.85, "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn scales_with_grid() {
+        let small = Nvsa {
+            grid: 2,
+            ..Default::default()
+        };
+        let big = Nvsa::default();
+        let gpu = crate::platform::Platform::rtx2080ti();
+        let t_small = gpu.trace_time(&small.trace(), None).total;
+        let t_big = gpu.trace_time(&big.trace(), None).total;
+        assert!(t_big > 1.5 * t_small, "{t_big} vs {t_small}");
+    }
+
+    #[test]
+    fn codebooks_dominate_storage() {
+        let m = Nvsa::default().memory();
+        assert!(m.codebook_bytes > m.weights_bytes);
+        assert!(m.static_fraction() > 0.5);
+    }
+}

@@ -1,0 +1,354 @@
+//! PrAE — Probabilistic Abduction and Execution learner (Zhang et al.
+//! [22]): neural ConvNet frontend produces per-panel attribute PMFs; the
+//! symbolic backend abduces the governing rule per attribute, executes it
+//! to predict the missing panel's scene distribution, and selects the
+//! candidate with maximal probability (paper Sec. III-H).
+
+use super::raven::{self, RpmInstance, N_ATTRS};
+use super::rules;
+use super::Workload;
+use crate::profiler::memstat::MemoryStats;
+use crate::profiler::sparsity::{sparsity_f64, SparsityPoint};
+use crate::profiler::taxonomy::{OpCategory, PhaseKind};
+use crate::profiler::trace::Trace;
+
+/// PrAE workload at a configurable task size.
+#[derive(Debug, Clone)]
+pub struct Prae {
+    /// RPM grid side.
+    pub grid: usize,
+    /// Values per attribute.
+    pub attr_k: usize,
+    /// Task instances per characterization batch.
+    pub instances: usize,
+}
+
+impl Default for Prae {
+    fn default() -> Self {
+        Prae {
+            grid: 3,
+            attr_k: 8,
+            instances: 4,
+        }
+    }
+}
+
+/// Outcome of solving one instance.
+#[derive(Debug, Clone)]
+pub struct PraeSolution {
+    pub chosen: usize,
+    pub correct: bool,
+    /// Abduced rule per attribute.
+    pub rules: [raven::Rule; N_ATTRS],
+    /// Predicted PMF per attribute for the missing panel.
+    pub predicted: Vec<Vec<f64>>,
+}
+
+impl Prae {
+    /// Solve one RPM instance from panel PMFs (pure symbolic phase).
+    pub fn solve(&self, inst: &RpmInstance, pmfs: &[[Vec<f64>; N_ATTRS]]) -> PraeSolution {
+        let g = inst.grid;
+        let k = inst.attr_k;
+        let mut abduced = [raven::Rule::Constant; N_ATTRS];
+        let mut predicted: Vec<Vec<f64>> = Vec::with_capacity(N_ATTRS);
+        for a in 0..N_ATTRS {
+            // complete rows: 0..g-1
+            let rows: Vec<Vec<&[f64]>> = (0..g - 1)
+                .map(|r| (0..g).map(|c| pmfs[r * g + c][a].as_slice()).collect())
+                .collect();
+            let (rule, _post) = rules::abduce(&rows, k);
+            abduced[a] = rule;
+            let partial: Vec<&[f64]> = (0..g - 1)
+                .map(|c| pmfs[(g - 1) * g + c][a].as_slice())
+                .collect();
+            let first_row: Vec<&[f64]> =
+                (0..g).map(|c| pmfs[c][a].as_slice()).collect();
+            predicted.push(rules::execute(rule, &partial, k, &first_row));
+        }
+        // candidate scoring: product over attributes
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for (i, cand) in inst.candidates.iter().enumerate() {
+            let score: f64 = (0..N_ATTRS)
+                .map(|a| predicted[a][cand[a] as usize].max(1e-12).ln())
+                .sum();
+            if score > best.1 {
+                best = (i, score);
+            }
+        }
+        PraeSolution {
+            chosen: best.0,
+            correct: best.0 == inst.answer,
+            rules: abduced,
+            predicted,
+        }
+    }
+
+    /// Accuracy over `n` random instances with frontend confidence `conf`.
+    pub fn accuracy(&self, n: usize, conf: f64, seed: u64) -> f64 {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut correct = 0;
+        for _ in 0..n {
+            let inst = raven::generate(&mut rng, self.grid, self.attr_k);
+            let pmfs = raven::panel_pmfs(&inst, conf);
+            if self.solve(&inst, &pmfs).correct {
+                correct += 1;
+            }
+        }
+        correct as f64 / n as f64
+    }
+
+    /// Fig. 5-style sparsity of the symbolic scene representation: the
+    /// joint (panel × attribute-value) probability tensors are near
+    /// one-hot, hence highly sparse.
+    pub fn measure_sparsity(&self, seed: u64) -> Vec<SparsityPoint> {
+        let mut rng = crate::util::Rng::new(seed);
+        let inst = raven::generate(&mut rng, self.grid, self.attr_k);
+        let pmfs = raven::panel_pmfs(&inst, 0.95);
+        let names = ["type", "size", "color"];
+        let mut out = Vec::new();
+        for a in 0..N_ATTRS {
+            let joint: Vec<f64> = pmfs.iter().flat_map(|p| p[a].clone()).collect();
+            out.push(SparsityPoint {
+                module: "scene_prob".into(),
+                attribute: names[a].into(),
+                sparsity: sparsity_f64(&joint, 0.02),
+            });
+        }
+        out
+    }
+}
+
+impl Workload for Prae {
+    fn name(&self) -> &'static str {
+        "PrAE"
+    }
+
+    fn ns_category(&self) -> &'static str {
+        "Neuro|Symbolic"
+    }
+
+    fn trace(&self) -> Trace {
+        let mut tr = Trace::new("PrAE");
+        let g = self.grid;
+        let k = self.attr_k as u64;
+        let panels = (g * g - 1 + 8) as u64; // context + candidates
+        for _ in 0..self.instances {
+            // ---- neural frontend: shared ConvNet + attribute heads -----
+            let mut prev = Vec::new();
+            let img = 32u64;
+            let convs = [(1u64, 8u64), (8, 16)];
+            let mut hw = img;
+            let mut last = None;
+            for (ci, co) in convs {
+                let flops = 2 * panels * hw * hw * 9 * ci * co;
+                let bytes = panels * hw * hw * (ci + co) * 4;
+                let id = tr.add(
+                    format!("conv{ci}x{co}"),
+                    OpCategory::Conv,
+                    PhaseKind::Neural,
+                    flops,
+                    bytes,
+                    panels * hw * hw * co * 4,
+                    &prev,
+                );
+                let relu = tr.add(
+                    "relu",
+                    OpCategory::VectorElem,
+                    PhaseKind::Neural,
+                    panels * hw * hw * co,
+                    panels * hw * hw * co * 4,
+                    panels * hw * hw * co * 4,
+                    &[id],
+                );
+                let pool = tr.add(
+                    "maxpool",
+                    OpCategory::DataTransform,
+                    PhaseKind::Neural,
+                    panels * hw * hw * co / 4,
+                    panels * hw * hw * co * 4,
+                    panels * hw * hw * co,
+                    &[relu],
+                );
+                prev = vec![pool];
+                hw /= 2;
+                last = Some(pool);
+            }
+            let feat = 8 * 8 * 16u64;
+            let trunk = tr.add(
+                "dense_trunk",
+                OpCategory::MatMul,
+                PhaseKind::Neural,
+                2 * panels * feat * 128,
+                panels * feat * 4 + feat * 128 * 4,
+                panels * 128 * 4,
+                &[last.unwrap()],
+            );
+            let mut head_ids = Vec::new();
+            for a in 0..N_ATTRS {
+                let h = tr.add(
+                    format!("attr_head{a}"),
+                    OpCategory::MatMul,
+                    PhaseKind::Neural,
+                    2 * panels * 128 * k,
+                    panels * 128 * 4,
+                    panels * k * 4,
+                    &[trunk],
+                );
+                let sm = tr.add(
+                    "softmax",
+                    OpCategory::VectorElem,
+                    PhaseKind::Neural,
+                    panels * k * 4,
+                    panels * k * 4,
+                    panels * k * 4,
+                    &[h],
+                );
+                head_ids.push(sm);
+            }
+            // ---- symbolic: abduction + execution on PMFs ----------------
+            // scene distribution assembly (outer products over attrs)
+            let scene = tr.add(
+                "scene_assembly",
+                OpCategory::DataTransform,
+                PhaseKind::Symbolic,
+                panels * k * k,
+                panels * k * 4 * 3,
+                panels * k * k * 8,
+                &head_ids,
+            );
+            let mut sp = tr.len() - 1;
+            tr.set_sparsity(sp, 0.96);
+            for a in 0..N_ATTRS {
+                let dep = head_ids[a];
+                for rule in 0..raven::Rule::ALL.len() {
+                    for _row in 0..g - 1 {
+                        let id = tr.add(
+                            format!("likelihood_a{a}_r{rule}"),
+                            OpCategory::VectorElem,
+                            PhaseKind::Symbolic,
+                            k * k * g as u64,
+                            k * k * 8,
+                            k * 8,
+                            &[dep, scene],
+                        );
+                        tr.set_sparsity(id, 0.90);
+                    }
+                    // posterior update per rule
+                    tr.add(
+                        "posterior",
+                        OpCategory::Other,
+                        PhaseKind::Symbolic,
+                        raven::Rule::ALL.len() as u64,
+                        64,
+                        64,
+                        &[],
+                    );
+                }
+                let ex = tr.add(
+                    format!("execute_a{a}"),
+                    OpCategory::VectorElem,
+                    PhaseKind::Symbolic,
+                    k * k * g as u64,
+                    k * k * 8,
+                    k * 8,
+                    &[dep],
+                );
+                tr.set_sparsity(ex, 0.93);
+                sp = ex;
+            }
+            // candidate scoring + argmax
+            for c in 0..8 {
+                tr.add(
+                    format!("cand_score{c}"),
+                    OpCategory::VectorElem,
+                    PhaseKind::Symbolic,
+                    3 * k,
+                    3 * k * 8,
+                    8,
+                    &[sp],
+                );
+            }
+            tr.add(
+                "answer_argmax",
+                OpCategory::Other,
+                PhaseKind::Symbolic,
+                8,
+                64,
+                8,
+                &[],
+            );
+        }
+        tr
+    }
+
+    fn memory(&self) -> MemoryStats {
+        let feat = 8 * 8 * 16u64;
+        MemoryStats {
+            weights_bytes: (9 * 8 + 9 * 8 * 16 + feat * 128 + 128 * 8 * 3) * 4,
+            codebook_bytes: 0, // PrAE keeps raw PMFs (no codebooks)
+            neural_working_bytes: 16 * 32 * 32 * 16 * 4,
+            // exhaustive symbolic search over intermediate scene tensors
+            symbolic_working_bytes: (self.grid * self.grid) as u64
+                * (self.attr_k as u64).pow(2)
+                * 8
+                * 64,
+        }
+    }
+
+    fn symbolic_depends_on_neural(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_clean_instances() {
+        let p = Prae::default();
+        let acc = p.accuracy(40, 0.97, 11);
+        assert!(acc > 0.8, "accuracy {acc}");
+    }
+
+    #[test]
+    fn accuracy_degrades_with_noise() {
+        let p = Prae::default();
+        let hi = p.accuracy(30, 0.97, 12);
+        let lo = p.accuracy(30, 0.35, 12);
+        assert!(hi > lo, "hi {hi} lo {lo}");
+    }
+
+    #[test]
+    fn grid2_instances_solve() {
+        let p = Prae {
+            grid: 2,
+            ..Default::default()
+        };
+        let acc = p.accuracy(30, 0.97, 13);
+        assert!(acc > 0.6, "accuracy {acc}");
+    }
+
+    #[test]
+    fn scene_sparsity_above_90pct() {
+        let p = Prae::default();
+        for pt in p.measure_sparsity(1) {
+            assert!(pt.sparsity > 0.8, "{pt:?}");
+        }
+    }
+
+    #[test]
+    fn trace_symbolic_depends_on_neural() {
+        let p = Prae::default();
+        let tr = p.trace();
+        tr.validate().unwrap();
+        // at least one symbolic op depends on a neural op
+        let has_cross = tr.ops.iter().any(|o| {
+            o.phase == PhaseKind::Symbolic
+                && o.deps
+                    .iter()
+                    .any(|&d| tr.ops[d].phase == PhaseKind::Neural)
+        });
+        assert!(has_cross);
+    }
+}

@@ -1,0 +1,258 @@
+//! Probabilistic rule engine shared by PrAE and NVSA: rule-likelihood
+//! scoring (abduction) and rule execution (prediction) over per-attribute
+//! PMFs — the paper's "probabilistic abduction and execution" core.
+
+use super::raven::Rule;
+
+/// Normalize a PMF in place (no-op for all-zero input).
+pub fn normalize(pmf: &mut [f64]) {
+    let s: f64 = pmf.iter().sum();
+    if s > 1e-300 {
+        for p in pmf.iter_mut() {
+            *p /= s;
+        }
+    }
+}
+
+/// Likelihood that a complete row of PMFs follows `rule`.
+pub fn row_likelihood(rule: Rule, row: &[&[f64]], k: usize) -> f64 {
+    let g = row.len();
+    match rule {
+        Rule::Constant => (0..k).map(|v| row.iter().map(|p| p[v]).product::<f64>()).sum(),
+        Rule::Progression(s) => (0..k)
+            .map(|v0| {
+                (0..g)
+                    .map(|c| row[c][((v0 as i64 + s as i64 * c as i64).rem_euclid(k as i64)) as usize])
+                    .product::<f64>()
+            })
+            .sum(),
+        Rule::Arithmetic => {
+            // last = sum of predecessors mod k; marginalize predecessors.
+            // dist over running sum:
+            let mut sum_dist = vec![0.0f64; k];
+            sum_dist[0] = 1.0;
+            let mut lik = 0.0;
+            let mut joint = 1.0;
+            let _ = joint;
+            // convolve predecessor PMFs
+            for c in 0..g - 1 {
+                let mut next = vec![0.0f64; k];
+                for (s0, &ps) in sum_dist.iter().enumerate() {
+                    if ps == 0.0 {
+                        continue;
+                    }
+                    for (v, &pv) in row[c].iter().enumerate() {
+                        next[(s0 + v) % k] += ps * pv;
+                    }
+                }
+                sum_dist = next;
+            }
+            for (v, &pl) in row[g - 1].iter().enumerate() {
+                lik += sum_dist[v] * pl;
+            }
+            joint = lik;
+            joint
+        }
+        Rule::DistributeThree => {
+            // rows are cyclic rotations of a value multiset; score all
+            // rotations of the row's own argmax multiset.
+            let base: Vec<usize> = row
+                .iter()
+                .map(|p| argmax(p))
+                .collect();
+            (0..g)
+                .map(|r| {
+                    (0..g)
+                        .map(|c| row[c][base[(c + r) % g]])
+                        .product::<f64>()
+                })
+                .sum::<f64>()
+                / g as f64
+        }
+    }
+}
+
+/// Abduce the rule for an attribute from the complete rows.
+/// `rows[r]` holds the PMFs of row r's panels. Returns (best rule,
+/// normalized posterior over `Rule::ALL`).
+pub fn abduce(rows: &[Vec<&[f64]>], k: usize) -> (Rule, Vec<f64>) {
+    let mut post: Vec<f64> = Rule::ALL
+        .iter()
+        .map(|r| {
+            rows.iter()
+                .map(|row| row_likelihood(*r, row, k).max(1e-12))
+                .product::<f64>()
+        })
+        .collect();
+    normalize(&mut post);
+    let best = post
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    (Rule::ALL[best], post)
+}
+
+/// Execute `rule` on a partial last row (g-1 known PMFs) to predict the
+/// missing panel's PMF.
+pub fn execute(rule: Rule, partial: &[&[f64]], k: usize, first_row: &[&[f64]]) -> Vec<f64> {
+    let g = partial.len() + 1;
+    let mut pred = vec![0.0f64; k];
+    match rule {
+        Rule::Constant => {
+            for (v, p) in pred.iter_mut().enumerate() {
+                *p = partial.iter().map(|q| q[v]).product();
+            }
+        }
+        Rule::Progression(s) => {
+            for (v, p) in pred.iter_mut().enumerate() {
+                // v = v0 + s*(g-1); check consistency of all known cells
+                let v0 = (v as i64 - s as i64 * (g as i64 - 1)).rem_euclid(k as i64);
+                *p = (0..g - 1)
+                    .map(|c| {
+                        partial[c][((v0 + s as i64 * c as i64).rem_euclid(k as i64)) as usize]
+                    })
+                    .product();
+            }
+        }
+        Rule::Arithmetic => {
+            let mut sum_dist = vec![0.0f64; k];
+            sum_dist[0] = 1.0;
+            for q in partial {
+                let mut next = vec![0.0f64; k];
+                for (s0, &ps) in sum_dist.iter().enumerate() {
+                    if ps == 0.0 {
+                        continue;
+                    }
+                    for (v, &pv) in q.iter().enumerate() {
+                        next[(s0 + v) % k] += ps * pv;
+                    }
+                }
+                sum_dist = next;
+            }
+            pred = sum_dist;
+        }
+        Rule::DistributeThree => {
+            // remaining value of the first row's multiset after removing
+            // the partial row's argmaxes
+            let mut multiset: Vec<usize> = first_row.iter().map(|p| argmax(p)).collect();
+            for q in partial {
+                let v = argmax(q);
+                if let Some(pos) = multiset.iter().position(|&m| m == v) {
+                    multiset.remove(pos);
+                }
+            }
+            if multiset.is_empty() {
+                pred = vec![1.0 / k as f64; k];
+            } else {
+                for m in multiset {
+                    pred[m] += 1.0;
+                }
+            }
+        }
+    }
+    normalize(&mut pred);
+    if pred.iter().sum::<f64>() < 0.5 {
+        // degenerate: fall back to uniform
+        pred = vec![1.0 / k as f64; k];
+    }
+    pred
+}
+
+/// Argmax of a PMF.
+pub fn argmax(p: &[f64]) -> usize {
+    p.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::workloads::raven::{self, N_ATTRS};
+
+    fn peaked(v: usize, k: usize) -> Vec<f64> {
+        let mut p = vec![0.02 / (k - 1) as f64; k];
+        p[v] = 0.98;
+        normalize(&mut p);
+        p
+    }
+
+    #[test]
+    fn constant_rule_scores_highest_on_constant_row() {
+        let k = 8;
+        let row: Vec<Vec<f64>> = vec![peaked(3, k), peaked(3, k), peaked(3, k)];
+        let refs: Vec<&[f64]> = row.iter().map(|p| p.as_slice()).collect();
+        let lc = row_likelihood(Rule::Constant, &refs, k);
+        let lp = row_likelihood(Rule::Progression(1), &refs, k);
+        assert!(lc > 10.0 * lp, "{lc} vs {lp}");
+    }
+
+    #[test]
+    fn progression_execute_predicts_next() {
+        let k = 8;
+        let partial: Vec<Vec<f64>> = vec![peaked(2, k), peaked(3, k)];
+        let refs: Vec<&[f64]> = partial.iter().map(|p| p.as_slice()).collect();
+        let first: Vec<Vec<f64>> = vec![peaked(0, k), peaked(1, k), peaked(2, k)];
+        let frefs: Vec<&[f64]> = first.iter().map(|p| p.as_slice()).collect();
+        let pred = execute(Rule::Progression(1), &refs, k, &frefs);
+        assert_eq!(argmax(&pred), 4);
+    }
+
+    #[test]
+    fn arithmetic_execute_predicts_sum() {
+        let k = 8;
+        let partial: Vec<Vec<f64>> = vec![peaked(5, k), peaked(6, k)];
+        let refs: Vec<&[f64]> = partial.iter().map(|p| p.as_slice()).collect();
+        let pred = execute(Rule::Arithmetic, &refs, k, &refs);
+        assert_eq!(argmax(&pred), (5 + 6) % 8);
+    }
+
+    #[test]
+    fn abduction_recovers_generator_rules() {
+        let mut rng = Rng::new(7);
+        let mut correct = 0;
+        let mut total = 0;
+        for _ in 0..40 {
+            let inst = raven::generate(&mut rng, 3, 8);
+            let pmfs = raven::panel_pmfs(&inst, 0.97);
+            for a in 0..N_ATTRS {
+                // two complete rows
+                let rows: Vec<Vec<&[f64]>> = (0..2)
+                    .map(|r| {
+                        (0..3)
+                            .map(|c| pmfs[r * 3 + c][a].as_slice())
+                            .collect()
+                    })
+                    .collect();
+                let (got, post) = abduce(&rows, 8);
+                assert!((post.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+                total += 1;
+                // rule identity can be ambiguous (e.g. constant rows also
+                // fit D3 rotations); count exact matches
+                if got == inst.rules[a] {
+                    correct += 1;
+                }
+            }
+        }
+        assert!(
+            correct as f64 / total as f64 > 0.6,
+            "rule recovery too weak: {correct}/{total}"
+        );
+    }
+
+    #[test]
+    fn pmfs_stay_normalized_through_execute() {
+        let k = 8;
+        let partial: Vec<Vec<f64>> = vec![peaked(1, k), peaked(4, k)];
+        let refs: Vec<&[f64]> = partial.iter().map(|p| p.as_slice()).collect();
+        for rule in Rule::ALL {
+            let pred = execute(rule, &refs, k, &refs);
+            assert!((pred.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{rule:?}");
+        }
+    }
+}

@@ -1,0 +1,304 @@
+//! VSAIT — VSA-based unpaired image-to-image translation (Theiss et al.
+//! [21]): ConvNet features are projected into random hypervector space,
+//! bound with an invertible domain key, and translated by codebook
+//! lookup.  The symbolic phase's binding/unbinding consistency is what
+//! prevents semantic flipping — measured here as flip rate.
+
+use super::Workload;
+use crate::profiler::memstat::MemoryStats;
+use crate::profiler::taxonomy::{OpCategory, PhaseKind};
+use crate::profiler::trace::Trace;
+use crate::util::Rng;
+use crate::vsa::{BinaryCodebook, BinaryHV};
+
+/// VSAIT workload descriptor.
+#[derive(Debug, Clone)]
+pub struct Vsait {
+    /// Images per translation batch.
+    pub batch: usize,
+    /// Feature patches per image.
+    pub patches: usize,
+    /// Hypervector dimensionality.
+    pub hd_dim: usize,
+    /// Semantic classes in the target codebook.
+    pub classes: usize,
+}
+
+impl Default for Vsait {
+    fn default() -> Self {
+        Vsait {
+            batch: 4,
+            patches: 64,
+            hd_dim: 2048,
+            classes: 19, // Cityscapes-like label set
+        }
+    }
+}
+
+/// The symbolic translation engine.
+pub struct VsaitEngine {
+    pub cfg: Vsait,
+    /// Source→target domain key (invertible binding).
+    pub key: BinaryHV,
+    /// Target-domain semantic prototypes.
+    pub target_codebook: BinaryCodebook,
+}
+
+impl VsaitEngine {
+    pub fn new(cfg: Vsait, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let key = BinaryHV::random(&mut rng, cfg.hd_dim);
+        let target_codebook = BinaryCodebook::random(&mut rng, cfg.classes, cfg.hd_dim);
+        VsaitEngine {
+            cfg,
+            key,
+            target_codebook,
+        }
+    }
+
+    /// Translate one patch hypervector: bind with the domain key and find
+    /// the nearest target prototype. Returns (class, noisy round-trip).
+    pub fn translate(&self, patch: &BinaryHV) -> (usize, BinaryHV) {
+        let mapped = patch.bind(&self.key);
+        let (class, _) = self.target_codebook.nearest(&mapped);
+        // inverse mapping (bind is self-inverse) reconstructs the source
+        let back = mapped.bind(&self.key);
+        (class, back)
+    }
+
+    /// Semantic-flip rate: fraction of patches whose class changes when
+    /// the patch is perturbed by `noise_frac` bit flips.  VSAIT's claim:
+    /// hypervector binding keeps this low.
+    pub fn flip_rate(&self, n_patches: usize, noise_frac: f64, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut flips = 0;
+        for _ in 0..n_patches {
+            // patch = noisy prototype so it has a well-defined class
+            let class = rng.below(self.cfg.classes);
+            let proto = self.target_codebook.item(class).bind(&self.key);
+            let mut patch = proto.clone();
+            for i in rng.sample_indices(self.cfg.hd_dim, (self.cfg.hd_dim as f64 * 0.05) as usize)
+            {
+                patch.set(i, !patch.get(i));
+            }
+            let (c0, _) = self.translate(&patch);
+            let mut noisy = patch.clone();
+            let flip_n = (self.cfg.hd_dim as f64 * noise_frac) as usize;
+            for i in rng.sample_indices(self.cfg.hd_dim, flip_n) {
+                noisy.set(i, !noisy.get(i));
+            }
+            let (c1, _) = self.translate(&noisy);
+            if c0 != c1 {
+                flips += 1;
+            }
+        }
+        flips as f64 / n_patches as f64
+    }
+}
+
+impl Workload for Vsait {
+    fn name(&self) -> &'static str {
+        "VSAIT"
+    }
+
+    fn ns_category(&self) -> &'static str {
+        "Neuro|Symbolic"
+    }
+
+    fn trace(&self) -> Trace {
+        let mut tr = Trace::new("VSAIT");
+        let b = self.batch as u64;
+        let np = self.patches as u64;
+        let d = self.hd_dim as u64;
+        let cls = self.classes as u64;
+        // ---- neural: generator ConvNet (GAN-style, heavier) -------------
+        let mut hw = 32u64;
+        let mut prev: Vec<usize> = vec![];
+        for (ci, co) in [(3u64, 16u64), (16, 32), (32, 64)] {
+            let conv = tr.add(
+                format!("gen_conv{ci}x{co}"),
+                OpCategory::Conv,
+                PhaseKind::Neural,
+                2 * b * hw * hw * 9 * ci * co,
+                b * hw * hw * (ci + co) * 4,
+                b * hw * hw * co * 4,
+                &prev,
+            );
+            let act = tr.add(
+                "relu",
+                OpCategory::VectorElem,
+                PhaseKind::Neural,
+                b * hw * hw * co,
+                b * hw * hw * co * 8,
+                0,
+                &[conv],
+            );
+            prev = vec![act];
+            hw /= 2;
+        }
+        // residual blocks + decoder (GAN generator is encoder-decoder)
+        for blk in 0..4u64 {
+            let conv = tr.add(
+                format!("res_block{blk}"),
+                OpCategory::Conv,
+                PhaseKind::Neural,
+                2 * b * 16 * 16 * 9 * 64 * 64,
+                b * 16 * 16 * 128 * 4,
+                b * 16 * 16 * 64 * 4,
+                &prev,
+            );
+            let act = tr.add(
+                "relu",
+                OpCategory::VectorElem,
+                PhaseKind::Neural,
+                b * 16 * 16 * 64,
+                b * 16 * 16 * 64 * 8,
+                0,
+                &[conv],
+            );
+            prev = vec![act];
+        }
+        for (ci, co, res) in [(64u64, 32u64, 16u64), (32, 16, 32), (16, 3, 32)] {
+            let conv = tr.add(
+                format!("dec_conv{ci}x{co}"),
+                OpCategory::Conv,
+                PhaseKind::Neural,
+                2 * b * res * res * 9 * ci * co,
+                b * res * res * (ci + co) * 4,
+                b * res * res * co * 4,
+                &prev,
+            );
+            prev = vec![conv];
+        }
+        let feat_dim = 256u64;
+        let proj_in = tr.add(
+            "feature_collect",
+            OpCategory::DataTransform,
+            PhaseKind::Neural,
+            b * np * feat_dim,
+            b * np * feat_dim * 4,
+            b * np * feat_dim * 4,
+            &prev,
+        );
+        // ---- symbolic: random projection + bind + lookup per patch ------
+        let proj = tr.add(
+            "hv_projection",
+            OpCategory::MatMul,
+            PhaseKind::Symbolic,
+            2 * b * np * feat_dim * d,
+            (b * np * feat_dim + feat_dim * d) * 4,
+            b * np * d / 8,
+            &[proj_in],
+        );
+        let sgn = tr.add(
+            "bipolarize",
+            OpCategory::VectorElem,
+            PhaseKind::Symbolic,
+            b * np * d,
+            b * np * d * 4,
+            b * np * d / 8,
+            &[proj],
+        );
+        let mut last = sgn;
+        for p in 0..np {
+            // per-patch streaming binds and codebook lookups (small,
+            // launch-bound on GPU — the paper's inefficiency)
+            let bind = tr.add(
+                format!("key_bind_p{p}"),
+                OpCategory::VectorElem,
+                PhaseKind::Symbolic,
+                b * d / 8,
+                b * d / 4,
+                b * d / 8,
+                &[sgn],
+            );
+            let lookup = tr.add(
+                format!("codebook_lookup_p{p}"),
+                OpCategory::VectorElem,
+                PhaseKind::Symbolic,
+                2 * b * cls * d,
+                (cls * d / 8 + b * d / 8) * 2,
+                b * cls * 4,
+                &[bind],
+            );
+            let unbind = tr.add(
+                format!("inv_bind_p{p}"),
+                OpCategory::VectorElem,
+                PhaseKind::Symbolic,
+                b * d / 8,
+                b * d / 4,
+                b * d / 8,
+                &[lookup],
+            );
+            tr.set_sparsity(lookup, 0.90);
+            last = unbind;
+        }
+        tr.add(
+            "consistency_check",
+            OpCategory::Other,
+            PhaseKind::Symbolic,
+            b * np,
+            b * np * 8,
+            8,
+            &[last],
+        );
+        tr
+    }
+
+    fn memory(&self) -> MemoryStats {
+        let d = self.hd_dim as u64;
+        MemoryStats {
+            weights_bytes: (9 * 3 * 16 + 9 * 16 * 32 + 9 * 32 * 64) as u64 * 4,
+            codebook_bytes: (256 * d * 4) + self.classes as u64 * d / 8,
+            neural_working_bytes: self.batch as u64 * 32 * 32 * 64 * 4,
+            symbolic_working_bytes: (self.batch * self.patches) as u64 * d / 8 * 3,
+        }
+    }
+
+    fn symbolic_depends_on_neural(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binding_roundtrip_is_exact() {
+        let e = VsaitEngine::new(Vsait::default(), 1);
+        let mut rng = Rng::new(2);
+        let patch = BinaryHV::random(&mut rng, e.cfg.hd_dim);
+        let (_, back) = e.translate(&patch);
+        assert_eq!(back, patch, "bind∘bind must be identity");
+    }
+
+    #[test]
+    fn clean_prototypes_classify_correctly() {
+        let e = VsaitEngine::new(Vsait::default(), 3);
+        for class in 0..e.cfg.classes {
+            let patch = e.target_codebook.item(class).bind(&e.key);
+            let (c, _) = e.translate(&patch);
+            assert_eq!(c, class);
+        }
+    }
+
+    #[test]
+    fn semantic_flip_rate_low_under_moderate_noise() {
+        let e = VsaitEngine::new(Vsait::default(), 4);
+        let rate = e.flip_rate(60, 0.10, 5);
+        assert!(rate < 0.1, "flip rate {rate} too high — VSAIT robustness broken");
+    }
+
+    #[test]
+    fn flip_rate_rises_with_noise() {
+        // At 50% bit flips the patch is fully decorrelated from its
+        // prototype, so the class becomes essentially random.
+        let e = VsaitEngine::new(Vsait::default(), 6);
+        let low = e.flip_rate(60, 0.05, 7);
+        let high = e.flip_rate(60, 0.50, 7);
+        assert!(high > low, "low {low} high {high}");
+        assert!(high > 0.3, "high-noise flip rate {high} suspiciously low");
+        assert!(low < 0.1, "hypervector robustness lost: {low}");
+    }
+}

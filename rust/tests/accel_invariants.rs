@@ -1,0 +1,196 @@
+//! Property-based invariants of the accelerator simulator: the compiled
+//! kernels must agree with the functional VSA substrate for random data,
+//! layouts, and configurations, and SOPC/MOPC must be architecturally
+//! indistinguishable.
+
+use nscog::accel::compiler::{KernelCompiler, Operand, VecRef};
+use nscog::accel::isa::ControlMethod;
+use nscog::accel::pipeline::Accelerator;
+use nscog::accel::AccelConfig;
+use nscog::util::prop::forall_res;
+use nscog::util::Rng;
+use nscog::vsa::{BinaryCodebook, BinaryHV};
+
+fn random_cfg(rng: &mut Rng) -> AccelConfig {
+    match rng.below(3) {
+        0 => AccelConfig::acc2(),
+        1 => AccelConfig::acc4(),
+        _ => AccelConfig::acc8(),
+    }
+}
+
+#[test]
+fn prop_search_always_matches_functional_nearest() {
+    forall_res(
+        0xA11CE,
+        25,
+        |rng| {
+            let cfg = random_cfg(rng);
+            let n_items = 3 + rng.below(40);
+            let dim = 512 * (1 + rng.below(8));
+            (cfg, n_items, dim, rng.next_u64())
+        },
+        |(cfg, n_items, dim, seed)| {
+            let mut rng = Rng::new(*seed);
+            let cb = BinaryCodebook::random(&mut rng, *n_items, *dim);
+            let q = BinaryHV::random(&mut rng, *dim);
+            let mut acc = Accelerator::new(cfg.clone());
+            let layout = acc.load_items(cb.items(), 2);
+            let kc = KernelCompiler::new(cfg.clone(), layout);
+            acc.stage_scratch(&kc.layout, 0, &q);
+            acc.reset_search();
+            acc.run(&kc.search(0, *n_items), ControlMethod::Mopc);
+            let (gid, score) = acc.global_best(&kc.layout);
+            let (eid, escore) = cb.nearest(&q);
+            if score != escore {
+                return Err(format!("score {score} != functional {escore}"));
+            }
+            if gid != eid {
+                return Err(format!("winner {gid} != functional {eid}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bind_chain_matches_functional() {
+    forall_res(
+        0xB14D,
+        20,
+        |rng| {
+            let cfg = random_cfg(rng);
+            let n_ops = 2 + rng.below(3);
+            let dim = 512 * (1 + rng.below(4));
+            (cfg, n_ops, dim, rng.next_u64())
+        },
+        |(cfg, n_ops, dim, seed)| {
+            let mut rng = Rng::new(*seed);
+            let cb = BinaryCodebook::random(&mut rng, 8, *dim);
+            let ids: Vec<usize> = (0..*n_ops).map(|_| rng.below(8)).collect();
+            let mut acc = Accelerator::new(cfg.clone());
+            let layout = acc.load_items(cb.items(), 2);
+            let kc = KernelCompiler::new(cfg.clone(), layout);
+            let ops: Vec<Operand> = ids
+                .iter()
+                .map(|&i| Operand::plain(VecRef::Item(i)))
+                .collect();
+            acc.run(&kc.bind(&ops, 0), ControlMethod::Sopc);
+            let mut expect = cb.item(ids[0]).clone();
+            for &i in &ids[1..] {
+                expect = expect.bind(cb.item(i));
+            }
+            for t in 0..acc.cfg.n_tiles {
+                if acc.read_scratch(&kc.layout, t, 0) != expect {
+                    return Err(format!("tile {t} result mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sopc_mopc_identical_state_and_energy() {
+    forall_res(
+        0x50BC1,
+        15,
+        |rng| (random_cfg(rng), rng.next_u64()),
+        |(cfg, seed)| {
+            let mut rng = Rng::new(*seed);
+            let cb = BinaryCodebook::random(&mut rng, 12, 2048);
+            let q = BinaryHV::random(&mut rng, 2048);
+            let build = || {
+                let mut acc = Accelerator::new(cfg.clone());
+                let layout = acc.load_items(cb.items(), 3);
+                let kc = KernelCompiler::new(cfg.clone(), layout);
+                (acc, kc)
+            };
+            let (mut a, kc) = build();
+            let (mut b, _) = build();
+            for acc in [&mut a, &mut b] {
+                acc.stage_scratch(&kc.layout, 0, &q);
+                acc.reset_search();
+            }
+            let prog = kc.project(0, &[0, 1, 2, 3, 4], 1);
+            let ra = a.run(&prog, ControlMethod::Sopc);
+            let rb = b.run(&prog, ControlMethod::Mopc);
+            if a.read_scratch(&kc.layout, 0, 1) != b.read_scratch(&kc.layout, 0, 1) {
+                return Err("projection state differs".into());
+            }
+            if (ra.dynamic_j - rb.dynamic_j).abs() > 1e-18 {
+                return Err("dynamic energy differs between controls".into());
+            }
+            if rb.cycles >= ra.cycles {
+                return Err(format!(
+                    "MOPC ({}) not faster than SOPC ({})",
+                    rb.cycles, ra.cycles
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ca90_compressed_codebook_roundtrips() {
+    forall_res(
+        0xCA90,
+        20,
+        |rng| (8 + rng.below(32), 512 * (1 + rng.below(16)), rng.next_u64()),
+        |(n, dim, seed)| {
+            let mut rng = Rng::new(*seed);
+            let cb = BinaryCodebook::random(&mut rng, *n, *dim);
+            // compress to seeds, re-expand, and check expansion determinism
+            let expanded = BinaryCodebook::from_seeds(&cb.seeds(), *dim);
+            let again = BinaryCodebook::from_seeds(&cb.seeds(), *dim);
+            for i in 0..*n {
+                if expanded.item(i) != again.item(i) {
+                    return Err(format!("CA-90 expansion non-deterministic at {i}"));
+                }
+                // expanded items stay quasi-orthogonal
+                for j in 0..i {
+                    let cos = expanded.item(i).cosine(expanded.item(j));
+                    if cos.abs() > 0.2 {
+                        return Err(format!("items {i},{j} correlated: {cos}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_energy_monotone_in_tile_count_for_broadcast() {
+    // Broadcasting the same search to more tiles must not reduce total
+    // dynamic energy (per-tile stages replicate).
+    forall_res(
+        0xE4E61,
+        10,
+        |rng| rng.next_u64(),
+        |seed| {
+            let mut rng = Rng::new(*seed);
+            let cb = BinaryCodebook::random(&mut rng, 16, 1024);
+            let q = BinaryHV::random(&mut rng, 1024);
+            let mut energies = Vec::new();
+            for cfg in [AccelConfig::acc2(), AccelConfig::acc8()] {
+                let mut acc = Accelerator::new(cfg.clone());
+                let layout = acc.load_items(cb.items(), 2);
+                let kc = KernelCompiler::new(cfg, layout);
+                acc.stage_scratch(&kc.layout, 0, &q);
+                acc.reset_search();
+                let r = acc.run(&kc.search(0, 16), ControlMethod::Mopc);
+                energies.push((r.time_s, r.dynamic_j));
+            }
+            // Acc8 must be faster; dynamic energy similar scale (same work)
+            if energies[1].0 >= energies[0].0 {
+                return Err(format!(
+                    "Acc8 search not faster: {:?}",
+                    energies
+                ));
+            }
+            Ok(())
+        },
+    );
+}

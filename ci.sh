@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# CI entry point: format check, release build, tests, and a hot-path bench
+# smoke run that emits BENCH_hotpath.json so successive PRs accumulate a
+# perf trajectory (see PERF.md).
+#
+# Usage: ./ci.sh            # full pipeline
+#        NSCOG_THREADS=4 ./ci.sh   # also exercises the threaded scans
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== fmt =="
+# Advisory: rustfmt is not installed in every environment this repo
+# builds in; when present, drift is reported but does not fail the run
+# (the build/test/bench gates below are the hard ones).
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all --check || echo "WARNING: cargo fmt --check reported drift"
+else
+    echo "rustfmt unavailable; skipping format check"
+fi
+
+echo "== build (release) =="
+cargo build --release
+
+echo "== tests =="
+cargo test -q
+
+echo "== bench smoke: hotpath =="
+NSCOG_BENCH_JSON="$(pwd)/BENCH_hotpath.json" cargo bench --bench hotpath
+
+echo "== perf trajectory =="
+test -s BENCH_hotpath.json && echo "BENCH_hotpath.json written:" && cat BENCH_hotpath.json
+
+echo "CI OK"

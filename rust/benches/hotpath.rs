@@ -1,19 +1,81 @@
 //! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf): VSA substrate ops,
 //! the accelerator simulator's word throughput, and PJRT execution.
+//!
+//! The L3 kernel-engine entries measure the optimized kernels against the
+//! retained reference implementations in the same run (word-sliced vs
+//! per-bit `majority`, FFT vs direct `circular_conv`, batched vs
+//! per-query `nearest`, scratch-reusing vs allocating `factorize`) and
+//! emit machine-readable results to `BENCH_hotpath.json` (path override:
+//! `NSCOG_BENCH_JSON`) so CI can track the perf trajectory across PRs.
 use nscog::accel::{isa::ControlMethod, AccelConfig};
 use nscog::util::bench::{bench, black_box, sample};
+use nscog::util::stats::Summary;
 use nscog::util::Rng;
+use nscog::vsa::hypervector::{majority, majority_ref};
 use nscog::vsa::{ops, BinaryCodebook, BinaryHV, RealCodebook, RealHV, Resonator};
 use nscog::workloads::suite::{CompiledSuite, SuiteKind};
+
+/// One recorded measurement for the JSON trajectory file.
+struct Entry {
+    name: String,
+    s: Summary,
+}
+
+fn record(entries: &mut Vec<Entry>, name: &str, f: impl FnMut()) -> Summary {
+    let s = bench(name, f);
+    entries.push(Entry {
+        name: name.to_string(),
+        s,
+    });
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_json(entries: &[Entry], speedups: &[(String, f64, f64)]) {
+    let path = std::env::var("NSCOG_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    let mut out = String::from("{\n  \"bench\": \"hotpath\",\n  \"entries\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"p50_s\": {:e}, \"p95_s\": {:e}, \"min_s\": {:e}, \"samples\": {}}}{}\n",
+            json_escape(&e.name),
+            e.s.p50,
+            e.s.p95,
+            e.s.min,
+            e.s.n,
+            if i + 1 < entries.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ],\n  \"speedups\": [\n");
+    for (i, (kernel, ref_p50, opt_p50)) in speedups.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"ref_p50_s\": {:e}, \"opt_p50_s\": {:e}, \"speedup\": {:.2}}}{}\n",
+            json_escape(kernel),
+            ref_p50,
+            opt_p50,
+            ref_p50 / opt_p50,
+            if i + 1 < speedups.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
 
 fn main() {
     let mut rng = Rng::new(42);
     let d = 8192;
+    let mut entries: Vec<Entry> = Vec::new();
+    let mut speedups: Vec<(String, f64, f64)> = Vec::new();
 
     // --- L3 VSA substrate -------------------------------------------------
     let a = BinaryHV::random(&mut rng, d);
     let b = BinaryHV::random(&mut rng, d);
-    let s = bench("vsa/binary_bind 8192b", || {
+    let s = record(&mut entries, "vsa/binary_bind 8192b", || {
         black_box(a.bind(&b));
     });
     println!(
@@ -21,23 +83,68 @@ fn main() {
         (3.0 * d as f64 / 8.0) / s.p50 / 1e9
     );
     let mut acc = a.clone();
-    bench("vsa/binary_bind_assign 8192b (no alloc)", || {
+    record(&mut entries, "vsa/binary_bind_assign 8192b (no alloc)", || {
         acc.bind_assign(black_box(&b));
     });
+
+    // majority bundling: per-bit reference vs word-sliced CSA kernel
+    let members: Vec<BinaryHV> = (0..9).map(|_| BinaryHV::random(&mut rng, d)).collect();
+    let refs: Vec<&BinaryHV> = members.iter().collect();
+    let s_ref = record(&mut entries, "vsa/majority_ref 9x8192b (per-bit)", || {
+        black_box(majority_ref(&refs, 7));
+    });
+    let s_opt = record(&mut entries, "vsa/majority 9x8192b (word-sliced)", || {
+        black_box(majority(&refs, 7));
+    });
+    println!("    → word-sliced speedup {:.1}x", s_ref.p50 / s_opt.p50);
+    speedups.push(("majority 9x8192b".into(), s_ref.p50, s_opt.p50));
+
+    // codebook scan: single query, then 100 queries per-query vs batched
     let cb = BinaryCodebook::random(&mut rng, 120, d);
     let q = BinaryHV::random(&mut rng, d);
-    let s = bench("vsa/nearest 120x8192b", || {
+    let s = record(&mut entries, "vsa/nearest 120x8192b", || {
         black_box(cb.nearest(&q));
     });
     println!(
         "    → {:.2} GB/s codebook scan",
         (120.0 * d as f64 / 8.0) / s.p50 / 1e9
     );
+    let queries: Vec<BinaryHV> = (0..100).map(|_| BinaryHV::random(&mut rng, d)).collect();
+    let s_ref = record(&mut entries, "vsa/nearest x100 per-query loop", || {
+        for query in &queries {
+            black_box(cb.nearest(query));
+        }
+    });
+    let s_opt = record(&mut entries, "vsa/nearest_batch 100q (blocked)", || {
+        black_box(cb.nearest_batch_with(&queries, 1));
+    });
+    println!("    → query-blocked speedup {:.1}x", s_ref.p50 / s_opt.p50);
+    speedups.push(("nearest 120x8192b x100q".into(), s_ref.p50, s_opt.p50));
+    let threads = nscog::util::parallel::configured_threads();
+    if threads > 1 {
+        let s_par = record(
+            &mut entries,
+            &format!("vsa/nearest_batch 100q ({threads} threads)"),
+            || {
+                black_box(cb.nearest_batch_with(&queries, threads));
+            },
+        );
+        println!("    → threaded speedup {:.1}x", s_ref.p50 / s_par.p50);
+    }
+
+    // HRR binding: direct O(D²) vs FFT O(D log D) at D=1024
     let ra = RealHV::random_bipolar(&mut rng, 1024);
     let rb = RealHV::random_bipolar(&mut rng, 1024);
-    bench("vsa/circular_conv 1024 f32", || {
+    let s_ref = record(&mut entries, "vsa/circular_conv_direct 1024 f32", || {
+        black_box(ops::circular_conv_direct(&ra, &rb));
+    });
+    let s_opt = record(&mut entries, "vsa/circular_conv 1024 f32 (fft)", || {
         black_box(ops::circular_conv(&ra, &rb));
     });
+    println!("    → fft speedup {:.1}x", s_ref.p50 / s_opt.p50);
+    speedups.push(("circular_conv 1024".into(), s_ref.p50, s_opt.p50));
+
+    // resonator: full factorize, then steady-state with reused buffers
     let res = Resonator::new(
         (0..3)
             .map(|_| RealCodebook::random_bipolar(&mut rng, 10, 1024))
@@ -45,9 +152,28 @@ fn main() {
         60,
     );
     let scene = res.compose(&[1, 2, 3]);
-    bench("vsa/resonator_factorize 3x10x1024", || {
+    let s_alloc = record(&mut entries, "vsa/resonator_factorize 3x10x1024", || {
         black_box(res.factorize(&scene));
     });
+    let mut scratch = res.make_scratch();
+    let mut estimates = res.init_estimates();
+    let s_reuse = record(
+        &mut entries,
+        "vsa/resonator_factorize_with (reused bufs)",
+        || {
+            res.init_estimates_into(&mut estimates);
+            black_box(res.factorize_with(&scene, &mut estimates, &mut scratch));
+        },
+    );
+    println!(
+        "    → buffer-reuse speedup {:.2}x",
+        s_alloc.p50 / s_reuse.p50
+    );
+    speedups.push((
+        "resonator_factorize 3x10x1024".into(),
+        s_alloc.p50,
+        s_reuse.p50,
+    ));
 
     // --- accel simulator ---------------------------------------------------
     let mut suite = CompiledSuite::build(SuiteKind::React, AccelConfig::acc4(), 7);
@@ -59,7 +185,11 @@ fn main() {
         0.3,
         1.0,
     );
-    let t = nscog::util::stats::Summary::of(&times);
+    let t = Summary::of(&times);
+    entries.push(Entry {
+        name: "accel/simulate REACT Acc4".into(),
+        s: t,
+    });
     println!(
         "accel/simulate REACT Acc4: {} words in {} → {:.2} M words/s",
         words,
@@ -78,10 +208,12 @@ fn main() {
                 .collect(),
         );
         rt.load("nvsa_frontend").unwrap();
-        bench("runtime/nvsa_frontend PJRT execute", || {
+        record(&mut entries, "runtime/nvsa_frontend PJRT execute", || {
             black_box(rt.run("nvsa_frontend", std::slice::from_ref(&panels)).unwrap());
         });
     } else {
         println!("runtime/: artifacts not built, skipping PJRT bench");
     }
+
+    write_json(&entries, &speedups);
 }

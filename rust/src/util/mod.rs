@@ -1,10 +1,13 @@
 //! Self-contained utilities: deterministic RNG, a minimal JSON parser for
 //! the artifact manifest, summary statistics, a micro-benchmark harness
-//! (criterion is not vendorable in this environment), and a tiny
-//! property-testing helper used by the invariant tests.
+//! (criterion is not vendorable in this environment), a radix-2 FFT for
+//! the HRR binding hot path, a scoped-thread fan-out for batched scans,
+//! and a tiny property-testing helper used by the invariant tests.
 
 pub mod bench;
+pub mod fft;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,80 @@
+//! Std-only scoped-thread fan-out for the batched codebook scans.
+//!
+//! The paper's characterization shows cleanup scans are memory-bandwidth
+//! bound; a handful of threads saturates DRAM, so this is deliberately a
+//! tiny range-splitting helper (no work stealing, no channels). Worker
+//! count comes from the `NSCOG_THREADS` environment variable (default 1 =
+//! serial), read per call so tests can exercise several counts in one
+//! process.
+
+/// Worker count for batched scans: `NSCOG_THREADS`, default/fallback 1.
+pub fn configured_threads() -> usize {
+    std::env::var("NSCOG_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
+/// Split `0..n` into `threads` contiguous ranges and map `f` over them on
+/// scoped threads, returning per-range outputs in range order. With one
+/// thread (or one range) `f` runs inline on the caller's stack.
+pub fn map_ranges<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads == 1 {
+        return vec![f(0..n)];
+    }
+    let chunk = (n + threads - 1) / threads;
+    let mut ranges = Vec::with_capacity(threads);
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        ranges.push(start..end);
+        start = end;
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| s.spawn(move || f(r)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scan worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_index_in_order() {
+        for threads in [1usize, 2, 3, 7] {
+            let parts = map_ranges(100, threads, |r| r.collect::<Vec<usize>>());
+            let flat: Vec<usize> = parts.into_iter().flatten().collect();
+            assert_eq!(flat, (0..100).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_oversubscribed() {
+        let parts = map_ranges(0, 4, |r| r.len());
+        assert_eq!(parts.iter().sum::<usize>(), 0);
+        let parts = map_ranges(3, 16, |r| r.len());
+        assert_eq!(parts.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn default_threads_is_serial() {
+        // Unless the environment overrides it, scans stay serial.
+        if std::env::var("NSCOG_THREADS").is_err() {
+            assert_eq!(configured_threads(), 1);
+        }
+    }
+}

@@ -40,6 +40,18 @@ impl CleanupMemory {
         let (idx, cos) = self.recall(query);
         (cos >= min_cosine).then_some((idx, cos))
     }
+
+    /// Batched recall through the query-blocked (and, under
+    /// `NSCOG_THREADS`, parallel) codebook scan — the REACT recall loop's
+    /// hot path. Result `q` equals `recall(&queries[q])`.
+    pub fn recall_batch(&self, queries: &[BinaryHV]) -> Vec<(usize, f64)> {
+        let d = self.codebook.dim() as f64;
+        self.codebook
+            .nearest_batch(queries)
+            .into_iter()
+            .map(|(idx, score)| (idx, score as f64 / d))
+            .collect()
+    }
 }
 
 /// Cleanup memory over real-valued prototypes.
@@ -117,6 +129,19 @@ mod tests {
         assert!(cm
             .recall_thresholded(cm.codebook().item(3), 0.5)
             .is_some());
+    }
+
+    #[test]
+    fn batched_recall_matches_single() {
+        let mut rng = Rng::new(5);
+        let cm = CleanupMemory::new(BinaryCodebook::random(&mut rng, 40, 2048));
+        let queries: Vec<BinaryHV> = (0..17)
+            .map(|i| flip_bits(cm.codebook().item(i % 40), 0.2, &mut rng))
+            .collect();
+        let batch = cm.recall_batch(&queries);
+        for (q, query) in queries.iter().enumerate() {
+            assert_eq!(batch[q], cm.recall(query), "query {q}");
+        }
     }
 
     #[test]

@@ -3,7 +3,12 @@
 
 use super::ca90;
 use super::hypervector::{BinaryHV, RealHV, FOLD_BITS, FOLD_WORDS};
-use crate::util::Rng;
+use crate::util::{parallel, Rng};
+
+/// Queries per block in the batched scans: each item row is streamed from
+/// memory once per block while the block's queries stay cache-resident,
+/// so item-memory traffic drops by ~QUERY_BLOCK× versus per-query scans.
+const QUERY_BLOCK: usize = 8;
 
 /// A codebook of binary item vectors.
 #[derive(Debug, Clone)]
@@ -78,6 +83,66 @@ impl BinaryCodebook {
         best
     }
 
+    /// Batched dot-product scores: `out[q][i]` is query `q` against item
+    /// `i`. Query-blocked for item-memory reuse; worker count from
+    /// `NSCOG_THREADS` (see [`parallel::configured_threads`]).
+    pub fn scores_batch(&self, queries: &[BinaryHV]) -> Vec<Vec<i64>> {
+        self.scores_batch_with(queries, parallel::configured_threads())
+    }
+
+    /// [`Self::scores_batch`] with an explicit worker count.
+    pub fn scores_batch_with(&self, queries: &[BinaryHV], threads: usize) -> Vec<Vec<i64>> {
+        for q in queries {
+            assert_eq!(q.dim(), self.dim);
+        }
+        let parts = parallel::map_ranges(queries.len(), threads, |r| {
+            let mut out: Vec<Vec<i64>> = Vec::with_capacity(r.len());
+            for block in queries[r].chunks(QUERY_BLOCK) {
+                let base = out.len();
+                out.extend(block.iter().map(|_| Vec::with_capacity(self.items.len())));
+                for it in &self.items {
+                    for (b, q) in block.iter().enumerate() {
+                        out[base + b].push(it.dot_bulk(q));
+                    }
+                }
+            }
+            out
+        });
+        parts.into_iter().flatten().collect()
+    }
+
+    /// Batched nearest-item search: one `(index, score)` per query, equal
+    /// to calling [`Self::nearest`] per query (including first-wins tie
+    /// behaviour) but query-blocked, Harley–Seal bulk-popcounted, and
+    /// optionally threaded.
+    pub fn nearest_batch(&self, queries: &[BinaryHV]) -> Vec<(usize, i64)> {
+        self.nearest_batch_with(queries, parallel::configured_threads())
+    }
+
+    /// [`Self::nearest_batch`] with an explicit worker count.
+    pub fn nearest_batch_with(&self, queries: &[BinaryHV], threads: usize) -> Vec<(usize, i64)> {
+        for q in queries {
+            assert_eq!(q.dim(), self.dim);
+        }
+        let parts = parallel::map_ranges(queries.len(), threads, |r| {
+            let mut out = Vec::with_capacity(r.len());
+            for block in queries[r].chunks(QUERY_BLOCK) {
+                let mut best = vec![(0usize, i64::MIN); block.len()];
+                for (i, it) in self.items.iter().enumerate() {
+                    for (b, q) in block.iter().enumerate() {
+                        let s = it.dot_bulk(q);
+                        if s > best[b].1 {
+                            best[b] = (i, s);
+                        }
+                    }
+                }
+                out.extend(best);
+            }
+            out
+        });
+        parts.into_iter().flatten().collect()
+    }
+
     /// Memory footprint (bytes) of the full codebook.
     pub fn storage_bytes(&self) -> usize {
         self.len() * self.dim / 8
@@ -149,6 +214,90 @@ impl RealCodebook {
             }
         }
         best
+    }
+
+    /// Batched dot-product scores, query-blocked (`NSCOG_THREADS` workers).
+    pub fn scores_batch(&self, queries: &[RealHV]) -> Vec<Vec<f64>> {
+        self.scores_batch_with(queries, parallel::configured_threads())
+    }
+
+    /// [`Self::scores_batch`] with an explicit worker count.
+    pub fn scores_batch_with(&self, queries: &[RealHV], threads: usize) -> Vec<Vec<f64>> {
+        for q in queries {
+            assert_eq!(q.dim(), self.dim);
+        }
+        let parts = parallel::map_ranges(queries.len(), threads, |r| {
+            let mut out: Vec<Vec<f64>> = Vec::with_capacity(r.len());
+            for block in queries[r].chunks(QUERY_BLOCK) {
+                let base = out.len();
+                out.extend(block.iter().map(|_| Vec::with_capacity(self.items.len())));
+                for it in &self.items {
+                    for (b, q) in block.iter().enumerate() {
+                        out[base + b].push(it.dot(q));
+                    }
+                }
+            }
+            out
+        });
+        parts.into_iter().flatten().collect()
+    }
+
+    /// Batched nearest-item search, equal to per-query [`Self::nearest`].
+    pub fn nearest_batch(&self, queries: &[RealHV]) -> Vec<(usize, f64)> {
+        self.nearest_batch_with(queries, parallel::configured_threads())
+    }
+
+    /// [`Self::nearest_batch`] with an explicit worker count.
+    pub fn nearest_batch_with(&self, queries: &[RealHV], threads: usize) -> Vec<(usize, f64)> {
+        for q in queries {
+            assert_eq!(q.dim(), self.dim);
+        }
+        let parts = parallel::map_ranges(queries.len(), threads, |r| {
+            let mut out = Vec::with_capacity(r.len());
+            for block in queries[r].chunks(QUERY_BLOCK) {
+                let mut best = vec![(0usize, f64::NEG_INFINITY); block.len()];
+                for (i, it) in self.items.iter().enumerate() {
+                    for (b, q) in block.iter().enumerate() {
+                        let s = it.dot(q);
+                        if s > best[b].1 {
+                            best[b] = (i, s);
+                        }
+                    }
+                }
+                out.extend(best);
+            }
+            out
+        });
+        parts.into_iter().flatten().collect()
+    }
+
+    /// Fused resonator projection: `scores[k] = item_k · query`, then
+    /// `out = sign(Σ_k scores[k] · item_k)` — the paper's d→c→sign chain
+    /// in one pass, writing both outputs in place. `scores` keeps its
+    /// capacity across calls and `out` is overwritten, so steady-state
+    /// sweeps allocate nothing and the intermediate f32 weight vector of
+    /// the unfused path disappears.
+    pub fn project_signed_into(&self, query: &RealHV, scores: &mut Vec<f64>, out: &mut RealHV) {
+        assert_eq!(query.dim(), self.dim);
+        assert_eq!(out.dim(), self.dim);
+        scores.clear();
+        scores.extend(self.items.iter().map(|it| it.dot(query)));
+        let o = out.as_mut_slice();
+        for v in o.iter_mut() {
+            *v = 0.0;
+        }
+        for (&s, item) in scores.iter().zip(&self.items) {
+            let w = s as f32;
+            if w == 0.0 {
+                continue;
+            }
+            for (acc, &x) in o.iter_mut().zip(item.as_slice()) {
+                *acc += w * x;
+            }
+        }
+        for v in o.iter_mut() {
+            *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+        }
     }
 
     /// Probability-weighted bundle: PMF-to-VSA transform (NVSA).
@@ -266,6 +415,55 @@ mod tests {
             .0;
         assert_eq!(argmax, 3);
         assert!((back.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn binary_batch_matches_per_query() {
+        let mut rng = Rng::new(8);
+        let cb = BinaryCodebook::random(&mut rng, 37, 1024);
+        let queries: Vec<BinaryHV> =
+            (0..19).map(|_| BinaryHV::random(&mut rng, 1024)).collect();
+        for threads in [1usize, 2, 5] {
+            let nb = cb.nearest_batch_with(&queries, threads);
+            let sb = cb.scores_batch_with(&queries, threads);
+            for (q, query) in queries.iter().enumerate() {
+                assert_eq!(nb[q], cb.nearest(query), "threads={threads} q={q}");
+                assert_eq!(sb[q], cb.scores(query), "threads={threads} q={q}");
+            }
+        }
+        assert!(cb.nearest_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn real_batch_matches_per_query() {
+        let mut rng = Rng::new(9);
+        let cb = RealCodebook::random_bipolar(&mut rng, 21, 512);
+        let queries: Vec<RealHV> =
+            (0..11).map(|_| RealHV::random_bipolar(&mut rng, 512)).collect();
+        for threads in [1usize, 3] {
+            let nb = cb.nearest_batch_with(&queries, threads);
+            let sb = cb.scores_batch_with(&queries, threads);
+            for (q, query) in queries.iter().enumerate() {
+                assert_eq!(nb[q], cb.nearest(query), "threads={threads} q={q}");
+                assert_eq!(sb[q], cb.scores(query), "threads={threads} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_projection_matches_unfused_chain() {
+        use crate::vsa::ops;
+        let mut rng = Rng::new(10);
+        let cb = RealCodebook::random_bipolar(&mut rng, 12, 512);
+        let query = RealHV::random_bipolar(&mut rng, 512);
+        let mut scores = Vec::new();
+        let mut out = RealHV::zeros(512);
+        cb.project_signed_into(&query, &mut scores, &mut out);
+        assert_eq!(scores, cb.scores(&query));
+        let weights: Vec<f32> = scores.iter().map(|&s| s as f32).collect();
+        let items: Vec<&RealHV> = cb.items().iter().collect();
+        let expect = ops::weighted_sum(&weights, &items).sign();
+        assert_eq!(out, expect);
     }
 
     #[test]

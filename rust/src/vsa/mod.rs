@@ -25,4 +25,4 @@ pub mod resonator;
 pub use cleanup::CleanupMemory;
 pub use codebook::{BinaryCodebook, RealCodebook};
 pub use hypervector::{BinaryHV, RealHV};
-pub use resonator::{Resonator, ResonatorResult};
+pub use resonator::{Resonator, ResonatorResult, ResonatorScratch};

@@ -3,12 +3,25 @@
 //! helpers mirroring the paper's sub-functions a/b/c/d/e (Sec. VI-B).
 
 use super::hypervector::RealHV;
+use crate::util::fft;
 
 /// Circular convolution binding: `z[i] = sum_j x[j] * y[(i - j) mod D]`.
 ///
-/// Direct O(D^2) evaluation — the Rust engine runs modest D (≤ 2048); the
-/// L1 Pallas kernel performs the same contraction as a circulant matmul.
+/// For power-of-two `D` this dispatches to the O(D log D) FFT path in
+/// [`crate::util::fft`]; other dimensions (and the equivalence property
+/// tests) use the direct O(D²) evaluation in [`circular_conv_direct`].
 pub fn circular_conv(x: &RealHV, y: &RealHV) -> RealHV {
+    let d = x.dim();
+    assert_eq!(d, y.dim());
+    if d.is_power_of_two() {
+        return RealHV::from_vec(fft::cconv_pow2(x.as_slice(), y.as_slice()));
+    }
+    circular_conv_direct(x, y)
+}
+
+/// Direct O(D²) circular convolution — reference implementation and
+/// fallback for non-power-of-two dimensions.
+pub fn circular_conv_direct(x: &RealHV, y: &RealHV) -> RealHV {
     let d = x.dim();
     assert_eq!(d, y.dim());
     let xs = x.as_slice();
@@ -34,7 +47,21 @@ pub fn circular_conv(x: &RealHV, y: &RealHV) -> RealHV {
 
 /// Circular correlation (approximate unbinding of [`circular_conv`]):
 /// `z[i] = sum_j x[j] * y[(j + i) mod D]`.
+///
+/// Power-of-two `D` uses the FFT path (`Z = conj(X)·Y`); other dimensions
+/// fall back to [`circular_corr_direct`].
 pub fn circular_corr(x: &RealHV, y: &RealHV) -> RealHV {
+    let d = x.dim();
+    assert_eq!(d, y.dim());
+    if d.is_power_of_two() {
+        return RealHV::from_vec(fft::ccorr_pow2(x.as_slice(), y.as_slice()));
+    }
+    circular_corr_direct(x, y)
+}
+
+/// Direct O(D²) circular correlation — reference implementation and
+/// fallback for non-power-of-two dimensions.
+pub fn circular_corr_direct(x: &RealHV, y: &RealHV) -> RealHV {
     let d = x.dim();
     assert_eq!(d, y.dim());
     let xs = x.as_slice();
@@ -106,22 +133,17 @@ mod tests {
     use crate::util::prop::forall_res;
     use crate::util::Rng;
 
-    fn naive_cconv(x: &[f32], y: &[f32]) -> Vec<f32> {
-        let d = x.len();
-        (0..d)
-            .map(|i| {
-                (0..d)
-                    .map(|j| x[j] * y[(i + d - j % d + d - (j / d)) % d.max(1)])
-                    .sum()
-            })
-            .collect()
-    }
+    // The old `naive_cconv` helper had a nonsense index expression and was
+    // dead outside this module; the inline O(D²) sums below are the naive
+    // oracle now.
 
     #[test]
     fn cconv_matches_naive() {
-        // direct triple-checked naive: z[i] = sum_j x[j] y[(i-j) mod d]
+        // z[i] = sum_j x[j] y[(i-j) mod d]; half the cases draw a
+        // power-of-two dim (FFT path), half an arbitrary dim (direct
+        // fallback), so both sides face the independent naive oracle.
         forall_res(300, 20, |r| {
-            let d = 16 + r.below(48);
+            let d = if r.below(2) == 0 { 16usize << r.below(3) } else { 16 + r.below(48) };
             let x: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
             let y: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
             (x, y)
@@ -139,7 +161,54 @@ mod tests {
             }
             Ok(())
         });
-        let _ = naive_cconv(&[1.0], &[1.0]);
+    }
+
+    #[test]
+    fn ccorr_matches_naive() {
+        // z[i] = sum_j x[j] y[(j+i) mod d], same forced pow2/non-pow2 mix.
+        forall_res(301, 20, |r| {
+            let d = if r.below(2) == 0 { 16usize << r.below(3) } else { 16 + r.below(48) };
+            let x: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+            let y: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+            (x, y)
+        }, |(x, y)| {
+            let d = x.len();
+            let fast = circular_corr(&RealHV::from_vec(x.clone()), &RealHV::from_vec(y.clone()));
+            for i in 0..d {
+                let mut acc = 0.0f64;
+                for j in 0..d {
+                    acc += x[j] as f64 * y[(j + i) % d] as f64;
+                }
+                if (fast.as_slice()[i] as f64 - acc).abs() > 1e-3 {
+                    return Err(format!("i={i}: {} vs {}", fast.as_slice()[i], acc));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fft_paths_match_direct_reference() {
+        forall_res(302, 12, |r| {
+            let d = 64usize << r.below(5); // 64..1024, all powers of two
+            let x: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+            let y: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+            (x, y)
+        }, |(x, y)| {
+            let xv = RealHV::from_vec(x.clone());
+            let yv = RealHV::from_vec(y.clone());
+            for (label, fast, slow) in [
+                ("conv", circular_conv(&xv, &yv), circular_conv_direct(&xv, &yv)),
+                ("corr", circular_corr(&xv, &yv), circular_corr_direct(&xv, &yv)),
+            ] {
+                for (i, (a, b)) in fast.as_slice().iter().zip(slow.as_slice()).enumerate() {
+                    if (a - b).abs() > 1e-3 {
+                        return Err(format!("{label} d={} i={i}: {a} vs {b}", x.len()));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

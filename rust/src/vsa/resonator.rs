@@ -22,6 +22,27 @@ pub struct ResonatorResult {
     pub converged: bool,
 }
 
+/// Reusable working memory for [`Resonator::sweep_with`] /
+/// [`Resonator::factorize_with`]: snapshot of the previous iterate,
+/// prefix/suffix bind products, the unbind workspace, and per-factor
+/// score buffers. Allocated once (per resonator shape) and reused, so
+/// steady-state sweeps perform zero heap allocation.
+#[derive(Debug, Clone)]
+pub struct ResonatorScratch {
+    snapshot: Vec<RealHV>,
+    prefix: Vec<RealHV>,
+    suffix: Vec<RealHV>,
+    x_hat: RealHV,
+    scores: Vec<Vec<f64>>,
+}
+
+impl ResonatorScratch {
+    /// Scores per factor from the most recent sweep.
+    pub fn scores(&self) -> &[Vec<f64>] {
+        &self.scores
+    }
+}
+
 /// Resonator network over bipolar codebooks with Hadamard binding.
 #[derive(Debug, Clone)]
 pub struct Resonator {
@@ -61,41 +82,121 @@ impl Resonator {
             .collect()
     }
 
+    /// Write the initial estimates into pre-allocated buffers.
+    pub fn init_estimates_into(&self, estimates: &mut [RealHV]) {
+        assert_eq!(estimates.len(), self.n_factors());
+        for (est, cb) in estimates.iter_mut().zip(&self.codebooks) {
+            assert_eq!(est.dim(), cb.dim());
+            for v in est.as_mut_slice().iter_mut() {
+                *v = 0.0;
+            }
+            for item in cb.items() {
+                est.add_assign(item);
+            }
+            est.sign_assign();
+        }
+    }
+
+    /// Working buffers sized for this resonator's shape.
+    pub fn make_scratch(&self) -> ResonatorScratch {
+        let d = self.codebooks[0].dim();
+        let f = self.n_factors();
+        ResonatorScratch {
+            snapshot: vec![RealHV::zeros(d); f],
+            prefix: vec![RealHV::zeros(d); f],
+            suffix: vec![RealHV::zeros(d); f],
+            x_hat: RealHV::zeros(d),
+            scores: self.codebooks.iter().map(|cb| Vec::with_capacity(cb.len())).collect(),
+        }
+    }
+
     /// One synchronous sweep: update every factor from the others'
     /// current estimates. Returns scores per factor.
+    ///
+    /// Convenience wrapper over [`Self::sweep_with`]; hot loops should
+    /// hold a [`ResonatorScratch`] and call `sweep_with` directly.
     pub fn sweep(&self, scene: &RealHV, estimates: &mut [RealHV]) -> Vec<Vec<f64>> {
+        let mut scratch = self.make_scratch();
+        self.sweep_with(scene, estimates, &mut scratch);
+        scratch.scores
+    }
+
+    /// One synchronous sweep using caller-held working memory — the
+    /// steady-state form performs no heap allocation.
+    ///
+    /// Per-factor unbinding uses prefix/suffix bind products over the
+    /// snapshot (`prefix[i] = scene ⊗ est_0 ⊗ … ⊗ est_{i−1}`,
+    /// `suffix[i] = est_{i+1} ⊗ … ⊗ est_{F−1}`), so a sweep costs
+    /// 3F−4 binds instead of the F(F−1) of the naive per-factor chain,
+    /// and the projection runs fused (score → weighted sum → sign) via
+    /// [`RealCodebook::project_signed_into`]. Scores land in
+    /// `scratch.scores()`.
+    pub fn sweep_with(
+        &self,
+        scene: &RealHV,
+        estimates: &mut [RealHV],
+        scratch: &mut ResonatorScratch,
+    ) {
         let f = self.n_factors();
-        let mut all_scores = Vec::with_capacity(f);
-        let snapshot: Vec<RealHV> = estimates.to_vec();
-        for i in 0..f {
-            // x_hat = scene (*) prod_{j != i} est_j   (Hadamard unbind)
-            let mut x_hat = scene.clone();
-            for (j, est) in snapshot.iter().enumerate() {
-                if j != i {
-                    x_hat = x_hat.bind(est);
-                }
-            }
-            // similarity -> weighted bundle -> sign
-            let cb = &self.codebooks[i];
-            let scores = cb.scores(&x_hat);
-            let weights: Vec<f32> = scores.iter().map(|&s| s as f32).collect();
-            let items: Vec<&RealHV> = cb.items().iter().collect();
-            estimates[i] = ops::weighted_sum(&weights, &items).sign();
-            all_scores.push(scores);
+        assert_eq!(estimates.len(), f);
+        for (snap, est) in scratch.snapshot.iter_mut().zip(estimates.iter()) {
+            snap.copy_from(est);
         }
-        all_scores
+        // prefix[i] = scene ⊗ snap_0 ⊗ … ⊗ snap_{i-1}
+        scratch.prefix[0].copy_from(scene);
+        for i in 1..f {
+            let (done, rest) = scratch.prefix.split_at_mut(i);
+            rest[0].copy_from(&done[i - 1]);
+            rest[0].bind_assign(&scratch.snapshot[i - 1]);
+        }
+        // suffix[i] = snap_{i+1} ⊗ … ⊗ snap_{F-1}; suffix[F-1] is the
+        // empty product and never read.
+        if f >= 2 {
+            scratch.suffix[f - 2].copy_from(&scratch.snapshot[f - 1]);
+            for i in (0..f - 2).rev() {
+                let (head, tail) = scratch.suffix.split_at_mut(i + 1);
+                head[i].copy_from(&tail[0]);
+                head[i].bind_assign(&scratch.snapshot[i + 1]);
+            }
+        }
+        for i in 0..f {
+            // x_hat = scene ⊗ prod_{j != i} snap_j  (Hadamard unbind)
+            scratch.x_hat.copy_from(&scratch.prefix[i]);
+            if i + 1 < f {
+                scratch.x_hat.bind_assign(&scratch.suffix[i]);
+            }
+            self.codebooks[i].project_signed_into(
+                &scratch.x_hat,
+                &mut scratch.scores[i],
+                &mut estimates[i],
+            );
+        }
     }
 
     /// Run to convergence (estimates fixed point) or `max_iters`.
     pub fn factorize(&self, scene: &RealHV) -> ResonatorResult {
+        let mut scratch = self.make_scratch();
         let mut estimates = self.init_estimates();
+        self.factorize_with(scene, &mut estimates, &mut scratch)
+    }
+
+    /// [`Self::factorize`] over caller-held buffers: `estimates` must
+    /// already hold the starting point (e.g. [`Self::init_estimates_into`]),
+    /// and `scratch` is reused across sweeps, so the iteration loop
+    /// allocates nothing — the pre-sweep snapshot doubles as the
+    /// previous iterate for the convergence check.
+    pub fn factorize_with(
+        &self,
+        scene: &RealHV,
+        estimates: &mut [RealHV],
+        scratch: &mut ResonatorScratch,
+    ) -> ResonatorResult {
         let mut converged = false;
         let mut iterations = 0;
         for it in 0..self.max_iters {
-            let prev = estimates.clone();
-            self.sweep(scene, &mut estimates);
+            self.sweep_with(scene, estimates, scratch);
             iterations = it + 1;
-            if estimates == prev {
+            if *estimates == scratch.snapshot[..] {
                 converged = true;
                 break;
             }
@@ -190,6 +291,82 @@ mod tests {
         }
         let out = r.factorize(&scene);
         assert_eq!(out.indices, truth);
+    }
+
+    /// The pre-optimization sweep (clone-per-factor unbind chain and
+    /// unfused score → weights → weighted_sum → sign), kept as the
+    /// equivalence oracle for the prefix/suffix + fused implementation.
+    fn naive_sweep(r: &Resonator, scene: &RealHV, estimates: &mut [RealHV]) -> Vec<Vec<f64>> {
+        let f = r.n_factors();
+        let snapshot: Vec<RealHV> = estimates.to_vec();
+        let mut all_scores = Vec::with_capacity(f);
+        for i in 0..f {
+            let mut x_hat = scene.clone();
+            for (j, est) in snapshot.iter().enumerate() {
+                if j != i {
+                    x_hat = x_hat.bind(est);
+                }
+            }
+            let cb = &r.codebooks()[i];
+            let scores = cb.scores(&x_hat);
+            let weights: Vec<f32> = scores.iter().map(|&s| s as f32).collect();
+            let items: Vec<&RealHV> = cb.items().iter().collect();
+            estimates[i] = ops::weighted_sum(&weights, &items).sign();
+            all_scores.push(scores);
+        }
+        all_scores
+    }
+
+    #[test]
+    fn sweep_matches_naive_reference() {
+        // Bipolar scenes keep every product exactly ±1, so the optimized
+        // sweep must agree bit-for-bit with the naive chain.
+        for (factors, seed) in [(2usize, 10u64), (3, 11), (4, 12)] {
+            let r = make(factors, 7, 512, seed);
+            let mut rng = Rng::new(seed + 100);
+            let truth: Vec<usize> = (0..factors).map(|_| rng.below(7)).collect();
+            let scene = r.compose(&truth);
+            let mut est_fast = r.init_estimates();
+            let mut est_naive = est_fast.clone();
+            let mut scratch = r.make_scratch();
+            for sweep_no in 0..3 {
+                r.sweep_with(&scene, &mut est_fast, &mut scratch);
+                let naive_scores = naive_sweep(&r, &scene, &mut est_naive);
+                assert_eq!(est_fast, est_naive, "factors={factors} sweep={sweep_no}");
+                assert_eq!(scratch.scores(), &naive_scores[..], "factors={factors}");
+            }
+        }
+    }
+
+    #[test]
+    fn factorize_with_reused_buffers_matches_fresh() {
+        // Scratch reuse across scenes must be invisible: identical results
+        // to a fresh factorize every time (correct-decode rate itself is
+        // covered by factorizes_many_random_instances).
+        let r = make(3, 9, 2048, 13);
+        let mut scratch = r.make_scratch();
+        let mut estimates = r.init_estimates();
+        let mut rng = Rng::new(14);
+        let mut correct = 0;
+        for _ in 0..5 {
+            let truth: Vec<usize> = (0..3).map(|_| rng.below(9)).collect();
+            let scene = r.compose(&truth);
+            r.init_estimates_into(&mut estimates);
+            let reused = r.factorize_with(&scene, &mut estimates, &mut scratch);
+            assert_eq!(reused, r.factorize(&scene));
+            if reused.indices == truth {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 4, "only {correct}/5 reused factorizations correct");
+    }
+
+    #[test]
+    fn init_estimates_into_matches_allocating_init() {
+        let r = make(3, 8, 512, 15);
+        let mut buf = vec![RealHV::zeros(512); 3];
+        r.init_estimates_into(&mut buf);
+        assert_eq!(buf, r.init_estimates());
     }
 
     #[test]

@@ -10,7 +10,8 @@ use crate::accel::{AccelConfig, Program};
 use crate::profiler::taxonomy::{OpCategory, PhaseKind};
 use crate::profiler::trace::Trace;
 use crate::util::Rng;
-use crate::vsa::BinaryCodebook;
+use crate::vsa::hypervector::majority;
+use crate::vsa::{BinaryCodebook, BinaryHV, CleanupMemory};
 
 /// Hypervector dimensionality for the accelerator suite (16 folds of the
 /// 512-bit bus — typical HDC scale).
@@ -267,6 +268,44 @@ impl CompiledSuite {
     }
 }
 
+/// Host-side functional baseline of the REACT recall loop: learn the
+/// behaviour model as a majority bundle of bound (state ⊗ action ⊗ value)
+/// triples, unbind each recall cue, and clean up against item memory —
+/// the same program structure `CompiledSuite::build` compiles for the
+/// accelerator, here routed through the word-sliced [`majority`] kernel
+/// and the query-blocked [`CleanupMemory::recall_batch`] scan. This is
+/// the CPU reference point the accelerator's bind+search programs are
+/// compared against.
+pub fn react_host_recall(seed: u64) -> Vec<(usize, f64)> {
+    let p = SuiteParams::paper(SuiteKind::React);
+    let mut rng = Rng::new(seed);
+    let codebook = BinaryCodebook::random(&mut rng, p.n_items, SUITE_DIM);
+    // learn: model = majority_k (s_k ⊗ a_k ⊗ v_k), same index schedule
+    // as the compiled weighted_bundle program
+    let samples: Vec<BinaryHV> = (0..p.n_samples)
+        .map(|s| {
+            let mut acc = codebook.item((s * 3) % p.n_items).clone();
+            for j in 1..p.bind_arity {
+                acc.bind_assign(codebook.item((s * 3 + j * 19) % p.n_items));
+            }
+            acc
+        })
+        .collect();
+    let refs: Vec<&BinaryHV> = samples.iter().collect();
+    let model = majority(&refs, seed ^ 0x5eed);
+    // recall: cue_q = model ⊗ item(q) ⊗ item(7q+1), then one batched
+    // cleanup scan over all cues instead of a per-query search loop
+    let cues: Vec<BinaryHV> = (0..p.n_queries)
+        .map(|q| {
+            let mut cue = model.clone();
+            cue.bind_assign(codebook.item(q % p.n_items));
+            cue.bind_assign(codebook.item((q * 7 + 1) % p.n_items));
+            cue
+        })
+        .collect();
+    CleanupMemory::new(codebook).recall_batch(&cues)
+}
+
 /// GPU-baseline operator trace for a suite workload (Fig. 11b): the same
 /// VSA operations as individually-launched GPU kernels over small
 /// vectors — launch-overhead dominated, exactly the paper's observation
@@ -427,6 +466,20 @@ mod tests {
             "REACT {react_gain:.2}x vs MULT {mult_gain:.2}x"
         );
         assert!(react_gain > 1.2);
+    }
+
+    #[test]
+    fn react_host_recall_decodes_learned_values() {
+        let recalls = react_host_recall(42);
+        let p = SuiteParams::paper(SuiteKind::React);
+        assert_eq!(recalls.len(), p.n_queries);
+        for (q, &(idx, cos)) in recalls.iter().enumerate() {
+            assert!(idx < p.n_items, "query {q} decoded out of range");
+            assert!((-1.0..=1.0).contains(&cos), "query {q} cosine {cos}");
+        }
+        // the whole pipeline (majority bundle → unbind → batched scan)
+        // is deterministic from the seed
+        assert_eq!(recalls, react_host_recall(42));
     }
 
     #[test]

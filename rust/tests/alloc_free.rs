@@ -1,0 +1,83 @@
+//! Verifies the resonator's steady-state sweeps are allocation-free: a
+//! counting global allocator observes zero allocations across repeated
+//! `sweep_with`/`factorize_with` calls once the scratch buffers exist.
+//!
+//! This file holds exactly one test so no concurrent libtest thread can
+//! perturb the allocation counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use nscog::util::Rng;
+use nscog::vsa::{RealCodebook, Resonator};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn resonator_sweeps_allocate_nothing_in_steady_state() {
+    // Same shape as the substrate's `factorizes_exact_composition` test,
+    // which is known to converge well inside the iteration budget.
+    let mut rng = Rng::new(1);
+    let codebooks: Vec<RealCodebook> = (0..3)
+        .map(|_| RealCodebook::random_bipolar(&mut rng, 8, 1024))
+        .collect();
+    let resonator = Resonator::new(codebooks, 60);
+    let scene = resonator.compose(&[2, 5, 1]);
+
+    let mut estimates = resonator.init_estimates();
+    let mut scratch = resonator.make_scratch();
+    // Warm-up: fills the per-factor score buffers to their final capacity.
+    resonator.sweep_with(&scene, &mut estimates, &mut scratch);
+
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..25 {
+        resonator.sweep_with(&scene, &mut estimates, &mut scratch);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state sweeps must not touch the heap"
+    );
+
+    // init_estimates_into + the sweep loop inside factorize_with are also
+    // allocation-free; only the final ResonatorResult (indices Vec) may
+    // allocate, bounded per call, not per sweep.
+    resonator.init_estimates_into(&mut estimates);
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    resonator.init_estimates_into(&mut estimates);
+    let result = resonator.factorize_with(&scene, &mut estimates, &mut scratch);
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(result.indices, vec![2, 5, 1]);
+    assert!(
+        after - before <= 2,
+        "factorize_with should allocate only the result indices, saw {} allocations",
+        after - before
+    );
+}

@@ -1,0 +1,147 @@
+//! Equivalence property tests for the word-sliced/batched/FFT kernel
+//! engine: every optimized kernel must agree with its retained reference
+//! implementation across randomized shapes, member counts, and thread
+//! counts (replayable via the seeds reported by `util::prop` on failure).
+
+use nscog::util::prop::{forall, forall_res};
+use nscog::util::Rng;
+use nscog::vsa::hypervector::{majority, majority_ref};
+use nscog::vsa::{ops, BinaryCodebook, BinaryHV, RealCodebook, RealHV};
+
+#[test]
+fn majority_equals_per_bit_reference() {
+    // Word counts 1..=16 over dims 64..=1024; even counts exercise the
+    // tie-break RNG, which must be drawn in identical order.
+    forall(7001, 60, |r| {
+        let d = 64 * (1 + r.below(16));
+        let n = 1 + r.below(16);
+        let vs: Vec<BinaryHV> = (0..n).map(|_| BinaryHV::random(r, d)).collect();
+        (vs, r.next_u64())
+    }, |(vs, tie_seed)| {
+        let refs: Vec<&BinaryHV> = vs.iter().collect();
+        majority(&refs, *tie_seed) == majority_ref(&refs, *tie_seed)
+    });
+}
+
+#[test]
+fn majority_all_equal_members_even_count_is_identity() {
+    // With an even count of identical members every column is unanimous
+    // (no ties), so the bundle is the member itself.
+    let mut rng = Rng::new(7002);
+    let v = BinaryHV::random(&mut rng, 2048);
+    let refs: Vec<&BinaryHV> = (0..6).map(|_| &v).collect();
+    assert_eq!(majority(&refs, 3), v);
+    assert_eq!(majority_ref(&refs, 3), v);
+}
+
+#[test]
+fn hamming_bulk_equals_per_word_reference() {
+    forall(7009, 60, |r| {
+        let d = 64 * (1 + r.below(40));
+        (BinaryHV::random(r, d), BinaryHV::random(r, d))
+    }, |(x, y)| x.hamming_bulk(y) == x.hamming(y) && x.dot_bulk(y) == x.dot(y));
+}
+
+#[test]
+fn fft_conv_and_corr_match_direct_within_1e3() {
+    // Power-of-two dims take the FFT path; compare against the O(D²)
+    // reference elementwise.
+    forall_res(7003, 16, |r| {
+        let d = 32usize << r.below(6); // 32..1024
+        let x: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+        let y: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+        (x, y)
+    }, |(x, y)| {
+        let xv = RealHV::from_vec(x.clone());
+        let yv = RealHV::from_vec(y.clone());
+        let checks = [
+            ("conv", ops::circular_conv(&xv, &yv), ops::circular_conv_direct(&xv, &yv)),
+            ("corr", ops::circular_corr(&xv, &yv), ops::circular_corr_direct(&xv, &yv)),
+        ];
+        for (label, fast, slow) in checks {
+            for (i, (a, b)) in fast.as_slice().iter().zip(slow.as_slice()).enumerate() {
+                if (a - b).abs() > 1e-3 {
+                    return Err(format!("{label} d={} i={i}: fft {a} vs direct {b}", x.len()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn non_pow2_dims_use_direct_path_exactly() {
+    let mut rng = Rng::new(7004);
+    let x = RealHV::random_hrr(&mut rng, 300);
+    let y = RealHV::random_hrr(&mut rng, 300);
+    assert_eq!(ops::circular_conv(&x, &y), ops::circular_conv_direct(&x, &y));
+    assert_eq!(ops::circular_corr(&x, &y), ops::circular_corr_direct(&x, &y));
+}
+
+#[test]
+fn binary_nearest_batch_equals_per_query_across_threads() {
+    forall_res(7005, 12, |r| {
+        let d = 64 * (1 + r.below(8));
+        let n_items = 1 + r.below(40);
+        let n_queries = r.below(30);
+        let cb = BinaryCodebook::random(r, n_items, d);
+        let queries: Vec<BinaryHV> = (0..n_queries).map(|_| BinaryHV::random(r, d)).collect();
+        let threads = 1 + r.below(6);
+        (cb, queries, threads)
+    }, |(cb, queries, threads)| {
+        let batch = cb.nearest_batch_with(queries, *threads);
+        let scores = cb.scores_batch_with(queries, *threads);
+        for (q, query) in queries.iter().enumerate() {
+            if batch[q] != cb.nearest(query) {
+                return Err(format!("nearest mismatch q={q} threads={threads}"));
+            }
+            if scores[q] != cb.scores(query) {
+                return Err(format!("scores mismatch q={q} threads={threads}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn real_nearest_batch_equals_per_query_across_threads() {
+    forall_res(7006, 10, |r| {
+        let d = 64 * (1 + r.below(8));
+        let n_items = 1 + r.below(24);
+        let n_queries = r.below(20);
+        let cb = RealCodebook::random_bipolar(r, n_items, d);
+        let queries: Vec<RealHV> = (0..n_queries).map(|_| RealHV::random_bipolar(r, d)).collect();
+        let threads = 1 + r.below(4);
+        (cb, queries, threads)
+    }, |(cb, queries, threads)| {
+        let batch = cb.nearest_batch_with(queries, *threads);
+        for (q, query) in queries.iter().enumerate() {
+            if batch[q] != cb.nearest(query) {
+                return Err(format!("nearest mismatch q={q} threads={threads}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nscog_threads_env_controls_default_worker_count() {
+    // configured_threads is read per call: the env var set by CI (or a
+    // shell) takes effect without process restarts.
+    let base = nscog::util::parallel::configured_threads();
+    assert!(base >= 1);
+    // map_ranges must behave identically for any worker count.
+    let cb = {
+        let mut rng = Rng::new(7007);
+        BinaryCodebook::random(&mut rng, 17, 512)
+    };
+    let queries: Vec<BinaryHV> = {
+        let mut rng = Rng::new(7008);
+        (0..9).map(|_| BinaryHV::random(&mut rng, 512)).collect()
+    };
+    let serial = cb.nearest_batch_with(&queries, 1);
+    assert_eq!(cb.nearest_batch(&queries), serial);
+    for threads in 2..=8 {
+        assert_eq!(cb.nearest_batch_with(&queries, threads), serial);
+    }
+}

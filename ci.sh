@@ -27,7 +27,75 @@ cargo test -q
 echo "== bench smoke: hotpath =="
 NSCOG_BENCH_JSON="$(pwd)/BENCH_hotpath.json" cargo bench --bench hotpath
 
+echo "== bench smoke: serve (bounded requests, deterministic seed) =="
+NSCOG_SERVE_JSON="$(pwd)/BENCH_serve.json" \
+    cargo run --release --quiet --bin nscog -- serve-bench --smoke
+
+echo "== validate BENCH_serve.json =="
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PYEOF'
+import json
+r = json.load(open('BENCH_serve.json'))
+assert r['bench'] == 'serve', 'wrong bench tag'
+cl, base = r['closed_loop'], r['baseline']
+assert cl['mismatches'] == 0, 'batched responses diverged from sequential oracle'
+assert cl['rejected'] == 0 and cl['expired'] == 0, 'smoke run shed load unexpectedly'
+assert cl['qps'] > 0 and base['qps'] > 0, 'degenerate throughput measurement'
+if r.get('open_loop'):
+    assert r['open_loop']['pass']['mismatches'] == 0, 'open-loop responses diverged'
+print(f"serve smoke OK: {cl['qps']:.0f} qps vs baseline {base['qps']:.0f} "
+      f"(x{r['speedup_qps']:.2f}), mean batch {r['batching']['mean_batch']:.2f}")
+PYEOF
+else
+    grep -q '"bench": "serve"' BENCH_serve.json
+    grep -q '"mismatches": 0' BENCH_serve.json
+    echo "python3 unavailable; structural grep checks passed"
+fi
+
 echo "== perf trajectory =="
 test -s BENCH_hotpath.json && echo "BENCH_hotpath.json written:" && cat BENCH_hotpath.json
+test -s BENCH_serve.json && echo "BENCH_serve.json written."
+
+# Fill the measured-numbers block in PERF.md from this run's JSON so the
+# first toolchain machine (and every one after) keeps the table current.
+if command -v python3 >/dev/null 2>&1; then
+    echo "== refresh PERF.md measured numbers =="
+    python3 - <<'PYEOF'
+import json, re, platform
+
+lines = ["", "Last `./ci.sh` run on this machine "
+         f"({platform.machine()}, {platform.processor() or 'unknown cpu'}):", ""]
+try:
+    hp = json.load(open('BENCH_hotpath.json'))
+    lines += ["| kernel | reference p50 | optimized p50 | speedup |",
+              "|---|---|---|---|"]
+    for s in hp.get('speedups', []):
+        lines.append(f"| {s['kernel']} | {s['ref_p50_s']:.3e} s "
+                     f"| {s['opt_p50_s']:.3e} s | {s['speedup']:.2f}x |")
+except (OSError, json.JSONDecodeError):
+    lines.append("_(BENCH_hotpath.json unavailable)_")
+try:
+    sv = json.load(open('BENCH_serve.json'))
+    cl, b = sv['closed_loop'], sv['batching']
+    lines += ["",
+              f"Serving (`serve-bench --smoke`): closed-loop {cl['qps']:.0f} qps vs "
+              f"baseline {sv['baseline']['qps']:.0f} qps "
+              f"(**{sv['speedup_qps']:.2f}x**), mean batch occupancy "
+              f"{b['mean_batch']:.2f} (max {b['max_batch']})."]
+except (OSError, json.JSONDecodeError):
+    lines += ["", "_(BENCH_serve.json unavailable)_"]
+lines.append("")
+
+src = open('PERF.md').read()
+block = "<!-- BEGIN MEASURED (auto-filled by ci.sh) -->" + "\n".join(lines) + "<!-- END MEASURED -->"
+out, n = re.subn(r"<!-- BEGIN MEASURED \(auto-filled by ci\.sh\) -->.*?<!-- END MEASURED -->",
+                 block, src, flags=re.S)
+if n:
+    open('PERF.md', 'w').write(out)
+    print("PERF.md measured block refreshed")
+else:
+    print("PERF.md measured markers missing; skipped")
+PYEOF
+fi
 
 echo "CI OK"

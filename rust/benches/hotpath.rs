@@ -8,6 +8,7 @@
 //! emit machine-readable results to `BENCH_hotpath.json` (path override:
 //! `NSCOG_BENCH_JSON`) so CI can track the perf trajectory across PRs.
 use nscog::accel::{isa::ControlMethod, AccelConfig};
+use nscog::serve::ShardedBinaryCodebook;
 use nscog::util::bench::{bench, black_box, sample};
 use nscog::util::stats::Summary;
 use nscog::util::Rng;
@@ -131,6 +132,28 @@ fn main() {
         );
         println!("    → threaded speedup {:.1}x", s_ref.p50 / s_par.p50);
     }
+
+    // sharded store: same scan split across 4 shards (the serving
+    // engine's layout), merged back — measured against the per-query loop
+    // like nearest_batch, plus the top-k variant
+    let sharded = ShardedBinaryCodebook::partition(&cb, 4);
+    let shard_threads = threads.max(4);
+    let s_shard = record(
+        &mut entries,
+        &format!("serve/sharded_nearest 4sh 100q ({shard_threads} threads)"),
+        || {
+            black_box(sharded.nearest_batch_with(&queries, shard_threads));
+        },
+    );
+    println!("    → sharded speedup {:.1}x vs per-query", s_ref.p50 / s_shard.p50);
+    speedups.push((
+        "sharded nearest 4sh 120x8192b x100q".into(),
+        s_ref.p50,
+        s_shard.p50,
+    ));
+    record(&mut entries, "serve/sharded_topk5 4sh 100q", || {
+        black_box(sharded.top_k_batch_with(&queries, 5, shard_threads));
+    });
 
     // HRR binding: direct O(D²) vs FFT O(D log D) at D=1024
     let ra = RealHV::random_bipolar(&mut rng, 1024);

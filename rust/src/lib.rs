@@ -11,8 +11,9 @@
 //!   ([`vsa`]), cycle-level multi-tile VSA accelerator simulator
 //!   ([`accel`]), the seven neuro-symbolic workload models ([`workloads`]),
 //!   the characterization profiler ([`profiler`]), analytical platform cost
-//!   models ([`platform`]), the PJRT runtime bridge ([`runtime`]), and the
-//!   neural/symbolic phase coordinator ([`coordinator`]).
+//!   models ([`platform`]), the PJRT runtime bridge ([`runtime`]), the
+//!   neural/symbolic phase coordinator ([`coordinator`]), and the sharded,
+//!   dynamically-batched query serving engine ([`serve`]).
 //!
 //! Python never runs on the request path: artifacts are compiled once by
 //! `make artifacts` and executed from Rust via the PJRT C API.
@@ -27,6 +28,7 @@ pub mod coordinator;
 pub mod platform;
 pub mod profiler;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod vsa;
 pub mod workloads;

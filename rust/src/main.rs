@@ -6,6 +6,7 @@
 //!   characterize [NAME]    per-workload characterization report
 //!   accel [CFG] [WORKLOAD] run a suite workload on the simulator
 //!   solve [--grid G]       solve synthetic RPM instances with NVSA+PrAE
+//!   serve-bench [FLAGS]    load-test the batched serving engine
 //!   runtime-info           check PJRT artifacts
 //!   info                   print system inventory
 
@@ -34,6 +35,7 @@ fn main() {
                 .and_then(|g| g.parse().ok())
                 .unwrap_or(3),
         ),
+        "serve-bench" => serve_bench(&args[1..]),
         "runtime-info" => runtime_info(),
         "info" | "--help" | "-h" => info(),
         other => {
@@ -52,29 +54,63 @@ fn info() {
     println!("  characterize [NAME]   characterization report (LNN/LTN/NVSA/NLM/VSAIT/ZeroC/PrAE)");
     println!("  accel [acc2|acc4|acc8] [mult|tree|fact|react]");
     println!("  solve [--grid 2|3]    solve synthetic RPM with NVSA + PrAE engines");
+    println!("  serve-bench [--smoke] load-test the sharded, batched serving engine;");
+    println!("                        emits BENCH_serve.json (NSCOG_SERVE_JSON overrides path).");
+    println!("                        knobs: --requests N --clients N --workers N --shards N");
+    println!("                               --batch N --delay-us N --queue N --rate QPS --json PATH");
+    println!("                        scan fan-out per worker: NSCOG_THREADS / --scan-threads N");
     println!("  runtime-info          check PJRT artifacts (artifacts/manifest.json)");
+}
+
+/// Report (but do not abort on) invalid workload traces: one bad
+/// workload must not take down `figures`/`characterize` for the rest.
+fn report_invalid_workloads() {
+    if let Err(errors) = nscog::workloads::validate_all() {
+        for e in &errors {
+            eprintln!("WARNING: workload validation: {e}");
+        }
+        eprintln!(
+            "WARNING: {} workload(s) failed validation; continuing with the rest",
+            errors.len()
+        );
+    }
 }
 
 fn figures() {
     use nscog::figures as f;
-    let figs: Vec<(&str, nscog::util::bench::Table)> = vec![
-        ("Fig. 2a — neural vs symbolic runtime", f::fig2a()),
-        ("Fig. 2b — edge platform latency (NVSA, NLM)", f::fig2b()),
-        ("Fig. 2c — NVSA task-size scaling", f::fig2c()),
-        ("Fig. 3a — operator category breakdown", f::fig3a()),
-        ("Fig. 3b — memory usage", f::fig3b()),
-        ("Fig. 3c — roofline placement", f::fig3c()),
-        ("Fig. 4 — operator graph / critical path", f::fig4()),
-        ("Tab. IV — kernel hardware counters", f::tab4()),
-        ("Fig. 5 — NVSA symbolic sparsity", f::fig5()),
-        ("Fig. 9 — SOPC vs MOPC", f::fig9()),
-        ("Fig. 11a — accelerator scaling", f::fig11a()),
-        ("Fig. 11b — accelerator vs GPU", f::fig11b()),
+    report_invalid_workloads();
+    // Figures are generated lazily and each one is isolated: a workload
+    // that panics while building one table (e.g. an invalid trace) fails
+    // that figure alone instead of aborting the whole run.
+    let figs: Vec<(&str, fn() -> nscog::util::bench::Table)> = vec![
+        ("Fig. 2a — neural vs symbolic runtime", f::fig2a),
+        ("Fig. 2b — edge platform latency (NVSA, NLM)", f::fig2b),
+        ("Fig. 2c — NVSA task-size scaling", f::fig2c),
+        ("Fig. 3a — operator category breakdown", f::fig3a),
+        ("Fig. 3b — memory usage", f::fig3b),
+        ("Fig. 3c — roofline placement", f::fig3c),
+        ("Fig. 4 — operator graph / critical path", f::fig4),
+        ("Tab. IV — kernel hardware counters", f::tab4),
+        ("Fig. 5 — NVSA symbolic sparsity", f::fig5),
+        ("Fig. 9 — SOPC vs MOPC", f::fig9),
+        ("Fig. 11a — accelerator scaling", f::fig11a),
+        ("Fig. 11b — accelerator vs GPU", f::fig11b),
     ];
-    for (title, table) in figs {
+    let mut failed = 0;
+    for (title, build) in figs {
         println!("== {title} ==");
-        table.print();
+        match std::panic::catch_unwind(build) {
+            Ok(table) => table.print(),
+            Err(_) => {
+                failed += 1;
+                eprintln!("FAILED to generate {title} (see warnings above)");
+            }
+        }
         println!();
+    }
+    if failed > 0 {
+        eprintln!("{failed} figure(s) failed; the rest were generated");
+        std::process::exit(1);
     }
 }
 
@@ -86,7 +122,12 @@ fn characterize(name: Option<&str>) {
                 continue;
             }
         }
-        let report = WorkloadReport::build(&w.trace(), w.memory(), vec![], &gpu);
+        let trace = w.trace();
+        if let Err(e) = nscog::workloads::validate_trace(w.name(), &trace) {
+            eprintln!("WARNING: skipping {}: {e}", w.name());
+            continue;
+        }
+        let report = WorkloadReport::build(&trace, w.memory(), vec![], &gpu);
         println!("{}", report.summary_line());
         for pt in &report.roofline {
             println!(
@@ -168,6 +209,108 @@ fn solve(grid: usize) {
         nvsa_ok as f64 / n as f64 * 100.0,
         prae_ok as f64 / n as f64 * 100.0
     );
+}
+
+fn serve_bench(flags: &[String]) {
+    use nscog::serve::loadgen::{run_bench, BenchOpts};
+
+    let has = |name: &str| flags.iter().any(|a| a == name);
+    let val = |name: &str| {
+        flags
+            .iter()
+            .position(|a| a == name)
+            .and_then(|i| flags.get(i + 1))
+    };
+    let num = |name: &str| val(name).and_then(|v| v.parse::<usize>().ok());
+
+    let mut opts = if has("--smoke") {
+        BenchOpts::smoke()
+    } else {
+        BenchOpts::standard()
+    };
+    if let Some(n) = num("--requests") {
+        opts.fixture.requests = n.max(1);
+    }
+    if let Some(n) = num("--clients") {
+        opts.clients = n.max(1);
+    }
+    if let Some(n) = num("--workers") {
+        opts.engine.workers = n.max(1);
+    }
+    if let Some(n) = num("--shards") {
+        opts.engine.shards = n.max(1);
+    }
+    if let Some(n) = num("--scan-threads") {
+        opts.engine.scan_threads = n.max(1);
+    } else {
+        let env = nscog::util::parallel::configured_threads();
+        if env > 1 {
+            opts.engine.scan_threads = env;
+        }
+    }
+    if let Some(n) = num("--batch") {
+        opts.engine.max_batch = n.max(1);
+    }
+    if let Some(n) = num("--delay-us") {
+        opts.engine.max_delay = std::time::Duration::from_micros(n as u64);
+    }
+    if let Some(n) = num("--queue") {
+        opts.engine.queue_capacity = n.max(1);
+    }
+    if let Some(rate) = val("--rate").and_then(|v| v.parse::<f64>().ok()) {
+        if rate > 0.0 {
+            opts.open_loop_qps = Some(rate);
+        }
+    }
+    if let Some(p) = val("--json") {
+        opts.json_path = Some(p.clone());
+    }
+
+    let f = &opts.fixture;
+    let e = &opts.engine;
+    println!(
+        "serve-bench: {} requests (mix {}:{}:{}) over {}x{}b cleanup store",
+        f.requests, f.mix.recall, f.mix.topk, f.mix.factorize, f.items, f.dim
+    );
+    println!(
+        "engine: {} workers x batch<={} (delay {}us), {} shards, {} scan threads, queue {}",
+        e.workers,
+        e.max_batch,
+        e.max_delay.as_micros(),
+        e.shards,
+        e.scan_threads,
+        e.queue_capacity
+    );
+    let report = run_bench(opts);
+    report.table().print();
+    println!(
+        "batching: {} batches, mean occupancy {:.2}, max {}",
+        report.stats.batches, report.stats.mean_batch, report.stats.max_batch
+    );
+    for (s, sh) in report.stats.shards.iter().enumerate() {
+        println!(
+            "  shard {s}: {} scans, busy {}",
+            sh.scans,
+            fmt_time(sh.busy_s)
+        );
+    }
+    println!(
+        "QPS speedup vs unbatched single-thread baseline: {:.2}x",
+        report.speedup_qps()
+    );
+    // write the JSON even on failure so CI has the evidence, then gate
+    match report.write_json() {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write serve bench JSON: {e}"),
+    }
+    let mismatches = report.closed.mismatches
+        + report.open.as_ref().map_or(0, |(_, p)| p.mismatches);
+    if mismatches > 0 {
+        eprintln!(
+            "ERROR: {mismatches} batched responses diverged from the sequential oracle"
+        );
+        std::process::exit(1);
+    }
 }
 
 fn runtime_info() {

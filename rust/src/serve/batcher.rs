@@ -1,0 +1,412 @@
+//! Dynamic micro-batching: coalesce concurrent requests into single
+//! batched-kernel calls.
+//!
+//! A worker blocks for the first ticket, then holds the batch window open
+//! for up to `max_delay` (or until `max_batch` tickets arrive) before
+//! executing. The batch is split by request class and each class runs as
+//! ONE batched call — `ShardedCleanup::recall_batch_timed`,
+//! `recall_topk_batch_timed`, or `Resonator::factorize_batch_with` over
+//! the worker's reused [`ResonatorScratch`] — so item-memory rows stream
+//! once per batch instead of once per request (the paper's batching
+//! remedy for the memory-bound cleanup scan).
+
+use super::queue::{AdmissionQueue, ResponseSlot, Ticket};
+use super::shard::ShardedCleanup;
+use super::stats::ServeStats;
+use super::{RequestKind, ServeError, ServeRequest, ServeResponse};
+use crate::vsa::{RealHV, Resonator, ResonatorScratch};
+use std::time::{Duration, Instant};
+
+/// Batch formation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Hard cap on tickets per micro-batch.
+    pub max_batch: usize,
+    /// How long to hold the window open after the first ticket.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 32,
+            max_delay: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Gather one micro-batch: block for the first ticket, then fill the
+/// window. `None` once the queue is closed and drained.
+pub fn gather(queue: &AdmissionQueue, policy: &BatchPolicy) -> Option<Vec<Ticket>> {
+    let first = queue.pop_blocking()?;
+    let max_batch = policy.max_batch.max(1);
+    let mut batch = Vec::with_capacity(max_batch);
+    batch.push(first);
+    if max_batch > 1 {
+        let window_end = Instant::now() + policy.max_delay;
+        while batch.len() < max_batch {
+            match queue.pop_until(window_end) {
+                Some(t) => batch.push(t),
+                None => break,
+            }
+        }
+    }
+    Some(batch)
+}
+
+/// Per-worker reusable buffers: one resonator estimate set + scratch,
+/// allocated lazily on the first factorize request and reused for every
+/// later batch on this worker.
+pub struct WorkerScratch {
+    resonator_bufs: Option<(Vec<RealHV>, ResonatorScratch)>,
+}
+
+impl WorkerScratch {
+    pub fn new() -> WorkerScratch {
+        WorkerScratch {
+            resonator_bufs: None,
+        }
+    }
+
+    fn bufs(&mut self, res: &Resonator) -> &mut (Vec<RealHV>, ResonatorScratch) {
+        self.resonator_bufs.get_or_insert_with(|| {
+            let d = res.codebooks()[0].dim();
+            (
+                vec![RealHV::zeros(d); res.n_factors()],
+                res.make_scratch(),
+            )
+        })
+    }
+}
+
+impl Default for WorkerScratch {
+    fn default() -> Self {
+        WorkerScratch::new()
+    }
+}
+
+/// Execute one gathered batch against the store, record metrics, then
+/// fill every slot. Consumes the tickets (query payloads are moved into
+/// the batched kernel calls without cloning).
+///
+/// Stats are recorded *before* any slot is filled, so a client woken by
+/// its response always observes engine metrics that already include its
+/// own request.
+pub fn execute(
+    batch: Vec<Ticket>,
+    store: &ShardedCleanup,
+    resonator: Option<&Resonator>,
+    scratch: &mut WorkerScratch,
+    stats: &ServeStats,
+    scan_threads: usize,
+) {
+    let now = Instant::now();
+    let mut recall_qs = Vec::new();
+    let mut recall_slots: Vec<(ResponseSlot, Instant)> = Vec::new();
+    let mut topk_qs = Vec::new();
+    let mut topk_slots: Vec<(ResponseSlot, Instant, usize)> = Vec::new();
+    let mut fact_scenes = Vec::new();
+    let mut fact_slots: Vec<(ResponseSlot, Instant)> = Vec::new();
+    let mut expired = 0u64;
+    let mut unsupported = 0u64;
+    // (slot, outcome) pairs, filled only after all metrics are recorded
+    let mut fills: Vec<(ResponseSlot, Result<ServeResponse, ServeError>)> =
+        Vec::with_capacity(batch.len());
+
+    for t in batch {
+        if t.expired(now) {
+            fills.push((t.slot, Err(ServeError::DeadlineExceeded)));
+            expired += 1;
+            continue;
+        }
+        match t.request {
+            ServeRequest::Recall { query } => {
+                if query.dim() != store.dim() {
+                    fills.push((t.slot, Err(ServeError::InvalidDimension)));
+                    unsupported += 1;
+                } else {
+                    recall_qs.push(query);
+                    recall_slots.push((t.slot, t.enqueued));
+                }
+            }
+            ServeRequest::RecallTopK { query, k } => {
+                if query.dim() != store.dim() {
+                    fills.push((t.slot, Err(ServeError::InvalidDimension)));
+                    unsupported += 1;
+                } else {
+                    topk_qs.push(query);
+                    topk_slots.push((t.slot, t.enqueued, k));
+                }
+            }
+            ServeRequest::Factorize { scene } => match resonator {
+                None => {
+                    fills.push((t.slot, Err(ServeError::Unsupported)));
+                    unsupported += 1;
+                }
+                Some(res) if scene.dim() != res.codebooks()[0].dim() => {
+                    fills.push((t.slot, Err(ServeError::InvalidDimension)));
+                    unsupported += 1;
+                }
+                Some(_) => {
+                    fact_scenes.push(scene);
+                    fact_slots.push((t.slot, t.enqueued));
+                }
+            },
+        }
+    }
+
+    let executed = recall_qs.len() + topk_qs.len() + fact_scenes.len();
+    let mut latencies: Vec<(RequestKind, Duration)> = Vec::with_capacity(executed);
+    let mut shard_timings: Vec<(usize, f64)> = Vec::new();
+
+    if !recall_qs.is_empty() {
+        let (results, timings) = store.recall_batch_timed(&recall_qs, scan_threads);
+        shard_timings.extend(timings);
+        for ((slot, enqueued), (index, cosine)) in recall_slots.into_iter().zip(results) {
+            latencies.push((RequestKind::Recall, enqueued.elapsed()));
+            fills.push((slot, Ok(ServeResponse::Recall { index, cosine })));
+        }
+    }
+
+    if !topk_qs.is_empty() {
+        // One scan at the batch's largest k; per-ticket answers are
+        // prefixes of it (top-k is prefix-stable in k — see
+        // `BinaryCodebook::top_k`).
+        let k_max = topk_slots.iter().map(|&(_, _, k)| k).max().unwrap_or(0);
+        let (results, timings) = store.recall_topk_batch_timed(&topk_qs, k_max, scan_threads);
+        shard_timings.extend(timings);
+        for ((slot, enqueued, k), mut hits) in topk_slots.into_iter().zip(results) {
+            hits.truncate(k);
+            latencies.push((RequestKind::RecallTopK, enqueued.elapsed()));
+            fills.push((slot, Ok(ServeResponse::RecallTopK { hits })));
+        }
+    }
+
+    if !fact_scenes.is_empty() {
+        let res = resonator.expect("factorize tickets imply a resonator");
+        let (estimates, rscratch) = scratch.bufs(res);
+        let results = res.factorize_batch_with(&fact_scenes, estimates, rscratch);
+        for ((slot, enqueued), r) in fact_slots.into_iter().zip(results) {
+            latencies.push((RequestKind::Factorize, enqueued.elapsed()));
+            fills.push((
+                slot,
+                Ok(ServeResponse::Factorize {
+                    indices: r.indices,
+                    iterations: r.iterations,
+                    converged: r.converged,
+                }),
+            ));
+        }
+    }
+
+    if expired > 0 {
+        stats.record_expired(expired);
+    }
+    if unsupported > 0 {
+        stats.record_unsupported(unsupported);
+    }
+    stats.record_batch(executed, &latencies, &shard_timings);
+    for (slot, outcome) in fills {
+        slot.fill(outcome);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::queue::Priority;
+    use crate::util::Rng;
+    use crate::vsa::{BinaryCodebook, BinaryHV, CleanupMemory, RealCodebook};
+
+    fn make_store(seed: u64) -> (BinaryCodebook, ShardedCleanup) {
+        let mut rng = Rng::new(seed);
+        let cb = BinaryCodebook::random(&mut rng, 24, 512);
+        let sharded = ShardedCleanup::partition(&cb, 3);
+        (cb, sharded)
+    }
+
+    fn ticket(request: ServeRequest, deadline: Duration) -> (Ticket, ResponseSlot) {
+        let slot = ResponseSlot::new();
+        let now = Instant::now();
+        (
+            Ticket {
+                request,
+                priority: Priority::Normal,
+                slot: slot.clone(),
+                enqueued: now,
+                deadline: now + deadline,
+            },
+            slot,
+        )
+    }
+
+    #[test]
+    fn gather_respects_max_batch() {
+        let q = AdmissionQueue::new(16);
+        for i in 0..5 {
+            let (t, _slot) = ticket(
+                ServeRequest::RecallTopK {
+                    query: BinaryHV::zeros(64),
+                    k: i,
+                },
+                Duration::from_secs(1),
+            );
+            q.push(t).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch: 3,
+            max_delay: Duration::from_millis(5),
+        };
+        let batch = gather(&q, &policy).unwrap();
+        assert_eq!(batch.len(), 3);
+        let rest = gather(&q, &policy).unwrap();
+        assert_eq!(rest.len(), 2);
+    }
+
+    #[test]
+    fn execute_mixed_batch_matches_oracles() {
+        let (cb, store) = make_store(1);
+        let cm = CleanupMemory::new(cb.clone());
+        let mut rng = Rng::new(2);
+        let res = Resonator::new(
+            (0..3)
+                .map(|_| RealCodebook::random_bipolar(&mut rng, 6, 512))
+                .collect(),
+            40,
+        );
+        let scene = res.compose(&[1, 4, 2]);
+        let q1 = BinaryHV::random(&mut rng, 512);
+        let q2 = BinaryHV::random(&mut rng, 512);
+
+        let (t1, s1) = ticket(ServeRequest::Recall { query: q1.clone() }, Duration::from_secs(5));
+        let (t2, s2) = ticket(
+            ServeRequest::RecallTopK {
+                query: q2.clone(),
+                k: 3,
+            },
+            Duration::from_secs(5),
+        );
+        let (t3, s3) = ticket(
+            ServeRequest::Factorize {
+                scene: scene.clone(),
+            },
+            Duration::from_secs(5),
+        );
+        let stats = ServeStats::new(store.n_shards());
+        let mut scratch = WorkerScratch::new();
+        execute(
+            vec![t1, t2, t3],
+            &store,
+            Some(&res),
+            &mut scratch,
+            &stats,
+            1,
+        );
+        let (idx, cos) = cm.recall(&q1);
+        assert_eq!(s1.wait(), Ok(ServeResponse::Recall { index: idx, cosine: cos }));
+        assert_eq!(
+            s2.wait(),
+            Ok(ServeResponse::RecallTopK {
+                hits: cm.recall_topk(&q2, 3)
+            })
+        );
+        let oracle = res.factorize(&scene);
+        assert_eq!(
+            s3.wait(),
+            Ok(ServeResponse::Factorize {
+                indices: oracle.indices,
+                iterations: oracle.iterations,
+                converged: oracle.converged,
+            })
+        );
+        let snap = stats.snapshot();
+        assert_eq!(snap.completed, 3);
+        assert_eq!(snap.batches, 1);
+        assert!((snap.mean_batch - 3.0).abs() < 1e-12);
+        assert!(snap.shards.iter().any(|s| s.scans > 0));
+    }
+
+    #[test]
+    fn mixed_k_topk_batch_answers_each_request_at_its_own_k() {
+        let (cb, store) = make_store(3);
+        let cm = CleanupMemory::new(cb);
+        let mut rng = Rng::new(4);
+        let queries: Vec<BinaryHV> =
+            (0..3).map(|_| BinaryHV::random(&mut rng, 512)).collect();
+        let ks = [1usize, 5, 2];
+        let stats = ServeStats::new(store.n_shards());
+        let mut scratch = WorkerScratch::new();
+        let mut slots = Vec::new();
+        let mut batch = Vec::new();
+        for (q, &k) in queries.iter().zip(&ks) {
+            let (t, s) = ticket(
+                ServeRequest::RecallTopK {
+                    query: q.clone(),
+                    k,
+                },
+                Duration::from_secs(5),
+            );
+            batch.push(t);
+            slots.push(s);
+        }
+        execute(batch, &store, None, &mut scratch, &stats, 1);
+        for ((q, &k), s) in queries.iter().zip(&ks).zip(slots) {
+            assert_eq!(
+                s.wait(),
+                Ok(ServeResponse::RecallTopK {
+                    hits: cm.recall_topk(q, k)
+                })
+            );
+        }
+    }
+
+    #[test]
+    fn dimension_mismatch_is_refused_not_panicking() {
+        let (_, store) = make_store(7); // dim 512
+        let stats = ServeStats::new(store.n_shards());
+        let mut scratch = WorkerScratch::new();
+        let (t_bad, s_bad) = ticket(
+            ServeRequest::Recall {
+                query: BinaryHV::zeros(64), // wrong dimension
+            },
+            Duration::from_secs(5),
+        );
+        let (t_ok, s_ok) = ticket(
+            ServeRequest::Recall {
+                query: BinaryHV::zeros(512),
+            },
+            Duration::from_secs(5),
+        );
+        execute(vec![t_bad, t_ok], &store, None, &mut scratch, &stats, 1);
+        assert_eq!(s_bad.wait(), Err(ServeError::InvalidDimension));
+        assert!(s_ok.wait().is_ok(), "good request in same batch still served");
+        assert_eq!(stats.snapshot().unsupported, 1);
+    }
+
+    #[test]
+    fn expired_and_unsupported_are_answered_not_executed() {
+        let (_, store) = make_store(5);
+        let stats = ServeStats::new(store.n_shards());
+        let mut scratch = WorkerScratch::new();
+        let (t_expired, s_expired) = ticket(
+            ServeRequest::Recall {
+                query: BinaryHV::zeros(512),
+            },
+            Duration::from_secs(0),
+        );
+        let (t_fact, s_fact) = ticket(
+            ServeRequest::Factorize {
+                scene: crate::vsa::RealHV::zeros(64),
+            },
+            Duration::from_secs(5),
+        );
+        execute(vec![t_expired, t_fact], &store, None, &mut scratch, &stats, 1);
+        assert_eq!(s_expired.wait(), Err(ServeError::DeadlineExceeded));
+        assert_eq!(s_fact.wait(), Err(ServeError::Unsupported));
+        let snap = stats.snapshot();
+        assert_eq!(snap.completed, 0);
+        assert_eq!(snap.expired, 1);
+        assert_eq!(snap.unsupported, 1);
+        assert_eq!(snap.batches, 0, "empty batches don't count toward occupancy");
+    }
+}

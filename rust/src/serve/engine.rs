@@ -1,0 +1,291 @@
+//! The serving engine: persistent worker event loops behind a blocking
+//! `submit()` client API.
+//!
+//! Clients (any thread) enqueue tickets through the bounded admission
+//! queue; `workers` threads each run gather → execute forever, coalescing
+//! concurrent requests into micro-batches. Shutdown closes the queue,
+//! drains every already-admitted ticket (no waiter is ever left hanging),
+//! and joins the workers; `Drop` does the same if `shutdown()` was never
+//! called.
+
+use super::batcher::{self, BatchPolicy, WorkerScratch};
+use super::queue::{AdmissionQueue, Priority, ResponseSlot, Ticket};
+use super::shard::ShardedCleanup;
+use super::stats::{ServeStats, StatsSnapshot};
+use super::{ServeError, ServeRequest, ServeResponse};
+use crate::vsa::{BinaryCodebook, Resonator};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Engine sizing and policy knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker event-loop threads (each gathers and executes whole
+    /// micro-batches).
+    pub workers: usize,
+    /// Codebook shards in the cleanup store.
+    pub shards: usize,
+    /// Scoped scan threads *per worker* fanning out across shards
+    /// (1 = each worker scans its batch serially, shard by shard).
+    pub scan_threads: usize,
+    /// Max requests coalesced into one micro-batch.
+    pub max_batch: usize,
+    /// How long a worker holds the batch window open for stragglers.
+    pub max_delay: Duration,
+    /// Admission queue bound (reject-on-full backpressure).
+    pub queue_capacity: usize,
+    /// Deadline applied by [`ServeEngine::submit`].
+    pub default_deadline: Duration,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: 2,
+            shards: 4,
+            scan_threads: 1,
+            max_batch: 32,
+            max_delay: Duration::from_micros(200),
+            queue_capacity: 1024,
+            default_deadline: Duration::from_secs(5),
+        }
+    }
+}
+
+struct Shared {
+    queue: AdmissionQueue,
+    store: ShardedCleanup,
+    resonator: Option<Resonator>,
+    stats: ServeStats,
+    policy: BatchPolicy,
+    scan_threads: usize,
+}
+
+/// Handle to an in-flight asynchronous submission.
+pub struct PendingResponse {
+    slot: ResponseSlot,
+    enqueued: Instant,
+}
+
+impl PendingResponse {
+    /// Block until the engine answers.
+    pub fn wait(self) -> Result<ServeResponse, ServeError> {
+        self.slot.wait()
+    }
+
+    /// Block until the engine answers; also return the request's total
+    /// latency (enqueue → worker fill), for open-loop accounting.
+    pub fn wait_with_latency(self) -> (Result<ServeResponse, ServeError>, Duration) {
+        let (outcome, completed) = self.slot.wait_timed();
+        (outcome, completed.duration_since(self.enqueued))
+    }
+}
+
+/// A running serving engine. Cheap to share by reference across client
+/// threads (`submit` takes `&self`).
+pub struct ServeEngine {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    cfg: EngineConfig,
+}
+
+impl ServeEngine {
+    /// Shard `codebook`, spawn the worker loops, and start serving.
+    /// `resonator` is optional: engines without one answer factorize
+    /// requests with [`ServeError::Unsupported`].
+    pub fn start(
+        codebook: &BinaryCodebook,
+        resonator: Option<Resonator>,
+        cfg: EngineConfig,
+    ) -> ServeEngine {
+        assert!(cfg.workers >= 1, "engine needs at least one worker");
+        let store = ShardedCleanup::partition(codebook, cfg.shards.max(1));
+        let stats = ServeStats::new(store.n_shards());
+        let shared = Arc::new(Shared {
+            queue: AdmissionQueue::new(cfg.queue_capacity),
+            store,
+            resonator,
+            stats,
+            policy: BatchPolicy {
+                max_batch: cfg.max_batch.max(1),
+                max_delay: cfg.max_delay,
+            },
+            scan_threads: cfg.scan_threads.max(1),
+        });
+        let workers = (0..cfg.workers)
+            .map(|w| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("nscog-serve-{w}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("failed to spawn serve worker")
+            })
+            .collect();
+        ServeEngine {
+            shared,
+            workers,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn store(&self) -> &ShardedCleanup {
+        &self.shared.store
+    }
+
+    /// Blocking submit with default priority and deadline.
+    pub fn submit(&self, request: ServeRequest) -> Result<ServeResponse, ServeError> {
+        self.submit_with(request, Priority::Normal, self.cfg.default_deadline)
+    }
+
+    /// Blocking submit with explicit priority and relative deadline.
+    pub fn submit_with(
+        &self,
+        request: ServeRequest,
+        priority: Priority,
+        deadline: Duration,
+    ) -> Result<ServeResponse, ServeError> {
+        self.submit_async(request, priority, deadline)?.wait()
+    }
+
+    /// Non-blocking enqueue: admission control runs immediately (so
+    /// `Overloaded`/`ShuttingDown` surface here), execution is awaited
+    /// through the returned [`PendingResponse`]. This is the open-loop
+    /// load generator's entry point.
+    pub fn submit_async(
+        &self,
+        request: ServeRequest,
+        priority: Priority,
+        deadline: Duration,
+    ) -> Result<PendingResponse, ServeError> {
+        let slot = ResponseSlot::new();
+        let now = Instant::now();
+        let ticket = Ticket {
+            request,
+            priority,
+            slot: slot.clone(),
+            enqueued: now,
+            deadline: now + deadline,
+        };
+        match self.shared.queue.push(ticket) {
+            Ok(()) => Ok(PendingResponse {
+                slot,
+                enqueued: now,
+            }),
+            Err((_, why)) => {
+                self.shared.stats.record_rejected();
+                Err(why.to_serve_error())
+            }
+        }
+    }
+
+    /// Metrics snapshot.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.shared.stats.snapshot()
+    }
+
+    /// Stop admissions, drain already-admitted tickets, join workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_in_place();
+    }
+
+    fn shutdown_in_place(&mut self) {
+        self.shared.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.shutdown_in_place();
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    let mut scratch = WorkerScratch::new();
+    while let Some(batch) = batcher::gather(&sh.queue, &sh.policy) {
+        batcher::execute(
+            batch,
+            &sh.store,
+            sh.resonator.as_ref(),
+            &mut scratch,
+            &sh.stats,
+            sh.scan_threads,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::vsa::{BinaryHV, CleanupMemory};
+
+    fn engine(cfg: EngineConfig, seed: u64) -> (ServeEngine, CleanupMemory) {
+        let mut rng = Rng::new(seed);
+        let cb = BinaryCodebook::random(&mut rng, 32, 1024);
+        let cm = CleanupMemory::new(cb.clone());
+        (ServeEngine::start(&cb, None, cfg), cm)
+    }
+
+    #[test]
+    fn submit_round_trip_matches_oracle() {
+        let (eng, cm) = engine(EngineConfig::default(), 1);
+        let mut rng = Rng::new(2);
+        for i in 0..8 {
+            let q = BinaryHV::random(&mut rng, 1024);
+            let got = eng.submit(ServeRequest::Recall { query: q.clone() }).unwrap();
+            let (index, cosine) = cm.recall(&q);
+            assert_eq!(got, ServeResponse::Recall { index, cosine }, "req {i}");
+        }
+        let snap = eng.stats();
+        assert_eq!(snap.completed, 8);
+        assert_eq!(snap.rejected, 0);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn factorize_without_resonator_is_unsupported() {
+        let (eng, _) = engine(EngineConfig::default(), 3);
+        let got = eng.submit(ServeRequest::Factorize {
+            scene: crate::vsa::RealHV::zeros(64),
+        });
+        assert_eq!(got, Err(ServeError::Unsupported));
+    }
+
+    #[test]
+    fn zero_deadline_requests_expire_not_execute() {
+        let (eng, _) = engine(EngineConfig::default(), 4);
+        let got = eng.submit_with(
+            ServeRequest::Recall {
+                query: BinaryHV::zeros(1024),
+            },
+            Priority::Normal,
+            Duration::from_secs(0),
+        );
+        assert_eq!(got, Err(ServeError::DeadlineExceeded));
+        assert_eq!(eng.stats().expired, 1);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_rejected() {
+        let (eng, _) = engine(EngineConfig::default(), 5);
+        eng.shared.queue.close();
+        let got = eng.submit(ServeRequest::Recall {
+            query: BinaryHV::zeros(1024),
+        });
+        assert_eq!(got, Err(ServeError::ShuttingDown));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let (eng, _) = engine(EngineConfig::default(), 6);
+        drop(eng); // must not hang
+    }
+}

@@ -1,0 +1,720 @@
+//! Synthetic load generation and the `nscog serve-bench` report.
+//!
+//! A [`Fixture`] deterministically generates an NVSA-style request mix —
+//! noisy cleanup recalls, top-k recalls, and resonator factorizations —
+//! plus the sequential unbatched oracle every engine response is checked
+//! against. Two generator shapes drive the engine:
+//!
+//! - **closed loop**: `clients` threads submit back-to-back (each new
+//!   request waits for the previous response) — measures saturated
+//!   throughput and is what forms large micro-batches;
+//! - **open loop**: arrivals follow a fixed-rate schedule regardless of
+//!   completions (the production-realistic shape) — measures latency
+//!   under a target offered load, including queueing delay.
+//!
+//! `run_bench` compares both against the unbatched single-thread baseline
+//! and emits `BENCH_serve.json` (path override: `NSCOG_SERVE_JSON`).
+
+use super::engine::{EngineConfig, ServeEngine};
+use super::queue::Priority;
+use super::stats::{LatencySummary, StatsSnapshot};
+use super::{ServeError, ServeRequest, ServeResponse};
+use crate::util::bench::Table;
+use crate::util::Rng;
+use crate::vsa::{BinaryCodebook, CleanupMemory, RealCodebook, Resonator};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Relative request-class weights.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadMix {
+    pub recall: u32,
+    pub topk: u32,
+    pub factorize: u32,
+}
+
+impl LoadMix {
+    fn total(&self) -> u32 {
+        self.recall + self.topk + self.factorize
+    }
+}
+
+/// Fixture sizing (problem shapes + request schedule).
+#[derive(Debug, Clone)]
+pub struct FixtureConfig {
+    /// Cleanup-memory items / hypervector dimension.
+    pub items: usize,
+    pub dim: usize,
+    /// Fraction of bits flipped on recall queries.
+    pub noise_frac: f64,
+    /// `k` for top-k recall requests.
+    pub topk_k: usize,
+    /// Resonator shape: factors × items-per-factor × dimension, max iters.
+    pub fact_factors: usize,
+    pub fact_items: usize,
+    pub fact_dim: usize,
+    pub fact_iters: usize,
+    /// Total requests and their class mix.
+    pub requests: usize,
+    pub mix: LoadMix,
+    pub seed: u64,
+}
+
+/// Deterministic workload: stores, request schedule, and oracle inputs.
+pub struct Fixture {
+    pub codebook: BinaryCodebook,
+    pub cleanup: CleanupMemory,
+    pub resonator: Resonator,
+    pub requests: Vec<ServeRequest>,
+    pub cfg: FixtureConfig,
+}
+
+impl Fixture {
+    /// Build stores and a request schedule, all derived from `cfg.seed`.
+    pub fn build(cfg: FixtureConfig) -> Fixture {
+        assert!(cfg.mix.total() > 0, "empty request mix");
+        let mut rng = Rng::new(cfg.seed);
+        let codebook = BinaryCodebook::random(&mut rng, cfg.items, cfg.dim);
+        let resonator = Resonator::new(
+            (0..cfg.fact_factors)
+                .map(|_| RealCodebook::random_bipolar(&mut rng, cfg.fact_items, cfg.fact_dim))
+                .collect(),
+            cfg.fact_iters,
+        );
+        let flips = (cfg.dim as f64 * cfg.noise_frac) as usize;
+        let mut requests = Vec::with_capacity(cfg.requests);
+        for _ in 0..cfg.requests {
+            let roll = rng.below(cfg.mix.total() as usize) as u32;
+            if roll < cfg.mix.recall + cfg.mix.topk {
+                let mut query = codebook.item(rng.below(cfg.items)).clone();
+                for i in rng.sample_indices(cfg.dim, flips) {
+                    query.set(i, !query.get(i));
+                }
+                if roll < cfg.mix.recall {
+                    requests.push(ServeRequest::Recall { query });
+                } else {
+                    requests.push(ServeRequest::RecallTopK {
+                        query,
+                        k: cfg.topk_k,
+                    });
+                }
+            } else {
+                let truth: Vec<usize> = (0..cfg.fact_factors)
+                    .map(|_| rng.below(cfg.fact_items))
+                    .collect();
+                requests.push(ServeRequest::Factorize {
+                    scene: resonator.compose(&truth),
+                });
+            }
+        }
+        Fixture {
+            cleanup: CleanupMemory::new(codebook.clone()),
+            codebook,
+            resonator,
+            requests,
+            cfg,
+        }
+    }
+
+    /// Answer one request with the sequential, unbatched, unsharded
+    /// kernels — the correctness oracle and the baseline's inner loop.
+    pub fn oracle_answer(&self, req: &ServeRequest) -> ServeResponse {
+        match req {
+            ServeRequest::Recall { query } => {
+                let (index, cosine) = self.cleanup.recall(query);
+                ServeResponse::Recall { index, cosine }
+            }
+            ServeRequest::RecallTopK { query, k } => ServeResponse::RecallTopK {
+                hits: self.cleanup.recall_topk(query, *k),
+            },
+            ServeRequest::Factorize { scene } => {
+                let r = self.resonator.factorize(scene);
+                ServeResponse::Factorize {
+                    indices: r.indices,
+                    iterations: r.iterations,
+                    converged: r.converged,
+                }
+            }
+        }
+    }
+
+    /// Sequential oracle for the whole schedule (untimed convenience).
+    pub fn oracle(&self) -> Vec<ServeResponse> {
+        self.requests.iter().map(|r| self.oracle_answer(r)).collect()
+    }
+
+    /// Run the whole schedule sequentially (the unbatched single-thread
+    /// baseline): responses, per-request latencies, and wall time.
+    pub fn baseline_run(&self) -> (Vec<ServeResponse>, Vec<f64>, f64) {
+        let t0 = Instant::now();
+        let mut responses = Vec::with_capacity(self.requests.len());
+        let mut latencies = Vec::with_capacity(self.requests.len());
+        for req in &self.requests {
+            let s = Instant::now();
+            responses.push(self.oracle_answer(req));
+            latencies.push(s.elapsed().as_secs_f64());
+        }
+        (responses, latencies, t0.elapsed().as_secs_f64())
+    }
+}
+
+/// Outcome of one generator run against an engine.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub wall_s: f64,
+    /// Per-request end-to-end latency (seconds), request order.
+    pub latencies_s: Vec<f64>,
+    pub outcomes: Vec<Result<ServeResponse, ServeError>>,
+    pub ok: usize,
+    pub rejected: usize,
+    pub expired: usize,
+    /// Ok responses that differ from the sequential oracle (must be 0).
+    pub mismatches: usize,
+}
+
+impl LoadReport {
+    fn assemble(
+        wall_s: f64,
+        mut tagged: Vec<(usize, Result<ServeResponse, ServeError>, f64)>,
+        oracle: &[ServeResponse],
+    ) -> LoadReport {
+        tagged.sort_by_key(|&(i, _, _)| i);
+        let mut latencies_s = Vec::with_capacity(tagged.len());
+        let mut outcomes = Vec::with_capacity(tagged.len());
+        let (mut ok, mut rejected, mut expired, mut mismatches) = (0, 0, 0, 0);
+        for (i, outcome, lat) in tagged {
+            match &outcome {
+                Ok(resp) => {
+                    ok += 1;
+                    if resp != &oracle[i] {
+                        mismatches += 1;
+                    }
+                }
+                Err(ServeError::Overloaded) | Err(ServeError::ShuttingDown) => rejected += 1,
+                Err(ServeError::DeadlineExceeded) => expired += 1,
+                // the fixture never generates these, so either means the
+                // engine under test is misconfigured — flag it
+                Err(ServeError::Unsupported) | Err(ServeError::InvalidDimension) => {
+                    mismatches += 1
+                }
+            }
+            latencies_s.push(lat);
+            outcomes.push(outcome);
+        }
+        LoadReport {
+            wall_s,
+            latencies_s,
+            outcomes,
+            ok,
+            rejected,
+            expired,
+            mismatches,
+        }
+    }
+
+    /// Completed-request throughput.
+    pub fn qps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.ok as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Latency summary over successful requests only.
+    pub fn latency(&self) -> Option<LatencySummary> {
+        let ok_lats: Vec<f64> = self
+            .outcomes
+            .iter()
+            .zip(&self.latencies_s)
+            .filter(|(o, _)| o.is_ok())
+            .map(|(_, &l)| l)
+            .collect();
+        LatencySummary::of(&ok_lats)
+    }
+}
+
+/// Closed loop: `clients` threads each submit their share of the schedule
+/// back-to-back. Request `i` goes to client `i % clients`, preserving a
+/// deterministic assignment. `oracle` is the per-request expected
+/// response set ([`Fixture::oracle`] / `baseline_run`) — precomputed by
+/// the caller so one oracle pass can serve several generator runs.
+pub fn run_closed_loop(
+    engine: &ServeEngine,
+    fixture: &Fixture,
+    clients: usize,
+    oracle: &[ServeResponse],
+) -> LoadReport {
+    let requests = &fixture.requests;
+    assert_eq!(oracle.len(), requests.len());
+    let clients = clients.clamp(1, requests.len().max(1));
+    let t0 = Instant::now();
+    let tagged: Vec<(usize, Result<ServeResponse, ServeError>, f64)> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut out = Vec::new();
+                        for (i, req) in requests.iter().enumerate() {
+                            if i % clients != c {
+                                continue;
+                            }
+                            let start = Instant::now();
+                            let outcome = engine.submit(req.clone());
+                            out.push((i, outcome, start.elapsed().as_secs_f64()));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("load client panicked"))
+                .collect()
+        });
+    LoadReport::assemble(t0.elapsed().as_secs_f64(), tagged, oracle)
+}
+
+/// Open loop: arrivals paced at `rate_qps` from a shared schedule,
+/// dispatched non-blocking by `senders` threads; responses are harvested
+/// after dispatch, so slow completions never stall later arrivals.
+/// Latency is measured enqueue → worker-fill (queueing included).
+/// `oracle` as in [`run_closed_loop`].
+pub fn run_open_loop(
+    engine: &ServeEngine,
+    fixture: &Fixture,
+    rate_qps: f64,
+    senders: usize,
+    oracle: &[ServeResponse],
+) -> LoadReport {
+    assert!(rate_qps > 0.0);
+    let requests = &fixture.requests;
+    assert_eq!(oracle.len(), requests.len());
+    let senders = senders.clamp(1, requests.len().max(1));
+    let interval = Duration::from_secs_f64(1.0 / rate_qps);
+    let next = AtomicUsize::new(0);
+    // small lead so every sender thread is running before arrival 0
+    let epoch = Instant::now() + Duration::from_millis(10);
+    let deadline = engine.config().default_deadline;
+    let t0 = Instant::now();
+    let tagged: Vec<(usize, Result<ServeResponse, ServeError>, f64)> =
+        std::thread::scope(|s| {
+            let next = &next;
+            let handles: Vec<_> = (0..senders)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut pending = Vec::new();
+                        let mut done = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= requests.len() {
+                                break;
+                            }
+                            let scheduled = epoch + interval.mul_f64(i as f64);
+                            let now = Instant::now();
+                            if scheduled > now {
+                                std::thread::sleep(scheduled - now);
+                            }
+                            match engine.submit_async(
+                                requests[i].clone(),
+                                Priority::Normal,
+                                deadline,
+                            ) {
+                                Ok(p) => pending.push((i, p)),
+                                Err(e) => done.push((i, Err(e), 0.0)),
+                            }
+                        }
+                        for (i, p) in pending {
+                            let (outcome, lat) = p.wait_with_latency();
+                            done.push((i, outcome, lat.as_secs_f64()));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("load sender panicked"))
+                .collect()
+        });
+    LoadReport::assemble(t0.elapsed().as_secs_f64(), tagged, oracle)
+}
+
+/// Everything `nscog serve-bench` needs for one run.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub fixture: FixtureConfig,
+    pub engine: EngineConfig,
+    /// Closed-loop client threads.
+    pub clients: usize,
+    /// Open-loop offered rate; `None` skips the open-loop pass.
+    pub open_loop_qps: Option<f64>,
+    pub json_path: Option<String>,
+}
+
+impl BenchOpts {
+    /// CI smoke shape: bounded requests, deterministic seed, small enough
+    /// to finish in a few seconds even unoptimized.
+    pub fn smoke() -> BenchOpts {
+        BenchOpts {
+            fixture: FixtureConfig {
+                items: 96,
+                dim: 2048,
+                noise_frac: 0.2,
+                topk_k: 3,
+                fact_factors: 3,
+                fact_items: 8,
+                fact_dim: 512,
+                fact_iters: 30,
+                requests: 400,
+                mix: LoadMix {
+                    recall: 6,
+                    topk: 1,
+                    factorize: 1,
+                },
+                seed: 2024,
+            },
+            engine: EngineConfig {
+                workers: 2,
+                shards: 4,
+                scan_threads: 1,
+                max_batch: 16,
+                max_delay: Duration::from_micros(300),
+                queue_capacity: 512,
+                default_deadline: Duration::from_secs(30),
+            },
+            clients: 8,
+            open_loop_qps: None,
+            json_path: None,
+        }
+    }
+
+    /// Default standalone-bench shape: paper-scale cleanup memory
+    /// (120×8192, the Tab. VII REACT/MULT store) and more load.
+    pub fn standard() -> BenchOpts {
+        BenchOpts {
+            fixture: FixtureConfig {
+                items: 120,
+                dim: 8192,
+                noise_frac: 0.2,
+                topk_k: 5,
+                fact_factors: 3,
+                fact_items: 10,
+                fact_dim: 1024,
+                fact_iters: 60,
+                requests: 2000,
+                mix: LoadMix {
+                    recall: 6,
+                    topk: 1,
+                    factorize: 1,
+                },
+                seed: 2024,
+            },
+            engine: EngineConfig::default(),
+            clients: 16,
+            open_loop_qps: None,
+            json_path: None,
+        }
+    }
+}
+
+/// One generator pass, summarized for the report.
+#[derive(Debug, Clone)]
+pub struct PassSummary {
+    pub qps: f64,
+    pub latency: Option<LatencySummary>,
+    pub ok: usize,
+    pub rejected: usize,
+    pub expired: usize,
+    pub mismatches: usize,
+}
+
+impl PassSummary {
+    fn of(r: &LoadReport) -> PassSummary {
+        PassSummary {
+            qps: r.qps(),
+            latency: r.latency(),
+            ok: r.ok,
+            rejected: r.rejected,
+            expired: r.expired,
+            mismatches: r.mismatches,
+        }
+    }
+}
+
+/// Full serve-bench result.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub opts: BenchOpts,
+    pub baseline_qps: f64,
+    pub baseline_latency: Option<LatencySummary>,
+    pub closed: PassSummary,
+    pub open: Option<(f64, PassSummary)>,
+    pub stats: StatsSnapshot,
+}
+
+impl BenchReport {
+    /// QPS speedup of batched-sharded closed-loop serving over the
+    /// unbatched single-thread baseline.
+    pub fn speedup_qps(&self) -> f64 {
+        if self.baseline_qps > 0.0 {
+            self.closed.qps / self.baseline_qps
+        } else {
+            0.0
+        }
+    }
+
+    /// Render the result table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&["pass", "qps", "p50", "p99", "ok", "rej", "exp", "mismatch"]);
+        let fmt_lat = |l: &Option<LatencySummary>, f: fn(&LatencySummary) -> f64| {
+            l.as_ref()
+                .map(|s| crate::util::stats::fmt_time(f(s)))
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row(&[
+            "baseline (seq)".into(),
+            format!("{:.0}", self.baseline_qps),
+            fmt_lat(&self.baseline_latency, |s| s.p50_s),
+            fmt_lat(&self.baseline_latency, |s| s.p99_s),
+            format!("{}", self.opts.fixture.requests),
+            "0".into(),
+            "0".into(),
+            "0".into(),
+        ]);
+        let mut pass_row = |name: String, p: &PassSummary| {
+            t.row(&[
+                name,
+                format!("{:.0}", p.qps),
+                fmt_lat(&p.latency, |s| s.p50_s),
+                fmt_lat(&p.latency, |s| s.p99_s),
+                format!("{}", p.ok),
+                format!("{}", p.rejected),
+                format!("{}", p.expired),
+                format!("{}", p.mismatches),
+            ]);
+        };
+        pass_row("closed-loop".into(), &self.closed);
+        if let Some((rate, p)) = &self.open {
+            pass_row(format!("open-loop @{rate:.0}qps"), p);
+        }
+        t
+    }
+
+    /// Machine-readable JSON (hand-rolled like `BENCH_hotpath.json`).
+    pub fn to_json(&self) -> String {
+        let lat = |l: &Option<LatencySummary>| match l {
+            Some(s) => format!(
+                "{{\"n\": {}, \"mean_s\": {:e}, \"p50_s\": {:e}, \"p99_s\": {:e}, \"max_s\": {:e}}}",
+                s.n, s.mean_s, s.p50_s, s.p99_s, s.max_s
+            ),
+            None => "null".into(),
+        };
+        let pass = |p: &PassSummary| {
+            format!(
+                "{{\"qps\": {:.3}, \"latency\": {}, \"ok\": {}, \"rejected\": {}, \"expired\": {}, \"mismatches\": {}}}",
+                p.qps,
+                lat(&p.latency),
+                p.ok,
+                p.rejected,
+                p.expired,
+                p.mismatches
+            )
+        };
+        let f = &self.opts.fixture;
+        let e = &self.opts.engine;
+        let mut out = String::from("{\n  \"bench\": \"serve\",\n");
+        out.push_str(&format!(
+            "  \"config\": {{\"requests\": {}, \"clients\": {}, \"workers\": {}, \"shards\": {}, \"scan_threads\": {}, \"max_batch\": {}, \"max_delay_us\": {}, \"queue_capacity\": {}, \"items\": {}, \"dim\": {}, \"mix\": \"{}:{}:{}\", \"seed\": {}}},\n",
+            f.requests,
+            self.opts.clients,
+            e.workers,
+            e.shards,
+            e.scan_threads,
+            e.max_batch,
+            e.max_delay.as_micros(),
+            e.queue_capacity,
+            f.items,
+            f.dim,
+            f.mix.recall,
+            f.mix.topk,
+            f.mix.factorize,
+            f.seed
+        ));
+        out.push_str(&format!(
+            "  \"baseline\": {{\"qps\": {:.3}, \"latency\": {}}},\n",
+            self.baseline_qps,
+            lat(&self.baseline_latency)
+        ));
+        out.push_str(&format!("  \"closed_loop\": {},\n", pass(&self.closed)));
+        match &self.open {
+            Some((rate, p)) => out.push_str(&format!(
+                "  \"open_loop\": {{\"offered_qps\": {:.3}, \"pass\": {}}},\n",
+                rate,
+                pass(p)
+            )),
+            None => out.push_str("  \"open_loop\": null,\n"),
+        }
+        out.push_str(&format!("  \"speedup_qps\": {:.3},\n", self.speedup_qps()));
+        out.push_str(&format!(
+            "  \"batching\": {{\"batches\": {}, \"mean_batch\": {:.3}, \"max_batch\": {}}},\n",
+            self.stats.batches, self.stats.mean_batch, self.stats.max_batch
+        ));
+        out.push_str("  \"shards\": [");
+        for (i, sh) in self.stats.shards.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!(
+                "{{\"scans\": {}, \"busy_s\": {:e}}}",
+                sh.scans, sh.busy_s
+            ));
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+
+    /// Write the serve bench JSON. Precedence: explicit `--json` flag
+    /// (`opts.json_path`), then the `NSCOG_SERVE_JSON` environment
+    /// variable, then `BENCH_serve.json`.
+    pub fn write_json(&self) -> std::io::Result<String> {
+        let path = self.opts.json_path.clone().unwrap_or_else(|| {
+            std::env::var("NSCOG_SERVE_JSON").unwrap_or_else(|_| "BENCH_serve.json".into())
+        });
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+/// Run the full serve benchmark: baseline, closed loop, optional open
+/// loop; every engine response verified against the sequential oracle.
+pub fn run_bench(opts: BenchOpts) -> BenchReport {
+    let fixture = Fixture::build(opts.fixture.clone());
+    // the timed baseline pass doubles as the oracle for both generators
+    let (oracle, base_lat, base_wall) = fixture.baseline_run();
+    let baseline_qps = if base_wall > 0.0 {
+        fixture.requests.len() as f64 / base_wall
+    } else {
+        0.0
+    };
+    let engine = ServeEngine::start(
+        &fixture.codebook,
+        Some(fixture.resonator.clone()),
+        opts.engine.clone(),
+    );
+    let closed = run_closed_loop(&engine, &fixture, opts.clients, &oracle);
+    let open = opts.open_loop_qps.map(|rate| {
+        (
+            rate,
+            PassSummary::of(&run_open_loop(&engine, &fixture, rate, opts.clients, &oracle)),
+        )
+    });
+    let stats = engine.stats();
+    engine.shutdown();
+    BenchReport {
+        baseline_qps,
+        baseline_latency: LatencySummary::of(&base_lat),
+        closed: PassSummary::of(&closed),
+        open,
+        stats,
+        opts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_fixture() -> FixtureConfig {
+        FixtureConfig {
+            items: 24,
+            dim: 512,
+            noise_frac: 0.2,
+            topk_k: 3,
+            fact_factors: 3,
+            fact_items: 6,
+            fact_dim: 256,
+            fact_iters: 20,
+            requests: 60,
+            mix: LoadMix {
+                recall: 4,
+                topk: 1,
+                factorize: 1,
+            },
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn fixture_is_deterministic_and_mixed() {
+        let a = Fixture::build(tiny_fixture());
+        let b = Fixture::build(tiny_fixture());
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.requests.len(), 60);
+        let kinds: std::collections::BTreeSet<&'static str> =
+            a.requests.iter().map(|r| r.kind().label()).collect();
+        assert_eq!(kinds.len(), 3, "all three classes present: {kinds:?}");
+    }
+
+    #[test]
+    fn closed_loop_matches_oracle_bit_exactly() {
+        let fixture = Fixture::build(tiny_fixture());
+        let engine = ServeEngine::start(
+            &fixture.codebook,
+            Some(fixture.resonator.clone()),
+            EngineConfig {
+                workers: 2,
+                shards: 3,
+                max_batch: 8,
+                max_delay: Duration::from_millis(1),
+                ..EngineConfig::default()
+            },
+        );
+        let report = run_closed_loop(&engine, &fixture, 6, &fixture.oracle());
+        assert_eq!(report.ok, 60);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.expired, 0);
+        assert_eq!(report.mismatches, 0, "batched responses diverged from oracle");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn open_loop_paces_and_completes() {
+        let fixture = Fixture::build(FixtureConfig {
+            requests: 40,
+            ..tiny_fixture()
+        });
+        let engine = ServeEngine::start(
+            &fixture.codebook,
+            Some(fixture.resonator.clone()),
+            EngineConfig::default(),
+        );
+        // high rate so the test stays fast; still a schedule, not a loop
+        let report = run_open_loop(&engine, &fixture, 4000.0, 4, &fixture.oracle());
+        assert_eq!(report.ok + report.rejected + report.expired, 40);
+        assert_eq!(report.mismatches, 0);
+        assert!(report.wall_s >= 40.0 / 4000.0 * 0.5);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn bench_report_json_is_well_formed() {
+        let mut opts = BenchOpts::smoke();
+        opts.fixture.requests = 40;
+        opts.fixture.dim = 512;
+        opts.fixture.items = 24;
+        opts.clients = 4;
+        let report = run_bench(opts);
+        assert_eq!(report.closed.mismatches, 0);
+        let json = report.to_json();
+        let parsed = crate::util::json::Json::parse(&json).expect("invalid JSON emitted");
+        assert_eq!(
+            parsed.get("bench").and_then(|b| b.as_str()),
+            Some("serve")
+        );
+        assert!(parsed.get("closed_loop").is_some());
+        assert!(parsed.get("speedup_qps").is_some());
+        // table renders without panicking
+        let _ = report.table().to_string();
+    }
+}

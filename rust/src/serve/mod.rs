@@ -1,0 +1,136 @@
+//! `serve/` — sharded, dynamically-batched VSA query serving engine.
+//!
+//! The paper's characterization (Sec. V) shows the symbolic kernels —
+//! cleanup scans and resonator iteration — are memory-bound with little
+//! intra-query parallelism; its cross-layer remedy is batching plus
+//! parallel scheduling. PR 1 built the batched kernels
+//! ([`crate::vsa::codebook`]'s `nearest_batch`, [`crate::vsa::cleanup`]'s
+//! `recall_batch`, [`crate::vsa::Resonator::factorize_with`]); this module
+//! builds the request path that actually *forms* those batches under
+//! concurrent load:
+//!
+//! - [`shard`]: codebooks partitioned into contiguous shards, scanned on
+//!   worker threads via [`crate::util::parallel`], per-shard top-k merged
+//!   under the same (score desc, index asc) order as the unsharded scan.
+//! - [`queue`]: a bounded admission queue with deadlines, reject-on-full
+//!   backpressure, and FIFO-within-priority ordering.
+//! - [`batcher`]: a dynamic micro-batcher coalescing concurrent requests
+//!   into single batched-kernel calls under a max-batch/max-delay policy,
+//!   reusing one [`crate::vsa::ResonatorScratch`] per worker.
+//! - [`engine`]: the persistent worker event loop behind a blocking
+//!   [`engine::ServeEngine::submit`] client API.
+//! - [`stats`]: per-shard, per-batch, and per-class latency / throughput /
+//!   batch-occupancy metrics.
+//! - [`loadgen`]: open- and closed-loop synthetic load generators and the
+//!   `nscog serve-bench` report (`BENCH_serve.json`).
+//!
+//! Correctness contract: every batched/sharded response is bit-identical
+//! to the sequential oracle (`CleanupMemory::recall`/`recall_topk`,
+//! `Resonator::factorize`) — enforced by `rust/tests/serve_e2e.rs`.
+
+pub mod batcher;
+pub mod engine;
+pub mod loadgen;
+pub mod queue;
+pub mod shard;
+pub mod stats;
+
+pub use engine::{EngineConfig, PendingResponse, ServeEngine};
+pub use queue::Priority;
+pub use shard::{ShardedBinaryCodebook, ShardedCleanup, ShardedRealCodebook};
+pub use stats::{LatencySummary, StatsSnapshot};
+
+use crate::vsa::{BinaryHV, RealHV};
+use std::fmt;
+
+/// A client request against the serving engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeRequest {
+    /// Cleanup-memory recall: nearest stored item for a (noisy) query.
+    Recall { query: BinaryHV },
+    /// Top-`k` cleanup recall (ranked candidates, e.g. for re-ranking).
+    RecallTopK { query: BinaryHV, k: usize },
+    /// Resonator factorization of a composed scene.
+    Factorize { scene: RealHV },
+}
+
+/// Request class, used for batching group and per-class metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestKind {
+    Recall,
+    RecallTopK,
+    Factorize,
+}
+
+impl ServeRequest {
+    pub fn kind(&self) -> RequestKind {
+        match self {
+            ServeRequest::Recall { .. } => RequestKind::Recall,
+            ServeRequest::RecallTopK { .. } => RequestKind::RecallTopK,
+            ServeRequest::Factorize { .. } => RequestKind::Factorize,
+        }
+    }
+}
+
+impl RequestKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RequestKind::Recall => "recall",
+            RequestKind::RecallTopK => "recall_topk",
+            RequestKind::Factorize => "factorize",
+        }
+    }
+}
+
+/// A completed response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeResponse {
+    Recall {
+        index: usize,
+        cosine: f64,
+    },
+    RecallTopK {
+        /// (item index, normalized score), ordered (score desc, index asc).
+        hits: Vec<(usize, f64)>,
+    },
+    Factorize {
+        indices: Vec<usize>,
+        iterations: usize,
+        converged: bool,
+    },
+}
+
+/// Why a request did not produce a [`ServeResponse`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission queue full — backpressure; the caller should shed load
+    /// or retry later.
+    Overloaded,
+    /// The request's deadline expired before a worker picked it up.
+    DeadlineExceeded,
+    /// Engine is shutting down (or was already shut down).
+    ShuttingDown,
+    /// The engine was built without the capability this request needs
+    /// (e.g. a factorize request and no resonator configured).
+    Unsupported,
+    /// The request payload's dimension doesn't match the engine's store —
+    /// refused up front so a malformed request can never panic (and kill)
+    /// a worker thread.
+    InvalidDimension,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded => write!(f, "admission queue full (backpressure)"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded in queue"),
+            ServeError::ShuttingDown => write!(f, "engine shutting down"),
+            ServeError::Unsupported => write!(f, "request kind not supported by this engine"),
+            ServeError::InvalidDimension => {
+                write!(f, "request dimension does not match the engine's store")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}

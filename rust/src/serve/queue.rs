@@ -1,0 +1,334 @@
+//! Bounded admission queue with deadlines, backpressure, and
+//! FIFO-within-priority ordering.
+//!
+//! Admission control is reject-on-full: a full queue refuses new tickets
+//! immediately (the client sees [`ServeError::Overloaded`]) instead of
+//! building an unbounded backlog — under overload, latency is traded for
+//! an explicit error the caller can act on. Deadlines are checked by the
+//! worker at pop time; an expired ticket is answered with
+//! [`ServeError::DeadlineExceeded`] without touching the kernels.
+
+use super::{ServeError, ServeRequest, ServeResponse};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Two-level priority: `High` tickets always pop before `Normal` ones;
+/// within a level, strictly FIFO.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    High,
+    Normal,
+}
+
+/// One-shot response slot a client blocks on and a worker fills once.
+#[derive(Debug, Clone)]
+pub struct ResponseSlot {
+    inner: Arc<SlotInner>,
+}
+
+#[derive(Debug)]
+struct SlotInner {
+    /// `(outcome, completion time)`, set exactly once.
+    done: Mutex<Option<(Result<ServeResponse, ServeError>, Instant)>>,
+    ready: Condvar,
+}
+
+impl ResponseSlot {
+    pub fn new() -> ResponseSlot {
+        ResponseSlot {
+            inner: Arc::new(SlotInner {
+                done: Mutex::new(None),
+                ready: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Fill the slot (first fill wins; later fills are ignored).
+    pub fn fill(&self, outcome: Result<ServeResponse, ServeError>) {
+        let mut g = self.inner.done.lock().expect("slot poisoned");
+        if g.is_none() {
+            *g = Some((outcome, Instant::now()));
+            self.inner.ready.notify_all();
+        }
+    }
+
+    /// Block until the slot is filled; returns the outcome and the instant
+    /// the worker filled it (for open-loop latency accounting).
+    pub fn wait_timed(&self) -> (Result<ServeResponse, ServeError>, Instant) {
+        let mut g = self.inner.done.lock().expect("slot poisoned");
+        loop {
+            if let Some(done) = g.take() {
+                return done;
+            }
+            g = self.inner.ready.wait(g).expect("slot poisoned");
+        }
+    }
+
+    /// Block until the slot is filled.
+    pub fn wait(&self) -> Result<ServeResponse, ServeError> {
+        self.wait_timed().0
+    }
+}
+
+impl Default for ResponseSlot {
+    fn default() -> Self {
+        ResponseSlot::new()
+    }
+}
+
+/// A queued request: payload plus admission metadata.
+#[derive(Debug)]
+pub struct Ticket {
+    pub request: ServeRequest,
+    pub priority: Priority,
+    pub slot: ResponseSlot,
+    /// When the ticket entered the queue (latency measurement origin).
+    pub enqueued: Instant,
+    /// Absolute deadline; expired tickets are answered, not executed.
+    pub deadline: Instant,
+}
+
+impl Ticket {
+    pub fn expired(&self, now: Instant) -> bool {
+        now >= self.deadline
+    }
+}
+
+/// Why [`AdmissionQueue::push`] refused a ticket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    Full,
+    Closed,
+}
+
+impl AdmitError {
+    pub fn to_serve_error(self) -> ServeError {
+        match self {
+            AdmitError::Full => ServeError::Overloaded,
+            AdmitError::Closed => ServeError::ShuttingDown,
+        }
+    }
+}
+
+struct QueueState {
+    high: VecDeque<Ticket>,
+    normal: VecDeque<Ticket>,
+    closed: bool,
+}
+
+impl QueueState {
+    fn len(&self) -> usize {
+        self.high.len() + self.normal.len()
+    }
+
+    fn take(&mut self) -> Option<Ticket> {
+        self.high.pop_front().or_else(|| self.normal.pop_front())
+    }
+}
+
+/// Bounded MPMC admission queue (mutex + condvar; std-only).
+pub struct AdmissionQueue {
+    capacity: usize,
+    state: Mutex<QueueState>,
+    available: Condvar,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            capacity: capacity.max(1),
+            state: Mutex::new(QueueState {
+                high: VecDeque::new(),
+                normal: VecDeque::new(),
+                closed: false,
+            }),
+            available: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("queue poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit a ticket, or hand it back with the rejection reason
+    /// (reject-on-full backpressure; closed queues admit nothing).
+    pub fn push(&self, ticket: Ticket) -> Result<(), (Ticket, AdmitError)> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        if st.closed {
+            return Err((ticket, AdmitError::Closed));
+        }
+        if st.len() >= self.capacity {
+            return Err((ticket, AdmitError::Full));
+        }
+        match ticket.priority {
+            Priority::High => st.high.push_back(ticket),
+            Priority::Normal => st.normal.push_back(ticket),
+        }
+        drop(st);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue: no further admissions; blocked poppers drain what
+    /// remains, then observe `None`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().expect("queue poisoned");
+        st.closed = true;
+        drop(st);
+        self.available.notify_all();
+    }
+
+    /// Pop the next ticket, blocking while the queue is empty and open.
+    /// Returns `None` once the queue is closed and drained.
+    pub fn pop_blocking(&self) -> Option<Ticket> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        loop {
+            if let Some(t) = st.take() {
+                return Some(t);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.available.wait(st).expect("queue poisoned");
+        }
+    }
+
+    /// Pop the next ticket if one arrives before `until`; `None` on
+    /// timeout or when closed-and-drained. Used by the micro-batcher to
+    /// wait out the remainder of a batch window.
+    pub fn pop_until(&self, until: Instant) -> Option<Ticket> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        loop {
+            if let Some(t) = st.take() {
+                return Some(t);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= until {
+                return None;
+            }
+            let (g, _timeout) = self
+                .available
+                .wait_timeout(st, until - now)
+                .expect("queue poisoned");
+            st = g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vsa::BinaryHV;
+
+    fn ticket(tag: usize, priority: Priority) -> Ticket {
+        // encode `tag` in the top-k `k` field so pops are identifiable
+        let now = Instant::now();
+        Ticket {
+            request: ServeRequest::RecallTopK {
+                query: BinaryHV::zeros(64),
+                k: tag,
+            },
+            priority,
+            slot: ResponseSlot::new(),
+            enqueued: now,
+            deadline: now + Duration::from_secs(60),
+        }
+    }
+
+    fn tag_of(t: &Ticket) -> usize {
+        match t.request {
+            ServeRequest::RecallTopK { k, .. } => k,
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn fifo_within_priority_high_first() {
+        let q = AdmissionQueue::new(8);
+        q.push(ticket(0, Priority::Normal)).unwrap();
+        q.push(ticket(1, Priority::High)).unwrap();
+        q.push(ticket(2, Priority::Normal)).unwrap();
+        q.push(ticket(3, Priority::High)).unwrap();
+        let order: Vec<usize> = (0..4)
+            .map(|_| tag_of(&q.pop_blocking().unwrap()))
+            .collect();
+        assert_eq!(order, [1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn rejects_when_full_then_admits_after_drain() {
+        let q = AdmissionQueue::new(2);
+        q.push(ticket(0, Priority::Normal)).unwrap();
+        q.push(ticket(1, Priority::Normal)).unwrap();
+        let (_, why) = q.push(ticket(2, Priority::Normal)).unwrap_err();
+        assert_eq!(why, AdmitError::Full);
+        assert_eq!(q.len(), 2);
+        assert_eq!(tag_of(&q.pop_blocking().unwrap()), 0);
+        q.push(ticket(3, Priority::Normal)).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_none_and_rejects_new() {
+        let q = AdmissionQueue::new(4);
+        q.push(ticket(0, Priority::Normal)).unwrap();
+        q.close();
+        let (_, why) = q.push(ticket(1, Priority::Normal)).unwrap_err();
+        assert_eq!(why, AdmitError::Closed);
+        assert_eq!(tag_of(&q.pop_blocking().unwrap()), 0);
+        assert!(q.pop_blocking().is_none());
+        assert!(q.pop_until(Instant::now() + Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn pop_until_times_out_empty() {
+        let q = AdmissionQueue::new(4);
+        let t0 = Instant::now();
+        assert!(q.pop_until(t0 + Duration::from_millis(10)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn pop_unblocks_on_cross_thread_push() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_blocking().map(|t| tag_of(&t)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(ticket(7, Priority::Normal)).unwrap();
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn slot_fill_once_and_wait() {
+        let slot = ResponseSlot::new();
+        let s2 = slot.clone();
+        let h = std::thread::spawn(move || s2.wait());
+        std::thread::sleep(Duration::from_millis(10));
+        slot.fill(Err(ServeError::DeadlineExceeded));
+        slot.fill(Err(ServeError::Overloaded)); // ignored: first fill wins
+        assert_eq!(h.join().unwrap(), Err(ServeError::DeadlineExceeded));
+    }
+
+    #[test]
+    fn expired_ticket_detection() {
+        let now = Instant::now();
+        let mut t = ticket(0, Priority::Normal);
+        t.deadline = now;
+        assert!(t.expired(now));
+        assert!(t.expired(now + Duration::from_millis(1)));
+        t.deadline = now + Duration::from_secs(1);
+        assert!(!t.expired(now));
+    }
+}

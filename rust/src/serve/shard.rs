@@ -1,0 +1,470 @@
+//! Sharded codebook / cleanup-memory stores.
+//!
+//! A codebook is partitioned into contiguous shards (the same
+//! [`parallel::split_ranges`] rule the scan threads use), each shard
+//! scanned independently — on the caller's thread or fanned out across
+//! scoped worker threads — and the per-shard winners merged under the
+//! global (score desc, index asc) total order. Merging in ascending shard
+//! order with a strict `>` comparison reproduces the unsharded scan's
+//! first-wins tie rule exactly, so sharded results are bit-identical to
+//! [`BinaryCodebook::nearest`] / [`BinaryCodebook::top_k`] (and the real
+//! equivalents) on the whole item set.
+
+use crate::util::parallel;
+use crate::vsa::{BinaryCodebook, BinaryHV, RealCodebook, RealHV};
+use std::time::Instant;
+
+/// Per-shard timing from one scan: (shard index, seconds busy).
+pub type ShardTimings = Vec<(usize, f64)>;
+
+/// Merge per-query candidate lists (already in global-index terms, each
+/// sorted by the shared total order) into the global top-k.
+fn merge_top_k<S: Copy + PartialOrd>(
+    mut candidates: Vec<(usize, S)>,
+    k: usize,
+) -> Vec<(usize, S)> {
+    candidates.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    candidates.truncate(k);
+    candidates
+}
+
+/// A binary codebook split into contiguous shards.
+#[derive(Debug, Clone)]
+pub struct ShardedBinaryCodebook {
+    shards: Vec<BinaryCodebook>,
+    offsets: Vec<usize>,
+    dim: usize,
+    len: usize,
+}
+
+impl ShardedBinaryCodebook {
+    /// Partition `cb` into (at most) `n_shards` contiguous shards.
+    pub fn partition(cb: &BinaryCodebook, n_shards: usize) -> Self {
+        assert!(!cb.is_empty(), "cannot shard an empty codebook");
+        let ranges = parallel::split_ranges(cb.len(), n_shards.max(1));
+        let mut shards = Vec::with_capacity(ranges.len());
+        let mut offsets = Vec::with_capacity(ranges.len());
+        for r in ranges {
+            offsets.push(r.start);
+            shards.push(BinaryCodebook::from_items(
+                cb.dim(),
+                r.map(|i| cb.item(i).clone()).collect(),
+            ));
+        }
+        ShardedBinaryCodebook {
+            shards,
+            offsets,
+            dim: cb.dim(),
+            len: cb.len(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Global index of shard `s`'s first item.
+    pub fn offset(&self, s: usize) -> usize {
+        self.offsets[s]
+    }
+
+    pub fn shard(&self, s: usize) -> &BinaryCodebook {
+        &self.shards[s]
+    }
+
+    /// Batched nearest-item search across all shards, scanning shards on
+    /// up to `threads` scoped workers. Result `q` is bit-identical to
+    /// `full.nearest(&queries[q])` on the unsharded codebook.
+    pub fn nearest_batch_with(
+        &self,
+        queries: &[BinaryHV],
+        threads: usize,
+    ) -> Vec<(usize, i64)> {
+        self.nearest_batch_timed(queries, threads).0
+    }
+
+    /// [`Self::nearest_batch_with`] plus per-shard busy time, for the
+    /// serving engine's per-shard metrics.
+    pub fn nearest_batch_timed(
+        &self,
+        queries: &[BinaryHV],
+        threads: usize,
+    ) -> (Vec<(usize, i64)>, ShardTimings) {
+        if queries.is_empty() {
+            return (Vec::new(), Vec::new());
+        }
+        // Each worker locally merges its shard range; ranges are ascending
+        // and merged in order, so ties resolve to the lowest global index.
+        let parts = parallel::map_ranges(self.n_shards(), threads, |sr| {
+            let mut best: Vec<(usize, i64)> = vec![(0, i64::MIN); queries.len()];
+            let mut timings: ShardTimings = Vec::with_capacity(sr.len());
+            for s in sr {
+                let t0 = Instant::now();
+                let local = self.shards[s].nearest_batch_with(queries, 1);
+                timings.push((s, t0.elapsed().as_secs_f64()));
+                let off = self.offsets[s];
+                for (b, (idx, score)) in best.iter_mut().zip(local) {
+                    if score > b.1 {
+                        *b = (off + idx, score);
+                    }
+                }
+            }
+            (best, timings)
+        });
+        let mut merged: Vec<(usize, i64)> = vec![(0, i64::MIN); queries.len()];
+        let mut all_timings = Vec::new();
+        for (best, timings) in parts {
+            for (m, b) in merged.iter_mut().zip(best) {
+                if b.1 > m.1 {
+                    *m = b;
+                }
+            }
+            all_timings.extend(timings);
+        }
+        (merged, all_timings)
+    }
+
+    /// Batched top-`k` across shards: per-shard top-k lists (already in
+    /// the shared total order) merged into the global top-k. Result `q`
+    /// equals `full.top_k(&queries[q], k)` on the unsharded codebook.
+    pub fn top_k_batch_with(
+        &self,
+        queries: &[BinaryHV],
+        k: usize,
+        threads: usize,
+    ) -> (Vec<Vec<(usize, i64)>>, ShardTimings) {
+        if queries.is_empty() || k == 0 {
+            return (queries.iter().map(|_| Vec::new()).collect(), Vec::new());
+        }
+        let parts = parallel::map_ranges(self.n_shards(), threads, |sr| {
+            let mut cands: Vec<Vec<(usize, i64)>> =
+                queries.iter().map(|_| Vec::with_capacity(k * sr.len())).collect();
+            let mut timings: ShardTimings = Vec::with_capacity(sr.len());
+            for s in sr {
+                let t0 = Instant::now();
+                let off = self.offsets[s];
+                for (q, query) in queries.iter().enumerate() {
+                    cands[q].extend(
+                        self.shards[s]
+                            .top_k(query, k)
+                            .into_iter()
+                            .map(|(i, sc)| (off + i, sc)),
+                    );
+                }
+                timings.push((s, t0.elapsed().as_secs_f64()));
+            }
+            (cands, timings)
+        });
+        let mut per_query: Vec<Vec<(usize, i64)>> = queries.iter().map(|_| Vec::new()).collect();
+        let mut all_timings = Vec::new();
+        for (cands, timings) in parts {
+            for (acc, c) in per_query.iter_mut().zip(cands) {
+                acc.extend(c);
+            }
+            all_timings.extend(timings);
+        }
+        (
+            per_query.into_iter().map(|c| merge_top_k(c, k)).collect(),
+            all_timings,
+        )
+    }
+}
+
+/// A real-valued codebook split into contiguous shards (same merge rule).
+#[derive(Debug, Clone)]
+pub struct ShardedRealCodebook {
+    shards: Vec<RealCodebook>,
+    offsets: Vec<usize>,
+    dim: usize,
+    len: usize,
+}
+
+impl ShardedRealCodebook {
+    pub fn partition(cb: &RealCodebook, n_shards: usize) -> Self {
+        assert!(!cb.is_empty(), "cannot shard an empty codebook");
+        let ranges = parallel::split_ranges(cb.len(), n_shards.max(1));
+        let mut shards = Vec::with_capacity(ranges.len());
+        let mut offsets = Vec::with_capacity(ranges.len());
+        for r in ranges {
+            offsets.push(r.start);
+            shards.push(RealCodebook::from_items(
+                cb.dim(),
+                r.map(|i| cb.item(i).clone()).collect(),
+            ));
+        }
+        ShardedRealCodebook {
+            shards,
+            offsets,
+            dim: cb.dim(),
+            len: cb.len(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Batched nearest across shards; result `q` equals the unsharded
+    /// `nearest(&queries[q])` (first-wins ties).
+    pub fn nearest_batch_with(&self, queries: &[RealHV], threads: usize) -> Vec<(usize, f64)> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let parts = parallel::map_ranges(self.n_shards(), threads, |sr| {
+            let mut best: Vec<(usize, f64)> = vec![(0, f64::NEG_INFINITY); queries.len()];
+            for s in sr {
+                let local = self.shards[s].nearest_batch_with(queries, 1);
+                let off = self.offsets[s];
+                for (b, (idx, score)) in best.iter_mut().zip(local) {
+                    if score > b.1 {
+                        *b = (off + idx, score);
+                    }
+                }
+            }
+            best
+        });
+        let mut merged: Vec<(usize, f64)> = vec![(0, f64::NEG_INFINITY); queries.len()];
+        for best in parts {
+            for (m, b) in merged.iter_mut().zip(best) {
+                if b.1 > m.1 {
+                    *m = b;
+                }
+            }
+        }
+        merged
+    }
+
+    /// Batched top-`k` across shards; result `q` equals the unsharded
+    /// `top_k(&queries[q], k)`.
+    pub fn top_k_batch_with(
+        &self,
+        queries: &[RealHV],
+        k: usize,
+        threads: usize,
+    ) -> Vec<Vec<(usize, f64)>> {
+        if queries.is_empty() || k == 0 {
+            return queries.iter().map(|_| Vec::new()).collect();
+        }
+        let parts = parallel::map_ranges(self.n_shards(), threads, |sr| {
+            let mut cands: Vec<Vec<(usize, f64)>> =
+                queries.iter().map(|_| Vec::with_capacity(k * sr.len())).collect();
+            for s in sr {
+                let off = self.offsets[s];
+                for (q, query) in queries.iter().enumerate() {
+                    cands[q].extend(
+                        self.shards[s]
+                            .top_k(query, k)
+                            .into_iter()
+                            .map(|(i, sc)| (off + i, sc)),
+                    );
+                }
+            }
+            cands
+        });
+        let mut per_query: Vec<Vec<(usize, f64)>> = queries.iter().map(|_| Vec::new()).collect();
+        for cands in parts {
+            for (acc, c) in per_query.iter_mut().zip(cands) {
+                acc.extend(c);
+            }
+        }
+        per_query.into_iter().map(|c| merge_top_k(c, k)).collect()
+    }
+}
+
+/// Sharded cleanup memory: the serving engine's item store. Scores are
+/// normalized to cosine exactly like [`crate::vsa::CleanupMemory`].
+#[derive(Debug, Clone)]
+pub struct ShardedCleanup {
+    store: ShardedBinaryCodebook,
+}
+
+impl ShardedCleanup {
+    pub fn partition(cb: &BinaryCodebook, n_shards: usize) -> Self {
+        ShardedCleanup {
+            store: ShardedBinaryCodebook::partition(cb, n_shards),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.store.n_shards()
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.store.dim()
+    }
+
+    pub fn store(&self) -> &ShardedBinaryCodebook {
+        &self.store
+    }
+
+    /// Batched recall; result `q` is bit-identical to
+    /// `CleanupMemory::recall(&queries[q])` on the unsharded codebook.
+    pub fn recall_batch_timed(
+        &self,
+        queries: &[BinaryHV],
+        threads: usize,
+    ) -> (Vec<(usize, f64)>, ShardTimings) {
+        let d = self.store.dim() as f64;
+        let (best, timings) = self.store.nearest_batch_timed(queries, threads);
+        (
+            best.into_iter()
+                .map(|(idx, score)| (idx, score as f64 / d))
+                .collect(),
+            timings,
+        )
+    }
+
+    /// Batched top-`k` recall; result `q` is bit-identical to
+    /// `CleanupMemory::recall_topk(&queries[q], k)`.
+    pub fn recall_topk_batch_timed(
+        &self,
+        queries: &[BinaryHV],
+        k: usize,
+        threads: usize,
+    ) -> (Vec<Vec<(usize, f64)>>, ShardTimings) {
+        let d = self.store.dim() as f64;
+        let (tops, timings) = self.store.top_k_batch_with(queries, k, threads);
+        (
+            tops.into_iter()
+                .map(|top| {
+                    top.into_iter()
+                        .map(|(idx, score)| (idx, score as f64 / d))
+                        .collect()
+                })
+                .collect(),
+            timings,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::vsa::CleanupMemory;
+
+    #[test]
+    fn binary_shard_merge_matches_unsharded() {
+        let mut rng = Rng::new(1);
+        let cb = BinaryCodebook::random(&mut rng, 53, 1024);
+        let queries: Vec<BinaryHV> =
+            (0..17).map(|_| BinaryHV::random(&mut rng, 1024)).collect();
+        for n_shards in [1usize, 2, 4, 7, 53, 100] {
+            let sharded = ShardedBinaryCodebook::partition(&cb, n_shards);
+            assert_eq!(sharded.len(), 53);
+            for threads in [1usize, 3] {
+                let (nb, timings) = sharded.nearest_batch_timed(&queries, threads);
+                assert_eq!(timings.len(), sharded.n_shards());
+                for (q, query) in queries.iter().enumerate() {
+                    assert_eq!(nb[q], cb.nearest(query), "shards={n_shards} q={q}");
+                }
+                let (tk, _) = sharded.top_k_batch_with(&queries, 5, threads);
+                for (q, query) in queries.iter().enumerate() {
+                    assert_eq!(tk[q], cb.top_k(query, 5), "shards={n_shards} q={q}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binary_shard_merge_preserves_tie_rule() {
+        // duplicate items across shard boundaries force exact ties
+        let mut rng = Rng::new(2);
+        let a = BinaryHV::random(&mut rng, 512);
+        let b = BinaryHV::random(&mut rng, 512);
+        let items = vec![b.clone(), a.clone(), b.clone(), a.clone(), a.clone()];
+        let cb = BinaryCodebook::from_items(512, items);
+        let sharded = ShardedBinaryCodebook::partition(&cb, 3);
+        let (nb, _) = sharded.nearest_batch_timed(std::slice::from_ref(&a), 2);
+        assert_eq!(nb[0], cb.nearest(&a));
+        assert_eq!(nb[0].0, 1, "lowest-index duplicate must win across shards");
+        let (tk, _) = sharded.top_k_batch_with(std::slice::from_ref(&a), 4, 2);
+        assert_eq!(tk[0], cb.top_k(&a, 4));
+        assert_eq!(
+            tk[0].iter().map(|&(i, _)| i).collect::<Vec<_>>()[..3],
+            [1, 3, 4],
+            "ties must rank by ascending global index"
+        );
+    }
+
+    #[test]
+    fn real_shard_merge_matches_unsharded() {
+        let mut rng = Rng::new(3);
+        let cb = RealCodebook::random_bipolar(&mut rng, 29, 512);
+        let queries: Vec<RealHV> =
+            (0..9).map(|_| RealHV::random_bipolar(&mut rng, 512)).collect();
+        for n_shards in [1usize, 3, 5, 29] {
+            let sharded = ShardedRealCodebook::partition(&cb, n_shards);
+            for threads in [1usize, 2] {
+                let nb = sharded.nearest_batch_with(&queries, threads);
+                let tk = sharded.top_k_batch_with(&queries, 4, threads);
+                for (q, query) in queries.iter().enumerate() {
+                    assert_eq!(nb[q], cb.nearest(query), "shards={n_shards} q={q}");
+                    assert_eq!(tk[q], cb.top_k(query, 4), "shards={n_shards} q={q}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_cleanup_matches_cleanup_memory() {
+        let mut rng = Rng::new(4);
+        let cb = BinaryCodebook::random(&mut rng, 40, 2048);
+        let cm = CleanupMemory::new(cb.clone());
+        let sharded = ShardedCleanup::partition(&cb, 4);
+        let queries: Vec<BinaryHV> =
+            (0..11).map(|_| BinaryHV::random(&mut rng, 2048)).collect();
+        let (recalls, _) = sharded.recall_batch_timed(&queries, 2);
+        let (tops, _) = sharded.recall_topk_batch_timed(&queries, 3, 2);
+        for (q, query) in queries.iter().enumerate() {
+            assert_eq!(recalls[q], cm.recall(query), "q={q}");
+            assert_eq!(tops[q], cm.recall_topk(query, 3), "q={q}");
+        }
+    }
+
+    #[test]
+    fn oversharding_clamps_to_item_count() {
+        let mut rng = Rng::new(5);
+        let cb = BinaryCodebook::random(&mut rng, 3, 256);
+        let sharded = ShardedBinaryCodebook::partition(&cb, 16);
+        assert_eq!(sharded.n_shards(), 3);
+        assert_eq!(sharded.offset(2), 2);
+        assert_eq!(sharded.shard(1).len(), 1);
+    }
+}

@@ -1,0 +1,217 @@
+//! Serving metrics: per-class latency, per-shard busy time, batch
+//! occupancy, admission outcomes, and throughput.
+//!
+//! All counters live behind one mutex and are updated once per batch (not
+//! per request), so the metrics path stays off the kernel hot loops.
+
+use super::RequestKind;
+use crate::util::stats::percentile;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Latency distribution summary (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl LatencySummary {
+    /// Summarize a sample of latencies; `None` when empty.
+    pub fn of(xs: &[f64]) -> Option<LatencySummary> {
+        if xs.is_empty() {
+            return None;
+        }
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(LatencySummary {
+            n: s.len(),
+            mean_s: s.iter().sum::<f64>() / s.len() as f64,
+            p50_s: percentile(&s, 0.50),
+            p99_s: percentile(&s, 0.99),
+            max_s: s[s.len() - 1],
+        })
+    }
+}
+
+/// Per-shard accumulated scan work.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShardStat {
+    /// Batched scans this shard participated in.
+    pub scans: u64,
+    /// Total seconds a worker spent scanning this shard.
+    pub busy_s: f64,
+}
+
+#[derive(Debug, Default)]
+struct StatsInner {
+    recall_lat_s: Vec<f64>,
+    topk_lat_s: Vec<f64>,
+    factorize_lat_s: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    rejected: u64,
+    expired: u64,
+    unsupported: u64,
+    shards: Vec<ShardStat>,
+}
+
+/// Shared, thread-safe metrics sink for one engine.
+#[derive(Debug)]
+pub struct ServeStats {
+    inner: Mutex<StatsInner>,
+    started: Instant,
+}
+
+impl ServeStats {
+    pub fn new(n_shards: usize) -> ServeStats {
+        ServeStats {
+            inner: Mutex::new(StatsInner {
+                shards: vec![ShardStat::default(); n_shards],
+                ..StatsInner::default()
+            }),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one executed micro-batch: occupancy, per-request latencies
+    /// (queue wait + execution), and per-shard scan timings.
+    pub fn record_batch(
+        &self,
+        executed: usize,
+        latencies: &[(RequestKind, Duration)],
+        shard_timings: &[(usize, f64)],
+    ) {
+        let mut g = self.inner.lock().expect("stats poisoned");
+        if executed > 0 {
+            g.batch_sizes.push(executed);
+        }
+        for &(kind, lat) in latencies {
+            let secs = lat.as_secs_f64();
+            match kind {
+                RequestKind::Recall => g.recall_lat_s.push(secs),
+                RequestKind::RecallTopK => g.topk_lat_s.push(secs),
+                RequestKind::Factorize => g.factorize_lat_s.push(secs),
+            }
+        }
+        for &(s, busy) in shard_timings {
+            if let Some(st) = g.shards.get_mut(s) {
+                st.scans += 1;
+                st.busy_s += busy;
+            }
+        }
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().expect("stats poisoned").rejected += 1;
+    }
+
+    pub fn record_expired(&self, n: u64) {
+        self.inner.lock().expect("stats poisoned").expired += n;
+    }
+
+    /// Requests refused without execution: unsupported kind or
+    /// dimension mismatch.
+    pub fn record_unsupported(&self, n: u64) {
+        self.inner.lock().expect("stats poisoned").unsupported += n;
+    }
+
+    /// Snapshot every metric (cheap; clones the latency vectors).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let g = self.inner.lock().expect("stats poisoned");
+        let completed =
+            (g.recall_lat_s.len() + g.topk_lat_s.len() + g.factorize_lat_s.len()) as u64;
+        let batches = g.batch_sizes.len() as u64;
+        let occupancy: u64 = g.batch_sizes.iter().map(|&b| b as u64).sum();
+        let elapsed = self.started.elapsed().as_secs_f64();
+        StatsSnapshot {
+            completed,
+            rejected: g.rejected,
+            expired: g.expired,
+            unsupported: g.unsupported,
+            batches,
+            mean_batch: if batches > 0 {
+                occupancy as f64 / batches as f64
+            } else {
+                0.0
+            },
+            max_batch: g.batch_sizes.iter().copied().max().unwrap_or(0),
+            qps: if elapsed > 0.0 {
+                completed as f64 / elapsed
+            } else {
+                0.0
+            },
+            recall: LatencySummary::of(&g.recall_lat_s),
+            topk: LatencySummary::of(&g.topk_lat_s),
+            factorize: LatencySummary::of(&g.factorize_lat_s),
+            shards: g.shards.clone(),
+        }
+    }
+}
+
+/// Point-in-time view of an engine's metrics.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub completed: u64,
+    pub rejected: u64,
+    pub expired: u64,
+    pub unsupported: u64,
+    pub batches: u64,
+    /// Mean requests per executed micro-batch (batch occupancy).
+    pub mean_batch: f64,
+    pub max_batch: usize,
+    /// Completed requests per second since engine start.
+    pub qps: f64,
+    pub recall: Option<LatencySummary>,
+    pub topk: Option<LatencySummary>,
+    pub factorize: Option<LatencySummary>,
+    pub shards: Vec<ShardStat>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = LatencySummary::of(&xs).unwrap();
+        assert_eq!(s.n, 100);
+        assert!((s.p50_s - 50.5).abs() < 1e-9);
+        assert!(s.p99_s > 98.0 && s.p99_s <= 100.0);
+        assert_eq!(s.max_s, 100.0);
+        assert!(LatencySummary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn batch_occupancy_and_shard_accounting() {
+        let st = ServeStats::new(2);
+        st.record_batch(
+            3,
+            &[
+                (RequestKind::Recall, Duration::from_millis(1)),
+                (RequestKind::Recall, Duration::from_millis(3)),
+                (RequestKind::Factorize, Duration::from_millis(9)),
+            ],
+            &[(0, 0.001), (1, 0.002)],
+        );
+        st.record_batch(1, &[(RequestKind::RecallTopK, Duration::from_millis(2))], &[(0, 0.004)]);
+        st.record_rejected();
+        st.record_expired(2);
+        let s = st.snapshot();
+        assert_eq!(s.completed, 4);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 2.0).abs() < 1e-12);
+        assert_eq!(s.max_batch, 3);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.expired, 2);
+        assert_eq!(s.shards[0].scans, 2);
+        assert!((s.shards[0].busy_s - 0.005).abs() < 1e-12);
+        assert_eq!(s.shards[1].scans, 1);
+        assert_eq!(s.recall.unwrap().n, 2);
+        assert_eq!(s.topk.unwrap().n, 1);
+        assert_eq!(s.factorize.unwrap().n, 1);
+    }
+}

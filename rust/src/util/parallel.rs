@@ -16,6 +16,23 @@ pub fn configured_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Split `0..n` into at most `parts` contiguous, non-empty, in-order
+/// ranges that cover every index exactly once. Also the partitioning rule
+/// for [`crate::serve::shard`]'s codebook shards, so shard boundaries and
+/// scan-thread boundaries agree.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    let chunk = (n + parts - 1) / parts;
+    let mut ranges = Vec::with_capacity(parts);
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        ranges.push(start..end);
+        start = end;
+    }
+    ranges
+}
+
 /// Split `0..n` into `threads` contiguous ranges and map `f` over them on
 /// scoped threads, returning per-range outputs in range order. With one
 /// thread (or one range) `f` runs inline on the caller's stack.
@@ -28,14 +45,7 @@ where
     if threads == 1 {
         return vec![f(0..n)];
     }
-    let chunk = (n + threads - 1) / threads;
-    let mut ranges = Vec::with_capacity(threads);
-    let mut start = 0;
-    while start < n {
-        let end = (start + chunk).min(n);
-        ranges.push(start..end);
-        start = end;
-    }
+    let ranges = split_ranges(n, threads);
     let f = &f;
     std::thread::scope(|s| {
         let handles: Vec<_> = ranges
@@ -68,6 +78,16 @@ mod tests {
         assert_eq!(parts.iter().sum::<usize>(), 0);
         let parts = map_ranges(3, 16, |r| r.len());
         assert_eq!(parts.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn split_ranges_covers_in_order() {
+        for (n, parts) in [(0usize, 3usize), (1, 1), (10, 3), (10, 16), (100, 7)] {
+            let ranges = split_ranges(n, parts);
+            assert!(ranges.len() <= parts.max(1), "n={n} parts={parts}");
+            let flat: Vec<usize> = ranges.into_iter().flatten().collect();
+            assert_eq!(flat, (0..n).collect::<Vec<_>>(), "n={n} parts={parts}");
+        }
     }
 
     #[test]

@@ -45,9 +45,27 @@ impl CleanupMemory {
     /// `NSCOG_THREADS`, parallel) codebook scan — the REACT recall loop's
     /// hot path. Result `q` equals `recall(&queries[q])`.
     pub fn recall_batch(&self, queries: &[BinaryHV]) -> Vec<(usize, f64)> {
+        self.recall_batch_with(queries, crate::util::parallel::configured_threads())
+    }
+
+    /// [`Self::recall_batch`] with an explicit worker count (the serving
+    /// engine pins this per worker instead of reading the environment).
+    pub fn recall_batch_with(&self, queries: &[BinaryHV], threads: usize) -> Vec<(usize, f64)> {
         let d = self.codebook.dim() as f64;
         self.codebook
-            .nearest_batch(queries)
+            .nearest_batch_with(queries, threads)
+            .into_iter()
+            .map(|(idx, score)| (idx, score as f64 / d))
+            .collect()
+    }
+
+    /// Top-`k` recall: the `k` nearest stored items with normalized
+    /// scores, ordered by (score desc, index asc) — the sequential oracle
+    /// for the sharded top-k merge in [`crate::serve::shard`].
+    pub fn recall_topk(&self, query: &BinaryHV, k: usize) -> Vec<(usize, f64)> {
+        let d = self.codebook.dim() as f64;
+        self.codebook
+            .top_k(query, k)
             .into_iter()
             .map(|(idx, score)| (idx, score as f64 / d))
             .collect()
@@ -141,6 +159,21 @@ mod tests {
         let batch = cm.recall_batch(&queries);
         for (q, query) in queries.iter().enumerate() {
             assert_eq!(batch[q], cm.recall(query), "query {q}");
+        }
+    }
+
+    #[test]
+    fn topk_recall_heads_with_recall_result() {
+        let mut rng = Rng::new(6);
+        let cm = CleanupMemory::new(BinaryCodebook::random(&mut rng, 30, 2048));
+        for i in 0..5 {
+            let noisy = flip_bits(cm.codebook().item(i), 0.25, &mut rng);
+            let top = cm.recall_topk(&noisy, 4);
+            assert_eq!(top.len(), 4);
+            assert_eq!(top[0], cm.recall(&noisy), "query {i}");
+            for w in top.windows(2) {
+                assert!(w[0].1 >= w[1].1, "top-k not score-sorted");
+            }
         }
     }
 

@@ -38,6 +38,15 @@ impl BinaryCodebook {
         }
     }
 
+    /// Build a codebook from pre-generated items, all of dimension `dim`
+    /// (e.g. a contiguous slice of another codebook when sharding).
+    pub fn from_items(dim: usize, items: Vec<BinaryHV>) -> Self {
+        for it in &items {
+            assert_eq!(it.dim(), dim);
+        }
+        BinaryCodebook { dim, items }
+    }
+
     /// Extract seed folds (fold 0 of each item) for compressed storage.
     pub fn seeds(&self) -> Vec<Vec<u64>> {
         self.items
@@ -81,6 +90,30 @@ impl BinaryCodebook {
             }
         }
         best
+    }
+
+    /// Top-`k` items by score, ordered by (score desc, index asc) — the
+    /// total order every sharded/merged scan in [`crate::serve`] must
+    /// reproduce, so `top_k(k')[..k]` is prefix-stable for any `k' ≥ k`
+    /// and per-shard top-k lists merge into exactly this list.
+    pub fn top_k(&self, query: &BinaryHV, k: usize) -> Vec<(usize, i64)> {
+        assert_eq!(query.dim(), self.dim);
+        let mut top: Vec<(usize, i64)> = Vec::with_capacity(k + 1);
+        if k == 0 {
+            return top;
+        }
+        for (i, it) in self.items.iter().enumerate() {
+            let s = it.dot_bulk(query);
+            // equal scores keep the earlier (smaller) index, matching
+            // `nearest`'s first-wins tie rule
+            if top.len() == k && s <= top[k - 1].1 {
+                continue;
+            }
+            let pos = top.partition_point(|&(_, ts)| ts >= s);
+            top.insert(pos, (i, s));
+            top.truncate(k);
+        }
+        top
     }
 
     /// Batched dot-product scores: `out[q][i]` is query `q` against item
@@ -179,6 +212,14 @@ impl RealCodebook {
         }
     }
 
+    /// Build a codebook from pre-generated items, all of dimension `dim`.
+    pub fn from_items(dim: usize, items: Vec<RealHV>) -> Self {
+        for it in &items {
+            assert_eq!(it.dim(), dim);
+        }
+        RealCodebook { dim, items }
+    }
+
     pub fn len(&self) -> usize {
         self.items.len()
     }
@@ -214,6 +255,27 @@ impl RealCodebook {
             }
         }
         best
+    }
+
+    /// Top-`k` items by score, ordered by (score desc, index asc) — same
+    /// total order as [`BinaryCodebook::top_k`], so sharded scans merge
+    /// identically on both codebook families.
+    pub fn top_k(&self, query: &RealHV, k: usize) -> Vec<(usize, f64)> {
+        assert_eq!(query.dim(), self.dim);
+        let mut top: Vec<(usize, f64)> = Vec::with_capacity(k + 1);
+        if k == 0 {
+            return top;
+        }
+        for (i, it) in self.items.iter().enumerate() {
+            let s = it.dot(query);
+            if top.len() == k && s <= top[k - 1].1 {
+                continue;
+            }
+            let pos = top.partition_point(|&(_, ts)| ts >= s);
+            top.insert(pos, (i, s));
+            top.truncate(k);
+        }
+        top
     }
 
     /// Batched dot-product scores, query-blocked (`NSCOG_THREADS` workers).
@@ -316,23 +378,38 @@ impl RealCodebook {
 
     /// VSA-to-PMF transform: ReLU'd similarity, normalized (NVSA).
     pub fn to_pmf(&self, query: &RealHV) -> Vec<f64> {
-        let mut scores: Vec<f64> = self
-            .scores(query)
-            .into_iter()
-            .map(|s| s.max(0.0))
-            .collect();
-        let total: f64 = scores.iter().sum();
-        if total > 1e-12 {
-            for s in &mut scores {
-                *s /= total;
-            }
-        }
+        let mut scores = self.scores(query);
+        relu_normalize(&mut scores);
         scores
+    }
+
+    /// Batched [`Self::to_pmf`] through the query-blocked scan: result `q`
+    /// equals `to_pmf(&queries[q])`. This is the NVSA decode path's hot
+    /// loop (one scan per attribute instead of one per panel).
+    pub fn to_pmf_batch(&self, queries: &[RealHV]) -> Vec<Vec<f64>> {
+        let mut out = self.scores_batch(queries);
+        for scores in &mut out {
+            relu_normalize(scores);
+        }
+        out
     }
 
     /// f32 storage bytes.
     pub fn storage_bytes(&self) -> usize {
         self.len() * self.dim * 4
+    }
+}
+
+/// Shared VSA-to-PMF normalization: ReLU then divide by the mass (if any).
+fn relu_normalize(scores: &mut [f64]) {
+    for s in scores.iter_mut() {
+        *s = s.max(0.0);
+    }
+    let total: f64 = scores.iter().sum();
+    if total > 1e-12 {
+        for s in scores.iter_mut() {
+            *s /= total;
+        }
     }
 }
 
@@ -464,6 +541,86 @@ mod tests {
         let items: Vec<&RealHV> = cb.items().iter().collect();
         let expect = ops::weighted_sum(&weights, &items).sign();
         assert_eq!(out, expect);
+    }
+
+    /// Oracle: full sort by (score desc, index asc), then truncate.
+    fn top_k_oracle<S: Copy + PartialOrd>(scores: &[S], k: usize) -> Vec<(usize, S)> {
+        let mut all: Vec<(usize, S)> = scores.iter().copied().enumerate().collect();
+        all.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap()
+                .then(a.0.cmp(&b.0))
+        });
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn binary_top_k_matches_sort_oracle() {
+        let mut rng = Rng::new(11);
+        let cb = BinaryCodebook::random(&mut rng, 33, 512);
+        let q = BinaryHV::random(&mut rng, 512);
+        let scores = cb.scores(&q);
+        for k in [0usize, 1, 3, 33, 50] {
+            assert_eq!(cb.top_k(&q, k), top_k_oracle(&scores, k), "k={k}");
+        }
+        // k=1 agrees with nearest (first-wins ties)
+        assert_eq!(cb.top_k(&q, 1)[0], cb.nearest(&q));
+        // member query: exact match leads with the full-dim score
+        assert_eq!(cb.top_k(cb.item(7), 2)[0], (7, 512));
+    }
+
+    #[test]
+    fn binary_top_k_tie_prefers_lower_index() {
+        // duplicate items force exact score ties
+        let mut rng = Rng::new(12);
+        let a = BinaryHV::random(&mut rng, 256);
+        let b = BinaryHV::random(&mut rng, 256);
+        let cb = BinaryCodebook::from_items(256, vec![a.clone(), b.clone(), a.clone()]);
+        let top = cb.top_k(&a, 2);
+        // indices 0 and 2 tie at the full-dim score: lower index ranks first
+        assert_eq!(top[0], (0, 256));
+        assert_eq!(top[1], (2, 256));
+        assert_eq!(cb.nearest(&a), (0, 256));
+        // with room for all three, the weak match comes last
+        assert_eq!(cb.top_k(&a, 3)[2].0, 1);
+    }
+
+    #[test]
+    fn real_top_k_matches_sort_oracle() {
+        let mut rng = Rng::new(13);
+        let cb = RealCodebook::random_bipolar(&mut rng, 21, 256);
+        let q = RealHV::random_bipolar(&mut rng, 256);
+        let scores = cb.scores(&q);
+        for k in [1usize, 4, 21, 30] {
+            assert_eq!(cb.top_k(&q, k), top_k_oracle(&scores, k), "k={k}");
+        }
+        assert_eq!(cb.top_k(&q, 1)[0], cb.nearest(&q));
+    }
+
+    #[test]
+    fn from_items_round_trips() {
+        let mut rng = Rng::new(14);
+        let cb = BinaryCodebook::random(&mut rng, 9, 512);
+        let rebuilt = BinaryCodebook::from_items(512, cb.items().to_vec());
+        for i in 0..9 {
+            assert_eq!(rebuilt.item(i), cb.item(i));
+        }
+        let rcb = RealCodebook::random_bipolar(&mut rng, 5, 128);
+        let rrebuilt = RealCodebook::from_items(128, rcb.items().to_vec());
+        assert_eq!(rrebuilt.item(3), rcb.item(3));
+    }
+
+    #[test]
+    fn to_pmf_batch_matches_per_query() {
+        let mut rng = Rng::new(15);
+        let cb = RealCodebook::random_bipolar(&mut rng, 8, 512);
+        let queries: Vec<RealHV> =
+            (0..5).map(|_| RealHV::random_bipolar(&mut rng, 512)).collect();
+        let batch = cb.to_pmf_batch(&queries);
+        for (q, query) in queries.iter().enumerate() {
+            assert_eq!(batch[q], cb.to_pmf(query), "query {q}");
+        }
     }
 
     #[test]

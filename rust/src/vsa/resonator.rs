@@ -213,6 +213,26 @@ impl Resonator {
         }
     }
 
+    /// Factorize a coalesced batch of scenes over one set of caller-held
+    /// buffers: estimates are re-initialized per scene and `scratch` is
+    /// reused throughout, so the whole batch allocates only the per-result
+    /// index vectors. Result `i` equals `factorize(&scenes[i])` — the
+    /// micro-batcher in [`crate::serve`] relies on this equivalence.
+    pub fn factorize_batch_with(
+        &self,
+        scenes: &[RealHV],
+        estimates: &mut [RealHV],
+        scratch: &mut ResonatorScratch,
+    ) -> Vec<ResonatorResult> {
+        scenes
+            .iter()
+            .map(|scene| {
+                self.init_estimates_into(estimates);
+                self.factorize_with(scene, estimates, scratch)
+            })
+            .collect()
+    }
+
     /// Compose a scene from given item indices (testing / workload gen).
     pub fn compose(&self, indices: &[usize]) -> RealHV {
         assert_eq!(indices.len(), self.n_factors());
@@ -359,6 +379,25 @@ mod tests {
             }
         }
         assert!(correct >= 4, "only {correct}/5 reused factorizations correct");
+    }
+
+    #[test]
+    fn factorize_batch_matches_per_scene_factorize() {
+        let r = make(3, 8, 1024, 16);
+        let mut rng = Rng::new(17);
+        let scenes: Vec<RealHV> = (0..4)
+            .map(|_| {
+                let truth: Vec<usize> = (0..3).map(|_| rng.below(8)).collect();
+                r.compose(&truth)
+            })
+            .collect();
+        let mut scratch = r.make_scratch();
+        let mut estimates = r.init_estimates();
+        let batch = r.factorize_batch_with(&scenes, &mut estimates, &mut scratch);
+        assert_eq!(batch.len(), scenes.len());
+        for (i, scene) in scenes.iter().enumerate() {
+            assert_eq!(batch[i], r.factorize(scene), "scene {i}");
+        }
     }
 
     #[test]

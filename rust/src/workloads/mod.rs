@@ -56,6 +56,29 @@ pub fn all_workloads() -> Vec<Box<dyn Workload>> {
     ]
 }
 
+/// Validate one workload's trace, tagging errors with the workload name.
+pub fn validate_trace(name: &str, trace: &Trace) -> Result<(), String> {
+    if trace.is_empty() {
+        return Err(format!("{name}: trace is empty"));
+    }
+    trace.validate().map_err(|e| format!("{name}: {e}"))
+}
+
+/// Validate every registered workload, collecting failures instead of
+/// aborting on the first one — `figures`/`characterize` report the bad
+/// workloads and keep going with the rest.
+pub fn validate_all() -> Result<(), Vec<String>> {
+    let errors: Vec<String> = all_workloads()
+        .iter()
+        .filter_map(|w| validate_trace(w.name(), &w.trace()).err())
+        .collect();
+    if errors.is_empty() {
+        Ok(())
+    } else {
+        Err(errors)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,11 +93,26 @@ mod tests {
 
     #[test]
     fn all_traces_validate() {
-        for w in all_workloads() {
-            let tr = w.trace();
-            assert!(!tr.is_empty(), "{} trace empty", w.name());
-            tr.validate().unwrap_or_else(|e| panic!("{}: {e}", w.name()));
-        }
+        // validate_all collects every failure (rather than panicking on
+        // the first), so a regression names all broken workloads at once
+        assert_eq!(validate_all(), Ok(()));
+    }
+
+    #[test]
+    fn validate_trace_reports_name_and_reason() {
+        use crate::profiler::taxonomy::{OpCategory, PhaseKind};
+        let empty = Trace::new("X");
+        let err = validate_trace("X", &empty).unwrap_err();
+        assert!(err.contains("X") && err.contains("empty"), "{err}");
+        let mut bad = Trace::new("Y");
+        bad.add("op", OpCategory::Other, PhaseKind::Symbolic, 1, 1, 1, &[]);
+        bad.ops[0].deps.push(5); // forward dependency: invalid
+        let err = validate_trace("Y", &bad).unwrap_err();
+        assert!(err.starts_with("Y:"), "{err}");
+        // a good trace passes
+        let mut ok = Trace::new("Z");
+        ok.add("op", OpCategory::Other, PhaseKind::Symbolic, 1, 1, 1, &[]);
+        assert!(validate_trace("Z", &ok).is_ok());
     }
 
     /// Fig. 2a calibration: symbolic runtime share on the RTX model must

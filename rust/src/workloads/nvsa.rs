@@ -69,13 +69,15 @@ impl NvsaEngine {
         let mut sparsity = Vec::new();
         let attr_names = ["type", "size", "color"];
 
-        // PMF-to-VSA: lift every context panel's attribute PMFs
-        let mut panel_vecs: Vec<Vec<RealHV>> = Vec::with_capacity(pmfs.len());
+        // PMF-to-VSA: lift every context panel's attribute PMFs, grouped
+        // per attribute so the decode below runs as one batched scan per
+        // attribute instead of one per panel
+        let mut attr_vecs: Vec<Vec<RealHV>> =
+            (0..N_ATTRS).map(|_| Vec::with_capacity(pmfs.len())).collect();
         for p in pmfs {
-            let vecs: Vec<RealHV> = (0..N_ATTRS)
-                .map(|a| self.codebooks[a].weighted_bundle(&p[a]))
-                .collect();
-            panel_vecs.push(vecs);
+            for a in 0..N_ATTRS {
+                attr_vecs[a].push(self.codebooks[a].weighted_bundle(&p[a]));
+            }
         }
         // Fig. 5: sparsity of the PMF→VSA input distributions
         for a in 0..N_ATTRS {
@@ -91,10 +93,9 @@ impl NvsaEngine {
         // (VSA-to-PMF) and score rules probabilistically.
         let mut predicted: Vec<Vec<f64>> = Vec::with_capacity(N_ATTRS);
         for a in 0..N_ATTRS {
-            let decoded: Vec<Vec<f64>> = panel_vecs
-                .iter()
-                .map(|pv| self.codebooks[a].to_pmf(&pv[a]))
-                .collect();
+            // VSA-to-PMF through the query-blocked batched scan (result
+            // identical to per-panel `to_pmf`)
+            let decoded: Vec<Vec<f64>> = self.codebooks[a].to_pmf_batch(&attr_vecs[a]);
             let joint: Vec<f64> = decoded.iter().flatten().copied().collect();
             sparsity.push(SparsityPoint {
                 module: "vsa_to_pmf".into(),

@@ -1,0 +1,217 @@
+//! End-to-end tests for the serving engine: batched/sharded responses
+//! must be bit-identical to the sequential oracle, shard merges must
+//! match unsharded scans on both codebook families, and admission control
+//! must reject (not queue) under overload and answer expired deadlines.
+
+use nscog::serve::loadgen::{run_closed_loop, run_open_loop, Fixture, FixtureConfig, LoadMix};
+use nscog::serve::queue::Priority;
+use nscog::serve::{
+    EngineConfig, ServeEngine, ServeError, ServeRequest, ShardedBinaryCodebook,
+    ShardedRealCodebook,
+};
+use nscog::util::Rng;
+use nscog::vsa::{BinaryCodebook, BinaryHV, RealCodebook, RealHV};
+use std::time::Duration;
+
+fn fixture_cfg(requests: usize, seed: u64) -> FixtureConfig {
+    FixtureConfig {
+        items: 48,
+        dim: 1024,
+        noise_frac: 0.2,
+        topk_k: 4,
+        fact_factors: 3,
+        fact_items: 7,
+        fact_dim: 512,
+        fact_iters: 30,
+        requests,
+        mix: LoadMix {
+            recall: 5,
+            topk: 2,
+            factorize: 1,
+        },
+        seed,
+    }
+}
+
+#[test]
+fn concurrent_batched_serving_is_bit_identical_to_oracle() {
+    let fixture = Fixture::build(fixture_cfg(120, 11));
+    let engine = ServeEngine::start(
+        &fixture.codebook,
+        Some(fixture.resonator.clone()),
+        EngineConfig {
+            workers: 3,
+            shards: 5,
+            scan_threads: 2,
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            ..EngineConfig::default()
+        },
+    );
+    let report = run_closed_loop(&engine, &fixture, 8, &fixture.oracle());
+    assert_eq!(report.ok, 120, "rejected={} expired={}", report.rejected, report.expired);
+    assert_eq!(
+        report.mismatches, 0,
+        "batched-sharded responses must be bit-identical to the sequential oracle"
+    );
+    let stats = engine.stats();
+    assert_eq!(stats.completed, 120);
+    assert!(stats.batches > 0);
+    assert!(stats.mean_batch >= 1.0);
+    // every shard participated in the scans
+    assert!(stats.shards.iter().all(|s| s.scans > 0));
+    engine.shutdown();
+}
+
+#[test]
+fn open_loop_serving_matches_oracle_too() {
+    let fixture = Fixture::build(fixture_cfg(60, 12));
+    let engine = ServeEngine::start(
+        &fixture.codebook,
+        Some(fixture.resonator.clone()),
+        EngineConfig {
+            workers: 2,
+            shards: 3,
+            ..EngineConfig::default()
+        },
+    );
+    let report = run_open_loop(&engine, &fixture, 3000.0, 4, &fixture.oracle());
+    assert_eq!(report.ok + report.rejected + report.expired, 60);
+    assert_eq!(report.mismatches, 0);
+    assert_eq!(report.rejected, 0, "default queue must absorb this offered load");
+    engine.shutdown();
+}
+
+#[test]
+fn shard_merge_equals_unsharded_scan_on_both_codebooks() {
+    let mut rng = Rng::new(21);
+    // binary family
+    let bcb = BinaryCodebook::random(&mut rng, 67, 2048);
+    let bqueries: Vec<BinaryHV> = (0..23).map(|_| BinaryHV::random(&mut rng, 2048)).collect();
+    for shards in [2usize, 5, 11] {
+        let sharded = ShardedBinaryCodebook::partition(&bcb, shards);
+        let (nearest, _) = sharded.nearest_batch_timed(&bqueries, 3);
+        let (topk, _) = sharded.top_k_batch_with(&bqueries, 6, 3);
+        for (q, query) in bqueries.iter().enumerate() {
+            assert_eq!(nearest[q], bcb.nearest(query), "binary shards={shards} q={q}");
+            assert_eq!(topk[q], bcb.top_k(query, 6), "binary shards={shards} q={q}");
+        }
+    }
+    // real family
+    let rcb = RealCodebook::random_bipolar(&mut rng, 41, 512);
+    let rqueries: Vec<RealHV> = (0..13).map(|_| RealHV::random_bipolar(&mut rng, 512)).collect();
+    for shards in [2usize, 4, 9] {
+        let sharded = ShardedRealCodebook::partition(&rcb, shards);
+        let nearest = sharded.nearest_batch_with(&rqueries, 3);
+        let topk = sharded.top_k_batch_with(&rqueries, 5, 3);
+        for (q, query) in rqueries.iter().enumerate() {
+            assert_eq!(nearest[q], rcb.nearest(query), "real shards={shards} q={q}");
+            assert_eq!(topk[q], rcb.top_k(query, 5), "real shards={shards} q={q}");
+        }
+    }
+}
+
+#[test]
+fn overload_rejects_instead_of_queueing_unboundedly() {
+    let mut rng = Rng::new(31);
+    let cb = BinaryCodebook::random(&mut rng, 32, 1024);
+    let resonator = nscog::vsa::Resonator::new(
+        (0..3)
+            .map(|_| RealCodebook::random_bipolar(&mut rng, 8, 1024))
+            .collect(),
+        60,
+    );
+    let engine = ServeEngine::start(
+        &cb,
+        Some(resonator.clone()),
+        EngineConfig {
+            workers: 1,
+            shards: 2,
+            max_batch: 1,
+            max_delay: Duration::from_micros(0),
+            queue_capacity: 4,
+            ..EngineConfig::default()
+        },
+    );
+    // occupy the single worker with slow factorizations
+    let scene = resonator.compose(&[1, 2, 3]);
+    let mut primers = Vec::new();
+    for _ in 0..3 {
+        primers.push(
+            engine
+                .submit_async(
+                    ServeRequest::Factorize {
+                        scene: scene.clone(),
+                    },
+                    Priority::Normal,
+                    Duration::from_secs(30),
+                )
+                .expect("primer admitted"),
+        );
+    }
+    std::thread::sleep(Duration::from_millis(50)); // worker now mid-batch
+    // burst far beyond queue capacity: admission control must reject
+    let mut admitted = 0;
+    let mut rejected = 0;
+    let mut pending = Vec::new();
+    for _ in 0..64 {
+        match engine.submit_async(
+            ServeRequest::Recall {
+                query: BinaryHV::random(&mut rng, 1024),
+            },
+            Priority::Normal,
+            Duration::from_secs(30),
+        ) {
+            Ok(p) => {
+                admitted += 1;
+                pending.push(p);
+            }
+            Err(ServeError::Overloaded) => rejected += 1,
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    assert!(
+        rejected > 0,
+        "burst of 64 into a capacity-4 queue must trip backpressure (admitted {admitted})"
+    );
+    assert!(admitted <= 64 - rejected);
+    // everything admitted still completes correctly
+    for p in primers {
+        p.wait().expect("primer completes");
+    }
+    for p in pending {
+        p.wait().expect("admitted request completes");
+    }
+    assert!(engine.stats().rejected >= rejected as u64);
+    engine.shutdown();
+}
+
+#[test]
+fn expired_deadlines_are_answered_without_execution() {
+    let mut rng = Rng::new(41);
+    let cb = BinaryCodebook::random(&mut rng, 32, 1024);
+    let engine = ServeEngine::start(&cb, None, EngineConfig::default());
+    for _ in 0..4 {
+        let got = engine.submit_with(
+            ServeRequest::Recall {
+                query: BinaryHV::random(&mut rng, 1024),
+            },
+            Priority::Normal,
+            Duration::from_secs(0),
+        );
+        assert_eq!(got, Err(ServeError::DeadlineExceeded));
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.expired, 4);
+    assert_eq!(stats.completed, 0);
+    // live deadlines still served
+    let q = BinaryHV::random(&mut rng, 1024);
+    assert!(engine
+        .submit_with(
+            ServeRequest::Recall { query: q },
+            Priority::High,
+            Duration::from_secs(10),
+        )
+        .is_ok());
+    engine.shutdown();
+}

@@ -43,13 +43,87 @@ assert cl['rejected'] == 0 and cl['expired'] == 0, 'smoke run shed load unexpect
 assert cl['qps'] > 0 and base['qps'] > 0, 'degenerate throughput measurement'
 if r.get('open_loop'):
     assert r['open_loop']['pass']['mismatches'] == 0, 'open-loop responses diverged'
+pr = r.get('prune')
+if pr and pr.get('words_total', 0) > 0:
+    assert pr['words_streamed'] < pr['words_total'], \
+        'pruned scans streamed no fewer words than exhaustive on the smoke mix'
+cache = r.get('cache')
+if cache is not None and r['config'].get('repeat_frac', 0) > 0:
+    assert cache['hits'] > 0, 'repeated-query smoke mix produced no cache hits'
+cache_line = (f", cache hit rate {cache['hit_rate']*100:.0f}%" if cache else "")
+prune_line = (f", {pr['words_frac']*100:.0f}% words streamed" if pr else "")
 print(f"serve smoke OK: {cl['qps']:.0f} qps vs baseline {base['qps']:.0f} "
-      f"(x{r['speedup_qps']:.2f}), mean batch {r['batching']['mean_batch']:.2f}")
+      f"(x{r['speedup_qps']:.2f}), mean batch {r['batching']['mean_batch']:.2f}"
+      f"{prune_line}{cache_line}")
 PYEOF
 else
     grep -q '"bench": "serve"' BENCH_serve.json
     grep -q '"mismatches": 0' BENCH_serve.json
     echo "python3 unavailable; structural grep checks passed"
+fi
+
+# Speedup regression gate: measured speedups in the bench JSONs must not
+# drop below the floors recorded in PERF.md's FLOORS table. Skips cleanly
+# when the measured numbers are unpopulated (e.g. authoring containers
+# without a toolchain never reach this point; a malformed JSON does).
+if command -v python3 >/dev/null 2>&1; then
+    echo "== speedup regression gate (PERF.md floors) =="
+    python3 - <<'PYEOF'
+import json, re, sys
+
+src = open('PERF.md').read()
+m = re.search(r'<!-- BEGIN FLOORS -->(.*?)<!-- END FLOORS -->', src, re.S)
+if not m:
+    print('PERF.md has no FLOORS table; skipping gate')
+    sys.exit(0)
+floors = {}
+for line in m.group(1).splitlines():
+    cells = [c.strip() for c in line.strip().strip('|').split('|')]
+    if len(cells) != 2 or cells[0] in ('kernel', '') or set(cells[1]) <= set('-'):
+        continue
+    try:
+        floors[cells[0]] = float(cells[1].rstrip('x'))
+    except ValueError:
+        pass
+try:
+    hp = json.load(open('BENCH_hotpath.json'))
+    speedups = {s['kernel']: s['speedup'] for s in hp.get('speedups', [])}
+except (OSError, json.JSONDecodeError):
+    speedups = {}
+if not speedups:
+    print('BENCH_hotpath.json unpopulated; skipping speedup gate')
+    sys.exit(0)
+failures, checked = [], 0
+for kernel, floor in floors.items():
+    if kernel == 'serve closed-loop qps':
+        continue
+    if kernel not in speedups:
+        # a renamed/dropped bench entry must not silently disable its gate
+        failures.append(f"{kernel}: floor has no matching BENCH_hotpath.json speedup entry")
+        continue
+    checked += 1
+    if speedups[kernel] < floor:
+        failures.append(f"{kernel}: measured {speedups[kernel]:.2f}x < floor {floor:.2f}x")
+try:
+    sv = json.load(open('BENCH_serve.json'))
+except (OSError, json.JSONDecodeError):
+    sv = {}
+floor = floors.get('serve closed-loop qps')
+if floor is not None:
+    if sv.get('speedup_qps') is None:
+        failures.append('serve closed-loop qps: floor has no BENCH_serve.json measurement')
+    else:
+        checked += 1
+        if sv['speedup_qps'] < floor:
+            failures.append(
+                f"serve closed-loop qps: measured {sv['speedup_qps']:.2f}x < floor {floor:.2f}x")
+if failures:
+    print('SPEEDUP REGRESSION below PERF.md floors:')
+    for f in failures:
+        print('  ' + f)
+    sys.exit(1)
+print(f"speedup floors OK ({checked} measurements gated)")
+PYEOF
 fi
 
 echo "== perf trajectory =="

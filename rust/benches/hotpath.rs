@@ -14,6 +14,7 @@ use nscog::util::stats::Summary;
 use nscog::util::Rng;
 use nscog::vsa::hypervector::{majority, majority_ref};
 use nscog::vsa::{ops, BinaryCodebook, BinaryHV, RealCodebook, RealHV, Resonator};
+use nscog::vsa::PruneStats;
 use nscog::workloads::suite::{CompiledSuite, SuiteKind};
 
 /// One recorded measurement for the JSON trajectory file.
@@ -35,7 +36,7 @@ fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
-fn write_json(entries: &[Entry], speedups: &[(String, f64, f64)]) {
+fn write_json(entries: &[Entry], speedups: &[(String, f64, f64)], prune: &[(String, PruneStats)]) {
     let path = std::env::var("NSCOG_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
     let mut out = String::from("{\n  \"bench\": \"hotpath\",\n  \"entries\": [\n");
     for (i, e) in entries.iter().enumerate() {
@@ -60,6 +61,21 @@ fn write_json(entries: &[Entry], speedups: &[(String, f64, f64)]) {
             if i + 1 < speedups.len() { "," } else { "" },
         ));
     }
+    out.push_str("  ],\n  \"prune\": [\n");
+    for (i, (name, st)) in prune.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"items\": {}, \"sketch_rejected\": {}, \"early_terminated\": {}, \"words_streamed\": {}, \"words_total\": {}, \"sketch_reject_rate\": {:.4}, \"words_frac\": {:.4}}}{}\n",
+            json_escape(name),
+            st.items,
+            st.sketch_rejected,
+            st.early_terminated,
+            st.words_streamed,
+            st.words_total,
+            st.sketch_reject_rate(),
+            st.words_frac(),
+            if i + 1 < prune.len() { "," } else { "" },
+        ));
+    }
     out.push_str("  ]\n}\n");
     match std::fs::write(&path, out) {
         Ok(()) => println!("wrote {path}"),
@@ -72,6 +88,7 @@ fn main() {
     let d = 8192;
     let mut entries: Vec<Entry> = Vec::new();
     let mut speedups: Vec<(String, f64, f64)> = Vec::new();
+    let mut prune_stats: Vec<(String, PruneStats)> = Vec::new();
 
     // --- L3 VSA substrate -------------------------------------------------
     let a = BinaryHV::random(&mut rng, d);
@@ -154,6 +171,83 @@ fn main() {
     record(&mut entries, "serve/sharded_topk5 4sh 100q", || {
         black_box(sharded.top_k_batch_with(&queries, 5, shard_threads));
     });
+
+    // --- cascaded sketch-prefilter + bound-pruned scans ------------------
+    // easy distribution: noisy member queries (the serve workload shape);
+    // adversarial: near-duplicate items, where exact pruning is worst-case
+    let noisy = |src: &BinaryHV, frac: f64, rng: &mut Rng| {
+        let mut q = src.clone();
+        let flips = (d as f64 * frac) as usize;
+        for j in rng.sample_indices(d, flips) {
+            q.set(j, !q.get(j));
+        }
+        q
+    };
+    let easy_qs: Vec<BinaryHV> = (0..64)
+        .map(|i| noisy(cb.item((i * 7) % cb.len()), 0.2, &mut rng))
+        .collect();
+    let adv_base = BinaryHV::random(&mut rng, d);
+    let adv_cb = BinaryCodebook::from_items(
+        d,
+        (0..120).map(|_| noisy(&adv_base, 0.03, &mut rng)).collect(),
+    );
+    let adv_qs: Vec<BinaryHV> = (0..64)
+        .map(|i| noisy(adv_cb.item((i * 11) % adv_cb.len()), 0.02, &mut rng))
+        .collect();
+    for (tag, scan_cb, qs) in [("easy", &cb, &easy_qs), ("adversarial", &adv_cb, &adv_qs)] {
+        let s_ref = record(
+            &mut entries,
+            &format!("vsa/nearest_batch 64q {tag} (exhaustive)"),
+            || {
+                black_box(scan_cb.nearest_batch_with(qs, 1));
+            },
+        );
+        let s_opt = record(
+            &mut entries,
+            &format!("vsa/nearest_batch 64q {tag} (pruned)"),
+            || {
+                black_box(scan_cb.nearest_batch_pruned_with(qs, 1));
+            },
+        );
+        println!("    → pruned nearest {tag} speedup {:.2}x", s_ref.p50 / s_opt.p50);
+        speedups.push((
+            format!("pruned nearest {tag} 120x8192b x64q"),
+            s_ref.p50,
+            s_opt.p50,
+        ));
+        let (_, st) = scan_cb.nearest_batch_pruned_with(qs, 1);
+        println!(
+            "    → {tag} nearest: {:.1}% words streamed, sketch reject {:.1}%",
+            st.words_frac() * 100.0,
+            st.sketch_reject_rate() * 100.0
+        );
+        prune_stats.push((format!("pruned nearest {tag} 120x8192b x64q"), st));
+
+        let s_ref = record(
+            &mut entries,
+            &format!("vsa/top_k5 64q {tag} (exhaustive)"),
+            || {
+                for q in qs {
+                    black_box(scan_cb.top_k(q, 5));
+                }
+            },
+        );
+        let s_opt = record(
+            &mut entries,
+            &format!("vsa/top_k5 64q {tag} (pruned)"),
+            || {
+                black_box(scan_cb.top_k_batch_pruned_with(qs, 5, 1));
+            },
+        );
+        println!("    → pruned top-5 {tag} speedup {:.2}x", s_ref.p50 / s_opt.p50);
+        speedups.push((
+            format!("pruned topk5 {tag} 120x8192b x64q"),
+            s_ref.p50,
+            s_opt.p50,
+        ));
+        let (_, st) = scan_cb.top_k_batch_pruned_with(qs, 5, 1);
+        prune_stats.push((format!("pruned topk5 {tag} 120x8192b x64q"), st));
+    }
 
     // HRR binding: direct O(D²) vs FFT O(D log D) at D=1024
     let ra = RealHV::random_bipolar(&mut rng, 1024);
@@ -238,5 +332,5 @@ fn main() {
         println!("runtime/: artifacts not built, skipping PJRT bench");
     }
 
-    write_json(&entries, &speedups);
+    write_json(&entries, &speedups, &prune_stats);
 }

@@ -59,6 +59,11 @@ fn info() {
     println!("                        knobs: --requests N --clients N --workers N --shards N");
     println!("                               --batch N --delay-us N --queue N --rate QPS --json PATH");
     println!("                        scan fan-out per worker: NSCOG_THREADS / --scan-threads N");
+    println!("                        pruned scans: --sketch-bits N (prefilter sidecar width;");
+    println!("                               0 = incremental bounds only; default 512 for dim>=2048)");
+    println!("                        response cache: --cache N (entry budget, 0 disables;");
+    println!("                               default 4096) --cache-shards N (default 8)");
+    println!("                        workload reuse: --repeat F (fraction of repeated queries)");
     println!("  runtime-info          check PJRT artifacts (artifacts/manifest.json)");
 }
 
@@ -262,6 +267,18 @@ fn serve_bench(flags: &[String]) {
             opts.open_loop_qps = Some(rate);
         }
     }
+    if let Some(n) = num("--sketch-bits") {
+        opts.engine.sketch_bits = Some(n);
+    }
+    if let Some(n) = num("--cache") {
+        opts.engine.cache_capacity = n;
+    }
+    if let Some(n) = num("--cache-shards") {
+        opts.engine.cache_shards = n.max(1);
+    }
+    if let Some(frac) = val("--repeat").and_then(|v| v.parse::<f64>().ok()) {
+        opts.fixture.repeat_frac = frac.clamp(0.0, 1.0);
+    }
     if let Some(p) = val("--json") {
         opts.json_path = Some(p.clone());
     }
@@ -281,6 +298,19 @@ fn serve_bench(flags: &[String]) {
         e.scan_threads,
         e.queue_capacity
     );
+    println!(
+        "pruning: sketch {} bits; cache: {} (repeat fraction {:.2})",
+        match e.sketch_bits {
+            Some(b) => b.to_string(),
+            None => "auto".into(),
+        },
+        if e.cache_capacity > 0 {
+            format!("{} entries x {} shards", e.cache_capacity, e.cache_shards)
+        } else {
+            "disabled".into()
+        },
+        f.repeat_frac
+    );
     let report = run_bench(opts);
     report.table().print();
     println!(
@@ -293,6 +323,25 @@ fn serve_bench(flags: &[String]) {
             sh.scans,
             fmt_time(sh.busy_s)
         );
+    }
+    let p = &report.stats.prune;
+    println!(
+        "pruned scans: {:.1}% of item words streamed ({} items; sketch reject {:.1}%, {} early-terminated)",
+        p.words_frac() * 100.0,
+        p.items,
+        p.sketch_reject_rate() * 100.0,
+        p.early_terminated
+    );
+    match &report.stats.cache {
+        Some(c) => println!(
+            "cache: hit rate {:.1}% ({} hits / {} misses), {} entries resident, {} evictions",
+            c.hit_rate() * 100.0,
+            c.hits,
+            c.misses,
+            c.entries,
+            c.evictions
+        ),
+        None => println!("cache: disabled"),
     }
     println!(
         "QPS speedup vs unbatched single-thread baseline: {:.2}x",

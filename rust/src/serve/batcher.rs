@@ -4,17 +4,20 @@
 //! A worker blocks for the first ticket, then holds the batch window open
 //! for up to `max_delay` (or until `max_batch` tickets arrive) before
 //! executing. The batch is split by request class and each class runs as
-//! ONE batched call — `ShardedCleanup::recall_batch_timed`,
-//! `recall_topk_batch_timed`, or `Resonator::factorize_batch_with` over
+//! ONE batched call — `ShardedCleanup::recall_batch_stats`,
+//! `recall_topk_batch_stats`, or `Resonator::factorize_batch_with` over
 //! the worker's reused [`ResonatorScratch`] — so item-memory rows stream
 //! once per batch instead of once per request (the paper's batching
-//! remedy for the memory-bound cleanup scan).
+//! remedy for the memory-bound cleanup scan). A configured
+//! [`ResponseCache`] is consulted first: repeated queries bypass the
+//! kernels entirely (see [`super::cache`]).
 
+use super::cache::ResponseCache;
 use super::queue::{AdmissionQueue, ResponseSlot, Ticket};
 use super::shard::ShardedCleanup;
 use super::stats::ServeStats;
 use super::{RequestKind, ServeError, ServeRequest, ServeResponse};
-use crate::vsa::{RealHV, Resonator, ResonatorScratch};
+use crate::vsa::{PruneStats, RealHV, Resonator, ResonatorScratch};
 use std::time::{Duration, Instant};
 
 /// Batch formation policy.
@@ -89,6 +92,13 @@ impl Default for WorkerScratch {
 /// fill every slot. Consumes the tickets (query payloads are moved into
 /// the batched kernel calls without cloning).
 ///
+/// When a [`ResponseCache`] is configured, cacheable tickets are probed
+/// at batch-formation time: a hit is answered from the cache and never
+/// reaches a kernel call; misses execute batched as before and their
+/// responses are inserted for the next repeat. Cache hits count toward
+/// completion latencies but not batch occupancy (occupancy measures
+/// kernel batching).
+///
 /// Stats are recorded *before* any slot is filled, so a client woken by
 /// its response always observes engine metrics that already include its
 /// own request.
@@ -96,6 +106,7 @@ pub fn execute(
     batch: Vec<Ticket>,
     store: &ShardedCleanup,
     resonator: Option<&Resonator>,
+    cache: Option<&ResponseCache>,
     scratch: &mut WorkerScratch,
     stats: &ServeStats,
     scan_threads: usize,
@@ -109,6 +120,7 @@ pub fn execute(
     let mut fact_slots: Vec<(ResponseSlot, Instant)> = Vec::new();
     let mut expired = 0u64;
     let mut unsupported = 0u64;
+    let mut latencies: Vec<(RequestKind, Duration)> = Vec::with_capacity(batch.len());
     // (slot, outcome) pairs, filled only after all metrics are recorded
     let mut fills: Vec<(ResponseSlot, Result<ServeResponse, ServeError>)> =
         Vec::with_capacity(batch.len());
@@ -124,6 +136,9 @@ pub fn execute(
                 if query.dim() != store.dim() {
                     fills.push((t.slot, Err(ServeError::InvalidDimension)));
                     unsupported += 1;
+                } else if let Some(resp) = cache.and_then(|c| c.get_recall(&query)) {
+                    latencies.push((RequestKind::Recall, t.enqueued.elapsed()));
+                    fills.push((t.slot, Ok(resp)));
                 } else {
                     recall_qs.push(query);
                     recall_slots.push((t.slot, t.enqueued));
@@ -133,6 +148,9 @@ pub fn execute(
                 if query.dim() != store.dim() {
                     fills.push((t.slot, Err(ServeError::InvalidDimension)));
                     unsupported += 1;
+                } else if let Some(resp) = cache.and_then(|c| c.get_topk(&query, k)) {
+                    latencies.push((RequestKind::RecallTopK, t.enqueued.elapsed()));
+                    fills.push((t.slot, Ok(resp)));
                 } else {
                     topk_qs.push(query);
                     topk_slots.push((t.slot, t.enqueued, k));
@@ -156,36 +174,58 @@ pub fn execute(
     }
 
     let executed = recall_qs.len() + topk_qs.len() + fact_scenes.len();
-    let mut latencies: Vec<(RequestKind, Duration)> = Vec::with_capacity(executed);
     let mut shard_timings: Vec<(usize, f64)> = Vec::new();
+    let mut prune = PruneStats::default();
 
     if !recall_qs.is_empty() {
-        let (results, timings) = store.recall_batch_timed(&recall_qs, scan_threads);
+        let (results, timings, scan_prune) = store.recall_batch_stats(&recall_qs, scan_threads);
         shard_timings.extend(timings);
-        for ((slot, enqueued), (index, cosine)) in recall_slots.into_iter().zip(results) {
+        prune.merge(&scan_prune);
+        for (((slot, enqueued), (index, cosine)), query) in
+            recall_slots.into_iter().zip(results).zip(recall_qs)
+        {
+            let resp = ServeResponse::Recall { index, cosine };
+            if let Some(c) = cache {
+                c.insert(ServeRequest::Recall { query }, &resp);
+            }
             latencies.push((RequestKind::Recall, enqueued.elapsed()));
-            fills.push((slot, Ok(ServeResponse::Recall { index, cosine })));
+            fills.push((slot, Ok(resp)));
         }
     }
 
     if !topk_qs.is_empty() {
         // One scan at the batch's largest k; per-ticket answers are
         // prefixes of it (top-k is prefix-stable in k — see
-        // `BinaryCodebook::top_k`).
+        // `BinaryCodebook::top_k`). Cache entries are keyed at each
+        // ticket's own k, so a hit can never leak a different k's answer.
         let k_max = topk_slots.iter().map(|&(_, _, k)| k).max().unwrap_or(0);
-        let (results, timings) = store.recall_topk_batch_timed(&topk_qs, k_max, scan_threads);
+        let (results, timings, scan_prune) =
+            store.recall_topk_batch_stats(&topk_qs, k_max, scan_threads);
         shard_timings.extend(timings);
-        for ((slot, enqueued, k), mut hits) in topk_slots.into_iter().zip(results) {
+        prune.merge(&scan_prune);
+        for (((slot, enqueued, k), mut hits), query) in
+            topk_slots.into_iter().zip(results).zip(topk_qs)
+        {
             hits.truncate(k);
+            let resp = ServeResponse::RecallTopK { hits };
+            if let Some(c) = cache {
+                c.insert(ServeRequest::RecallTopK { query, k }, &resp);
+            }
             latencies.push((RequestKind::RecallTopK, enqueued.elapsed()));
-            fills.push((slot, Ok(ServeResponse::RecallTopK { hits })));
+            fills.push((slot, Ok(resp)));
         }
     }
 
     if !fact_scenes.is_empty() {
         let res = resonator.expect("factorize tickets imply a resonator");
         let (estimates, rscratch) = scratch.bufs(res);
+        let decode_before = *rscratch.prune_stats();
         let results = res.factorize_batch_with(&fact_scenes, estimates, rscratch);
+        // attribute this batch's pruned per-factor index decodes to the
+        // batch telemetry (the scratch accumulates across batches; real
+        // decodes count f32 elements where the binary scans count words,
+        // but streamed and total stay in matching units per scan)
+        prune.merge(&rscratch.prune_stats().delta_since(&decode_before));
         for ((slot, enqueued), r) in fact_slots.into_iter().zip(results) {
             latencies.push((RequestKind::Factorize, enqueued.elapsed()));
             fills.push((
@@ -205,7 +245,7 @@ pub fn execute(
     if unsupported > 0 {
         stats.record_unsupported(unsupported);
     }
-    stats.record_batch(executed, &latencies, &shard_timings);
+    stats.record_batch(executed, &latencies, &shard_timings, &prune);
     for (slot, outcome) in fills {
         slot.fill(outcome);
     }
@@ -298,6 +338,7 @@ mod tests {
             vec![t1, t2, t3],
             &store,
             Some(&res),
+            None,
             &mut scratch,
             &stats,
             1,
@@ -324,6 +365,10 @@ mod tests {
         assert_eq!(snap.batches, 1);
         assert!((snap.mean_batch - 3.0).abs() < 1e-12);
         assert!(snap.shards.iter().any(|s| s.scans > 0));
+        // prune telemetry covers every routed scan in the batch: one
+        // recall (24 items) + one top-k (24) + the factorize decode
+        // (3 factors x 6 items)
+        assert_eq!(snap.prune.items, 24 + 24 + 3 * 6);
     }
 
     #[test]
@@ -349,7 +394,7 @@ mod tests {
             batch.push(t);
             slots.push(s);
         }
-        execute(batch, &store, None, &mut scratch, &stats, 1);
+        execute(batch, &store, None, None, &mut scratch, &stats, 1);
         for ((q, &k), s) in queries.iter().zip(&ks).zip(slots) {
             assert_eq!(
                 s.wait(),
@@ -358,6 +403,61 @@ mod tests {
                 })
             );
         }
+    }
+
+    #[test]
+    fn cache_hits_bypass_kernels_with_identical_responses() {
+        use super::super::cache::{CacheConfig, ResponseCache};
+        let (cb, store) = make_store(9);
+        let cm = CleanupMemory::new(cb);
+        let cache = ResponseCache::new(CacheConfig::default());
+        let stats = ServeStats::new(store.n_shards());
+        let mut scratch = WorkerScratch::new();
+        let mut rng = Rng::new(10);
+        let q = BinaryHV::random(&mut rng, 512);
+        // first pass: misses, computed by the kernels, inserted
+        let (t1, s1) = ticket(ServeRequest::Recall { query: q.clone() }, Duration::from_secs(5));
+        let (t2, s2) = ticket(
+            ServeRequest::RecallTopK { query: q.clone(), k: 4 },
+            Duration::from_secs(5),
+        );
+        execute(vec![t1, t2], &store, None, Some(&cache), &mut scratch, &stats, 1);
+        let first_recall = s1.wait().unwrap();
+        let first_topk = s2.wait().unwrap();
+        let scans_after_first: u64 = stats.snapshot().shards.iter().map(|s| s.scans).sum();
+        // second pass: same query → both served from cache, no new scans
+        let (t3, s3) = ticket(ServeRequest::Recall { query: q.clone() }, Duration::from_secs(5));
+        let (t4, s4) = ticket(
+            ServeRequest::RecallTopK { query: q.clone(), k: 4 },
+            Duration::from_secs(5),
+        );
+        execute(vec![t3, t4], &store, None, Some(&cache), &mut scratch, &stats, 1);
+        assert_eq!(s3.wait().unwrap(), first_recall);
+        assert_eq!(s4.wait().unwrap(), first_topk);
+        let snap = stats.snapshot();
+        let scans_after_second: u64 = snap.shards.iter().map(|s| s.scans).sum();
+        assert_eq!(
+            scans_after_second, scans_after_first,
+            "cache hits must not trigger shard scans"
+        );
+        assert_eq!(snap.completed, 4, "cache hits still count as completed");
+        assert_eq!(snap.batches, 1, "all-hit batches don't count toward occupancy");
+        let c = cache.counters();
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 2);
+        // a different k is a miss, answered by the kernels at its own k
+        let (t5, s5) = ticket(
+            ServeRequest::RecallTopK { query: q.clone(), k: 2 },
+            Duration::from_secs(5),
+        );
+        execute(vec![t5], &store, None, Some(&cache), &mut scratch, &stats, 1);
+        assert_eq!(
+            s5.wait(),
+            Ok(ServeResponse::RecallTopK {
+                hits: cm.recall_topk(&q, 2)
+            })
+        );
+        assert_eq!(cache.counters().hits, 2, "k=2 probe must not hit the k=4 entry");
     }
 
     #[test]
@@ -377,7 +477,7 @@ mod tests {
             },
             Duration::from_secs(5),
         );
-        execute(vec![t_bad, t_ok], &store, None, &mut scratch, &stats, 1);
+        execute(vec![t_bad, t_ok], &store, None, None, &mut scratch, &stats, 1);
         assert_eq!(s_bad.wait(), Err(ServeError::InvalidDimension));
         assert!(s_ok.wait().is_ok(), "good request in same batch still served");
         assert_eq!(stats.snapshot().unsupported, 1);
@@ -400,7 +500,7 @@ mod tests {
             },
             Duration::from_secs(5),
         );
-        execute(vec![t_expired, t_fact], &store, None, &mut scratch, &stats, 1);
+        execute(vec![t_expired, t_fact], &store, None, None, &mut scratch, &stats, 1);
         assert_eq!(s_expired.wait(), Err(ServeError::DeadlineExceeded));
         assert_eq!(s_fact.wait(), Err(ServeError::Unsupported));
         let snap = stats.snapshot();

@@ -1,0 +1,421 @@
+//! Bounded, sharded response cache for the serving engine.
+//!
+//! Production recall traffic repeats: the same noisy percept or symbol is
+//! looked up again and again (the reuse the paper's Sec. VI co-design
+//! exploits). The cache sits at batch-formation time in
+//! [`super::batcher::execute`]: a hit fills the ticket's response slot
+//! immediately and the request never reaches a kernel, so repeated
+//! queries cost a hash fold instead of an item-memory scan.
+//!
+//! Keys are **exact**: shard selection and hash-bucket placement use a
+//! 64-bit fold of the query words mixed with the request class and `k`,
+//! but every probe verifies full word-for-word query equality (plus class
+//! and `k`) before serving — a fold collision degrades to a miss-like
+//! walk of a (nearly always single-entry) bucket, never to a wrong
+//! response. Responses are therefore bit-identical to what the kernels
+//! would have produced, and entries can never be served across differing
+//! `k` or request class; `serve-bench`'s oracle verification covers the
+//! whole path. Factorize requests are not cached (real-valued scenes have
+//! no exact equality story under f32 noise).
+//!
+//! Eviction is per-shard FIFO: each shard holds at most
+//! `capacity / shards` entries and evicts its oldest insertion when full
+//! — bounded memory, no per-hit bookkeeping on the hot path.
+
+use super::{ServeRequest, ServeResponse};
+use crate::vsa::BinaryHV;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Cache sizing knobs (`--cache`, `--cache-shards`).
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    /// Total entry budget across shards; 0 disables the cache.
+    pub capacity: usize,
+    /// Lock shards (concurrent workers probe disjoint shards).
+    pub shards: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            capacity: 4096,
+            shards: 8,
+        }
+    }
+}
+
+/// Monotonic counters, snapshotted into
+/// [`super::stats::StatsSnapshot::cache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: u64,
+}
+
+impl CacheCounters {
+    /// Hit fraction over all cacheable probes.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total > 0 {
+            self.hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Request-class tag folded into the key so recall and top-k entries can
+/// never alias.
+const CLASS_RECALL: u8 = 1;
+const CLASS_TOPK: u8 = 2;
+
+/// 64-bit fold of the query words, seeded by class and `k` (splitmix-style
+/// multiply-xor mixing; deterministic across runs and platforms).
+fn fold_query(words: &[u64], class: u8, k: usize) -> u64 {
+    let mut h = 0x9e37_79b9_7f4a_7c15u64
+        ^ (class as u64).wrapping_mul(0xff51_afd7_ed55_8ccd)
+        ^ (k as u64).wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    for &w in words {
+        h ^= w;
+        h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+        h ^= h >> 33;
+    }
+    h
+}
+
+/// One resident entry: the full key material for exact verification plus
+/// the response to replay.
+#[derive(Debug)]
+struct Entry {
+    class: u8,
+    k: usize,
+    query: BinaryHV,
+    response: ServeResponse,
+}
+
+impl Entry {
+    fn matches(&self, class: u8, k: usize, query: &BinaryHV) -> bool {
+        self.class == class && self.k == k && &self.query == query
+    }
+}
+
+#[derive(Debug, Default)]
+struct ShardState {
+    /// fold → entries with that fold (collisions walk the bucket).
+    map: HashMap<u64, Vec<Entry>>,
+    /// Insertion order of folds, for FIFO eviction.
+    fifo: VecDeque<u64>,
+    len: usize,
+}
+
+/// The cache proper. Shared by reference across workers; each operation
+/// locks exactly one shard.
+#[derive(Debug)]
+pub struct ResponseCache {
+    shards: Vec<Mutex<ShardState>>,
+    per_shard_capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Class/k/words view of a cacheable request; `None` for factorize.
+fn key_parts(request: &ServeRequest) -> Option<(u8, usize, &BinaryHV)> {
+    match request {
+        ServeRequest::Recall { query } => Some((CLASS_RECALL, 0, query)),
+        ServeRequest::RecallTopK { query, k } => Some((CLASS_TOPK, *k, query)),
+        ServeRequest::Factorize { .. } => None,
+    }
+}
+
+impl ResponseCache {
+    pub fn new(cfg: CacheConfig) -> ResponseCache {
+        let shards = cfg.shards.max(1);
+        // round the budget DOWN per shard (min 1) so total residency
+        // never exceeds the configured capacity (unless capacity < shards)
+        let per_shard_capacity = (cfg.capacity / shards).max(1);
+        ResponseCache {
+            shards: (0..shards).map(|_| Mutex::new(ShardState::default())).collect(),
+            per_shard_capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Effective total entry budget (the configured capacity rounded
+    /// down to a multiple of the shard count, min one per shard).
+    pub fn capacity(&self) -> usize {
+        self.per_shard_capacity * self.shards.len()
+    }
+
+    fn shard_of(&self, fold: u64) -> &Mutex<ShardState> {
+        &self.shards[(fold % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up a response for `request`. Counts a hit or miss for
+    /// cacheable classes; factorize requests return `None` uncounted.
+    pub fn get(&self, request: &ServeRequest) -> Option<ServeResponse> {
+        let (class, k, query) = key_parts(request)?;
+        self.lookup(class, k, query)
+    }
+
+    /// Probe for a cached recall response (the batcher's hot-path entry;
+    /// avoids materializing a `ServeRequest`).
+    pub fn get_recall(&self, query: &BinaryHV) -> Option<ServeResponse> {
+        self.lookup(CLASS_RECALL, 0, query)
+    }
+
+    /// Probe for a cached top-`k` response at exactly this `k`.
+    pub fn get_topk(&self, query: &BinaryHV, k: usize) -> Option<ServeResponse> {
+        self.lookup(CLASS_TOPK, k, query)
+    }
+
+    fn lookup(&self, class: u8, k: usize, query: &BinaryHV) -> Option<ServeResponse> {
+        let fold = fold_query(query.words(), class, k);
+        let g = self.shard_of(fold).lock().expect("cache shard poisoned");
+        let found = g
+            .map
+            .get(&fold)
+            .and_then(|bucket| bucket.iter().find(|e| e.matches(class, k, query)))
+            .map(|e| e.response.clone());
+        drop(g);
+        match found {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(r)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a computed response (no-op for factorize or when the exact
+    /// key is already resident). Evicts the shard's oldest insertion when
+    /// the shard is at capacity.
+    pub fn put(&self, request: &ServeRequest, response: &ServeResponse) {
+        let Some((class, k, query)) = key_parts(request) else {
+            return;
+        };
+        self.insert_parts(class, k, query.clone(), response);
+    }
+
+    /// [`Self::put`] taking ownership of the request, so hot-path callers
+    /// that already own the query pay no extra clone.
+    pub fn insert(&self, request: ServeRequest, response: &ServeResponse) {
+        match request {
+            ServeRequest::Recall { query } => {
+                self.insert_parts(CLASS_RECALL, 0, query, response)
+            }
+            ServeRequest::RecallTopK { query, k } => {
+                self.insert_parts(CLASS_TOPK, k, query, response)
+            }
+            ServeRequest::Factorize { .. } => {}
+        }
+    }
+
+    fn insert_parts(&self, class: u8, k: usize, query: BinaryHV, response: &ServeResponse) {
+        let fold = fold_query(query.words(), class, k);
+        let mut g = self.shard_of(fold).lock().expect("cache shard poisoned");
+        let st = &mut *g;
+        if let Some(bucket) = st.map.get(&fold) {
+            if bucket.iter().any(|e| e.matches(class, k, &query)) {
+                return;
+            }
+        }
+        if st.len >= self.per_shard_capacity {
+            if let Some(old_fold) = st.fifo.pop_front() {
+                if let Some(bucket) = st.map.get_mut(&old_fold) {
+                    if !bucket.is_empty() {
+                        bucket.remove(0);
+                        st.len -= 1;
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if bucket.is_empty() {
+                        st.map.remove(&old_fold);
+                    }
+                }
+            }
+        }
+        st.map.entry(fold).or_default().push(Entry {
+            class,
+            k,
+            query,
+            response: response.clone(),
+        });
+        st.fifo.push_back(fold);
+        st.len += 1;
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Entries currently resident across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("cache shard poisoned").len)
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot the counters.
+    pub fn counters(&self) -> CacheCounters {
+        CacheCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn recall_req(q: &BinaryHV) -> ServeRequest {
+        ServeRequest::Recall { query: q.clone() }
+    }
+
+    fn topk_req(q: &BinaryHV, k: usize) -> ServeRequest {
+        ServeRequest::RecallTopK {
+            query: q.clone(),
+            k,
+        }
+    }
+
+    #[test]
+    fn hit_replays_exact_response_and_respects_class_and_k() {
+        let cache = ResponseCache::new(CacheConfig::default());
+        let mut rng = Rng::new(1);
+        let q = BinaryHV::random(&mut rng, 512);
+        let recall_resp = ServeResponse::Recall {
+            index: 3,
+            cosine: 0.75,
+        };
+        let topk2 = ServeResponse::RecallTopK {
+            hits: vec![(3, 0.75), (1, 0.5)],
+        };
+        assert_eq!(cache.get(&recall_req(&q)), None);
+        cache.put(&recall_req(&q), &recall_resp);
+        assert_eq!(cache.get(&recall_req(&q)), Some(recall_resp.clone()));
+        // same query, different class or k: never cross-served
+        assert_eq!(cache.get(&topk_req(&q, 2)), None);
+        cache.put(&topk_req(&q, 2), &topk2);
+        assert_eq!(cache.get(&topk_req(&q, 2)), Some(topk2));
+        assert_eq!(cache.get(&topk_req(&q, 3)), None);
+        // different query, same class: miss
+        let q2 = BinaryHV::random(&mut rng, 512);
+        assert_eq!(cache.get(&recall_req(&q2)), None);
+        let c = cache.counters();
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 4);
+        assert_eq!(c.inserts, 2);
+        assert_eq!(c.entries, 2);
+        assert!((c.hit_rate() - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_puts_are_idempotent() {
+        let cache = ResponseCache::new(CacheConfig {
+            capacity: 8,
+            shards: 2,
+        });
+        let mut rng = Rng::new(2);
+        let q = BinaryHV::random(&mut rng, 256);
+        let resp = ServeResponse::Recall {
+            index: 1,
+            cosine: 0.5,
+        };
+        cache.put(&recall_req(&q), &resp);
+        cache.put(&recall_req(&q), &resp);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.counters().inserts, 1);
+    }
+
+    #[test]
+    fn factorize_is_never_cached() {
+        let cache = ResponseCache::new(CacheConfig::default());
+        let req = ServeRequest::Factorize {
+            scene: crate::vsa::RealHV::zeros(64),
+        };
+        assert_eq!(cache.get(&req), None);
+        cache.put(
+            &req,
+            &ServeResponse::Factorize {
+                indices: vec![0],
+                iterations: 1,
+                converged: true,
+            },
+        );
+        assert!(cache.is_empty());
+        let c = cache.counters();
+        assert_eq!(c.hits + c.misses + c.inserts, 0);
+    }
+
+    #[test]
+    fn bounded_fifo_eviction() {
+        let cache = ResponseCache::new(CacheConfig {
+            capacity: 4,
+            shards: 1,
+        });
+        let mut rng = Rng::new(3);
+        let qs: Vec<BinaryHV> = (0..6).map(|_| BinaryHV::random(&mut rng, 256)).collect();
+        for (i, q) in qs.iter().enumerate() {
+            cache.put(
+                &recall_req(q),
+                &ServeResponse::Recall {
+                    index: i,
+                    cosine: 1.0,
+                },
+            );
+        }
+        let c = cache.counters();
+        assert_eq!(c.inserts, 6);
+        assert_eq!(c.evictions, 2);
+        assert_eq!(c.entries, 4);
+        // oldest two evicted, newest four resident
+        assert_eq!(cache.get(&recall_req(&qs[0])), None);
+        assert_eq!(cache.get(&recall_req(&qs[1])), None);
+        for (i, q) in qs.iter().enumerate().skip(2) {
+            assert_eq!(
+                cache.get(&recall_req(q)),
+                Some(ServeResponse::Recall {
+                    index: i,
+                    cosine: 1.0
+                }),
+                "entry {i} should be resident"
+            );
+        }
+    }
+
+    #[test]
+    fn fold_separates_classes_and_k() {
+        let words = [0x1234u64, 0xdeadbeefu64];
+        let a = fold_query(&words, CLASS_RECALL, 0);
+        let b = fold_query(&words, CLASS_TOPK, 0);
+        let c = fold_query(&words, CLASS_TOPK, 1);
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        // deterministic
+        assert_eq!(a, fold_query(&words, CLASS_RECALL, 0));
+    }
+}

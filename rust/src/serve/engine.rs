@@ -9,6 +9,7 @@
 //! called.
 
 use super::batcher::{self, BatchPolicy, WorkerScratch};
+use super::cache::{CacheConfig, ResponseCache};
 use super::queue::{AdmissionQueue, Priority, ResponseSlot, Ticket};
 use super::shard::ShardedCleanup;
 use super::stats::{ServeStats, StatsSnapshot};
@@ -37,10 +38,19 @@ pub struct EngineConfig {
     pub queue_capacity: usize,
     /// Deadline applied by [`ServeEngine::submit`].
     pub default_deadline: Duration,
+    /// Explicit sketch width (bits) for the shards' prefilter sidecars;
+    /// `None` keeps the per-dimension default, `Some(0)` disables the
+    /// sidecars (incremental bounds still prune). `--sketch-bits`.
+    pub sketch_bits: Option<usize>,
+    /// Response-cache entry budget; 0 disables the cache. `--cache`.
+    pub cache_capacity: usize,
+    /// Response-cache lock shards. `--cache-shards`.
+    pub cache_shards: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
+        let cache = CacheConfig::default();
         EngineConfig {
             workers: 2,
             shards: 4,
@@ -49,6 +59,9 @@ impl Default for EngineConfig {
             max_delay: Duration::from_micros(200),
             queue_capacity: 1024,
             default_deadline: Duration::from_secs(5),
+            sketch_bits: None,
+            cache_capacity: cache.capacity,
+            cache_shards: cache.shards,
         }
     }
 }
@@ -57,6 +70,7 @@ struct Shared {
     queue: AdmissionQueue,
     store: ShardedCleanup,
     resonator: Option<Resonator>,
+    cache: Option<ResponseCache>,
     stats: ServeStats,
     policy: BatchPolicy,
     scan_threads: usize,
@@ -100,12 +114,19 @@ impl ServeEngine {
         cfg: EngineConfig,
     ) -> ServeEngine {
         assert!(cfg.workers >= 1, "engine needs at least one worker");
-        let store = ShardedCleanup::partition(codebook, cfg.shards.max(1));
+        let store = ShardedCleanup::partition_sketched(codebook, cfg.shards.max(1), cfg.sketch_bits);
         let stats = ServeStats::new(store.n_shards());
+        let cache = (cfg.cache_capacity > 0).then(|| {
+            ResponseCache::new(CacheConfig {
+                capacity: cfg.cache_capacity,
+                shards: cfg.cache_shards.max(1),
+            })
+        });
         let shared = Arc::new(Shared {
             queue: AdmissionQueue::new(cfg.queue_capacity),
             store,
             resonator,
+            cache,
             stats,
             policy: BatchPolicy {
                 max_batch: cfg.max_batch.max(1),
@@ -183,9 +204,12 @@ impl ServeEngine {
         }
     }
 
-    /// Metrics snapshot.
+    /// Metrics snapshot, including response-cache counters when a cache
+    /// is configured.
     pub fn stats(&self) -> StatsSnapshot {
-        self.shared.stats.snapshot()
+        let mut snap = self.shared.stats.snapshot();
+        snap.cache = self.shared.cache.as_ref().map(|c| c.counters());
+        snap
     }
 
     /// Stop admissions, drain already-admitted tickets, join workers.
@@ -214,6 +238,7 @@ fn worker_loop(sh: &Shared) {
             batch,
             &sh.store,
             sh.resonator.as_ref(),
+            sh.cache.as_ref(),
             &mut scratch,
             &sh.stats,
             sh.scan_threads,
@@ -247,6 +272,46 @@ mod tests {
         let snap = eng.stats();
         assert_eq!(snap.completed, 8);
         assert_eq!(snap.rejected, 0);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn repeated_submits_hit_the_cache_with_identical_responses() {
+        let (eng, cm) = engine(EngineConfig::default(), 9);
+        let mut rng = Rng::new(10);
+        let q = BinaryHV::random(&mut rng, 1024);
+        let first = eng
+            .submit(ServeRequest::Recall { query: q.clone() })
+            .unwrap();
+        let second = eng
+            .submit(ServeRequest::Recall { query: q.clone() })
+            .unwrap();
+        assert_eq!(first, second);
+        let (index, cosine) = cm.recall(&q);
+        assert_eq!(first, ServeResponse::Recall { index, cosine });
+        let snap = eng.stats();
+        let cache = snap.cache.expect("default engine config enables the cache");
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+        assert_eq!(snap.completed, 2);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn cache_can_be_disabled() {
+        let (eng, _) = engine(
+            EngineConfig {
+                cache_capacity: 0,
+                ..EngineConfig::default()
+            },
+            11,
+        );
+        let mut rng = Rng::new(12);
+        let q = BinaryHV::random(&mut rng, 1024);
+        for _ in 0..2 {
+            eng.submit(ServeRequest::Recall { query: q.clone() }).unwrap();
+        }
+        assert!(eng.stats().cache.is_none());
         eng.shutdown();
     }
 

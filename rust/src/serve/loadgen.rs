@@ -57,6 +57,10 @@ pub struct FixtureConfig {
     /// Total requests and their class mix.
     pub requests: usize,
     pub mix: LoadMix,
+    /// Fraction of requests that repeat an earlier cacheable request
+    /// verbatim (production recall traffic repeats; this is what the
+    /// response cache monetizes). 0 disables repeats.
+    pub repeat_frac: f64,
     pub seed: u64,
 }
 
@@ -82,10 +86,24 @@ impl Fixture {
             cfg.fact_iters,
         );
         let flips = (cfg.dim as f64 * cfg.noise_frac) as usize;
-        let mut requests = Vec::with_capacity(cfg.requests);
+        let repeat_threshold = (cfg.repeat_frac.clamp(0.0, 1.0) * 1e6) as usize;
+        let mut requests: Vec<ServeRequest> = Vec::with_capacity(cfg.requests);
+        // indices of earlier cacheable (recall / top-k) requests
+        let mut repeatable: Vec<usize> = Vec::new();
         for _ in 0..cfg.requests {
+            if repeat_threshold > 0
+                && !repeatable.is_empty()
+                && rng.below(1_000_000) < repeat_threshold
+            {
+                let src = repeatable[rng.below(repeatable.len())];
+                let repeat = requests[src].clone();
+                repeatable.push(requests.len());
+                requests.push(repeat);
+                continue;
+            }
             let roll = rng.below(cfg.mix.total() as usize) as u32;
             if roll < cfg.mix.recall + cfg.mix.topk {
+                repeatable.push(requests.len());
                 let mut query = codebook.item(rng.below(cfg.items)).clone();
                 for i in rng.sample_indices(cfg.dim, flips) {
                     query.set(i, !query.get(i));
@@ -372,6 +390,7 @@ impl BenchOpts {
                     topk: 1,
                     factorize: 1,
                 },
+                repeat_frac: 0.25,
                 seed: 2024,
             },
             engine: EngineConfig {
@@ -382,6 +401,7 @@ impl BenchOpts {
                 max_delay: Duration::from_micros(300),
                 queue_capacity: 512,
                 default_deadline: Duration::from_secs(30),
+                ..EngineConfig::default()
             },
             clients: 8,
             open_loop_qps: None,
@@ -408,6 +428,7 @@ impl BenchOpts {
                     topk: 1,
                     factorize: 1,
                 },
+                repeat_frac: 0.25,
                 seed: 2024,
             },
             engine: EngineConfig::default(),
@@ -525,7 +546,7 @@ impl BenchReport {
         let e = &self.opts.engine;
         let mut out = String::from("{\n  \"bench\": \"serve\",\n");
         out.push_str(&format!(
-            "  \"config\": {{\"requests\": {}, \"clients\": {}, \"workers\": {}, \"shards\": {}, \"scan_threads\": {}, \"max_batch\": {}, \"max_delay_us\": {}, \"queue_capacity\": {}, \"items\": {}, \"dim\": {}, \"mix\": \"{}:{}:{}\", \"seed\": {}}},\n",
+            "  \"config\": {{\"requests\": {}, \"clients\": {}, \"workers\": {}, \"shards\": {}, \"scan_threads\": {}, \"max_batch\": {}, \"max_delay_us\": {}, \"queue_capacity\": {}, \"items\": {}, \"dim\": {}, \"mix\": \"{}:{}:{}\", \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"cache_capacity\": {}, \"cache_shards\": {}, \"seed\": {}}},\n",
             f.requests,
             self.opts.clients,
             e.workers,
@@ -539,6 +560,13 @@ impl BenchReport {
             f.mix.recall,
             f.mix.topk,
             f.mix.factorize,
+            f.repeat_frac,
+            match e.sketch_bits {
+                Some(b) => b.to_string(),
+                None => "null".into(),
+            },
+            e.cache_capacity,
+            e.cache_shards,
             f.seed
         ));
         out.push_str(&format!(
@@ -570,7 +598,31 @@ impl BenchReport {
                 sh.scans, sh.busy_s
             ));
         }
-        out.push_str("]\n}\n");
+        out.push_str("],\n");
+        let p = &self.stats.prune;
+        out.push_str(&format!(
+            "  \"prune\": {{\"items\": {}, \"sketch_rejected\": {}, \"early_terminated\": {}, \"words_streamed\": {}, \"words_total\": {}, \"sketch_reject_rate\": {:.4}, \"words_frac\": {:.4}}},\n",
+            p.items,
+            p.sketch_rejected,
+            p.early_terminated,
+            p.words_streamed,
+            p.words_total,
+            p.sketch_reject_rate(),
+            p.words_frac()
+        ));
+        match &self.stats.cache {
+            Some(c) => out.push_str(&format!(
+                "  \"cache\": {{\"hits\": {}, \"misses\": {}, \"inserts\": {}, \"evictions\": {}, \"entries\": {}, \"hit_rate\": {:.4}}}\n",
+                c.hits,
+                c.misses,
+                c.inserts,
+                c.evictions,
+                c.entries,
+                c.hit_rate()
+            )),
+            None => out.push_str("  \"cache\": null\n"),
+        }
+        out.push_str("}\n");
         out
     }
 
@@ -641,6 +693,7 @@ mod tests {
                 topk: 1,
                 factorize: 1,
             },
+            repeat_frac: 0.0,
             seed: 7,
         }
     }
@@ -714,7 +767,52 @@ mod tests {
         );
         assert!(parsed.get("closed_loop").is_some());
         assert!(parsed.get("speedup_qps").is_some());
+        assert!(parsed.get("prune").is_some());
+        assert!(parsed.get("cache").is_some());
         // table renders without panicking
         let _ = report.table().to_string();
+    }
+
+    #[test]
+    fn repeated_mix_is_deterministic_and_cache_serves_it_exactly() {
+        // dim 2048: rows are several bound chunks long, so the serve
+        // scans actually prune (512-bit rows are a single chunk)
+        let cfg = FixtureConfig {
+            repeat_frac: 0.5,
+            requests: 80,
+            dim: 2048,
+            ..tiny_fixture()
+        };
+        let a = Fixture::build(cfg.clone());
+        let b = Fixture::build(cfg);
+        assert_eq!(a.requests, b.requests, "repeats must stay deterministic");
+        // repeats exist: at least one exact duplicate request
+        let dup = a
+            .requests
+            .iter()
+            .enumerate()
+            .any(|(i, r)| a.requests[..i].contains(r));
+        assert!(dup, "repeat_frac=0.5 over 80 requests must produce repeats");
+        let engine = ServeEngine::start(
+            &a.codebook,
+            Some(a.resonator.clone()),
+            EngineConfig {
+                workers: 2,
+                shards: 3,
+                ..EngineConfig::default()
+            },
+        );
+        let report = run_closed_loop(&engine, &a, 6, &a.oracle());
+        assert_eq!(report.ok, 80);
+        assert_eq!(report.mismatches, 0, "cached responses diverged from oracle");
+        let snap = engine.stats();
+        let cache = snap.cache.expect("default engine cache enabled");
+        assert!(cache.hits > 0, "repeated mix must produce cache hits");
+        assert!(
+            snap.prune.words_streamed < snap.prune.words_total,
+            "noisy-member serve scans must prune: {:?}",
+            snap.prune
+        );
+        engine.shutdown();
     }
 }

@@ -21,20 +21,30 @@
 //!   [`engine::ServeEngine::submit`] client API.
 //! - [`stats`]: per-shard, per-batch, and per-class latency / throughput /
 //!   batch-occupancy metrics.
+//! - [`cache`]: a bounded, sharded response cache probed at
+//!   batch-formation time — repeated queries bypass the kernels entirely,
+//!   with exact (full-equality-verified) keys over query × class × k.
 //! - [`loadgen`]: open- and closed-loop synthetic load generators and the
 //!   `nscog serve-bench` report (`BENCH_serve.json`).
 //!
-//! Correctness contract: every batched/sharded response is bit-identical
-//! to the sequential oracle (`CleanupMemory::recall`/`recall_topk`,
-//! `Resonator::factorize`) — enforced by `rust/tests/serve_e2e.rs`.
+//! The per-shard scans themselves run through the bound-pruned kernel
+//! paths (see [`crate::vsa::sketch`]), whose [`crate::vsa::PruneStats`]
+//! surface in [`StatsSnapshot`] and `BENCH_serve.json`.
+//!
+//! Correctness contract: every batched/sharded/cached response is
+//! bit-identical to the sequential oracle
+//! (`CleanupMemory::recall`/`recall_topk`, `Resonator::factorize`) —
+//! enforced by `rust/tests/serve_e2e.rs`.
 
 pub mod batcher;
+pub mod cache;
 pub mod engine;
 pub mod loadgen;
 pub mod queue;
 pub mod shard;
 pub mod stats;
 
+pub use cache::{CacheConfig, CacheCounters, ResponseCache};
 pub use engine::{EngineConfig, PendingResponse, ServeEngine};
 pub use queue::Priority;
 pub use shard::{ShardedBinaryCodebook, ShardedCleanup, ShardedRealCodebook};

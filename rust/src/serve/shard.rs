@@ -9,9 +9,16 @@
 //! first-wins tie rule exactly, so sharded results are bit-identical to
 //! [`BinaryCodebook::nearest`] / [`BinaryCodebook::top_k`] (and the real
 //! equivalents) on the whole item set.
+//!
+//! Per-shard scans run through the bound-pruned kernels
+//! ([`BinaryCodebook::nearest_batch_pruned_with`] and friends — see
+//! [`crate::vsa::sketch`]), themselves bit-identical to the exhaustive
+//! references, and the `_stats` variants surface the merged
+//! [`PruneStats`] so the serving engine can report how much of the item
+//! memory each batch actually streamed.
 
 use crate::util::parallel;
-use crate::vsa::{BinaryCodebook, BinaryHV, RealCodebook, RealHV};
+use crate::vsa::{BinaryCodebook, BinaryHV, PruneStats, RealCodebook, RealHV};
 use std::time::Instant;
 
 /// Per-shard timing from one scan: (shard index, seconds busy).
@@ -44,15 +51,26 @@ pub struct ShardedBinaryCodebook {
 impl ShardedBinaryCodebook {
     /// Partition `cb` into (at most) `n_shards` contiguous shards.
     pub fn partition(cb: &BinaryCodebook, n_shards: usize) -> Self {
+        Self::partition_sketched(cb, n_shards, None)
+    }
+
+    /// [`Self::partition`] with an explicit per-shard sketch width
+    /// (`None` = default), so each shard's sidecar is built exactly once.
+    pub fn partition_sketched(
+        cb: &BinaryCodebook,
+        n_shards: usize,
+        sketch_bits: Option<usize>,
+    ) -> Self {
         assert!(!cb.is_empty(), "cannot shard an empty codebook");
         let ranges = parallel::split_ranges(cb.len(), n_shards.max(1));
         let mut shards = Vec::with_capacity(ranges.len());
         let mut offsets = Vec::with_capacity(ranges.len());
         for r in ranges {
             offsets.push(r.start);
-            shards.push(BinaryCodebook::from_items(
+            shards.push(BinaryCodebook::from_items_sketched(
                 cb.dim(),
                 r.map(|i| cb.item(i).clone()).collect(),
+                sketch_bits,
             ));
         }
         ShardedBinaryCodebook {
@@ -88,6 +106,14 @@ impl ShardedBinaryCodebook {
         &self.shards[s]
     }
 
+    /// Rebuild every shard's sketch sidecar at an explicit width (the
+    /// serving engine's `--sketch-bits` knob); 0 disables the sidecars.
+    pub fn set_sketch_bits(&mut self, sketch_bits: usize) {
+        for shard in &mut self.shards {
+            shard.rebuild_sketch(sketch_bits);
+        }
+    }
+
     /// Batched nearest-item search across all shards, scanning shards on
     /// up to `threads` scoped workers. Result `q` is bit-identical to
     /// `full.nearest(&queries[q])` on the unsharded codebook.
@@ -106,18 +132,31 @@ impl ShardedBinaryCodebook {
         queries: &[BinaryHV],
         threads: usize,
     ) -> (Vec<(usize, i64)>, ShardTimings) {
+        let (best, timings, _) = self.nearest_batch_stats(queries, threads);
+        (best, timings)
+    }
+
+    /// [`Self::nearest_batch_timed`] plus merged [`PruneStats`] from the
+    /// per-shard bound-pruned scans.
+    pub fn nearest_batch_stats(
+        &self,
+        queries: &[BinaryHV],
+        threads: usize,
+    ) -> (Vec<(usize, i64)>, ShardTimings, PruneStats) {
         if queries.is_empty() {
-            return (Vec::new(), Vec::new());
+            return (Vec::new(), Vec::new(), PruneStats::default());
         }
         // Each worker locally merges its shard range; ranges are ascending
         // and merged in order, so ties resolve to the lowest global index.
         let parts = parallel::map_ranges(self.n_shards(), threads, |sr| {
             let mut best: Vec<(usize, i64)> = vec![(0, i64::MIN); queries.len()];
             let mut timings: ShardTimings = Vec::with_capacity(sr.len());
+            let mut prune = PruneStats::default();
             for s in sr {
                 let t0 = Instant::now();
-                let local = self.shards[s].nearest_batch_with(queries, 1);
+                let (local, st) = self.shards[s].nearest_batch_pruned_with(queries, 1);
                 timings.push((s, t0.elapsed().as_secs_f64()));
+                prune.merge(&st);
                 let off = self.offsets[s];
                 for (b, (idx, score)) in best.iter_mut().zip(local) {
                     if score > b.1 {
@@ -125,19 +164,21 @@ impl ShardedBinaryCodebook {
                     }
                 }
             }
-            (best, timings)
+            (best, timings, prune)
         });
         let mut merged: Vec<(usize, i64)> = vec![(0, i64::MIN); queries.len()];
         let mut all_timings = Vec::new();
-        for (best, timings) in parts {
+        let mut prune = PruneStats::default();
+        for (best, timings, st) in parts {
             for (m, b) in merged.iter_mut().zip(best) {
                 if b.1 > m.1 {
                     *m = b;
                 }
             }
             all_timings.extend(timings);
+            prune.merge(&st);
         }
-        (merged, all_timings)
+        (merged, all_timings, prune)
     }
 
     /// Batched top-`k` across shards: per-shard top-k lists (already in
@@ -149,39 +190,59 @@ impl ShardedBinaryCodebook {
         k: usize,
         threads: usize,
     ) -> (Vec<Vec<(usize, i64)>>, ShardTimings) {
+        let (tops, timings, _) = self.top_k_batch_stats(queries, k, threads);
+        (tops, timings)
+    }
+
+    /// [`Self::top_k_batch_with`] plus merged [`PruneStats`].
+    pub fn top_k_batch_stats(
+        &self,
+        queries: &[BinaryHV],
+        k: usize,
+        threads: usize,
+    ) -> (Vec<Vec<(usize, i64)>>, ShardTimings, PruneStats) {
         if queries.is_empty() || k == 0 {
-            return (queries.iter().map(|_| Vec::new()).collect(), Vec::new());
+            return (
+                queries.iter().map(|_| Vec::new()).collect(),
+                Vec::new(),
+                PruneStats::default(),
+            );
         }
         let parts = parallel::map_ranges(self.n_shards(), threads, |sr| {
             let mut cands: Vec<Vec<(usize, i64)>> =
                 queries.iter().map(|_| Vec::with_capacity(k * sr.len())).collect();
             let mut timings: ShardTimings = Vec::with_capacity(sr.len());
+            let mut prune = PruneStats::default();
+            let mut order = Vec::new();
             for s in sr {
                 let t0 = Instant::now();
                 let off = self.offsets[s];
                 for (q, query) in queries.iter().enumerate() {
                     cands[q].extend(
                         self.shards[s]
-                            .top_k(query, k)
+                            .top_k_pruned_with_buf(query, k, &mut prune, &mut order)
                             .into_iter()
                             .map(|(i, sc)| (off + i, sc)),
                     );
                 }
                 timings.push((s, t0.elapsed().as_secs_f64()));
             }
-            (cands, timings)
+            (cands, timings, prune)
         });
         let mut per_query: Vec<Vec<(usize, i64)>> = queries.iter().map(|_| Vec::new()).collect();
         let mut all_timings = Vec::new();
-        for (cands, timings) in parts {
+        let mut prune = PruneStats::default();
+        for (cands, timings, st) in parts {
             for (acc, c) in per_query.iter_mut().zip(cands) {
                 acc.extend(c);
             }
             all_timings.extend(timings);
+            prune.merge(&st);
         }
         (
             per_query.into_iter().map(|c| merge_top_k(c, k)).collect(),
             all_timings,
+            prune,
         )
     }
 }
@@ -241,7 +302,7 @@ impl ShardedRealCodebook {
         let parts = parallel::map_ranges(self.n_shards(), threads, |sr| {
             let mut best: Vec<(usize, f64)> = vec![(0, f64::NEG_INFINITY); queries.len()];
             for s in sr {
-                let local = self.shards[s].nearest_batch_with(queries, 1);
+                let (local, _) = self.shards[s].nearest_batch_pruned_with(queries, 1);
                 let off = self.offsets[s];
                 for (b, (idx, score)) in best.iter_mut().zip(local) {
                     if score > b.1 {
@@ -276,12 +337,14 @@ impl ShardedRealCodebook {
         let parts = parallel::map_ranges(self.n_shards(), threads, |sr| {
             let mut cands: Vec<Vec<(usize, f64)>> =
                 queries.iter().map(|_| Vec::with_capacity(k * sr.len())).collect();
+            let mut prune = PruneStats::default();
+            let (mut qnorms, mut order) = (Vec::new(), Vec::new());
             for s in sr {
                 let off = self.offsets[s];
                 for (q, query) in queries.iter().enumerate() {
                     cands[q].extend(
                         self.shards[s]
-                            .top_k(query, k)
+                            .top_k_pruned_with_bufs(query, k, &mut prune, &mut qnorms, &mut order)
                             .into_iter()
                             .map(|(i, sc)| (off + i, sc)),
                     );
@@ -313,6 +376,18 @@ impl ShardedCleanup {
         }
     }
 
+    /// [`Self::partition`] with an explicit sketch width for every shard
+    /// (`None` = default) — the serving engine's `--sketch-bits` path.
+    pub fn partition_sketched(
+        cb: &BinaryCodebook,
+        n_shards: usize,
+        sketch_bits: Option<usize>,
+    ) -> Self {
+        ShardedCleanup {
+            store: ShardedBinaryCodebook::partition_sketched(cb, n_shards, sketch_bits),
+        }
+    }
+
     pub fn n_shards(&self) -> usize {
         self.store.n_shards()
     }
@@ -333,6 +408,11 @@ impl ShardedCleanup {
         &self.store
     }
 
+    /// Rebuild every shard's sketch at an explicit width (0 disables).
+    pub fn set_sketch_bits(&mut self, sketch_bits: usize) {
+        self.store.set_sketch_bits(sketch_bits);
+    }
+
     /// Batched recall; result `q` is bit-identical to
     /// `CleanupMemory::recall(&queries[q])` on the unsharded codebook.
     pub fn recall_batch_timed(
@@ -340,13 +420,25 @@ impl ShardedCleanup {
         queries: &[BinaryHV],
         threads: usize,
     ) -> (Vec<(usize, f64)>, ShardTimings) {
+        let (best, timings, _) = self.recall_batch_stats(queries, threads);
+        (best, timings)
+    }
+
+    /// [`Self::recall_batch_timed`] plus merged [`PruneStats`] — what the
+    /// serving engine records per batch.
+    pub fn recall_batch_stats(
+        &self,
+        queries: &[BinaryHV],
+        threads: usize,
+    ) -> (Vec<(usize, f64)>, ShardTimings, PruneStats) {
         let d = self.store.dim() as f64;
-        let (best, timings) = self.store.nearest_batch_timed(queries, threads);
+        let (best, timings, prune) = self.store.nearest_batch_stats(queries, threads);
         (
             best.into_iter()
                 .map(|(idx, score)| (idx, score as f64 / d))
                 .collect(),
             timings,
+            prune,
         )
     }
 
@@ -358,8 +450,19 @@ impl ShardedCleanup {
         k: usize,
         threads: usize,
     ) -> (Vec<Vec<(usize, f64)>>, ShardTimings) {
+        let (tops, timings, _) = self.recall_topk_batch_stats(queries, k, threads);
+        (tops, timings)
+    }
+
+    /// [`Self::recall_topk_batch_timed`] plus merged [`PruneStats`].
+    pub fn recall_topk_batch_stats(
+        &self,
+        queries: &[BinaryHV],
+        k: usize,
+        threads: usize,
+    ) -> (Vec<Vec<(usize, f64)>>, ShardTimings, PruneStats) {
         let d = self.store.dim() as f64;
-        let (tops, timings) = self.store.top_k_batch_with(queries, k, threads);
+        let (tops, timings, prune) = self.store.top_k_batch_stats(queries, k, threads);
         (
             tops.into_iter()
                 .map(|top| {
@@ -369,6 +472,7 @@ impl ShardedCleanup {
                 })
                 .collect(),
             timings,
+            prune,
         )
     }
 }
@@ -455,6 +559,42 @@ mod tests {
         for (q, query) in queries.iter().enumerate() {
             assert_eq!(recalls[q], cm.recall(query), "q={q}");
             assert_eq!(tops[q], cm.recall_topk(query, 3), "q={q}");
+        }
+    }
+
+    #[test]
+    fn sharded_stats_variants_match_and_report_pruning() {
+        let mut rng = Rng::new(6);
+        let cb = BinaryCodebook::random(&mut rng, 48, 2048);
+        let cm = CleanupMemory::new(cb.clone());
+        let mut sharded = ShardedCleanup::partition(&cb, 4);
+        // noisy member queries: the distribution pruning pays off on
+        let queries: Vec<BinaryHV> = (0..10)
+            .map(|i| {
+                let mut q = cb.item(i * 4).clone();
+                for j in rng.sample_indices(2048, 409) {
+                    q.set(j, !q.get(j));
+                }
+                q
+            })
+            .collect();
+        let (recalls, timings, prune) = sharded.recall_batch_stats(&queries, 2);
+        assert_eq!(timings.len(), 4);
+        assert_eq!(prune.items, 10 * 48);
+        assert!(prune.words_streamed < prune.words_total, "{prune:?}");
+        let (tops, _, tprune) = sharded.recall_topk_batch_stats(&queries, 3, 2);
+        assert_eq!(tprune.items, 10 * 48);
+        for (q, query) in queries.iter().enumerate() {
+            assert_eq!(recalls[q], cm.recall(query), "q={q}");
+            assert_eq!(tops[q], cm.recall_topk(query, 3), "q={q}");
+        }
+        // explicit sketch width (and disabling) stays bit-identical
+        for bits in [1024usize, 0] {
+            sharded.set_sketch_bits(bits);
+            let (recalls, _, _) = sharded.recall_batch_stats(&queries, 2);
+            for (q, query) in queries.iter().enumerate() {
+                assert_eq!(recalls[q], cm.recall(query), "bits={bits} q={q}");
+            }
         }
     }
 

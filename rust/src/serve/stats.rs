@@ -4,8 +4,10 @@
 //! All counters live behind one mutex and are updated once per batch (not
 //! per request), so the metrics path stays off the kernel hot loops.
 
+use super::cache::CacheCounters;
 use super::RequestKind;
 use crate::util::stats::percentile;
+use crate::vsa::PruneStats;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -56,6 +58,7 @@ struct StatsInner {
     expired: u64,
     unsupported: u64,
     shards: Vec<ShardStat>,
+    prune: PruneStats,
 }
 
 /// Shared, thread-safe metrics sink for one engine.
@@ -77,17 +80,20 @@ impl ServeStats {
     }
 
     /// Record one executed micro-batch: occupancy, per-request latencies
-    /// (queue wait + execution), and per-shard scan timings.
+    /// (queue wait + execution — cache hits included), per-shard scan
+    /// timings, and the batch's merged scan [`PruneStats`].
     pub fn record_batch(
         &self,
         executed: usize,
         latencies: &[(RequestKind, Duration)],
         shard_timings: &[(usize, f64)],
+        prune: &PruneStats,
     ) {
         let mut g = self.inner.lock().expect("stats poisoned");
         if executed > 0 {
             g.batch_sizes.push(executed);
         }
+        g.prune.merge(prune);
         for &(kind, lat) in latencies {
             let secs = lat.as_secs_f64();
             match kind {
@@ -147,6 +153,8 @@ impl ServeStats {
             topk: LatencySummary::of(&g.topk_lat_s),
             factorize: LatencySummary::of(&g.factorize_lat_s),
             shards: g.shards.clone(),
+            prune: g.prune,
+            cache: None,
         }
     }
 }
@@ -168,6 +176,12 @@ pub struct StatsSnapshot {
     pub topk: Option<LatencySummary>,
     pub factorize: Option<LatencySummary>,
     pub shards: Vec<ShardStat>,
+    /// Merged bound-pruned scan telemetry across every executed batch.
+    pub prune: PruneStats,
+    /// Response-cache counters; `None` when the engine runs uncached
+    /// (filled by [`super::engine::ServeEngine::stats`], not by
+    /// [`ServeStats::snapshot`]).
+    pub cache: Option<CacheCounters>,
 }
 
 #[cfg(test)]
@@ -188,6 +202,13 @@ mod tests {
     #[test]
     fn batch_occupancy_and_shard_accounting() {
         let st = ServeStats::new(2);
+        let prune = PruneStats {
+            items: 6,
+            sketch_rejected: 1,
+            early_terminated: 2,
+            words_streamed: 40,
+            words_total: 96,
+        };
         st.record_batch(
             3,
             &[
@@ -196,11 +217,20 @@ mod tests {
                 (RequestKind::Factorize, Duration::from_millis(9)),
             ],
             &[(0, 0.001), (1, 0.002)],
+            &prune,
         );
-        st.record_batch(1, &[(RequestKind::RecallTopK, Duration::from_millis(2))], &[(0, 0.004)]);
+        st.record_batch(
+            1,
+            &[(RequestKind::RecallTopK, Duration::from_millis(2))],
+            &[(0, 0.004)],
+            &prune,
+        );
         st.record_rejected();
         st.record_expired(2);
         let s = st.snapshot();
+        assert_eq!(s.prune.items, 12);
+        assert_eq!(s.prune.words_streamed, 80);
+        assert!(s.cache.is_none());
         assert_eq!(s.completed, 4);
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch - 2.0).abs() < 1e-12);

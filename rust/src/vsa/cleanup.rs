@@ -4,6 +4,7 @@
 
 use super::codebook::{BinaryCodebook, RealCodebook};
 use super::hypervector::{BinaryHV, RealHV};
+use super::sketch::PruneStats;
 
 /// Cleanup memory over binary item vectors.
 #[derive(Debug, Clone)]
@@ -41,9 +42,11 @@ impl CleanupMemory {
         (cos >= min_cosine).then_some((idx, cos))
     }
 
-    /// Batched recall through the query-blocked (and, under
-    /// `NSCOG_THREADS`, parallel) codebook scan — the REACT recall loop's
-    /// hot path. Result `q` equals `recall(&queries[q])`.
+    /// Batched recall through the bound-pruned codebook scan (and, under
+    /// `NSCOG_THREADS`, parallel workers) — the REACT recall loop's hot
+    /// path. Result `q` equals `recall(&queries[q])` bit-for-bit; most
+    /// item rows are only partially streamed (see
+    /// [`crate::vsa::sketch`]).
     pub fn recall_batch(&self, queries: &[BinaryHV]) -> Vec<(usize, f64)> {
         self.recall_batch_with(queries, crate::util::parallel::configured_threads())
     }
@@ -51,21 +54,35 @@ impl CleanupMemory {
     /// [`Self::recall_batch`] with an explicit worker count (the serving
     /// engine pins this per worker instead of reading the environment).
     pub fn recall_batch_with(&self, queries: &[BinaryHV], threads: usize) -> Vec<(usize, f64)> {
+        self.recall_batch_stats(queries, threads).0
+    }
+
+    /// [`Self::recall_batch_with`] plus the scan's [`PruneStats`].
+    pub fn recall_batch_stats(
+        &self,
+        queries: &[BinaryHV],
+        threads: usize,
+    ) -> (Vec<(usize, f64)>, PruneStats) {
         let d = self.codebook.dim() as f64;
-        self.codebook
-            .nearest_batch_with(queries, threads)
-            .into_iter()
-            .map(|(idx, score)| (idx, score as f64 / d))
-            .collect()
+        let (best, stats) = self.codebook.nearest_batch_pruned_with(queries, threads);
+        (
+            best.into_iter()
+                .map(|(idx, score)| (idx, score as f64 / d))
+                .collect(),
+            stats,
+        )
     }
 
     /// Top-`k` recall: the `k` nearest stored items with normalized
     /// scores, ordered by (score desc, index asc) — the sequential oracle
-    /// for the sharded top-k merge in [`crate::serve::shard`].
+    /// for the sharded top-k merge in [`crate::serve::shard`]. Routed
+    /// through the bound-pruned scan, which is property-tested
+    /// bit-identical to [`BinaryCodebook::top_k`].
     pub fn recall_topk(&self, query: &BinaryHV, k: usize) -> Vec<(usize, f64)> {
         let d = self.codebook.dim() as f64;
+        let mut stats = PruneStats::default();
         self.codebook
-            .top_k(query, k)
+            .top_k_pruned(query, k, &mut stats)
             .into_iter()
             .map(|(idx, score)| (idx, score as f64 / d))
             .collect()
@@ -175,6 +192,24 @@ mod tests {
                 assert!(w[0].1 >= w[1].1, "top-k not score-sorted");
             }
         }
+    }
+
+    #[test]
+    fn recall_batch_stats_reports_pruning_on_noisy_members() {
+        let mut rng = Rng::new(7);
+        let cm = CleanupMemory::new(BinaryCodebook::random(&mut rng, 48, 4096));
+        let queries: Vec<BinaryHV> = (0..12)
+            .map(|i| flip_bits(cm.codebook().item(i % 48), 0.2, &mut rng))
+            .collect();
+        let (batch, stats) = cm.recall_batch_stats(&queries, 1);
+        for (q, query) in queries.iter().enumerate() {
+            assert_eq!(batch[q], cm.recall(query), "query {q}");
+        }
+        assert_eq!(stats.items, 12 * 48);
+        assert!(
+            stats.words_streamed < stats.words_total,
+            "noisy-member recalls must prune: {stats:?}"
+        );
     }
 
     #[test]

@@ -2,7 +2,11 @@
 //! encoding, with optional CA-90 compressed storage.
 
 use super::ca90;
-use super::hypervector::{BinaryHV, RealHV, FOLD_BITS, FOLD_WORDS};
+use super::hypervector::{dot_acc, xor_hamming, BinaryHV, RealHV, FOLD_BITS, FOLD_WORDS};
+use super::sketch::{
+    default_sketch_bits, query_suffix_norms, real_upper_bound, BinarySketch, PruneStats,
+    RealSketch, PRUNE_CHUNK_WORDS, REAL_PRUNE_CHUNK,
+};
 use crate::util::{parallel, Rng};
 
 /// Queries per block in the batched scans: each item row is streamed from
@@ -10,41 +14,88 @@ use crate::util::{parallel, Rng};
 /// so item-memory traffic drops by ~QUERY_BLOCK× versus per-query scans.
 const QUERY_BLOCK: usize = 8;
 
-/// A codebook of binary item vectors.
+/// Insert `(i, s)` into a list kept sorted under the global
+/// (score desc, index asc) total order, truncated to `k`. Equivalent to
+/// the exhaustive scans' in-index-order insertion for any visit order,
+/// which is what lets the pruned scans visit items most-promising-first.
+fn insert_ranked<S: PartialOrd + Copy>(top: &mut Vec<(usize, S)>, i: usize, s: S, k: usize) {
+    let pos = top.partition_point(|&(tj, ts)| ts > s || (ts == s && tj < i));
+    top.insert(pos, (i, s));
+    top.truncate(k);
+}
+
+/// A codebook of binary item vectors, carrying an optional
+/// [`BinarySketch`] prefilter sidecar for the bound-pruned scans.
 #[derive(Debug, Clone)]
 pub struct BinaryCodebook {
     dim: usize,
     items: Vec<BinaryHV>,
+    sketch: Option<BinarySketch>,
 }
 
 impl BinaryCodebook {
+    /// Assemble a codebook and its default-width sketch sidecar (item
+    /// sets are immutable after construction, so the sidecar never goes
+    /// stale).
+    fn assemble(dim: usize, items: Vec<BinaryHV>) -> Self {
+        let sketch = BinarySketch::build(&items, default_sketch_bits(dim));
+        BinaryCodebook { dim, items, sketch }
+    }
+
     /// Generate `n` random item vectors of dimension `dim`.
     pub fn random(rng: &mut Rng, n: usize, dim: usize) -> Self {
-        BinaryCodebook {
-            dim,
-            items: (0..n).map(|_| BinaryHV::random(rng, dim)).collect(),
-        }
+        Self::assemble(dim, (0..n).map(|_| BinaryHV::random(rng, dim)).collect())
     }
 
     /// Reconstruct a full codebook from per-item 512-bit seed folds via
     /// CA-90 expansion (the accelerator's compressed storage scheme).
     pub fn from_seeds(seeds: &[Vec<u64>], dim: usize) -> Self {
-        BinaryCodebook {
+        Self::assemble(
             dim,
-            items: seeds
+            seeds
                 .iter()
                 .map(|s| ca90::expand_vector(s, FOLD_BITS, dim))
                 .collect(),
-        }
+        )
     }
 
     /// Build a codebook from pre-generated items, all of dimension `dim`
     /// (e.g. a contiguous slice of another codebook when sharding).
     pub fn from_items(dim: usize, items: Vec<BinaryHV>) -> Self {
+        Self::from_items_sketched(dim, items, None)
+    }
+
+    /// [`Self::from_items`] with an explicit sketch width (`None` = the
+    /// per-dimension default), so callers that already know their width
+    /// — e.g. sharding under `--sketch-bits` — build the sidecar once
+    /// instead of building the default and rebuilding.
+    pub fn from_items_sketched(
+        dim: usize,
+        items: Vec<BinaryHV>,
+        sketch_bits: Option<usize>,
+    ) -> Self {
         for it in &items {
             assert_eq!(it.dim(), dim);
         }
-        BinaryCodebook { dim, items }
+        match sketch_bits {
+            None => Self::assemble(dim, items),
+            Some(bits) => {
+                let sketch = BinarySketch::build(&items, bits);
+                BinaryCodebook { dim, items, sketch }
+            }
+        }
+    }
+
+    /// Rebuild the sketch sidecar at an explicit width (`--sketch-bits`
+    /// serving knob); 0 or a width ≥ the row drops the sidecar, leaving
+    /// the pruned scans on incremental bounds alone.
+    pub fn rebuild_sketch(&mut self, sketch_bits: usize) {
+        self.sketch = BinarySketch::build(&self.items, sketch_bits);
+    }
+
+    /// The prefilter sidecar, if one is active.
+    pub fn sketch(&self) -> Option<&BinarySketch> {
+        self.sketch.as_ref()
     }
 
     /// Extract seed folds (fold 0 of each item) for compressed storage.
@@ -75,9 +126,12 @@ impl BinaryCodebook {
         &self.items
     }
 
-    /// Dot-product scores of `query` against every item.
+    /// Dot-product scores of `query` against every item (allocating
+    /// convenience over [`Self::scores_into`]).
     pub fn scores(&self, query: &BinaryHV) -> Vec<i64> {
-        self.items.iter().map(|it| it.dot(query)).collect()
+        let mut out = Vec::new();
+        self.scores_into(query, &mut out);
+        out
     }
 
     /// Nearest item index and its score (paper's e(y) = argmax d).
@@ -114,6 +168,308 @@ impl BinaryCodebook {
             top.truncate(k);
         }
         top
+    }
+
+    /// Stream one item row from `start_w` with `ham0` already accumulated
+    /// (the sketch prefix), terminating as soon as the incremental bound
+    /// proves the item cannot beat `top`'s k-th entry under the
+    /// (score desc, index asc) total order. Returns the exact final score
+    /// for survivors, `None` for early-terminated items.
+    #[inline]
+    fn scan_item_bounded(
+        &self,
+        i: usize,
+        qw: &[u64],
+        start_w: usize,
+        ham0: u32,
+        k: usize,
+        top: &[(usize, i64)],
+        stats: &mut PruneStats,
+    ) -> Option<i64> {
+        let words = self.items[i].words();
+        let n_words = words.len();
+        let dim = self.dim as i64;
+        let mut ham = ham0;
+        let mut w = start_w;
+        while w < n_words {
+            let e = (w + PRUNE_CHUNK_WORDS).min(n_words);
+            ham += xor_hamming(&words[w..e], &qw[w..e]);
+            stats.words_streamed += (e - w) as u64;
+            w = e;
+            if w < n_words && top.len() == k {
+                let ub = dim - 2 * ham as i64;
+                let (kj, ks) = top[k - 1];
+                if !(ub > ks || (ub == ks && i < kj)) {
+                    stats.early_terminated += 1;
+                    return None;
+                }
+            }
+        }
+        Some(dim - 2 * ham as i64)
+    }
+
+    /// Bound-pruned top-`k`: bit-identical to [`Self::top_k`] (same
+    /// (score desc, index asc) order, same ties) while streaming fewer
+    /// item words. Cascade: sketch pass over the contiguous sidecar →
+    /// visit items most-promising-first → reject on the prefix bound →
+    /// survivors finish their rows under the incremental bound. `order`
+    /// is a reusable scratch buffer (cleared each call).
+    pub fn top_k_pruned_with_buf(
+        &self,
+        query: &BinaryHV,
+        k: usize,
+        stats: &mut PruneStats,
+        order: &mut Vec<(u32, u32)>,
+    ) -> Vec<(usize, i64)> {
+        assert_eq!(query.dim(), self.dim);
+        let mut top: Vec<(usize, i64)> = Vec::with_capacity(k + 1);
+        if k == 0 || self.items.is_empty() {
+            return top;
+        }
+        let n = self.items.len();
+        let n_words = self.dim / 64;
+        let dim = self.dim as i64;
+        let qw = query.words();
+        stats.items += n as u64;
+        stats.words_total += (n * n_words) as u64;
+        if let Some(sk) = &self.sketch {
+            let sw = sk.words_per_item();
+            order.clear();
+            for i in 0..n {
+                order.push((xor_hamming(sk.row(i), &qw[..sw]), i as u32));
+            }
+            stats.words_streamed += (n * sw) as u64;
+            // ascending prefix Hamming = descending upper bound; index
+            // breaks ties deterministically
+            order.sort_unstable();
+            for pos in 0..order.len() {
+                let (hp, iu) = order[pos];
+                let i = iu as usize;
+                if top.len() == k {
+                    let ub = dim - 2 * hp as i64;
+                    let (kj, ks) = top[k - 1];
+                    if ub < ks {
+                        // sorted order: every later item bounds ≤ ub < ks
+                        stats.sketch_rejected += (order.len() - pos) as u64;
+                        break;
+                    }
+                    if !(ub > ks || i < kj) {
+                        stats.sketch_rejected += 1;
+                        continue;
+                    }
+                }
+                if let Some(s) = self.scan_item_bounded(i, qw, sw, hp, k, &top, stats) {
+                    if top.len() == k {
+                        let (kj, ks) = top[k - 1];
+                        if !(s > ks || (s == ks && i < kj)) {
+                            continue;
+                        }
+                    }
+                    insert_ranked(&mut top, i, s, k);
+                }
+            }
+        } else {
+            for i in 0..n {
+                if let Some(s) = self.scan_item_bounded(i, qw, 0, 0, k, &top, stats) {
+                    if top.len() == k {
+                        let (kj, ks) = top[k - 1];
+                        if !(s > ks || (s == ks && i < kj)) {
+                            continue;
+                        }
+                    }
+                    insert_ranked(&mut top, i, s, k);
+                }
+            }
+        }
+        top
+    }
+
+    /// [`Self::top_k_pruned_with_buf`] with an internal scratch buffer.
+    pub fn top_k_pruned(
+        &self,
+        query: &BinaryHV,
+        k: usize,
+        stats: &mut PruneStats,
+    ) -> Vec<(usize, i64)> {
+        let mut order = Vec::new();
+        self.top_k_pruned_with_buf(query, k, stats, &mut order)
+    }
+
+    /// Bound-pruned nearest: bit-identical to [`Self::nearest`]
+    /// (first-wins ties) while streaming fewer words. Drives the same
+    /// [`Self::scan_item_bounded`] helper as the top-k path over a fixed
+    /// top-1 slice, so it stays allocation-free given the `order`
+    /// scratch buffer without duplicating the bound logic.
+    pub fn nearest_pruned_with_buf(
+        &self,
+        query: &BinaryHV,
+        stats: &mut PruneStats,
+        order: &mut Vec<(u32, u32)>,
+    ) -> (usize, i64) {
+        assert_eq!(query.dim(), self.dim);
+        if self.items.is_empty() {
+            return (0, i64::MIN);
+        }
+        let n = self.items.len();
+        let n_words = self.dim / 64;
+        let dim = self.dim as i64;
+        let qw = query.words();
+        stats.items += n as u64;
+        stats.words_total += (n * n_words) as u64;
+        // top-1 as a fixed slice: `&top1[..filled]` is the `top` the
+        // shared helper bounds against (empty until the first survivor)
+        let mut top1 = [(0usize, i64::MIN)];
+        let mut filled = 0usize;
+        if let Some(sk) = &self.sketch {
+            let sw = sk.words_per_item();
+            order.clear();
+            for i in 0..n {
+                order.push((xor_hamming(sk.row(i), &qw[..sw]), i as u32));
+            }
+            stats.words_streamed += (n * sw) as u64;
+            order.sort_unstable();
+            for pos in 0..order.len() {
+                let (hp, iu) = order[pos];
+                let i = iu as usize;
+                if filled == 1 {
+                    let ub = dim - 2 * hp as i64;
+                    let (bj, bs) = top1[0];
+                    if ub < bs {
+                        stats.sketch_rejected += (order.len() - pos) as u64;
+                        break;
+                    }
+                    if !(ub > bs || i < bj) {
+                        stats.sketch_rejected += 1;
+                        continue;
+                    }
+                }
+                if let Some(s) = self.scan_item_bounded(i, qw, sw, hp, 1, &top1[..filled], stats)
+                {
+                    let (bj, bs) = top1[0];
+                    if filled == 1 && !(s > bs || (s == bs && i < bj)) {
+                        continue;
+                    }
+                    top1[0] = (i, s);
+                    filled = 1;
+                }
+            }
+        } else {
+            for i in 0..n {
+                if let Some(s) = self.scan_item_bounded(i, qw, 0, 0, 1, &top1[..filled], stats) {
+                    let (bj, bs) = top1[0];
+                    if filled == 1 && !(s > bs || (s == bs && i < bj)) {
+                        continue;
+                    }
+                    top1[0] = (i, s);
+                    filled = 1;
+                }
+            }
+        }
+        top1[0]
+    }
+
+    /// [`Self::nearest_pruned_with_buf`] with an internal scratch buffer.
+    pub fn nearest_pruned(&self, query: &BinaryHV, stats: &mut PruneStats) -> (usize, i64) {
+        let mut order = Vec::new();
+        self.nearest_pruned_with_buf(query, stats, &mut order)
+    }
+
+    /// Batched bound-pruned nearest: result `q` is bit-identical to
+    /// [`Self::nearest`]`(&queries[q])`; prune telemetry for the whole
+    /// batch is merged into the returned [`PruneStats`].
+    pub fn nearest_batch_pruned_with(
+        &self,
+        queries: &[BinaryHV],
+        threads: usize,
+    ) -> (Vec<(usize, i64)>, PruneStats) {
+        for q in queries {
+            assert_eq!(q.dim(), self.dim);
+        }
+        let parts = parallel::map_ranges(queries.len(), threads, |r| {
+            let mut st = PruneStats::default();
+            let mut order = Vec::new();
+            let out: Vec<(usize, i64)> = queries[r]
+                .iter()
+                .map(|q| self.nearest_pruned_with_buf(q, &mut st, &mut order))
+                .collect();
+            (out, st)
+        });
+        let mut stats = PruneStats::default();
+        let mut out = Vec::with_capacity(queries.len());
+        for (part, st) in parts {
+            out.extend(part);
+            stats.merge(&st);
+        }
+        (out, stats)
+    }
+
+    /// Batched bound-pruned top-`k` (see [`Self::top_k_pruned_with_buf`]).
+    pub fn top_k_batch_pruned_with(
+        &self,
+        queries: &[BinaryHV],
+        k: usize,
+        threads: usize,
+    ) -> (Vec<Vec<(usize, i64)>>, PruneStats) {
+        for q in queries {
+            assert_eq!(q.dim(), self.dim);
+        }
+        let parts = parallel::map_ranges(queries.len(), threads, |r| {
+            let mut st = PruneStats::default();
+            let mut order = Vec::new();
+            let out: Vec<Vec<(usize, i64)>> = queries[r]
+                .iter()
+                .map(|q| self.top_k_pruned_with_buf(q, k, &mut st, &mut order))
+                .collect();
+            (out, st)
+        });
+        let mut stats = PruneStats::default();
+        let mut out = Vec::with_capacity(queries.len());
+        for (part, st) in parts {
+            out.extend(part);
+            stats.merge(&st);
+        }
+        (out, stats)
+    }
+
+    /// [`Self::scores`] into a caller-held buffer: steady-state callers
+    /// reuse one allocation across scans.
+    pub fn scores_into(&self, query: &BinaryHV, out: &mut Vec<i64>) {
+        assert_eq!(query.dim(), self.dim);
+        out.clear();
+        out.extend(self.items.iter().map(|it| it.dot_bulk(query)));
+    }
+
+    /// [`Self::scores_batch_with`] into caller-held buffers: once `out`'s
+    /// outer and inner vectors have warmed to the batch shape, repeated
+    /// single-threaded calls perform zero heap allocation (enforced by
+    /// `rust/tests/alloc_free.rs`). With `threads > 1` the scan fans out
+    /// through scoped threads, which allocate per call; results are moved
+    /// into `out` either way.
+    pub fn scores_batch_into(&self, queries: &[BinaryHV], threads: usize, out: &mut Vec<Vec<i64>>) {
+        for q in queries {
+            assert_eq!(q.dim(), self.dim);
+        }
+        if threads > 1 && queries.len() > 1 {
+            *out = self.scores_batch_with(queries, threads);
+            return;
+        }
+        out.truncate(queries.len());
+        while out.len() < queries.len() {
+            out.push(Vec::with_capacity(self.items.len()));
+        }
+        for o in out.iter_mut() {
+            o.clear();
+        }
+        let mut base = 0;
+        while base < queries.len() {
+            let end = (base + QUERY_BLOCK).min(queries.len());
+            for it in &self.items {
+                for b in base..end {
+                    out[b].push(it.dot_bulk(&queries[b]));
+                }
+            }
+            base = end;
+        }
     }
 
     /// Batched dot-product scores: `out[q][i]` is query `q` against item
@@ -187,29 +543,32 @@ impl BinaryCodebook {
     }
 }
 
-/// A codebook of real-valued (bipolar) item vectors.
+/// A codebook of real-valued (bipolar) item vectors, carrying an
+/// optional [`RealSketch`] sidecar for the bound-pruned scans.
 #[derive(Debug, Clone)]
 pub struct RealCodebook {
     dim: usize,
     items: Vec<RealHV>,
+    sketch: Option<RealSketch>,
 }
 
 impl RealCodebook {
+    /// Assemble a codebook and its scan sidecar (items are immutable
+    /// after construction, so the sidecar never goes stale).
+    fn assemble(dim: usize, items: Vec<RealHV>) -> Self {
+        let sketch = RealSketch::build(&items, REAL_PRUNE_CHUNK);
+        RealCodebook { dim, items, sketch }
+    }
+
     /// `n` random bipolar item vectors.
     pub fn random_bipolar(rng: &mut Rng, n: usize, dim: usize) -> Self {
-        RealCodebook {
-            dim,
-            items: (0..n).map(|_| RealHV::random_bipolar(rng, dim)).collect(),
-        }
+        Self::assemble(dim, (0..n).map(|_| RealHV::random_bipolar(rng, dim)).collect())
     }
 
     /// `n` random HRR (Gaussian 1/sqrt(D)) item vectors for circular-conv
     /// binding (NVSA-style holographic codebooks).
     pub fn random_hrr(rng: &mut Rng, n: usize, dim: usize) -> Self {
-        RealCodebook {
-            dim,
-            items: (0..n).map(|_| RealHV::random_hrr(rng, dim)).collect(),
-        }
+        Self::assemble(dim, (0..n).map(|_| RealHV::random_hrr(rng, dim)).collect())
     }
 
     /// Build a codebook from pre-generated items, all of dimension `dim`.
@@ -217,7 +576,12 @@ impl RealCodebook {
         for it in &items {
             assert_eq!(it.dim(), dim);
         }
-        RealCodebook { dim, items }
+        Self::assemble(dim, items)
+    }
+
+    /// The scan sidecar, if one is active (rows longer than one chunk).
+    pub fn sketch(&self) -> Option<&RealSketch> {
+        self.sketch.as_ref()
     }
 
     pub fn len(&self) -> usize {
@@ -240,9 +604,12 @@ impl RealCodebook {
         &self.items
     }
 
-    /// Dot-product scores against every item.
+    /// Dot-product scores against every item (allocating convenience
+    /// over [`Self::scores_into`]).
     pub fn scores(&self, query: &RealHV) -> Vec<f64> {
-        self.items.iter().map(|it| it.dot(query)).collect()
+        let mut out = Vec::new();
+        self.scores_into(query, &mut out);
+        out
     }
 
     /// Nearest item by dot product.
@@ -276,6 +643,314 @@ impl RealCodebook {
             top.truncate(k);
         }
         top
+    }
+
+    /// Finish one item row from chunk `start_c` with `acc` already
+    /// holding the exact partial dot, terminating when the
+    /// Cauchy–Schwarz incremental bound proves the item cannot beat
+    /// `top`'s k-th entry. Accumulation continues strictly left-to-right
+    /// through [`dot_acc`], so a survivor's score is bit-identical to
+    /// [`RealHV::dot`].
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn scan_real_item_bounded(
+        &self,
+        i: usize,
+        qs: &[f32],
+        qnorms: &[f64],
+        sk: &RealSketch,
+        start_c: usize,
+        mut acc: f64,
+        k: usize,
+        top: &[(usize, f64)],
+        stats: &mut PruneStats,
+    ) -> Option<f64> {
+        let v = self.items[i].as_slice();
+        let chunk = sk.chunk();
+        let n_chunks = sk.n_chunks();
+        let mut c = start_c;
+        while c < n_chunks {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(self.dim);
+            acc = dot_acc(acc, &v[lo..hi], &qs[lo..hi]);
+            stats.words_streamed += (hi - lo) as u64;
+            c += 1;
+            if c < n_chunks && top.len() == k {
+                let ub = real_upper_bound(acc, sk.rest_norm(i, c - 1) * qnorms[c - 1]);
+                let (kj, ks) = top[k - 1];
+                if !(ub > ks || (ub == ks && i < kj)) {
+                    stats.early_terminated += 1;
+                    return None;
+                }
+            }
+        }
+        Some(acc)
+    }
+
+    /// Bound-pruned top-`k`: bit-identical to [`Self::top_k`] while
+    /// streaming fewer item elements. `qnorms` and `order` are reusable
+    /// scratch buffers (cleared each call).
+    pub fn top_k_pruned_with_bufs(
+        &self,
+        query: &RealHV,
+        k: usize,
+        stats: &mut PruneStats,
+        qnorms: &mut Vec<f64>,
+        order: &mut Vec<(f64, f64, u32)>,
+    ) -> Vec<(usize, f64)> {
+        assert_eq!(query.dim(), self.dim);
+        let mut top: Vec<(usize, f64)> = Vec::with_capacity(k + 1);
+        if k == 0 || self.items.is_empty() {
+            return top;
+        }
+        let n = self.items.len();
+        let qs = query.as_slice();
+        stats.items += n as u64;
+        stats.words_total += (n * self.dim) as u64;
+        if let Some(sk) = &self.sketch {
+            let chunk = sk.chunk();
+            query_suffix_norms(qs, chunk, qnorms);
+            order.clear();
+            for i in 0..n {
+                let dp = dot_acc(0.0, sk.prefix_row(i), &qs[..chunk]);
+                let ub = real_upper_bound(dp, sk.rest_norm(i, 0) * qnorms[0]);
+                order.push((ub, dp, i as u32));
+            }
+            stats.words_streamed += (n * chunk) as u64;
+            // descending upper bound; index breaks ties deterministically
+            order.sort_unstable_by(|a, b| {
+                b.0.partial_cmp(&a.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.2.cmp(&b.2))
+            });
+            for pos in 0..order.len() {
+                let (ub, dp, iu) = order[pos];
+                let i = iu as usize;
+                if top.len() == k {
+                    let (kj, ks) = top[k - 1];
+                    if ub < ks {
+                        stats.sketch_rejected += (order.len() - pos) as u64;
+                        break;
+                    }
+                    if !(ub > ks || (ub == ks && i < kj)) {
+                        stats.sketch_rejected += 1;
+                        continue;
+                    }
+                }
+                if let Some(s) =
+                    self.scan_real_item_bounded(i, qs, qnorms, sk, 1, dp, k, &top, stats)
+                {
+                    if top.len() == k {
+                        let (kj, ks) = top[k - 1];
+                        if !(s > ks || (s == ks && i < kj)) {
+                            continue;
+                        }
+                    }
+                    insert_ranked(&mut top, i, s, k);
+                }
+            }
+        } else {
+            // single-chunk rows: no interior boundary to bound across —
+            // identical to the exhaustive scan, with streaming accounted
+            for (i, it) in self.items.iter().enumerate() {
+                let s = it.dot(query);
+                stats.words_streamed += self.dim as u64;
+                if top.len() == k {
+                    let (kj, ks) = top[k - 1];
+                    if !(s > ks || (s == ks && i < kj)) {
+                        continue;
+                    }
+                }
+                insert_ranked(&mut top, i, s, k);
+            }
+        }
+        top
+    }
+
+    /// [`Self::top_k_pruned_with_bufs`] with internal scratch buffers.
+    pub fn top_k_pruned(
+        &self,
+        query: &RealHV,
+        k: usize,
+        stats: &mut PruneStats,
+    ) -> Vec<(usize, f64)> {
+        let (mut qnorms, mut order) = (Vec::new(), Vec::new());
+        self.top_k_pruned_with_bufs(query, k, stats, &mut qnorms, &mut order)
+    }
+
+    /// Bound-pruned nearest: bit-identical to [`Self::nearest`]
+    /// (first-wins ties). Drives the same [`Self::scan_real_item_bounded`]
+    /// helper as the top-k path over a fixed top-1 slice — zero heap
+    /// allocation once the scratch buffers have warmed, so the
+    /// resonator's per-factor decode can run inside the allocation-free
+    /// `factorize_with` loop.
+    pub fn nearest_pruned_with_bufs(
+        &self,
+        query: &RealHV,
+        stats: &mut PruneStats,
+        qnorms: &mut Vec<f64>,
+        order: &mut Vec<(f64, f64, u32)>,
+    ) -> (usize, f64) {
+        assert_eq!(query.dim(), self.dim);
+        if self.items.is_empty() {
+            return (0, f64::NEG_INFINITY);
+        }
+        let n = self.items.len();
+        let qs = query.as_slice();
+        stats.items += n as u64;
+        stats.words_total += (n * self.dim) as u64;
+        let mut top1 = [(0usize, f64::NEG_INFINITY)];
+        let mut filled = 0usize;
+        if let Some(sk) = &self.sketch {
+            let chunk = sk.chunk();
+            query_suffix_norms(qs, chunk, qnorms);
+            order.clear();
+            for i in 0..n {
+                let dp = dot_acc(0.0, sk.prefix_row(i), &qs[..chunk]);
+                let ub = real_upper_bound(dp, sk.rest_norm(i, 0) * qnorms[0]);
+                order.push((ub, dp, i as u32));
+            }
+            stats.words_streamed += (n * chunk) as u64;
+            order.sort_unstable_by(|a, b| {
+                b.0.partial_cmp(&a.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.2.cmp(&b.2))
+            });
+            for pos in 0..order.len() {
+                let (ub, dp, iu) = order[pos];
+                let i = iu as usize;
+                if filled == 1 {
+                    let (bj, bs) = top1[0];
+                    if ub < bs {
+                        stats.sketch_rejected += (order.len() - pos) as u64;
+                        break;
+                    }
+                    if !(ub > bs || (ub == bs && i < bj)) {
+                        stats.sketch_rejected += 1;
+                        continue;
+                    }
+                }
+                if let Some(s) =
+                    self.scan_real_item_bounded(i, qs, qnorms, sk, 1, dp, 1, &top1[..filled], stats)
+                {
+                    let (bj, bs) = top1[0];
+                    if filled == 1 && !(s > bs || (s == bs && i < bj)) {
+                        continue;
+                    }
+                    top1[0] = (i, s);
+                    filled = 1;
+                }
+            }
+        } else {
+            for (i, it) in self.items.iter().enumerate() {
+                let s = it.dot(query);
+                stats.words_streamed += self.dim as u64;
+                let (bj, bs) = top1[0];
+                if filled == 0 || s > bs || (s == bs && i < bj) {
+                    top1[0] = (i, s);
+                    filled = 1;
+                }
+            }
+        }
+        top1[0]
+    }
+
+    /// [`Self::nearest_pruned_with_bufs`] with internal scratch buffers.
+    pub fn nearest_pruned(&self, query: &RealHV, stats: &mut PruneStats) -> (usize, f64) {
+        let (mut qnorms, mut order) = (Vec::new(), Vec::new());
+        self.nearest_pruned_with_bufs(query, stats, &mut qnorms, &mut order)
+    }
+
+    /// Batched bound-pruned nearest: result `q` is bit-identical to
+    /// [`Self::nearest`]`(&queries[q])`.
+    pub fn nearest_batch_pruned_with(
+        &self,
+        queries: &[RealHV],
+        threads: usize,
+    ) -> (Vec<(usize, f64)>, PruneStats) {
+        for q in queries {
+            assert_eq!(q.dim(), self.dim);
+        }
+        let parts = parallel::map_ranges(queries.len(), threads, |r| {
+            let mut st = PruneStats::default();
+            let (mut qnorms, mut order) = (Vec::new(), Vec::new());
+            let out: Vec<(usize, f64)> = queries[r]
+                .iter()
+                .map(|q| self.nearest_pruned_with_bufs(q, &mut st, &mut qnorms, &mut order))
+                .collect();
+            (out, st)
+        });
+        let mut stats = PruneStats::default();
+        let mut out = Vec::with_capacity(queries.len());
+        for (part, st) in parts {
+            out.extend(part);
+            stats.merge(&st);
+        }
+        (out, stats)
+    }
+
+    /// Batched bound-pruned top-`k` (see [`Self::top_k_pruned_with_bufs`]).
+    pub fn top_k_batch_pruned_with(
+        &self,
+        queries: &[RealHV],
+        k: usize,
+        threads: usize,
+    ) -> (Vec<Vec<(usize, f64)>>, PruneStats) {
+        for q in queries {
+            assert_eq!(q.dim(), self.dim);
+        }
+        let parts = parallel::map_ranges(queries.len(), threads, |r| {
+            let mut st = PruneStats::default();
+            let (mut qnorms, mut order) = (Vec::new(), Vec::new());
+            let out: Vec<Vec<(usize, f64)>> = queries[r]
+                .iter()
+                .map(|q| self.top_k_pruned_with_bufs(q, k, &mut st, &mut qnorms, &mut order))
+                .collect();
+            (out, st)
+        });
+        let mut stats = PruneStats::default();
+        let mut out = Vec::with_capacity(queries.len());
+        for (part, st) in parts {
+            out.extend(part);
+            stats.merge(&st);
+        }
+        (out, stats)
+    }
+
+    /// [`Self::scores`] into a caller-held buffer.
+    pub fn scores_into(&self, query: &RealHV, out: &mut Vec<f64>) {
+        assert_eq!(query.dim(), self.dim);
+        out.clear();
+        out.extend(self.items.iter().map(|it| it.dot(query)));
+    }
+
+    /// [`Self::scores_batch_with`] into caller-held buffers; see the
+    /// binary counterpart for the steady-state allocation contract.
+    pub fn scores_batch_into(&self, queries: &[RealHV], threads: usize, out: &mut Vec<Vec<f64>>) {
+        for q in queries {
+            assert_eq!(q.dim(), self.dim);
+        }
+        if threads > 1 && queries.len() > 1 {
+            *out = self.scores_batch_with(queries, threads);
+            return;
+        }
+        out.truncate(queries.len());
+        while out.len() < queries.len() {
+            out.push(Vec::with_capacity(self.items.len()));
+        }
+        for o in out.iter_mut() {
+            o.clear();
+        }
+        let mut base = 0;
+        while base < queries.len() {
+            let end = (base + QUERY_BLOCK).min(queries.len());
+            for it in &self.items {
+                for b in base..end {
+                    out[b].push(it.dot(&queries[b]));
+                }
+            }
+            base = end;
+        }
     }
 
     /// Batched dot-product scores, query-blocked (`NSCOG_THREADS` workers).
@@ -342,8 +1017,7 @@ impl RealCodebook {
     pub fn project_signed_into(&self, query: &RealHV, scores: &mut Vec<f64>, out: &mut RealHV) {
         assert_eq!(query.dim(), self.dim);
         assert_eq!(out.dim(), self.dim);
-        scores.clear();
-        scores.extend(self.items.iter().map(|it| it.dot(query)));
+        self.scores_into(query, scores);
         let o = out.as_mut_slice();
         for v in o.iter_mut() {
             *v = 0.0;
@@ -609,6 +1283,143 @@ mod tests {
         let rcb = RealCodebook::random_bipolar(&mut rng, 5, 128);
         let rrebuilt = RealCodebook::from_items(128, rcb.items().to_vec());
         assert_eq!(rrebuilt.item(3), rcb.item(3));
+    }
+
+    #[test]
+    fn binary_pruned_matches_exhaustive_including_ties() {
+        let mut rng = Rng::new(20);
+        // 2048 bits → default 512-bit sketch active; duplicates force ties
+        let a = BinaryHV::random(&mut rng, 2048);
+        let b = BinaryHV::random(&mut rng, 2048);
+        let mut items = vec![b.clone(), a.clone(), b.clone(), a.clone()];
+        items.extend((0..20).map(|_| BinaryHV::random(&mut rng, 2048)));
+        let cb = BinaryCodebook::from_items(2048, items);
+        assert!(cb.sketch().is_some());
+        let mut stats = PruneStats::default();
+        for q in [&a, &b, &BinaryHV::random(&mut rng, 2048)] {
+            assert_eq!(cb.nearest_pruned(q, &mut stats), cb.nearest(q));
+            for k in [1usize, 3, 5, 24, 30] {
+                let scores = cb.scores(q);
+                assert_eq!(cb.top_k_pruned(q, k, &mut stats), top_k_oracle(&scores, k));
+            }
+        }
+        assert_eq!(stats.items, 18 * 24);
+    }
+
+    #[test]
+    fn binary_pruned_streams_fewer_words_on_member_queries() {
+        let mut rng = Rng::new(21);
+        let cb = BinaryCodebook::random(&mut rng, 64, 8192);
+        let mut stats = PruneStats::default();
+        for i in 0..8 {
+            let mut q = cb.item(i * 5).clone();
+            for j in rng.sample_indices(8192, 1638) {
+                q.set(j, !q.get(j));
+            }
+            assert_eq!(cb.nearest_pruned(&q, &mut stats), cb.nearest(&q));
+        }
+        assert!(
+            stats.words_streamed < stats.words_total,
+            "easy-distribution scans must stream fewer words than exhaustive: {stats:?}"
+        );
+        assert!(stats.early_terminated > 0 || stats.sketch_rejected > 0);
+    }
+
+    #[test]
+    fn real_pruned_matches_exhaustive_including_ties() {
+        let mut rng = Rng::new(22);
+        let base = RealHV::random_bipolar(&mut rng, 1536);
+        let mut items = vec![base.clone(), base.clone()];
+        items.extend((0..15).map(|_| RealHV::random_bipolar(&mut rng, 1536)));
+        let cb = RealCodebook::from_items(1536, items);
+        assert!(cb.sketch().is_some());
+        let mut stats = PruneStats::default();
+        for q in [&base, &RealHV::random_bipolar(&mut rng, 1536)] {
+            assert_eq!(cb.nearest_pruned(q, &mut stats), cb.nearest(q));
+            let scores = cb.scores(q);
+            for k in [1usize, 2, 6, 17, 20] {
+                assert_eq!(cb.top_k_pruned(q, k, &mut stats), top_k_oracle(&scores, k));
+            }
+        }
+        // single-chunk rows fall back to the exhaustive-equivalent path
+        let small = RealCodebook::random_bipolar(&mut rng, 9, 256);
+        assert!(small.sketch().is_none());
+        let q = RealHV::random_bipolar(&mut rng, 256);
+        assert_eq!(small.nearest_pruned(&q, &mut stats), small.nearest(&q));
+        assert_eq!(
+            small.top_k_pruned(&q, 4, &mut stats),
+            top_k_oracle(&small.scores(&q), 4)
+        );
+    }
+
+    #[test]
+    fn pruned_batches_match_per_query_scans() {
+        let mut rng = Rng::new(23);
+        let bcb = BinaryCodebook::random(&mut rng, 30, 2048);
+        let bqs: Vec<BinaryHV> = (0..9).map(|_| BinaryHV::random(&mut rng, 2048)).collect();
+        for threads in [1usize, 3] {
+            let (nb, st) = bcb.nearest_batch_pruned_with(&bqs, threads);
+            let (tk, _) = bcb.top_k_batch_pruned_with(&bqs, 4, threads);
+            assert_eq!(st.items, 9 * 30, "threads={threads}");
+            for (q, query) in bqs.iter().enumerate() {
+                assert_eq!(nb[q], bcb.nearest(query), "threads={threads} q={q}");
+                assert_eq!(tk[q], bcb.top_k(query, 4), "threads={threads} q={q}");
+            }
+        }
+        let rcb = RealCodebook::random_bipolar(&mut rng, 13, 1024);
+        let rqs: Vec<RealHV> = (0..7).map(|_| RealHV::random_bipolar(&mut rng, 1024)).collect();
+        for threads in [1usize, 2] {
+            let (nb, _) = rcb.nearest_batch_pruned_with(&rqs, threads);
+            let (tk, _) = rcb.top_k_batch_pruned_with(&rqs, 3, threads);
+            for (q, query) in rqs.iter().enumerate() {
+                assert_eq!(nb[q], rcb.nearest(query), "threads={threads} q={q}");
+                assert_eq!(tk[q], rcb.top_k(query, 3), "threads={threads} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn rebuild_sketch_honors_width_knob() {
+        let mut rng = Rng::new(24);
+        let mut cb = BinaryCodebook::random(&mut rng, 12, 4096);
+        assert_eq!(cb.sketch().unwrap().bits(), 512);
+        cb.rebuild_sketch(1024);
+        assert_eq!(cb.sketch().unwrap().bits(), 1024);
+        let q = BinaryHV::random(&mut rng, 4096);
+        let mut stats = PruneStats::default();
+        assert_eq!(cb.top_k_pruned(&q, 3, &mut stats), cb.top_k(&q, 3));
+        cb.rebuild_sketch(0);
+        assert!(cb.sketch().is_none());
+        assert_eq!(cb.top_k_pruned(&q, 3, &mut stats), cb.top_k(&q, 3));
+    }
+
+    #[test]
+    fn scores_into_reuses_buffers() {
+        let mut rng = Rng::new(25);
+        let bcb = BinaryCodebook::random(&mut rng, 17, 1024);
+        let q = BinaryHV::random(&mut rng, 1024);
+        let mut buf = Vec::new();
+        bcb.scores_into(&q, &mut buf);
+        assert_eq!(buf, bcb.scores(&q));
+        let qs: Vec<BinaryHV> = (0..11).map(|_| BinaryHV::random(&mut rng, 1024)).collect();
+        let mut out = Vec::new();
+        for threads in [1usize, 3] {
+            bcb.scores_batch_into(&qs, threads, &mut out);
+            assert_eq!(out, bcb.scores_batch_with(&qs, 1), "threads={threads}");
+        }
+        // shrink: a smaller follow-up batch truncates cleanly
+        bcb.scores_batch_into(&qs[..4], 1, &mut out);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out, bcb.scores_batch_with(&qs[..4], 1));
+        let rcb = RealCodebook::random_bipolar(&mut rng, 9, 512);
+        let rq = RealHV::random_bipolar(&mut rng, 512);
+        let mut rbuf = Vec::new();
+        rcb.scores_into(&rq, &mut rbuf);
+        assert_eq!(rbuf, rcb.scores(&rq));
+        let rqs: Vec<RealHV> = (0..5).map(|_| RealHV::random_bipolar(&mut rng, 512)).collect();
+        let mut rout = Vec::new();
+        rcb.scores_batch_into(&rqs, 1, &mut rout);
+        assert_eq!(rout, rcb.scores_batch_with(&rqs, 1));
     }
 
     #[test]

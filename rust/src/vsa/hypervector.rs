@@ -342,6 +342,20 @@ pub fn majority_ref(vs: &[&BinaryHV], tie_seed: u64) -> BinaryHV {
     out
 }
 
+/// Continue a strictly sequential left-to-right f64 dot-product
+/// accumulation over an f32 slice pair. `dot_acc(dot_acc(0.0, a0, b0),
+/// a1, b1)` equals `dot_acc(0.0, [a0‖a1], [b0‖b1])` bit-for-bit, which is
+/// what lets the bound-pruned codebook scans split a row into chunks (and
+/// resume after a sketch prefix) while reproducing [`RealHV::dot`]
+/// exactly.
+#[inline]
+pub fn dot_acc(acc: f64, a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .fold(acc, |s, (&x, &y)| s + (x as f64) * (y as f64))
+}
+
 /// Real-valued hypervector (f32 storage), the L1/L2 representation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RealHV {
@@ -462,14 +476,13 @@ impl RealHV {
         }
     }
 
-    /// Dot product.
+    /// Dot product. Accumulates strictly left-to-right in f64 via
+    /// [`dot_acc`], the same accumulation the chunked pruned scans thread
+    /// through their partial sums — so a pruned scan's surviving score is
+    /// bit-identical to this reference by construction.
     pub fn dot(&self, other: &RealHV) -> f64 {
         assert_eq!(self.dim(), other.dim());
-        self.data
-            .iter()
-            .zip(&other.data)
-            .map(|(a, b)| (*a as f64) * (*b as f64))
-            .sum()
+        dot_acc(0.0, &self.data, &other.data)
     }
 
     /// Cosine similarity.
@@ -638,6 +651,27 @@ mod tests {
         let x = RealHV::random_hrr(&mut rng, 300);
         assert_eq!(x.permute(17).permute(-17), x);
         assert_eq!(x.permute(300), x);
+    }
+
+    #[test]
+    fn dot_acc_chunked_is_bit_identical() {
+        // Splitting the accumulation at arbitrary chunk boundaries must
+        // reproduce the one-pass dot exactly — the invariant the pruned
+        // scans' resume-after-sketch path relies on.
+        let mut rng = Rng::new(11);
+        let x = RealHV::random_hrr(&mut rng, 1100);
+        let y = RealHV::random_hrr(&mut rng, 1100);
+        let full = x.dot(&y);
+        for chunk in [1usize, 7, 64, 512, 1100, 4096] {
+            let mut acc = 0.0;
+            let mut i = 0;
+            while i < 1100 {
+                let e = (i + chunk).min(1100);
+                acc = dot_acc(acc, &x.as_slice()[i..e], &y.as_slice()[i..e]);
+                i = e;
+            }
+            assert_eq!(acc.to_bits(), full.to_bits(), "chunk {chunk}");
+        }
     }
 
     #[test]

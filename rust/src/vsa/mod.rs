@@ -21,8 +21,10 @@ pub mod codebook;
 pub mod hypervector;
 pub mod ops;
 pub mod resonator;
+pub mod sketch;
 
 pub use cleanup::CleanupMemory;
 pub use codebook::{BinaryCodebook, RealCodebook};
 pub use hypervector::{BinaryHV, RealHV};
 pub use resonator::{Resonator, ResonatorResult, ResonatorScratch};
+pub use sketch::{BinarySketch, PruneStats, RealSketch};

@@ -10,6 +10,7 @@
 use super::codebook::RealCodebook;
 use super::hypervector::RealHV;
 use super::ops;
+use super::sketch::{PruneStats, REAL_PRUNE_CHUNK};
 
 /// Result of a resonator run.
 #[derive(Debug, Clone, PartialEq)]
@@ -34,12 +35,24 @@ pub struct ResonatorScratch {
     suffix: Vec<RealHV>,
     x_hat: RealHV,
     scores: Vec<Vec<f64>>,
+    /// Reusable buffers for the bound-pruned per-factor index decode at
+    /// the end of `factorize_with` (query suffix norms + candidate
+    /// order), plus its accumulated prune telemetry.
+    qnorms: Vec<f64>,
+    order: Vec<(f64, f64, u32)>,
+    prune: PruneStats,
 }
 
 impl ResonatorScratch {
     /// Scores per factor from the most recent sweep.
     pub fn scores(&self) -> &[Vec<f64>] {
         &self.scores
+    }
+
+    /// Accumulated pruning telemetry from the factorize decodes run over
+    /// this scratch.
+    pub fn prune_stats(&self) -> &PruneStats {
+        &self.prune
     }
 }
 
@@ -101,12 +114,16 @@ impl Resonator {
     pub fn make_scratch(&self) -> ResonatorScratch {
         let d = self.codebooks[0].dim();
         let f = self.n_factors();
+        let max_items = self.codebooks.iter().map(|cb| cb.len()).max().unwrap_or(0);
         ResonatorScratch {
             snapshot: vec![RealHV::zeros(d); f],
             prefix: vec![RealHV::zeros(d); f],
             suffix: vec![RealHV::zeros(d); f],
             x_hat: RealHV::zeros(d),
             scores: self.codebooks.iter().map(|cb| Vec::with_capacity(cb.len())).collect(),
+            qnorms: Vec::with_capacity((d + REAL_PRUNE_CHUNK - 1) / REAL_PRUNE_CHUNK),
+            order: Vec::with_capacity(max_items),
+            prune: PruneStats::default(),
         }
     }
 
@@ -201,10 +218,21 @@ impl Resonator {
                 break;
             }
         }
+        // decode each factor through the bound-pruned nearest scan
+        // (bit-identical to `cb.nearest`, property-tested) over the
+        // scratch's reusable buffers, keeping this loop allocation-free
         let indices = estimates
             .iter()
             .zip(&self.codebooks)
-            .map(|(est, cb)| cb.nearest(est).0)
+            .map(|(est, cb)| {
+                cb.nearest_pruned_with_bufs(
+                    est,
+                    &mut scratch.prune,
+                    &mut scratch.qnorms,
+                    &mut scratch.order,
+                )
+                .0
+            })
             .collect();
         ResonatorResult {
             indices,
@@ -379,6 +407,9 @@ mod tests {
             }
         }
         assert!(correct >= 4, "only {correct}/5 reused factorizations correct");
+        // the pruned per-factor decodes accumulated telemetry: 5 reused
+        // runs x 3 factors x 9 items each
+        assert_eq!(scratch.prune_stats().items, 5 * 3 * 9);
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! Cascaded sketch-prefilter sidecars and prune accounting for the
+//! bound-pruned associative scans (paper Sec. V–VI: the cleanup scan is
+//! memory-bound, so the win is *streaming fewer item words*, not more
+//! arithmetic).
+//!
+//! A [`BinarySketch`] holds the first `S` bits of every item in one
+//! contiguous item-major block; a [`RealSketch`] holds the first chunk of
+//! every item plus per-item suffix L2 norms at chunk boundaries. Both give
+//! the scan two exact tools:
+//!
+//! 1. a **prefilter bound** — after reading only the sketch, the best
+//!    score an item can still reach is known (`dim - 2·ham_prefix` for
+//!    binary; `dot_prefix + ‖rest_item‖·‖rest_query‖` by Cauchy–Schwarz
+//!    for real), so items that cannot beat the current k-th best are
+//!    rejected before their full rows are touched, and
+//! 2. a **scan order** — visiting items most-promising-first makes the
+//!    k-th-best threshold tight almost immediately, which is what lets the
+//!    incremental per-chunk bound inside the full scan terminate early.
+//!
+//! Pruning decisions are made under the same (score desc, index asc)
+//! total order the exhaustive scans use, so pruned results are
+//! **bit-identical** to the reference — an item is skipped only when at
+//! least `k` already-scored items provably precede it. See
+//! `rust/tests/pruned_equivalence.rs`.
+
+use super::hypervector::{BinaryHV, RealHV, FOLD_BITS};
+
+/// Default binary sketch width: one 512-bit fold (the accelerator's bus
+/// width), used when the vector is long enough for the sidecar to pay for
+/// itself; shorter vectors rely on incremental bounds alone.
+pub const DEFAULT_SKETCH_BITS: usize = FOLD_BITS;
+
+/// Words per incremental-bound chunk in the pruned binary scans (one
+/// 512-bit fold: the granularity the accelerator streams item rows at).
+pub const PRUNE_CHUNK_WORDS: usize = 8;
+
+/// Elements per incremental-bound chunk in the pruned real scans.
+pub const REAL_PRUNE_CHUNK: usize = 512;
+
+/// Default binary sketch width for a given dimension: one fold when the
+/// row is at least four folds long, otherwise no sketch (0).
+pub fn default_sketch_bits(dim: usize) -> usize {
+    if dim >= 4 * FOLD_BITS {
+        DEFAULT_SKETCH_BITS
+    } else {
+        0
+    }
+}
+
+/// Per-scan pruning telemetry: how much of the item memory a scan
+/// actually streamed versus what an exhaustive scan would have read.
+/// Units are `u64` words for binary scans and `f32` elements for real
+/// scans; sketch reads count toward `words_streamed`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Items considered across all scans.
+    pub items: u64,
+    /// Items rejected on the sketch bound alone (full row never touched).
+    pub sketch_rejected: u64,
+    /// Full-row scans abandoned mid-row by the incremental bound.
+    pub early_terminated: u64,
+    /// Words (binary) / elements (real) actually read, sketch included.
+    pub words_streamed: u64,
+    /// Words an exhaustive scan of the same queries would have read.
+    pub words_total: u64,
+}
+
+impl PruneStats {
+    /// Fold another scan's counters into this one.
+    pub fn merge(&mut self, other: &PruneStats) {
+        self.items += other.items;
+        self.sketch_rejected += other.sketch_rejected;
+        self.early_terminated += other.early_terminated;
+        self.words_streamed += other.words_streamed;
+        self.words_total += other.words_total;
+    }
+
+    /// Fraction of items rejected by the sketch prefilter alone.
+    pub fn sketch_reject_rate(&self) -> f64 {
+        if self.items > 0 {
+            self.sketch_rejected as f64 / self.items as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of item-memory words actually streamed. Always ≤ 1.0:
+    /// sketch words are the row prefix and full scans resume at the
+    /// sketch boundary, so even a fully-scanned item streams exactly its
+    /// row (1.0 therefore means "nothing pruned", not "overhead paid" —
+    /// the sidecar's cost is extra passes over resident data, never extra
+    /// words).
+    pub fn words_frac(&self) -> f64 {
+        if self.words_total > 0 {
+            self.words_streamed as f64 / self.words_total as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Counter-wise difference versus an earlier snapshot of the same
+    /// monotonically-growing stats (used to attribute a reused scratch's
+    /// accumulated telemetry to one batch).
+    pub fn delta_since(&self, earlier: &PruneStats) -> PruneStats {
+        PruneStats {
+            items: self.items.saturating_sub(earlier.items),
+            sketch_rejected: self.sketch_rejected.saturating_sub(earlier.sketch_rejected),
+            early_terminated: self.early_terminated.saturating_sub(earlier.early_terminated),
+            words_streamed: self.words_streamed.saturating_sub(earlier.words_streamed),
+            words_total: self.words_total.saturating_sub(earlier.words_total),
+        }
+    }
+}
+
+/// Contiguous item-major block of each item's first `words_per_item`
+/// words — the binary prefilter sidecar. Bits are verbatim copies of the
+/// item rows, so a prefix Hamming computed on the sketch equals the same
+/// prefix computed on the row.
+#[derive(Debug, Clone)]
+pub struct BinarySketch {
+    words_per_item: usize,
+    block: Vec<u64>,
+}
+
+impl BinarySketch {
+    /// Build the sidecar, or `None` when `sketch_bits` is 0 or does not
+    /// leave a remainder to prune (sketch must be strictly narrower than
+    /// the row). `sketch_bits` is rounded down to whole words.
+    pub fn build(items: &[BinaryHV], sketch_bits: usize) -> Option<BinarySketch> {
+        let words_per_item = sketch_bits / 64;
+        let n_words = items.first()?.words().len();
+        if words_per_item == 0 || words_per_item >= n_words {
+            return None;
+        }
+        let mut block = Vec::with_capacity(items.len() * words_per_item);
+        for it in items {
+            block.extend_from_slice(&it.words()[..words_per_item]);
+        }
+        Some(BinarySketch {
+            words_per_item,
+            block,
+        })
+    }
+
+    pub fn words_per_item(&self) -> usize {
+        self.words_per_item
+    }
+
+    /// Sketch bits per item.
+    pub fn bits(&self) -> usize {
+        self.words_per_item * 64
+    }
+
+    /// Item `i`'s sketch words.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u64] {
+        &self.block[i * self.words_per_item..(i + 1) * self.words_per_item]
+    }
+
+    /// Sidecar memory footprint (bytes).
+    pub fn storage_bytes(&self) -> usize {
+        self.block.len() * 8
+    }
+}
+
+/// Real-valued scan sidecar: the first [`REAL_PRUNE_CHUNK`] elements of
+/// each item in one contiguous block (prefilter pass) plus per-item
+/// suffix L2 norms at every chunk boundary (Cauchy–Schwarz upper bounds
+/// for the incremental scan).
+#[derive(Debug, Clone)]
+pub struct RealSketch {
+    chunk: usize,
+    n_chunks: usize,
+    prefix: Vec<f32>,
+    /// `rest_norms[i * n_chunks + c] = ‖item_i[(c+1)·chunk ..]‖`; the last
+    /// entry per item is 0 (nothing follows the final chunk).
+    rest_norms: Vec<f64>,
+}
+
+impl RealSketch {
+    /// Build the sidecar; `None` when the row is a single chunk (no
+    /// boundary to bound across).
+    pub fn build(items: &[RealHV], chunk: usize) -> Option<RealSketch> {
+        let dim = items.first()?.dim();
+        let n_chunks = (dim + chunk - 1) / chunk;
+        if n_chunks < 2 {
+            return None;
+        }
+        let mut prefix = Vec::with_capacity(items.len() * chunk);
+        let mut rest_norms = Vec::with_capacity(items.len() * n_chunks);
+        for it in items {
+            let v = it.as_slice();
+            prefix.extend_from_slice(&v[..chunk]);
+            let base = rest_norms.len();
+            rest_norms.resize(base + n_chunks, 0.0);
+            let mut sumsq = 0.0f64;
+            for c in (1..n_chunks).rev() {
+                let lo = c * chunk;
+                let hi = ((c + 1) * chunk).min(dim);
+                for &x in &v[lo..hi] {
+                    sumsq += (x as f64) * (x as f64);
+                }
+                rest_norms[base + c - 1] = sumsq.sqrt();
+            }
+        }
+        Some(RealSketch {
+            chunk,
+            n_chunks,
+            prefix,
+            rest_norms,
+        })
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.n_chunks
+    }
+
+    /// Item `i`'s prefix chunk.
+    #[inline]
+    pub fn prefix_row(&self, i: usize) -> &[f32] {
+        &self.prefix[i * self.chunk..(i + 1) * self.chunk]
+    }
+
+    /// `‖item_i[(c+1)·chunk ..]‖` — the norm of everything *after* chunk
+    /// boundary `c`.
+    #[inline]
+    pub fn rest_norm(&self, i: usize, c: usize) -> f64 {
+        self.rest_norms[i * self.n_chunks + c]
+    }
+}
+
+/// Write the query-side suffix norms (`out[c] = ‖q[(c+1)·chunk ..]‖`)
+/// into a reusable buffer; zero allocation once `out` has capacity for
+/// `⌈dim/chunk⌉` entries.
+pub fn query_suffix_norms(q: &[f32], chunk: usize, out: &mut Vec<f64>) {
+    let n_chunks = (q.len() + chunk - 1) / chunk;
+    out.clear();
+    out.resize(n_chunks, 0.0);
+    let mut sumsq = 0.0f64;
+    for c in (1..n_chunks).rev() {
+        let lo = c * chunk;
+        let hi = ((c + 1) * chunk).min(q.len());
+        for &x in &q[lo..hi] {
+            sumsq += (x as f64) * (x as f64);
+        }
+        out[c - 1] = sumsq.sqrt();
+    }
+}
+
+/// Conservative Cauchy–Schwarz upper bound for a partially-scanned real
+/// dot product: `acc` is the exact partial, `rest` the norm-product bound
+/// on the remainder (≥ 0). The relative inflation absorbs f64 rounding in
+/// the norm/bound arithmetic so rounding can never cause a wrongful
+/// prune; the exhaustive comparison that *would* have kept the item uses
+/// exactly the same left-to-right accumulation as the pruned path, so any
+/// surviving item's final score is bit-identical.
+#[inline]
+pub fn real_upper_bound(acc: f64, rest: f64) -> f64 {
+    acc + rest + 1e-9 * (1.0 + acc.abs() + rest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn binary_sketch_rows_mirror_item_prefixes() {
+        let mut rng = Rng::new(1);
+        let items: Vec<BinaryHV> = (0..9).map(|_| BinaryHV::random(&mut rng, 2048)).collect();
+        let sk = BinarySketch::build(&items, 512).unwrap();
+        assert_eq!(sk.words_per_item(), 8);
+        for (i, it) in items.iter().enumerate() {
+            assert_eq!(sk.row(i), &it.words()[..8]);
+        }
+        // too-wide or zero sketches degrade to None
+        assert!(BinarySketch::build(&items, 2048).is_none());
+        assert!(BinarySketch::build(&items, 0).is_none());
+        assert!(BinarySketch::build(&[], 512).is_none());
+    }
+
+    #[test]
+    fn real_sketch_norms_bound_the_suffix() {
+        let mut rng = Rng::new(2);
+        let items: Vec<RealHV> = (0..5)
+            .map(|_| RealHV::random_hrr(&mut rng, 1280))
+            .collect();
+        let sk = RealSketch::build(&items, REAL_PRUNE_CHUNK).unwrap();
+        assert_eq!(sk.n_chunks(), 3);
+        for (i, it) in items.iter().enumerate() {
+            assert_eq!(sk.prefix_row(i), &it.as_slice()[..REAL_PRUNE_CHUNK]);
+            // final boundary has nothing left
+            assert_eq!(sk.rest_norm(i, 2), 0.0);
+            // norms decrease along the row and match a direct computation
+            let direct: f64 = it.as_slice()[REAL_PRUNE_CHUNK..]
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt();
+            assert!((sk.rest_norm(i, 0) - direct).abs() < 1e-9 * (1.0 + direct));
+            assert!(sk.rest_norm(i, 0) >= sk.rest_norm(i, 1));
+        }
+        let single: Vec<RealHV> = vec![RealHV::zeros(256)];
+        assert!(RealSketch::build(&single, REAL_PRUNE_CHUNK).is_none());
+    }
+
+    #[test]
+    fn query_norms_match_item_norms_shape() {
+        let mut rng = Rng::new(3);
+        let q = RealHV::random_bipolar(&mut rng, 1100);
+        let mut out = Vec::new();
+        query_suffix_norms(q.as_slice(), REAL_PRUNE_CHUNK, &mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[2], 0.0);
+        // suffix of a bipolar vector of length L has norm sqrt(L)
+        assert!((out[0] - (588f64).sqrt()).abs() < 1e-9);
+        assert!((out[1] - (76f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prune_stats_rates() {
+        let mut a = PruneStats {
+            items: 10,
+            sketch_rejected: 4,
+            early_terminated: 2,
+            words_streamed: 50,
+            words_total: 100,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.items, 20);
+        assert!((a.sketch_reject_rate() - 0.4).abs() < 1e-12);
+        assert!((a.words_frac() - 0.5).abs() < 1e-12);
+        assert_eq!(PruneStats::default().words_frac(), 0.0);
+        // delta vs an earlier snapshot recovers the later contribution
+        assert_eq!(a.delta_since(&b), b);
+        assert_eq!(a.delta_since(&a), PruneStats::default());
+    }
+}

@@ -9,7 +9,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use nscog::util::Rng;
-use nscog::vsa::{RealCodebook, Resonator};
+use nscog::vsa::{BinaryCodebook, BinaryHV, RealCodebook, Resonator};
 
 struct CountingAlloc;
 
@@ -67,8 +67,13 @@ fn resonator_sweeps_allocate_nothing_in_steady_state() {
     );
 
     // init_estimates_into + the sweep loop inside factorize_with are also
-    // allocation-free; only the final ResonatorResult (indices Vec) may
-    // allocate, bounded per call, not per sweep.
+    // allocation-free (including the bound-pruned per-factor index decode
+    // over the scratch's reusable buffers); only the final
+    // ResonatorResult (indices Vec) may allocate, bounded per call, not
+    // per sweep.
+    resonator.init_estimates_into(&mut estimates);
+    // warm the decode buffers (qnorms/order) once
+    let _ = resonator.factorize_with(&scene, &mut estimates, &mut scratch);
     resonator.init_estimates_into(&mut estimates);
     let before = ALLOC_CALLS.load(Ordering::SeqCst);
     resonator.init_estimates_into(&mut estimates);
@@ -80,4 +85,23 @@ fn resonator_sweeps_allocate_nothing_in_steady_state() {
         "factorize_with should allocate only the result indices, saw {} allocations",
         after - before
     );
+
+    // Steady-state batched codebook scans over reusable score buffers
+    // (BinaryCodebook::scores_batch_into, single-threaded serve shape)
+    // must not touch the heap once the buffers have warmed.
+    let cb = BinaryCodebook::random(&mut rng, 24, 2048);
+    let queries: Vec<BinaryHV> = (0..10).map(|_| BinaryHV::random(&mut rng, 2048)).collect();
+    let mut scores_out: Vec<Vec<i64>> = Vec::new();
+    cb.scores_batch_into(&queries, 1, &mut scores_out); // warm-up
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..20 {
+        cb.scores_batch_into(&queries, 1, &mut scores_out);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state batched scans must not touch the heap"
+    );
+    assert_eq!(scores_out[3], cb.scores(&queries[3]));
 }

@@ -1,0 +1,242 @@
+//! Property tests for the cascaded sketch-prefilter + bound-pruned scan
+//! engine: pruned `top_k` / `nearest` / batch scans must be bit-identical
+//! to the exhaustive references — across k, sketch widths, adversarial
+//! item distributions (duplicates, all-tie codebooks, near-duplicates),
+//! dimensions that are not multiples of the bound chunk, and shard
+//! boundaries — while measurably streaming fewer item words on the easy
+//! (noisy member query) distribution.
+
+use nscog::serve::ShardedCleanup;
+use nscog::util::prop::forall_res;
+use nscog::util::Rng;
+use nscog::vsa::sketch::PRUNE_CHUNK_WORDS;
+use nscog::vsa::{BinaryCodebook, BinaryHV, CleanupMemory, PruneStats, RealCodebook, RealHV};
+
+/// Oracle: full sort by (score desc, index asc), truncate.
+fn top_k_oracle<S: Copy + PartialOrd>(scores: &[S], k: usize) -> Vec<(usize, S)> {
+    let mut all: Vec<(usize, S)> = scores.iter().copied().enumerate().collect();
+    all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    all.truncate(k);
+    all
+}
+
+fn flip_bits(hv: &BinaryHV, frac: f64, rng: &mut Rng) -> BinaryHV {
+    let mut out = hv.clone();
+    let n = (hv.dim() as f64 * frac) as usize;
+    for i in rng.sample_indices(hv.dim(), n) {
+        out.set(i, !out.get(i));
+    }
+    out
+}
+
+/// Random binary codebook in one of four item distributions:
+/// 0 = independent random, 1 = duplicates (exact ties), 2 = all-tie
+/// (every item identical), 3 = near-duplicates (adversarial for pruning).
+fn gen_binary(rng: &mut Rng) -> (BinaryCodebook, Vec<BinaryHV>, usize) {
+    // dims straddle sketch/no-sketch and non-multiple-of-chunk shapes
+    let dims = [320usize, 512, 1024, 1088, 2048, 2624];
+    let dim = dims[rng.below(dims.len())];
+    let n = 1 + rng.below(28);
+    let mode = rng.below(4);
+    let items: Vec<BinaryHV> = match mode {
+        0 => (0..n).map(|_| BinaryHV::random(rng, dim)).collect(),
+        1 => {
+            let base: Vec<BinaryHV> = (0..(n / 3 + 1))
+                .map(|_| BinaryHV::random(rng, dim))
+                .collect();
+            (0..n).map(|_| base[rng.below(base.len())].clone()).collect()
+        }
+        2 => {
+            let b = BinaryHV::random(rng, dim);
+            vec![b; n]
+        }
+        _ => {
+            let b = BinaryHV::random(rng, dim);
+            (0..n).map(|_| flip_bits(&b, 0.03, rng)).collect()
+        }
+    };
+    let cb = BinaryCodebook::from_items(dim, items);
+    let queries: Vec<BinaryHV> = (0..4)
+        .map(|q| {
+            if q % 2 == 0 {
+                BinaryHV::random(rng, dim)
+            } else {
+                flip_bits(cb.item(rng.below(n)), 0.2, rng)
+            }
+        })
+        .collect();
+    (cb, queries, mode)
+}
+
+#[test]
+fn binary_pruned_scans_equal_exhaustive_everywhere() {
+    forall_res(
+        7001,
+        60,
+        gen_binary,
+        |(cb, queries, _mode)| {
+            let mut stats = PruneStats::default();
+            // exercise default, explicit, and disabled sketch widths
+            for sketch_bits in [None, Some(256usize), Some(0)] {
+                let mut cb = cb.clone();
+                if let Some(bits) = sketch_bits {
+                    cb.rebuild_sketch(bits);
+                }
+                for query in queries {
+                    let scores = cb.scores(query);
+                    let nearest = cb.nearest(query);
+                    if cb.nearest_pruned(query, &mut stats) != nearest {
+                        return Err(format!("nearest diverged (sketch {sketch_bits:?})"));
+                    }
+                    for k in [1usize, 2, 5, cb.len(), cb.len() + 4] {
+                        let want = top_k_oracle(&scores, k);
+                        let got = cb.top_k_pruned(query, k, &mut stats);
+                        if got != want {
+                            return Err(format!(
+                                "top_k diverged at k={k} (sketch {sketch_bits:?}): {got:?} != {want:?}"
+                            ));
+                        }
+                        if cb.top_k(query, k) != want {
+                            return Err(format!("exhaustive top_k oracle drift at k={k}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn gen_real(rng: &mut Rng) -> (RealCodebook, Vec<RealHV>) {
+    let dims = [256usize, 512, 640, 1024, 1100, 1536];
+    let dim = dims[rng.below(dims.len())];
+    let n = 1 + rng.below(18);
+    let mode = rng.below(3);
+    let items: Vec<RealHV> = match mode {
+        0 => (0..n).map(|_| RealHV::random_bipolar(rng, dim)).collect(),
+        1 => {
+            let base: Vec<RealHV> = (0..(n / 2 + 1))
+                .map(|_| RealHV::random_bipolar(rng, dim))
+                .collect();
+            (0..n).map(|_| base[rng.below(base.len())].clone()).collect()
+        }
+        _ => (0..n).map(|_| RealHV::random_hrr(rng, dim)).collect(),
+    };
+    let cb = RealCodebook::from_items(dim, items);
+    let queries: Vec<RealHV> = (0..3)
+        .map(|q| {
+            if q == 1 {
+                cb.item(rng.below(n)).clone()
+            } else {
+                RealHV::random_bipolar(rng, dim)
+            }
+        })
+        .collect();
+    (cb, queries)
+}
+
+#[test]
+fn real_pruned_scans_equal_exhaustive_everywhere() {
+    forall_res(7002, 50, gen_real, |(cb, queries)| {
+        let mut stats = PruneStats::default();
+        for query in queries {
+            let scores = cb.scores(query);
+            if cb.nearest_pruned(query, &mut stats) != cb.nearest(query) {
+                return Err("nearest diverged".into());
+            }
+            for k in [1usize, 3, cb.len(), cb.len() + 2] {
+                let want = top_k_oracle(&scores, k);
+                if cb.top_k_pruned(query, k, &mut stats) != want {
+                    return Err(format!("top_k diverged at k={k}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_pruned_scans_preserve_tie_order_across_boundaries() {
+    // duplicate items laid across shard boundaries force cross-shard
+    // exact ties; the pruned sharded scan must keep the global
+    // (score desc, index asc) order
+    let mut rng = Rng::new(7003);
+    for dim in [1024usize, 2048] {
+        let a = BinaryHV::random(&mut rng, dim);
+        let b = BinaryHV::random(&mut rng, dim);
+        let items = vec![
+            b.clone(),
+            a.clone(),
+            b.clone(),
+            a.clone(),
+            a.clone(),
+            BinaryHV::random(&mut rng, dim),
+            b.clone(),
+        ];
+        let cb = BinaryCodebook::from_items(dim, items);
+        let cm = CleanupMemory::new(cb.clone());
+        let queries = vec![a.clone(), b.clone(), flip_bits(&a, 0.1, &mut rng)];
+        for shards in [2usize, 3, 7] {
+            let sharded = ShardedCleanup::partition(&cb, shards);
+            for threads in [1usize, 2] {
+                let (recalls, _, _) = sharded.recall_batch_stats(&queries, threads);
+                let (tops, _, _) = sharded.recall_topk_batch_stats(&queries, 4, threads);
+                for (q, query) in queries.iter().enumerate() {
+                    assert_eq!(
+                        recalls[q],
+                        cm.recall(query),
+                        "dim={dim} shards={shards} threads={threads} q={q}"
+                    );
+                    assert_eq!(
+                        tops[q],
+                        cm.recall_topk(query, 4),
+                        "dim={dim} shards={shards} threads={threads} q={q}"
+                    );
+                }
+            }
+        }
+        // tie ranking sanity on the unsharded pruned path itself
+        let mut stats = PruneStats::default();
+        let top = cb.top_k_pruned(&a, 3, &mut stats);
+        assert_eq!(
+            top.iter().map(|&(i, _)| i).collect::<Vec<_>>(),
+            vec![1, 3, 4],
+            "duplicate member ties must rank by ascending index (dim={dim})"
+        );
+    }
+}
+
+#[test]
+fn easy_distribution_streams_measurably_fewer_words() {
+    // the serve store shape (120x8192) with noisy member queries — the
+    // acceptance distribution: pruned scans must stream < 100% of the
+    // words an exhaustive scan reads, at bit-identical results
+    let mut rng = Rng::new(7004);
+    let cb = BinaryCodebook::random(&mut rng, 120, 8192);
+    let queries: Vec<BinaryHV> = (0..24)
+        .map(|i| flip_bits(cb.item((i * 7) % 120), 0.2, &mut rng))
+        .collect();
+    let (nearest, nstats) = cb.nearest_batch_pruned_with(&queries, 1);
+    let (topk, kstats) = cb.top_k_batch_pruned_with(&queries, 5, 1);
+    for (q, query) in queries.iter().enumerate() {
+        assert_eq!(nearest[q], cb.nearest(query), "q={q}");
+        assert_eq!(topk[q], cb.top_k(query, 5), "q={q}");
+    }
+    assert!(
+        nstats.words_frac() < 1.0,
+        "easy nearest must stream fewer words: {nstats:?}"
+    );
+    assert!(
+        nstats.sketch_rejected + nstats.early_terminated > 0,
+        "easy nearest must actually prune: {nstats:?}"
+    );
+    // top-5 thresholds are looser, but by construction the cascade can
+    // never stream more than the exhaustive scan (sketch words are the
+    // row prefix; full scans resume at the sketch boundary)
+    assert!(
+        kstats.words_frac() <= 1.0 + 1e-12,
+        "top-5 streamed beyond exhaustive: {kstats:?}"
+    );
+    // chunk constant sanity: the incremental bound fires at fold granularity
+    assert_eq!(PRUNE_CHUNK_WORDS * 64, 512);
+}

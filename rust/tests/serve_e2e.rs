@@ -29,6 +29,7 @@ fn fixture_cfg(requests: usize, seed: u64) -> FixtureConfig {
             topk: 2,
             factorize: 1,
         },
+        repeat_frac: 0.0,
         seed,
     }
 }
@@ -109,6 +110,78 @@ fn shard_merge_equals_unsharded_scan_on_both_codebooks() {
             assert_eq!(topk[q], rcb.top_k(query, 5), "real shards={shards} q={q}");
         }
     }
+}
+
+#[test]
+fn cached_serving_is_bit_identical_and_never_crosses_k_or_class() {
+    // repeated-query mix through an engine with the cache enabled: every
+    // response (cached or computed) must equal the sequential oracle
+    let fixture = Fixture::build(FixtureConfig {
+        repeat_frac: 0.4,
+        ..fixture_cfg(150, 13)
+    });
+    let engine = ServeEngine::start(
+        &fixture.codebook,
+        Some(fixture.resonator.clone()),
+        EngineConfig {
+            workers: 3,
+            shards: 4,
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            ..EngineConfig::default()
+        },
+    );
+    let report = run_closed_loop(&engine, &fixture, 8, &fixture.oracle());
+    assert_eq!(report.ok, 150);
+    assert_eq!(
+        report.mismatches, 0,
+        "cached responses must be bit-identical to the oracle"
+    );
+    let snap = engine.stats();
+    let cache = snap.cache.expect("cache enabled by default");
+    assert!(cache.hits > 0, "repeat_frac=0.4 over 150 requests must hit");
+    engine.shutdown();
+
+    // class/k scoping: same query through recall, top-k(1), and two
+    // different top-k widths — each answer matches its own oracle
+    let mut rng = Rng::new(14);
+    let cb = BinaryCodebook::random(&mut rng, 40, 1024);
+    let cm = nscog::vsa::CleanupMemory::new(cb.clone());
+    let engine = ServeEngine::start(&cb, None, EngineConfig::default());
+    let q = BinaryHV::random(&mut rng, 1024);
+    for _round in 0..2 {
+        // second round is served from the cache; answers must not change
+        let recall = engine
+            .submit(ServeRequest::Recall { query: q.clone() })
+            .unwrap();
+        assert_eq!(
+            recall,
+            nscog::serve::ServeResponse::Recall {
+                index: cm.recall(&q).0,
+                cosine: cm.recall(&q).1,
+            }
+        );
+        for k in [1usize, 3, 5] {
+            let got = engine
+                .submit(ServeRequest::RecallTopK {
+                    query: q.clone(),
+                    k,
+                })
+                .unwrap();
+            assert_eq!(
+                got,
+                nscog::serve::ServeResponse::RecallTopK {
+                    hits: cm.recall_topk(&q, k)
+                },
+                "k={k}"
+            );
+        }
+    }
+    let snap = engine.stats();
+    let cache = snap.cache.unwrap();
+    assert_eq!(cache.hits, 4, "round two should hit all four entries");
+    assert_eq!(cache.entries, 4, "recall + three distinct k entries");
+    engine.shutdown();
 }
 
 #[test]

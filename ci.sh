@@ -24,8 +24,54 @@ cargo build --release
 echo "== tests =="
 cargo test -q
 
-echo "== bench smoke: hotpath =="
+echo "== tests: forced NSCOG_SIMD=scalar kernel/scan subset =="
+# the dispatched kernels must stay bit-identical when the scalar tier is
+# forced through the env override (the A/B path the bench comparison uses)
+NSCOG_SIMD=scalar cargo test -q --test kernel_equivalence --test pruned_equivalence
+
+echo "== bench smoke: hotpath (NSCOG_SIMD=scalar baseline) =="
+NSCOG_SIMD=scalar NSCOG_BENCH_JSON="$(pwd)/BENCH_hotpath_scalar.json" \
+    cargo bench --bench hotpath
+
+echo "== bench smoke: hotpath (auto simd dispatch) =="
 NSCOG_BENCH_JSON="$(pwd)/BENCH_hotpath.json" cargo bench --bench hotpath
+
+# Merge the two runs into simd-vs-scalar speedup entries keyed on shared
+# bench names, so PERF.md numbers are attributable to a code path.
+if command -v python3 >/dev/null 2>&1; then
+    echo "== merge simd-vs-scalar speedups into BENCH_hotpath.json =="
+    python3 - <<'PYEOF'
+import json
+try:
+    auto = json.load(open('BENCH_hotpath.json'))
+    scal = json.load(open('BENCH_hotpath_scalar.json'))
+except (OSError, json.JSONDecodeError):
+    print('bench JSONs unavailable; skipping simd merge')
+    raise SystemExit(0)
+pairs = {
+    'simd hamming 8192b': 'vsa/hamming_bulk 8192b x16',
+    'simd dot 8192b': 'vsa/dot_bulk 8192b x16',
+    'simd majority 9x8192b': 'vsa/majority 9x8192b (word-sliced)',
+    'simd batched-scan 100q': 'vsa/nearest_batch 100q (blocked)',
+}
+p50 = lambda r: {e['name']: e['p50_s'] for e in r.get('entries', [])}
+a, s = p50(auto), p50(scal)
+merged = []
+for label, entry in pairs.items():
+    if entry in a and entry in s and a[entry] > 0:
+        merged.append({'kernel': label, 'scalar_p50_s': s[entry],
+                       'simd_p50_s': a[entry],
+                       'speedup': round(s[entry] / a[entry], 3)})
+auto['simd_speedups'] = merged
+json.dump(auto, open('BENCH_hotpath.json', 'w'), indent=2)
+tier = auto.get('simd', 'unknown')
+print(f"simd tier '{tier}':")
+for m in merged:
+    print(f"  {m['kernel']}: {m['speedup']:.2f}x vs forced scalar")
+if tier == 'scalar':
+    print('host resolved the scalar tier (no AVX2/NEON); simd floors will be skipped')
+PYEOF
+fi
 
 echo "== bench smoke: serve (bounded requests, deterministic seed) =="
 NSCOG_SERVE_JSON="$(pwd)/BENCH_serve.json" \
@@ -89,13 +135,31 @@ try:
     hp = json.load(open('BENCH_hotpath.json'))
     speedups = {s['kernel']: s['speedup'] for s in hp.get('speedups', [])}
 except (OSError, json.JSONDecodeError):
-    speedups = {}
+    hp, speedups = {}, {}
 if not speedups:
     print('BENCH_hotpath.json unpopulated; skipping speedup gate')
     sys.exit(0)
-failures, checked = [], 0
+simd_tier = hp.get('simd')
+simd_speedups = {s['kernel']: s['speedup'] for s in hp.get('simd_speedups', [])}
+failures, checked, simd_skipped = [], 0, 0
 for kernel, floor in floors.items():
     if kernel == 'serve closed-loop qps':
+        continue
+    if kernel.startswith('simd '):
+        # simd-vs-scalar floors only bind when the host actually resolved
+        # a SIMD tier: hosts without AVX2/NEON skip cleanly. On a SIMD
+        # host, a missing/renamed entry is a hard failure like every
+        # other floor — drift must not silently disable the gate.
+        if simd_tier in (None, 'scalar'):
+            simd_skipped += 1
+            continue
+        if kernel not in simd_speedups:
+            failures.append(f"{kernel}: floor has no matching simd_speedups entry")
+            continue
+        checked += 1
+        if simd_speedups[kernel] < floor:
+            failures.append(
+                f"{kernel}: measured {simd_speedups[kernel]:.2f}x < floor {floor:.2f}x")
         continue
     if kernel not in speedups:
         # a renamed/dropped bench entry must not silently disable its gate
@@ -104,6 +168,8 @@ for kernel, floor in floors.items():
     checked += 1
     if speedups[kernel] < floor:
         failures.append(f"{kernel}: measured {speedups[kernel]:.2f}x < floor {floor:.2f}x")
+if simd_skipped:
+    print(f"({simd_skipped} simd floors skipped: tier '{simd_tier}' has no SIMD datapath)")
 try:
     sv = json.load(open('BENCH_serve.json'))
 except (OSError, json.JSONDecodeError):
@@ -141,11 +207,20 @@ lines = ["", "Last `./ci.sh` run on this machine "
          f"({platform.machine()}, {platform.processor() or 'unknown cpu'}):", ""]
 try:
     hp = json.load(open('BENCH_hotpath.json'))
+    lines.append(f"SIMD dispatch tier: `{hp.get('simd', 'unknown')}`")
+    lines.append("")
     lines += ["| kernel | reference p50 | optimized p50 | speedup |",
               "|---|---|---|---|"]
     for s in hp.get('speedups', []):
         lines.append(f"| {s['kernel']} | {s['ref_p50_s']:.3e} s "
                      f"| {s['opt_p50_s']:.3e} s | {s['speedup']:.2f}x |")
+    simd = hp.get('simd_speedups', [])
+    if simd:
+        lines += ["", "| kernel (simd vs forced scalar) | scalar p50 | simd p50 | speedup |",
+                  "|---|---|---|---|"]
+        for s in simd:
+            lines.append(f"| {s['kernel']} | {s['scalar_p50_s']:.3e} s "
+                         f"| {s['simd_p50_s']:.3e} s | {s['speedup']:.2f}x |")
 except (OSError, json.JSONDecodeError):
     lines.append("_(BENCH_hotpath.json unavailable)_")
 try:

@@ -38,7 +38,13 @@ fn json_escape(s: &str) -> String {
 
 fn write_json(entries: &[Entry], speedups: &[(String, f64, f64)], prune: &[(String, PruneStats)]) {
     let path = std::env::var("NSCOG_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
-    let mut out = String::from("{\n  \"bench\": \"hotpath\",\n  \"entries\": [\n");
+    // which SIMD dispatch tier produced these numbers: ci.sh reruns this
+    // bench under NSCOG_SIMD=scalar and merges the two JSONs into
+    // simd-vs-scalar speedup entries keyed on this field
+    let mut out = format!(
+        "{{\n  \"bench\": \"hotpath\",\n  \"simd\": \"{}\",\n  \"entries\": [\n",
+        nscog::vsa::kernels::active_tier().name()
+    );
     for (i, e) in entries.iter().enumerate() {
         out.push_str(&format!(
             "    {{\"name\": \"{}\", \"p50_s\": {:e}, \"p95_s\": {:e}, \"min_s\": {:e}, \"samples\": {}}}{}\n",
@@ -89,6 +95,10 @@ fn main() {
     let mut entries: Vec<Entry> = Vec::new();
     let mut speedups: Vec<(String, f64, f64)> = Vec::new();
     let mut prune_stats: Vec<(String, PruneStats)> = Vec::new();
+    println!(
+        "simd dispatch tier: {} (NSCOG_SIMD overrides; ci.sh A/Bs scalar vs auto)",
+        nscog::vsa::kernels::active_tier().name()
+    );
 
     // --- L3 VSA substrate -------------------------------------------------
     let a = BinaryHV::random(&mut rng, d);
@@ -103,6 +113,24 @@ fn main() {
     let mut acc = a.clone();
     record(&mut entries, "vsa/binary_bind_assign 8192b (no alloc)", || {
         acc.bind_assign(black_box(&b));
+    });
+
+    // dispatched word kernels in isolation: same entry names under
+    // NSCOG_SIMD=scalar and auto runs, so ci.sh can ratio them into the
+    // simd-vs-scalar speedup table. Loop x16 so one sample is ~µs-scale.
+    let s_ham = record(&mut entries, "vsa/hamming_bulk 8192b x16", || {
+        for _ in 0..16 {
+            black_box(black_box(&a).hamming_bulk(black_box(&b)));
+        }
+    });
+    println!(
+        "    → {:.2} GB/s hamming kernel",
+        (16.0 * 2.0 * d as f64 / 8.0) / s_ham.p50 / 1e9
+    );
+    record(&mut entries, "vsa/dot_bulk 8192b x16", || {
+        for _ in 0..16 {
+            black_box(black_box(&a).dot_bulk(black_box(&b)));
+        }
     });
 
     // majority bundling: per-bit reference vs word-sliced CSA kernel

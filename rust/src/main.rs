@@ -47,8 +47,24 @@ fn main() {
 }
 
 fn info() {
+    use nscog::vsa::kernels;
     println!("nscog — neuro-symbolic workload characterization & VSA accelerator");
     println!("reproduction of Wan et al., 'Towards Efficient Neuro-Symbolic AI' (2024)\n");
+    let avail: Vec<&str> = kernels::available_tiers().iter().map(|t| t.name()).collect();
+    let avx512_note = if !kernels::avx512_popcnt_available() {
+        ""
+    } else if kernels::active_tier() == nscog::vsa::SimdTier::Avx2 {
+        "; avx512vpopcntdq detected, routed via avx2 kernels"
+    } else {
+        "; avx512vpopcntdq detected"
+    };
+    println!(
+        "simd: dispatch tier '{}' (available: {}{}) — override: NSCOG_SIMD=scalar|avx2|neon|auto",
+        kernels::active_tier().name(),
+        avail.join(", "),
+        avx512_note
+    );
+    println!();
     println!("subcommands:");
     println!("  figures               regenerate every paper table/figure");
     println!("  characterize [NAME]   characterization report (LNN/LTN/NVSA/NLM/VSAIT/ZeroC/PrAE)");
@@ -297,6 +313,10 @@ fn serve_bench(flags: &[String]) {
         e.shards,
         e.scan_threads,
         e.queue_capacity
+    );
+    println!(
+        "simd: dispatch tier '{}' (NSCOG_SIMD overrides)",
+        nscog::vsa::kernels::active_tier().name()
     );
     println!(
         "pruning: sketch {} bits; cache: {} (repeat fraction {:.2})",

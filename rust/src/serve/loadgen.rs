@@ -545,6 +545,12 @@ impl BenchReport {
         let f = &self.opts.fixture;
         let e = &self.opts.engine;
         let mut out = String::from("{\n  \"bench\": \"serve\",\n");
+        // which kernel code path produced these numbers (PERF.md
+        // attribution): the process-wide SIMD dispatch tier
+        out.push_str(&format!(
+            "  \"simd\": \"{}\",\n",
+            crate::vsa::kernels::active_tier().name()
+        ));
         out.push_str(&format!(
             "  \"config\": {{\"requests\": {}, \"clients\": {}, \"workers\": {}, \"shards\": {}, \"scan_threads\": {}, \"max_batch\": {}, \"max_delay_us\": {}, \"queue_capacity\": {}, \"items\": {}, \"dim\": {}, \"mix\": \"{}:{}:{}\", \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"cache_capacity\": {}, \"cache_shards\": {}, \"seed\": {}}},\n",
             f.requests,
@@ -764,6 +770,11 @@ mod tests {
         assert_eq!(
             parsed.get("bench").and_then(|b| b.as_str()),
             Some("serve")
+        );
+        assert_eq!(
+            parsed.get("simd").and_then(|s| s.as_str()),
+            Some(crate::vsa::kernels::active_tier().name()),
+            "serve JSON must attribute its numbers to the dispatch tier"
         );
         assert!(parsed.get("closed_loop").is_some());
         assert!(parsed.get("speedup_qps").is_some());

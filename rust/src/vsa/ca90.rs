@@ -8,50 +8,64 @@
 
 use super::hypervector::BinaryHV;
 
-/// One rule-90 step on a cyclic bit lattice packed into `u64` words.
+/// One rule-90 step on a cyclic bit lattice, written into a caller-held
+/// buffer (`src` and `dst` must be disjoint): the streaming core every
+/// allocating wrapper and the fused codebook/sketch builds share.
 ///
 /// `next = rotl1(state) XOR rotr1(state)` over the whole `dim`-bit ring.
-pub fn ca90_step(words: &[u64], dim: usize) -> Vec<u64> {
+pub fn ca90_step_into(src: &[u64], dst: &mut [u64], dim: usize) {
     debug_assert_eq!(dim % 64, 0);
-    debug_assert_eq!(words.len(), dim / 64);
-    let n = words.len();
-    let mut out = vec![0u64; n];
+    debug_assert_eq!(src.len(), dim / 64);
+    debug_assert_eq!(dst.len(), src.len());
+    let n = src.len();
     for i in 0..n {
         // left neighbor of bit b is bit b-1 (cyclic); rotating the whole
         // ring left by one gives the "right neighbor" view and vice versa.
-        let prev = words[(i + n - 1) % n];
-        let next = words[(i + 1) % n];
-        let left = (words[i] << 1) | (prev >> 63); // bit b-1 at position b
-        let right = (words[i] >> 1) | (next << 63); // bit b+1 at position b
-        out[i] = left ^ right;
+        let prev = src[(i + n - 1) % n];
+        let next = src[(i + 1) % n];
+        let left = (src[i] << 1) | (prev >> 63); // bit b-1 at position b
+        let right = (src[i] >> 1) | (next << 63); // bit b+1 at position b
+        dst[i] = left ^ right;
     }
+}
+
+/// One rule-90 step, allocating convenience over [`ca90_step_into`].
+pub fn ca90_step(words: &[u64], dim: usize) -> Vec<u64> {
+    let mut out = vec![0u64; words.len()];
+    ca90_step_into(words, &mut out, dim);
     out
 }
 
 /// Expand fold `k` of an item vector from its seed fold: `k` applications
-/// of rule-90.  Fold 0 is the seed itself.
+/// of rule-90.  Fold 0 is the seed itself. Uses one ping-pong scratch
+/// pair instead of allocating per generation.
 pub fn expand_fold(seed: &[u64], fold_bits: usize, k: usize) -> Vec<u64> {
     let mut state = seed.to_vec();
+    let mut next = vec![0u64; seed.len()];
     for _ in 0..k {
-        state = ca90_step(&state, fold_bits);
+        ca90_step_into(&state, &mut next, fold_bits);
+        std::mem::swap(&mut state, &mut next);
     }
     state
 }
 
 /// Materialize a full `dim`-bit hypervector from a `fold_bits`-bit seed by
 /// concatenating CA-90 generations (the paper's extended-dimension
-/// mechanism).
+/// mechanism). Generations are streamed fold-by-fold straight into the
+/// output words — each step reads the previous fold's slice and writes
+/// the next in place, with **zero** intermediate allocations (the fused
+/// codebook-build path; see [`crate::vsa::BinaryCodebook::from_seeds`]).
 pub fn expand_vector(seed: &[u64], fold_bits: usize, dim: usize) -> BinaryHV {
     assert_eq!(dim % fold_bits, 0);
     assert_eq!(fold_bits % 64, 0);
+    let fw = fold_bits / 64;
+    assert_eq!(seed.len(), fw);
     let n_folds = dim / fold_bits;
-    let mut words = Vec::with_capacity(dim / 64);
-    let mut state = seed.to_vec();
-    for k in 0..n_folds {
-        if k > 0 {
-            state = ca90_step(&state, fold_bits);
-        }
-        words.extend_from_slice(&state);
+    let mut words = vec![0u64; dim / 64];
+    words[..fw].copy_from_slice(seed);
+    for k in 1..n_folds {
+        let (prev, rest) = words.split_at_mut(k * fw);
+        ca90_step_into(&prev[(k - 1) * fw..], &mut rest[..fw], fold_bits);
     }
     BinaryHV::from_words(dim, words)
 }

@@ -2,7 +2,8 @@
 //! encoding, with optional CA-90 compressed storage.
 
 use super::ca90;
-use super::hypervector::{dot_acc, xor_hamming, BinaryHV, RealHV, FOLD_BITS, FOLD_WORDS};
+use super::hypervector::{BinaryHV, DotAcc, RealHV, FOLD_BITS, FOLD_WORDS};
+use super::kernels::{self, xor_hamming};
 use super::sketch::{
     default_sketch_bits, query_suffix_norms, real_upper_bound, BinarySketch, PruneStats,
     RealSketch, PRUNE_CHUNK_WORDS, REAL_PRUNE_CHUNK,
@@ -49,14 +50,24 @@ impl BinaryCodebook {
 
     /// Reconstruct a full codebook from per-item 512-bit seed folds via
     /// CA-90 expansion (the accelerator's compressed storage scheme).
+    ///
+    /// The expansion is fused: item rows are generated fold-by-fold in
+    /// place ([`ca90::expand_vector`] streams generations with no
+    /// per-fold scratch allocation) and the sketch prefilter sidecar is
+    /// built **directly from the seeds**
+    /// ([`BinarySketch::build_from_seeds`]) — the default sketch is one
+    /// fold, i.e. the seed itself — so construction never re-reads the
+    /// materialized rows. Identical to building the sketch from the
+    /// expanded items (fold 0 is copied verbatim either way;
+    /// property-tested).
     pub fn from_seeds(seeds: &[Vec<u64>], dim: usize) -> Self {
-        Self::assemble(
-            dim,
-            seeds
-                .iter()
-                .map(|s| ca90::expand_vector(s, FOLD_BITS, dim))
-                .collect(),
-        )
+        let sketch =
+            BinarySketch::build_from_seeds(seeds, FOLD_BITS, dim / 64, default_sketch_bits(dim));
+        let items = seeds
+            .iter()
+            .map(|s| ca90::expand_vector(s, FOLD_BITS, dim))
+            .collect();
+        BinaryCodebook { dim, items, sketch }
     }
 
     /// Build a codebook from pre-generated items, all of dimension `dim`
@@ -648,9 +659,11 @@ impl RealCodebook {
     /// Finish one item row from chunk `start_c` with `acc` already
     /// holding the exact partial dot, terminating when the
     /// Cauchy–Schwarz incremental bound proves the item cannot beat
-    /// `top`'s k-th entry. Accumulation continues strictly left-to-right
-    /// through [`dot_acc`], so a survivor's score is bit-identical to
-    /// [`RealHV::dot`].
+    /// `top`'s k-th entry. Accumulation continues the canonical
+    /// lane-strided schedule through [`DotAcc`] (the carried lanes and
+    /// phase resume exactly where the sketch prefix stopped), so a
+    /// survivor's score is bit-identical to [`RealHV::dot`] on every
+    /// SIMD tier.
     #[allow(clippy::too_many_arguments)]
     #[inline]
     fn scan_real_item_bounded(
@@ -660,7 +673,7 @@ impl RealCodebook {
         qnorms: &[f64],
         sk: &RealSketch,
         start_c: usize,
-        mut acc: f64,
+        mut acc: DotAcc,
         k: usize,
         top: &[(usize, f64)],
         stats: &mut PruneStats,
@@ -672,11 +685,11 @@ impl RealCodebook {
         while c < n_chunks {
             let lo = c * chunk;
             let hi = ((c + 1) * chunk).min(self.dim);
-            acc = dot_acc(acc, &v[lo..hi], &qs[lo..hi]);
+            acc.accumulate(&v[lo..hi], &qs[lo..hi]);
             stats.words_streamed += (hi - lo) as u64;
             c += 1;
             if c < n_chunks && top.len() == k {
-                let ub = real_upper_bound(acc, sk.rest_norm(i, c - 1) * qnorms[c - 1]);
+                let ub = real_upper_bound(acc.value(), sk.rest_norm(i, c - 1) * qnorms[c - 1]);
                 let (kj, ks) = top[k - 1];
                 if !(ub > ks || (ub == ks && i < kj)) {
                     stats.early_terminated += 1;
@@ -684,7 +697,7 @@ impl RealCodebook {
                 }
             }
         }
-        Some(acc)
+        Some(acc.value())
     }
 
     /// Bound-pruned top-`k`: bit-identical to [`Self::top_k`] while
@@ -696,7 +709,7 @@ impl RealCodebook {
         k: usize,
         stats: &mut PruneStats,
         qnorms: &mut Vec<f64>,
-        order: &mut Vec<(f64, f64, u32)>,
+        order: &mut Vec<(f64, DotAcc, u32)>,
     ) -> Vec<(usize, f64)> {
         assert_eq!(query.dim(), self.dim);
         let mut top: Vec<(usize, f64)> = Vec::with_capacity(k + 1);
@@ -712,8 +725,9 @@ impl RealCodebook {
             query_suffix_norms(qs, chunk, qnorms);
             order.clear();
             for i in 0..n {
-                let dp = dot_acc(0.0, sk.prefix_row(i), &qs[..chunk]);
-                let ub = real_upper_bound(dp, sk.rest_norm(i, 0) * qnorms[0]);
+                let mut dp = DotAcc::new();
+                dp.accumulate(sk.prefix_row(i), &qs[..chunk]);
+                let ub = real_upper_bound(dp.value(), sk.rest_norm(i, 0) * qnorms[0]);
                 order.push((ub, dp, i as u32));
             }
             stats.words_streamed += (n * chunk) as u64;
@@ -789,7 +803,7 @@ impl RealCodebook {
         query: &RealHV,
         stats: &mut PruneStats,
         qnorms: &mut Vec<f64>,
-        order: &mut Vec<(f64, f64, u32)>,
+        order: &mut Vec<(f64, DotAcc, u32)>,
     ) -> (usize, f64) {
         assert_eq!(query.dim(), self.dim);
         if self.items.is_empty() {
@@ -806,8 +820,9 @@ impl RealCodebook {
             query_suffix_norms(qs, chunk, qnorms);
             order.clear();
             for i in 0..n {
-                let dp = dot_acc(0.0, sk.prefix_row(i), &qs[..chunk]);
-                let ub = real_upper_bound(dp, sk.rest_norm(i, 0) * qnorms[0]);
+                let mut dp = DotAcc::new();
+                dp.accumulate(sk.prefix_row(i), &qs[..chunk]);
+                let ub = real_upper_bound(dp.value(), sk.rest_norm(i, 0) * qnorms[0]);
                 order.push((ub, dp, i as u32));
             }
             stats.words_streamed += (n * chunk) as u64;
@@ -1027,25 +1042,22 @@ impl RealCodebook {
             if w == 0.0 {
                 continue;
             }
-            for (acc, &x) in o.iter_mut().zip(item.as_slice()) {
-                *acc += w * x;
-            }
+            // element-wise accumulate through the dispatched SIMD kernel
+            // (bit-identical to the scalar loop on every tier)
+            kernels::axpy_f32(o, w, item.as_slice());
         }
         for v in o.iter_mut() {
             *v = if *v >= 0.0 { 1.0 } else { -1.0 };
         }
     }
 
-    /// Probability-weighted bundle: PMF-to-VSA transform (NVSA).
+    /// Probability-weighted bundle: PMF-to-VSA transform (NVSA), routed
+    /// through the dispatched `axpy` kernel.
     pub fn weighted_bundle(&self, pmf: &[f64]) -> RealHV {
         assert_eq!(pmf.len(), self.len());
         let mut out = RealHV::zeros(self.dim);
         for (w, item) in pmf.iter().zip(&self.items) {
-            let o = out.as_mut_slice();
-            let it = item.as_slice();
-            for i in 0..o.len() {
-                o[i] += (*w as f32) * it[i];
-            }
+            kernels::axpy_f32(out.as_mut_slice(), *w as f32, item.as_slice());
         }
         out
     }
@@ -1066,6 +1078,114 @@ impl RealCodebook {
             relu_normalize(scores);
         }
         out
+    }
+
+    /// ReLU-aware bound-ordered score pass for one query: entries whose
+    /// Cauchy–Schwarz upper bound proves a non-positive dot are written
+    /// as exactly the `0.0` the ReLU in [`relu_normalize`] would produce,
+    /// without streaming their rows; survivors carry the exact canonical
+    /// dot. Reuses the PR 3 sketch ordering with the threshold pinned at
+    /// zero (a sentinel top-1 entry `(0, 0.0)`), so the sorted tail is
+    /// rejected in O(1) the moment a bound drops to ≤ 0 and rows
+    /// early-terminate mid-row once `acc + ‖rest‖·‖rest_q‖ ≤ 0`.
+    fn scores_relu_pruned_with_bufs(
+        &self,
+        query: &RealHV,
+        stats: &mut PruneStats,
+        qnorms: &mut Vec<f64>,
+        order: &mut Vec<(f64, DotAcc, u32)>,
+        out: &mut Vec<f64>,
+    ) {
+        assert_eq!(query.dim(), self.dim);
+        let n = self.items.len();
+        let qs = query.as_slice();
+        out.clear();
+        out.resize(n, 0.0);
+        stats.items += n as u64;
+        stats.words_total += (n * self.dim) as u64;
+        if let Some(sk) = &self.sketch {
+            let chunk = sk.chunk();
+            query_suffix_norms(qs, chunk, qnorms);
+            order.clear();
+            for i in 0..n {
+                let mut dp = DotAcc::new();
+                dp.accumulate(sk.prefix_row(i), &qs[..chunk]);
+                let ub = real_upper_bound(dp.value(), sk.rest_norm(i, 0) * qnorms[0]);
+                order.push((ub, dp, i as u32));
+            }
+            stats.words_streamed += (n * chunk) as u64;
+            order.sort_unstable_by(|a, b| {
+                b.0.partial_cmp(&a.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.2.cmp(&b.2))
+            });
+            // the zero threshold as a top-1 sentinel: items survive the
+            // shared bound checks only while their bound stays > 0
+            let zero_top = [(0usize, 0.0f64)];
+            for pos in 0..order.len() {
+                let (ub, dp, iu) = order[pos];
+                let i = iu as usize;
+                if ub <= 0.0 {
+                    // sorted order: every later bound is ≤ ub ≤ 0 — the
+                    // whole tail ReLUs to zero mass untouched
+                    stats.sketch_rejected += (order.len() - pos) as u64;
+                    break;
+                }
+                if let Some(s) =
+                    self.scan_real_item_bounded(i, qs, qnorms, sk, 1, dp, 1, &zero_top, stats)
+                {
+                    out[i] = s;
+                }
+            }
+        } else {
+            for (i, it) in self.items.iter().enumerate() {
+                out[i] = it.dot(query);
+                stats.words_streamed += self.dim as u64;
+            }
+        }
+    }
+
+    /// [`Self::to_pmf_batch`] with ReLU-aware bound pruning: result `q`
+    /// equals `to_pmf(&queries[q])` (the only skipped entries are ones
+    /// the ReLU provably zeroes, so the normalization mass is untouched)
+    /// while streaming fewer item elements when queries anti-correlate
+    /// with items — the NVSA decode consumer that only needs the PMF's
+    /// positive head. Never streams more than the exhaustive scan.
+    pub fn to_pmf_batch_pruned_with(
+        &self,
+        queries: &[RealHV],
+        threads: usize,
+    ) -> (Vec<Vec<f64>>, PruneStats) {
+        for q in queries {
+            assert_eq!(q.dim(), self.dim);
+        }
+        let parts = parallel::map_ranges(queries.len(), threads, |r| {
+            let mut st = PruneStats::default();
+            let (mut qnorms, mut order) = (Vec::new(), Vec::new());
+            let out: Vec<Vec<f64>> = queries[r]
+                .iter()
+                .map(|q| {
+                    let mut scores = Vec::new();
+                    self.scores_relu_pruned_with_bufs(
+                        q,
+                        &mut st,
+                        &mut qnorms,
+                        &mut order,
+                        &mut scores,
+                    );
+                    relu_normalize(&mut scores);
+                    scores
+                })
+                .collect();
+            (out, st)
+        });
+        let mut stats = PruneStats::default();
+        let mut out = Vec::with_capacity(queries.len());
+        for (part, st) in parts {
+            out.extend(part);
+            stats.merge(&st);
+        }
+        (out, stats)
     }
 
     /// f32 storage bytes.
@@ -1432,6 +1552,71 @@ mod tests {
         for (q, query) in queries.iter().enumerate() {
             assert_eq!(batch[q], cb.to_pmf(query), "query {q}");
         }
+    }
+
+    #[test]
+    fn from_seeds_fused_sketch_equals_item_built_sketch() {
+        // the seed-built sidecar must be word-for-word the sidecar an
+        // item-prefix build would produce (fold 0 is the seed)
+        let mut rng = Rng::new(30);
+        let seeds: Vec<Vec<u64>> = (0..9)
+            .map(|_| (0..8).map(|_| rng.next_u64()).collect())
+            .collect();
+        let cb = BinaryCodebook::from_seeds(&seeds, 4096);
+        let rebuilt = BinaryCodebook::from_items(4096, cb.items().to_vec());
+        let (a, b) = (cb.sketch().unwrap(), rebuilt.sketch().unwrap());
+        assert_eq!(a.bits(), b.bits());
+        for i in 0..9 {
+            assert_eq!(a.row(i), b.row(i), "item {i}");
+        }
+        // pruned scans over the fused codebook stay bit-identical
+        let q = BinaryHV::random(&mut rng, 4096);
+        let mut stats = PruneStats::default();
+        assert_eq!(cb.top_k_pruned(&q, 3, &mut stats), cb.top_k(&q, 3));
+        // a dim short enough for the default sketch to be disabled
+        let cb512 = BinaryCodebook::from_seeds(&seeds, 512);
+        assert!(cb512.sketch().is_none());
+    }
+
+    #[test]
+    fn to_pmf_pruned_matches_exhaustive_and_prunes_anticorrelated() {
+        let mut rng = Rng::new(31);
+        let cb = RealCodebook::random_bipolar(&mut rng, 24, 2048);
+        assert!(cb.sketch().is_some());
+        // mix: random, member, and negated members (anti-correlated: the
+        // distribution where the ReLU bound actually pays)
+        let mut queries: Vec<RealHV> = vec![
+            RealHV::random_bipolar(&mut rng, 2048),
+            cb.item(3).clone(),
+        ];
+        for i in 0..6 {
+            let mut neg = cb.item(i * 4).clone();
+            for v in neg.as_mut_slice().iter_mut() {
+                *v = -*v;
+            }
+            queries.push(neg);
+        }
+        for threads in [1usize, 3] {
+            let (batch, stats) = cb.to_pmf_batch_pruned_with(&queries, threads);
+            for (q, query) in queries.iter().enumerate() {
+                assert_eq!(batch[q], cb.to_pmf(query), "threads={threads} q={q}");
+            }
+            assert_eq!(stats.items, queries.len() as u64 * 24);
+            assert!(
+                stats.words_streamed <= stats.words_total,
+                "relu-pruned scan streamed beyond exhaustive: {stats:?}"
+            );
+            assert!(
+                stats.early_terminated + stats.sketch_rejected > 0,
+                "negated-member queries must prune: {stats:?}"
+            );
+        }
+        // single-chunk rows fall back to the exhaustive-equivalent path
+        let small = RealCodebook::random_bipolar(&mut rng, 7, 256);
+        assert!(small.sketch().is_none());
+        let qs = vec![RealHV::random_bipolar(&mut rng, 256)];
+        let (batch, _) = small.to_pmf_batch_pruned_with(&qs, 1);
+        assert_eq!(batch[0], small.to_pmf(&qs[0]));
     }
 
     #[test]

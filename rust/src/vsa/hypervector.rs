@@ -1,6 +1,15 @@
 //! Hypervector types: bit-packed binary and real-valued (bipolar) vectors.
+//!
+//! Every word-level hot loop here (XOR bind, bulk popcount Hamming, the
+//! majority counter planes, permute's funnel shift, and the canonical f32
+//! dot accumulation) routes through the runtime-dispatched SIMD backend
+//! in [`super::kernels`], so a single dispatch decision accelerates every
+//! scan/sketch/serve layer built on top at bit-identical results.
 
+use super::kernels;
 use crate::util::Rng;
+
+pub use super::kernels::DotAcc;
 
 /// Fold width in bits — matches the accelerator's 512-bit global bus
 /// (Tab. VI, `W`). A `D`-dimensional binary vector is `D / FOLD_BITS`
@@ -90,25 +99,16 @@ impl BinaryHV {
 
     /// XOR binding (self-inverse): the accelerator's BIND unit.
     pub fn bind(&self, other: &BinaryHV) -> BinaryHV {
-        assert_eq!(self.dim, other.dim);
-        let words = self
-            .words
-            .iter()
-            .zip(&other.words)
-            .map(|(a, b)| a ^ b)
-            .collect();
-        BinaryHV {
-            dim: self.dim,
-            words,
-        }
+        let mut out = self.clone();
+        out.bind_assign(other);
+        out
     }
 
-    /// In-place XOR binding (hot-path variant, no allocation).
+    /// In-place XOR binding (hot-path variant, no allocation), routed
+    /// through the dispatched SIMD XOR kernel.
     pub fn bind_assign(&mut self, other: &BinaryHV) {
         assert_eq!(self.dim, other.dim);
-        for (a, b) in self.words.iter_mut().zip(&other.words) {
-            *a ^= *b;
-        }
+        kernels::xor_into(&mut self.words, &other.words);
     }
 
     /// Hamming distance (POPCNT of XOR) — per-word reference kernel.
@@ -121,14 +121,14 @@ impl BinaryHV {
             .sum()
     }
 
-    /// Hamming distance via Harley–Seal carry-save bulk popcount: 16 XOR
-    /// words fold through a CSA tree into one weighted `count_ones` call,
-    /// cutting per-word work ~3× versus [`Self::hamming`] when the popcnt
-    /// ISA extension is not compiled in (and still winning with it). The
-    /// batched codebook scans' inner kernel; always equal to `hamming`.
+    /// Hamming distance via the dispatched bulk-popcount kernel
+    /// ([`kernels::xor_hamming`]): Harley–Seal carry-save on the scalar
+    /// tier, nibble-LUT `vpshufb` popcount on AVX2, `vcnt` on NEON. The
+    /// batched codebook scans' inner kernel; always equal to `hamming`
+    /// (integer popcount partial sums are order-insensitive).
     pub fn hamming_bulk(&self, other: &BinaryHV) -> u32 {
         assert_eq!(self.dim, other.dim);
-        xor_hamming(&self.words, &other.words)
+        kernels::xor_hamming(&self.words, &other.words)
     }
 
     /// [`Self::dot`] computed with the bulk popcount kernel.
@@ -149,33 +149,34 @@ impl BinaryHV {
     }
 
     /// Cyclic permutation by `shift` bit positions (rho^shift).
+    ///
+    /// Decomposed into a word rotation (two contiguous copies) followed by
+    /// the dispatched cyclic funnel shift [`kernels::funnel_shl`], so the
+    /// bit half runs 4 words per SIMD op instead of the old scatter of
+    /// per-word `|=` pairs. Bit i of the input lands at bit
+    /// `(i + s) mod d` of the output, exactly as before.
     pub fn permute(&self, shift: i64) -> BinaryHV {
         let d = self.dim as i64;
         let s = ((shift % d) + d) % d;
         if s == 0 {
             return self.clone();
         }
-        let mut out = BinaryHV::zeros(self.dim);
-        // Bit i of input goes to bit (i + s) mod d of output.
         let word_shift = (s / 64) as usize;
         let bit_shift = (s % 64) as u32;
         let n = self.words.len();
-        for i in 0..n {
-            let lo = self.words[i];
-            let dst = (i + word_shift) % n;
-            if bit_shift == 0 {
-                out.words[dst] |= lo;
-            } else {
-                out.words[dst] |= lo << bit_shift;
-                out.words[(dst + 1) % n] |= lo >> (64 - bit_shift);
-            }
+        let mut out = BinaryHV::zeros(self.dim);
+        // word rotation: rot[j] = in[(j - word_shift) mod n]
+        out.words[word_shift..].copy_from_slice(&self.words[..n - word_shift]);
+        out.words[..word_shift].copy_from_slice(&self.words[n - word_shift..]);
+        if bit_shift != 0 {
+            kernels::funnel_shl(&mut out.words, bit_shift);
         }
         out
     }
 
-    /// Count of set bits.
+    /// Count of set bits (dispatched bulk popcount).
     pub fn popcount(&self) -> u32 {
-        self.words.iter().map(|w| w.count_ones()).sum()
+        kernels::popcount_words(&self.words)
     }
 
     /// Fraction of zero bits (sparsity in the characterization sense).
@@ -184,72 +185,19 @@ impl BinaryHV {
     }
 }
 
-/// Carry-save adder over three words: (sum, carry) bit-planes.
-#[inline]
-fn csa(a: u64, b: u64, c: u64) -> (u64, u64) {
-    let u = a ^ b;
-    (u ^ c, (a & b) | (u & c))
-}
-
-/// Harley–Seal bulk popcount of the XOR of two equal-length word slices:
-/// each 16-word chunk folds through a carry-save adder tree so only one
-/// `count_ones` (weight 16) is paid per chunk, with the running
-/// ones/twos/fours/eights planes and the tail counted once at the end.
-pub fn xor_hamming(a: &[u64], b: &[u64]) -> u32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let mut ones = 0u64;
-    let mut twos = 0u64;
-    let mut fours = 0u64;
-    let mut eights = 0u64;
-    let mut sixteens_pop = 0u32;
-    let chunks = n / 16;
-    for c in 0..chunks {
-        let i = c * 16;
-        let w = |k: usize| a[i + k] ^ b[i + k];
-        let (ones1, twos1) = csa(ones, w(0), w(1));
-        let (ones2, twos2) = csa(ones1, w(2), w(3));
-        let (twos3, fours1) = csa(twos, twos1, twos2);
-        let (ones3, twos4) = csa(ones2, w(4), w(5));
-        let (ones4, twos5) = csa(ones3, w(6), w(7));
-        let (twos6, fours2) = csa(twos3, twos4, twos5);
-        let (fours3, eights1) = csa(fours, fours1, fours2);
-        let (ones5, twos7) = csa(ones4, w(8), w(9));
-        let (ones6, twos8) = csa(ones5, w(10), w(11));
-        let (twos9, fours4) = csa(twos6, twos7, twos8);
-        let (ones7, twos10) = csa(ones6, w(12), w(13));
-        let (ones8, twos11) = csa(ones7, w(14), w(15));
-        let (twos12, fours5) = csa(twos9, twos10, twos11);
-        let (fours6, eights2) = csa(fours3, fours4, fours5);
-        let (eights3, sixteens) = csa(eights, eights1, eights2);
-        ones = ones8;
-        twos = twos12;
-        fours = fours6;
-        eights = eights3;
-        sixteens_pop += sixteens.count_ones();
-    }
-    let mut total = 16 * sixteens_pop
-        + 8 * eights.count_ones()
-        + 4 * fours.count_ones()
-        + 2 * twos.count_ones()
-        + ones.count_ones();
-    for k in chunks * 16..n {
-        total += (a[k] ^ b[k]).count_ones();
-    }
-    total
-}
-
 /// Majority-vote bundling of binary hypervectors. Ties (even counts) break
 /// via a deterministic tie-break vector derived from `tie_seed`.
 ///
-/// Word-parallel implementation: the 64 per-bit counters covering each
-/// `u64` word are held as bit-sliced counter planes updated with
-/// carry-save adders, so accumulating one input word costs
-/// O(log n) word ops for 64 lanes instead of 64 scalar bit probes, and
-/// the majority threshold is evaluated with a bit-sliced comparator.
-/// Tie columns consume the tie RNG in ascending bit order — exactly the
-/// order of the per-bit reference — so results are bit-identical to
-/// [`majority_ref`].
+/// Word-parallel implementation: the per-bit counters are held as
+/// bit-sliced counter planes in **plane-major** layout
+/// (`planes[k * n_words + w]` = bit `k` of the 64 counters covering word
+/// `w`), so accumulating one input vector is a short cascade of whole-row
+/// carry-save steps through the dispatched SIMD kernel
+/// ([`kernels::csa_step`], 4–8 words per op) that stops as soon as the
+/// carry row clears. The majority threshold is then evaluated with a
+/// row-parallel bit-sliced comparator. Tie columns consume the tie RNG in
+/// ascending word/bit order — exactly the order of the per-bit reference —
+/// so results are bit-identical to [`majority_ref`] on every tier.
 pub fn majority(vs: &[&BinaryHV], tie_seed: u64) -> BinaryHV {
     assert!(!vs.is_empty());
     let dim = vs[0].dim();
@@ -258,47 +206,50 @@ pub fn majority(vs: &[&BinaryHV], tie_seed: u64) -> BinaryHV {
     }
     let n = vs.len();
     let n_words = dim / 64;
-    // Counter planes, LSB-first, word-major: planes[w * p_bits + k] holds
-    // bit k of the 64 counters for word w. p_bits bits represent 0..=n.
+    // p_bits planes represent counts 0..=n.
     let p_bits = usize::BITS as usize - n.leading_zeros() as usize;
     let mut planes = vec![0u64; n_words * p_bits];
+    let mut carry = vec![0u64; n_words];
     for v in vs {
-        for (w, &x) in v.words().iter().enumerate() {
-            let cols = &mut planes[w * p_bits..(w + 1) * p_bits];
-            let mut carry = x;
-            for p in cols.iter_mut() {
-                let t = *p & carry;
-                *p ^= carry;
-                carry = t;
-                if carry == 0 {
-                    break;
-                }
+        carry.copy_from_slice(v.words());
+        let mut cleared = false;
+        for k in 0..p_bits {
+            let plane = &mut planes[k * n_words..(k + 1) * n_words];
+            if kernels::csa_step(plane, &mut carry) {
+                cleared = true;
+                break;
             }
-            debug_assert_eq!(carry, 0, "planes sized to hold counts up to n");
         }
+        debug_assert!(
+            cleared || carry.iter().all(|&c| c == 0),
+            "planes sized to hold counts up to n"
+        );
     }
     // Compare each sliced counter against floor(n/2): strictly greater →
     // bit set; equal (possible only for even n) → tie-break draw.
     let threshold = n / 2;
     let even = n % 2 == 0;
+    let mut gt = vec![0u64; n_words];
+    let mut eq = vec![!0u64; n_words];
+    for k in (0..p_bits).rev() {
+        let row = &planes[k * n_words..(k + 1) * n_words];
+        if (threshold >> k) & 1 == 1 {
+            for (e, &v) in eq.iter_mut().zip(row) {
+                *e &= v;
+            }
+        } else {
+            for ((g, e), &v) in gt.iter_mut().zip(eq.iter_mut()).zip(row) {
+                *g |= *e & v;
+                *e &= !v;
+            }
+        }
+    }
     let mut tie = Rng::new(tie_seed);
     let mut out = BinaryHV::zeros(dim);
     for (w, word) in out.words.iter_mut().enumerate() {
-        let cols = &planes[w * p_bits..(w + 1) * p_bits];
-        let mut gt = 0u64;
-        let mut eq = !0u64;
-        for k in (0..p_bits).rev() {
-            let v = cols[k];
-            if (threshold >> k) & 1 == 1 {
-                eq &= v;
-            } else {
-                gt |= eq & v;
-                eq &= !v;
-            }
-        }
-        let mut bits = gt;
+        let mut bits = gt[w];
         if even {
-            let mut m = eq;
+            let mut m = eq[w];
             while m != 0 {
                 let b = m.trailing_zeros();
                 if tie.next_u64() & 1 == 1 {
@@ -340,20 +291,6 @@ pub fn majority_ref(vs: &[&BinaryHV], tie_seed: u64) -> BinaryHV {
         out.set(i, bit);
     }
     out
-}
-
-/// Continue a strictly sequential left-to-right f64 dot-product
-/// accumulation over an f32 slice pair. `dot_acc(dot_acc(0.0, a0, b0),
-/// a1, b1)` equals `dot_acc(0.0, [a0‖a1], [b0‖b1])` bit-for-bit, which is
-/// what lets the bound-pruned codebook scans split a row into chunks (and
-/// resume after a sketch prefix) while reproducing [`RealHV::dot`]
-/// exactly.
-#[inline]
-pub fn dot_acc(acc: f64, a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter()
-        .zip(b)
-        .fold(acc, |s, (&x, &y)| s + (x as f64) * (y as f64))
 }
 
 /// Real-valued hypervector (f32 storage), the L1/L2 representation.
@@ -476,13 +413,16 @@ impl RealHV {
         }
     }
 
-    /// Dot product. Accumulates strictly left-to-right in f64 via
-    /// [`dot_acc`], the same accumulation the chunked pruned scans thread
-    /// through their partial sums — so a pruned scan's surviving score is
-    /// bit-identical to this reference by construction.
+    /// Dot product in the canonical lane-strided f64 order ([`DotAcc`],
+    /// 8 fixed lanes) — the same accumulation the chunked pruned scans
+    /// thread through their partial sums and every SIMD tier reproduces,
+    /// so a pruned scan's surviving score is bit-identical to this
+    /// reference by construction on any tier.
     pub fn dot(&self, other: &RealHV) -> f64 {
         assert_eq!(self.dim(), other.dim());
-        dot_acc(0.0, &self.data, &other.data)
+        let mut acc = DotAcc::new();
+        acc.accumulate(&self.data, &other.data);
+        acc.value()
     }
 
     /// Cosine similarity.
@@ -655,22 +595,23 @@ mod tests {
 
     #[test]
     fn dot_acc_chunked_is_bit_identical() {
-        // Splitting the accumulation at arbitrary chunk boundaries must
-        // reproduce the one-pass dot exactly — the invariant the pruned
-        // scans' resume-after-sketch path relies on.
+        // Splitting the accumulation at arbitrary chunk boundaries —
+        // including chunks that are not multiples of the 8-lane width —
+        // must reproduce the one-pass dot exactly: the invariant the
+        // pruned scans' resume-after-sketch path relies on.
         let mut rng = Rng::new(11);
         let x = RealHV::random_hrr(&mut rng, 1100);
         let y = RealHV::random_hrr(&mut rng, 1100);
         let full = x.dot(&y);
-        for chunk in [1usize, 7, 64, 512, 1100, 4096] {
-            let mut acc = 0.0;
+        for chunk in [1usize, 7, 13, 64, 512, 1100, 4096] {
+            let mut acc = DotAcc::new();
             let mut i = 0;
             while i < 1100 {
                 let e = (i + chunk).min(1100);
-                acc = dot_acc(acc, &x.as_slice()[i..e], &y.as_slice()[i..e]);
+                acc.accumulate(&x.as_slice()[i..e], &y.as_slice()[i..e]);
                 i = e;
             }
-            assert_eq!(acc.to_bits(), full.to_bits(), "chunk {chunk}");
+            assert_eq!(acc.value().to_bits(), full.to_bits(), "chunk {chunk}");
         }
     }
 

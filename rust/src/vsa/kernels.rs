@@ -1,0 +1,1051 @@
+//! Runtime-dispatched SIMD word kernels — the one layer every scan,
+//! sketch pass, bundle, and projection above it funnels into.
+//!
+//! The paper's profiling conclusion (Sec. V–VI) is that vector-symbolic
+//! workloads are memory-bound bitwise/word-parallel loops that
+//! off-the-shelf hardware never exploits; CogSys (PAPERS.md) shows the
+//! win comes from wide bitwise datapaths over hypervector words. PRs 1–3
+//! funneled every hot path into a handful of scalar `u64`/f32 word loops;
+//! this module gives those loops a wide datapath:
+//!
+//! - **AVX2** (x86_64, `std::arch` intrinsics): 256-bit XOR/AND/OR, the
+//!   Muła nibble-LUT `vpshufb` popcount, 4×f64 lane accumulation;
+//! - **NEON** (aarch64): 128-bit bitops, `vcnt`-based popcount, 2×f64
+//!   lanes;
+//! - **scalar**: the retained PR 1 kernels (Harley–Seal carry-save bulk
+//!   popcount and chunked-unrolled loops LLVM can autovectorize) — the
+//!   reference every other tier is property-tested against.
+//!
+//! The tier is selected **once per process** (CPUID /
+//! `is_aarch64_feature_detected`, cached in a `OnceLock`) and overridable
+//! with `NSCOG_SIMD=scalar|avx2|neon|auto` for A/B benching; `ci.sh` runs
+//! the hot-path bench under `scalar` and `auto` and gates the ratio.
+//! Hosts with AVX-512-VPOPCNTDQ are detected and reported
+//! ([`avx512_popcnt_available`]) but routed through the AVX2 kernels: the
+//! `vpopcntdq` intrinsics only recently stabilized in `std::arch` and the
+//! repo pins no minimum toolchain, so they stay out until the floor moves.
+//!
+//! # Exactness contracts
+//!
+//! Binary kernels are **bit-identical** across tiers by construction:
+//! XOR/AND/OR are lane-wise and popcount partial sums are
+//! order-insensitive integers.
+//!
+//! f32 dot products are **exactly equal** across tiers because the
+//! canonical summation order is defined here once, as a fixed-width
+//! lane-strided accumulation ([`DotAcc`], [`DOT_LANES`] = 8 f64 lanes):
+//! element `p` of a row always lands in lane `p % 8`, lanes accumulate
+//! sequentially in f64 with separate (unfused) mul/add roundings, and
+//! [`DotAcc::value`] reduces lanes left-to-right. Every tier — and every
+//! chunk split the bound-pruned scans make — reproduces that exact
+//! schedule, so SIMD vs scalar vs resumed-mid-row results match
+//! bit-for-bit (property-tested across dims that are not lane multiples).
+//! `axpy` is element-wise (no reduction), hence trivially bit-identical.
+
+use std::sync::OnceLock;
+
+/// Number of independent f64 accumulation lanes in the canonical dot
+/// product order — fixed across tiers (AVX2 uses two 4-lane registers,
+/// NEON four 2-lane registers, scalar an unrolled 8-array).
+pub const DOT_LANES: usize = 8;
+
+/// A SIMD dispatch tier. `Scalar` is always supported and is the
+/// reference implementation for the equivalence property tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdTier {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl SimdTier {
+    /// Stable name used by `NSCOG_SIMD`, `nscog info`, and the bench
+    /// JSONs' `"simd"` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Neon => "neon",
+        }
+    }
+
+    /// Whether this host can execute the tier.
+    pub fn is_supported(self) -> bool {
+        match self {
+            SimdTier::Scalar => true,
+            SimdTier::Avx2 => avx2_supported(),
+            SimdTier::Neon => neon_supported(),
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_supported() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_supported() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_supported() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_supported() -> bool {
+    false
+}
+
+/// Whether the host additionally advertises AVX-512-VPOPCNTDQ (reported
+/// by `nscog info`; see the module docs for why it routes through AVX2).
+pub fn avx512_popcnt_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("avx512vpopcntdq")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Tiers this host can run, best-first (always ends with `Scalar`).
+pub fn available_tiers() -> Vec<SimdTier> {
+    let mut out = Vec::with_capacity(2);
+    if avx2_supported() {
+        out.push(SimdTier::Avx2);
+    }
+    if neon_supported() {
+        out.push(SimdTier::Neon);
+    }
+    out.push(SimdTier::Scalar);
+    out
+}
+
+/// Parse an `NSCOG_SIMD` value; `None` means "auto" (including unknown
+/// strings, so a typo degrades to the best tier rather than a crash).
+pub fn parse_tier(s: &str) -> Option<SimdTier> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "scalar" => Some(SimdTier::Scalar),
+        "avx2" => Some(SimdTier::Avx2),
+        "neon" => Some(SimdTier::Neon),
+        _ => None,
+    }
+}
+
+/// Resolve a requested tier against host support: an explicit request for
+/// an unsupported tier falls back to `Scalar` (so `NSCOG_SIMD=avx2` on a
+/// non-AVX2 host A/B-benches the scalar path instead of faulting);
+/// `None`/auto picks the best supported tier.
+fn resolve_tier(request: Option<SimdTier>) -> SimdTier {
+    match request {
+        Some(t) if t.is_supported() => t,
+        Some(_) => SimdTier::Scalar,
+        None => *available_tiers().first().unwrap_or(&SimdTier::Scalar),
+    }
+}
+
+static TIER: OnceLock<SimdTier> = OnceLock::new();
+
+/// The tier every dispatched kernel in this process routes through.
+/// Selected once: `NSCOG_SIMD` override (clamped to host support), else
+/// the best feature-detected tier. Reading the cached value is one atomic
+/// load and never allocates (the one-time selection itself may read the
+/// environment; it runs on the first kernel call).
+pub fn active_tier() -> SimdTier {
+    *TIER.get_or_init(|| {
+        resolve_tier(std::env::var("NSCOG_SIMD").ok().as_deref().and_then(parse_tier))
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Scalar tier: the reference kernels (PR 1 Harley–Seal popcount plus
+// chunked loops shaped so LLVM's autovectorizer can widen them).
+// ---------------------------------------------------------------------------
+
+mod scalar {
+    use super::DOT_LANES;
+
+    /// Carry-save adder over three words: (sum, carry) bit-planes.
+    #[inline]
+    fn csa(a: u64, b: u64, c: u64) -> (u64, u64) {
+        let u = a ^ b;
+        (u ^ c, (a & b) | (u & c))
+    }
+
+    /// Harley–Seal bulk popcount of the XOR of two equal-length word
+    /// slices: each 16-word chunk folds through a carry-save adder tree so
+    /// only one `count_ones` (weight 16) is paid per chunk, with the
+    /// running ones/twos/fours/eights planes and the tail counted once at
+    /// the end.
+    pub fn xor_hamming(a: &[u64], b: &[u64]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut ones = 0u64;
+        let mut twos = 0u64;
+        let mut fours = 0u64;
+        let mut eights = 0u64;
+        let mut sixteens_pop = 0u32;
+        let chunks = n / 16;
+        for c in 0..chunks {
+            let i = c * 16;
+            let w = |k: usize| a[i + k] ^ b[i + k];
+            let (ones1, twos1) = csa(ones, w(0), w(1));
+            let (ones2, twos2) = csa(ones1, w(2), w(3));
+            let (twos3, fours1) = csa(twos, twos1, twos2);
+            let (ones3, twos4) = csa(ones2, w(4), w(5));
+            let (ones4, twos5) = csa(ones3, w(6), w(7));
+            let (twos6, fours2) = csa(twos3, twos4, twos5);
+            let (fours3, eights1) = csa(fours, fours1, fours2);
+            let (ones5, twos7) = csa(ones4, w(8), w(9));
+            let (ones6, twos8) = csa(ones5, w(10), w(11));
+            let (twos9, fours4) = csa(twos6, twos7, twos8);
+            let (ones7, twos10) = csa(ones6, w(12), w(13));
+            let (ones8, twos11) = csa(ones7, w(14), w(15));
+            let (twos12, fours5) = csa(twos9, twos10, twos11);
+            let (fours6, eights2) = csa(fours3, fours4, fours5);
+            let (eights3, sixteens) = csa(eights, eights1, eights2);
+            ones = ones8;
+            twos = twos12;
+            fours = fours6;
+            eights = eights3;
+            sixteens_pop += sixteens.count_ones();
+        }
+        let mut total = 16 * sixteens_pop
+            + 8 * eights.count_ones()
+            + 4 * fours.count_ones()
+            + 2 * twos.count_ones()
+            + ones.count_ones();
+        for k in chunks * 16..n {
+            total += (a[k] ^ b[k]).count_ones();
+        }
+        total
+    }
+
+    pub fn popcount(a: &[u64]) -> u32 {
+        a.iter().map(|w| w.count_ones()).sum()
+    }
+
+    pub fn xor_into(dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d ^= *s;
+        }
+    }
+
+    /// One carry-save counter-plane step across a whole word row:
+    /// `(plane, carry) ← (plane ^ carry, plane & carry)`. Returns `true`
+    /// when the outgoing carry is all-zero (the caller's early exit).
+    pub fn csa_step(plane: &mut [u64], carry: &mut [u64]) -> bool {
+        debug_assert_eq!(plane.len(), carry.len());
+        let mut any = 0u64;
+        for (p, c) in plane.iter_mut().zip(carry.iter_mut()) {
+            let t = *p & *c;
+            *p ^= *c;
+            *c = t;
+            any |= t;
+        }
+        any == 0
+    }
+
+    /// In-place cyclic funnel shift left by `b` bits (1..=63) over a word
+    /// row that has already been word-rotated:
+    /// `w[j] ← (w[j] << b) | (w[j-1 mod n] >> (64-b))`, evaluated against
+    /// the pre-call values (backward pass, wrap via the saved last word).
+    pub fn funnel_shl(words: &mut [u64], b: u32) {
+        debug_assert!((1..=63).contains(&b));
+        let n = words.len();
+        if n == 0 {
+            return;
+        }
+        let last = words[n - 1];
+        for j in (1..n).rev() {
+            words[j] = (words[j] << b) | (words[j - 1] >> (64 - b));
+        }
+        words[0] = (words[0] << b) | (last >> (64 - b));
+    }
+
+    pub fn axpy_f32(out: &mut [f32], w: f32, x: &[f32]) {
+        debug_assert_eq!(out.len(), x.len());
+        for (o, &v) in out.iter_mut().zip(x) {
+            *o += w * v;
+        }
+    }
+
+    /// Canonical lane-strided accumulation over a whole number of
+    /// [`DOT_LANES`]-element groups (the caller peels to a lane boundary
+    /// and handles the tail): element `j` of each group lands in lane `j`.
+    pub fn dot_lanes(lanes: &mut [f64; DOT_LANES], a: &[f32], b: &[f32]) {
+        debug_assert_eq!(a.len(), b.len());
+        debug_assert_eq!(a.len() % DOT_LANES, 0);
+        for (ca, cb) in a.chunks_exact(DOT_LANES).zip(b.chunks_exact(DOT_LANES)) {
+            for j in 0..DOT_LANES {
+                lanes[j] += (ca[j] as f64) * (cb[j] as f64);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 tier (x86_64).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::DOT_LANES;
+    use std::arch::x86_64::*;
+
+    /// Muła nibble-LUT popcount of one 256-bit lane: per-byte counts via
+    /// two `vpshufb` table lookups, summed into 4×u64 by `vpsadbw`.
+    /// (`target_feature` carried so the by-value `__m256i` ABI is sound.)
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt256(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi64(acc: __m256i) -> u32 {
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_hamming(a: &[u64], b: &[u64]) -> u32 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_si256();
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(a.as_ptr().add(c * 4) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(c * 4) as *const __m256i);
+            acc = _mm256_add_epi64(acc, popcnt256(_mm256_xor_si256(va, vb)));
+        }
+        let mut total = hsum_epi64(acc);
+        for k in chunks * 4..n {
+            total += (a[k] ^ b[k]).count_ones();
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn popcount(a: &[u64]) -> u32 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_si256();
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(a.as_ptr().add(c * 4) as *const __m256i);
+            acc = _mm256_add_epi64(acc, popcnt256(va));
+        }
+        let mut total = hsum_epi64(acc);
+        for k in chunks * 4..n {
+            total += a[k].count_ones();
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_into(dst: &mut [u64], src: &[u64]) {
+        let n = dst.len();
+        let chunks = n / 4;
+        for c in 0..chunks {
+            let pd = dst.as_mut_ptr().add(c * 4);
+            let v = _mm256_xor_si256(
+                _mm256_loadu_si256(pd as *const __m256i),
+                _mm256_loadu_si256(src.as_ptr().add(c * 4) as *const __m256i),
+            );
+            _mm256_storeu_si256(pd as *mut __m256i, v);
+        }
+        for k in chunks * 4..n {
+            dst[k] ^= src[k];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn csa_step(plane: &mut [u64], carry: &mut [u64]) -> bool {
+        let n = plane.len();
+        let chunks = n / 4;
+        let mut anyv = _mm256_setzero_si256();
+        for c in 0..chunks {
+            let pp = plane.as_mut_ptr().add(c * 4);
+            let pc = carry.as_mut_ptr().add(c * 4);
+            let vp = _mm256_loadu_si256(pp as *const __m256i);
+            let vc = _mm256_loadu_si256(pc as *const __m256i);
+            let t = _mm256_and_si256(vp, vc);
+            _mm256_storeu_si256(pp as *mut __m256i, _mm256_xor_si256(vp, vc));
+            _mm256_storeu_si256(pc as *mut __m256i, t);
+            anyv = _mm256_or_si256(anyv, t);
+        }
+        let mut tail_any = 0u64;
+        for k in chunks * 4..n {
+            let t = plane[k] & carry[k];
+            plane[k] ^= carry[k];
+            carry[k] = t;
+            tail_any |= t;
+        }
+        _mm256_testz_si256(anyv, anyv) == 1 && tail_any == 0
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn funnel_shl(words: &mut [u64], b: u32) {
+        let n = words.len();
+        if n == 0 {
+            return;
+        }
+        let last = words[n - 1];
+        let vb = _mm_cvtsi32_si128(b as i32);
+        let vrb = _mm_cvtsi32_si128(64 - b as i32);
+        let p = words.as_mut_ptr();
+        // Backward over 4-word blocks: block [j-4, j) reads its own old
+        // values plus [j-5, j-1), all still unmodified when descending.
+        let mut j = n;
+        while j >= 5 {
+            let cur = _mm256_loadu_si256(p.add(j - 4) as *const __m256i);
+            let prev = _mm256_loadu_si256(p.add(j - 5) as *const __m256i);
+            let v = _mm256_or_si256(_mm256_sll_epi64(cur, vb), _mm256_srl_epi64(prev, vrb));
+            _mm256_storeu_si256(p.add(j - 4) as *mut __m256i, v);
+            j -= 4;
+        }
+        for m in (1..j).rev() {
+            words[m] = (words[m] << b) | (words[m - 1] >> (64 - b));
+        }
+        words[0] = (words[0] << b) | (last >> (64 - b));
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f32(out: &mut [f32], w: f32, x: &[f32]) {
+        let n = out.len();
+        let chunks = n / 8;
+        let vw = _mm256_set1_ps(w);
+        for c in 0..chunks {
+            let po = out.as_mut_ptr().add(c * 8);
+            let vx = _mm256_loadu_ps(x.as_ptr().add(c * 8));
+            let vo = _mm256_loadu_ps(po);
+            // mul then add (no FMA): matches the scalar tier's two
+            // correctly-rounded f32 operations bit-for-bit
+            _mm256_storeu_ps(po, _mm256_add_ps(vo, _mm256_mul_ps(vw, vx)));
+        }
+        for k in chunks * 8..n {
+            out[k] += w * x[k];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_lanes(lanes: &mut [f64; DOT_LANES], a: &[f32], b: &[f32]) {
+        // caller guarantees a.len() == b.len() and a multiple of 8
+        let n = a.len();
+        let mut acc_lo = _mm256_loadu_pd(lanes.as_ptr());
+        let mut acc_hi = _mm256_loadu_pd(lanes.as_ptr().add(4));
+        let mut i = 0;
+        while i < n {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            let a_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(va));
+            let a_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(va));
+            let b_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(vb));
+            let b_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(vb));
+            // mul then add in f64 per lane — the canonical rounding schedule
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(a_lo, b_lo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(a_hi, b_hi));
+            i += 8;
+        }
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON tier (aarch64).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::DOT_LANES;
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn xor_hamming(a: &[u64], b: &[u64]) -> u32 {
+        let n = a.len();
+        let chunks = n / 2;
+        let mut total = 0u32;
+        for c in 0..chunks {
+            let va = vld1q_u64(a.as_ptr().add(c * 2));
+            let vb = vld1q_u64(b.as_ptr().add(c * 2));
+            let cnt = vcntq_u8(vreinterpretq_u8_u64(veorq_u64(va, vb)));
+            total += vaddlvq_u8(cnt) as u32;
+        }
+        for k in chunks * 2..n {
+            total += (a[k] ^ b[k]).count_ones();
+        }
+        total
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn popcount(a: &[u64]) -> u32 {
+        let n = a.len();
+        let chunks = n / 2;
+        let mut total = 0u32;
+        for c in 0..chunks {
+            let va = vld1q_u64(a.as_ptr().add(c * 2));
+            total += vaddlvq_u8(vcntq_u8(vreinterpretq_u8_u64(va))) as u32;
+        }
+        for k in chunks * 2..n {
+            total += a[k].count_ones();
+        }
+        total
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn xor_into(dst: &mut [u64], src: &[u64]) {
+        let n = dst.len();
+        let chunks = n / 2;
+        for c in 0..chunks {
+            let pd = dst.as_mut_ptr().add(c * 2);
+            let v = veorq_u64(vld1q_u64(pd), vld1q_u64(src.as_ptr().add(c * 2)));
+            vst1q_u64(pd, v);
+        }
+        for k in chunks * 2..n {
+            dst[k] ^= src[k];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn csa_step(plane: &mut [u64], carry: &mut [u64]) -> bool {
+        let n = plane.len();
+        let chunks = n / 2;
+        let mut anyv = vdupq_n_u64(0);
+        for c in 0..chunks {
+            let pp = plane.as_mut_ptr().add(c * 2);
+            let pc = carry.as_mut_ptr().add(c * 2);
+            let vp = vld1q_u64(pp);
+            let vc = vld1q_u64(pc);
+            let t = vandq_u64(vp, vc);
+            vst1q_u64(pp, veorq_u64(vp, vc));
+            vst1q_u64(pc, t);
+            anyv = vorrq_u64(anyv, t);
+        }
+        let mut tail_any = 0u64;
+        for k in chunks * 2..n {
+            let t = plane[k] & carry[k];
+            plane[k] ^= carry[k];
+            carry[k] = t;
+            tail_any |= t;
+        }
+        vmaxvq_u32(vreinterpretq_u32_u64(anyv)) == 0 && tail_any == 0
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn funnel_shl(words: &mut [u64], b: u32) {
+        let n = words.len();
+        if n == 0 {
+            return;
+        }
+        let last = words[n - 1];
+        let vl = vdupq_n_s64(b as i64);
+        let vr = vdupq_n_s64(-((64 - b) as i64)); // negative count = shift right
+        let p = words.as_mut_ptr();
+        let mut j = n;
+        while j >= 3 {
+            let cur = vld1q_u64(p.add(j - 2) as *const u64);
+            let prev = vld1q_u64(p.add(j - 3) as *const u64);
+            let v = vorrq_u64(vshlq_u64(cur, vl), vshlq_u64(prev, vr));
+            vst1q_u64(p.add(j - 2), v);
+            j -= 2;
+        }
+        for m in (1..j).rev() {
+            words[m] = (words[m] << b) | (words[m - 1] >> (64 - b));
+        }
+        words[0] = (words[0] << b) | (last >> (64 - b));
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_f32(out: &mut [f32], w: f32, x: &[f32]) {
+        let n = out.len();
+        let chunks = n / 4;
+        for c in 0..chunks {
+            let po = out.as_mut_ptr().add(c * 4);
+            let vx = vld1q_f32(x.as_ptr().add(c * 4));
+            let vo = vld1q_f32(po as *const f32);
+            vst1q_f32(po, vaddq_f32(vo, vmulq_n_f32(vx, w)));
+        }
+        for k in chunks * 4..n {
+            out[k] += w * x[k];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_lanes(lanes: &mut [f64; DOT_LANES], a: &[f32], b: &[f32]) {
+        let n = a.len();
+        let mut acc0 = vld1q_f64(lanes.as_ptr());
+        let mut acc1 = vld1q_f64(lanes.as_ptr().add(2));
+        let mut acc2 = vld1q_f64(lanes.as_ptr().add(4));
+        let mut acc3 = vld1q_f64(lanes.as_ptr().add(6));
+        let mut i = 0;
+        while i < n {
+            let a01 = vld1q_f32(a.as_ptr().add(i));
+            let a23 = vld1q_f32(a.as_ptr().add(i + 4));
+            let b01 = vld1q_f32(b.as_ptr().add(i));
+            let b23 = vld1q_f32(b.as_ptr().add(i + 4));
+            // mul then add (no fused multiply-add): canonical roundings
+            acc0 = vaddq_f64(
+                acc0,
+                vmulq_f64(vcvt_f64_f32(vget_low_f32(a01)), vcvt_f64_f32(vget_low_f32(b01))),
+            );
+            acc1 = vaddq_f64(
+                acc1,
+                vmulq_f64(vcvt_f64_f32(vget_high_f32(a01)), vcvt_f64_f32(vget_high_f32(b01))),
+            );
+            acc2 = vaddq_f64(
+                acc2,
+                vmulq_f64(vcvt_f64_f32(vget_low_f32(a23)), vcvt_f64_f32(vget_low_f32(b23))),
+            );
+            acc3 = vaddq_f64(
+                acc3,
+                vmulq_f64(vcvt_f64_f32(vget_high_f32(a23)), vcvt_f64_f32(vget_high_f32(b23))),
+            );
+            i += 8;
+        }
+        vst1q_f64(lanes.as_mut_ptr(), acc0);
+        vst1q_f64(lanes.as_mut_ptr().add(2), acc1);
+        vst1q_f64(lanes.as_mut_ptr().add(4), acc2);
+        vst1q_f64(lanes.as_mut_ptr().add(6), acc3);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched entry points. The plain functions route through the cached
+// process tier (guaranteed supported by construction); the `_tier`
+// variants take an explicit tier for A/B benches and the equivalence
+// property tests, falling back to scalar when the tier is not supported
+// on this host.
+// ---------------------------------------------------------------------------
+
+macro_rules! dispatch {
+    ($tier:expr, $scalar:expr, $avx2:expr, $neon:expr) => {
+        match $tier {
+            #[cfg(target_arch = "x86_64")]
+            SimdTier::Avx2 => unsafe { $avx2 },
+            #[cfg(target_arch = "aarch64")]
+            SimdTier::Neon => unsafe { $neon },
+            #[allow(unreachable_patterns)]
+            _ => $scalar,
+        }
+    };
+}
+
+/// Popcount of `a XOR b` — the Hamming-distance word kernel behind every
+/// binary scan, sketch prefix pass, and incremental-bound chunk.
+pub fn xor_hamming(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    dispatch!(
+        active_tier(),
+        scalar::xor_hamming(a, b),
+        x86::xor_hamming(a, b),
+        neon::xor_hamming(a, b)
+    )
+}
+
+/// [`xor_hamming`] forced onto one tier (tests / A-B benches).
+pub fn xor_hamming_tier(t: SimdTier, a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let t = if t.is_supported() { t } else { SimdTier::Scalar };
+    dispatch!(
+        t,
+        scalar::xor_hamming(a, b),
+        x86::xor_hamming(a, b),
+        neon::xor_hamming(a, b)
+    )
+}
+
+/// Popcount of a word slice (`BinaryHV::popcount`).
+pub fn popcount_words(a: &[u64]) -> u32 {
+    dispatch!(
+        active_tier(),
+        scalar::popcount(a),
+        x86::popcount(a),
+        neon::popcount(a)
+    )
+}
+
+/// [`popcount_words`] forced onto one tier.
+pub fn popcount_words_tier(t: SimdTier, a: &[u64]) -> u32 {
+    let t = if t.is_supported() { t } else { SimdTier::Scalar };
+    dispatch!(
+        t,
+        scalar::popcount(a),
+        x86::popcount(a),
+        neon::popcount(a)
+    )
+}
+
+/// `dst ^= src` — the XOR BIND unit.
+pub fn xor_into(dst: &mut [u64], src: &[u64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    dispatch!(
+        active_tier(),
+        scalar::xor_into(dst, src),
+        x86::xor_into(dst, src),
+        neon::xor_into(dst, src)
+    )
+}
+
+/// [`xor_into`] forced onto one tier.
+pub fn xor_into_tier(t: SimdTier, dst: &mut [u64], src: &[u64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let t = if t.is_supported() { t } else { SimdTier::Scalar };
+    dispatch!(
+        t,
+        scalar::xor_into(dst, src),
+        x86::xor_into(dst, src),
+        neon::xor_into(dst, src)
+    )
+}
+
+/// One bit-sliced counter-plane update across a word row (the `majority`
+/// inner loop): `(plane, carry) ← (plane ^ carry, plane & carry)`.
+/// Returns `true` when the outgoing carry is all-zero, letting the caller
+/// stop propagating into higher planes.
+pub fn csa_step(plane: &mut [u64], carry: &mut [u64]) -> bool {
+    debug_assert_eq!(plane.len(), carry.len());
+    dispatch!(
+        active_tier(),
+        scalar::csa_step(plane, carry),
+        x86::csa_step(plane, carry),
+        neon::csa_step(plane, carry)
+    )
+}
+
+/// [`csa_step`] forced onto one tier.
+pub fn csa_step_tier(t: SimdTier, plane: &mut [u64], carry: &mut [u64]) -> bool {
+    debug_assert_eq!(plane.len(), carry.len());
+    let t = if t.is_supported() { t } else { SimdTier::Scalar };
+    dispatch!(
+        t,
+        scalar::csa_step(plane, carry),
+        x86::csa_step(plane, carry),
+        neon::csa_step(plane, carry)
+    )
+}
+
+/// In-place cyclic funnel shift left by `b` bits (1..=63) — the bit half
+/// of `BinaryHV::permute` after its word rotation:
+/// `w[j] ← (w[j] << b) | (w[j-1 mod n] >> (64-b))` against pre-call
+/// values.
+pub fn funnel_shl(words: &mut [u64], b: u32) {
+    debug_assert!((1..=63).contains(&b));
+    dispatch!(
+        active_tier(),
+        scalar::funnel_shl(words, b),
+        x86::funnel_shl(words, b),
+        neon::funnel_shl(words, b)
+    )
+}
+
+/// [`funnel_shl`] forced onto one tier.
+pub fn funnel_shl_tier(t: SimdTier, words: &mut [u64], b: u32) {
+    debug_assert!((1..=63).contains(&b));
+    let t = if t.is_supported() { t } else { SimdTier::Scalar };
+    dispatch!(
+        t,
+        scalar::funnel_shl(words, b),
+        x86::funnel_shl(words, b),
+        neon::funnel_shl(words, b)
+    )
+}
+
+/// `out[i] += w * x[i]` — the f32 projection/bundle kernel
+/// (`project_signed_into`, `weighted_bundle`, `ops::weighted_sum`).
+/// Element-wise, so bit-identical across tiers for free.
+pub fn axpy_f32(out: &mut [f32], w: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    dispatch!(
+        active_tier(),
+        scalar::axpy_f32(out, w, x),
+        x86::axpy_f32(out, w, x),
+        neon::axpy_f32(out, w, x)
+    )
+}
+
+/// [`axpy_f32`] forced onto one tier.
+pub fn axpy_f32_tier(t: SimdTier, out: &mut [f32], w: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let t = if t.is_supported() { t } else { SimdTier::Scalar };
+    dispatch!(
+        t,
+        scalar::axpy_f32(out, w, x),
+        x86::axpy_f32(out, w, x),
+        neon::axpy_f32(out, w, x)
+    )
+}
+
+/// The canonical f32→f64 dot-product accumulator: [`DOT_LANES`]
+/// independent f64 lanes, element `p` of the logical row landing in lane
+/// `p % DOT_LANES` (tracked by `phase` across chunk splits), reduced
+/// left-to-right by [`Self::value`].
+///
+/// `acc.accumulate(a0, b0); acc.accumulate(a1, b1)` is bit-identical to
+/// one `accumulate` over the concatenations for **any** split point —
+/// the invariant the bound-pruned real scans rely on to resume a row
+/// after the sketch prefix and still hand back scores exactly equal to
+/// [`crate::vsa::RealHV::dot`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DotAcc {
+    lanes: [f64; DOT_LANES],
+    phase: u8,
+}
+
+impl Default for DotAcc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DotAcc {
+    pub fn new() -> DotAcc {
+        DotAcc {
+            lanes: [0.0; DOT_LANES],
+            phase: 0,
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, a: f32, b: f32) {
+        self.lanes[self.phase as usize] += (a as f64) * (b as f64);
+        self.phase = (self.phase + 1) % DOT_LANES as u8;
+    }
+
+    /// Fold `a · b` into the accumulator, continuing the canonical lane
+    /// schedule from wherever the previous chunk left off.
+    pub fn accumulate(&mut self, a: &[f32], b: &[f32]) {
+        self.accumulate_tier(active_tier(), a, b);
+    }
+
+    /// [`Self::accumulate`] forced onto one tier (bit-identical result).
+    pub fn accumulate_tier(&mut self, t: SimdTier, a: &[f32], b: &[f32]) {
+        debug_assert_eq!(a.len(), b.len());
+        let t = if t.is_supported() { t } else { SimdTier::Scalar };
+        let mut i = 0usize;
+        // peel to a lane boundary so the wide main loop starts at lane 0
+        while self.phase != 0 && i < a.len() {
+            self.push(a[i], b[i]);
+            i += 1;
+        }
+        let main = (a.len() - i) / DOT_LANES * DOT_LANES;
+        if main > 0 {
+            let (am, bm) = (&a[i..i + main], &b[i..i + main]);
+            dispatch!(
+                t,
+                scalar::dot_lanes(&mut self.lanes, am, bm),
+                x86::dot_lanes(&mut self.lanes, am, bm),
+                neon::dot_lanes(&mut self.lanes, am, bm)
+            );
+            i += main;
+        }
+        while i < a.len() {
+            self.push(a[i], b[i]);
+            i += 1;
+        }
+    }
+
+    /// Canonical reduction: lanes summed left-to-right in f64.
+    pub fn value(&self) -> f64 {
+        let mut s = 0.0;
+        for &l in &self.lanes {
+            s += l;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_res;
+    use crate::util::Rng;
+
+    #[test]
+    fn tier_parsing_and_resolution() {
+        assert_eq!(parse_tier("scalar"), Some(SimdTier::Scalar));
+        assert_eq!(parse_tier(" AVX2 "), Some(SimdTier::Avx2));
+        assert_eq!(parse_tier("neon"), Some(SimdTier::Neon));
+        assert_eq!(parse_tier("auto"), None);
+        assert_eq!(parse_tier("bogus"), None);
+        // auto picks the best supported tier; explicit unsupported
+        // requests clamp to scalar; explicit scalar always honored
+        assert_eq!(resolve_tier(None), available_tiers()[0]);
+        assert_eq!(resolve_tier(Some(SimdTier::Scalar)), SimdTier::Scalar);
+        for t in [SimdTier::Avx2, SimdTier::Neon] {
+            let r = resolve_tier(Some(t));
+            assert!(r == t || r == SimdTier::Scalar);
+            assert!(r.is_supported());
+        }
+        assert!(active_tier().is_supported());
+        assert!(available_tiers().contains(&SimdTier::Scalar));
+        assert_eq!(SimdTier::Scalar.name(), "scalar");
+    }
+
+    #[test]
+    fn every_supported_tier_matches_scalar_on_word_kernels() {
+        forall_res(
+            9001,
+            40,
+            |r| {
+                // lengths straddle every tier's vector width and tail path
+                let n = r.below(70);
+                let a: Vec<u64> = (0..n).map(|_| r.next_u64()).collect();
+                let b: Vec<u64> = (0..n).map(|_| r.next_u64()).collect();
+                (a, b)
+            },
+            |(a, b)| {
+                let naive: u32 = a.iter().zip(b).map(|(x, y)| (x ^ y).count_ones()).sum();
+                for t in available_tiers() {
+                    if xor_hamming_tier(t, a, b) != naive {
+                        return Err(format!("xor_hamming diverged on {}", t.name()));
+                    }
+                    if popcount_words_tier(t, a) != a.iter().map(|w| w.count_ones()).sum::<u32>()
+                    {
+                        return Err(format!("popcount diverged on {}", t.name()));
+                    }
+                    let mut d = a.clone();
+                    xor_into_tier(t, &mut d, b);
+                    let want: Vec<u64> = a.iter().zip(b).map(|(x, y)| x ^ y).collect();
+                    if d != want {
+                        return Err(format!("xor_into diverged on {}", t.name()));
+                    }
+                }
+                // identical rows: hamming must be exactly zero on all tiers
+                for t in available_tiers() {
+                    if xor_hamming_tier(t, a, a) != 0 {
+                        return Err(format!("xor_hamming(a,a) != 0 on {}", t.name()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn every_supported_tier_matches_scalar_on_csa_and_funnel() {
+        forall_res(
+            9002,
+            40,
+            |r| {
+                let n = r.below(40);
+                let plane: Vec<u64> = (0..n).map(|_| r.next_u64()).collect();
+                let carry: Vec<u64> = (0..n).map(|_| r.next_u64()).collect();
+                let shift = 1 + r.below(63) as u32;
+                (plane, carry, shift)
+            },
+            |(plane, carry, shift)| {
+                let (mut p0, mut c0) = (plane.clone(), carry.clone());
+                let z0 = scalar::csa_step(&mut p0, &mut c0);
+                for t in available_tiers() {
+                    let (mut p, mut c) = (plane.clone(), carry.clone());
+                    let z = csa_step_tier(t, &mut p, &mut c);
+                    if p != p0 || c != c0 || z != z0 {
+                        return Err(format!("csa_step diverged on {}", t.name()));
+                    }
+                    let mut w0 = plane.clone();
+                    scalar::funnel_shl(&mut w0, *shift);
+                    let mut w = plane.clone();
+                    funnel_shl_tier(t, &mut w, *shift);
+                    if w != w0 {
+                        return Err(format!("funnel_shl diverged on {} b={shift}", t.name()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn every_supported_tier_matches_scalar_on_f32_kernels_bitwise() {
+        forall_res(
+            9003,
+            40,
+            |r| {
+                // odd lengths: not multiples of any tier's lane width
+                let n = r.below(70);
+                let a: Vec<f32> = (0..n).map(|_| r.normal() as f32).collect();
+                let b: Vec<f32> = (0..n).map(|_| r.normal() as f32).collect();
+                let w = r.normal() as f32;
+                // arbitrary split point exercises phase continuation
+                let cut = if n > 0 { r.below(n + 1) } else { 0 };
+                (a, b, w, cut)
+            },
+            |(a, b, w, cut)| {
+                let mut acc0 = DotAcc::new();
+                acc0.accumulate_tier(SimdTier::Scalar, a, b);
+                for t in available_tiers() {
+                    let mut acc = DotAcc::new();
+                    acc.accumulate_tier(t, a, b);
+                    if acc != acc0 {
+                        return Err(format!("dot lanes diverged on {}", t.name()));
+                    }
+                    // split at an arbitrary boundary: same lanes, same value
+                    let mut split = DotAcc::new();
+                    split.accumulate_tier(t, &a[..*cut], &b[..*cut]);
+                    split.accumulate_tier(t, &a[*cut..], &b[*cut..]);
+                    if split != acc0 {
+                        return Err(format!(
+                            "chunk-resumed dot diverged on {} cut={cut}",
+                            t.name()
+                        ));
+                    }
+                    if split.value().to_bits() != acc0.value().to_bits() {
+                        return Err("value() not bit-identical".into());
+                    }
+                    let mut o0: Vec<f32> = b.clone();
+                    scalar::axpy_f32(&mut o0, *w, a);
+                    let mut o: Vec<f32> = b.clone();
+                    axpy_f32_tier(t, &mut o, *w, a);
+                    if o.iter().map(|v| v.to_bits()).ne(o0.iter().map(|v| v.to_bits())) {
+                        return Err(format!("axpy diverged on {}", t.name()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn dispatched_kernels_agree_with_forced_scalar() {
+        // whatever tier this process resolved (including an NSCOG_SIMD
+        // override), the dispatched entry points must equal the scalar
+        // reference
+        let mut r = Rng::new(9004);
+        let a: Vec<u64> = (0..37).map(|_| r.next_u64()).collect();
+        let b: Vec<u64> = (0..37).map(|_| r.next_u64()).collect();
+        assert_eq!(xor_hamming(&a, &b), xor_hamming_tier(SimdTier::Scalar, &a, &b));
+        assert_eq!(popcount_words(&a), popcount_words_tier(SimdTier::Scalar, &a));
+        let xs: Vec<f32> = (0..53).map(|_| r.normal() as f32).collect();
+        let ys: Vec<f32> = (0..53).map(|_| r.normal() as f32).collect();
+        let mut d = DotAcc::new();
+        d.accumulate(&xs, &ys);
+        let mut ds = DotAcc::new();
+        ds.accumulate_tier(SimdTier::Scalar, &xs, &ys);
+        assert_eq!(d, ds);
+        assert_eq!(d.value().to_bits(), ds.value().to_bits());
+    }
+
+    #[test]
+    fn dot_acc_empty_and_zero_value() {
+        let acc = DotAcc::new();
+        assert_eq!(acc.value(), 0.0);
+        let mut acc = DotAcc::new();
+        acc.accumulate(&[], &[]);
+        assert_eq!(acc, DotAcc::new());
+    }
+}

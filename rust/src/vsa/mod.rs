@@ -13,12 +13,16 @@
 //!
 //! On top of both: item-memory codebooks with CA-90 on-the-fly
 //! regeneration ([`ca90`]), cleanup/associative memory ([`cleanup`]), and
-//! the resonator-network factorizer ([`resonator`]).
+//! the resonator-network factorizer ([`resonator`]). Every word-level hot
+//! loop under all of them dispatches once into the runtime-selected SIMD
+//! backend ([`kernels`]: AVX2 / NEON / scalar, `NSCOG_SIMD` override) at
+//! bit-identical results.
 
 pub mod ca90;
 pub mod cleanup;
 pub mod codebook;
 pub mod hypervector;
+pub mod kernels;
 pub mod ops;
 pub mod resonator;
 pub mod sketch;
@@ -26,5 +30,6 @@ pub mod sketch;
 pub use cleanup::CleanupMemory;
 pub use codebook::{BinaryCodebook, RealCodebook};
 pub use hypervector::{BinaryHV, RealHV};
+pub use kernels::{DotAcc, SimdTier};
 pub use resonator::{Resonator, ResonatorResult, ResonatorScratch};
 pub use sketch::{BinarySketch, PruneStats, RealSketch};

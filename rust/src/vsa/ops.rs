@@ -110,7 +110,9 @@ pub fn bind_positional(vs: &[&RealHV]) -> RealHV {
     out
 }
 
-/// Weighted sum c(y) = sum_i n_i * y_i — the resonator projection kernel.
+/// Weighted sum c(y) = sum_i n_i * y_i — the resonator projection
+/// kernel, routed through the dispatched SIMD `axpy` (bit-identical to
+/// the scalar loop on every tier).
 pub fn weighted_sum(weights: &[f32], vs: &[&RealHV]) -> RealHV {
     assert_eq!(weights.len(), vs.len());
     assert!(!vs.is_empty());
@@ -120,9 +122,7 @@ pub fn weighted_sum(weights: &[f32], vs: &[&RealHV]) -> RealHV {
         if *w == 0.0 {
             continue;
         }
-        for (o, x) in out.iter_mut().zip(v.as_slice()) {
-            *o += w * x;
-        }
+        crate::vsa::kernels::axpy_f32(&mut out, *w, v.as_slice());
     }
     RealHV::from_vec(out)
 }

@@ -8,7 +8,7 @@
 //! `a_new = sign(c(A, n))`.
 
 use super::codebook::RealCodebook;
-use super::hypervector::RealHV;
+use super::hypervector::{DotAcc, RealHV};
 use super::ops;
 use super::sketch::{PruneStats, REAL_PRUNE_CHUNK};
 
@@ -37,9 +37,10 @@ pub struct ResonatorScratch {
     scores: Vec<Vec<f64>>,
     /// Reusable buffers for the bound-pruned per-factor index decode at
     /// the end of `factorize_with` (query suffix norms + candidate
-    /// order), plus its accumulated prune telemetry.
+    /// order carrying resumable [`DotAcc`] prefix accumulators), plus its
+    /// accumulated prune telemetry.
     qnorms: Vec<f64>,
-    order: Vec<(f64, f64, u32)>,
+    order: Vec<(f64, DotAcc, u32)>,
     prune: PruneStats,
 }
 

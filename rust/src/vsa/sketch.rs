@@ -23,6 +23,7 @@
 //! least `k` already-scored items provably precede it. See
 //! `rust/tests/pruned_equivalence.rs`.
 
+use super::ca90;
 use super::hypervector::{BinaryHV, RealHV, FOLD_BITS};
 
 /// Default binary sketch width: one 512-bit fold (the accelerator's bus
@@ -135,6 +136,51 @@ impl BinarySketch {
         let mut block = Vec::with_capacity(items.len() * words_per_item);
         for it in items {
             block.extend_from_slice(&it.words()[..words_per_item]);
+        }
+        Some(BinarySketch {
+            words_per_item,
+            block,
+        })
+    }
+
+    /// Build the sidecar straight from CA-90 seed folds, without ever
+    /// materializing the full item vectors: a sketch no wider than the
+    /// seed fold is a verbatim seed prefix, and wider sketches stream
+    /// [`ca90::ca90_step_into`] generations chunk-by-chunk into the block
+    /// (one ping-pong scratch pair reused across all items). `n_words` is
+    /// the full row length in words (`dim / 64`); the same
+    /// None-degradation rules as [`Self::build`] apply. Rows produced
+    /// this way are word-for-word identical to building from the expanded
+    /// items (fused `BinaryCodebook::from_seeds` path; property-tested).
+    pub fn build_from_seeds(
+        seeds: &[Vec<u64>],
+        fold_bits: usize,
+        n_words: usize,
+        sketch_bits: usize,
+    ) -> Option<BinarySketch> {
+        let words_per_item = sketch_bits / 64;
+        if seeds.is_empty() || words_per_item == 0 || words_per_item >= n_words {
+            return None;
+        }
+        let fw = fold_bits / 64;
+        let mut block = Vec::with_capacity(seeds.len() * words_per_item);
+        let mut state = vec![0u64; fw];
+        let mut next = vec![0u64; fw];
+        for seed in seeds {
+            assert_eq!(seed.len(), fw);
+            let take = words_per_item.min(fw);
+            block.extend_from_slice(&seed[..take]);
+            let mut written = take;
+            if written < words_per_item {
+                state.copy_from_slice(seed);
+                while written < words_per_item {
+                    ca90::ca90_step_into(&state, &mut next, fold_bits);
+                    std::mem::swap(&mut state, &mut next);
+                    let take = (words_per_item - written).min(fw);
+                    block.extend_from_slice(&state[..take]);
+                    written += take;
+                }
+            }
         }
         Some(BinarySketch {
             words_per_item,
@@ -256,8 +302,9 @@ pub fn query_suffix_norms(q: &[f32], chunk: usize, out: &mut Vec<f64>) {
 /// on the remainder (≥ 0). The relative inflation absorbs f64 rounding in
 /// the norm/bound arithmetic so rounding can never cause a wrongful
 /// prune; the exhaustive comparison that *would* have kept the item uses
-/// exactly the same left-to-right accumulation as the pruned path, so any
-/// surviving item's final score is bit-identical.
+/// exactly the same canonical lane-strided accumulation
+/// ([`crate::vsa::DotAcc`]) as the pruned path, so any surviving item's
+/// final score is bit-identical.
 #[inline]
 pub fn real_upper_bound(acc: f64, rest: f64) -> f64 {
     acc + rest + 1e-9 * (1.0 + acc.abs() + rest)
@@ -281,6 +328,35 @@ mod tests {
         assert!(BinarySketch::build(&items, 2048).is_none());
         assert!(BinarySketch::build(&items, 0).is_none());
         assert!(BinarySketch::build(&[], 512).is_none());
+    }
+
+    #[test]
+    fn seed_built_sketch_matches_item_built_sketch() {
+        use crate::vsa::hypervector::FOLD_WORDS;
+        let mut rng = Rng::new(4);
+        let seeds: Vec<Vec<u64>> = (0..7)
+            .map(|_| (0..FOLD_WORDS).map(|_| rng.next_u64()).collect())
+            .collect();
+        let dim = 4096;
+        let items: Vec<BinaryHV> = seeds
+            .iter()
+            .map(|s| ca90::expand_vector(s, FOLD_BITS, dim))
+            .collect();
+        // widths below, at, and above one fold — the >fold case streams
+        // CA-90 generations into the block
+        for bits in [256usize, 512, 1024, 1536] {
+            let fused = BinarySketch::build_from_seeds(&seeds, FOLD_BITS, dim / 64, bits)
+                .unwrap_or_else(|| panic!("no sketch at {bits}"));
+            let direct = BinarySketch::build(&items, bits).unwrap();
+            assert_eq!(fused.words_per_item(), direct.words_per_item(), "bits={bits}");
+            for i in 0..7 {
+                assert_eq!(fused.row(i), direct.row(i), "bits={bits} item {i}");
+            }
+        }
+        // degradation rules mirror build(): zero width, too-wide, empty
+        assert!(BinarySketch::build_from_seeds(&seeds, FOLD_BITS, 8, 512).is_none());
+        assert!(BinarySketch::build_from_seeds(&seeds, FOLD_BITS, 64, 0).is_none());
+        assert!(BinarySketch::build_from_seeds(&[], FOLD_BITS, 64, 512).is_none());
     }
 
     #[test]

@@ -93,9 +93,11 @@ impl NvsaEngine {
         // (VSA-to-PMF) and score rules probabilistically.
         let mut predicted: Vec<Vec<f64>> = Vec::with_capacity(N_ATTRS);
         for a in 0..N_ATTRS {
-            // VSA-to-PMF through the query-blocked batched scan (result
-            // identical to per-panel `to_pmf`)
-            let decoded: Vec<Vec<f64>> = self.codebooks[a].to_pmf_batch(&attr_vecs[a]);
+            // VSA-to-PMF through the bound-ordered ReLU-pruned batched
+            // scan (result identical to per-panel `to_pmf`: the only
+            // skipped rows are ones the ReLU provably zeroes)
+            let (decoded, _prune) = self.codebooks[a]
+                .to_pmf_batch_pruned_with(&attr_vecs[a], crate::util::parallel::configured_threads());
             let joint: Vec<f64> = decoded.iter().flatten().copied().collect();
             sparsity.push(SparsityPoint {
                 module: "vsa_to_pmf".into(),

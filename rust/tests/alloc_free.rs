@@ -104,4 +104,31 @@ fn resonator_sweeps_allocate_nothing_in_steady_state() {
         "steady-state batched scans must not touch the heap"
     );
     assert_eq!(scores_out[3], cb.scores(&queries[3]));
+
+    // The SIMD dispatch layer itself must be allocation-free once the
+    // process tier is cached (selection already happened during the
+    // warm-ups above): repeated dispatched kernel calls over held buffers
+    // stay off the heap.
+    let x = queries[0].clone();
+    let y = queries[1].clone();
+    let xs: Vec<f32> = (0..513).map(|i| (i % 7) as f32 - 3.0).collect();
+    let ys: Vec<f32> = (0..513).map(|i| (i % 5) as f32 - 2.0).collect();
+    let mut axpy_out = vec![0.0f32; 513];
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    let mut sink = 0u32;
+    let mut dsink = 0.0f64;
+    for _ in 0..20 {
+        sink = sink.wrapping_add(x.hamming_bulk(&y));
+        sink = sink.wrapping_add(x.popcount());
+        let mut acc = nscog::vsa::DotAcc::new();
+        acc.accumulate(&xs, &ys);
+        dsink += acc.value();
+        nscog::vsa::kernels::axpy_f32(&mut axpy_out, 0.5, &xs);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "dispatched SIMD kernels must not heap-allocate (sink {sink} {dsink})"
+    );
 }

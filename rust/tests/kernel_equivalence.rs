@@ -5,7 +5,8 @@
 
 use nscog::util::prop::{forall, forall_res};
 use nscog::util::Rng;
-use nscog::vsa::hypervector::{majority, majority_ref};
+use nscog::vsa::hypervector::{majority, majority_ref, DotAcc};
+use nscog::vsa::kernels::{self, SimdTier};
 use nscog::vsa::{ops, BinaryCodebook, BinaryHV, RealCodebook, RealHV};
 
 #[test]
@@ -122,6 +123,98 @@ fn real_nearest_batch_equals_per_query_across_threads() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn simd_tiers_agree_on_hypervector_ops() {
+    // Every supported dispatch tier must reproduce the scalar reference
+    // on full hypervector operations — odd word counts (not multiples of
+    // any vector width), duplicate rows (hamming 0 / all-tie scans), and
+    // permute shifts that hit both the pure-rotation and funnel paths.
+    forall_res(
+        8001,
+        40,
+        |r| {
+            let d = 64 * (1 + r.below(41)); // 64..2624 bits, odd word counts
+            let x = BinaryHV::random(r, d);
+            let y = if r.below(4) == 0 { x.clone() } else { BinaryHV::random(r, d) };
+            let shift = r.range(-5000, 5000);
+            (x, y, shift)
+        },
+        |(x, y, shift)| {
+            let ham = x.hamming(y);
+            for t in kernels::available_tiers() {
+                if kernels::xor_hamming_tier(t, x.words(), y.words()) != ham {
+                    return Err(format!("hamming diverged on {}", t.name()));
+                }
+                if kernels::popcount_words_tier(t, x.words()) != x.popcount() {
+                    return Err(format!("popcount diverged on {}", t.name()));
+                }
+                let mut bound = x.words().to_vec();
+                kernels::xor_into_tier(t, &mut bound, y.words());
+                if bound != x.bind(y).words() {
+                    return Err(format!("bind diverged on {}", t.name()));
+                }
+            }
+            // dispatched permute (funnel shift) vs the per-bit naive oracle
+            let fast = x.permute(*shift);
+            let d = x.dim();
+            let mut naive = BinaryHV::zeros(d);
+            for i in 0..d {
+                let dst = (((i as i64 + shift) % d as i64 + d as i64) % d as i64) as usize;
+                naive.set(dst, x.get(i));
+            }
+            if fast != naive {
+                return Err(format!("permute diverged at shift {shift}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn canonical_dot_is_tier_invariant_and_chunk_resumable() {
+    // RealHV::dot (the sequential oracle every pruned scan must hand
+    // back) equals a forced-scalar DotAcc accumulation bit-for-bit, for
+    // dims that are not multiples of the 8-lane width and for arbitrary
+    // resume points — on whatever tier this process dispatched.
+    forall_res(
+        8002,
+        40,
+        |r| {
+            let d = 1 + r.below(600);
+            let x: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+            let y: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+            let cut = r.below(d + 1);
+            (x, y, cut)
+        },
+        |(x, y, cut)| {
+            let xv = RealHV::from_vec(x.clone());
+            let yv = RealHV::from_vec(y.clone());
+            let want = xv.dot(&yv);
+            let mut scalar_acc = DotAcc::new();
+            scalar_acc.accumulate_tier(SimdTier::Scalar, x, y);
+            if scalar_acc.value().to_bits() != want.to_bits() {
+                return Err("forced-scalar dot != dispatched RealHV::dot".into());
+            }
+            let mut resumed = DotAcc::new();
+            resumed.accumulate(&x[..*cut], &y[..*cut]);
+            resumed.accumulate(&x[*cut..], &y[*cut..]);
+            if resumed.value().to_bits() != want.to_bits() {
+                return Err(format!("resumed dot diverged at cut {cut}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn active_tier_is_supported_and_named() {
+    let t = kernels::active_tier();
+    assert!(t.is_supported(), "dispatch resolved an unsupported tier");
+    assert!(["scalar", "avx2", "neon"].contains(&t.name()));
+    // the tier the bench JSONs report must be one the host can run
+    assert!(kernels::available_tiers().contains(&t));
 }
 
 #[test]

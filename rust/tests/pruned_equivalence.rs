@@ -156,6 +156,60 @@ fn real_pruned_scans_equal_exhaustive_everywhere() {
 }
 
 #[test]
+fn relu_pruned_pmf_equals_exhaustive_everywhere() {
+    // The bound-ordered ReLU-pruned decode must reproduce `to_pmf`
+    // exactly: the only rows it skips are ones whose upper bound proves a
+    // non-positive score, which ReLU zeroes in the exhaustive path too.
+    // Distributions include duplicates, HRR items, member, negated-member
+    // (anti-correlated — where the zero threshold actually prunes), and
+    // all-negative queries.
+    forall_res(
+        7005,
+        40,
+        |rng| {
+            let dims = [256usize, 640, 1024, 1100, 1536];
+            let dim = dims[rng.below(dims.len())];
+            let n = 1 + rng.below(16);
+            let mode = rng.below(3);
+            let items: Vec<RealHV> = match mode {
+                0 => (0..n).map(|_| RealHV::random_bipolar(rng, dim)).collect(),
+                1 => {
+                    let base: Vec<RealHV> = (0..(n / 2 + 1))
+                        .map(|_| RealHV::random_bipolar(rng, dim))
+                        .collect();
+                    (0..n).map(|_| base[rng.below(base.len())].clone()).collect()
+                }
+                _ => (0..n).map(|_| RealHV::random_hrr(rng, dim)).collect(),
+            };
+            let cb = RealCodebook::from_items(dim, items);
+            let mut queries = vec![
+                RealHV::random_bipolar(rng, dim),
+                cb.item(rng.below(n)).clone(),
+            ];
+            let mut neg = cb.item(rng.below(n)).clone();
+            for v in neg.as_mut_slice().iter_mut() {
+                *v = -*v;
+            }
+            queries.push(neg);
+            let threads = 1 + rng.below(3);
+            (cb, queries, threads)
+        },
+        |(cb, queries, threads)| {
+            let (batch, stats) = cb.to_pmf_batch_pruned_with(queries, *threads);
+            for (q, query) in queries.iter().enumerate() {
+                if batch[q] != cb.to_pmf(query) {
+                    return Err(format!("pmf diverged q={q} threads={threads}"));
+                }
+            }
+            if stats.words_streamed > stats.words_total {
+                return Err(format!("streamed beyond exhaustive: {stats:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn sharded_pruned_scans_preserve_tie_order_across_boundaries() {
     // duplicate items laid across shard boundaries force cross-shard
     // exact ties; the pruned sharded scan must keep the global

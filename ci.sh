@@ -73,9 +73,9 @@ if tier == 'scalar':
 PYEOF
 fi
 
-echo "== bench smoke: serve (bounded requests, deterministic seed) =="
+echo "== bench smoke: serve (3 stores, skewed mix, bounded requests, deterministic seed) =="
 NSCOG_SERVE_JSON="$(pwd)/BENCH_serve.json" \
-    cargo run --release --quiet --bin nscog -- serve-bench --smoke
+    cargo run --release --quiet --bin nscog -- serve-bench --smoke --stores 3
 
 echo "== validate BENCH_serve.json =="
 if command -v python3 >/dev/null 2>&1; then
@@ -84,7 +84,7 @@ import json
 r = json.load(open('BENCH_serve.json'))
 assert r['bench'] == 'serve', 'wrong bench tag'
 cl, base = r['closed_loop'], r['baseline']
-assert cl['mismatches'] == 0, 'batched responses diverged from sequential oracle'
+assert cl['mismatches'] == 0, 'batched responses diverged from per-store sequential oracles'
 assert cl['rejected'] == 0 and cl['expired'] == 0, 'smoke run shed load unexpectedly'
 assert cl['qps'] > 0 and base['qps'] > 0, 'degenerate throughput measurement'
 if r.get('open_loop'):
@@ -96,15 +96,48 @@ if pr and pr.get('words_total', 0) > 0:
 cache = r.get('cache')
 if cache is not None and r['config'].get('repeat_frac', 0) > 0:
     assert cache['hits'] > 0, 'repeated-query smoke mix produced no cache hits'
+# Per-store blocks: pass/skip/fail per invariant. Old single-store JSONs
+# (no "stores" array) skip cleanly; a multi-store run must carry one
+# exercised block per store, and each store must have been served,
+# pruned, and (when its cache is on and traffic repeats) cache-hit.
+stores = r.get('stores')
+store_line = ""
+if stores is None:
+    print('(no per-store blocks; single-store JSON — store checks skipped)')
+else:
+    declared = r.get('store_count', len(stores))
+    assert len(stores) == declared, \
+        f'store_count {declared} != {len(stores)} per-store blocks'
+    checked, hit_rates = 0, []
+    for s in stores:
+        name = s.get('name', f"store{s.get('id', '?')}")
+        assert s.get('simd') == r.get('simd'), \
+            f"{name}: per-store simd tier disagrees with the run tier"
+        assert s.get('store_count') == declared, \
+            f"{name}: per-store store_count disagrees with the run"
+        assert s.get('completed', 0) > 0, f'{name}: store received no completed traffic'
+        sp = s.get('prune') or {}
+        if sp.get('words_total', 0) > 0:
+            assert sp['words_streamed'] < sp['words_total'], \
+                f"{name}: store's scans streamed no fewer words than exhaustive"
+        sc = s.get('cache')
+        if sc is not None and s.get('repeat_frac', 0) > 0:
+            assert sc['hits'] > 0, f'{name}: repeated traffic produced no cache hits'
+            hit_rates.append(f"{name} {sc['hit_rate']*100:.0f}%")
+        checked += 1
+    store_line = f", {checked} stores validated"
+    if hit_rates:
+        store_line += " (hits: " + ", ".join(hit_rates) + ")"
 cache_line = (f", cache hit rate {cache['hit_rate']*100:.0f}%" if cache else "")
 prune_line = (f", {pr['words_frac']*100:.0f}% words streamed" if pr else "")
 print(f"serve smoke OK: {cl['qps']:.0f} qps vs baseline {base['qps']:.0f} "
       f"(x{r['speedup_qps']:.2f}), mean batch {r['batching']['mean_batch']:.2f}"
-      f"{prune_line}{cache_line}")
+      f"{prune_line}{cache_line}{store_line}")
 PYEOF
 else
     grep -q '"bench": "serve"' BENCH_serve.json
     grep -q '"mismatches": 0' BENCH_serve.json
+    grep -q '"stores": \[' BENCH_serve.json
     echo "python3 unavailable; structural grep checks passed"
 fi
 
@@ -227,10 +260,16 @@ try:
     sv = json.load(open('BENCH_serve.json'))
     cl, b = sv['closed_loop'], sv['batching']
     lines += ["",
-              f"Serving (`serve-bench --smoke`): closed-loop {cl['qps']:.0f} qps vs "
+              f"Serving (`serve-bench --smoke --stores {sv.get('store_count', 1)}`): "
+              f"closed-loop {cl['qps']:.0f} qps vs "
               f"baseline {sv['baseline']['qps']:.0f} qps "
               f"(**{sv['speedup_qps']:.2f}x**), mean batch occupancy "
               f"{b['mean_batch']:.2f} (max {b['max_batch']})."]
+    for s in sv.get('stores', []):
+        hit = (f", {s['cache']['hit_rate']*100:.0f}% cache hits" if s.get('cache') else "")
+        lines.append(f"  - store `{s['name']}` ({s['items']}x{s['dim']}b, weight {s['weight']}): "
+                     f"{s['completed']} served, "
+                     f"{s['prune']['words_frac']*100:.0f}% words streamed{hit}")
 except (OSError, json.JSONDecodeError):
     lines += ["", "_(BENCH_serve.json unavailable)_"]
 lines.append("")

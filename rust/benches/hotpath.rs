@@ -200,6 +200,41 @@ fn main() {
         black_box(sharded.top_k_batch_with(&queries, 5, shard_threads));
     });
 
+    // multi-store serving layout: two registered stores with different
+    // dimensions behind one registry, each batch routed to its own
+    // store's sharded scan (what `batcher::execute` does per
+    // (store, class) group). The entry name carries the store count and
+    // the JSON's top-level "simd" field the dispatch tier, so
+    // multi-store serve numbers stay attributable next to the ci.sh
+    // simd_speedups A/B.
+    {
+        use nscog::serve::{StoreRegistry, StoreSpec};
+        let cb_small = BinaryCodebook::random(&mut rng, 80, 4096);
+        let mut registry = StoreRegistry::new();
+        let spec = StoreSpec {
+            shards: 4,
+            cache_capacity: 0,
+            ..StoreSpec::default()
+        };
+        registry.register("hot", &cb, None, spec);
+        registry.register("cold", &cb_small, None, spec);
+        let small_queries: Vec<BinaryHV> =
+            (0..100).map(|_| BinaryHV::random(&mut rng, 4096)).collect();
+        let s_multi = record(
+            &mut entries,
+            "serve/multistore 2st recall_batch 100q+100q",
+            || {
+                for (store, qs) in registry.stores().iter().zip([&queries, &small_queries]) {
+                    black_box(store.cleanup().recall_batch_stats(qs, shard_threads));
+                }
+            },
+        );
+        println!(
+            "    → 2-store routed scan: {:.2} GB/s aggregate",
+            ((cb.len() * d + cb_small.len() * 4096) as f64 / 8.0 * 100.0) / s_multi.p50 / 1e9
+        );
+    }
+
     // --- cascaded sketch-prefilter + bound-pruned scans ------------------
     // easy distribution: noisy member queries (the serve workload shape);
     // adversarial: near-duplicate items, where exact pruning is worst-case

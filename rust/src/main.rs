@@ -70,16 +70,21 @@ fn info() {
     println!("  characterize [NAME]   characterization report (LNN/LTN/NVSA/NLM/VSAIT/ZeroC/PrAE)");
     println!("  accel [acc2|acc4|acc8] [mult|tree|fact|react]");
     println!("  solve [--grid 2|3]    solve synthetic RPM with NVSA + PrAE engines");
-    println!("  serve-bench [--smoke] load-test the sharded, batched serving engine;");
+    println!("  serve-bench [--smoke] load-test the sharded, batched, multi-store serving engine;");
     println!("                        emits BENCH_serve.json (NSCOG_SERVE_JSON overrides path).");
     println!("                        knobs: --requests N --clients N --workers N --shards N");
     println!("                               --batch N --delay-us N --queue N --rate QPS --json PATH");
     println!("                        scan fan-out per worker: NSCOG_THREADS / --scan-threads N");
     println!("                        pruned scans: --sketch-bits N (prefilter sidecar width;");
     println!("                               0 = incremental bounds only; default 512 for dim>=2048)");
-    println!("                        response cache: --cache N (entry budget, 0 disables;");
-    println!("                               default 4096) --cache-shards N (default 8)");
+    println!("                        response cache (per store): --cache N (entry budget,");
+    println!("                               0 disables; default 4096) --cache-shards N (default 8)");
     println!("                        workload reuse: --repeat F (fraction of repeated queries)");
+    println!("                        multi-store: --stores N (N tenants behind one queue;");
+    println!("                               skewed popularity, dims alternate base/2x base);");
+    println!("                               per-store overrides (comma lists, cycled):");
+    println!("                               --store-dims D,.. --store-items N,.. --store-sketch B,..");
+    println!("                               --store-weights W,.. --store-repeat F,..");
     println!("  runtime-info          check PJRT artifacts (artifacts/manifest.json)");
 }
 
@@ -293,7 +298,48 @@ fn serve_bench(flags: &[String]) {
         opts.engine.cache_shards = n.max(1);
     }
     if let Some(frac) = val("--repeat").and_then(|v| v.parse::<f64>().ok()) {
-        opts.fixture.repeat_frac = frac.clamp(0.0, 1.0);
+        for p in &mut opts.fixture.stores {
+            p.repeat_frac = frac.clamp(0.0, 1.0);
+        }
+    }
+    // multi-store expansion first, per-store overrides layered on top
+    // (comma lists cycle over the stores, so one value applies to all)
+    if let Some(n) = num("--stores") {
+        opts.with_stores(n.max(1));
+    }
+    let list = |name: &str| -> Vec<String> {
+        val(name)
+            .map(|v| v.split(',').map(str::to_string).collect())
+            .unwrap_or_default()
+    };
+    let dims = list("--store-dims");
+    let items = list("--store-items");
+    let sketch = list("--store-sketch");
+    let weights = list("--store-weights");
+    let repeats = list("--store-repeat");
+    for (i, p) in opts.fixture.stores.iter_mut().enumerate() {
+        let pick = |xs: &[String]| -> Option<String> {
+            if xs.is_empty() {
+                None
+            } else {
+                Some(xs[i % xs.len()].clone())
+            }
+        };
+        if let Some(d) = pick(&dims).and_then(|v| v.parse::<usize>().ok()) {
+            p.dim = d.max(64);
+        }
+        if let Some(n) = pick(&items).and_then(|v| v.parse::<usize>().ok()) {
+            p.items = n.max(1);
+        }
+        if let Some(b) = pick(&sketch).and_then(|v| v.parse::<usize>().ok()) {
+            p.sketch_bits = Some(b);
+        }
+        if let Some(w) = pick(&weights).and_then(|v| v.parse::<u32>().ok()) {
+            p.weight = w.max(1);
+        }
+        if let Some(fr) = pick(&repeats).and_then(|v| v.parse::<f64>().ok()) {
+            p.repeat_frac = fr.clamp(0.0, 1.0);
+        }
     }
     if let Some(p) = val("--json") {
         opts.json_path = Some(p.clone());
@@ -302,9 +348,28 @@ fn serve_bench(flags: &[String]) {
     let f = &opts.fixture;
     let e = &opts.engine;
     println!(
-        "serve-bench: {} requests (mix {}:{}:{}) over {}x{}b cleanup store",
-        f.requests, f.mix.recall, f.mix.topk, f.mix.factorize, f.items, f.dim
+        "serve-bench: {} requests (mix {}:{}:{}) over {} store(s)",
+        f.requests,
+        f.mix.recall,
+        f.mix.topk,
+        f.mix.factorize,
+        f.stores.len()
     );
+    for p in &f.stores {
+        println!(
+            "  store '{}': {}x{}b cleanup, topk k={}, weight {}, repeat {:.2}, sketch {}",
+            p.name,
+            p.items,
+            p.dim,
+            p.topk_k,
+            p.weight,
+            p.repeat_frac,
+            match p.sketch_bits {
+                Some(b) => b.to_string(),
+                None => "auto".into(),
+            }
+        );
+    }
     println!(
         "engine: {} workers x batch<={} (delay {}us), {} shards, {} scan threads, queue {}",
         e.workers,
@@ -319,7 +384,7 @@ fn serve_bench(flags: &[String]) {
         nscog::vsa::kernels::active_tier().name()
     );
     println!(
-        "pruning: sketch {} bits; cache: {} (repeat fraction {:.2})",
+        "pruning: sketch {} bits (engine default); cache per store: {}",
         match e.sketch_bits {
             Some(b) => b.to_string(),
             None => "auto".into(),
@@ -328,8 +393,7 @@ fn serve_bench(flags: &[String]) {
             format!("{} entries x {} shards", e.cache_capacity, e.cache_shards)
         } else {
             "disabled".into()
-        },
-        f.repeat_frac
+        }
     );
     let report = run_bench(opts);
     report.table().print();
@@ -337,16 +401,37 @@ fn serve_bench(flags: &[String]) {
         "batching: {} batches, mean occupancy {:.2}, max {}",
         report.stats.batches, report.stats.mean_batch, report.stats.max_batch
     );
-    for (s, sh) in report.stats.shards.iter().enumerate() {
+    for store in &report.stats.stores {
+        let p = &store.prune;
+        let cache_line = match &store.cache {
+            Some(c) => format!(
+                "cache {:.1}% hit ({} hits/{} misses, {} resident)",
+                c.hit_rate() * 100.0,
+                c.hits,
+                c.misses,
+                c.entries
+            ),
+            None => "cache disabled".into(),
+        };
         println!(
-            "  shard {s}: {} scans, busy {}",
-            sh.scans,
-            fmt_time(sh.busy_s)
+            "  store '{}': {} completed, {:.1}% words streamed (sketch reject {:.1}%), {}",
+            store.name,
+            store.completed,
+            p.words_frac() * 100.0,
+            p.sketch_reject_rate() * 100.0,
+            cache_line
         );
+        for (s, sh) in store.shards.iter().enumerate() {
+            println!(
+                "    shard {s}: {} scans, busy {}",
+                sh.scans,
+                fmt_time(sh.busy_s)
+            );
+        }
     }
     let p = &report.stats.prune;
     println!(
-        "pruned scans: {:.1}% of item words streamed ({} items; sketch reject {:.1}%, {} early-terminated)",
+        "pruned scans (all stores): {:.1}% of item words streamed ({} items; sketch reject {:.1}%, {} early-terminated)",
         p.words_frac() * 100.0,
         p.items,
         p.sketch_reject_rate() * 100.0,
@@ -354,7 +439,7 @@ fn serve_bench(flags: &[String]) {
     );
     match &report.stats.cache {
         Some(c) => println!(
-            "cache: hit rate {:.1}% ({} hits / {} misses), {} entries resident, {} evictions",
+            "cache (all stores): hit rate {:.1}% ({} hits / {} misses), {} entries resident, {} evictions",
             c.hit_rate() * 100.0,
             c.hits,
             c.misses,

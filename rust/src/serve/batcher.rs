@@ -1,23 +1,26 @@
-//! Dynamic micro-batching: coalesce concurrent requests into single
-//! batched-kernel calls.
+//! Dynamic micro-batching: coalesce concurrent requests into batched
+//! kernel calls, grouped by `(store, request class)`.
 //!
 //! A worker blocks for the first ticket, then holds the batch window open
 //! for up to `max_delay` (or until `max_batch` tickets arrive) before
-//! executing. The batch is split by request class and each class runs as
-//! ONE batched call — `ShardedCleanup::recall_batch_stats`,
+//! executing. The gathered batch may mix stores; execution splits it by
+//! target store and request class, and each `(store, class)` group runs
+//! as ONE batched call — `ShardedCleanup::recall_batch_stats`,
 //! `recall_topk_batch_stats`, or `Resonator::factorize_batch_with` over
-//! the worker's reused [`ResonatorScratch`] — so item-memory rows stream
-//! once per batch instead of once per request (the paper's batching
-//! remedy for the memory-bound cleanup scan). A configured
-//! [`ResponseCache`] is consulted first: repeated queries bypass the
-//! kernels entirely (see [`super::cache`]).
+//! the worker's per-store reused [`ResonatorScratch`] — so item-memory
+//! rows stream once per group instead of once per request (the paper's
+//! batching remedy for the memory-bound cleanup scan), and a batched
+//! kernel call never mixes stores — and therefore never mixes dimensions
+//! or codebooks. Each store's configured [`super::cache::ResponseCache`] is consulted
+//! first: repeated queries bypass the kernels entirely (see
+//! [`super::cache`]).
 
-use super::cache::ResponseCache;
 use super::queue::{AdmissionQueue, ResponseSlot, Ticket};
-use super::shard::ShardedCleanup;
-use super::stats::ServeStats;
-use super::{RequestKind, ServeError, ServeRequest, ServeResponse};
-use crate::vsa::{PruneStats, RealHV, Resonator, ResonatorScratch};
+use super::registry::{StoreId, StoreRegistry};
+use super::stats::{ServeStats, StoreWork};
+use super::{RequestKind, RequestOp, ServeError, ServeRequest, ServeResponse};
+use crate::vsa::{RealHV, Resonator, ResonatorScratch};
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Batch formation policy.
@@ -57,22 +60,23 @@ pub fn gather(queue: &AdmissionQueue, policy: &BatchPolicy) -> Option<Vec<Ticket
     Some(batch)
 }
 
-/// Per-worker reusable buffers: one resonator estimate set + scratch,
-/// allocated lazily on the first factorize request and reused for every
-/// later batch on this worker.
+/// Per-worker reusable buffers: one resonator estimate set + scratch per
+/// store (stores have independent resonator shapes), allocated lazily on
+/// the first factorize request routed to that store on this worker and
+/// reused for every later batch.
 pub struct WorkerScratch {
-    resonator_bufs: Option<(Vec<RealHV>, ResonatorScratch)>,
+    resonator_bufs: BTreeMap<StoreId, (Vec<RealHV>, ResonatorScratch)>,
 }
 
 impl WorkerScratch {
     pub fn new() -> WorkerScratch {
         WorkerScratch {
-            resonator_bufs: None,
+            resonator_bufs: BTreeMap::new(),
         }
     }
 
-    fn bufs(&mut self, res: &Resonator) -> &mut (Vec<RealHV>, ResonatorScratch) {
-        self.resonator_bufs.get_or_insert_with(|| {
+    fn bufs(&mut self, store: StoreId, res: &Resonator) -> &mut (Vec<RealHV>, ResonatorScratch) {
+        self.resonator_bufs.entry(store).or_insert_with(|| {
             let d = res.codebooks()[0].dim();
             (
                 vec![RealHV::zeros(d); res.n_factors()],
@@ -88,39 +92,54 @@ impl Default for WorkerScratch {
     }
 }
 
-/// Execute one gathered batch against the store, record metrics, then
-/// fill every slot. Consumes the tickets (query payloads are moved into
-/// the batched kernel calls without cloning).
+/// One store's slice of a gathered batch, split by request class.
+#[derive(Default)]
+struct StoreGroup {
+    recall_qs: Vec<crate::vsa::BinaryHV>,
+    recall_slots: Vec<(ResponseSlot, Instant)>,
+    topk_qs: Vec<crate::vsa::BinaryHV>,
+    topk_slots: Vec<(ResponseSlot, Instant, usize)>,
+    fact_scenes: Vec<RealHV>,
+    fact_slots: Vec<(ResponseSlot, Instant)>,
+}
+
+impl StoreGroup {
+    fn executed(&self) -> usize {
+        self.recall_qs.len() + self.topk_qs.len() + self.fact_scenes.len()
+    }
+}
+
+/// Execute one gathered batch against the registry's stores, record
+/// metrics, then fill every slot. Consumes the tickets (query payloads
+/// are moved into the batched kernel calls without cloning).
 ///
-/// When a [`ResponseCache`] is configured, cacheable tickets are probed
-/// at batch-formation time: a hit is answered from the cache and never
-/// reaches a kernel call; misses execute batched as before and their
-/// responses are inserted for the next repeat. Cache hits count toward
-/// completion latencies but not batch occupancy (occupancy measures
-/// kernel batching).
+/// The batch is first split per target store (unknown store ids are
+/// answered with [`ServeError::UnknownStore`] — they normally never get
+/// this far because admission validates the id), then per class within
+/// each store, so every batched kernel call sees exactly one store's
+/// codebook and dimension. When a store has a
+/// [`super::cache::ResponseCache`],
+/// cacheable tickets are probed at batch-formation time: a hit is
+/// answered from the cache and never reaches a kernel call; misses
+/// execute batched as before and their responses are inserted for the
+/// next repeat. Cache hits count toward completion latencies but not
+/// batch occupancy (occupancy measures kernel batching).
 ///
 /// Stats are recorded *before* any slot is filled, so a client woken by
 /// its response always observes engine metrics that already include its
 /// own request.
 pub fn execute(
     batch: Vec<Ticket>,
-    store: &ShardedCleanup,
-    resonator: Option<&Resonator>,
-    cache: Option<&ResponseCache>,
+    registry: &StoreRegistry,
     scratch: &mut WorkerScratch,
     stats: &ServeStats,
     scan_threads: usize,
 ) {
     let now = Instant::now();
-    let mut recall_qs = Vec::new();
-    let mut recall_slots: Vec<(ResponseSlot, Instant)> = Vec::new();
-    let mut topk_qs = Vec::new();
-    let mut topk_slots: Vec<(ResponseSlot, Instant, usize)> = Vec::new();
-    let mut fact_scenes = Vec::new();
-    let mut fact_slots: Vec<(ResponseSlot, Instant)> = Vec::new();
+    let mut groups: BTreeMap<StoreId, StoreGroup> = BTreeMap::new();
     let mut expired = 0u64;
     let mut unsupported = 0u64;
-    let mut latencies: Vec<(RequestKind, Duration)> = Vec::with_capacity(batch.len());
+    let mut latencies: Vec<(StoreId, RequestKind, Duration)> = Vec::with_capacity(batch.len());
     // (slot, outcome) pairs, filled only after all metrics are recorded
     let mut fills: Vec<(ResponseSlot, Result<ServeResponse, ServeError>)> =
         Vec::with_capacity(batch.len());
@@ -131,32 +150,41 @@ pub fn execute(
             expired += 1;
             continue;
         }
-        match t.request {
-            ServeRequest::Recall { query } => {
+        let ServeRequest { store: store_id, op } = t.request;
+        let Some(store) = registry.store_by_id(store_id) else {
+            fills.push((t.slot, Err(ServeError::UnknownStore)));
+            unsupported += 1;
+            continue;
+        };
+        let cache = store.cache();
+        match op {
+            RequestOp::Recall { query } => {
                 if query.dim() != store.dim() {
                     fills.push((t.slot, Err(ServeError::InvalidDimension)));
                     unsupported += 1;
                 } else if let Some(resp) = cache.and_then(|c| c.get_recall(&query)) {
-                    latencies.push((RequestKind::Recall, t.enqueued.elapsed()));
+                    latencies.push((store_id, RequestKind::Recall, t.enqueued.elapsed()));
                     fills.push((t.slot, Ok(resp)));
                 } else {
-                    recall_qs.push(query);
-                    recall_slots.push((t.slot, t.enqueued));
+                    let g = groups.entry(store_id).or_default();
+                    g.recall_qs.push(query);
+                    g.recall_slots.push((t.slot, t.enqueued));
                 }
             }
-            ServeRequest::RecallTopK { query, k } => {
+            RequestOp::RecallTopK { query, k } => {
                 if query.dim() != store.dim() {
                     fills.push((t.slot, Err(ServeError::InvalidDimension)));
                     unsupported += 1;
                 } else if let Some(resp) = cache.and_then(|c| c.get_topk(&query, k)) {
-                    latencies.push((RequestKind::RecallTopK, t.enqueued.elapsed()));
+                    latencies.push((store_id, RequestKind::RecallTopK, t.enqueued.elapsed()));
                     fills.push((t.slot, Ok(resp)));
                 } else {
-                    topk_qs.push(query);
-                    topk_slots.push((t.slot, t.enqueued, k));
+                    let g = groups.entry(store_id).or_default();
+                    g.topk_qs.push(query);
+                    g.topk_slots.push((t.slot, t.enqueued, k));
                 }
             }
-            ServeRequest::Factorize { scene } => match resonator {
+            RequestOp::Factorize { scene } => match store.resonator() {
                 None => {
                     fills.push((t.slot, Err(ServeError::Unsupported)));
                     unsupported += 1;
@@ -166,77 +194,102 @@ pub fn execute(
                     unsupported += 1;
                 }
                 Some(_) => {
-                    fact_scenes.push(scene);
-                    fact_slots.push((t.slot, t.enqueued));
+                    let g = groups.entry(store_id).or_default();
+                    g.fact_scenes.push(scene);
+                    g.fact_slots.push((t.slot, t.enqueued));
                 }
             },
         }
     }
 
-    let executed = recall_qs.len() + topk_qs.len() + fact_scenes.len();
-    let mut shard_timings: Vec<(usize, f64)> = Vec::new();
-    let mut prune = PruneStats::default();
+    let executed: usize = groups.values().map(StoreGroup::executed).sum();
+    let mut store_work: Vec<(StoreId, StoreWork)> = Vec::with_capacity(groups.len());
 
-    if !recall_qs.is_empty() {
-        let (results, timings, scan_prune) = store.recall_batch_stats(&recall_qs, scan_threads);
-        shard_timings.extend(timings);
-        prune.merge(&scan_prune);
-        for (((slot, enqueued), (index, cosine)), query) in
-            recall_slots.into_iter().zip(results).zip(recall_qs)
-        {
-            let resp = ServeResponse::Recall { index, cosine };
-            if let Some(c) = cache {
-                c.insert(ServeRequest::Recall { query }, &resp);
+    for (store_id, group) in groups {
+        let store = registry
+            .store_by_id(store_id)
+            .expect("grouped tickets resolved their store above");
+        let cache = store.cache();
+        let mut work = StoreWork::default();
+
+        if !group.recall_qs.is_empty() {
+            let (results, timings, scan_prune) = store
+                .cleanup()
+                .recall_batch_stats(&group.recall_qs, scan_threads);
+            work.timings.extend(timings);
+            work.prune.merge(&scan_prune);
+            for (((slot, enqueued), (index, cosine)), query) in group
+                .recall_slots
+                .into_iter()
+                .zip(results)
+                .zip(group.recall_qs)
+            {
+                let resp = ServeResponse::Recall { index, cosine };
+                if let Some(c) = cache {
+                    c.insert(ServeRequest::recall_on(store_id, query), &resp);
+                }
+                latencies.push((store_id, RequestKind::Recall, enqueued.elapsed()));
+                fills.push((slot, Ok(resp)));
             }
-            latencies.push((RequestKind::Recall, enqueued.elapsed()));
-            fills.push((slot, Ok(resp)));
         }
-    }
 
-    if !topk_qs.is_empty() {
-        // One scan at the batch's largest k; per-ticket answers are
-        // prefixes of it (top-k is prefix-stable in k — see
-        // `BinaryCodebook::top_k`). Cache entries are keyed at each
-        // ticket's own k, so a hit can never leak a different k's answer.
-        let k_max = topk_slots.iter().map(|&(_, _, k)| k).max().unwrap_or(0);
-        let (results, timings, scan_prune) =
-            store.recall_topk_batch_stats(&topk_qs, k_max, scan_threads);
-        shard_timings.extend(timings);
-        prune.merge(&scan_prune);
-        for (((slot, enqueued, k), mut hits), query) in
-            topk_slots.into_iter().zip(results).zip(topk_qs)
-        {
-            hits.truncate(k);
-            let resp = ServeResponse::RecallTopK { hits };
-            if let Some(c) = cache {
-                c.insert(ServeRequest::RecallTopK { query, k }, &resp);
+        if !group.topk_qs.is_empty() {
+            // One scan at the group's largest k; per-ticket answers are
+            // prefixes of it (top-k is prefix-stable in k — see
+            // `BinaryCodebook::top_k`). Cache entries are keyed at each
+            // ticket's own k, so a hit can never leak a different k's
+            // answer.
+            let k_max = group.topk_slots.iter().map(|&(_, _, k)| k).max().unwrap_or(0);
+            let (results, timings, scan_prune) =
+                store
+                    .cleanup()
+                    .recall_topk_batch_stats(&group.topk_qs, k_max, scan_threads);
+            work.timings.extend(timings);
+            work.prune.merge(&scan_prune);
+            for (((slot, enqueued, k), mut hits), query) in group
+                .topk_slots
+                .into_iter()
+                .zip(results)
+                .zip(group.topk_qs)
+            {
+                hits.truncate(k);
+                let resp = ServeResponse::RecallTopK { hits };
+                if let Some(c) = cache {
+                    c.insert(ServeRequest::recall_topk_on(store_id, query, k), &resp);
+                }
+                latencies.push((store_id, RequestKind::RecallTopK, enqueued.elapsed()));
+                fills.push((slot, Ok(resp)));
             }
-            latencies.push((RequestKind::RecallTopK, enqueued.elapsed()));
-            fills.push((slot, Ok(resp)));
         }
-    }
 
-    if !fact_scenes.is_empty() {
-        let res = resonator.expect("factorize tickets imply a resonator");
-        let (estimates, rscratch) = scratch.bufs(res);
-        let decode_before = *rscratch.prune_stats();
-        let results = res.factorize_batch_with(&fact_scenes, estimates, rscratch);
-        // attribute this batch's pruned per-factor index decodes to the
-        // batch telemetry (the scratch accumulates across batches; real
-        // decodes count f32 elements where the binary scans count words,
-        // but streamed and total stay in matching units per scan)
-        prune.merge(&rscratch.prune_stats().delta_since(&decode_before));
-        for ((slot, enqueued), r) in fact_slots.into_iter().zip(results) {
-            latencies.push((RequestKind::Factorize, enqueued.elapsed()));
-            fills.push((
-                slot,
-                Ok(ServeResponse::Factorize {
-                    indices: r.indices,
-                    iterations: r.iterations,
-                    converged: r.converged,
-                }),
-            ));
+        if !group.fact_scenes.is_empty() {
+            let res = store
+                .resonator()
+                .expect("factorize tickets imply their store has a resonator");
+            let (estimates, rscratch) = scratch.bufs(store_id, res);
+            let decode_before = *rscratch.prune_stats();
+            let results = res.factorize_batch_with(&group.fact_scenes, estimates, rscratch);
+            // attribute this batch's pruned per-factor index decodes to
+            // the store's telemetry (the scratch accumulates across
+            // batches; real decodes count f32 elements where the binary
+            // scans count words, but streamed and total stay in matching
+            // units per scan)
+            work.prune
+                .merge(&rscratch.prune_stats().delta_since(&decode_before));
+            for ((slot, enqueued), r) in group.fact_slots.into_iter().zip(results) {
+                latencies.push((store_id, RequestKind::Factorize, enqueued.elapsed()));
+                fills.push((
+                    slot,
+                    Ok(ServeResponse::Factorize {
+                        indices: r.indices,
+                        iterations: r.iterations,
+                        converged: r.converged,
+                    }),
+                ));
+            }
         }
+
+        store_work.push((store_id, work));
     }
 
     if expired > 0 {
@@ -245,7 +298,7 @@ pub fn execute(
     if unsupported > 0 {
         stats.record_unsupported(unsupported);
     }
-    stats.record_batch(executed, &latencies, &shard_timings, &prune);
+    stats.record_batch(executed, &latencies, &store_work);
     for (slot, outcome) in fills {
         slot.fill(outcome);
     }
@@ -253,16 +306,34 @@ pub fn execute(
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use super::super::queue::Priority;
+    use super::super::registry::StoreSpec;
+    use super::*;
     use crate::util::Rng;
     use crate::vsa::{BinaryCodebook, BinaryHV, CleanupMemory, RealCodebook};
 
-    fn make_store(seed: u64) -> (BinaryCodebook, ShardedCleanup) {
+    fn uncached_spec(shards: usize) -> StoreSpec {
+        StoreSpec {
+            shards,
+            cache_capacity: 0,
+            ..StoreSpec::default()
+        }
+    }
+
+    fn single_registry(seed: u64) -> (BinaryCodebook, StoreRegistry) {
         let mut rng = Rng::new(seed);
         let cb = BinaryCodebook::random(&mut rng, 24, 512);
-        let sharded = ShardedCleanup::partition(&cb, 3);
-        (cb, sharded)
+        let registry = StoreRegistry::single(&cb, None, uncached_spec(3));
+        (cb, registry)
+    }
+
+    fn stats_for(registry: &StoreRegistry) -> ServeStats {
+        let names: Vec<(&str, usize)> = registry
+            .stores()
+            .iter()
+            .map(|s| (s.name(), s.n_shards()))
+            .collect();
+        ServeStats::new(&names)
     }
 
     fn ticket(request: ServeRequest, deadline: Duration) -> (Ticket, ResponseSlot) {
@@ -285,10 +356,7 @@ mod tests {
         let q = AdmissionQueue::new(16);
         for i in 0..5 {
             let (t, _slot) = ticket(
-                ServeRequest::RecallTopK {
-                    query: BinaryHV::zeros(64),
-                    k: i,
-                },
+                ServeRequest::recall_topk(BinaryHV::zeros(64), i),
                 Duration::from_secs(1),
             );
             q.push(t).unwrap();
@@ -305,7 +373,8 @@ mod tests {
 
     #[test]
     fn execute_mixed_batch_matches_oracles() {
-        let (cb, store) = make_store(1);
+        let mut rng = Rng::new(1);
+        let cb = BinaryCodebook::random(&mut rng, 24, 512);
         let cm = CleanupMemory::new(cb.clone());
         let mut rng = Rng::new(2);
         let res = Resonator::new(
@@ -314,35 +383,21 @@ mod tests {
                 .collect(),
             40,
         );
+        let mut registry = StoreRegistry::new();
+        registry.register("default", &cb, Some(res.clone()), uncached_spec(3));
         let scene = res.compose(&[1, 4, 2]);
         let q1 = BinaryHV::random(&mut rng, 512);
         let q2 = BinaryHV::random(&mut rng, 512);
 
-        let (t1, s1) = ticket(ServeRequest::Recall { query: q1.clone() }, Duration::from_secs(5));
+        let (t1, s1) = ticket(ServeRequest::recall(q1.clone()), Duration::from_secs(5));
         let (t2, s2) = ticket(
-            ServeRequest::RecallTopK {
-                query: q2.clone(),
-                k: 3,
-            },
+            ServeRequest::recall_topk(q2.clone(), 3),
             Duration::from_secs(5),
         );
-        let (t3, s3) = ticket(
-            ServeRequest::Factorize {
-                scene: scene.clone(),
-            },
-            Duration::from_secs(5),
-        );
-        let stats = ServeStats::new(store.n_shards());
+        let (t3, s3) = ticket(ServeRequest::factorize(scene.clone()), Duration::from_secs(5));
+        let stats = stats_for(&registry);
         let mut scratch = WorkerScratch::new();
-        execute(
-            vec![t1, t2, t3],
-            &store,
-            Some(&res),
-            None,
-            &mut scratch,
-            &stats,
-            1,
-        );
+        execute(vec![t1, t2, t3], &registry, &mut scratch, &stats, 1);
         let (idx, cos) = cm.recall(&q1);
         assert_eq!(s1.wait(), Ok(ServeResponse::Recall { index: idx, cosine: cos }));
         assert_eq!(
@@ -369,32 +424,110 @@ mod tests {
         // recall (24 items) + one top-k (24) + the factorize decode
         // (3 factors x 6 items)
         assert_eq!(snap.prune.items, 24 + 24 + 3 * 6);
+        assert_eq!(snap.stores.len(), 1);
+        assert_eq!(snap.stores[0].completed, 3);
+    }
+
+    #[test]
+    fn multi_store_batch_routes_each_ticket_to_its_own_store() {
+        // two stores with different dimensions and item counts: one
+        // gathered batch containing traffic for both must answer every
+        // ticket from its own store's codebook, and attribute scans to
+        // the right store's telemetry
+        let mut rng = Rng::new(41);
+        let cb_a = BinaryCodebook::random(&mut rng, 24, 512);
+        let cb_b = BinaryCodebook::random(&mut rng, 40, 1024);
+        let cm_a = CleanupMemory::new(cb_a.clone());
+        let cm_b = CleanupMemory::new(cb_b.clone());
+        let mut registry = StoreRegistry::new();
+        let a = registry.register("alpha", &cb_a, None, uncached_spec(2));
+        let b = registry.register("beta", &cb_b, None, uncached_spec(3));
+        let stats = stats_for(&registry);
+        let mut scratch = WorkerScratch::new();
+
+        let qa1 = BinaryHV::random(&mut rng, 512);
+        let qa2 = BinaryHV::random(&mut rng, 512);
+        let qb1 = BinaryHV::random(&mut rng, 1024);
+        let qb2 = BinaryHV::random(&mut rng, 1024);
+        let (t1, s1) = ticket(ServeRequest::recall_on(a, qa1.clone()), Duration::from_secs(5));
+        let (t2, s2) = ticket(ServeRequest::recall_on(b, qb1.clone()), Duration::from_secs(5));
+        let (t3, s3) = ticket(
+            ServeRequest::recall_topk_on(a, qa2.clone(), 3),
+            Duration::from_secs(5),
+        );
+        let (t4, s4) = ticket(
+            ServeRequest::recall_topk_on(b, qb2.clone(), 5),
+            Duration::from_secs(5),
+        );
+        execute(vec![t1, t2, t3, t4], &registry, &mut scratch, &stats, 1);
+        let (idx, cos) = cm_a.recall(&qa1);
+        assert_eq!(s1.wait(), Ok(ServeResponse::Recall { index: idx, cosine: cos }));
+        let (idx, cos) = cm_b.recall(&qb1);
+        assert_eq!(s2.wait(), Ok(ServeResponse::Recall { index: idx, cosine: cos }));
+        assert_eq!(
+            s3.wait(),
+            Ok(ServeResponse::RecallTopK {
+                hits: cm_a.recall_topk(&qa2, 3)
+            })
+        );
+        assert_eq!(
+            s4.wait(),
+            Ok(ServeResponse::RecallTopK {
+                hits: cm_b.recall_topk(&qb2, 5)
+            })
+        );
+        let snap = stats.snapshot();
+        assert_eq!(snap.completed, 4);
+        assert_eq!(snap.batches, 1, "one gathered batch, split per store");
+        // per-store attribution: each kernel call scanned exactly its
+        // own store's items (recall + topk = 2 queries per store), so a
+        // store's prune telemetry counts 2 x its item count — proof the
+        // groups never mixed stores
+        assert_eq!(snap.stores[a.index()].prune.items, 2 * 24);
+        assert_eq!(snap.stores[b.index()].prune.items, 2 * 40);
+        assert_eq!(snap.stores[a.index()].completed, 2);
+        assert_eq!(snap.stores[b.index()].completed, 2);
+        assert!(snap.stores[a.index()].shards.iter().all(|s| s.scans > 0));
+        assert!(snap.stores[b.index()].shards.iter().all(|s| s.scans > 0));
+    }
+
+    #[test]
+    fn unknown_store_is_answered_not_panicking() {
+        let (_, registry) = single_registry(51);
+        let stats = stats_for(&registry);
+        let mut scratch = WorkerScratch::new();
+        let (t_bad, s_bad) = ticket(
+            ServeRequest::recall_on(StoreId(7), BinaryHV::zeros(512)),
+            Duration::from_secs(5),
+        );
+        let (t_ok, s_ok) = ticket(
+            ServeRequest::recall(BinaryHV::zeros(512)),
+            Duration::from_secs(5),
+        );
+        execute(vec![t_bad, t_ok], &registry, &mut scratch, &stats, 1);
+        assert_eq!(s_bad.wait(), Err(ServeError::UnknownStore));
+        assert!(s_ok.wait().is_ok(), "good request in same batch still served");
+        assert_eq!(stats.snapshot().unsupported, 1);
     }
 
     #[test]
     fn mixed_k_topk_batch_answers_each_request_at_its_own_k() {
-        let (cb, store) = make_store(3);
+        let (cb, registry) = single_registry(3);
         let cm = CleanupMemory::new(cb);
         let mut rng = Rng::new(4);
         let queries: Vec<BinaryHV> =
             (0..3).map(|_| BinaryHV::random(&mut rng, 512)).collect();
         let ks = [1usize, 5, 2];
-        let stats = ServeStats::new(store.n_shards());
+        let stats = stats_for(&registry);
         let mut scratch = WorkerScratch::new();
         let mut slots = Vec::new();
         let mut batch = Vec::new();
         for (q, &k) in queries.iter().zip(&ks) {
-            let (t, s) = ticket(
-                ServeRequest::RecallTopK {
-                    query: q.clone(),
-                    k,
-                },
-                Duration::from_secs(5),
-            );
+            let (t, s) = ticket(ServeRequest::recall_topk(q.clone(), k), Duration::from_secs(5));
             batch.push(t);
             slots.push(s);
         }
-        execute(batch, &store, None, None, &mut scratch, &stats, 1);
+        execute(batch, &registry, &mut scratch, &stats, 1);
         for ((q, &k), s) in queries.iter().zip(&ks).zip(slots) {
             assert_eq!(
                 s.wait(),
@@ -407,31 +540,29 @@ mod tests {
 
     #[test]
     fn cache_hits_bypass_kernels_with_identical_responses() {
-        use super::super::cache::{CacheConfig, ResponseCache};
-        let (cb, store) = make_store(9);
-        let cm = CleanupMemory::new(cb);
-        let cache = ResponseCache::new(CacheConfig::default());
-        let stats = ServeStats::new(store.n_shards());
+        let mut rng = Rng::new(9);
+        let cb = BinaryCodebook::random(&mut rng, 24, 512);
+        let cm = CleanupMemory::new(cb.clone());
+        // cached store this time
+        let registry = StoreRegistry::single(&cb, None, StoreSpec {
+            shards: 3,
+            ..StoreSpec::default()
+        });
+        let stats = stats_for(&registry);
         let mut scratch = WorkerScratch::new();
         let mut rng = Rng::new(10);
         let q = BinaryHV::random(&mut rng, 512);
         // first pass: misses, computed by the kernels, inserted
-        let (t1, s1) = ticket(ServeRequest::Recall { query: q.clone() }, Duration::from_secs(5));
-        let (t2, s2) = ticket(
-            ServeRequest::RecallTopK { query: q.clone(), k: 4 },
-            Duration::from_secs(5),
-        );
-        execute(vec![t1, t2], &store, None, Some(&cache), &mut scratch, &stats, 1);
+        let (t1, s1) = ticket(ServeRequest::recall(q.clone()), Duration::from_secs(5));
+        let (t2, s2) = ticket(ServeRequest::recall_topk(q.clone(), 4), Duration::from_secs(5));
+        execute(vec![t1, t2], &registry, &mut scratch, &stats, 1);
         let first_recall = s1.wait().unwrap();
         let first_topk = s2.wait().unwrap();
         let scans_after_first: u64 = stats.snapshot().shards.iter().map(|s| s.scans).sum();
         // second pass: same query → both served from cache, no new scans
-        let (t3, s3) = ticket(ServeRequest::Recall { query: q.clone() }, Duration::from_secs(5));
-        let (t4, s4) = ticket(
-            ServeRequest::RecallTopK { query: q.clone(), k: 4 },
-            Duration::from_secs(5),
-        );
-        execute(vec![t3, t4], &store, None, Some(&cache), &mut scratch, &stats, 1);
+        let (t3, s3) = ticket(ServeRequest::recall(q.clone()), Duration::from_secs(5));
+        let (t4, s4) = ticket(ServeRequest::recall_topk(q.clone(), 4), Duration::from_secs(5));
+        execute(vec![t3, t4], &registry, &mut scratch, &stats, 1);
         assert_eq!(s3.wait().unwrap(), first_recall);
         assert_eq!(s4.wait().unwrap(), first_topk);
         let snap = stats.snapshot();
@@ -442,42 +573,36 @@ mod tests {
         );
         assert_eq!(snap.completed, 4, "cache hits still count as completed");
         assert_eq!(snap.batches, 1, "all-hit batches don't count toward occupancy");
-        let c = cache.counters();
+        let c = registry.stores()[0].cache().unwrap().counters();
         assert_eq!(c.hits, 2);
         assert_eq!(c.misses, 2);
         // a different k is a miss, answered by the kernels at its own k
-        let (t5, s5) = ticket(
-            ServeRequest::RecallTopK { query: q.clone(), k: 2 },
-            Duration::from_secs(5),
-        );
-        execute(vec![t5], &store, None, Some(&cache), &mut scratch, &stats, 1);
+        let (t5, s5) = ticket(ServeRequest::recall_topk(q.clone(), 2), Duration::from_secs(5));
+        execute(vec![t5], &registry, &mut scratch, &stats, 1);
         assert_eq!(
             s5.wait(),
             Ok(ServeResponse::RecallTopK {
                 hits: cm.recall_topk(&q, 2)
             })
         );
-        assert_eq!(cache.counters().hits, 2, "k=2 probe must not hit the k=4 entry");
+        let c = registry.stores()[0].cache().unwrap().counters();
+        assert_eq!(c.hits, 2, "k=2 probe must not hit the k=4 entry");
     }
 
     #[test]
     fn dimension_mismatch_is_refused_not_panicking() {
-        let (_, store) = make_store(7); // dim 512
-        let stats = ServeStats::new(store.n_shards());
+        let (_, registry) = single_registry(7); // dim 512
+        let stats = stats_for(&registry);
         let mut scratch = WorkerScratch::new();
         let (t_bad, s_bad) = ticket(
-            ServeRequest::Recall {
-                query: BinaryHV::zeros(64), // wrong dimension
-            },
+            ServeRequest::recall(BinaryHV::zeros(64)), // wrong dimension
             Duration::from_secs(5),
         );
         let (t_ok, s_ok) = ticket(
-            ServeRequest::Recall {
-                query: BinaryHV::zeros(512),
-            },
+            ServeRequest::recall(BinaryHV::zeros(512)),
             Duration::from_secs(5),
         );
-        execute(vec![t_bad, t_ok], &store, None, None, &mut scratch, &stats, 1);
+        execute(vec![t_bad, t_ok], &registry, &mut scratch, &stats, 1);
         assert_eq!(s_bad.wait(), Err(ServeError::InvalidDimension));
         assert!(s_ok.wait().is_ok(), "good request in same batch still served");
         assert_eq!(stats.snapshot().unsupported, 1);
@@ -485,22 +610,18 @@ mod tests {
 
     #[test]
     fn expired_and_unsupported_are_answered_not_executed() {
-        let (_, store) = make_store(5);
-        let stats = ServeStats::new(store.n_shards());
+        let (_, registry) = single_registry(5);
+        let stats = stats_for(&registry);
         let mut scratch = WorkerScratch::new();
         let (t_expired, s_expired) = ticket(
-            ServeRequest::Recall {
-                query: BinaryHV::zeros(512),
-            },
+            ServeRequest::recall(BinaryHV::zeros(512)),
             Duration::from_secs(0),
         );
         let (t_fact, s_fact) = ticket(
-            ServeRequest::Factorize {
-                scene: crate::vsa::RealHV::zeros(64),
-            },
+            ServeRequest::factorize(crate::vsa::RealHV::zeros(64)),
             Duration::from_secs(5),
         );
-        execute(vec![t_expired, t_fact], &store, None, None, &mut scratch, &stats, 1);
+        execute(vec![t_expired, t_fact], &registry, &mut scratch, &stats, 1);
         assert_eq!(s_expired.wait(), Err(ServeError::DeadlineExceeded));
         assert_eq!(s_fact.wait(), Err(ServeError::Unsupported));
         let snap = stats.snapshot();

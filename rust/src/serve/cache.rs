@@ -1,28 +1,33 @@
-//! Bounded, sharded response cache for the serving engine.
+//! Bounded, sharded per-store response caches for the serving engine.
 //!
 //! Production recall traffic repeats: the same noisy percept or symbol is
 //! looked up again and again (the reuse the paper's Sec. VI co-design
-//! exploits). The cache sits at batch-formation time in
-//! [`super::batcher::execute`]: a hit fills the ticket's response slot
-//! immediately and the request never reaches a kernel, so repeated
-//! queries cost a hash fold instead of an item-memory scan.
+//! exploits). Each registered [`super::Store`] owns one cache; it sits at
+//! batch-formation time in [`super::batcher::execute`]: a hit fills the
+//! ticket's response slot immediately and the request never reaches a
+//! kernel, so repeated queries cost a hash fold instead of an item-memory
+//! scan.
 //!
 //! Keys are **exact**: shard selection and hash-bucket placement use a
-//! 64-bit fold of the query words mixed with the request class and `k`,
-//! but every probe verifies full word-for-word query equality (plus class
-//! and `k`) before serving — a fold collision degrades to a miss-like
-//! walk of a (nearly always single-entry) bucket, never to a wrong
-//! response. Responses are therefore bit-identical to what the kernels
-//! would have produced, and entries can never be served across differing
-//! `k` or request class; `serve-bench`'s oracle verification covers the
-//! whole path. Factorize requests are not cached (real-valued scenes have
-//! no exact equality story under f32 noise).
+//! 64-bit fold of the query words mixed with the request class, `k`, and
+//! the target [`StoreId`], but every probe verifies full word-for-word
+//! query equality (plus class, `k`, and store) before serving — a fold
+//! collision degrades to a miss-like walk of a (nearly always
+//! single-entry) bucket, never to a wrong response. Responses are
+//! therefore bit-identical to what the kernels would have produced, and
+//! entries can never be served across differing `k`, request class, or
+//! store: even if two stores' caches were accidentally swapped, the
+//! store id baked into every key would turn each probe into a miss
+//! instead of a cross-tenant answer. `serve-bench`'s per-store oracle
+//! verification covers the whole path. Factorize requests are not cached
+//! (real-valued scenes have no exact equality story under f32 noise).
 //!
 //! Eviction is per-shard FIFO: each shard holds at most
 //! `capacity / shards` entries and evicts its oldest insertion when full
 //! — bounded memory, no per-hit bookkeeping on the hot path.
 
-use super::{ServeRequest, ServeResponse};
+use super::registry::StoreId;
+use super::{RequestOp, ServeRequest, ServeResponse};
 use crate::vsa::BinaryHV;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -47,7 +52,7 @@ impl Default for CacheConfig {
 }
 
 /// Monotonic counters, snapshotted into
-/// [`super::stats::StatsSnapshot::cache`].
+/// [`super::stats::StoreSnapshot::cache`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheCounters {
     pub hits: u64,
@@ -68,6 +73,15 @@ impl CacheCounters {
             0.0
         }
     }
+
+    /// Element-wise sum — the engine-wide aggregate across store caches.
+    pub fn merge(&mut self, other: &CacheCounters) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.inserts += other.inserts;
+        self.evictions += other.evictions;
+        self.entries += other.entries;
+    }
 }
 
 /// Request-class tag folded into the key so recall and top-k entries can
@@ -75,12 +89,14 @@ impl CacheCounters {
 const CLASS_RECALL: u8 = 1;
 const CLASS_TOPK: u8 = 2;
 
-/// 64-bit fold of the query words, seeded by class and `k` (splitmix-style
-/// multiply-xor mixing; deterministic across runs and platforms).
-fn fold_query(words: &[u64], class: u8, k: usize) -> u64 {
+/// 64-bit fold of the query words, seeded by class, `k`, and store id
+/// (splitmix-style multiply-xor mixing; deterministic across runs and
+/// platforms).
+fn fold_query(words: &[u64], class: u8, k: usize, store: StoreId) -> u64 {
     let mut h = 0x9e37_79b9_7f4a_7c15u64
         ^ (class as u64).wrapping_mul(0xff51_afd7_ed55_8ccd)
-        ^ (k as u64).wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+        ^ (k as u64).wrapping_mul(0xc4ce_b9fe_1a85_ec53)
+        ^ (store.index() as u64).wrapping_mul(0x2545_f491_4f6c_dd1d);
     for &w in words {
         h ^= w;
         h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
@@ -93,6 +109,7 @@ fn fold_query(words: &[u64], class: u8, k: usize) -> u64 {
 /// the response to replay.
 #[derive(Debug)]
 struct Entry {
+    store: StoreId,
     class: u8,
     k: usize,
     query: BinaryHV,
@@ -100,8 +117,8 @@ struct Entry {
 }
 
 impl Entry {
-    fn matches(&self, class: u8, k: usize, query: &BinaryHV) -> bool {
-        self.class == class && self.k == k && &self.query == query
+    fn matches(&self, store: StoreId, class: u8, k: usize, query: &BinaryHV) -> bool {
+        self.store == store && self.class == class && self.k == k && &self.query == query
     }
 }
 
@@ -114,10 +131,13 @@ struct ShardState {
     len: usize,
 }
 
-/// The cache proper. Shared by reference across workers; each operation
-/// locks exactly one shard.
+/// The cache proper: one per registered store. Shared by reference
+/// across workers; each operation locks exactly one shard.
 #[derive(Debug)]
 pub struct ResponseCache {
+    /// The store this cache serves — the default key scope for the
+    /// hot-path probes that carry only a query.
+    store: StoreId,
     shards: Vec<Mutex<ShardState>>,
     per_shard_capacity: usize,
     hits: AtomicU64,
@@ -126,22 +146,30 @@ pub struct ResponseCache {
     evictions: AtomicU64,
 }
 
-/// Class/k/words view of a cacheable request; `None` for factorize.
-fn key_parts(request: &ServeRequest) -> Option<(u8, usize, &BinaryHV)> {
-    match request {
-        ServeRequest::Recall { query } => Some((CLASS_RECALL, 0, query)),
-        ServeRequest::RecallTopK { query, k } => Some((CLASS_TOPK, *k, query)),
-        ServeRequest::Factorize { .. } => None,
+/// Store/class/k/words view of a cacheable request; `None` for factorize.
+fn key_parts(request: &ServeRequest) -> Option<(StoreId, u8, usize, &BinaryHV)> {
+    match &request.op {
+        RequestOp::Recall { query } => Some((request.store, CLASS_RECALL, 0, query)),
+        RequestOp::RecallTopK { query, k } => Some((request.store, CLASS_TOPK, *k, query)),
+        RequestOp::Factorize { .. } => None,
     }
 }
 
 impl ResponseCache {
+    /// Cache scoped to [`StoreId::DEFAULT`] — single-store callers.
     pub fn new(cfg: CacheConfig) -> ResponseCache {
+        Self::for_store(cfg, StoreId::DEFAULT)
+    }
+
+    /// Cache scoped to `store`: hot-path probes fold that store id into
+    /// every key.
+    pub fn for_store(cfg: CacheConfig, store: StoreId) -> ResponseCache {
         let shards = cfg.shards.max(1);
         // round the budget DOWN per shard (min 1) so total residency
         // never exceeds the configured capacity (unless capacity < shards)
         let per_shard_capacity = (cfg.capacity / shards).max(1);
         ResponseCache {
+            store,
             shards: (0..shards).map(|_| Mutex::new(ShardState::default())).collect(),
             per_shard_capacity,
             hits: AtomicU64::new(0),
@@ -149,6 +177,11 @@ impl ResponseCache {
             inserts: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
         }
+    }
+
+    /// The store this cache is scoped to.
+    pub fn store(&self) -> StoreId {
+        self.store
     }
 
     pub fn n_shards(&self) -> usize {
@@ -165,31 +198,34 @@ impl ResponseCache {
         &self.shards[(fold % self.shards.len() as u64) as usize]
     }
 
-    /// Look up a response for `request`. Counts a hit or miss for
-    /// cacheable classes; factorize requests return `None` uncounted.
+    /// Look up a response for `request`, keyed by the request's own
+    /// store id. Counts a hit or miss for cacheable classes; factorize
+    /// requests return `None` uncounted.
     pub fn get(&self, request: &ServeRequest) -> Option<ServeResponse> {
-        let (class, k, query) = key_parts(request)?;
-        self.lookup(class, k, query)
+        let (store, class, k, query) = key_parts(request)?;
+        self.lookup(store, class, k, query)
     }
 
-    /// Probe for a cached recall response (the batcher's hot-path entry;
-    /// avoids materializing a `ServeRequest`).
+    /// Probe for a cached recall response against this cache's own store
+    /// (the batcher's hot-path entry; avoids materializing a
+    /// `ServeRequest`).
     pub fn get_recall(&self, query: &BinaryHV) -> Option<ServeResponse> {
-        self.lookup(CLASS_RECALL, 0, query)
+        self.lookup(self.store, CLASS_RECALL, 0, query)
     }
 
-    /// Probe for a cached top-`k` response at exactly this `k`.
+    /// Probe for a cached top-`k` response at exactly this `k`, against
+    /// this cache's own store.
     pub fn get_topk(&self, query: &BinaryHV, k: usize) -> Option<ServeResponse> {
-        self.lookup(CLASS_TOPK, k, query)
+        self.lookup(self.store, CLASS_TOPK, k, query)
     }
 
-    fn lookup(&self, class: u8, k: usize, query: &BinaryHV) -> Option<ServeResponse> {
-        let fold = fold_query(query.words(), class, k);
+    fn lookup(&self, store: StoreId, class: u8, k: usize, query: &BinaryHV) -> Option<ServeResponse> {
+        let fold = fold_query(query.words(), class, k, store);
         let g = self.shard_of(fold).lock().expect("cache shard poisoned");
         let found = g
             .map
             .get(&fold)
-            .and_then(|bucket| bucket.iter().find(|e| e.matches(class, k, query)))
+            .and_then(|bucket| bucket.iter().find(|e| e.matches(store, class, k, query)))
             .map(|e| e.response.clone());
         drop(g);
         match found {
@@ -208,32 +244,40 @@ impl ResponseCache {
     /// key is already resident). Evicts the shard's oldest insertion when
     /// the shard is at capacity.
     pub fn put(&self, request: &ServeRequest, response: &ServeResponse) {
-        let Some((class, k, query)) = key_parts(request) else {
+        let Some((store, class, k, query)) = key_parts(request) else {
             return;
         };
-        self.insert_parts(class, k, query.clone(), response);
+        self.insert_parts(store, class, k, query.clone(), response);
     }
 
     /// [`Self::put`] taking ownership of the request, so hot-path callers
     /// that already own the query pay no extra clone.
     pub fn insert(&self, request: ServeRequest, response: &ServeResponse) {
-        match request {
-            ServeRequest::Recall { query } => {
-                self.insert_parts(CLASS_RECALL, 0, query, response)
+        let store = request.store;
+        match request.op {
+            RequestOp::Recall { query } => {
+                self.insert_parts(store, CLASS_RECALL, 0, query, response)
             }
-            ServeRequest::RecallTopK { query, k } => {
-                self.insert_parts(CLASS_TOPK, k, query, response)
+            RequestOp::RecallTopK { query, k } => {
+                self.insert_parts(store, CLASS_TOPK, k, query, response)
             }
-            ServeRequest::Factorize { .. } => {}
+            RequestOp::Factorize { .. } => {}
         }
     }
 
-    fn insert_parts(&self, class: u8, k: usize, query: BinaryHV, response: &ServeResponse) {
-        let fold = fold_query(query.words(), class, k);
+    fn insert_parts(
+        &self,
+        store: StoreId,
+        class: u8,
+        k: usize,
+        query: BinaryHV,
+        response: &ServeResponse,
+    ) {
+        let fold = fold_query(query.words(), class, k, store);
         let mut g = self.shard_of(fold).lock().expect("cache shard poisoned");
         let st = &mut *g;
         if let Some(bucket) = st.map.get(&fold) {
-            if bucket.iter().any(|e| e.matches(class, k, &query)) {
+            if bucket.iter().any(|e| e.matches(store, class, k, &query)) {
                 return;
             }
         }
@@ -252,6 +296,7 @@ impl ResponseCache {
             }
         }
         st.map.entry(fold).or_default().push(Entry {
+            store,
             class,
             k,
             query,
@@ -292,14 +337,11 @@ mod tests {
     use crate::util::Rng;
 
     fn recall_req(q: &BinaryHV) -> ServeRequest {
-        ServeRequest::Recall { query: q.clone() }
+        ServeRequest::recall(q.clone())
     }
 
     fn topk_req(q: &BinaryHV, k: usize) -> ServeRequest {
-        ServeRequest::RecallTopK {
-            query: q.clone(),
-            k,
-        }
+        ServeRequest::recall_topk(q.clone(), k)
     }
 
     #[test]
@@ -334,6 +376,34 @@ mod tests {
     }
 
     #[test]
+    fn entries_are_scoped_to_their_store_id() {
+        // one cache per store is the engine's layout; even so, the store
+        // id is part of every key, so a request tagged with a different
+        // store can never be served another tenant's entry
+        let cache = ResponseCache::for_store(CacheConfig::default(), StoreId(0));
+        let mut rng = Rng::new(7);
+        let q = BinaryHV::random(&mut rng, 512);
+        let resp = ServeResponse::Recall {
+            index: 5,
+            cosine: 0.9,
+        };
+        cache.put(&ServeRequest::recall_on(StoreId(0), q.clone()), &resp);
+        assert_eq!(
+            cache.get(&ServeRequest::recall_on(StoreId(0), q.clone())),
+            Some(resp.clone())
+        );
+        assert_eq!(
+            cache.get(&ServeRequest::recall_on(StoreId(1), q.clone())),
+            None,
+            "same query under a different store id must miss"
+        );
+        // hot-path probes are scoped to the cache's own store
+        assert_eq!(cache.get_recall(&q), Some(resp));
+        let other = ResponseCache::for_store(CacheConfig::default(), StoreId(1));
+        assert_eq!(other.get_recall(&q), None);
+    }
+
+    #[test]
     fn duplicate_puts_are_idempotent() {
         let cache = ResponseCache::new(CacheConfig {
             capacity: 8,
@@ -354,9 +424,7 @@ mod tests {
     #[test]
     fn factorize_is_never_cached() {
         let cache = ResponseCache::new(CacheConfig::default());
-        let req = ServeRequest::Factorize {
-            scene: crate::vsa::RealHV::zeros(64),
-        };
+        let req = ServeRequest::factorize(crate::vsa::RealHV::zeros(64));
         assert_eq!(cache.get(&req), None);
         cache.put(
             &req,
@@ -408,14 +476,16 @@ mod tests {
     }
 
     #[test]
-    fn fold_separates_classes_and_k() {
+    fn fold_separates_classes_k_and_stores() {
         let words = [0x1234u64, 0xdeadbeefu64];
-        let a = fold_query(&words, CLASS_RECALL, 0);
-        let b = fold_query(&words, CLASS_TOPK, 0);
-        let c = fold_query(&words, CLASS_TOPK, 1);
+        let a = fold_query(&words, CLASS_RECALL, 0, StoreId(0));
+        let b = fold_query(&words, CLASS_TOPK, 0, StoreId(0));
+        let c = fold_query(&words, CLASS_TOPK, 1, StoreId(0));
+        let d = fold_query(&words, CLASS_RECALL, 0, StoreId(1));
         assert_ne!(a, b);
         assert_ne!(b, c);
+        assert_ne!(a, d, "store id must perturb the fold");
         // deterministic
-        assert_eq!(a, fold_query(&words, CLASS_RECALL, 0));
+        assert_eq!(a, fold_query(&words, CLASS_RECALL, 0, StoreId(0)));
     }
 }

@@ -1,17 +1,20 @@
 //! The serving engine: persistent worker event loops behind a blocking
-//! `submit()` client API.
+//! `submit()` client API, serving every store in a [`StoreRegistry`].
 //!
 //! Clients (any thread) enqueue tickets through the bounded admission
 //! queue; `workers` threads each run gather → execute forever, coalescing
-//! concurrent requests into micro-batches. Shutdown closes the queue,
+//! concurrent requests into micro-batches that execution splits per
+//! `(store, request class)`. Admission validates the request's store id
+//! up front (unknown ids are refused with [`ServeError::UnknownStore`]
+//! before they ever occupy queue capacity). Shutdown closes the queue,
 //! drains every already-admitted ticket (no waiter is ever left hanging),
 //! and joins the workers; `Drop` does the same if `shutdown()` was never
 //! called.
 
 use super::batcher::{self, BatchPolicy, WorkerScratch};
-use super::cache::{CacheConfig, ResponseCache};
+use super::cache::CacheConfig;
 use super::queue::{AdmissionQueue, Priority, ResponseSlot, Ticket};
-use super::shard::ShardedCleanup;
+use super::registry::{StoreRegistry, StoreSpec};
 use super::stats::{ServeStats, StatsSnapshot};
 use super::{ServeError, ServeRequest, ServeResponse};
 use crate::vsa::{BinaryCodebook, Resonator};
@@ -19,13 +22,16 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Engine sizing and policy knobs.
+/// Engine sizing and policy knobs. The store-shaped fields (`shards`,
+/// `sketch_bits`, `cache_capacity`, `cache_shards`) are the spec applied
+/// to the single store the [`ServeEngine::start`] wrapper registers (and
+/// the default [`StoreSpec::from_engine`] pulls for registry callers).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     /// Worker event-loop threads (each gathers and executes whole
     /// micro-batches).
     pub workers: usize,
-    /// Codebook shards in the cleanup store.
+    /// Codebook shards per store (single-store wrapper / spec default).
     pub shards: usize,
     /// Scoped scan threads *per worker* fanning out across shards
     /// (1 = each worker scans its batch serially, shard by shard).
@@ -42,7 +48,8 @@ pub struct EngineConfig {
     /// `None` keeps the per-dimension default, `Some(0)` disables the
     /// sidecars (incremental bounds still prune). `--sketch-bits`.
     pub sketch_bits: Option<usize>,
-    /// Response-cache entry budget; 0 disables the cache. `--cache`.
+    /// Per-store response-cache entry budget; 0 disables the cache.
+    /// `--cache`.
     pub cache_capacity: usize,
     /// Response-cache lock shards. `--cache-shards`.
     pub cache_shards: usize,
@@ -68,9 +75,7 @@ impl Default for EngineConfig {
 
 struct Shared {
     queue: AdmissionQueue,
-    store: ShardedCleanup,
-    resonator: Option<Resonator>,
-    cache: Option<ResponseCache>,
+    registry: StoreRegistry,
     stats: ServeStats,
     policy: BatchPolicy,
     scan_threads: usize,
@@ -94,6 +99,31 @@ impl PendingResponse {
         let (outcome, completed) = self.slot.wait_timed();
         (outcome, completed.duration_since(self.enqueued))
     }
+
+    /// Non-blocking poll: `Ok((outcome, latency))` once the engine has
+    /// answered, `Err(self)` while the request is still in flight (the
+    /// handle is returned so the caller can poll again or fall back to a
+    /// blocking wait). This is the open-loop load generator's harvest
+    /// path and the first step of the async client API.
+    pub fn try_wait(self) -> Result<(Result<ServeResponse, ServeError>, Duration), PendingResponse> {
+        match self.slot.try_take() {
+            Some((outcome, completed)) => Ok((outcome, completed.duration_since(self.enqueued))),
+            None => Err(self),
+        }
+    }
+
+    /// Bounded-blocking poll: wait up to `timeout` for the answer, then
+    /// hand the handle back (`Err(self)`) if the engine still hasn't
+    /// filled it.
+    pub fn wait_timeout(
+        self,
+        timeout: Duration,
+    ) -> Result<(Result<ServeResponse, ServeError>, Duration), PendingResponse> {
+        match self.slot.wait_until(Instant::now() + timeout) {
+            Some((outcome, completed)) => Ok((outcome, completed.duration_since(self.enqueued))),
+            None => Err(self),
+        }
+    }
 }
 
 /// A running serving engine. Cheap to share by reference across client
@@ -105,28 +135,37 @@ pub struct ServeEngine {
 }
 
 impl ServeEngine {
-    /// Shard `codebook`, spawn the worker loops, and start serving.
-    /// `resonator` is optional: engines without one answer factorize
-    /// requests with [`ServeError::Unsupported`].
+    /// Single-store convenience: register `codebook` (and the optional
+    /// `resonator`) as store 0 under the config's store knobs, then start
+    /// serving. Behavior is bit-identical to the pre-registry engine;
+    /// requests built with [`ServeRequest::recall`] and friends route
+    /// here.
     pub fn start(
         codebook: &BinaryCodebook,
         resonator: Option<Resonator>,
         cfg: EngineConfig,
     ) -> ServeEngine {
+        let registry = StoreRegistry::single(codebook, resonator, StoreSpec::from_engine(&cfg));
+        Self::start_registry(registry, cfg)
+    }
+
+    /// Take ownership of a prepared [`StoreRegistry`], spawn the worker
+    /// loops, and start serving all of its stores behind one queue.
+    pub fn start_registry(registry: StoreRegistry, cfg: EngineConfig) -> ServeEngine {
         assert!(cfg.workers >= 1, "engine needs at least one worker");
-        let store = ShardedCleanup::partition_sketched(codebook, cfg.shards.max(1), cfg.sketch_bits);
-        let stats = ServeStats::new(store.n_shards());
-        let cache = (cfg.cache_capacity > 0).then(|| {
-            ResponseCache::new(CacheConfig {
-                capacity: cfg.cache_capacity,
-                shards: cfg.cache_shards.max(1),
-            })
-        });
+        assert!(
+            !registry.is_empty(),
+            "engine needs at least one registered store"
+        );
+        let store_shapes: Vec<(&str, usize)> = registry
+            .stores()
+            .iter()
+            .map(|s| (s.name(), s.n_shards()))
+            .collect();
+        let stats = ServeStats::new(&store_shapes);
         let shared = Arc::new(Shared {
             queue: AdmissionQueue::new(cfg.queue_capacity),
-            store,
-            resonator,
-            cache,
+            registry,
             stats,
             policy: BatchPolicy {
                 max_batch: cfg.max_batch.max(1),
@@ -154,8 +193,12 @@ impl ServeEngine {
         &self.cfg
     }
 
-    pub fn store(&self) -> &ShardedCleanup {
-        &self.shared.store
+    /// The engine's store table: `registry().stores()` for all stores,
+    /// `registry().store_by_id(id)` for one. (The old single-store
+    /// `store()` accessor is gone — with several stores behind the
+    /// engine it had no honest meaning.)
+    pub fn registry(&self) -> &StoreRegistry {
+        &self.shared.registry
     }
 
     /// Blocking submit with default priority and deadline.
@@ -174,15 +217,19 @@ impl ServeEngine {
     }
 
     /// Non-blocking enqueue: admission control runs immediately (so
-    /// `Overloaded`/`ShuttingDown` surface here), execution is awaited
-    /// through the returned [`PendingResponse`]. This is the open-loop
-    /// load generator's entry point.
+    /// `Overloaded`/`ShuttingDown`/`UnknownStore` surface here),
+    /// execution is awaited through the returned [`PendingResponse`].
+    /// This is the open-loop load generator's entry point.
     pub fn submit_async(
         &self,
         request: ServeRequest,
         priority: Priority,
         deadline: Duration,
     ) -> Result<PendingResponse, ServeError> {
+        if self.shared.registry.store_by_id(request.store).is_none() {
+            self.shared.stats.record_unsupported(1);
+            return Err(ServeError::UnknownStore);
+        }
         let slot = ResponseSlot::new();
         let now = Instant::now();
         let ticket = Ticket {
@@ -204,11 +251,20 @@ impl ServeEngine {
         }
     }
 
-    /// Metrics snapshot, including response-cache counters when a cache
-    /// is configured.
+    /// Metrics snapshot, including per-store response-cache counters for
+    /// every store that runs one (and their engine-wide sum).
     pub fn stats(&self) -> StatsSnapshot {
         let mut snap = self.shared.stats.snapshot();
-        snap.cache = self.shared.cache.as_ref().map(|c| c.counters());
+        let mut total = super::cache::CacheCounters::default();
+        let mut any_cache = false;
+        for (section, store) in snap.stores.iter_mut().zip(self.shared.registry.stores()) {
+            section.cache = store.cache().map(|c| c.counters());
+            if let Some(c) = &section.cache {
+                total.merge(c);
+                any_cache = true;
+            }
+        }
+        snap.cache = any_cache.then_some(total);
         snap
     }
 
@@ -234,20 +290,13 @@ impl Drop for ServeEngine {
 fn worker_loop(sh: &Shared) {
     let mut scratch = WorkerScratch::new();
     while let Some(batch) = batcher::gather(&sh.queue, &sh.policy) {
-        batcher::execute(
-            batch,
-            &sh.store,
-            sh.resonator.as_ref(),
-            sh.cache.as_ref(),
-            &mut scratch,
-            &sh.stats,
-            sh.scan_threads,
-        );
+        batcher::execute(batch, &sh.registry, &mut scratch, &sh.stats, sh.scan_threads);
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::registry::StoreId;
     use super::*;
     use crate::util::Rng;
     use crate::vsa::{BinaryHV, CleanupMemory};
@@ -265,13 +314,15 @@ mod tests {
         let mut rng = Rng::new(2);
         for i in 0..8 {
             let q = BinaryHV::random(&mut rng, 1024);
-            let got = eng.submit(ServeRequest::Recall { query: q.clone() }).unwrap();
+            let got = eng.submit(ServeRequest::recall(q.clone())).unwrap();
             let (index, cosine) = cm.recall(&q);
             assert_eq!(got, ServeResponse::Recall { index, cosine }, "req {i}");
         }
         let snap = eng.stats();
         assert_eq!(snap.completed, 8);
         assert_eq!(snap.rejected, 0);
+        assert_eq!(snap.stores.len(), 1, "single-store wrapper registers store 0");
+        assert_eq!(snap.stores[0].completed, 8);
         eng.shutdown();
     }
 
@@ -280,12 +331,8 @@ mod tests {
         let (eng, cm) = engine(EngineConfig::default(), 9);
         let mut rng = Rng::new(10);
         let q = BinaryHV::random(&mut rng, 1024);
-        let first = eng
-            .submit(ServeRequest::Recall { query: q.clone() })
-            .unwrap();
-        let second = eng
-            .submit(ServeRequest::Recall { query: q.clone() })
-            .unwrap();
+        let first = eng.submit(ServeRequest::recall(q.clone())).unwrap();
+        let second = eng.submit(ServeRequest::recall(q.clone())).unwrap();
         assert_eq!(first, second);
         let (index, cosine) = cm.recall(&q);
         assert_eq!(first, ServeResponse::Recall { index, cosine });
@@ -293,6 +340,7 @@ mod tests {
         let cache = snap.cache.expect("default engine config enables the cache");
         assert_eq!(cache.hits, 1);
         assert_eq!(cache.misses, 1);
+        assert_eq!(snap.stores[0].cache.unwrap().hits, 1);
         assert_eq!(snap.completed, 2);
         eng.shutdown();
     }
@@ -309,28 +357,83 @@ mod tests {
         let mut rng = Rng::new(12);
         let q = BinaryHV::random(&mut rng, 1024);
         for _ in 0..2 {
-            eng.submit(ServeRequest::Recall { query: q.clone() }).unwrap();
+            eng.submit(ServeRequest::recall(q.clone())).unwrap();
         }
-        assert!(eng.stats().cache.is_none());
+        let snap = eng.stats();
+        assert!(snap.cache.is_none());
+        assert!(snap.stores[0].cache.is_none());
         eng.shutdown();
     }
 
     #[test]
     fn factorize_without_resonator_is_unsupported() {
         let (eng, _) = engine(EngineConfig::default(), 3);
-        let got = eng.submit(ServeRequest::Factorize {
-            scene: crate::vsa::RealHV::zeros(64),
-        });
+        let got = eng.submit(ServeRequest::factorize(crate::vsa::RealHV::zeros(64)));
         assert_eq!(got, Err(ServeError::Unsupported));
+    }
+
+    #[test]
+    fn unknown_store_is_refused_at_admission() {
+        let (eng, _) = engine(EngineConfig::default(), 13);
+        let got = eng.submit(ServeRequest::recall_on(StoreId(3), BinaryHV::zeros(1024)));
+        assert_eq!(got, Err(ServeError::UnknownStore));
+        let snap = eng.stats();
+        assert_eq!(snap.unsupported, 1);
+        assert_eq!(snap.completed, 0, "refused before reaching a worker");
+        // the engine keeps serving valid store ids afterwards
+        assert!(eng
+            .submit(ServeRequest::recall(BinaryHV::zeros(1024)))
+            .is_ok());
+        eng.shutdown();
+    }
+
+    #[test]
+    fn try_wait_polls_and_hands_the_handle_back() {
+        // deterministic slot-level check: an unfilled pending response
+        // returns itself, a filled one returns the outcome exactly once
+        let slot = ResponseSlot::new();
+        let p = PendingResponse {
+            slot: slot.clone(),
+            enqueued: Instant::now(),
+        };
+        let p = p.try_wait().expect_err("unfilled handle comes back");
+        let p = p
+            .wait_timeout(Duration::from_millis(5))
+            .expect_err("timeout hands the handle back too");
+        slot.fill(Err(ServeError::Overloaded));
+        let (outcome, _lat) = p.try_wait().expect("filled handle resolves");
+        assert_eq!(outcome, Err(ServeError::Overloaded));
+
+        // end-to-end: poll a real submission to completion
+        let (eng, cm) = engine(EngineConfig::default(), 15);
+        let mut rng = Rng::new(16);
+        let q = BinaryHV::random(&mut rng, 1024);
+        let mut pending = eng
+            .submit_async(
+                ServeRequest::recall(q.clone()),
+                Priority::Normal,
+                Duration::from_secs(5),
+            )
+            .unwrap();
+        let outcome = loop {
+            match pending.try_wait() {
+                Ok((outcome, _lat)) => break outcome,
+                Err(p) => {
+                    pending = p;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        };
+        let (index, cosine) = cm.recall(&q);
+        assert_eq!(outcome, Ok(ServeResponse::Recall { index, cosine }));
+        eng.shutdown();
     }
 
     #[test]
     fn zero_deadline_requests_expire_not_execute() {
         let (eng, _) = engine(EngineConfig::default(), 4);
         let got = eng.submit_with(
-            ServeRequest::Recall {
-                query: BinaryHV::zeros(1024),
-            },
+            ServeRequest::recall(BinaryHV::zeros(1024)),
             Priority::Normal,
             Duration::from_secs(0),
         );
@@ -342,9 +445,7 @@ mod tests {
     fn submit_after_shutdown_is_rejected() {
         let (eng, _) = engine(EngineConfig::default(), 5);
         eng.shared.queue.close();
-        let got = eng.submit(ServeRequest::Recall {
-            query: BinaryHV::zeros(1024),
-        });
+        let got = eng.submit(ServeRequest::recall(BinaryHV::zeros(1024)));
         assert_eq!(got, Err(ServeError::ShuttingDown));
     }
 

@@ -1,24 +1,33 @@
-//! Synthetic load generation and the `nscog serve-bench` report.
+//! Synthetic (multi-tenant) load generation and the `nscog serve-bench`
+//! report.
 //!
 //! A [`Fixture`] deterministically generates an NVSA-style request mix —
 //! noisy cleanup recalls, top-k recalls, and resonator factorizations —
-//! plus the sequential unbatched oracle every engine response is checked
-//! against. Two generator shapes drive the engine:
+//! over one or more stores (each its own codebook shape, resonator
+//! configuration, popularity weight, and repeat fraction: the
+//! heterogeneous-workload shape of the paper's Sec. V–VI findings), plus
+//! the per-store sequential unbatched oracle every engine response is
+//! checked against. Two generator shapes drive the engine:
 //!
 //! - **closed loop**: `clients` threads submit back-to-back (each new
 //!   request waits for the previous response) — measures saturated
 //!   throughput and is what forms large micro-batches;
 //! - **open loop**: arrivals follow a fixed-rate schedule regardless of
 //!   completions (the production-realistic shape) — measures latency
-//!   under a target offered load, including queueing delay.
+//!   under a target offered load, including queueing delay. Completions
+//!   are harvested non-blocking between arrivals via
+//!   [`PendingResponse::try_wait`], so a slow response never stalls the
+//!   sender threads.
 //!
 //! `run_bench` compares both against the unbatched single-thread baseline
-//! and emits `BENCH_serve.json` (path override: `NSCOG_SERVE_JSON`).
+//! and emits `BENCH_serve.json` (path override: `NSCOG_SERVE_JSON`) with
+//! one per-store block per registered store.
 
-use super::engine::{EngineConfig, ServeEngine};
+use super::engine::{EngineConfig, PendingResponse, ServeEngine};
 use super::queue::Priority;
+use super::registry::{StoreId, StoreRegistry, StoreSpec};
 use super::stats::{LatencySummary, StatsSnapshot};
-use super::{ServeError, ServeRequest, ServeResponse};
+use super::{RequestOp, ServeError, ServeRequest, ServeResponse};
 use crate::util::bench::Table;
 use crate::util::Rng;
 use crate::vsa::{BinaryCodebook, CleanupMemory, RealCodebook, Resonator};
@@ -39,114 +48,187 @@ impl LoadMix {
     }
 }
 
-/// Fixture sizing (problem shapes + request schedule).
+/// One tenant store's shape and traffic profile.
 #[derive(Debug, Clone)]
-pub struct FixtureConfig {
+pub struct StoreProfile {
+    /// Registration name (`s0`, `s1`, … by convention).
+    pub name: String,
     /// Cleanup-memory items / hypervector dimension.
     pub items: usize,
     pub dim: usize,
-    /// Fraction of bits flipped on recall queries.
-    pub noise_frac: f64,
-    /// `k` for top-k recall requests.
+    /// `k` for this store's top-k recall requests.
     pub topk_k: usize,
     /// Resonator shape: factors × items-per-factor × dimension, max iters.
     pub fact_factors: usize,
     pub fact_items: usize,
     pub fact_dim: usize,
     pub fact_iters: usize,
-    /// Total requests and their class mix.
+    /// Relative popularity weight in the request schedule (skewed tenant
+    /// traffic; stores with weight 0 are treated as weight 1).
+    pub weight: u32,
+    /// Fraction of this store's requests that repeat one of its earlier
+    /// cacheable requests verbatim (production recall traffic repeats;
+    /// this is what the response cache monetizes). 0 disables repeats.
+    pub repeat_frac: f64,
+    /// Per-store sketch sidecar width override (`None` = engine default).
+    pub sketch_bits: Option<usize>,
+}
+
+/// Fixture sizing (per-store problem shapes + shared request schedule).
+#[derive(Debug, Clone)]
+pub struct FixtureConfig {
+    /// One profile per store, [`StoreId`] order.
+    pub stores: Vec<StoreProfile>,
+    /// Fraction of bits flipped on recall queries (all stores).
+    pub noise_frac: f64,
+    /// Total requests across all stores, and their class mix.
     pub requests: usize,
     pub mix: LoadMix,
-    /// Fraction of requests that repeat an earlier cacheable request
-    /// verbatim (production recall traffic repeats; this is what the
-    /// response cache monetizes). 0 disables repeats.
-    pub repeat_frac: f64,
     pub seed: u64,
+}
+
+/// One store's built state: codebook, oracle cleanup memory, resonator.
+pub struct StoreFixture {
+    pub profile: StoreProfile,
+    pub codebook: BinaryCodebook,
+    pub cleanup: CleanupMemory,
+    pub resonator: Resonator,
 }
 
 /// Deterministic workload: stores, request schedule, and oracle inputs.
 pub struct Fixture {
-    pub codebook: BinaryCodebook,
-    pub cleanup: CleanupMemory,
-    pub resonator: Resonator,
+    pub stores: Vec<StoreFixture>,
     pub requests: Vec<ServeRequest>,
     pub cfg: FixtureConfig,
 }
 
 impl Fixture {
-    /// Build stores and a request schedule, all derived from `cfg.seed`.
+    /// Build every store and a request schedule, all derived from
+    /// `cfg.seed`: stores are built in order, then each scheduled request
+    /// first picks its store by popularity weight, then rolls that
+    /// store's repeat fraction, then the class mix.
     pub fn build(cfg: FixtureConfig) -> Fixture {
+        assert!(!cfg.stores.is_empty(), "fixture needs at least one store");
         assert!(cfg.mix.total() > 0, "empty request mix");
         let mut rng = Rng::new(cfg.seed);
-        let codebook = BinaryCodebook::random(&mut rng, cfg.items, cfg.dim);
-        let resonator = Resonator::new(
-            (0..cfg.fact_factors)
-                .map(|_| RealCodebook::random_bipolar(&mut rng, cfg.fact_items, cfg.fact_dim))
-                .collect(),
-            cfg.fact_iters,
-        );
-        let flips = (cfg.dim as f64 * cfg.noise_frac) as usize;
-        let repeat_threshold = (cfg.repeat_frac.clamp(0.0, 1.0) * 1e6) as usize;
+        let stores: Vec<StoreFixture> = cfg
+            .stores
+            .iter()
+            .map(|p| {
+                let codebook = BinaryCodebook::random(&mut rng, p.items, p.dim);
+                let resonator = Resonator::new(
+                    (0..p.fact_factors)
+                        .map(|_| RealCodebook::random_bipolar(&mut rng, p.fact_items, p.fact_dim))
+                        .collect(),
+                    p.fact_iters,
+                );
+                StoreFixture {
+                    cleanup: CleanupMemory::new(codebook.clone()),
+                    codebook,
+                    resonator,
+                    profile: p.clone(),
+                }
+            })
+            .collect();
+        let weight_of = |p: &StoreProfile| p.weight.max(1) as usize;
+        let weight_total: usize = cfg.stores.iter().map(weight_of).sum();
         let mut requests: Vec<ServeRequest> = Vec::with_capacity(cfg.requests);
-        // indices of earlier cacheable (recall / top-k) requests
-        let mut repeatable: Vec<usize> = Vec::new();
+        // per-store indices of earlier cacheable (recall / top-k)
+        // requests — repeats never cross stores
+        let mut repeatable: Vec<Vec<usize>> = vec![Vec::new(); stores.len()];
         for _ in 0..cfg.requests {
+            // pick the store by popularity weight (skewed tenants)
+            let mut roll = rng.below(weight_total);
+            let mut si = stores.len() - 1;
+            for (i, p) in cfg.stores.iter().enumerate() {
+                let w = weight_of(p);
+                if roll < w {
+                    si = i;
+                    break;
+                }
+                roll -= w;
+            }
+            let store_id = StoreId(si);
+            let sf = &stores[si];
+            let p = &sf.profile;
+            let repeat_threshold = (p.repeat_frac.clamp(0.0, 1.0) * 1e6) as usize;
             if repeat_threshold > 0
-                && !repeatable.is_empty()
+                && !repeatable[si].is_empty()
                 && rng.below(1_000_000) < repeat_threshold
             {
-                let src = repeatable[rng.below(repeatable.len())];
+                let src = repeatable[si][rng.below(repeatable[si].len())];
                 let repeat = requests[src].clone();
-                repeatable.push(requests.len());
+                repeatable[si].push(requests.len());
                 requests.push(repeat);
                 continue;
             }
             let roll = rng.below(cfg.mix.total() as usize) as u32;
             if roll < cfg.mix.recall + cfg.mix.topk {
-                repeatable.push(requests.len());
-                let mut query = codebook.item(rng.below(cfg.items)).clone();
-                for i in rng.sample_indices(cfg.dim, flips) {
+                repeatable[si].push(requests.len());
+                let flips = (p.dim as f64 * cfg.noise_frac) as usize;
+                let mut query = sf.codebook.item(rng.below(p.items)).clone();
+                for i in rng.sample_indices(p.dim, flips) {
                     query.set(i, !query.get(i));
                 }
                 if roll < cfg.mix.recall {
-                    requests.push(ServeRequest::Recall { query });
+                    requests.push(ServeRequest::recall_on(store_id, query));
                 } else {
-                    requests.push(ServeRequest::RecallTopK {
-                        query,
-                        k: cfg.topk_k,
-                    });
+                    requests.push(ServeRequest::recall_topk_on(store_id, query, p.topk_k));
                 }
             } else {
-                let truth: Vec<usize> = (0..cfg.fact_factors)
-                    .map(|_| rng.below(cfg.fact_items))
+                let truth: Vec<usize> = (0..p.fact_factors)
+                    .map(|_| rng.below(p.fact_items))
                     .collect();
-                requests.push(ServeRequest::Factorize {
-                    scene: resonator.compose(&truth),
-                });
+                requests.push(ServeRequest::factorize_on(
+                    store_id,
+                    sf.resonator.compose(&truth),
+                ));
             }
         }
         Fixture {
-            cleanup: CleanupMemory::new(codebook.clone()),
-            codebook,
-            resonator,
+            stores,
             requests,
             cfg,
         }
     }
 
-    /// Answer one request with the sequential, unbatched, unsharded
-    /// kernels — the correctness oracle and the baseline's inner loop.
+    /// Register every store with the engine-level spec defaults
+    /// (per-store `sketch_bits` overrides applied) — what `run_bench`
+    /// and the e2e tests hand to [`ServeEngine::start_registry`].
+    pub fn registry(&self, engine: &EngineConfig) -> StoreRegistry {
+        let mut reg = StoreRegistry::new();
+        for sf in &self.stores {
+            let spec = StoreSpec {
+                shards: engine.shards,
+                sketch_bits: sf.profile.sketch_bits.or(engine.sketch_bits),
+                cache_capacity: engine.cache_capacity,
+                cache_shards: engine.cache_shards,
+            };
+            reg.register(
+                &sf.profile.name,
+                &sf.codebook,
+                Some(sf.resonator.clone()),
+                spec,
+            );
+        }
+        reg
+    }
+
+    /// Answer one request with its store's sequential, unbatched,
+    /// unsharded kernels — the correctness oracle and the baseline's
+    /// inner loop.
     pub fn oracle_answer(&self, req: &ServeRequest) -> ServeResponse {
-        match req {
-            ServeRequest::Recall { query } => {
-                let (index, cosine) = self.cleanup.recall(query);
+        let sf = &self.stores[req.store.index()];
+        match &req.op {
+            RequestOp::Recall { query } => {
+                let (index, cosine) = sf.cleanup.recall(query);
                 ServeResponse::Recall { index, cosine }
             }
-            ServeRequest::RecallTopK { query, k } => ServeResponse::RecallTopK {
-                hits: self.cleanup.recall_topk(query, *k),
+            RequestOp::RecallTopK { query, k } => ServeResponse::RecallTopK {
+                hits: sf.cleanup.recall_topk(query, *k),
             },
-            ServeRequest::Factorize { scene } => {
-                let r = self.resonator.factorize(scene);
+            RequestOp::Factorize { scene } => {
+                let r = sf.resonator.factorize(scene);
                 ServeResponse::Factorize {
                     indices: r.indices,
                     iterations: r.iterations,
@@ -210,11 +292,11 @@ impl LoadReport {
                 }
                 Err(ServeError::Overloaded) | Err(ServeError::ShuttingDown) => rejected += 1,
                 Err(ServeError::DeadlineExceeded) => expired += 1,
-                // the fixture never generates these, so either means the
-                // engine under test is misconfigured — flag it
-                Err(ServeError::Unsupported) | Err(ServeError::InvalidDimension) => {
-                    mismatches += 1
-                }
+                // the fixture never generates these, so any of them means
+                // the engine under test is misconfigured — flag it
+                Err(ServeError::Unsupported)
+                | Err(ServeError::InvalidDimension)
+                | Err(ServeError::UnknownStore) => mismatches += 1,
             }
             latencies_s.push(lat);
             outcomes.push(outcome);
@@ -293,11 +375,29 @@ pub fn run_closed_loop(
     LoadReport::assemble(t0.elapsed().as_secs_f64(), tagged, oracle)
 }
 
+/// Drain every pending entry that has already completed, without
+/// blocking, via [`PendingResponse::try_wait`]; unfinished handles are
+/// kept pending.
+fn harvest_completed(
+    pending: &mut Vec<(usize, PendingResponse)>,
+    done: &mut Vec<(usize, Result<ServeResponse, ServeError>, f64)>,
+) {
+    let mut still = Vec::with_capacity(pending.len());
+    for (i, p) in pending.drain(..) {
+        match p.try_wait() {
+            Ok((outcome, lat)) => done.push((i, outcome, lat.as_secs_f64())),
+            Err(p) => still.push((i, p)),
+        }
+    }
+    *pending = still;
+}
+
 /// Open loop: arrivals paced at `rate_qps` from a shared schedule,
-/// dispatched non-blocking by `senders` threads; responses are harvested
-/// after dispatch, so slow completions never stall later arrivals.
-/// Latency is measured enqueue → worker-fill (queueing included).
-/// `oracle` as in [`run_closed_loop`].
+/// dispatched non-blocking by `senders` threads; completions are
+/// harvested non-blocking between arrivals (the `try_wait` poll), with a
+/// final blocking drain after the schedule is exhausted — so slow
+/// completions never stall later arrivals. Latency is measured enqueue →
+/// worker-fill (queueing included). `oracle` as in [`run_closed_loop`].
 pub fn run_open_loop(
     engine: &ServeEngine,
     fixture: &Fixture,
@@ -321,7 +421,7 @@ pub fn run_open_loop(
             let handles: Vec<_> = (0..senders)
                 .map(|_| {
                     s.spawn(move || {
-                        let mut pending = Vec::new();
+                        let mut pending: Vec<(usize, PendingResponse)> = Vec::new();
                         let mut done = Vec::new();
                         loop {
                             let i = next.fetch_add(1, Ordering::Relaxed);
@@ -341,7 +441,9 @@ pub fn run_open_loop(
                                 Ok(p) => pending.push((i, p)),
                                 Err(e) => done.push((i, Err(e), 0.0)),
                             }
+                            harvest_completed(&mut pending, &mut done);
                         }
+                        // blocking drain of whatever is still in flight
                         for (i, p) in pending {
                             let (outcome, lat) = p.wait_with_latency();
                             done.push((i, outcome, lat.as_secs_f64()));
@@ -376,21 +478,26 @@ impl BenchOpts {
     pub fn smoke() -> BenchOpts {
         BenchOpts {
             fixture: FixtureConfig {
-                items: 96,
-                dim: 2048,
+                stores: vec![StoreProfile {
+                    name: "default".into(),
+                    items: 96,
+                    dim: 2048,
+                    topk_k: 3,
+                    fact_factors: 3,
+                    fact_items: 8,
+                    fact_dim: 512,
+                    fact_iters: 30,
+                    weight: 1,
+                    repeat_frac: 0.25,
+                    sketch_bits: None,
+                }],
                 noise_frac: 0.2,
-                topk_k: 3,
-                fact_factors: 3,
-                fact_items: 8,
-                fact_dim: 512,
-                fact_iters: 30,
                 requests: 400,
                 mix: LoadMix {
                     recall: 6,
                     topk: 1,
                     factorize: 1,
                 },
-                repeat_frac: 0.25,
                 seed: 2024,
             },
             engine: EngineConfig {
@@ -414,21 +521,26 @@ impl BenchOpts {
     pub fn standard() -> BenchOpts {
         BenchOpts {
             fixture: FixtureConfig {
-                items: 120,
-                dim: 8192,
+                stores: vec![StoreProfile {
+                    name: "default".into(),
+                    items: 120,
+                    dim: 8192,
+                    topk_k: 5,
+                    fact_factors: 3,
+                    fact_items: 10,
+                    fact_dim: 1024,
+                    fact_iters: 60,
+                    weight: 1,
+                    repeat_frac: 0.25,
+                    sketch_bits: None,
+                }],
                 noise_frac: 0.2,
-                topk_k: 5,
-                fact_factors: 3,
-                fact_items: 10,
-                fact_dim: 1024,
-                fact_iters: 60,
                 requests: 2000,
                 mix: LoadMix {
                     recall: 6,
                     topk: 1,
                     factorize: 1,
                 },
-                repeat_frac: 0.25,
                 seed: 2024,
             },
             engine: EngineConfig::default(),
@@ -436,6 +548,26 @@ impl BenchOpts {
             open_loop_qps: None,
             json_path: None,
         }
+    }
+
+    /// Expand the fixture to `n` stores (the `--stores N` knob): store
+    /// `i` derives from the base profile with dims alternating base /
+    /// 2×base (heterogeneous tenants) and popularity halving per store
+    /// (skewed mix: store 0 is the hottest tenant; weights are capped at
+    /// 64×, so beyond 7 stores the hottest tenants plateau rather than
+    /// grow unboundedly skewed). Per-store dim / item / sketch / weight
+    /// / repeat overrides can then be layered on by the caller.
+    pub fn with_stores(&mut self, n: usize) {
+        let n = n.max(1);
+        let base = self.fixture.stores[0].clone();
+        self.fixture.stores = (0..n)
+            .map(|i| StoreProfile {
+                name: format!("s{i}"),
+                dim: base.dim << (i % 2),
+                weight: 1u32 << (n - 1 - i).min(6),
+                ..base.clone()
+            })
+            .collect();
     }
 }
 
@@ -542,17 +674,57 @@ impl BenchReport {
                 p.mismatches
             )
         };
+        let prune_json = |p: &crate::vsa::PruneStats| {
+            format!(
+                "{{\"items\": {}, \"sketch_rejected\": {}, \"early_terminated\": {}, \"words_streamed\": {}, \"words_total\": {}, \"sketch_reject_rate\": {:.4}, \"words_frac\": {:.4}}}",
+                p.items,
+                p.sketch_rejected,
+                p.early_terminated,
+                p.words_streamed,
+                p.words_total,
+                p.sketch_reject_rate(),
+                p.words_frac()
+            )
+        };
+        let cache_json = |c: &Option<super::cache::CacheCounters>| match c {
+            Some(c) => format!(
+                "{{\"hits\": {}, \"misses\": {}, \"inserts\": {}, \"evictions\": {}, \"entries\": {}, \"hit_rate\": {:.4}}}",
+                c.hits,
+                c.misses,
+                c.inserts,
+                c.evictions,
+                c.entries,
+                c.hit_rate()
+            ),
+            None => "null".into(),
+        };
+        let shards_json = |shards: &[super::stats::ShardStat]| {
+            let mut s = String::from("[");
+            for (i, sh) in shards.iter().enumerate() {
+                if i > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!(
+                    "{{\"scans\": {}, \"busy_s\": {:e}}}",
+                    sh.scans, sh.busy_s
+                ));
+            }
+            s.push(']');
+            s
+        };
         let f = &self.opts.fixture;
         let e = &self.opts.engine;
+        let base = &f.stores[0];
+        let simd_tier = crate::vsa::kernels::active_tier().name();
         let mut out = String::from("{\n  \"bench\": \"serve\",\n");
         // which kernel code path produced these numbers (PERF.md
         // attribution): the process-wide SIMD dispatch tier
+        out.push_str(&format!("  \"simd\": \"{simd_tier}\",\n"));
+        out.push_str(&format!("  \"store_count\": {},\n", f.stores.len()));
+        // legacy single-store config fields report store 0 (the hottest
+        // tenant); the per-store truth is in the "stores" array below
         out.push_str(&format!(
-            "  \"simd\": \"{}\",\n",
-            crate::vsa::kernels::active_tier().name()
-        ));
-        out.push_str(&format!(
-            "  \"config\": {{\"requests\": {}, \"clients\": {}, \"workers\": {}, \"shards\": {}, \"scan_threads\": {}, \"max_batch\": {}, \"max_delay_us\": {}, \"queue_capacity\": {}, \"items\": {}, \"dim\": {}, \"mix\": \"{}:{}:{}\", \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"cache_capacity\": {}, \"cache_shards\": {}, \"seed\": {}}},\n",
+            "  \"config\": {{\"requests\": {}, \"clients\": {}, \"workers\": {}, \"shards\": {}, \"scan_threads\": {}, \"max_batch\": {}, \"max_delay_us\": {}, \"queue_capacity\": {}, \"items\": {}, \"dim\": {}, \"mix\": \"{}:{}:{}\", \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"cache_capacity\": {}, \"cache_shards\": {}, \"stores\": {}, \"seed\": {}}},\n",
             f.requests,
             self.opts.clients,
             e.workers,
@@ -561,18 +733,19 @@ impl BenchReport {
             e.max_batch,
             e.max_delay.as_micros(),
             e.queue_capacity,
-            f.items,
-            f.dim,
+            base.items,
+            base.dim,
             f.mix.recall,
             f.mix.topk,
             f.mix.factorize,
-            f.repeat_frac,
+            base.repeat_frac,
             match e.sketch_bits {
                 Some(b) => b.to_string(),
                 None => "null".into(),
             },
             e.cache_capacity,
             e.cache_shards,
+            f.stores.len(),
             f.seed
         ));
         out.push_str(&format!(
@@ -594,41 +767,38 @@ impl BenchReport {
             "  \"batching\": {{\"batches\": {}, \"mean_batch\": {:.3}, \"max_batch\": {}}},\n",
             self.stats.batches, self.stats.mean_batch, self.stats.max_batch
         ));
-        out.push_str("  \"shards\": [");
-        for (i, sh) in self.stats.shards.iter().enumerate() {
-            if i > 0 {
-                out.push_str(", ");
-            }
+        // engine-wide aggregates (concatenated shards, merged prune,
+        // summed cache) — kept for single-store consumers
+        out.push_str(&format!("  \"shards\": {},\n", shards_json(&self.stats.shards)));
+        out.push_str(&format!("  \"prune\": {},\n", prune_json(&self.stats.prune)));
+        out.push_str(&format!("  \"cache\": {},\n", cache_json(&self.stats.cache)));
+        // per-store blocks: each carries the simd tier + store count so
+        // multi-store runs stay attributable next to the PR 4
+        // simd_speedups gate
+        out.push_str("  \"stores\": [\n");
+        for (i, section) in self.stats.stores.iter().enumerate() {
+            let profile = f.stores.get(i);
             out.push_str(&format!(
-                "{{\"scans\": {}, \"busy_s\": {:e}}}",
-                sh.scans, sh.busy_s
+                "    {{\"id\": {}, \"name\": \"{}\", \"simd\": \"{simd_tier}\", \"store_count\": {}, \"dim\": {}, \"items\": {}, \"weight\": {}, \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"completed\": {}, \"latency\": {}, \"shards\": {}, \"prune\": {}, \"cache\": {}}}{}\n",
+                section.id.index(),
+                section.name,
+                f.stores.len(),
+                profile.map_or(0, |p| p.dim),
+                profile.map_or(0, |p| p.items),
+                profile.map_or(0, |p| p.weight),
+                profile.map_or(0.0, |p| p.repeat_frac),
+                profile
+                    .and_then(|p| p.sketch_bits)
+                    .map_or("null".into(), |b| b.to_string()),
+                section.completed,
+                lat(&section.latency),
+                shards_json(&section.shards),
+                prune_json(&section.prune),
+                cache_json(&section.cache),
+                if i + 1 < self.stats.stores.len() { "," } else { "" },
             ));
         }
-        out.push_str("],\n");
-        let p = &self.stats.prune;
-        out.push_str(&format!(
-            "  \"prune\": {{\"items\": {}, \"sketch_rejected\": {}, \"early_terminated\": {}, \"words_streamed\": {}, \"words_total\": {}, \"sketch_reject_rate\": {:.4}, \"words_frac\": {:.4}}},\n",
-            p.items,
-            p.sketch_rejected,
-            p.early_terminated,
-            p.words_streamed,
-            p.words_total,
-            p.sketch_reject_rate(),
-            p.words_frac()
-        ));
-        match &self.stats.cache {
-            Some(c) => out.push_str(&format!(
-                "  \"cache\": {{\"hits\": {}, \"misses\": {}, \"inserts\": {}, \"evictions\": {}, \"entries\": {}, \"hit_rate\": {:.4}}}\n",
-                c.hits,
-                c.misses,
-                c.inserts,
-                c.evictions,
-                c.entries,
-                c.hit_rate()
-            )),
-            None => out.push_str("  \"cache\": null\n"),
-        }
-        out.push_str("}\n");
+        out.push_str("  ]\n}\n");
         out
     }
 
@@ -645,7 +815,8 @@ impl BenchReport {
 }
 
 /// Run the full serve benchmark: baseline, closed loop, optional open
-/// loop; every engine response verified against the sequential oracle.
+/// loop; every engine response verified against its store's sequential
+/// oracle.
 pub fn run_bench(opts: BenchOpts) -> BenchReport {
     let fixture = Fixture::build(opts.fixture.clone());
     // the timed baseline pass doubles as the oracle for both generators
@@ -655,11 +826,7 @@ pub fn run_bench(opts: BenchOpts) -> BenchReport {
     } else {
         0.0
     };
-    let engine = ServeEngine::start(
-        &fixture.codebook,
-        Some(fixture.resonator.clone()),
-        opts.engine.clone(),
-    );
+    let engine = ServeEngine::start_registry(fixture.registry(&opts.engine), opts.engine.clone());
     let closed = run_closed_loop(&engine, &fixture, opts.clients, &oracle);
     let open = opts.open_loop_qps.map(|rate| {
         (
@@ -683,23 +850,32 @@ pub fn run_bench(opts: BenchOpts) -> BenchReport {
 mod tests {
     use super::*;
 
-    fn tiny_fixture() -> FixtureConfig {
-        FixtureConfig {
+    fn tiny_profile() -> StoreProfile {
+        StoreProfile {
+            name: "default".into(),
             items: 24,
             dim: 512,
-            noise_frac: 0.2,
             topk_k: 3,
             fact_factors: 3,
             fact_items: 6,
             fact_dim: 256,
             fact_iters: 20,
+            weight: 1,
+            repeat_frac: 0.0,
+            sketch_bits: None,
+        }
+    }
+
+    fn tiny_fixture() -> FixtureConfig {
+        FixtureConfig {
+            stores: vec![tiny_profile()],
+            noise_frac: 0.2,
             requests: 60,
             mix: LoadMix {
                 recall: 4,
                 topk: 1,
                 factorize: 1,
             },
-            repeat_frac: 0.0,
             seed: 7,
         }
     }
@@ -718,17 +894,14 @@ mod tests {
     #[test]
     fn closed_loop_matches_oracle_bit_exactly() {
         let fixture = Fixture::build(tiny_fixture());
-        let engine = ServeEngine::start(
-            &fixture.codebook,
-            Some(fixture.resonator.clone()),
-            EngineConfig {
-                workers: 2,
-                shards: 3,
-                max_batch: 8,
-                max_delay: Duration::from_millis(1),
-                ..EngineConfig::default()
-            },
-        );
+        let cfg = EngineConfig {
+            workers: 2,
+            shards: 3,
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            ..EngineConfig::default()
+        };
+        let engine = ServeEngine::start_registry(fixture.registry(&cfg), cfg);
         let report = run_closed_loop(&engine, &fixture, 6, &fixture.oracle());
         assert_eq!(report.ok, 60);
         assert_eq!(report.rejected, 0);
@@ -743,11 +916,8 @@ mod tests {
             requests: 40,
             ..tiny_fixture()
         });
-        let engine = ServeEngine::start(
-            &fixture.codebook,
-            Some(fixture.resonator.clone()),
-            EngineConfig::default(),
-        );
+        let cfg = EngineConfig::default();
+        let engine = ServeEngine::start_registry(fixture.registry(&cfg), cfg);
         // high rate so the test stays fast; still a schedule, not a loop
         let report = run_open_loop(&engine, &fixture, 4000.0, 4, &fixture.oracle());
         assert_eq!(report.ok + report.rejected + report.expired, 40);
@@ -757,11 +927,81 @@ mod tests {
     }
 
     #[test]
+    fn multi_store_mix_is_skewed_and_every_store_matches_its_oracle() {
+        // three stores with different dims and popularity weights: the
+        // schedule must cover all of them, skew toward store 0, and the
+        // engine must answer every request from the right store
+        let mut cfg = tiny_fixture();
+        cfg.requests = 120;
+        cfg.stores = vec![
+            StoreProfile {
+                name: "s0".into(),
+                weight: 4,
+                ..tiny_profile()
+            },
+            StoreProfile {
+                name: "s1".into(),
+                dim: 1024,
+                items: 40,
+                topk_k: 5,
+                weight: 2,
+                ..tiny_profile()
+            },
+            StoreProfile {
+                name: "s2".into(),
+                dim: 2048,
+                items: 16,
+                weight: 1,
+                ..tiny_profile()
+            },
+        ];
+        let a = Fixture::build(cfg.clone());
+        let b = Fixture::build(cfg);
+        let counts = |f: &Fixture| {
+            let mut c = vec![0usize; f.stores.len()];
+            for r in &f.requests {
+                c[r.store.index()] += 1;
+            }
+            c
+        };
+        assert_eq!(a.requests, b.requests, "multi-store schedule stays deterministic");
+        let c = counts(&a);
+        assert!(c.iter().all(|&n| n > 0), "every store receives traffic: {c:?}");
+        assert!(c[0] > c[2], "weight-4 store must out-draw weight-1: {c:?}");
+
+        let ecfg = EngineConfig {
+            workers: 3,
+            shards: 2,
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            ..EngineConfig::default()
+        };
+        let engine = ServeEngine::start_registry(a.registry(&ecfg), ecfg);
+        let report = run_closed_loop(&engine, &a, 6, &a.oracle());
+        assert_eq!(report.ok, 120);
+        assert_eq!(
+            report.mismatches, 0,
+            "every response must match its own store's oracle"
+        );
+        let snap = engine.stats();
+        assert_eq!(snap.stores.len(), 3);
+        let completed: Vec<u64> = snap.stores.iter().map(|s| s.completed).collect();
+        assert_eq!(completed.iter().sum::<u64>(), 120);
+        assert_eq!(
+            completed,
+            c.iter().map(|&n| n as u64).collect::<Vec<_>>(),
+            "per-store completion counts must match the schedule"
+        );
+        engine.shutdown();
+    }
+
+    #[test]
     fn bench_report_json_is_well_formed() {
         let mut opts = BenchOpts::smoke();
-        opts.fixture.requests = 40;
-        opts.fixture.dim = 512;
-        opts.fixture.items = 24;
+        opts.fixture.requests = 60;
+        opts.fixture.stores[0].dim = 512;
+        opts.fixture.stores[0].items = 24;
+        opts.with_stores(2);
         opts.clients = 4;
         let report = run_bench(opts);
         assert_eq!(report.closed.mismatches, 0);
@@ -780,20 +1020,60 @@ mod tests {
         assert!(parsed.get("speedup_qps").is_some());
         assert!(parsed.get("prune").is_some());
         assert!(parsed.get("cache").is_some());
+        assert_eq!(
+            parsed.get("store_count").and_then(|n| n.as_f64()),
+            Some(2.0)
+        );
+        let stores = parsed
+            .get("stores")
+            .and_then(|s| s.as_arr())
+            .expect("per-store blocks present");
+        assert_eq!(stores.len(), 2);
+        for block in stores {
+            assert_eq!(
+                block.get("simd").and_then(|s| s.as_str()),
+                Some(crate::vsa::kernels::active_tier().name()),
+                "each per-store block carries the simd tier"
+            );
+            assert_eq!(
+                block.get("store_count").and_then(|n| n.as_f64()),
+                Some(2.0),
+                "each per-store block carries the store count"
+            );
+            assert!(block.get("prune").is_some());
+            assert!(block.get("completed").is_some());
+        }
         // table renders without panicking
         let _ = report.table().to_string();
+    }
+
+    #[test]
+    fn with_stores_expands_with_skewed_weights_and_alternating_dims() {
+        let mut opts = BenchOpts::smoke();
+        opts.with_stores(3);
+        let s = &opts.fixture.stores;
+        assert_eq!(s.len(), 3);
+        assert_eq!(
+            s.iter().map(|p| p.name.as_str()).collect::<Vec<_>>(),
+            ["s0", "s1", "s2"]
+        );
+        assert_eq!(s[0].weight, 4);
+        assert_eq!(s[1].weight, 2);
+        assert_eq!(s[2].weight, 1);
+        assert_eq!(s[0].dim, 2048);
+        assert_eq!(s[1].dim, 4096, "odd stores double the base dim");
+        assert_eq!(s[2].dim, 2048);
+        assert!(s.iter().all(|p| (p.repeat_frac - 0.25).abs() < 1e-12));
     }
 
     #[test]
     fn repeated_mix_is_deterministic_and_cache_serves_it_exactly() {
         // dim 2048: rows are several bound chunks long, so the serve
         // scans actually prune (512-bit rows are a single chunk)
-        let cfg = FixtureConfig {
-            repeat_frac: 0.5,
-            requests: 80,
-            dim: 2048,
-            ..tiny_fixture()
-        };
+        let mut cfg = tiny_fixture();
+        cfg.requests = 80;
+        cfg.stores[0].dim = 2048;
+        cfg.stores[0].repeat_frac = 0.5;
         let a = Fixture::build(cfg.clone());
         let b = Fixture::build(cfg);
         assert_eq!(a.requests, b.requests, "repeats must stay deterministic");
@@ -804,15 +1084,12 @@ mod tests {
             .enumerate()
             .any(|(i, r)| a.requests[..i].contains(r));
         assert!(dup, "repeat_frac=0.5 over 80 requests must produce repeats");
-        let engine = ServeEngine::start(
-            &a.codebook,
-            Some(a.resonator.clone()),
-            EngineConfig {
-                workers: 2,
-                shards: 3,
-                ..EngineConfig::default()
-            },
-        );
+        let ecfg = EngineConfig {
+            workers: 2,
+            shards: 3,
+            ..EngineConfig::default()
+        };
+        let engine = ServeEngine::start_registry(a.registry(&ecfg), ecfg);
         let report = run_closed_loop(&engine, &a, 6, &a.oracle());
         assert_eq!(report.ok, 80);
         assert_eq!(report.mismatches, 0, "cached responses diverged from oracle");

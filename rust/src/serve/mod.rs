@@ -1,4 +1,5 @@
-//! `serve/` — sharded, dynamically-batched VSA query serving engine.
+//! `serve/` — sharded, dynamically-batched, multi-store VSA query
+//! serving engine.
 //!
 //! The paper's characterization (Sec. V) shows the symbolic kernels —
 //! cleanup scans and resonator iteration — are memory-bound with little
@@ -9,53 +10,64 @@
 //! builds the request path that actually *forms* those batches under
 //! concurrent load:
 //!
+//! - [`registry`]: N named stores behind one queue — each its own sharded
+//!   codebook, resonator shape, response cache, and prune/latency
+//!   accounting; requests route on a [`StoreId`].
 //! - [`shard`]: codebooks partitioned into contiguous shards, scanned on
 //!   worker threads via [`crate::util::parallel`], per-shard top-k merged
 //!   under the same (score desc, index asc) order as the unsharded scan.
 //! - [`queue`]: a bounded admission queue with deadlines, reject-on-full
 //!   backpressure, and FIFO-within-priority ordering.
 //! - [`batcher`]: a dynamic micro-batcher coalescing concurrent requests
-//!   into single batched-kernel calls under a max-batch/max-delay policy,
-//!   reusing one [`crate::vsa::ResonatorScratch`] per worker.
+//!   into batched-kernel calls under a max-batch/max-delay policy — one
+//!   call per `(store, request class)` group, so a batched kernel call
+//!   never mixes stores (or dimensions) — reusing per-store
+//!   [`crate::vsa::ResonatorScratch`] buffers per worker.
 //! - [`engine`]: the persistent worker event loop behind a blocking
-//!   [`engine::ServeEngine::submit`] client API.
-//! - [`stats`]: per-shard, per-batch, and per-class latency / throughput /
-//!   batch-occupancy metrics.
-//! - [`cache`]: a bounded, sharded response cache probed at
+//!   [`engine::ServeEngine::submit`] client API (plus the non-blocking
+//!   [`engine::PendingResponse::try_wait`] poll).
+//! - [`stats`]: per-store, per-shard, per-batch, and per-class latency /
+//!   throughput / batch-occupancy metrics.
+//! - [`cache`]: bounded, sharded per-store response caches probed at
 //!   batch-formation time — repeated queries bypass the kernels entirely,
-//!   with exact (full-equality-verified) keys over query × class × k.
-//! - [`loadgen`]: open- and closed-loop synthetic load generators and the
-//!   `nscog serve-bench` report (`BENCH_serve.json`).
+//!   with exact (full-equality-verified) keys over query × class × k ×
+//!   store.
+//! - [`loadgen`]: open- and closed-loop synthetic multi-tenant load
+//!   generators (skewed store popularity, per-store repeat fractions) and
+//!   the `nscog serve-bench` report (`BENCH_serve.json`).
 //!
 //! The per-shard scans themselves run through the bound-pruned kernel
 //! paths (see [`crate::vsa::sketch`]), whose [`crate::vsa::PruneStats`]
-//! surface in [`StatsSnapshot`] and `BENCH_serve.json`.
+//! surface per store in [`StatsSnapshot`] and `BENCH_serve.json`.
 //!
 //! Correctness contract: every batched/sharded/cached response is
-//! bit-identical to the sequential oracle
+//! bit-identical to *its own store's* sequential oracle
 //! (`CleanupMemory::recall`/`recall_topk`, `Resonator::factorize`) —
-//! enforced by `rust/tests/serve_e2e.rs`.
+//! enforced by `rust/tests/serve_e2e.rs`, including interleaved
+//! cross-store traffic over stores with different dimensions.
 
 pub mod batcher;
 pub mod cache;
 pub mod engine;
 pub mod loadgen;
 pub mod queue;
+pub mod registry;
 pub mod shard;
 pub mod stats;
 
 pub use cache::{CacheConfig, CacheCounters, ResponseCache};
 pub use engine::{EngineConfig, PendingResponse, ServeEngine};
 pub use queue::Priority;
+pub use registry::{Store, StoreId, StoreRegistry, StoreSpec};
 pub use shard::{ShardedBinaryCodebook, ShardedCleanup, ShardedRealCodebook};
-pub use stats::{LatencySummary, StatsSnapshot};
+pub use stats::{LatencySummary, StatsSnapshot, StoreSnapshot};
 
 use crate::vsa::{BinaryHV, RealHV};
 use std::fmt;
 
-/// A client request against the serving engine.
+/// The operation a request asks of its target store.
 #[derive(Debug, Clone, PartialEq)]
-pub enum ServeRequest {
+pub enum RequestOp {
     /// Cleanup-memory recall: nearest stored item for a (noisy) query.
     Recall { query: BinaryHV },
     /// Top-`k` cleanup recall (ranked candidates, e.g. for re-ranking).
@@ -64,22 +76,71 @@ pub enum ServeRequest {
     Factorize { scene: RealHV },
 }
 
+impl RequestOp {
+    pub fn kind(&self) -> RequestKind {
+        match self {
+            RequestOp::Recall { .. } => RequestKind::Recall,
+            RequestOp::RecallTopK { .. } => RequestKind::RecallTopK,
+            RequestOp::Factorize { .. } => RequestKind::Factorize,
+        }
+    }
+}
+
+/// A client request against the serving engine: the store it targets
+/// plus the operation. The `recall`/`recall_topk`/`factorize`
+/// constructors target [`StoreId::DEFAULT`] (store 0 — the single-store
+/// engines' only store); the `*_on` variants name a store explicitly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeRequest {
+    pub store: StoreId,
+    pub op: RequestOp,
+}
+
+impl ServeRequest {
+    pub fn recall(query: BinaryHV) -> ServeRequest {
+        Self::recall_on(StoreId::DEFAULT, query)
+    }
+
+    pub fn recall_on(store: StoreId, query: BinaryHV) -> ServeRequest {
+        ServeRequest {
+            store,
+            op: RequestOp::Recall { query },
+        }
+    }
+
+    pub fn recall_topk(query: BinaryHV, k: usize) -> ServeRequest {
+        Self::recall_topk_on(StoreId::DEFAULT, query, k)
+    }
+
+    pub fn recall_topk_on(store: StoreId, query: BinaryHV, k: usize) -> ServeRequest {
+        ServeRequest {
+            store,
+            op: RequestOp::RecallTopK { query, k },
+        }
+    }
+
+    pub fn factorize(scene: RealHV) -> ServeRequest {
+        Self::factorize_on(StoreId::DEFAULT, scene)
+    }
+
+    pub fn factorize_on(store: StoreId, scene: RealHV) -> ServeRequest {
+        ServeRequest {
+            store,
+            op: RequestOp::Factorize { scene },
+        }
+    }
+
+    pub fn kind(&self) -> RequestKind {
+        self.op.kind()
+    }
+}
+
 /// Request class, used for batching group and per-class metrics.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RequestKind {
     Recall,
     RecallTopK,
     Factorize,
-}
-
-impl ServeRequest {
-    pub fn kind(&self) -> RequestKind {
-        match self {
-            ServeRequest::Recall { .. } => RequestKind::Recall,
-            ServeRequest::RecallTopK { .. } => RequestKind::RecallTopK,
-            ServeRequest::Factorize { .. } => RequestKind::Factorize,
-        }
-    }
 }
 
 impl RequestKind {
@@ -120,13 +181,16 @@ pub enum ServeError {
     DeadlineExceeded,
     /// Engine is shutting down (or was already shut down).
     ShuttingDown,
-    /// The engine was built without the capability this request needs
-    /// (e.g. a factorize request and no resonator configured).
+    /// The target store was built without the capability this request
+    /// needs (e.g. a factorize request and no resonator configured).
     Unsupported,
-    /// The request payload's dimension doesn't match the engine's store —
+    /// The request payload's dimension doesn't match its target store —
     /// refused up front so a malformed request can never panic (and kill)
     /// a worker thread.
     InvalidDimension,
+    /// The request names a [`StoreId`] the engine's registry never issued
+    /// — refused at admission, never routed.
+    UnknownStore,
 }
 
 impl fmt::Display for ServeError {
@@ -135,9 +199,12 @@ impl fmt::Display for ServeError {
             ServeError::Overloaded => write!(f, "admission queue full (backpressure)"),
             ServeError::DeadlineExceeded => write!(f, "deadline exceeded in queue"),
             ServeError::ShuttingDown => write!(f, "engine shutting down"),
-            ServeError::Unsupported => write!(f, "request kind not supported by this engine"),
+            ServeError::Unsupported => write!(f, "request kind not supported by its target store"),
             ServeError::InvalidDimension => {
-                write!(f, "request dimension does not match the engine's store")
+                write!(f, "request dimension does not match its target store")
+            }
+            ServeError::UnknownStore => {
+                write!(f, "request names a store id the engine has not registered")
             }
         }
     }

@@ -69,6 +69,35 @@ impl ResponseSlot {
     pub fn wait(&self) -> Result<ServeResponse, ServeError> {
         self.wait_timed().0
     }
+
+    /// Non-blocking poll: take the outcome if the worker has filled the
+    /// slot, `None` otherwise (the slot stays waitable). Backs
+    /// [`super::engine::PendingResponse::try_wait`].
+    pub fn try_take(&self) -> Option<(Result<ServeResponse, ServeError>, Instant)> {
+        self.inner.done.lock().expect("slot poisoned").take()
+    }
+
+    /// Block until the slot is filled or `until` passes; `None` on
+    /// timeout (the slot stays waitable). Backs
+    /// [`super::engine::PendingResponse::wait_timeout`].
+    pub fn wait_until(&self, until: Instant) -> Option<(Result<ServeResponse, ServeError>, Instant)> {
+        let mut g = self.inner.done.lock().expect("slot poisoned");
+        loop {
+            if let Some(done) = g.take() {
+                return Some(done);
+            }
+            let now = Instant::now();
+            if now >= until {
+                return None;
+            }
+            let (g2, _timeout) = self
+                .inner
+                .ready
+                .wait_timeout(g, until - now)
+                .expect("slot poisoned");
+            g = g2;
+        }
+    }
 }
 
 impl Default for ResponseSlot {
@@ -236,10 +265,7 @@ mod tests {
         // encode `tag` in the top-k `k` field so pops are identifiable
         let now = Instant::now();
         Ticket {
-            request: ServeRequest::RecallTopK {
-                query: BinaryHV::zeros(64),
-                k: tag,
-            },
+            request: ServeRequest::recall_topk(BinaryHV::zeros(64), tag),
             priority,
             slot: ResponseSlot::new(),
             enqueued: now,
@@ -248,8 +274,8 @@ mod tests {
     }
 
     fn tag_of(t: &Ticket) -> usize {
-        match t.request {
-            ServeRequest::RecallTopK { k, .. } => k,
+        match t.request.op {
+            super::super::RequestOp::RecallTopK { k, .. } => k,
             _ => unreachable!(),
         }
     }
@@ -319,6 +345,32 @@ mod tests {
         slot.fill(Err(ServeError::DeadlineExceeded));
         slot.fill(Err(ServeError::Overloaded)); // ignored: first fill wins
         assert_eq!(h.join().unwrap(), Err(ServeError::DeadlineExceeded));
+    }
+
+    #[test]
+    fn slot_try_take_and_wait_until() {
+        let slot = ResponseSlot::new();
+        assert!(slot.try_take().is_none(), "unfilled slot polls empty");
+        // timeout path leaves the slot waitable
+        assert!(slot
+            .wait_until(Instant::now() + Duration::from_millis(5))
+            .is_none());
+        slot.fill(Err(ServeError::Overloaded));
+        let (outcome, _) = slot.try_take().expect("filled slot polls ready");
+        assert_eq!(outcome, Err(ServeError::Overloaded));
+        // take-once semantics: a second poll sees nothing
+        assert!(slot.try_take().is_none());
+
+        // wait_until returns as soon as a cross-thread fill lands
+        let slot = ResponseSlot::new();
+        let s2 = slot.clone();
+        let h = std::thread::spawn(move || {
+            s2.wait_until(Instant::now() + Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        slot.fill(Err(ServeError::DeadlineExceeded));
+        let (outcome, _) = h.join().unwrap().expect("fill beats the deadline");
+        assert_eq!(outcome, Err(ServeError::DeadlineExceeded));
     }
 
     #[test]

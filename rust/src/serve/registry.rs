@@ -1,0 +1,320 @@
+//! Store registry: N named stores behind one serving engine.
+//!
+//! The paper's system-level findings (Sec. V–VI) are about *heterogeneous*
+//! symbolic workloads: different codebook shapes, resonator
+//! configurations, and sparsity profiles whose memory-bound scans only
+//! amortize when batching is workload-aware. A single engine therefore
+//! serves several [`Store`]s — each its own sharded cleanup codebook,
+//! optional resonator, response cache, and sketch/prune configuration —
+//! and every [`super::ServeRequest`] names the store it targets with a
+//! [`StoreId`]. Batch formation groups by `(store, request class)` so one
+//! batched kernel call never mixes stores (and hence never mixes
+//! dimensions), and stats/caches stay attributable per store.
+//!
+//! [`StoreRegistry`] is immutable once the engine starts: registration
+//! happens up front, the engine takes ownership, and workers read it
+//! lock-free through the shared `Arc`.
+
+use super::cache::{CacheConfig, ResponseCache};
+use super::engine::EngineConfig;
+use super::shard::ShardedCleanup;
+use std::fmt;
+
+use crate::vsa::{BinaryCodebook, Resonator};
+
+/// Identifier of a registered store: its index in registration order.
+/// `StoreId::DEFAULT` (store 0) is what the single-store convenience
+/// constructors route to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StoreId(pub usize);
+
+impl StoreId {
+    /// The first registered store — the target of every single-store
+    /// convenience constructor ([`super::ServeRequest::recall`] etc.).
+    pub const DEFAULT: StoreId = StoreId(0);
+
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+impl fmt::Display for StoreId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "store#{}", self.0)
+    }
+}
+
+/// Per-store sizing and policy knobs, applied at registration.
+#[derive(Debug, Clone, Copy)]
+pub struct StoreSpec {
+    /// Codebook shards in this store's cleanup memory.
+    pub shards: usize,
+    /// Sketch sidecar width for this store's shards (`None` = per-dim
+    /// default, `Some(0)` disables the sidecars).
+    pub sketch_bits: Option<usize>,
+    /// This store's response-cache entry budget; 0 disables its cache.
+    pub cache_capacity: usize,
+    /// This store's response-cache lock shards.
+    pub cache_shards: usize,
+}
+
+impl Default for StoreSpec {
+    fn default() -> Self {
+        let cache = CacheConfig::default();
+        StoreSpec {
+            shards: 4,
+            sketch_bits: None,
+            cache_capacity: cache.capacity,
+            cache_shards: cache.shards,
+        }
+    }
+}
+
+impl StoreSpec {
+    /// Derive a spec from the engine-level knobs — what the single-store
+    /// wrappers use, so `EngineConfig { shards, sketch_bits, cache_* }`
+    /// keeps meaning exactly what it did before multi-store routing.
+    pub fn from_engine(cfg: &EngineConfig) -> StoreSpec {
+        StoreSpec {
+            shards: cfg.shards,
+            sketch_bits: cfg.sketch_bits,
+            cache_capacity: cfg.cache_capacity,
+            cache_shards: cfg.cache_shards,
+        }
+    }
+}
+
+/// One registered store: a sharded cleanup codebook, an optional
+/// resonator for factorize requests, and its own response cache.
+pub struct Store {
+    id: StoreId,
+    name: String,
+    cleanup: ShardedCleanup,
+    resonator: Option<Resonator>,
+    cache: Option<ResponseCache>,
+    spec: StoreSpec,
+}
+
+impl Store {
+    pub fn id(&self) -> StoreId {
+        self.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn cleanup(&self) -> &ShardedCleanup {
+        &self.cleanup
+    }
+
+    pub fn resonator(&self) -> Option<&Resonator> {
+        self.resonator.as_ref()
+    }
+
+    pub fn cache(&self) -> Option<&ResponseCache> {
+        self.cache.as_ref()
+    }
+
+    pub fn spec(&self) -> &StoreSpec {
+        &self.spec
+    }
+
+    /// Hypervector dimension of this store's cleanup memory.
+    pub fn dim(&self) -> usize {
+        self.cleanup.dim()
+    }
+
+    /// Items in this store's cleanup memory.
+    pub fn len(&self) -> usize {
+        self.cleanup.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cleanup.is_empty()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.cleanup.n_shards()
+    }
+
+    /// Scene dimension factorize requests against this store must carry
+    /// (`None` when the store has no resonator).
+    pub fn fact_dim(&self) -> Option<usize> {
+        self.resonator.as_ref().map(|r| r.codebooks()[0].dim())
+    }
+}
+
+impl fmt::Debug for Store {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Store")
+            .field("id", &self.id)
+            .field("name", &self.name)
+            .field("dim", &self.dim())
+            .field("items", &self.len())
+            .field("shards", &self.n_shards())
+            .field("resonator", &self.resonator.is_some())
+            .field("cache", &self.cache.is_some())
+            .finish()
+    }
+}
+
+/// The engine's store table. Built up front via [`StoreRegistry::register`],
+/// then owned (immutably) by the running engine.
+#[derive(Debug, Default)]
+pub struct StoreRegistry {
+    stores: Vec<Store>,
+}
+
+impl StoreRegistry {
+    pub fn new() -> StoreRegistry {
+        StoreRegistry { stores: Vec::new() }
+    }
+
+    /// Registry with exactly one store named `"default"` — the
+    /// single-store constructors' path ([`super::ServeEngine::start`]).
+    pub fn single(
+        codebook: &BinaryCodebook,
+        resonator: Option<Resonator>,
+        spec: StoreSpec,
+    ) -> StoreRegistry {
+        let mut r = StoreRegistry::new();
+        r.register("default", codebook, resonator, spec);
+        r
+    }
+
+    /// Shard `codebook` per `spec`, build its cache, and assign the next
+    /// [`StoreId`]. Store names must be unique (routing and reporting key
+    /// on them).
+    pub fn register(
+        &mut self,
+        name: &str,
+        codebook: &BinaryCodebook,
+        resonator: Option<Resonator>,
+        spec: StoreSpec,
+    ) -> StoreId {
+        assert!(
+            self.by_name(name).is_none(),
+            "store name '{name}' already registered"
+        );
+        let id = StoreId(self.stores.len());
+        let cleanup =
+            ShardedCleanup::partition_sketched(codebook, spec.shards.max(1), spec.sketch_bits);
+        let cache = (spec.cache_capacity > 0).then(|| {
+            ResponseCache::for_store(
+                CacheConfig {
+                    capacity: spec.cache_capacity,
+                    shards: spec.cache_shards.max(1),
+                },
+                id,
+            )
+        });
+        self.stores.push(Store {
+            id,
+            name: name.to_string(),
+            cleanup,
+            resonator,
+            cache,
+            spec,
+        });
+        id
+    }
+
+    /// Number of registered stores.
+    pub fn len(&self) -> usize {
+        self.stores.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stores.is_empty()
+    }
+
+    /// All stores, in [`StoreId`] order.
+    pub fn stores(&self) -> &[Store] {
+        &self.stores
+    }
+
+    /// Look a store up by id; `None` for ids this registry never issued
+    /// (the engine answers those requests with
+    /// [`super::ServeError::UnknownStore`] instead of panicking).
+    pub fn store_by_id(&self, id: StoreId) -> Option<&Store> {
+        self.stores.get(id.0)
+    }
+
+    /// Look a store's id up by its registration name.
+    pub fn by_name(&self, name: &str) -> Option<StoreId> {
+        self.stores.iter().find(|s| s.name == name).map(|s| s.id)
+    }
+
+    /// Registered ids, in order.
+    pub fn ids(&self) -> impl Iterator<Item = StoreId> + '_ {
+        (0..self.stores.len()).map(StoreId)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::vsa::RealCodebook;
+
+    fn codebook(seed: u64, items: usize, dim: usize) -> BinaryCodebook {
+        let mut rng = Rng::new(seed);
+        BinaryCodebook::random(&mut rng, items, dim)
+    }
+
+    #[test]
+    fn register_assigns_sequential_ids_and_lookups_work() {
+        let mut reg = StoreRegistry::new();
+        let a = reg.register("alpha", &codebook(1, 16, 512), None, StoreSpec::default());
+        let b = reg.register(
+            "beta",
+            &codebook(2, 24, 1024),
+            None,
+            StoreSpec {
+                shards: 2,
+                cache_capacity: 0,
+                ..StoreSpec::default()
+            },
+        );
+        assert_eq!(a, StoreId(0));
+        assert_eq!(b, StoreId(1));
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.by_name("beta"), Some(b));
+        assert_eq!(reg.by_name("gamma"), None);
+        let beta = reg.store_by_id(b).unwrap();
+        assert_eq!(beta.name(), "beta");
+        assert_eq!(beta.dim(), 1024);
+        assert_eq!(beta.len(), 24);
+        assert_eq!(beta.n_shards(), 2);
+        assert!(beta.cache().is_none(), "capacity 0 disables the cache");
+        assert!(reg.store_by_id(StoreId(0)).unwrap().cache().is_some());
+        assert!(reg.store_by_id(StoreId(7)).is_none(), "unknown ids are None");
+        assert_eq!(reg.ids().collect::<Vec<_>>(), vec![a, b]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn duplicate_names_are_refused() {
+        let mut reg = StoreRegistry::new();
+        reg.register("dup", &codebook(3, 8, 256), None, StoreSpec::default());
+        reg.register("dup", &codebook(4, 8, 256), None, StoreSpec::default());
+    }
+
+    #[test]
+    fn single_wraps_one_default_store() {
+        let mut rng = Rng::new(5);
+        let cb = codebook(5, 12, 512);
+        let res = Resonator::new(
+            (0..2)
+                .map(|_| RealCodebook::random_bipolar(&mut rng, 4, 256))
+                .collect(),
+            10,
+        );
+        let reg = StoreRegistry::single(&cb, Some(res), StoreSpec::default());
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.by_name("default"), Some(StoreId::DEFAULT));
+        let s = reg.store_by_id(StoreId::DEFAULT).unwrap();
+        assert_eq!(s.fact_dim(), Some(256));
+    }
+}

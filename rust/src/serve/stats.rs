@@ -1,10 +1,15 @@
-//! Serving metrics: per-class latency, per-shard busy time, batch
-//! occupancy, admission outcomes, and throughput.
+//! Serving metrics: per-class latency, per-store / per-shard busy time,
+//! batch occupancy, admission outcomes, and throughput.
 //!
 //! All counters live behind one mutex and are updated once per batch (not
 //! per request), so the metrics path stays off the kernel hot loops.
+//! Every latency sample and every kernel-call timing is tagged with the
+//! [`StoreId`] it served, so multi-store engines can attribute load,
+//! pruning, and cache behavior per tenant.
 
 use super::cache::CacheCounters;
+use super::registry::StoreId;
+use super::shard::ShardTimings;
 use super::RequestKind;
 use crate::util::stats::percentile;
 use crate::vsa::PruneStats;
@@ -48,6 +53,30 @@ pub struct ShardStat {
     pub busy_s: f64,
 }
 
+/// One store's share of an executed micro-batch: the shard timings and
+/// merged scan [`PruneStats`] of the kernel calls issued for that store.
+/// Built by [`super::batcher::execute`], one per `(store)` with work in
+/// the batch.
+#[derive(Debug, Clone, Default)]
+pub struct StoreWork {
+    pub timings: ShardTimings,
+    pub prune: PruneStats,
+}
+
+#[derive(Debug, Default)]
+struct StoreInner {
+    name: String,
+    /// Every completed request's latency (all classes, cache hits
+    /// included) — `len()` is the store's completed count. Like the
+    /// per-class vectors below, this stores the full sample for exact
+    /// percentiles: fine at bench/load-test scale, a second copy per
+    /// request on a truly long-lived engine (the ROADMAP's streaming-
+    /// quantile follow-on replaces both).
+    lat_s: Vec<f64>,
+    shards: Vec<ShardStat>,
+    prune: PruneStats,
+}
+
 #[derive(Debug, Default)]
 struct StatsInner {
     recall_lat_s: Vec<f64>,
@@ -57,8 +86,7 @@ struct StatsInner {
     rejected: u64,
     expired: u64,
     unsupported: u64,
-    shards: Vec<ShardStat>,
-    prune: PruneStats,
+    stores: Vec<StoreInner>,
 }
 
 /// Shared, thread-safe metrics sink for one engine.
@@ -69,10 +97,19 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
-    pub fn new(n_shards: usize) -> ServeStats {
+    /// One `(name, shard count)` pair per registered store, in
+    /// [`StoreId`] order.
+    pub fn new(stores: &[(&str, usize)]) -> ServeStats {
         ServeStats {
             inner: Mutex::new(StatsInner {
-                shards: vec![ShardStat::default(); n_shards],
+                stores: stores
+                    .iter()
+                    .map(|&(name, n_shards)| StoreInner {
+                        name: name.to_string(),
+                        shards: vec![ShardStat::default(); n_shards],
+                        ..StoreInner::default()
+                    })
+                    .collect(),
                 ..StatsInner::default()
             }),
             started: Instant::now(),
@@ -80,32 +117,39 @@ impl ServeStats {
     }
 
     /// Record one executed micro-batch: occupancy, per-request latencies
-    /// (queue wait + execution — cache hits included), per-shard scan
-    /// timings, and the batch's merged scan [`PruneStats`].
+    /// (queue wait + execution — cache hits included) tagged with the
+    /// store they served, and each store's kernel-call shard timings and
+    /// merged scan [`PruneStats`].
     pub fn record_batch(
         &self,
         executed: usize,
-        latencies: &[(RequestKind, Duration)],
-        shard_timings: &[(usize, f64)],
-        prune: &PruneStats,
+        latencies: &[(StoreId, RequestKind, Duration)],
+        store_work: &[(StoreId, StoreWork)],
     ) {
         let mut g = self.inner.lock().expect("stats poisoned");
         if executed > 0 {
             g.batch_sizes.push(executed);
         }
-        g.prune.merge(prune);
-        for &(kind, lat) in latencies {
+        for &(store, kind, lat) in latencies {
             let secs = lat.as_secs_f64();
             match kind {
                 RequestKind::Recall => g.recall_lat_s.push(secs),
                 RequestKind::RecallTopK => g.topk_lat_s.push(secs),
                 RequestKind::Factorize => g.factorize_lat_s.push(secs),
             }
+            if let Some(st) = g.stores.get_mut(store.index()) {
+                st.lat_s.push(secs);
+            }
         }
-        for &(s, busy) in shard_timings {
-            if let Some(st) = g.shards.get_mut(s) {
-                st.scans += 1;
-                st.busy_s += busy;
+        for (store, work) in store_work {
+            if let Some(st) = g.stores.get_mut(store.index()) {
+                st.prune.merge(&work.prune);
+                for &(s, busy) in &work.timings {
+                    if let Some(sh) = st.shards.get_mut(s) {
+                        sh.scans += 1;
+                        sh.busy_s += busy;
+                    }
+                }
             }
         }
     }
@@ -118,13 +162,15 @@ impl ServeStats {
         self.inner.lock().expect("stats poisoned").expired += n;
     }
 
-    /// Requests refused without execution: unsupported kind or
-    /// dimension mismatch.
+    /// Requests refused without execution: unsupported kind, dimension
+    /// mismatch, or an unknown store id.
     pub fn record_unsupported(&self, n: u64) {
         self.inner.lock().expect("stats poisoned").unsupported += n;
     }
 
     /// Snapshot every metric (cheap; clones the latency vectors).
+    /// Per-store cache counters are layered on by
+    /// [`super::engine::ServeEngine::stats`], which owns the registry.
     pub fn snapshot(&self) -> StatsSnapshot {
         let g = self.inner.lock().expect("stats poisoned");
         let completed =
@@ -132,6 +178,28 @@ impl ServeStats {
         let batches = g.batch_sizes.len() as u64;
         let occupancy: u64 = g.batch_sizes.iter().map(|&b| b as u64).sum();
         let elapsed = self.started.elapsed().as_secs_f64();
+        let stores: Vec<StoreSnapshot> = g
+            .stores
+            .iter()
+            .enumerate()
+            .map(|(i, st)| StoreSnapshot {
+                id: StoreId(i),
+                name: st.name.clone(),
+                completed: st.lat_s.len() as u64,
+                latency: LatencySummary::of(&st.lat_s),
+                shards: st.shards.clone(),
+                prune: st.prune,
+                cache: None,
+            })
+            .collect();
+        // engine-wide aggregates: shard stats concatenated in store
+        // order (identical to the pre-multi-store vector when one store
+        // is registered), prune telemetry merged across stores
+        let shards: Vec<ShardStat> = stores.iter().flat_map(|s| s.shards.clone()).collect();
+        let mut prune = PruneStats::default();
+        for s in &stores {
+            prune.merge(&s.prune);
+        }
         StatsSnapshot {
             completed,
             rejected: g.rejected,
@@ -152,11 +220,31 @@ impl ServeStats {
             recall: LatencySummary::of(&g.recall_lat_s),
             topk: LatencySummary::of(&g.topk_lat_s),
             factorize: LatencySummary::of(&g.factorize_lat_s),
-            shards: g.shards.clone(),
-            prune: g.prune,
+            shards,
+            prune,
+            stores,
             cache: None,
         }
     }
+}
+
+/// One store's section of a [`StatsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct StoreSnapshot {
+    pub id: StoreId,
+    /// Registration name.
+    pub name: String,
+    /// Requests this store completed (cache hits included).
+    pub completed: u64,
+    /// End-to-end latency over this store's completed requests.
+    pub latency: Option<LatencySummary>,
+    /// This store's shard scan counters.
+    pub shards: Vec<ShardStat>,
+    /// Merged bound-pruned scan telemetry for this store's kernel calls.
+    pub prune: PruneStats,
+    /// This store's response-cache counters; `None` when it runs
+    /// uncached (filled by [`super::engine::ServeEngine::stats`]).
+    pub cache: Option<CacheCounters>,
 }
 
 /// Point-in-time view of an engine's metrics.
@@ -175,11 +263,17 @@ pub struct StatsSnapshot {
     pub recall: Option<LatencySummary>,
     pub topk: Option<LatencySummary>,
     pub factorize: Option<LatencySummary>,
+    /// Every store's shard stats, concatenated in [`StoreId`] order
+    /// (for single-store engines this is exactly the store's shard set).
     pub shards: Vec<ShardStat>,
-    /// Merged bound-pruned scan telemetry across every executed batch.
+    /// Merged bound-pruned scan telemetry across every executed batch
+    /// and store.
     pub prune: PruneStats,
-    /// Response-cache counters; `None` when the engine runs uncached
-    /// (filled by [`super::engine::ServeEngine::stats`], not by
+    /// Per-store sections, in [`StoreId`] order.
+    pub stores: Vec<StoreSnapshot>,
+    /// Engine-wide response-cache counters, summed across the stores'
+    /// caches; `None` when every store runs uncached (filled by
+    /// [`super::engine::ServeEngine::stats`], not by
     /// [`ServeStats::snapshot`]).
     pub cache: Option<CacheCounters>,
 }
@@ -200,8 +294,8 @@ mod tests {
     }
 
     #[test]
-    fn batch_occupancy_and_shard_accounting() {
-        let st = ServeStats::new(2);
+    fn batch_occupancy_and_per_store_accounting() {
+        let st = ServeStats::new(&[("alpha", 2), ("beta", 1)]);
         let prune = PruneStats {
             items: 6,
             sketch_rejected: 1,
@@ -212,24 +306,44 @@ mod tests {
         st.record_batch(
             3,
             &[
-                (RequestKind::Recall, Duration::from_millis(1)),
-                (RequestKind::Recall, Duration::from_millis(3)),
-                (RequestKind::Factorize, Duration::from_millis(9)),
+                (StoreId(0), RequestKind::Recall, Duration::from_millis(1)),
+                (StoreId(0), RequestKind::Recall, Duration::from_millis(3)),
+                (StoreId(1), RequestKind::Factorize, Duration::from_millis(9)),
             ],
-            &[(0, 0.001), (1, 0.002)],
-            &prune,
+            &[
+                (
+                    StoreId(0),
+                    StoreWork {
+                        timings: vec![(0, 0.001), (1, 0.002)],
+                        prune,
+                    },
+                ),
+                (
+                    StoreId(1),
+                    StoreWork {
+                        timings: vec![(0, 0.004)],
+                        prune,
+                    },
+                ),
+            ],
         );
         st.record_batch(
             1,
-            &[(RequestKind::RecallTopK, Duration::from_millis(2))],
-            &[(0, 0.004)],
-            &prune,
+            &[(StoreId(0), RequestKind::RecallTopK, Duration::from_millis(2))],
+            &[(
+                StoreId(0),
+                StoreWork {
+                    timings: vec![(0, 0.004)],
+                    prune,
+                },
+            )],
         );
         st.record_rejected();
         st.record_expired(2);
         let s = st.snapshot();
-        assert_eq!(s.prune.items, 12);
-        assert_eq!(s.prune.words_streamed, 80);
+        // engine-wide aggregates merge across stores
+        assert_eq!(s.prune.items, 18);
+        assert_eq!(s.prune.words_streamed, 120);
         assert!(s.cache.is_none());
         assert_eq!(s.completed, 4);
         assert_eq!(s.batches, 2);
@@ -237,11 +351,40 @@ mod tests {
         assert_eq!(s.max_batch, 3);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.expired, 2);
+        // concatenated shard vector: alpha's 2 shards then beta's 1
+        assert_eq!(s.shards.len(), 3);
         assert_eq!(s.shards[0].scans, 2);
         assert!((s.shards[0].busy_s - 0.005).abs() < 1e-12);
         assert_eq!(s.shards[1].scans, 1);
+        assert_eq!(s.shards[2].scans, 1);
         assert_eq!(s.recall.unwrap().n, 2);
         assert_eq!(s.topk.unwrap().n, 1);
         assert_eq!(s.factorize.unwrap().n, 1);
+        // per-store sections
+        assert_eq!(s.stores.len(), 2);
+        assert_eq!(s.stores[0].name, "alpha");
+        assert_eq!(s.stores[0].completed, 3);
+        assert_eq!(s.stores[0].prune.items, 12);
+        assert_eq!(s.stores[0].latency.unwrap().n, 3);
+        assert_eq!(s.stores[1].name, "beta");
+        assert_eq!(s.stores[1].completed, 1);
+        assert_eq!(s.stores[1].prune.items, 6);
+        assert_eq!(s.stores[1].shards.len(), 1);
+        assert!((s.stores[1].shards[0].busy_s - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latencies_for_unknown_store_ids_still_count_globally() {
+        // defensive: a latency tagged with an out-of-range store id must
+        // not panic and must still reach the per-class vectors
+        let st = ServeStats::new(&[("only", 1)]);
+        st.record_batch(
+            1,
+            &[(StoreId(9), RequestKind::Recall, Duration::from_millis(1))],
+            &[],
+        );
+        let s = st.snapshot();
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.stores[0].completed, 0);
     }
 }

@@ -1,45 +1,61 @@
 //! End-to-end tests for the serving engine: batched/sharded responses
-//! must be bit-identical to the sequential oracle, shard merges must
-//! match unsharded scans on both codebook families, and admission control
-//! must reject (not queue) under overload and answer expired deadlines.
+//! must be bit-identical to their store's sequential oracle, shard merges
+//! must match unsharded scans on both codebook families, interleaved
+//! multi-store traffic must never cross-contaminate, and admission
+//! control must reject (not queue) under overload, answer expired
+//! deadlines, and refuse unknown store ids without panicking.
 
-use nscog::serve::loadgen::{run_closed_loop, run_open_loop, Fixture, FixtureConfig, LoadMix};
+use nscog::serve::loadgen::{
+    run_closed_loop, run_open_loop, Fixture, FixtureConfig, LoadMix, StoreProfile,
+};
 use nscog::serve::queue::Priority;
 use nscog::serve::{
     EngineConfig, ServeEngine, ServeError, ServeRequest, ShardedBinaryCodebook,
-    ShardedRealCodebook,
+    ShardedRealCodebook, StoreId, StoreRegistry, StoreSpec,
 };
 use nscog::util::Rng;
-use nscog::vsa::{BinaryCodebook, BinaryHV, RealCodebook, RealHV};
+use nscog::vsa::{BinaryCodebook, BinaryHV, CleanupMemory, RealCodebook, RealHV};
 use std::time::Duration;
 
-fn fixture_cfg(requests: usize, seed: u64) -> FixtureConfig {
-    FixtureConfig {
+fn base_profile() -> StoreProfile {
+    StoreProfile {
+        name: "default".into(),
         items: 48,
         dim: 1024,
-        noise_frac: 0.2,
         topk_k: 4,
         fact_factors: 3,
         fact_items: 7,
         fact_dim: 512,
         fact_iters: 30,
+        weight: 1,
+        repeat_frac: 0.0,
+        sketch_bits: None,
+    }
+}
+
+fn fixture_cfg(requests: usize, seed: u64) -> FixtureConfig {
+    FixtureConfig {
+        stores: vec![base_profile()],
+        noise_frac: 0.2,
         requests,
         mix: LoadMix {
             recall: 5,
             topk: 2,
             factorize: 1,
         },
-        repeat_frac: 0.0,
         seed,
     }
+}
+
+fn start(fixture: &Fixture, cfg: EngineConfig) -> ServeEngine {
+    ServeEngine::start_registry(fixture.registry(&cfg), cfg)
 }
 
 #[test]
 fn concurrent_batched_serving_is_bit_identical_to_oracle() {
     let fixture = Fixture::build(fixture_cfg(120, 11));
-    let engine = ServeEngine::start(
-        &fixture.codebook,
-        Some(fixture.resonator.clone()),
+    let engine = start(
+        &fixture,
         EngineConfig {
             workers: 3,
             shards: 5,
@@ -61,15 +77,16 @@ fn concurrent_batched_serving_is_bit_identical_to_oracle() {
     assert!(stats.mean_batch >= 1.0);
     // every shard participated in the scans
     assert!(stats.shards.iter().all(|s| s.scans > 0));
+    assert_eq!(stats.stores.len(), 1);
+    assert_eq!(stats.stores[0].completed, 120);
     engine.shutdown();
 }
 
 #[test]
 fn open_loop_serving_matches_oracle_too() {
     let fixture = Fixture::build(fixture_cfg(60, 12));
-    let engine = ServeEngine::start(
-        &fixture.codebook,
-        Some(fixture.resonator.clone()),
+    let engine = start(
+        &fixture,
         EngineConfig {
             workers: 2,
             shards: 3,
@@ -80,6 +97,106 @@ fn open_loop_serving_matches_oracle_too() {
     assert_eq!(report.ok + report.rejected + report.expired, 60);
     assert_eq!(report.mismatches, 0);
     assert_eq!(report.rejected, 0, "default queue must absorb this offered load");
+    engine.shutdown();
+}
+
+#[test]
+fn interleaved_multi_store_requests_never_cross_contaminate() {
+    // three stores with pairwise-different dimensions, item counts, and
+    // top-k widths behind one queue; closed-loop clients interleave
+    // traffic for all of them through shared micro-batches. Every
+    // response must be bit-identical to its own store's oracle, and the
+    // per-store scan telemetry must account for exactly that store's
+    // items — the structural proof that no batched kernel call ever
+    // mixed stores (a mixed call would either panic on dimensions or
+    // corrupt the per-store item accounting checked below).
+    let mut cfg = fixture_cfg(180, 21);
+    cfg.stores = vec![
+        StoreProfile {
+            name: "small".into(),
+            dim: 512,
+            items: 24,
+            topk_k: 2,
+            weight: 3,
+            ..base_profile()
+        },
+        StoreProfile {
+            name: "mid".into(),
+            dim: 1024,
+            items: 48,
+            topk_k: 4,
+            weight: 2,
+            ..base_profile()
+        },
+        StoreProfile {
+            name: "large".into(),
+            dim: 2048,
+            items: 36,
+            topk_k: 6,
+            weight: 1,
+            ..base_profile()
+        },
+    ];
+    let fixture = Fixture::build(cfg);
+    // cache off so the per-store kernel accounting below is exact: every
+    // completed recall/top-k request is one kernel-scanned query
+    let engine = start(
+        &fixture,
+        EngineConfig {
+            workers: 3,
+            shards: 3,
+            max_batch: 16,
+            max_delay: Duration::from_millis(1),
+            cache_capacity: 0,
+            ..EngineConfig::default()
+        },
+    );
+    let report = run_closed_loop(&engine, &fixture, 9, &fixture.oracle());
+    assert_eq!(report.ok, 180);
+    assert_eq!(
+        report.mismatches, 0,
+        "interleaved multi-store responses must match each store's own oracle"
+    );
+    let snap = engine.stats();
+    assert_eq!(snap.stores.len(), 3);
+    // exact per-store attribution: a store's binary-scan prune items are
+    // its item count x its kernel-scanned query count; its factorize
+    // decode adds fact_factors x fact_items per factorization
+    for (si, store) in snap.stores.iter().enumerate() {
+        let profile = &fixture.stores[si].profile;
+        let (mut scanned, mut factorized) = (0u64, 0u64);
+        for r in &fixture.requests {
+            if r.store != StoreId(si) {
+                continue;
+            }
+            match r.kind() {
+                nscog::serve::RequestKind::Recall | nscog::serve::RequestKind::RecallTopK => {
+                    scanned += 1
+                }
+                nscog::serve::RequestKind::Factorize => factorized += 1,
+            }
+        }
+        assert!(scanned > 0, "store {si} must receive scan traffic");
+        let expected = scanned * profile.items as u64
+            + factorized * (profile.fact_factors * profile.fact_items) as u64;
+        assert_eq!(
+            store.prune.items, expected,
+            "store '{}' scan accounting off — a batch mixed stores?",
+            store.name
+        );
+        assert_eq!(store.completed, scanned + factorized);
+    }
+    engine.shutdown();
+
+    // malformed store ids are refused, not panicking — and the engine
+    // keeps serving valid traffic afterwards
+    let fixture = Fixture::build(fixture_cfg(8, 22));
+    let engine = start(&fixture, EngineConfig::default());
+    let got = engine.submit(ServeRequest::recall_on(StoreId(99), BinaryHV::zeros(1024)));
+    assert_eq!(got, Err(ServeError::UnknownStore));
+    let report = run_closed_loop(&engine, &fixture, 2, &fixture.oracle());
+    assert_eq!(report.ok, 8);
+    assert_eq!(report.mismatches, 0);
     engine.shutdown();
 }
 
@@ -116,13 +233,11 @@ fn shard_merge_equals_unsharded_scan_on_both_codebooks() {
 fn cached_serving_is_bit_identical_and_never_crosses_k_or_class() {
     // repeated-query mix through an engine with the cache enabled: every
     // response (cached or computed) must equal the sequential oracle
-    let fixture = Fixture::build(FixtureConfig {
-        repeat_frac: 0.4,
-        ..fixture_cfg(150, 13)
-    });
-    let engine = ServeEngine::start(
-        &fixture.codebook,
-        Some(fixture.resonator.clone()),
+    let mut cfg = fixture_cfg(150, 13);
+    cfg.stores[0].repeat_frac = 0.4;
+    let fixture = Fixture::build(cfg);
+    let engine = start(
+        &fixture,
         EngineConfig {
             workers: 3,
             shards: 4,
@@ -140,20 +255,23 @@ fn cached_serving_is_bit_identical_and_never_crosses_k_or_class() {
     let snap = engine.stats();
     let cache = snap.cache.expect("cache enabled by default");
     assert!(cache.hits > 0, "repeat_frac=0.4 over 150 requests must hit");
+    assert_eq!(
+        snap.stores[0].cache.unwrap().hits,
+        cache.hits,
+        "single-store engine: per-store counters equal the aggregate"
+    );
     engine.shutdown();
 
     // class/k scoping: same query through recall, top-k(1), and two
     // different top-k widths — each answer matches its own oracle
     let mut rng = Rng::new(14);
     let cb = BinaryCodebook::random(&mut rng, 40, 1024);
-    let cm = nscog::vsa::CleanupMemory::new(cb.clone());
+    let cm = CleanupMemory::new(cb.clone());
     let engine = ServeEngine::start(&cb, None, EngineConfig::default());
     let q = BinaryHV::random(&mut rng, 1024);
     for _round in 0..2 {
         // second round is served from the cache; answers must not change
-        let recall = engine
-            .submit(ServeRequest::Recall { query: q.clone() })
-            .unwrap();
+        let recall = engine.submit(ServeRequest::recall(q.clone())).unwrap();
         assert_eq!(
             recall,
             nscog::serve::ServeResponse::Recall {
@@ -163,10 +281,7 @@ fn cached_serving_is_bit_identical_and_never_crosses_k_or_class() {
         );
         for k in [1usize, 3, 5] {
             let got = engine
-                .submit(ServeRequest::RecallTopK {
-                    query: q.clone(),
-                    k,
-                })
+                .submit(ServeRequest::recall_topk(q.clone(), k))
                 .unwrap();
             assert_eq!(
                 got,
@@ -181,6 +296,46 @@ fn cached_serving_is_bit_identical_and_never_crosses_k_or_class() {
     let cache = snap.cache.unwrap();
     assert_eq!(cache.hits, 4, "round two should hit all four entries");
     assert_eq!(cache.entries, 4, "recall + three distinct k entries");
+    engine.shutdown();
+}
+
+#[test]
+fn per_store_caches_keep_tenants_isolated() {
+    // two stores with the SAME dimension and identical queries: cache
+    // entries must never leak across them (the store id is part of every
+    // cache key, and each store owns its own cache)
+    let mut rng = Rng::new(61);
+    let cb_a = BinaryCodebook::random(&mut rng, 32, 1024);
+    let cb_b = BinaryCodebook::random(&mut rng, 32, 1024);
+    let cm_a = CleanupMemory::new(cb_a.clone());
+    let cm_b = CleanupMemory::new(cb_b.clone());
+    let mut registry = StoreRegistry::new();
+    let a = registry.register("a", &cb_a, None, StoreSpec::default());
+    let b = registry.register("b", &cb_b, None, StoreSpec::default());
+    let engine = ServeEngine::start_registry(registry, EngineConfig::default());
+    let q = BinaryHV::random(&mut rng, 1024);
+    for _round in 0..2 {
+        // round 2 is served from each store's cache — still per-store
+        let got_a = engine
+            .submit(ServeRequest::recall_on(a, q.clone()))
+            .unwrap();
+        let got_b = engine
+            .submit(ServeRequest::recall_on(b, q.clone()))
+            .unwrap();
+        let (ia, ca) = cm_a.recall(&q);
+        let (ib, cbi) = cm_b.recall(&q);
+        assert_eq!(got_a, nscog::serve::ServeResponse::Recall { index: ia, cosine: ca });
+        assert_eq!(got_b, nscog::serve::ServeResponse::Recall { index: ib, cosine: cbi });
+        // same query, different stores: the answers come from different
+        // codebooks, so a cross-tenant cache hit would be observable
+        assert!(
+            got_a != got_b || (ia, ca) == (ib, cbi),
+            "store B served store A's cached answer"
+        );
+    }
+    let snap = engine.stats();
+    assert_eq!(snap.stores[a.index()].cache.unwrap().hits, 1);
+    assert_eq!(snap.stores[b.index()].cache.unwrap().hits, 1);
     engine.shutdown();
 }
 
@@ -213,9 +368,7 @@ fn overload_rejects_instead_of_queueing_unboundedly() {
         primers.push(
             engine
                 .submit_async(
-                    ServeRequest::Factorize {
-                        scene: scene.clone(),
-                    },
+                    ServeRequest::factorize(scene.clone()),
                     Priority::Normal,
                     Duration::from_secs(30),
                 )
@@ -229,9 +382,7 @@ fn overload_rejects_instead_of_queueing_unboundedly() {
     let mut pending = Vec::new();
     for _ in 0..64 {
         match engine.submit_async(
-            ServeRequest::Recall {
-                query: BinaryHV::random(&mut rng, 1024),
-            },
+            ServeRequest::recall(BinaryHV::random(&mut rng, 1024)),
             Priority::Normal,
             Duration::from_secs(30),
         ) {
@@ -266,9 +417,7 @@ fn expired_deadlines_are_answered_without_execution() {
     let engine = ServeEngine::start(&cb, None, EngineConfig::default());
     for _ in 0..4 {
         let got = engine.submit_with(
-            ServeRequest::Recall {
-                query: BinaryHV::random(&mut rng, 1024),
-            },
+            ServeRequest::recall(BinaryHV::random(&mut rng, 1024)),
             Priority::Normal,
             Duration::from_secs(0),
         );
@@ -281,7 +430,7 @@ fn expired_deadlines_are_answered_without_execution() {
     let q = BinaryHV::random(&mut rng, 1024);
     assert!(engine
         .submit_with(
-            ServeRequest::Recall { query: q },
+            ServeRequest::recall(q),
             Priority::High,
             Duration::from_secs(10),
         )

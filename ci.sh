@@ -86,7 +86,10 @@ assert r['bench'] == 'serve', 'wrong bench tag'
 cl, base = r['closed_loop'], r['baseline']
 assert cl['mismatches'] == 0, 'batched responses diverged from per-store sequential oracles'
 assert cl['rejected'] == 0 and cl['expired'] == 0, 'smoke run shed load unexpectedly'
+assert cl.get('rejected_tenant', 0) == 0, 'smoke run tripped a tenant quota unexpectedly'
+assert cl.get('internal', 0) == 0, 'smoke run contained a worker panic with no faults injected'
 assert cl['qps'] > 0 and base['qps'] > 0, 'degenerate throughput measurement'
+assert r.get('chaos') is None, 'clean smoke run must not carry a chaos verdict'
 if r.get('open_loop'):
     assert r['open_loop']['pass']['mismatches'] == 0, 'open-loop responses diverged'
 pr = r.get('prune')
@@ -124,6 +127,11 @@ else:
         if sc is not None and s.get('repeat_frac', 0) > 0:
             assert sc['hits'] > 0, f'{name}: repeated traffic produced no cache hits'
             hit_rates.append(f"{name} {sc['hit_rate']*100:.0f}%")
+        # overload-control counters: present on current JSONs, and all
+        # zero on a clean (no chaos, no faults) smoke run
+        for key in ('rejected_tenant', 'expired_dropped', 'degraded', 'internal'):
+            assert s.get(key, 0) == 0, \
+                f'{name}: clean smoke run recorded {key}={s.get(key)}'
         checked += 1
     store_line = f", {checked} stores validated"
     if hit_rates:
@@ -138,6 +146,93 @@ else
     grep -q '"bench": "serve"' BENCH_serve.json
     grep -q '"mismatches": 0' BENCH_serve.json
     grep -q '"stores": \[' BENCH_serve.json
+    echo "python3 unavailable; structural grep checks passed"
+fi
+
+# Chaos smoke: one tenant floods its admission quota through a separate
+# engine (and a separate JSON — the clean BENCH_serve.json above must
+# stay chaos-free). The binary itself exits non-zero if the fairness or
+# liveness invariant fails; the validator re-checks the recorded verdict
+# and the per-store damage attribution.
+echo "== chaos smoke: serve (3 stores, single-tenant flood) =="
+NSCOG_SERVE_JSON="$(pwd)/BENCH_serve_chaos.json" \
+    cargo run --release --quiet --bin nscog -- serve-bench --smoke --stores 3 --chaos flood
+
+echo "== validate BENCH_serve_chaos.json =="
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PYEOF'
+import json
+
+def validate(r):
+    """One chaos verdict -> 'pass' or 'skip'; raises AssertionError on a
+    violated invariant. Old JSONs (no chaos key) and chaos-free runs
+    (chaos: null) skip cleanly."""
+    ch = r.get('chaos')
+    if ch is None:
+        return 'skip'
+    assert ch.get('scenario'), 'chaos block missing its scenario tag'
+    assert ch.get('fairness_pass') is True, \
+        f"chaos '{ch.get('scenario')}': fairness invariant failed"
+    assert ch.get('liveness_pass') is True, \
+        f"chaos '{ch.get('scenario')}': liveness invariant failed"
+    stores = ch.get('stores') or []
+    assert stores, 'chaos block carries no per-store ledgers'
+    for s in stores:
+        for key in ('offered', 'completed', 'rejected', 'rejected_tenant',
+                    'expired', 'internal', 'degraded', 'mismatches'):
+            assert key in s, f"chaos ledger for {s.get('name')} missing '{key}'"
+        assert s['mismatches'] == 0, \
+            f"chaos: store {s.get('name')} served answers diverging from its oracle"
+    if ch['scenario'] == 'flood' and len(stores) > 1:
+        assert stores[0].get('flooder') and stores[0]['rejected_tenant'] > 0, \
+            'flood scenario never tripped the flooder own quota'
+        for s in stores[1:]:
+            assert s['rejected_tenant'] == 0, \
+                f"victim {s.get('name')} paid for the flooder's quota"
+    return 'pass'
+
+# Self-test against synthetic verdicts before gating the real run: the
+# validator must pass a good verdict, skip chaos-free shapes, and FAIL
+# a bad one (a gate that cannot fail gates nothing).
+ok = {'chaos': {'scenario': 'flood', 'fairness_pass': True, 'liveness_pass': True,
+      'stores': [
+          {'name': 's0', 'flooder': True, 'offered': 10, 'completed': 4,
+           'rejected': 0, 'rejected_tenant': 6, 'expired': 0, 'internal': 0,
+           'degraded': 0, 'mismatches': 0},
+          {'name': 's1', 'flooder': False, 'offered': 5, 'completed': 5,
+           'rejected': 0, 'rejected_tenant': 0, 'expired': 0, 'internal': 0,
+           'degraded': 0, 'mismatches': 0}]}}
+assert validate(ok) == 'pass', 'validator rejected a passing chaos verdict'
+assert validate({'bench': 'serve'}) == 'skip', 'pre-chaos JSON must skip'
+assert validate({'chaos': None}) == 'skip', 'chaos-free run must skip'
+for mutate, what in [
+        (lambda b: b['chaos'].__setitem__('fairness_pass', False), 'failed fairness'),
+        (lambda b: b['chaos'].__setitem__('liveness_pass', False), 'failed liveness'),
+        (lambda b: b['chaos']['stores'][1].__setitem__('rejected_tenant', 3), 'shed victim'),
+        (lambda b: b['chaos']['stores'][1].__setitem__('mismatches', 1), 'wrong answer')]:
+    bad = json.loads(json.dumps(ok))
+    mutate(bad)
+    try:
+        validate(bad)
+        raise SystemExit(f'chaos validator accepted a {what} verdict')
+    except AssertionError:
+        pass
+
+r = json.load(open('BENCH_serve_chaos.json'))
+verdict = validate(r)
+if verdict == 'skip':
+    raise SystemExit('chaos smoke run wrote no chaos block')
+ch = r['chaos']
+led = ", ".join(
+    f"{s['name']}{'[flood]' if s.get('flooder') else ''} "
+    f"{s['completed']}/{s['offered']} ok, {s['rejected_tenant']} tenant-shed"
+    for s in ch['stores'])
+print(f"chaos smoke OK ('{ch['scenario']}', validator self-test passed): {led}")
+PYEOF
+else
+    grep -q '"scenario": "flood"' BENCH_serve_chaos.json
+    grep -q '"fairness_pass": true' BENCH_serve_chaos.json
+    grep -q '"liveness_pass": true' BENCH_serve_chaos.json
     echo "python3 unavailable; structural grep checks passed"
 fi
 

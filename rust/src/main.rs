@@ -85,6 +85,14 @@ fn info() {
     println!("                               per-store overrides (comma lists, cycled):");
     println!("                               --store-dims D,.. --store-items N,.. --store-sketch B,..");
     println!("                               --store-weights W,.. --store-repeat F,..");
+    println!("                        overload control: --store-quotas Q,.. (per-store admission");
+    println!("                               quota / DRR lane bound; 0 = global capacity only;");
+    println!("                               weights double as DRR pop shares)");
+    println!("                        fault injection: --faults reject=P,panic=P,delay-prob=P,");
+    println!("                               delay-us=N,seed=S (deterministic; probs in [0,1])");
+    println!("                        chaos: --chaos flood|deadline|panic (runs after the clean");
+    println!("                               passes on a fresh engine; fairness + liveness gated,");
+    println!("                               verdict in the JSON's \"chaos\" block)");
     println!("  runtime-info          check PJRT artifacts (artifacts/manifest.json)");
 }
 
@@ -238,7 +246,8 @@ fn solve(grid: usize) {
 }
 
 fn serve_bench(flags: &[String]) {
-    use nscog::serve::loadgen::{run_bench, BenchOpts};
+    use nscog::serve::loadgen::{run_bench, BenchOpts, ChaosScenario};
+    use nscog::serve::FaultConfig;
 
     let has = |name: &str| flags.iter().any(|a| a == name);
     let val = |name: &str| {
@@ -317,6 +326,7 @@ fn serve_bench(flags: &[String]) {
     let sketch = list("--store-sketch");
     let weights = list("--store-weights");
     let repeats = list("--store-repeat");
+    let quotas = list("--store-quotas");
     for (i, p) in opts.fixture.stores.iter_mut().enumerate() {
         let pick = |xs: &[String]| -> Option<String> {
             if xs.is_empty() {
@@ -340,9 +350,53 @@ fn serve_bench(flags: &[String]) {
         if let Some(fr) = pick(&repeats).and_then(|v| v.parse::<f64>().ok()) {
             p.repeat_frac = fr.clamp(0.0, 1.0);
         }
+        if let Some(q) = pick(&quotas).and_then(|v| v.parse::<usize>().ok()) {
+            // 0 = unbounded lane (global capacity only)
+            p.quota = if q == 0 { None } else { Some(q) };
+        }
     }
     if let Some(p) = val("--json") {
         opts.json_path = Some(p.clone());
+    }
+    if let Some(spec) = val("--chaos") {
+        match ChaosScenario::parse(spec) {
+            Some(sc) => opts.chaos = Some(sc),
+            None => {
+                eprintln!("unknown --chaos scenario '{spec}' (expected flood|deadline|panic)");
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(spec) = val("--faults") {
+        // --faults reject=0.05,panic=0.25,delay-us=200,delay-prob=0.5,seed=7
+        let mut fc = FaultConfig::default();
+        for kv in spec.split(',').filter(|s| !s.is_empty()) {
+            let (key, v) = match kv.split_once('=') {
+                Some(pair) => pair,
+                None => {
+                    eprintln!("bad --faults entry '{kv}' (expected key=value)");
+                    std::process::exit(2);
+                }
+            };
+            let ok = match key {
+                "reject" => v.parse().map(|p| fc.admit_reject_prob = p).is_ok(),
+                "panic" => v.parse().map(|p| fc.panic_prob = p).is_ok(),
+                "delay-prob" => v.parse().map(|p| fc.kernel_delay_prob = p).is_ok(),
+                "delay-us" => v
+                    .parse::<u64>()
+                    .map(|us| fc.kernel_delay = std::time::Duration::from_micros(us))
+                    .is_ok(),
+                "seed" => v.parse().map(|s| fc.seed = s).is_ok(),
+                _ => false,
+            };
+            if !ok {
+                eprintln!(
+                    "bad --faults entry '{kv}' (keys: reject, panic, delay-prob, delay-us, seed)"
+                );
+                std::process::exit(2);
+            }
+        }
+        opts.engine.faults = Some(fc);
     }
 
     let f = &opts.fixture;
@@ -464,6 +518,36 @@ fn serve_bench(flags: &[String]) {
             "ERROR: {mismatches} batched responses diverged from the sequential oracle"
         );
         std::process::exit(1);
+    }
+    if let Some(chaos) = &report.chaos {
+        println!(
+            "chaos '{}': fairness {}, liveness {}",
+            chaos.scenario.name(),
+            if chaos.fairness_pass { "PASS" } else { "FAIL" },
+            if chaos.liveness_pass { "PASS" } else { "FAIL" }
+        );
+        for s in &chaos.stores {
+            println!(
+                "  store '{}'{}: {} offered, {} completed ({} degraded), {} tenant-rejected, {} rejected, {} expired, {} internal, {} mismatches",
+                s.name,
+                if s.flooder { " [misbehaving]" } else { "" },
+                s.offered,
+                s.completed,
+                s.degraded,
+                s.rejected_tenant,
+                s.rejected,
+                s.expired,
+                s.internal,
+                s.mismatches
+            );
+        }
+        if !chaos.fairness_pass || !chaos.liveness_pass {
+            eprintln!(
+                "ERROR: chaos scenario '{}' violated its fairness/liveness invariants",
+                chaos.scenario.name()
+            );
+            std::process::exit(1);
+        }
     }
 }
 

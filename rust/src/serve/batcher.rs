@@ -3,7 +3,10 @@
 //!
 //! A worker blocks for the first ticket, then holds the batch window open
 //! for up to `max_delay` (or until `max_batch` tickets arrive) before
-//! executing. The gathered batch may mix stores; execution splits it by
+//! executing. Batch formation is deadline-aware: a ticket that expired
+//! while queued is answered ([`ServeError::DeadlineExceeded`]) and
+//! dropped at pop time, before it can consume batch capacity or kernel
+//! work. The gathered batch may mix stores; execution splits it by
 //! target store and request class, and each `(store, class)` group runs
 //! as ONE batched call — `ShardedCleanup::recall_batch_stats`,
 //! `recall_topk_batch_stats`, or `Resonator::factorize_batch_with` over
@@ -14,7 +17,17 @@
 //! or codebooks. Each store's configured [`super::cache::ResponseCache`] is consulted
 //! first: repeated queries bypass the kernels entirely (see
 //! [`super::cache`]).
+//!
+//! Graceful degradation: a store whose queue lane is backlogged past its
+//! [`super::registry::StoreSpec::degrade_depth`] threshold is served
+//! degraded for the batch — top-k requests are answered at
+//! `degrade_k` (wrapped in [`ServeResponse::Degraded`] so the truncation
+//! is explicit, and never cached), factorize requests are shed with
+//! [`ServeError::TenantOverloaded`]. Cache hits still serve full answers
+//! (they cost no kernel work). Degradation is per store: one tenant's
+//! backlog never degrades another's responses.
 
+use super::faults::FaultPlan;
 use super::queue::{AdmissionQueue, ResponseSlot, Ticket};
 use super::registry::{StoreId, StoreRegistry};
 use super::stats::{ServeStats, StoreWork};
@@ -41,17 +54,35 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Gather one micro-batch: block for the first ticket, then fill the
-/// window. `None` once the queue is closed and drained.
-pub fn gather(queue: &AdmissionQueue, policy: &BatchPolicy) -> Option<Vec<Ticket>> {
-    let first = queue.pop_blocking()?;
+/// Answer an expired ticket without executing it (stats first, then the
+/// fill, so the woken client observes metrics including its request).
+fn drop_expired(t: Ticket, stats: &ServeStats) {
+    stats.record_expired(t.request.store, 1);
+    t.slot.fill(Err(ServeError::DeadlineExceeded));
+}
+
+/// Gather one micro-batch: block for the first *live* ticket, then fill
+/// the window. Tickets that expired while queued are answered
+/// (`DeadlineExceeded`) and dropped here — they consume neither batch
+/// capacity nor a batch window. `None` once the queue is closed and
+/// drained.
+pub fn gather(queue: &AdmissionQueue, policy: &BatchPolicy, stats: &ServeStats) -> Option<Vec<Ticket>> {
     let max_batch = policy.max_batch.max(1);
     let mut batch = Vec::with_capacity(max_batch);
+    let first = loop {
+        let t = queue.pop_blocking()?;
+        if t.expired(Instant::now()) {
+            drop_expired(t, stats);
+            continue;
+        }
+        break t;
+    };
     batch.push(first);
     if max_batch > 1 {
         let window_end = Instant::now() + policy.max_delay;
         while batch.len() < max_batch {
             match queue.pop_until(window_end) {
+                Some(t) if t.expired(Instant::now()) => drop_expired(t, stats),
                 Some(t) => batch.push(t),
                 None => break,
             }
@@ -92,13 +123,44 @@ impl Default for WorkerScratch {
     }
 }
 
+/// Everything [`execute`] needs besides the batch itself. Bundled so the
+/// engine's worker loop and the direct-execution tests share one
+/// signature as the execution path grows knobs.
+pub struct ExecCtx<'a> {
+    pub registry: &'a StoreRegistry,
+    pub stats: &'a ServeStats,
+    pub scan_threads: usize,
+    /// Queue view for the degraded-mode depth probe (`lane_len`);
+    /// `None` disables depth-triggered degradation (tests that execute
+    /// batches directly).
+    pub queue: Option<&'a AdmissionQueue>,
+    /// Fault-injection plan; `None` injects nothing.
+    pub faults: Option<&'a FaultPlan>,
+}
+
+impl<'a> ExecCtx<'a> {
+    /// Context with no queue probe and no fault plan.
+    pub fn plain(registry: &'a StoreRegistry, stats: &'a ServeStats, scan_threads: usize) -> Self {
+        ExecCtx {
+            registry,
+            stats,
+            scan_threads,
+            queue: None,
+            faults: None,
+        }
+    }
+}
+
 /// One store's slice of a gathered batch, split by request class.
 #[derive(Default)]
 struct StoreGroup {
     recall_qs: Vec<crate::vsa::BinaryHV>,
     recall_slots: Vec<(ResponseSlot, Instant)>,
     topk_qs: Vec<crate::vsa::BinaryHV>,
-    topk_slots: Vec<(ResponseSlot, Instant, usize)>,
+    /// `(slot, enqueued, effective k, served degraded)` — k is already
+    /// capped when the store is degraded, and degraded answers are
+    /// wrapped and never cached.
+    topk_slots: Vec<(ResponseSlot, Instant, usize, bool)>,
     fact_scenes: Vec<RealHV>,
     fact_slots: Vec<(ResponseSlot, Instant)>,
 }
@@ -128,16 +190,25 @@ impl StoreGroup {
 /// Stats are recorded *before* any slot is filled, so a client woken by
 /// its response always observes engine metrics that already include its
 /// own request.
-pub fn execute(
-    batch: Vec<Ticket>,
-    registry: &StoreRegistry,
-    scratch: &mut WorkerScratch,
-    stats: &ServeStats,
-    scan_threads: usize,
-) {
+pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratch) {
+    // Fault injection: a planned worker panic fires before any slot is
+    // answered, so containment (engine worker loop) owns the whole
+    // batch's outcome.
+    if let Some(f) = ctx.faults {
+        if f.should_panic() {
+            panic!("injected worker panic (fault plan)");
+        }
+    }
+
+    let registry = ctx.registry;
+    let stats = ctx.stats;
     let now = Instant::now();
     let mut groups: BTreeMap<StoreId, StoreGroup> = BTreeMap::new();
-    let mut expired = 0u64;
+    // Depth-probed once per store per batch; degradation is a
+    // batch-formation decision, not a per-ticket race.
+    let mut degraded_stores: BTreeMap<StoreId, bool> = BTreeMap::new();
+    let mut expired_by: BTreeMap<StoreId, u64> = BTreeMap::new();
+    let mut degraded_by: BTreeMap<StoreId, u64> = BTreeMap::new();
     let mut unsupported = 0u64;
     let mut latencies: Vec<(StoreId, RequestKind, Duration)> = Vec::with_capacity(batch.len());
     // (slot, outcome) pairs, filled only after all metrics are recorded
@@ -146,8 +217,8 @@ pub fn execute(
 
     for t in batch {
         if t.expired(now) {
+            *expired_by.entry(t.request.store).or_default() += 1;
             fills.push((t.slot, Err(ServeError::DeadlineExceeded)));
-            expired += 1;
             continue;
         }
         let ServeRequest { store: store_id, op } = t.request;
@@ -156,6 +227,12 @@ pub fn execute(
             unsupported += 1;
             continue;
         };
+        let degraded = *degraded_stores.entry(store_id).or_insert_with(|| {
+            match (store.spec().degrade_depth, ctx.queue) {
+                (Some(depth), Some(q)) => q.lane_len(store_id) >= depth.max(1),
+                _ => false,
+            }
+        });
         let cache = store.cache();
         match op {
             RequestOp::Recall { query } => {
@@ -176,12 +253,20 @@ pub fn execute(
                     fills.push((t.slot, Err(ServeError::InvalidDimension)));
                     unsupported += 1;
                 } else if let Some(resp) = cache.and_then(|c| c.get_topk(&query, k)) {
+                    // a full-k hit costs no kernel work, so degraded
+                    // stores still serve it undegraded
                     latencies.push((store_id, RequestKind::RecallTopK, t.enqueued.elapsed()));
                     fills.push((t.slot, Ok(resp)));
                 } else {
+                    let (k_eff, deg) = if degraded && k > store.spec().degrade_k.max(1) {
+                        *degraded_by.entry(store_id).or_default() += 1;
+                        (store.spec().degrade_k.max(1), true)
+                    } else {
+                        (k, false)
+                    };
                     let g = groups.entry(store_id).or_default();
                     g.topk_qs.push(query);
-                    g.topk_slots.push((t.slot, t.enqueued, k));
+                    g.topk_slots.push((t.slot, t.enqueued, k_eff, deg));
                 }
             }
             RequestOp::Factorize { scene } => match store.resonator() {
@@ -192,6 +277,12 @@ pub fn execute(
                 Some(res) if scene.dim() != res.codebooks()[0].dim() => {
                     fills.push((t.slot, Err(ServeError::InvalidDimension)));
                     unsupported += 1;
+                }
+                Some(_) if degraded => {
+                    // shed the expensive class while backlogged — the
+                    // tenant-local error tells the caller to back off
+                    *degraded_by.entry(store_id).or_default() += 1;
+                    fills.push((t.slot, Err(ServeError::TenantOverloaded)));
                 }
                 Some(_) => {
                     let g = groups.entry(store_id).or_default();
@@ -205,6 +296,13 @@ pub fn execute(
     let executed: usize = groups.values().map(StoreGroup::executed).sum();
     let mut store_work: Vec<(StoreId, StoreWork)> = Vec::with_capacity(groups.len());
 
+    // Fault injection: artificial kernel latency ahead of the dispatches.
+    if executed > 0 {
+        if let Some(d) = ctx.faults.and_then(|f| f.kernel_delay()) {
+            std::thread::sleep(d);
+        }
+    }
+
     for (store_id, group) in groups {
         let store = registry
             .store_by_id(store_id)
@@ -215,7 +313,7 @@ pub fn execute(
         if !group.recall_qs.is_empty() {
             let (results, timings, scan_prune) = store
                 .cleanup()
-                .recall_batch_stats(&group.recall_qs, scan_threads);
+                .recall_batch_stats(&group.recall_qs, ctx.scan_threads);
             work.timings.extend(timings);
             work.prune.merge(&scan_prune);
             for (((slot, enqueued), (index, cosine)), query) in group
@@ -239,14 +337,19 @@ pub fn execute(
             // `BinaryCodebook::top_k`). Cache entries are keyed at each
             // ticket's own k, so a hit can never leak a different k's
             // answer.
-            let k_max = group.topk_slots.iter().map(|&(_, _, k)| k).max().unwrap_or(0);
+            let k_max = group
+                .topk_slots
+                .iter()
+                .map(|&(_, _, k, _)| k)
+                .max()
+                .unwrap_or(0);
             let (results, timings, scan_prune) =
                 store
                     .cleanup()
-                    .recall_topk_batch_stats(&group.topk_qs, k_max, scan_threads);
+                    .recall_topk_batch_stats(&group.topk_qs, k_max, ctx.scan_threads);
             work.timings.extend(timings);
             work.prune.merge(&scan_prune);
-            for (((slot, enqueued, k), mut hits), query) in group
+            for (((slot, enqueued, k, deg), mut hits), query) in group
                 .topk_slots
                 .into_iter()
                 .zip(results)
@@ -254,9 +357,18 @@ pub fn execute(
             {
                 hits.truncate(k);
                 let resp = ServeResponse::RecallTopK { hits };
-                if let Some(c) = cache {
-                    c.insert(ServeRequest::recall_topk_on(store_id, query, k), &resp);
-                }
+                let resp = if deg {
+                    // degraded answers are marked and never inserted:
+                    // a cached entry must always be the full-k truth
+                    ServeResponse::Degraded {
+                        inner: Box::new(resp),
+                    }
+                } else {
+                    if let Some(c) = cache {
+                        c.insert(ServeRequest::recall_topk_on(store_id, query, k), &resp);
+                    }
+                    resp
+                };
                 latencies.push((store_id, RequestKind::RecallTopK, enqueued.elapsed()));
                 fills.push((slot, Ok(resp)));
             }
@@ -292,8 +404,11 @@ pub fn execute(
         store_work.push((store_id, work));
     }
 
-    if expired > 0 {
-        stats.record_expired(expired);
+    for (&store, &n) in &expired_by {
+        stats.record_expired(store, n);
+    }
+    for (&store, &n) in &degraded_by {
+        stats.record_degraded(store, n);
     }
     if unsupported > 0 {
         stats.record_unsupported(unsupported);
@@ -306,7 +421,7 @@ pub fn execute(
 
 #[cfg(test)]
 mod tests {
-    use super::super::queue::Priority;
+    use super::super::queue::{LaneSpec, Priority};
     use super::super::registry::StoreSpec;
     use super::*;
     use crate::util::Rng;
@@ -354,6 +469,7 @@ mod tests {
     #[test]
     fn gather_respects_max_batch() {
         let q = AdmissionQueue::new(16);
+        let stats = ServeStats::new(&[("only", 1)]);
         for i in 0..5 {
             let (t, _slot) = ticket(
                 ServeRequest::recall_topk(BinaryHV::zeros(64), i),
@@ -365,10 +481,45 @@ mod tests {
             max_batch: 3,
             max_delay: Duration::from_millis(5),
         };
-        let batch = gather(&q, &policy).unwrap();
+        let batch = gather(&q, &policy, &stats).unwrap();
         assert_eq!(batch.len(), 3);
-        let rest = gather(&q, &policy).unwrap();
+        let rest = gather(&q, &policy, &stats).unwrap();
         assert_eq!(rest.len(), 2);
+    }
+
+    #[test]
+    fn gather_drops_expired_tickets_without_consuming_batch_slots() {
+        let q = AdmissionQueue::new(16);
+        let stats = ServeStats::new(&[("only", 1)]);
+        // two already-expired tickets ahead of three live ones
+        let mut expired_slots = Vec::new();
+        for i in 0..2 {
+            let (t, s) = ticket(
+                ServeRequest::recall_topk(BinaryHV::zeros(64), i),
+                Duration::from_secs(0),
+            );
+            expired_slots.push(s);
+            q.push(t).unwrap();
+        }
+        for i in 10..13 {
+            let (t, _s) = ticket(
+                ServeRequest::recall_topk(BinaryHV::zeros(64), i),
+                Duration::from_secs(5),
+            );
+            q.push(t).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch: 3,
+            max_delay: Duration::from_millis(5),
+        };
+        let batch = gather(&q, &policy, &stats).unwrap();
+        assert_eq!(batch.len(), 3, "expired tickets must not occupy the batch");
+        for s in expired_slots {
+            assert_eq!(s.wait(), Err(ServeError::DeadlineExceeded));
+        }
+        let snap = stats.snapshot();
+        assert_eq!(snap.expired, 2);
+        assert_eq!(snap.stores[0].expired_dropped, 2);
     }
 
     #[test]
@@ -397,7 +548,11 @@ mod tests {
         let (t3, s3) = ticket(ServeRequest::factorize(scene.clone()), Duration::from_secs(5));
         let stats = stats_for(&registry);
         let mut scratch = WorkerScratch::new();
-        execute(vec![t1, t2, t3], &registry, &mut scratch, &stats, 1);
+        execute(
+            vec![t1, t2, t3],
+            &ExecCtx::plain(&registry, &stats, 1),
+            &mut scratch,
+        );
         let (idx, cos) = cm.recall(&q1);
         assert_eq!(s1.wait(), Ok(ServeResponse::Recall { index: idx, cosine: cos }));
         assert_eq!(
@@ -459,7 +614,11 @@ mod tests {
             ServeRequest::recall_topk_on(b, qb2.clone(), 5),
             Duration::from_secs(5),
         );
-        execute(vec![t1, t2, t3, t4], &registry, &mut scratch, &stats, 1);
+        execute(
+            vec![t1, t2, t3, t4],
+            &ExecCtx::plain(&registry, &stats, 1),
+            &mut scratch,
+        );
         let (idx, cos) = cm_a.recall(&qa1);
         assert_eq!(s1.wait(), Ok(ServeResponse::Recall { index: idx, cosine: cos }));
         let (idx, cos) = cm_b.recall(&qb1);
@@ -504,7 +663,11 @@ mod tests {
             ServeRequest::recall(BinaryHV::zeros(512)),
             Duration::from_secs(5),
         );
-        execute(vec![t_bad, t_ok], &registry, &mut scratch, &stats, 1);
+        execute(
+            vec![t_bad, t_ok],
+            &ExecCtx::plain(&registry, &stats, 1),
+            &mut scratch,
+        );
         assert_eq!(s_bad.wait(), Err(ServeError::UnknownStore));
         assert!(s_ok.wait().is_ok(), "good request in same batch still served");
         assert_eq!(stats.snapshot().unsupported, 1);
@@ -527,7 +690,7 @@ mod tests {
             batch.push(t);
             slots.push(s);
         }
-        execute(batch, &registry, &mut scratch, &stats, 1);
+        execute(batch, &ExecCtx::plain(&registry, &stats, 1), &mut scratch);
         for ((q, &k), s) in queries.iter().zip(&ks).zip(slots) {
             assert_eq!(
                 s.wait(),
@@ -555,14 +718,22 @@ mod tests {
         // first pass: misses, computed by the kernels, inserted
         let (t1, s1) = ticket(ServeRequest::recall(q.clone()), Duration::from_secs(5));
         let (t2, s2) = ticket(ServeRequest::recall_topk(q.clone(), 4), Duration::from_secs(5));
-        execute(vec![t1, t2], &registry, &mut scratch, &stats, 1);
+        execute(
+            vec![t1, t2],
+            &ExecCtx::plain(&registry, &stats, 1),
+            &mut scratch,
+        );
         let first_recall = s1.wait().unwrap();
         let first_topk = s2.wait().unwrap();
         let scans_after_first: u64 = stats.snapshot().shards.iter().map(|s| s.scans).sum();
         // second pass: same query → both served from cache, no new scans
         let (t3, s3) = ticket(ServeRequest::recall(q.clone()), Duration::from_secs(5));
         let (t4, s4) = ticket(ServeRequest::recall_topk(q.clone(), 4), Duration::from_secs(5));
-        execute(vec![t3, t4], &registry, &mut scratch, &stats, 1);
+        execute(
+            vec![t3, t4],
+            &ExecCtx::plain(&registry, &stats, 1),
+            &mut scratch,
+        );
         assert_eq!(s3.wait().unwrap(), first_recall);
         assert_eq!(s4.wait().unwrap(), first_topk);
         let snap = stats.snapshot();
@@ -578,7 +749,11 @@ mod tests {
         assert_eq!(c.misses, 2);
         // a different k is a miss, answered by the kernels at its own k
         let (t5, s5) = ticket(ServeRequest::recall_topk(q.clone(), 2), Duration::from_secs(5));
-        execute(vec![t5], &registry, &mut scratch, &stats, 1);
+        execute(
+            vec![t5],
+            &ExecCtx::plain(&registry, &stats, 1),
+            &mut scratch,
+        );
         assert_eq!(
             s5.wait(),
             Ok(ServeResponse::RecallTopK {
@@ -602,7 +777,11 @@ mod tests {
             ServeRequest::recall(BinaryHV::zeros(512)),
             Duration::from_secs(5),
         );
-        execute(vec![t_bad, t_ok], &registry, &mut scratch, &stats, 1);
+        execute(
+            vec![t_bad, t_ok],
+            &ExecCtx::plain(&registry, &stats, 1),
+            &mut scratch,
+        );
         assert_eq!(s_bad.wait(), Err(ServeError::InvalidDimension));
         assert!(s_ok.wait().is_ok(), "good request in same batch still served");
         assert_eq!(stats.snapshot().unsupported, 1);
@@ -621,13 +800,134 @@ mod tests {
             ServeRequest::factorize(crate::vsa::RealHV::zeros(64)),
             Duration::from_secs(5),
         );
-        execute(vec![t_expired, t_fact], &registry, &mut scratch, &stats, 1);
+        execute(
+            vec![t_expired, t_fact],
+            &ExecCtx::plain(&registry, &stats, 1),
+            &mut scratch,
+        );
         assert_eq!(s_expired.wait(), Err(ServeError::DeadlineExceeded));
         assert_eq!(s_fact.wait(), Err(ServeError::Unsupported));
         let snap = stats.snapshot();
         assert_eq!(snap.completed, 0);
         assert_eq!(snap.expired, 1);
+        assert_eq!(snap.stores[0].expired_dropped, 1);
         assert_eq!(snap.unsupported, 1);
         assert_eq!(snap.batches, 0, "empty batches don't count toward occupancy");
+    }
+
+    #[test]
+    fn degraded_store_caps_topk_and_sheds_factorize() {
+        let mut rng = Rng::new(21);
+        let cb = BinaryCodebook::random(&mut rng, 24, 512);
+        let cm = CleanupMemory::new(cb.clone());
+        let res = Resonator::new(
+            (0..2)
+                .map(|_| RealCodebook::random_bipolar(&mut rng, 4, 256))
+                .collect(),
+            20,
+        );
+        let registry = StoreRegistry::single(
+            &cb,
+            Some(res.clone()),
+            StoreSpec {
+                shards: 2,
+                cache_capacity: 0,
+                degrade_depth: Some(2),
+                degrade_k: 2,
+                ..StoreSpec::default()
+            },
+        );
+        let stats = stats_for(&registry);
+        let mut scratch = WorkerScratch::new();
+
+        // backlog the store's lane past the threshold so the depth probe
+        // trips (these fillers stay queued; we execute a batch directly)
+        let q = AdmissionQueue::with_lanes(16, &[LaneSpec { weight: 1, quota: 16 }]);
+        for i in 0..3 {
+            let (t, _s) = ticket(
+                ServeRequest::recall_topk(BinaryHV::zeros(512), i + 1),
+                Duration::from_secs(5),
+            );
+            q.push(t).unwrap();
+        }
+
+        let query = BinaryHV::random(&mut rng, 512);
+        let scene = res.compose(&[1, 3]);
+        let (t_topk, s_topk) = ticket(
+            ServeRequest::recall_topk(query.clone(), 5),
+            Duration::from_secs(5),
+        );
+        let (t_fact, s_fact) = ticket(ServeRequest::factorize(scene), Duration::from_secs(5));
+        let ctx = ExecCtx {
+            registry: &registry,
+            stats: &stats,
+            scan_threads: 1,
+            queue: Some(&q),
+            faults: None,
+        };
+        execute(vec![t_topk, t_fact], &ctx, &mut scratch);
+
+        // top-k served degraded: truncated to degrade_k, wrapped, and
+        // bit-exact w.r.t. the oracle's prefix (prefix-stability)
+        match s_topk.wait() {
+            Ok(ServeResponse::Degraded { inner }) => {
+                assert_eq!(
+                    *inner,
+                    ServeResponse::RecallTopK {
+                        hits: cm.recall_topk(&query, 2)
+                    }
+                );
+            }
+            other => panic!("expected degraded top-k, got {other:?}"),
+        }
+        // factorize shed with the tenant-local error
+        assert_eq!(s_fact.wait(), Err(ServeError::TenantOverloaded));
+        let snap = stats.snapshot();
+        assert_eq!(snap.stores[0].degraded, 2);
+        assert_eq!(snap.degraded, 2);
+
+        // drain the lane below the threshold: service returns to full
+        while q.pop_until(Instant::now()).is_some() {}
+        let (t_full, s_full) = ticket(
+            ServeRequest::recall_topk(query.clone(), 5),
+            Duration::from_secs(5),
+        );
+        execute(vec![t_full], &ctx, &mut scratch);
+        assert_eq!(
+            s_full.wait(),
+            Ok(ServeResponse::RecallTopK {
+                hits: cm.recall_topk(&query, 5)
+            })
+        );
+    }
+
+    #[test]
+    fn injected_kernel_delay_slows_but_does_not_change_answers() {
+        let (cb, registry) = single_registry(33);
+        let cm = CleanupMemory::new(cb);
+        let stats = stats_for(&registry);
+        let mut scratch = WorkerScratch::new();
+        let plan = FaultPlan::new(super::super::faults::FaultConfig {
+            seed: 3,
+            kernel_delay_prob: 1.0,
+            kernel_delay: Duration::from_millis(5),
+            ..Default::default()
+        });
+        let mut rng = Rng::new(34);
+        let query = BinaryHV::random(&mut rng, 512);
+        let (t, s) = ticket(ServeRequest::recall(query.clone()), Duration::from_secs(5));
+        let ctx = ExecCtx {
+            registry: &registry,
+            stats: &stats,
+            scan_threads: 1,
+            queue: None,
+            faults: Some(&plan),
+        };
+        let t0 = Instant::now();
+        execute(vec![t], &ctx, &mut scratch);
+        assert!(t0.elapsed() >= Duration::from_millis(5), "delay injected");
+        let (idx, cos) = cm.recall(&query);
+        assert_eq!(s.wait(), Ok(ServeResponse::Recall { index: idx, cosine: cos }));
+        assert_eq!(plan.injected().2, 1, "one delayed dispatch counted");
     }
 }

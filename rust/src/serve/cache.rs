@@ -219,9 +219,12 @@ impl ResponseCache {
         self.lookup(self.store, CLASS_TOPK, k, query)
     }
 
+    // Lock poisoning: a worker that panics mid-probe must not brick the
+    // shard for every later request — entries are verified on read, so a
+    // recovered guard can at worst miss, never serve a wrong answer.
     fn lookup(&self, store: StoreId, class: u8, k: usize, query: &BinaryHV) -> Option<ServeResponse> {
         let fold = fold_query(query.words(), class, k, store);
-        let g = self.shard_of(fold).lock().expect("cache shard poisoned");
+        let g = self.shard_of(fold).lock().unwrap_or_else(|p| p.into_inner());
         let found = g
             .map
             .get(&fold)
@@ -274,7 +277,7 @@ impl ResponseCache {
         response: &ServeResponse,
     ) {
         let fold = fold_query(query.words(), class, k, store);
-        let mut g = self.shard_of(fold).lock().expect("cache shard poisoned");
+        let mut g = self.shard_of(fold).lock().unwrap_or_else(|p| p.into_inner());
         let st = &mut *g;
         if let Some(bucket) = st.map.get(&fold) {
             if bucket.iter().any(|e| e.matches(store, class, k, &query)) {
@@ -311,7 +314,7 @@ impl ResponseCache {
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.lock().expect("cache shard poisoned").len)
+            .map(|s| s.lock().unwrap_or_else(|p| p.into_inner()).len)
             .sum()
     }
 

@@ -6,18 +6,31 @@
 //! concurrent requests into micro-batches that execution splits per
 //! `(store, request class)`. Admission validates the request's store id
 //! up front (unknown ids are refused with [`ServeError::UnknownStore`]
-//! before they ever occupy queue capacity). Shutdown closes the queue,
+//! before they ever occupy queue capacity), then applies two-level
+//! backpressure: global capacity ([`ServeError::Overloaded`]) and the
+//! target store's own lane quota ([`ServeError::TenantOverloaded`]) — a
+//! flooding tenant sheds its *own* traffic while other stores' lanes stay
+//! admittable, and the queue's deficit-round-robin pop keeps service
+//! shares proportional to store weights. Shutdown closes the queue,
 //! drains every already-admitted ticket (no waiter is ever left hanging),
 //! and joins the workers; `Drop` does the same if `shutdown()` was never
 //! called.
+//!
+//! Worker panics are contained: `execute` runs under `catch_unwind`, a
+//! poisoned batch's still-unanswered tickets are filled with
+//! [`ServeError::Internal`], the worker's scratch is rebuilt, and the
+//! loop continues — one bad batch (or one injected fault) never takes
+//! the engine down.
 
-use super::batcher::{self, BatchPolicy, WorkerScratch};
+use super::batcher::{self, BatchPolicy, ExecCtx, WorkerScratch};
 use super::cache::CacheConfig;
-use super::queue::{AdmissionQueue, Priority, ResponseSlot, Ticket};
-use super::registry::{StoreRegistry, StoreSpec};
+use super::faults::{FaultConfig, FaultPlan};
+use super::queue::{AdmissionQueue, LaneSpec, Priority, ResponseSlot, Ticket};
+use super::registry::{StoreId, StoreRegistry, StoreSpec};
 use super::stats::{ServeStats, StatsSnapshot};
 use super::{ServeError, ServeRequest, ServeResponse};
 use crate::vsa::{BinaryCodebook, Resonator};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -53,6 +66,9 @@ pub struct EngineConfig {
     pub cache_capacity: usize,
     /// Response-cache lock shards. `--cache-shards`.
     pub cache_shards: usize,
+    /// Fault-injection plan applied at the engine's injection points;
+    /// `None` (the default) injects nothing. `--faults`.
+    pub faults: Option<FaultConfig>,
 }
 
 impl Default for EngineConfig {
@@ -69,6 +85,7 @@ impl Default for EngineConfig {
             sketch_bits: None,
             cache_capacity: cache.capacity,
             cache_shards: cache.shards,
+            faults: None,
         }
     }
 }
@@ -79,6 +96,7 @@ struct Shared {
     stats: ServeStats,
     policy: BatchPolicy,
     scan_threads: usize,
+    faults: Option<FaultPlan>,
 }
 
 /// Handle to an in-flight asynchronous submission.
@@ -139,19 +157,29 @@ impl ServeEngine {
     /// `resonator`) as store 0 under the config's store knobs, then start
     /// serving. Behavior is bit-identical to the pre-registry engine;
     /// requests built with [`ServeRequest::recall`] and friends route
-    /// here.
+    /// here. `Err` only if the OS refuses to spawn a worker thread.
     pub fn start(
         codebook: &BinaryCodebook,
         resonator: Option<Resonator>,
         cfg: EngineConfig,
-    ) -> ServeEngine {
+    ) -> std::io::Result<ServeEngine> {
         let registry = StoreRegistry::single(codebook, resonator, StoreSpec::from_engine(&cfg));
         Self::start_registry(registry, cfg)
     }
 
     /// Take ownership of a prepared [`StoreRegistry`], spawn the worker
-    /// loops, and start serving all of its stores behind one queue.
-    pub fn start_registry(registry: StoreRegistry, cfg: EngineConfig) -> ServeEngine {
+    /// loops, and start serving all of its stores behind one queue. Each
+    /// store gets its own queue lane, weighted and quota-capped by its
+    /// [`StoreSpec`] (`quota: None` means the lane is bounded only by the
+    /// global capacity — the pre-quota behavior).
+    ///
+    /// `Err` if the OS refuses to spawn a worker thread; any workers
+    /// already spawned are shut down (queue closed, threads joined)
+    /// before the error is returned, so a partial failure leaks nothing.
+    pub fn start_registry(
+        registry: StoreRegistry,
+        cfg: EngineConfig,
+    ) -> std::io::Result<ServeEngine> {
         assert!(cfg.workers >= 1, "engine needs at least one worker");
         assert!(
             !registry.is_empty(),
@@ -163,8 +191,16 @@ impl ServeEngine {
             .map(|s| (s.name(), s.n_shards()))
             .collect();
         let stats = ServeStats::new(&store_shapes);
+        let lanes: Vec<LaneSpec> = registry
+            .stores()
+            .iter()
+            .map(|s| LaneSpec {
+                weight: s.spec().weight.max(1),
+                quota: s.spec().quota.unwrap_or(cfg.queue_capacity),
+            })
+            .collect();
         let shared = Arc::new(Shared {
-            queue: AdmissionQueue::new(cfg.queue_capacity),
+            queue: AdmissionQueue::with_lanes(cfg.queue_capacity, &lanes),
             registry,
             stats,
             policy: BatchPolicy {
@@ -172,21 +208,30 @@ impl ServeEngine {
                 max_delay: cfg.max_delay,
             },
             scan_threads: cfg.scan_threads.max(1),
+            faults: cfg.faults.map(FaultPlan::new),
         });
-        let workers = (0..cfg.workers)
-            .map(|w| {
-                let sh = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("nscog-serve-{w}"))
-                    .spawn(move || worker_loop(&sh))
-                    .expect("failed to spawn serve worker")
-            })
-            .collect();
-        ServeEngine {
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let sh = Arc::clone(&shared);
+            match std::thread::Builder::new()
+                .name(format!("nscog-serve-{w}"))
+                .spawn(move || worker_loop(&sh))
+            {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    shared.queue.close();
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(ServeEngine {
             shared,
             workers,
             cfg,
-        }
+        })
     }
 
     pub fn config(&self) -> &EngineConfig {
@@ -199,6 +244,13 @@ impl ServeEngine {
     /// engine it had no honest meaning.)
     pub fn registry(&self) -> &StoreRegistry {
         &self.shared.registry
+    }
+
+    /// The live fault-injection plan, when the config carried one. Chaos
+    /// tests retune its probabilities mid-run (`set_probs`) to force a
+    /// fault deterministically and then turn it back off.
+    pub fn faults(&self) -> Option<&FaultPlan> {
+        self.shared.faults.as_ref()
     }
 
     /// Blocking submit with default priority and deadline.
@@ -217,9 +269,10 @@ impl ServeEngine {
     }
 
     /// Non-blocking enqueue: admission control runs immediately (so
-    /// `Overloaded`/`ShuttingDown`/`UnknownStore` surface here),
-    /// execution is awaited through the returned [`PendingResponse`].
-    /// This is the open-loop load generator's entry point.
+    /// `Overloaded`/`TenantOverloaded`/`ShuttingDown`/`UnknownStore`
+    /// surface here), execution is awaited through the returned
+    /// [`PendingResponse`]. This is the open-loop load generator's entry
+    /// point.
     pub fn submit_async(
         &self,
         request: ServeRequest,
@@ -230,6 +283,15 @@ impl ServeEngine {
             self.shared.stats.record_unsupported(1);
             return Err(ServeError::UnknownStore);
         }
+        if let Some(f) = &self.shared.faults {
+            if f.should_reject_admission() {
+                // injected admission flake, indistinguishable from a
+                // full queue to the caller
+                self.shared.stats.record_rejected();
+                return Err(ServeError::Overloaded);
+            }
+        }
+        let store = request.store;
         let slot = ResponseSlot::new();
         let now = Instant::now();
         let ticket = Ticket {
@@ -245,8 +307,13 @@ impl ServeEngine {
                 enqueued: now,
             }),
             Err((_, why)) => {
-                self.shared.stats.record_rejected();
-                Err(why.to_serve_error())
+                let err = why.to_serve_error();
+                if err == ServeError::TenantOverloaded {
+                    self.shared.stats.record_tenant_rejected(store);
+                } else {
+                    self.shared.stats.record_rejected();
+                }
+                Err(err)
             }
         }
     }
@@ -289,8 +356,35 @@ impl Drop for ServeEngine {
 
 fn worker_loop(sh: &Shared) {
     let mut scratch = WorkerScratch::new();
-    while let Some(batch) = batcher::gather(&sh.queue, &sh.policy) {
-        batcher::execute(batch, &sh.registry, &mut scratch, &sh.stats, sh.scan_threads);
+    while let Some(batch) = batcher::gather(&sh.queue, &sh.policy, &sh.stats) {
+        // Keep a handle on every ticket's slot before execution consumes
+        // the batch, so a panicking batch can still be answered.
+        let slots: Vec<(ResponseSlot, StoreId)> = batch
+            .iter()
+            .map(|t| (t.slot.clone(), t.request.store))
+            .collect();
+        let ctx = ExecCtx {
+            registry: &sh.registry,
+            stats: &sh.stats,
+            scan_threads: sh.scan_threads,
+            queue: Some(&sh.queue),
+            faults: sh.faults.as_ref(),
+        };
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            batcher::execute(batch, &ctx, &mut scratch);
+        }));
+        if outcome.is_err() {
+            // Containment — the in-place respawn: answer whatever the
+            // poisoned batch left unanswered, rebuild the scratch (its
+            // resonator buffers may have been mid-update when the panic
+            // unwound through them), and keep serving.
+            for (slot, store) in slots {
+                if slot.fill(Err(ServeError::Internal)) {
+                    sh.stats.record_internal(store, 1);
+                }
+            }
+            scratch = WorkerScratch::new();
+        }
     }
 }
 
@@ -305,7 +399,8 @@ mod tests {
         let mut rng = Rng::new(seed);
         let cb = BinaryCodebook::random(&mut rng, 32, 1024);
         let cm = CleanupMemory::new(cb.clone());
-        (ServeEngine::start(&cb, None, cfg), cm)
+        let eng = ServeEngine::start(&cb, None, cfg).expect("spawn serve workers");
+        (eng, cm)
     }
 
     #[test]
@@ -453,5 +548,147 @@ mod tests {
     fn drop_joins_workers() {
         let (eng, _) = engine(EngineConfig::default(), 6);
         drop(eng); // must not hang
+    }
+
+    #[test]
+    fn injected_admission_rejections_surface_as_overloaded() {
+        let (eng, _) = engine(
+            EngineConfig {
+                faults: Some(FaultConfig {
+                    seed: 5,
+                    admit_reject_prob: 1.0,
+                    ..FaultConfig::default()
+                }),
+                ..EngineConfig::default()
+            },
+            17,
+        );
+        let got = eng.submit(ServeRequest::recall(BinaryHV::zeros(1024)));
+        assert_eq!(got, Err(ServeError::Overloaded));
+        assert_eq!(eng.stats().rejected, 1);
+        // turn the fault off: service resumes untouched
+        eng.faults().unwrap().set_probs(0.0, 0.0, 0.0);
+        assert!(eng
+            .submit(ServeRequest::recall(BinaryHV::zeros(1024)))
+            .is_ok());
+        eng.shutdown();
+    }
+
+    #[test]
+    fn injected_worker_panic_is_contained_and_engine_keeps_serving() {
+        let (eng, cm) = engine(
+            EngineConfig {
+                workers: 1, // one worker: the panic and the respawn are the same thread's loop
+                faults: Some(FaultConfig {
+                    seed: 9,
+                    panic_prob: 1.0,
+                    ..FaultConfig::default()
+                }),
+                ..EngineConfig::default()
+            },
+            19,
+        );
+        let mut rng = Rng::new(20);
+        let q = BinaryHV::random(&mut rng, 1024);
+        // every batch panics: the request is answered with Internal, not lost
+        let got = eng.submit(ServeRequest::recall(q.clone()));
+        assert_eq!(got, Err(ServeError::Internal));
+        // flip the fault off: the SAME engine (worker respawned in place)
+        // serves correct answers again
+        eng.faults().unwrap().set_probs(0.0, 0.0, 0.0);
+        let got = eng.submit(ServeRequest::recall(q.clone())).unwrap();
+        let (index, cosine) = cm.recall(&q);
+        assert_eq!(got, ServeResponse::Recall { index, cosine });
+        let snap = eng.stats();
+        assert_eq!(snap.internal, 1);
+        assert_eq!(snap.stores[0].internal, 1);
+        assert_eq!(snap.completed, 1);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn tenant_quota_rejections_are_attributed_to_the_flooding_store() {
+        let mut rng = Rng::new(23);
+        let cb = BinaryCodebook::random(&mut rng, 16, 512);
+        let mut registry = StoreRegistry::new();
+        let a = registry.register("calm", &cb, None, StoreSpec {
+            shards: 1,
+            cache_capacity: 0,
+            ..StoreSpec::default()
+        });
+        let b = registry.register("flooder", &cb, None, StoreSpec {
+            shards: 1,
+            cache_capacity: 0,
+            quota: Some(1),
+            ..StoreSpec::default()
+        });
+        // one worker, pinned inside an injected 200ms kernel delay while
+        // we flood, so the burst below races nothing: the lane really is
+        // full when each rejected submit arrives
+        let eng = ServeEngine::start_registry(
+            registry,
+            EngineConfig {
+                workers: 1,
+                max_delay: Duration::from_micros(100),
+                cache_capacity: 0,
+                faults: Some(FaultConfig {
+                    seed: 1,
+                    kernel_delay_prob: 1.0,
+                    kernel_delay: Duration::from_millis(200),
+                    ..FaultConfig::default()
+                }),
+                ..EngineConfig::default()
+            },
+        )
+        .expect("spawn serve workers");
+        // occupy the worker: it pops this ticket, closes its tiny batch
+        // window, and sleeps in the injected delay
+        let busy = eng
+            .submit_async(
+                ServeRequest::recall_on(a, BinaryHV::zeros(512)),
+                Priority::Normal,
+                Duration::from_secs(5),
+            )
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        // flood store b: quota 1 admits exactly one, sheds the rest
+        // tenant-locally
+        let mut tenant_rejects = 0;
+        let mut pending = Vec::new();
+        for _ in 0..8 {
+            match eng.submit_async(
+                ServeRequest::recall_on(b, BinaryHV::zeros(512)),
+                Priority::Normal,
+                Duration::from_secs(5),
+            ) {
+                Ok(p) => pending.push(p),
+                Err(ServeError::TenantOverloaded) => tenant_rejects += 1,
+                Err(e) => panic!("unexpected error {e:?}"),
+            }
+        }
+        assert_eq!(tenant_rejects, 7, "quota-1 lane admits 1 of a burst of 8");
+        // the calm store admits fine while the flooder's lane is full
+        let calm_pending = eng
+            .submit_async(
+                ServeRequest::recall_on(a, BinaryHV::zeros(512)),
+                Priority::Normal,
+                Duration::from_secs(5),
+            )
+            .expect("calm store unaffected by flooder's quota");
+        eng.faults().unwrap().set_probs(0.0, 0.0, 0.0);
+        assert!(matches!(
+            calm_pending.wait(),
+            Ok(ServeResponse::Recall { .. })
+        ));
+        let _ = busy.wait();
+        for p in pending {
+            assert!(p.wait().is_ok());
+        }
+        let snap = eng.stats();
+        assert_eq!(snap.rejected_tenant, 7);
+        assert_eq!(snap.stores[b.index()].rejected_tenant, 7);
+        assert_eq!(snap.stores[a.index()].rejected_tenant, 0);
+        assert_eq!(snap.rejected, 0, "no global-capacity rejections here");
+        eng.shutdown();
     }
 }

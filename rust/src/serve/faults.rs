@@ -1,0 +1,212 @@
+//! Deterministic fault-injection harness for the serve engine.
+//!
+//! Robustness claims are only as good as the failures you can reproduce.
+//! This module injects three failure classes the chaos scenarios in
+//! [`super::loadgen`] and the containment tests lean on:
+//!
+//! - **artificial kernel latency** — a sleep before a batch's kernel
+//!   dispatch, simulating a slow store / cold memory;
+//! - **forced admission rejections** — a request refused at submit time
+//!   as if the queue were full, simulating admission-control flakes;
+//! - **worker-thread panics** — a panic raised inside batch execution,
+//!   exercising the engine's containment path (the poisoned batch is
+//!   answered with [`super::ServeError::Internal`] and the worker
+//!   respawns).
+//!
+//! Decisions are driven by a seeded [`crate::util::Rng`] behind a mutex,
+//! so a run is reproducible from its seed (exactly, with one worker;
+//! aggregate-deterministically with several — the *number* of injections
+//! over N decisions concentrates tightly, only their interleaving moves).
+//! The probability knobs are runtime-adjustable, so a test can force a
+//! panic on the next batch (`p = 1.0`), then lower it to zero and verify
+//! the engine still serves.
+
+use crate::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Fault-injection knobs. `FaultConfig::default()` injects nothing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Seed for the decision stream.
+    pub seed: u64,
+    /// Probability a `submit` is refused at admission (as
+    /// [`super::ServeError::Overloaded`]) before touching the queue.
+    pub admit_reject_prob: f64,
+    /// Probability an executed batch panics its worker.
+    pub panic_prob: f64,
+    /// Probability a batch's kernel dispatch is delayed by
+    /// `kernel_delay`.
+    pub kernel_delay_prob: f64,
+    /// Injected latency per delayed dispatch.
+    pub kernel_delay: Duration,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            admit_reject_prob: 0.0,
+            panic_prob: 0.0,
+            kernel_delay_prob: 0.0,
+            kernel_delay: Duration::ZERO,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct FaultState {
+    rng: Rng,
+    cfg: FaultConfig,
+}
+
+/// Shared decision engine the serve engine consults at its injection
+/// points. All methods take `&self`; counters are atomics so the stats
+/// path never blocks on the decision lock.
+#[derive(Debug)]
+pub struct FaultPlan {
+    state: Mutex<FaultState>,
+    injected_rejects: AtomicU64,
+    injected_panics: AtomicU64,
+    injected_delays: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> FaultPlan {
+        FaultPlan {
+            state: Mutex::new(FaultState {
+                rng: Rng::new(cfg.seed),
+                cfg,
+            }),
+            injected_rejects: AtomicU64::new(0),
+            injected_panics: AtomicU64::new(0),
+            injected_delays: AtomicU64::new(0),
+        }
+    }
+
+    fn roll(&self, pick: impl Fn(&FaultConfig) -> f64) -> bool {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let p = pick(&st.cfg);
+        // p == 0 must not consume randomness: disabled fault classes
+        // leave the decision stream of the enabled ones untouched.
+        p > 0.0 && st.rng.chance(p)
+    }
+
+    /// Should this submission be refused at admission?
+    pub fn should_reject_admission(&self) -> bool {
+        let hit = self.roll(|c| c.admit_reject_prob);
+        if hit {
+            self.injected_rejects.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Should the worker panic on this batch?
+    pub fn should_panic(&self) -> bool {
+        let hit = self.roll(|c| c.panic_prob);
+        if hit {
+            self.injected_panics.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Delay to impose before this batch's kernel dispatch, if any.
+    pub fn kernel_delay(&self) -> Option<Duration> {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let (p, d) = (st.cfg.kernel_delay_prob, st.cfg.kernel_delay);
+        if p > 0.0 && !d.is_zero() && st.rng.chance(p) {
+            drop(st);
+            self.injected_delays.fetch_add(1, Ordering::Relaxed);
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    /// Retune the probabilities of a live plan (tests flip a fault on,
+    /// observe it, then flip it off). The seed is not re-applied; the
+    /// decision stream continues.
+    pub fn set_probs(&self, admit_reject: f64, panic_p: f64, kernel_delay_p: f64) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.cfg.admit_reject_prob = admit_reject;
+        st.cfg.panic_prob = panic_p;
+        st.cfg.kernel_delay_prob = kernel_delay_p;
+    }
+
+    /// (forced admission rejections, worker panics, delayed dispatches)
+    /// injected so far.
+    pub fn injected(&self) -> (u64, u64, u64) {
+        (
+            self.injected_rejects.load(Ordering::Relaxed),
+            self.injected_panics.load(Ordering::Relaxed),
+            self.injected_delays.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_injects_nothing() {
+        let plan = FaultPlan::new(FaultConfig::default());
+        for _ in 0..100 {
+            assert!(!plan.should_reject_admission());
+            assert!(!plan.should_panic());
+            assert!(plan.kernel_delay().is_none());
+        }
+        assert_eq!(plan.injected(), (0, 0, 0));
+    }
+
+    #[test]
+    fn decisions_are_reproducible_from_seed() {
+        let cfg = FaultConfig {
+            seed: 42,
+            admit_reject_prob: 0.3,
+            panic_prob: 0.2,
+            kernel_delay_prob: 0.1,
+            kernel_delay: Duration::from_micros(50),
+            ..FaultConfig::default()
+        };
+        let a = FaultPlan::new(cfg);
+        let b = FaultPlan::new(cfg);
+        for _ in 0..200 {
+            assert_eq!(a.should_reject_admission(), b.should_reject_admission());
+            assert_eq!(a.should_panic(), b.should_panic());
+            assert_eq!(a.kernel_delay(), b.kernel_delay());
+        }
+        assert_eq!(a.injected(), b.injected());
+    }
+
+    #[test]
+    fn probability_one_always_fires_and_counts() {
+        let plan = FaultPlan::new(FaultConfig {
+            seed: 7,
+            panic_prob: 1.0,
+            ..FaultConfig::default()
+        });
+        for _ in 0..10 {
+            assert!(plan.should_panic());
+        }
+        assert_eq!(plan.injected(), (0, 10, 0));
+        // retune to zero: the fault stops firing
+        plan.set_probs(0.0, 0.0, 0.0);
+        assert!(!plan.should_panic());
+        assert_eq!(plan.injected(), (0, 10, 0));
+    }
+
+    #[test]
+    fn injection_rate_tracks_probability() {
+        let plan = FaultPlan::new(FaultConfig {
+            seed: 11,
+            admit_reject_prob: 0.25,
+            ..FaultConfig::default()
+        });
+        let n = 10_000;
+        let hits = (0..n).filter(|_| plan.should_reject_admission()).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
+    }
+}

@@ -22,8 +22,16 @@
 //! `run_bench` compares both against the unbatched single-thread baseline
 //! and emits `BENCH_serve.json` (path override: `NSCOG_SERVE_JSON`) with
 //! one per-store block per registered store.
+//!
+//! Chaos scenarios (`--chaos flood|deadline|panic`) run on a **separate**
+//! engine instance after the clean passes, so the bit-exactness numbers
+//! above are never polluted by injected failures. Each scenario checks a
+//! fairness invariant (a misbehaving tenant's damage stays tenant-local)
+//! and a liveness invariant (the engine still answers correctly once the
+//! chaos stops), reported in the JSON's `"chaos"` block.
 
 use super::engine::{EngineConfig, PendingResponse, ServeEngine};
+use super::faults::FaultConfig;
 use super::queue::Priority;
 use super::registry::{StoreId, StoreRegistry, StoreSpec};
 use super::stats::{LatencySummary, StatsSnapshot};
@@ -72,6 +80,10 @@ pub struct StoreProfile {
     pub repeat_frac: f64,
     /// Per-store sketch sidecar width override (`None` = engine default).
     pub sketch_bits: Option<usize>,
+    /// Per-store admission quota (max queued tickets for this store's
+    /// lane); `None` bounds the lane only by global queue capacity.
+    /// `--store-quotas`.
+    pub quota: Option<usize>,
 }
 
 /// Fixture sizing (per-store problem shapes + shared request schedule).
@@ -203,6 +215,11 @@ impl Fixture {
                 sketch_bits: sf.profile.sketch_bits.or(engine.sketch_bits),
                 cache_capacity: engine.cache_capacity,
                 cache_shards: engine.cache_shards,
+                // popularity doubles as the DRR service share: hotter
+                // tenants earn proportionally more pops under backlog
+                weight: sf.profile.weight.max(1),
+                quota: sf.profile.quota,
+                ..StoreSpec::default()
             };
             reg.register(
                 &sf.profile.name,
@@ -267,7 +284,15 @@ pub struct LoadReport {
     pub outcomes: Vec<Result<ServeResponse, ServeError>>,
     pub ok: usize,
     pub rejected: usize,
+    /// Tenant-local quota rejections ([`ServeError::TenantOverloaded`]).
+    pub rejected_tenant: usize,
     pub expired: usize,
+    /// Contained worker panics ([`ServeError::Internal`]).
+    pub internal: usize,
+    /// Ok responses served degraded (`ServeResponse::Degraded`) — each
+    /// verified as a truth-prefix of its oracle answer, not an exact
+    /// match.
+    pub degraded: usize,
     /// Ok responses that differ from the sequential oracle (must be 0).
     pub mismatches: usize,
 }
@@ -281,9 +306,27 @@ impl LoadReport {
         tagged.sort_by_key(|&(i, _, _)| i);
         let mut latencies_s = Vec::with_capacity(tagged.len());
         let mut outcomes = Vec::with_capacity(tagged.len());
-        let (mut ok, mut rejected, mut expired, mut mismatches) = (0, 0, 0, 0);
+        let (mut ok, mut rejected, mut rejected_tenant, mut expired) = (0, 0, 0, 0);
+        let (mut internal, mut degraded, mut mismatches) = (0, 0, 0);
         for (i, outcome, lat) in tagged {
             match &outcome {
+                // a degraded answer is honest about its truncation: it
+                // must be a prefix of the full-k oracle answer (top-k is
+                // prefix-stable in k), anything else is a mismatch
+                Ok(ServeResponse::Degraded { inner }) => {
+                    ok += 1;
+                    degraded += 1;
+                    let prefix_exact = match (&**inner, &oracle[i]) {
+                        (
+                            ServeResponse::RecallTopK { hits },
+                            ServeResponse::RecallTopK { hits: full },
+                        ) => hits.len() <= full.len() && full[..hits.len()] == hits[..],
+                        _ => false,
+                    };
+                    if !prefix_exact {
+                        mismatches += 1;
+                    }
+                }
                 Ok(resp) => {
                     ok += 1;
                     if resp != &oracle[i] {
@@ -291,7 +334,9 @@ impl LoadReport {
                     }
                 }
                 Err(ServeError::Overloaded) | Err(ServeError::ShuttingDown) => rejected += 1,
+                Err(ServeError::TenantOverloaded) => rejected_tenant += 1,
                 Err(ServeError::DeadlineExceeded) => expired += 1,
+                Err(ServeError::Internal) => internal += 1,
                 // the fixture never generates these, so any of them means
                 // the engine under test is misconfigured — flag it
                 Err(ServeError::Unsupported)
@@ -307,7 +352,10 @@ impl LoadReport {
             outcomes,
             ok,
             rejected,
+            rejected_tenant,
             expired,
+            internal,
+            degraded,
             mismatches,
         }
     }
@@ -469,6 +517,8 @@ pub struct BenchOpts {
     pub clients: usize,
     /// Open-loop offered rate; `None` skips the open-loop pass.
     pub open_loop_qps: Option<f64>,
+    /// Chaos scenario to run after the clean passes, on its own engine.
+    pub chaos: Option<ChaosScenario>,
     pub json_path: Option<String>,
 }
 
@@ -490,6 +540,7 @@ impl BenchOpts {
                     weight: 1,
                     repeat_frac: 0.25,
                     sketch_bits: None,
+                    quota: None,
                 }],
                 noise_frac: 0.2,
                 requests: 400,
@@ -512,6 +563,7 @@ impl BenchOpts {
             },
             clients: 8,
             open_loop_qps: None,
+            chaos: None,
             json_path: None,
         }
     }
@@ -533,6 +585,7 @@ impl BenchOpts {
                     weight: 1,
                     repeat_frac: 0.25,
                     sketch_bits: None,
+                    quota: None,
                 }],
                 noise_frac: 0.2,
                 requests: 2000,
@@ -546,6 +599,7 @@ impl BenchOpts {
             engine: EngineConfig::default(),
             clients: 16,
             open_loop_qps: None,
+            chaos: None,
             json_path: None,
         }
     }
@@ -571,6 +625,379 @@ impl BenchOpts {
     }
 }
 
+/// Chaos scenario selector (`--chaos`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosScenario {
+    /// One tenant offers several times its admission quota while the
+    /// others run closed-loop: the flooder must shed tenant-locally, the
+    /// victims must keep completing bit-exactly.
+    Flood,
+    /// Every other request arrives already past its deadline amid live
+    /// traffic: the dead ones must expire, the live ones must complete.
+    DeadlineStorm,
+    /// Workers panic on a fifth of their batches: every poisoned request
+    /// is answered `Internal`, nothing hangs, and the engine serves
+    /// bit-exactly once the fault is switched off.
+    PanicStorm,
+}
+
+impl ChaosScenario {
+    pub fn parse(s: &str) -> Option<ChaosScenario> {
+        match s {
+            "flood" => Some(ChaosScenario::Flood),
+            "deadline" => Some(ChaosScenario::DeadlineStorm),
+            "panic" => Some(ChaosScenario::PanicStorm),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChaosScenario::Flood => "flood",
+            ChaosScenario::DeadlineStorm => "deadline",
+            ChaosScenario::PanicStorm => "panic",
+        }
+    }
+}
+
+/// One store's ledger across a chaos scenario.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosStoreOutcome {
+    pub name: String,
+    /// Whether this store was the scenario's misbehaving tenant.
+    pub flooder: bool,
+    pub offered: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub rejected_tenant: usize,
+    pub expired: usize,
+    pub internal: usize,
+    pub degraded: usize,
+    pub mismatches: usize,
+}
+
+/// Chaos verdict: per-store ledgers plus the two invariants every
+/// scenario must uphold.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub scenario: ChaosScenario,
+    pub stores: Vec<ChaosStoreOutcome>,
+    /// The misbehavior stayed tenant-local / casualty-exact: well-behaved
+    /// traffic completed (≥90%, bit-exactly) and only the intended
+    /// victims of the scenario paid for it.
+    pub fairness_pass: bool,
+    /// With the chaos switched off, every store answered a fresh request
+    /// bit-exactly on the same (never restarted) engine.
+    pub liveness_pass: bool,
+}
+
+/// Classify one outcome into a store's chaos ledger. `oracle == None`
+/// skips the bit-exactness check (used for requests whose *expected*
+/// outcome is an error, e.g. the deadline storm's dead-on-arrival
+/// tickets).
+fn chaos_tally(
+    out: &mut ChaosStoreOutcome,
+    outcome: &Result<ServeResponse, ServeError>,
+    oracle: Option<&ServeResponse>,
+) {
+    match outcome {
+        Ok(ServeResponse::Degraded { inner }) => {
+            out.completed += 1;
+            out.degraded += 1;
+            let prefix_exact = matches!(
+                (&**inner, oracle),
+                (
+                    ServeResponse::RecallTopK { hits },
+                    Some(ServeResponse::RecallTopK { hits: full }),
+                ) if hits.len() <= full.len() && full[..hits.len()] == hits[..]
+            );
+            if !prefix_exact {
+                out.mismatches += 1;
+            }
+        }
+        Ok(resp) => {
+            out.completed += 1;
+            if let Some(o) = oracle {
+                if resp != o {
+                    out.mismatches += 1;
+                }
+            }
+        }
+        Err(ServeError::Overloaded) | Err(ServeError::ShuttingDown) => out.rejected += 1,
+        Err(ServeError::TenantOverloaded) => out.rejected_tenant += 1,
+        Err(ServeError::DeadlineExceeded) => out.expired += 1,
+        Err(ServeError::Internal) => out.internal += 1,
+        Err(ServeError::Unsupported)
+        | Err(ServeError::InvalidDimension)
+        | Err(ServeError::UnknownStore) => out.mismatches += 1,
+    }
+}
+
+/// After the chaos stops: one fresh request per store with traffic, each
+/// of which must be answered bit-exactly by the same engine.
+fn liveness_probe(engine: &ServeEngine, fixture: &Fixture) -> bool {
+    let mut probe: Vec<Option<&ServeRequest>> = vec![None; fixture.stores.len()];
+    for r in &fixture.requests {
+        let si = r.store.index();
+        if probe[si].is_none() {
+            probe[si] = Some(r);
+        }
+    }
+    probe.iter().flatten().all(|req| {
+        matches!(
+            engine.submit((*req).clone()),
+            Ok(resp) if resp == fixture.oracle_answer(req)
+        )
+    })
+}
+
+fn chaos_outcomes(fixture: &Fixture) -> Vec<ChaosStoreOutcome> {
+    fixture
+        .stores
+        .iter()
+        .map(|sf| ChaosStoreOutcome {
+            name: sf.profile.name.clone(),
+            ..ChaosStoreOutcome::default()
+        })
+        .collect()
+}
+
+/// Run one chaos scenario on a fresh engine built from `fixture`.
+pub fn run_chaos(fixture: &Fixture, opts: &BenchOpts, scenario: ChaosScenario) -> ChaosReport {
+    match scenario {
+        ChaosScenario::Flood => chaos_flood(fixture, opts),
+        ChaosScenario::DeadlineStorm => chaos_deadline(fixture, opts),
+        ChaosScenario::PanicStorm => chaos_panic(fixture, opts),
+    }
+}
+
+/// Single-tenant flood: store 0 (the hottest tenant) offers 4× its
+/// schedule fire-and-forget while every other store runs closed-loop.
+/// Workers are slowed by an injected per-batch kernel delay so the
+/// flooder's backlog is real regardless of host speed; per-store quotas
+/// (profile quotas, or capacity/(2·stores) by default) sum to at most
+/// half the queue, so a victim's admit can never trip the global
+/// capacity check — any victim rejection is a fairness bug, not luck.
+fn chaos_flood(fixture: &Fixture, opts: &BenchOpts) -> ChaosReport {
+    let n = fixture.stores.len();
+    let mut ecfg = opts.engine.clone();
+    let capacity = ecfg.queue_capacity.clamp(8, 256);
+    ecfg.queue_capacity = capacity;
+    ecfg.faults = Some(FaultConfig {
+        seed: fixture.cfg.seed,
+        kernel_delay_prob: 1.0,
+        kernel_delay: Duration::from_millis(2),
+        ..FaultConfig::default()
+    });
+    let mut reg = StoreRegistry::new();
+    for sf in &fixture.stores {
+        let spec = StoreSpec {
+            shards: ecfg.shards,
+            sketch_bits: sf.profile.sketch_bits.or(ecfg.sketch_bits),
+            // no response cache: a cached flood would drain instantly and
+            // prove nothing about admission control
+            cache_capacity: 0,
+            weight: sf.profile.weight.max(1),
+            quota: Some(
+                sf.profile
+                    .quota
+                    .unwrap_or_else(|| (capacity / (2 * n)).max(1)),
+            ),
+            ..StoreSpec::default()
+        };
+        reg.register(
+            &sf.profile.name,
+            &sf.codebook,
+            Some(sf.resonator.clone()),
+            spec,
+        );
+    }
+    let engine = ServeEngine::start_registry(reg, ecfg).expect("spawn chaos engine workers");
+    let mut per_store: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, r) in fixture.requests.iter().enumerate() {
+        per_store[r.store.index()].push(i);
+    }
+    const FLOODER: usize = 0;
+    const FLOOD_ROUNDS: usize = 4;
+    let deadline = engine.config().default_deadline;
+    let eng = &engine;
+    let per_store = &per_store;
+    let mut stores: Vec<ChaosStoreOutcome> = std::thread::scope(|s| {
+        let flood = s.spawn(move || {
+            let mut out = ChaosStoreOutcome {
+                flooder: true,
+                ..ChaosStoreOutcome::default()
+            };
+            let mut pending = Vec::new();
+            for _ in 0..FLOOD_ROUNDS {
+                for &i in &per_store[FLOODER] {
+                    out.offered += 1;
+                    match eng.submit_async(
+                        fixture.requests[i].clone(),
+                        Priority::Normal,
+                        deadline,
+                    ) {
+                        Ok(p) => pending.push((i, p)),
+                        Err(e) => chaos_tally(&mut out, &Err(e), None),
+                    }
+                }
+            }
+            // admitted flood tickets still get real answers eventually
+            for (i, p) in pending {
+                chaos_tally(
+                    &mut out,
+                    &p.wait(),
+                    Some(&fixture.oracle_answer(&fixture.requests[i])),
+                );
+            }
+            out
+        });
+        let victims: Vec<_> = (FLOODER + 1..n)
+            .map(|si| {
+                s.spawn(move || {
+                    let mut out = ChaosStoreOutcome::default();
+                    for &i in &per_store[si] {
+                        out.offered += 1;
+                        let req = &fixture.requests[i];
+                        chaos_tally(
+                            &mut out,
+                            &eng.submit(req.clone()),
+                            Some(&fixture.oracle_answer(req)),
+                        );
+                    }
+                    out
+                })
+            })
+            .collect();
+        let mut all = vec![flood.join().expect("flooder thread panicked")];
+        for v in victims {
+            all.push(v.join().expect("victim thread panicked"));
+        }
+        all
+    });
+    for (si, out) in stores.iter_mut().enumerate() {
+        out.name = fixture.stores[si].profile.name.clone();
+    }
+    let fairness_pass = stores.iter().enumerate().all(|(si, o)| {
+        si == FLOODER
+            || (o.rejected == 0
+                && o.rejected_tenant == 0
+                && o.mismatches == 0
+                && o.completed * 10 >= o.offered * 9)
+    }) && (n == 1 || stores[FLOODER].rejected_tenant > 0);
+    if let Some(f) = eng.faults() {
+        f.set_probs(0.0, 0.0, 0.0);
+    }
+    let liveness_pass = liveness_probe(eng, fixture);
+    engine.shutdown();
+    ChaosReport {
+        scenario: ChaosScenario::Flood,
+        stores,
+        fairness_pass,
+        liveness_pass,
+    }
+}
+
+/// Deadline storm: every even-indexed request is submitted already past
+/// its deadline (zero relative deadline) while the odd-indexed half runs
+/// live. Dead-on-arrival tickets must all expire — at pop time or at
+/// execute time, either way without consuming kernel work for answers —
+/// and every live request must still complete bit-exactly.
+fn chaos_deadline(fixture: &Fixture, opts: &BenchOpts) -> ChaosReport {
+    let ecfg = opts.engine.clone();
+    let engine =
+        ServeEngine::start_registry(fixture.registry(&ecfg), ecfg).expect("spawn chaos engine workers");
+    let n = fixture.stores.len();
+    let mut stores = chaos_outcomes(fixture);
+    let (mut storm_by, mut live_by) = (vec![0usize; n], vec![0usize; n]);
+    let mut pending_storm = Vec::new();
+    for (i, req) in fixture.requests.iter().enumerate() {
+        let si = req.store.index();
+        stores[si].offered += 1;
+        if i % 2 == 0 {
+            storm_by[si] += 1;
+            match engine.submit_async(req.clone(), Priority::Normal, Duration::ZERO) {
+                Ok(p) => pending_storm.push((si, p)),
+                Err(e) => chaos_tally(&mut stores[si], &Err(e), None),
+            }
+        } else {
+            live_by[si] += 1;
+            chaos_tally(
+                &mut stores[si],
+                &engine.submit(req.clone()),
+                Some(&fixture.oracle_answer(req)),
+            );
+        }
+    }
+    for (si, p) in pending_storm {
+        chaos_tally(&mut stores[si], &p.wait(), None);
+    }
+    // casualty-exact: per store, exactly the storm expired and exactly
+    // the live half completed, bit-exactly
+    let fairness_pass = stores.iter().enumerate().all(|(si, o)| {
+        o.expired == storm_by[si]
+            && o.completed == live_by[si]
+            && o.mismatches == 0
+            && o.rejected == 0
+            && o.rejected_tenant == 0
+    });
+    let liveness_pass = liveness_probe(&engine, fixture);
+    engine.shutdown();
+    ChaosReport {
+        scenario: ChaosScenario::DeadlineStorm,
+        stores,
+        fairness_pass,
+        liveness_pass,
+    }
+}
+
+/// Panic storm: a seeded fault plan panics workers on ~20% of batches
+/// while the whole schedule runs closed-loop. Every request must be
+/// answered — bit-exactly or with `Internal`, never hung or wrong — and
+/// once the fault is switched off the same engine must serve bit-exactly
+/// again. The default panic hook is silenced for the storm (hundreds of
+/// injected backtraces would bury the report) and restored after.
+fn chaos_panic(fixture: &Fixture, opts: &BenchOpts) -> ChaosReport {
+    let mut ecfg = opts.engine.clone();
+    ecfg.faults = Some(FaultConfig {
+        seed: fixture.cfg.seed ^ 0x9e37_79b9,
+        panic_prob: 0.2,
+        ..FaultConfig::default()
+    });
+    let engine =
+        ServeEngine::start_registry(fixture.registry(&ecfg), ecfg).expect("spawn chaos engine workers");
+    let oracle = fixture.oracle();
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let report = run_closed_loop(&engine, fixture, opts.clients, &oracle);
+    engine.faults().expect("chaos engine has a fault plan").set_probs(0.0, 0.0, 0.0);
+    let liveness_pass = liveness_probe(&engine, fixture);
+    std::panic::set_hook(hook);
+    let mut stores = chaos_outcomes(fixture);
+    for ((req, outcome), o) in fixture
+        .requests
+        .iter()
+        .zip(&report.outcomes)
+        .zip(&oracle)
+    {
+        let si = req.store.index();
+        stores[si].offered += 1;
+        chaos_tally(&mut stores[si], outcome, Some(o));
+    }
+    // every request answered, none wrongly: completions + contained
+    // panics account for the whole offered load
+    let fairness_pass = stores
+        .iter()
+        .all(|o| o.mismatches == 0 && o.completed + o.internal == o.offered);
+    engine.shutdown();
+    ChaosReport {
+        scenario: ChaosScenario::PanicStorm,
+        stores,
+        fairness_pass,
+        liveness_pass,
+    }
+}
+
 /// One generator pass, summarized for the report.
 #[derive(Debug, Clone)]
 pub struct PassSummary {
@@ -578,7 +1005,10 @@ pub struct PassSummary {
     pub latency: Option<LatencySummary>,
     pub ok: usize,
     pub rejected: usize,
+    pub rejected_tenant: usize,
     pub expired: usize,
+    pub internal: usize,
+    pub degraded: usize,
     pub mismatches: usize,
 }
 
@@ -589,7 +1019,10 @@ impl PassSummary {
             latency: r.latency(),
             ok: r.ok,
             rejected: r.rejected,
+            rejected_tenant: r.rejected_tenant,
             expired: r.expired,
+            internal: r.internal,
+            degraded: r.degraded,
             mismatches: r.mismatches,
         }
     }
@@ -604,6 +1037,8 @@ pub struct BenchReport {
     pub closed: PassSummary,
     pub open: Option<(f64, PassSummary)>,
     pub stats: StatsSnapshot,
+    /// Chaos scenario verdict, when one ran (`--chaos`).
+    pub chaos: Option<ChaosReport>,
 }
 
 impl BenchReport {
@@ -665,12 +1100,15 @@ impl BenchReport {
         };
         let pass = |p: &PassSummary| {
             format!(
-                "{{\"qps\": {:.3}, \"latency\": {}, \"ok\": {}, \"rejected\": {}, \"expired\": {}, \"mismatches\": {}}}",
+                "{{\"qps\": {:.3}, \"latency\": {}, \"ok\": {}, \"rejected\": {}, \"rejected_tenant\": {}, \"expired\": {}, \"internal\": {}, \"degraded\": {}, \"mismatches\": {}}}",
                 p.qps,
                 lat(&p.latency),
                 p.ok,
                 p.rejected,
+                p.rejected_tenant,
                 p.expired,
+                p.internal,
+                p.degraded,
                 p.mismatches
             )
         };
@@ -772,6 +1210,38 @@ impl BenchReport {
         out.push_str(&format!("  \"shards\": {},\n", shards_json(&self.stats.shards)));
         out.push_str(&format!("  \"prune\": {},\n", prune_json(&self.stats.prune)));
         out.push_str(&format!("  \"cache\": {},\n", cache_json(&self.stats.cache)));
+        // chaos verdict (separate engine; see module docs) — null unless
+        // --chaos ran
+        match &self.chaos {
+            Some(c) => {
+                out.push_str(&format!(
+                    "  \"chaos\": {{\"scenario\": \"{}\", \"fairness_pass\": {}, \"liveness_pass\": {}, \"stores\": [",
+                    c.scenario.name(),
+                    c.fairness_pass,
+                    c.liveness_pass
+                ));
+                for (i, o) in c.stores.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    out.push_str(&format!(
+                        "{{\"name\": \"{}\", \"flooder\": {}, \"offered\": {}, \"completed\": {}, \"rejected\": {}, \"rejected_tenant\": {}, \"expired\": {}, \"internal\": {}, \"degraded\": {}, \"mismatches\": {}}}",
+                        o.name,
+                        o.flooder,
+                        o.offered,
+                        o.completed,
+                        o.rejected,
+                        o.rejected_tenant,
+                        o.expired,
+                        o.internal,
+                        o.degraded,
+                        o.mismatches
+                    ));
+                }
+                out.push_str("]},\n");
+            }
+            None => out.push_str("  \"chaos\": null,\n"),
+        }
         // per-store blocks: each carries the simd tier + store count so
         // multi-store runs stay attributable next to the PR 4
         // simd_speedups gate
@@ -779,7 +1249,7 @@ impl BenchReport {
         for (i, section) in self.stats.stores.iter().enumerate() {
             let profile = f.stores.get(i);
             out.push_str(&format!(
-                "    {{\"id\": {}, \"name\": \"{}\", \"simd\": \"{simd_tier}\", \"store_count\": {}, \"dim\": {}, \"items\": {}, \"weight\": {}, \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"completed\": {}, \"latency\": {}, \"shards\": {}, \"prune\": {}, \"cache\": {}}}{}\n",
+                "    {{\"id\": {}, \"name\": \"{}\", \"simd\": \"{simd_tier}\", \"store_count\": {}, \"dim\": {}, \"items\": {}, \"weight\": {}, \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"quota\": {}, \"completed\": {}, \"rejected_tenant\": {}, \"expired_dropped\": {}, \"degraded\": {}, \"internal\": {}, \"latency\": {}, \"shards\": {}, \"prune\": {}, \"cache\": {}}}{}\n",
                 section.id.index(),
                 section.name,
                 f.stores.len(),
@@ -790,7 +1260,14 @@ impl BenchReport {
                 profile
                     .and_then(|p| p.sketch_bits)
                     .map_or("null".into(), |b| b.to_string()),
+                profile
+                    .and_then(|p| p.quota)
+                    .map_or("null".into(), |q| q.to_string()),
                 section.completed,
+                section.rejected_tenant,
+                section.expired_dropped,
+                section.degraded,
+                section.internal,
                 lat(&section.latency),
                 shards_json(&section.shards),
                 prune_json(&section.prune),
@@ -826,7 +1303,8 @@ pub fn run_bench(opts: BenchOpts) -> BenchReport {
     } else {
         0.0
     };
-    let engine = ServeEngine::start_registry(fixture.registry(&opts.engine), opts.engine.clone());
+    let engine = ServeEngine::start_registry(fixture.registry(&opts.engine), opts.engine.clone())
+        .expect("spawn serve workers");
     let closed = run_closed_loop(&engine, &fixture, opts.clients, &oracle);
     let open = opts.open_loop_qps.map(|rate| {
         (
@@ -836,12 +1314,16 @@ pub fn run_bench(opts: BenchOpts) -> BenchReport {
     });
     let stats = engine.stats();
     engine.shutdown();
+    // chaos runs last, on its own engine, so the clean numbers above are
+    // already banked when the failure injection starts
+    let chaos = opts.chaos.map(|sc| run_chaos(&fixture, &opts, sc));
     BenchReport {
         baseline_qps,
         baseline_latency: LatencySummary::of(&base_lat),
         closed: PassSummary::of(&closed),
         open,
         stats,
+        chaos,
         opts,
     }
 }
@@ -863,6 +1345,7 @@ mod tests {
             weight: 1,
             repeat_frac: 0.0,
             sketch_bits: None,
+            quota: None,
         }
     }
 
@@ -901,7 +1384,7 @@ mod tests {
             max_delay: Duration::from_millis(1),
             ..EngineConfig::default()
         };
-        let engine = ServeEngine::start_registry(fixture.registry(&cfg), cfg);
+        let engine = ServeEngine::start_registry(fixture.registry(&cfg), cfg).expect("spawn serve workers");
         let report = run_closed_loop(&engine, &fixture, 6, &fixture.oracle());
         assert_eq!(report.ok, 60);
         assert_eq!(report.rejected, 0);
@@ -917,7 +1400,7 @@ mod tests {
             ..tiny_fixture()
         });
         let cfg = EngineConfig::default();
-        let engine = ServeEngine::start_registry(fixture.registry(&cfg), cfg);
+        let engine = ServeEngine::start_registry(fixture.registry(&cfg), cfg).expect("spawn serve workers");
         // high rate so the test stays fast; still a schedule, not a loop
         let report = run_open_loop(&engine, &fixture, 4000.0, 4, &fixture.oracle());
         assert_eq!(report.ok + report.rejected + report.expired, 40);
@@ -976,7 +1459,7 @@ mod tests {
             max_delay: Duration::from_millis(1),
             ..EngineConfig::default()
         };
-        let engine = ServeEngine::start_registry(a.registry(&ecfg), ecfg);
+        let engine = ServeEngine::start_registry(a.registry(&ecfg), ecfg).expect("spawn serve workers");
         let report = run_closed_loop(&engine, &a, 6, &a.oracle());
         assert_eq!(report.ok, 120);
         assert_eq!(
@@ -1042,9 +1525,80 @@ mod tests {
             );
             assert!(block.get("prune").is_some());
             assert!(block.get("completed").is_some());
+            for key in ["rejected_tenant", "expired_dropped", "degraded", "internal"] {
+                assert_eq!(
+                    block.get(key).and_then(|n| n.as_f64()),
+                    Some(0.0),
+                    "clean pass must report a zero {key} counter per store"
+                );
+            }
+            assert!(
+                block.get("quota").is_some(),
+                "per-store block must surface the admission quota (null when unset)"
+            );
         }
+        // no chaos requested: the key must still be present, and null
+        let chaos = parsed.get("chaos").expect("chaos key always emitted");
+        assert!(chaos.as_arr().is_none() && chaos.as_f64().is_none() && chaos.as_str().is_none());
         // table renders without panicking
         let _ = report.table().to_string();
+    }
+
+    fn chaos_fixture(stores: usize) -> BenchOpts {
+        let mut opts = BenchOpts::smoke();
+        opts.fixture.requests = 90;
+        opts.with_stores(stores);
+        for p in &mut opts.fixture.stores {
+            p.dim = 512;
+            p.items = 24;
+            p.fact_dim = 256;
+            p.fact_items = 6;
+            p.fact_iters = 20;
+            p.repeat_frac = 0.0;
+        }
+        opts.clients = 4;
+        opts
+    }
+
+    #[test]
+    fn chaos_flood_keeps_victims_whole() {
+        let opts = chaos_fixture(3);
+        let fixture = Fixture::build(opts.fixture.clone());
+        let report = run_chaos(&fixture, &opts, ChaosScenario::Flood);
+        assert_eq!(report.scenario.name(), "flood");
+        assert!(
+            report.fairness_pass,
+            "flooded tenant must not damage its neighbours: {:?}",
+            report.stores
+        );
+        assert!(report.liveness_pass, "engine must answer exactly after the flood");
+        assert!(report.stores[0].flooder);
+        assert!(
+            report.stores[0].rejected_tenant > 0,
+            "the flooder's own lane quota must bite: {:?}",
+            report.stores[0]
+        );
+        for s in &report.stores[1..] {
+            assert!(!s.flooder);
+            assert_eq!(s.rejected_tenant, 0, "victim hit a tenant quota: {s:?}");
+            assert_eq!(s.mismatches, 0);
+        }
+    }
+
+    #[test]
+    fn chaos_deadline_storm_expires_exactly_the_storm_half() {
+        let opts = chaos_fixture(2);
+        let fixture = Fixture::build(opts.fixture.clone());
+        let report = run_chaos(&fixture, &opts, ChaosScenario::DeadlineStorm);
+        assert_eq!(report.scenario.name(), "deadline");
+        assert!(
+            report.fairness_pass,
+            "already-dead requests must expire without hurting live ones: {:?}",
+            report.stores
+        );
+        assert!(report.liveness_pass);
+        let expired: usize = report.stores.iter().map(|s| s.expired).sum();
+        assert!(expired > 0, "the storm half must actually expire");
     }
 
     #[test]
@@ -1089,7 +1643,7 @@ mod tests {
             shards: 3,
             ..EngineConfig::default()
         };
-        let engine = ServeEngine::start_registry(a.registry(&ecfg), ecfg);
+        let engine = ServeEngine::start_registry(a.registry(&ecfg), ecfg).expect("spawn serve workers");
         let report = run_closed_loop(&engine, &a, 6, &a.oracle());
         assert_eq!(report.ok, 80);
         assert_eq!(report.mismatches, 0, "cached responses diverged from oracle");

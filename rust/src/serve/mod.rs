@@ -16,8 +16,14 @@
 //! - [`shard`]: codebooks partitioned into contiguous shards, scanned on
 //!   worker threads via [`crate::util::parallel`], per-shard top-k merged
 //!   under the same (score desc, index asc) order as the unsharded scan.
-//! - [`queue`]: a bounded admission queue with deadlines, reject-on-full
-//!   backpressure, and FIFO-within-priority ordering.
+//! - [`queue`]: a bounded admission queue with deadlines, per-store
+//!   admission quotas, deficit-round-robin (weighted) pop scheduling
+//!   across stores, reject-on-full backpressure, and
+//!   FIFO-within-priority ordering inside each store's lane.
+//! - [`faults`]: a deterministic fault-injection harness (seeded via
+//!   [`crate::util::Rng`]) — artificial kernel latency, forced admission
+//!   rejections, and worker-thread panics — used by the chaos scenarios
+//!   in [`loadgen`] and the containment tests.
 //! - [`batcher`]: a dynamic micro-batcher coalescing concurrent requests
 //!   into batched-kernel calls under a max-batch/max-delay policy — one
 //!   call per `(store, request class)` group, so a batched kernel call
@@ -49,6 +55,7 @@
 pub mod batcher;
 pub mod cache;
 pub mod engine;
+pub mod faults;
 pub mod loadgen;
 pub mod queue;
 pub mod registry;
@@ -57,6 +64,7 @@ pub mod stats;
 
 pub use cache::{CacheConfig, CacheCounters, ResponseCache};
 pub use engine::{EngineConfig, PendingResponse, ServeEngine};
+pub use faults::{FaultConfig, FaultPlan};
 pub use queue::Priority;
 pub use registry::{Store, StoreId, StoreRegistry, StoreSpec};
 pub use shard::{ShardedBinaryCodebook, ShardedCleanup, ShardedRealCodebook};
@@ -169,6 +177,12 @@ pub enum ServeResponse {
         iterations: usize,
         converged: bool,
     },
+    /// Served under a store's degraded mode (queue depth over its
+    /// [`registry::StoreSpec::degrade_depth`] threshold): `inner` is the
+    /// bit-exact answer to the *reduced* request — e.g. a top-k truncated
+    /// to the store's `degrade_k` cap. The wrapper makes the reduction
+    /// visible to the client instead of silently returning fewer hits.
+    Degraded { inner: Box<ServeResponse> },
 }
 
 /// Why a request did not produce a [`ServeResponse`].
@@ -191,6 +205,16 @@ pub enum ServeError {
     /// The request names a [`StoreId`] the engine's registry never issued
     /// — refused at admission, never routed.
     UnknownStore,
+    /// The *target store's* admission quota is exhausted (or the store is
+    /// degraded and shedding its expensive request class). Unlike
+    /// [`ServeError::Overloaded`] this is tenant-local: other stores'
+    /// admission is unaffected, so a flooding tenant sheds its own
+    /// traffic.
+    TenantOverloaded,
+    /// A worker panicked while this request's batch was in flight; the
+    /// panic was contained (the worker respawned) and every ticket of the
+    /// poisoned batch is answered with this error instead of hanging.
+    Internal,
 }
 
 impl fmt::Display for ServeError {
@@ -205,6 +229,12 @@ impl fmt::Display for ServeError {
             }
             ServeError::UnknownStore => {
                 write!(f, "request names a store id the engine has not registered")
+            }
+            ServeError::TenantOverloaded => {
+                write!(f, "target store's admission quota exhausted (tenant backpressure)")
+            }
+            ServeError::Internal => {
+                write!(f, "worker panicked while serving this batch (contained)")
             }
         }
     }

@@ -1,20 +1,39 @@
-//! Bounded admission queue with deadlines, backpressure, and
-//! FIFO-within-priority ordering.
+//! Bounded admission queue with deadlines, per-store quotas,
+//! deficit-round-robin pop scheduling, and FIFO-within-priority ordering
+//! inside each store's lane.
 //!
-//! Admission control is reject-on-full: a full queue refuses new tickets
-//! immediately (the client sees [`ServeError::Overloaded`]) instead of
-//! building an unbounded backlog — under overload, latency is traded for
-//! an explicit error the caller can act on. Deadlines are checked by the
-//! worker at pop time; an expired ticket is answered with
+//! Admission control is reject-on-full at two levels: a full queue
+//! refuses new tickets immediately (the client sees
+//! [`ServeError::Overloaded`]), and a store whose *own* lane has reached
+//! its quota is refused with [`ServeError::TenantOverloaded`] while every
+//! other store keeps admitting — under a one-tenant flood, the flooding
+//! store sheds its own traffic instead of starving the queue for
+//! everyone. Pop ordering is deficit round robin across store lanes:
+//! each scheduler round, lane `i` pops up to `weight_i` tickets before
+//! the rotation advances, so service share under contention follows the
+//! configured weights and idle stores cost nothing. Deadlines are checked
+//! by the worker at pop time; an expired ticket is answered with
 //! [`ServeError::DeadlineExceeded`] without touching the kernels.
+//!
+//! Lock-poisoning policy: every `Mutex`/`Condvar` acquisition recovers a
+//! poisoned guard with `unwrap_or_else(|p| p.into_inner())`. The queue's
+//! invariants (lane deques consistent with the cached total length) are
+//! only mutated in straight-line code that cannot panic mid-update, so a
+//! guard poisoned by a *different* panicking thread is still consistent —
+//! recovering it keeps the engine serving instead of cascading the panic
+//! into every client.
 
+use super::registry::StoreId;
 use super::{ServeError, ServeRequest, ServeResponse};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Two-level priority: `High` tickets always pop before `Normal` ones;
-/// within a level, strictly FIFO.
+/// Two-level priority: within a store's lane, `High` tickets always pop
+/// before `Normal` ones; within a level, strictly FIFO. Across lanes,
+/// ordering is the deficit-round-robin rotation (fairness outranks
+/// priority between tenants — one store's `High` traffic must not starve
+/// another store).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Priority {
     High,
@@ -44,24 +63,33 @@ impl ResponseSlot {
         }
     }
 
-    /// Fill the slot (first fill wins; later fills are ignored).
-    pub fn fill(&self, outcome: Result<ServeResponse, ServeError>) {
-        let mut g = self.inner.done.lock().expect("slot poisoned");
+    /// Fill the slot (first fill wins; later fills are ignored). This
+    /// idempotence is what worker-panic containment leans on: the
+    /// respawning worker blanket-fills a poisoned batch's slots with
+    /// [`ServeError::Internal`], and any slot the batch had already
+    /// answered keeps its real outcome. Returns whether THIS call
+    /// answered the slot (containment counts only tickets it actually
+    /// poisoned).
+    pub fn fill(&self, outcome: Result<ServeResponse, ServeError>) -> bool {
+        let mut g = self.inner.done.lock().unwrap_or_else(|p| p.into_inner());
         if g.is_none() {
             *g = Some((outcome, Instant::now()));
             self.inner.ready.notify_all();
+            true
+        } else {
+            false
         }
     }
 
     /// Block until the slot is filled; returns the outcome and the instant
     /// the worker filled it (for open-loop latency accounting).
     pub fn wait_timed(&self) -> (Result<ServeResponse, ServeError>, Instant) {
-        let mut g = self.inner.done.lock().expect("slot poisoned");
+        let mut g = self.inner.done.lock().unwrap_or_else(|p| p.into_inner());
         loop {
             if let Some(done) = g.take() {
                 return done;
             }
-            g = self.inner.ready.wait(g).expect("slot poisoned");
+            g = self.inner.ready.wait(g).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -74,14 +102,18 @@ impl ResponseSlot {
     /// slot, `None` otherwise (the slot stays waitable). Backs
     /// [`super::engine::PendingResponse::try_wait`].
     pub fn try_take(&self) -> Option<(Result<ServeResponse, ServeError>, Instant)> {
-        self.inner.done.lock().expect("slot poisoned").take()
+        self.inner
+            .done
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .take()
     }
 
     /// Block until the slot is filled or `until` passes; `None` on
     /// timeout (the slot stays waitable). Backs
     /// [`super::engine::PendingResponse::wait_timeout`].
     pub fn wait_until(&self, until: Instant) -> Option<(Result<ServeResponse, ServeError>, Instant)> {
-        let mut g = self.inner.done.lock().expect("slot poisoned");
+        let mut g = self.inner.done.lock().unwrap_or_else(|p| p.into_inner());
         loop {
             if let Some(done) = g.take() {
                 return Some(done);
@@ -94,7 +126,7 @@ impl ResponseSlot {
                 .inner
                 .ready
                 .wait_timeout(g, until - now)
-                .expect("slot poisoned");
+                .unwrap_or_else(|p| p.into_inner());
             g = g2;
         }
     }
@@ -127,7 +159,11 @@ impl Ticket {
 /// Why [`AdmissionQueue::push`] refused a ticket.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AdmitError {
+    /// Global queue capacity exhausted (every tenant is backpressured).
     Full,
+    /// The ticket's own store has reached its admission quota; other
+    /// stores' lanes still admit.
+    TenantFull,
     Closed,
 }
 
@@ -135,18 +171,45 @@ impl AdmitError {
     pub fn to_serve_error(self) -> ServeError {
         match self {
             AdmitError::Full => ServeError::Overloaded,
+            AdmitError::TenantFull => ServeError::TenantOverloaded,
             AdmitError::Closed => ServeError::ShuttingDown,
         }
     }
 }
 
-struct QueueState {
-    high: VecDeque<Ticket>,
-    normal: VecDeque<Ticket>,
-    closed: bool,
+/// Scheduling parameters of one store's lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneSpec {
+    /// Deficit-round-robin weight: pops per scheduler round while the
+    /// lane is backlogged (clamped to ≥ 1).
+    pub weight: u32,
+    /// Admission quota: max tickets of this store waiting at once
+    /// (clamped to ≥ 1; a lane at quota refuses with
+    /// [`AdmitError::TenantFull`]).
+    pub quota: usize,
 }
 
-impl QueueState {
+struct Lane {
+    high: VecDeque<Ticket>,
+    normal: VecDeque<Ticket>,
+    weight: u32,
+    quota: usize,
+    /// Pops remaining in this lane's current DRR turn; replenished to
+    /// `weight` when the rotation arrives at a backlogged lane.
+    deficit: u32,
+}
+
+impl Lane {
+    fn new(spec: LaneSpec) -> Lane {
+        Lane {
+            high: VecDeque::new(),
+            normal: VecDeque::new(),
+            weight: spec.weight.max(1),
+            quota: spec.quota.max(1),
+            deficit: 0,
+        }
+    }
+
     fn len(&self) -> usize {
         self.high.len() + self.normal.len()
     }
@@ -156,7 +219,50 @@ impl QueueState {
     }
 }
 
-/// Bounded MPMC admission queue (mutex + condvar; std-only).
+struct QueueState {
+    lanes: Vec<Lane>,
+    /// Total queued tickets across lanes (kept in lockstep with the lane
+    /// deques; cached so `push` is O(1)).
+    len: usize,
+    /// DRR rotation position.
+    cursor: usize,
+    closed: bool,
+}
+
+impl QueueState {
+    /// Deficit-round-robin pop: serve the cursor lane until its deficit
+    /// runs out or it empties, then advance. With unit ticket cost this
+    /// gives each backlogged lane `weight` consecutive pops per round.
+    fn take(&mut self) -> Option<Ticket> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            let i = self.cursor % self.lanes.len();
+            let lane = &mut self.lanes[i];
+            if lane.len() == 0 {
+                // Idle lanes forfeit their turn (and any stale deficit):
+                // unused share is redistributed, not banked.
+                lane.deficit = 0;
+                self.cursor = i + 1;
+                continue;
+            }
+            if lane.deficit == 0 {
+                lane.deficit = lane.weight;
+            }
+            lane.deficit -= 1;
+            let t = lane.take();
+            if lane.deficit == 0 {
+                self.cursor = i + 1;
+            }
+            self.len -= 1;
+            return t;
+        }
+    }
+}
+
+/// Bounded MPMC admission queue (mutex + condvar; std-only) with one
+/// lane per store.
 pub struct AdmissionQueue {
     capacity: usize,
     state: Mutex<QueueState>,
@@ -164,16 +270,32 @@ pub struct AdmissionQueue {
 }
 
 impl AdmissionQueue {
+    /// Queue with no preconfigured lanes: each store id gets a lane on
+    /// first push with weight 1 and quota = global capacity — exactly the
+    /// pre-isolation behavior (only the global bound applies).
     pub fn new(capacity: usize) -> AdmissionQueue {
+        Self::with_lanes(capacity, &[])
+    }
+
+    /// Queue with one preconfigured lane per store, indexed by
+    /// [`StoreId`] order. Stores beyond `lanes` still get default lanes
+    /// lazily (weight 1, quota = capacity).
+    pub fn with_lanes(capacity: usize, lanes: &[LaneSpec]) -> AdmissionQueue {
+        let capacity = capacity.max(1);
         AdmissionQueue {
-            capacity: capacity.max(1),
+            capacity,
             state: Mutex::new(QueueState {
-                high: VecDeque::new(),
-                normal: VecDeque::new(),
+                lanes: lanes.iter().map(|&s| Lane::new(s)).collect(),
+                len: 0,
+                cursor: 0,
                 closed: false,
             }),
             available: Condvar::new(),
         }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     pub fn capacity(&self) -> usize {
@@ -181,27 +303,52 @@ impl AdmissionQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().expect("queue poisoned").len()
+        self.lock().len
+    }
+
+    /// Waiting tickets in `store`'s lane — the batcher's degraded-mode
+    /// depth probe. Stores without a lane yet report 0.
+    pub fn lane_len(&self, store: StoreId) -> usize {
+        let st = self.lock();
+        st.lanes.get(store.index()).map_or(0, |l| l.len())
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Admit a ticket, or hand it back with the rejection reason
-    /// (reject-on-full backpressure; closed queues admit nothing).
+    /// Admit a ticket, or hand it back with the rejection reason.
+    /// Rejection is two-level: global capacity first
+    /// ([`AdmitError::Full`] — everyone is backpressured), then the
+    /// target store's own quota ([`AdmitError::TenantFull`] — only this
+    /// tenant is shedding). Closed queues admit nothing.
     pub fn push(&self, ticket: Ticket) -> Result<(), (Ticket, AdmitError)> {
-        let mut st = self.state.lock().expect("queue poisoned");
+        let store = ticket.request.store.index();
+        let mut st = self.lock();
         if st.closed {
             return Err((ticket, AdmitError::Closed));
         }
-        if st.len() >= self.capacity {
+        if st.len >= self.capacity {
             return Err((ticket, AdmitError::Full));
         }
-        match ticket.priority {
-            Priority::High => st.high.push_back(ticket),
-            Priority::Normal => st.normal.push_back(ticket),
+        if store >= st.lanes.len() {
+            let cap = self.capacity;
+            st.lanes.resize_with(store + 1, || {
+                Lane::new(LaneSpec {
+                    weight: 1,
+                    quota: cap,
+                })
+            });
         }
+        let lane = &mut st.lanes[store];
+        if lane.len() >= lane.quota {
+            return Err((ticket, AdmitError::TenantFull));
+        }
+        match ticket.priority {
+            Priority::High => lane.high.push_back(ticket),
+            Priority::Normal => lane.normal.push_back(ticket),
+        }
+        st.len += 1;
         drop(st);
         self.available.notify_one();
         Ok(())
@@ -210,16 +357,16 @@ impl AdmissionQueue {
     /// Close the queue: no further admissions; blocked poppers drain what
     /// remains, then observe `None`.
     pub fn close(&self) {
-        let mut st = self.state.lock().expect("queue poisoned");
+        let mut st = self.lock();
         st.closed = true;
         drop(st);
         self.available.notify_all();
     }
 
-    /// Pop the next ticket, blocking while the queue is empty and open.
-    /// Returns `None` once the queue is closed and drained.
+    /// Pop the next ticket (DRR order), blocking while the queue is empty
+    /// and open. Returns `None` once the queue is closed and drained.
     pub fn pop_blocking(&self) -> Option<Ticket> {
-        let mut st = self.state.lock().expect("queue poisoned");
+        let mut st = self.lock();
         loop {
             if let Some(t) = st.take() {
                 return Some(t);
@@ -227,7 +374,7 @@ impl AdmissionQueue {
             if st.closed {
                 return None;
             }
-            st = self.available.wait(st).expect("queue poisoned");
+            st = self.available.wait(st).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -235,7 +382,7 @@ impl AdmissionQueue {
     /// timeout or when closed-and-drained. Used by the micro-batcher to
     /// wait out the remainder of a batch window.
     pub fn pop_until(&self, until: Instant) -> Option<Ticket> {
-        let mut st = self.state.lock().expect("queue poisoned");
+        let mut st = self.lock();
         loop {
             if let Some(t) = st.take() {
                 return Some(t);
@@ -250,7 +397,7 @@ impl AdmissionQueue {
             let (g, _timeout) = self
                 .available
                 .wait_timeout(st, until - now)
-                .expect("queue poisoned");
+                .unwrap_or_else(|p| p.into_inner());
             st = g;
         }
     }
@@ -261,16 +408,20 @@ mod tests {
     use super::*;
     use crate::vsa::BinaryHV;
 
-    fn ticket(tag: usize, priority: Priority) -> Ticket {
+    fn ticket_on(store: usize, tag: usize, priority: Priority) -> Ticket {
         // encode `tag` in the top-k `k` field so pops are identifiable
         let now = Instant::now();
         Ticket {
-            request: ServeRequest::recall_topk(BinaryHV::zeros(64), tag),
+            request: ServeRequest::recall_topk_on(StoreId(store), BinaryHV::zeros(64), tag),
             priority,
             slot: ResponseSlot::new(),
             enqueued: now,
             deadline: now + Duration::from_secs(60),
         }
+    }
+
+    fn ticket(tag: usize, priority: Priority) -> Ticket {
+        ticket_on(0, tag, priority)
     }
 
     fn tag_of(t: &Ticket) -> usize {
@@ -334,6 +485,78 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         q.push(ticket(7, Priority::Normal)).unwrap();
         assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn tenant_quota_rejects_only_its_own_store() {
+        let q = AdmissionQueue::with_lanes(
+            16,
+            &[
+                LaneSpec { weight: 1, quota: 2 },
+                LaneSpec { weight: 1, quota: 8 },
+            ],
+        );
+        q.push(ticket_on(0, 0, Priority::Normal)).unwrap();
+        q.push(ticket_on(0, 1, Priority::Normal)).unwrap();
+        let (_, why) = q.push(ticket_on(0, 2, Priority::Normal)).unwrap_err();
+        assert_eq!(why, AdmitError::TenantFull);
+        assert_eq!(
+            why.to_serve_error(),
+            ServeError::TenantOverloaded,
+            "tenant quota maps to the tenant-local error"
+        );
+        // the other store's lane is unaffected by store 0 being at quota
+        q.push(ticket_on(1, 10, Priority::Normal)).unwrap();
+        assert_eq!(q.lane_len(StoreId(0)), 2);
+        assert_eq!(q.lane_len(StoreId(1)), 1);
+        // draining store 0 reopens its lane
+        let _ = q.pop_blocking().unwrap();
+        let _ = q.pop_blocking().unwrap();
+        let _ = q.pop_blocking().unwrap();
+        q.push(ticket_on(0, 3, Priority::Normal)).unwrap();
+    }
+
+    #[test]
+    fn drr_pop_order_follows_weights() {
+        // store 0 weight 2, store 1 weight 1: backlogged rotation pops
+        // two of store 0 for every one of store 1.
+        let q = AdmissionQueue::with_lanes(
+            32,
+            &[
+                LaneSpec { weight: 2, quota: 32 },
+                LaneSpec { weight: 1, quota: 32 },
+            ],
+        );
+        for i in 0..6 {
+            q.push(ticket_on(0, i, Priority::Normal)).unwrap();
+        }
+        for i in 0..3 {
+            q.push(ticket_on(1, 100 + i, Priority::Normal)).unwrap();
+        }
+        let order: Vec<usize> = (0..9)
+            .map(|_| tag_of(&q.pop_blocking().unwrap()))
+            .collect();
+        assert_eq!(order, [0, 1, 100, 2, 3, 101, 4, 5, 102]);
+    }
+
+    #[test]
+    fn drr_skips_idle_lanes_without_banking_deficit() {
+        let q = AdmissionQueue::with_lanes(
+            32,
+            &[
+                LaneSpec { weight: 4, quota: 32 },
+                LaneSpec { weight: 1, quota: 32 },
+            ],
+        );
+        // only store 1 has traffic: it pops immediately, every time,
+        // regardless of store 0's larger weight.
+        for i in 0..3 {
+            q.push(ticket_on(1, i, Priority::Normal)).unwrap();
+        }
+        let order: Vec<usize> = (0..3)
+            .map(|_| tag_of(&q.pop_blocking().unwrap()))
+            .collect();
+        assert_eq!(order, [0, 1, 2]);
     }
 
     #[test]

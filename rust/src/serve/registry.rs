@@ -56,6 +56,25 @@ pub struct StoreSpec {
     pub cache_capacity: usize,
     /// This store's response-cache lock shards.
     pub cache_shards: usize,
+    /// Deficit-round-robin scheduling weight: per scheduler round, this
+    /// store pops up to `weight` tickets before the rotation advances
+    /// (relative share under contention; idle stores cost nothing).
+    pub weight: u32,
+    /// Per-store admission quota: at most this many of this store's
+    /// tickets may occupy the queue at once; the overflow is refused with
+    /// [`super::ServeError::TenantOverloaded`] while other stores keep
+    /// admitting. `None` = no tenant-local cap (only the global queue
+    /// capacity applies, as before multi-tenant isolation).
+    pub quota: Option<usize>,
+    /// Degraded-mode trigger: when this store's queue lane holds at least
+    /// this many waiting tickets at batch-formation time, the batcher
+    /// serves the store degraded — top-k capped at `degrade_k`, factorize
+    /// shed with [`super::ServeError::TenantOverloaded`] — until the lane
+    /// drains below the threshold. `None` disables degradation.
+    pub degrade_depth: Option<usize>,
+    /// Top-k cap while degraded (responses arrive wrapped in
+    /// [`super::ServeResponse::Degraded`] so the truncation is explicit).
+    pub degrade_k: usize,
 }
 
 impl Default for StoreSpec {
@@ -66,6 +85,10 @@ impl Default for StoreSpec {
             sketch_bits: None,
             cache_capacity: cache.capacity,
             cache_shards: cache.shards,
+            weight: 1,
+            quota: None,
+            degrade_depth: None,
+            degrade_k: 1,
         }
     }
 }
@@ -80,6 +103,7 @@ impl StoreSpec {
             sketch_bits: cfg.sketch_bits,
             cache_capacity: cfg.cache_capacity,
             cache_shards: cfg.cache_shards,
+            ..StoreSpec::default()
         }
     }
 }

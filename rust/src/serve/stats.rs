@@ -5,13 +5,25 @@
 //! per request), so the metrics path stays off the kernel hot loops.
 //! Every latency sample and every kernel-call timing is tagged with the
 //! [`StoreId`] it served, so multi-store engines can attribute load,
-//! pruning, and cache behavior per tenant.
+//! pruning, degradation, and cache behavior per tenant.
+//!
+//! Latency distributions are tracked with O(1)-memory P² streaming
+//! quantile estimators ([`crate::util::stats::P2Quantile`]) — one pair
+//! (p50, p99) per class and per store — plus running mean/max. Nothing
+//! in this module grows with request count: a long-lived engine's stats
+//! footprint is constant, and steady-state recording is allocation-free
+//! (asserted by `tests/alloc_free.rs`).
+//!
+//! Poisoned guards are recovered (`unwrap_or_else(|p| p.into_inner())`):
+//! all updates here are plain counter arithmetic that cannot be left
+//! half-done by a panic elsewhere, and losing metrics must never take
+//! down a serving path that survived its own fault.
 
 use super::cache::CacheCounters;
 use super::registry::StoreId;
 use super::shard::ShardTimings;
 use super::RequestKind;
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, P2Quantile};
 use crate::vsa::PruneStats;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -27,7 +39,9 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
-    /// Summarize a sample of latencies; `None` when empty.
+    /// Summarize a bounded sample exactly; `None` when empty. (The
+    /// engine's own long-run accounting uses the streaming estimators
+    /// below; this stays for bounded samples like a loadgen run.)
     pub fn of(xs: &[f64]) -> Option<LatencySummary> {
         if xs.is_empty() {
             return None;
@@ -41,6 +55,59 @@ impl LatencySummary {
             p99_s: percentile(&s, 0.99),
             max_s: s[s.len() - 1],
         })
+    }
+}
+
+/// O(1)-memory latency distribution: running n/mean/max plus P²
+/// streaming p50/p99. `record` touches only fixed-size state — no
+/// allocation, no growth with request count.
+#[derive(Debug, Clone, Copy)]
+struct StreamingLatency {
+    sum_s: f64,
+    max_s: f64,
+    p50: P2Quantile,
+    p99: P2Quantile,
+}
+
+impl StreamingLatency {
+    fn new() -> StreamingLatency {
+        StreamingLatency {
+            sum_s: 0.0,
+            max_s: 0.0,
+            p50: P2Quantile::new(0.50),
+            p99: P2Quantile::new(0.99),
+        }
+    }
+
+    fn record(&mut self, secs: f64) {
+        self.sum_s += secs;
+        self.max_s = self.max_s.max(secs);
+        self.p50.record(secs);
+        self.p99.record(secs);
+    }
+
+    fn n(&self) -> u64 {
+        self.p50.count()
+    }
+
+    fn summary(&self) -> Option<LatencySummary> {
+        let n = self.p50.count();
+        if n == 0 {
+            return None;
+        }
+        Some(LatencySummary {
+            n: n as usize,
+            mean_s: self.sum_s / n as f64,
+            p50_s: self.p50.value().unwrap_or(0.0),
+            p99_s: self.p99.value().unwrap_or(0.0),
+            max_s: self.max_s,
+        })
+    }
+}
+
+impl Default for StreamingLatency {
+    fn default() -> Self {
+        StreamingLatency::new()
     }
 }
 
@@ -67,22 +134,35 @@ pub struct StoreWork {
 struct StoreInner {
     name: String,
     /// Every completed request's latency (all classes, cache hits
-    /// included) — `len()` is the store's completed count. Like the
-    /// per-class vectors below, this stores the full sample for exact
-    /// percentiles: fine at bench/load-test scale, a second copy per
-    /// request on a truly long-lived engine (the ROADMAP's streaming-
-    /// quantile follow-on replaces both).
-    lat_s: Vec<f64>,
+    /// included) — `n()` is the store's completed count. Constant-size
+    /// streaming state, not a sample vector.
+    lat: StreamingLatency,
     shards: Vec<ShardStat>,
     prune: PruneStats,
+    /// Admissions refused because *this store's* quota was exhausted
+    /// ([`super::ServeError::TenantOverloaded`]).
+    rejected_tenant: u64,
+    /// Tickets answered [`super::ServeError::DeadlineExceeded`] and
+    /// dropped before kernel dispatch.
+    expired_dropped: u64,
+    /// Requests served (or shed) under this store's degraded mode.
+    degraded: u64,
+    /// Tickets answered [`super::ServeError::Internal`] after a
+    /// contained worker panic.
+    internal: u64,
 }
 
 #[derive(Debug, Default)]
 struct StatsInner {
-    recall_lat_s: Vec<f64>,
-    topk_lat_s: Vec<f64>,
-    factorize_lat_s: Vec<f64>,
-    batch_sizes: Vec<usize>,
+    recall: StreamingLatency,
+    topk: StreamingLatency,
+    factorize: StreamingLatency,
+    /// Executed micro-batches and their total occupancy / max size —
+    /// running aggregates (the former per-batch size vector was the
+    /// other unbounded-memory path here).
+    batches: u64,
+    batch_occupancy: u64,
+    max_batch: usize,
     rejected: u64,
     expired: u64,
     unsupported: u64,
@@ -116,29 +196,35 @@ impl ServeStats {
         }
     }
 
+    fn lock(&self) -> std::sync::MutexGuard<'_, StatsInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Record one executed micro-batch: occupancy, per-request latencies
     /// (queue wait + execution — cache hits included) tagged with the
     /// store they served, and each store's kernel-call shard timings and
-    /// merged scan [`PruneStats`].
+    /// merged scan [`PruneStats`]. Allocation-free in steady state.
     pub fn record_batch(
         &self,
         executed: usize,
         latencies: &[(StoreId, RequestKind, Duration)],
         store_work: &[(StoreId, StoreWork)],
     ) {
-        let mut g = self.inner.lock().expect("stats poisoned");
+        let mut g = self.lock();
         if executed > 0 {
-            g.batch_sizes.push(executed);
+            g.batches += 1;
+            g.batch_occupancy += executed as u64;
+            g.max_batch = g.max_batch.max(executed);
         }
         for &(store, kind, lat) in latencies {
             let secs = lat.as_secs_f64();
             match kind {
-                RequestKind::Recall => g.recall_lat_s.push(secs),
-                RequestKind::RecallTopK => g.topk_lat_s.push(secs),
-                RequestKind::Factorize => g.factorize_lat_s.push(secs),
+                RequestKind::Recall => g.recall.record(secs),
+                RequestKind::RecallTopK => g.topk.record(secs),
+                RequestKind::Factorize => g.factorize.record(secs),
             }
             if let Some(st) = g.stores.get_mut(store.index()) {
-                st.lat_s.push(secs);
+                st.lat.record(secs);
             }
         }
         for (store, work) in store_work {
@@ -154,29 +240,63 @@ impl ServeStats {
         }
     }
 
+    /// Global-capacity admission rejection
+    /// ([`super::ServeError::Overloaded`]) — every tenant backpressured.
     pub fn record_rejected(&self) {
-        self.inner.lock().expect("stats poisoned").rejected += 1;
+        self.lock().rejected += 1;
     }
 
-    pub fn record_expired(&self, n: u64) {
-        self.inner.lock().expect("stats poisoned").expired += n;
+    /// Tenant-quota admission rejection
+    /// ([`super::ServeError::TenantOverloaded`]) — charged to the store
+    /// that flooded, invisible to the others.
+    pub fn record_tenant_rejected(&self, store: StoreId) {
+        let mut g = self.lock();
+        if let Some(st) = g.stores.get_mut(store.index()) {
+            st.rejected_tenant += 1;
+        }
+    }
+
+    /// `n` of `store`'s tickets expired and were answered without
+    /// execution (dropped at batch formation, before kernel dispatch).
+    pub fn record_expired(&self, store: StoreId, n: u64) {
+        let mut g = self.lock();
+        g.expired += n;
+        if let Some(st) = g.stores.get_mut(store.index()) {
+            st.expired_dropped += n;
+        }
+    }
+
+    /// `n` of `store`'s requests were served or shed under its degraded
+    /// mode.
+    pub fn record_degraded(&self, store: StoreId, n: u64) {
+        let mut g = self.lock();
+        if let Some(st) = g.stores.get_mut(store.index()) {
+            st.degraded += n;
+        }
+    }
+
+    /// `n` of `store`'s tickets were answered
+    /// [`super::ServeError::Internal`] after a contained worker panic.
+    pub fn record_internal(&self, store: StoreId, n: u64) {
+        let mut g = self.lock();
+        if let Some(st) = g.stores.get_mut(store.index()) {
+            st.internal += n;
+        }
     }
 
     /// Requests refused without execution: unsupported kind, dimension
     /// mismatch, or an unknown store id.
     pub fn record_unsupported(&self, n: u64) {
-        self.inner.lock().expect("stats poisoned").unsupported += n;
+        self.lock().unsupported += n;
     }
 
-    /// Snapshot every metric (cheap; clones the latency vectors).
-    /// Per-store cache counters are layered on by
-    /// [`super::engine::ServeEngine::stats`], which owns the registry.
+    /// Snapshot every metric (cheap; constant-size streaming state, no
+    /// latency vectors to clone). Per-store cache counters are layered
+    /// on by [`super::engine::ServeEngine::stats`], which owns the
+    /// registry.
     pub fn snapshot(&self) -> StatsSnapshot {
-        let g = self.inner.lock().expect("stats poisoned");
-        let completed =
-            (g.recall_lat_s.len() + g.topk_lat_s.len() + g.factorize_lat_s.len()) as u64;
-        let batches = g.batch_sizes.len() as u64;
-        let occupancy: u64 = g.batch_sizes.iter().map(|&b| b as u64).sum();
+        let g = self.lock();
+        let completed = g.recall.n() + g.topk.n() + g.factorize.n();
         let elapsed = self.started.elapsed().as_secs_f64();
         let stores: Vec<StoreSnapshot> = g
             .stores
@@ -185,10 +305,14 @@ impl ServeStats {
             .map(|(i, st)| StoreSnapshot {
                 id: StoreId(i),
                 name: st.name.clone(),
-                completed: st.lat_s.len() as u64,
-                latency: LatencySummary::of(&st.lat_s),
+                completed: st.lat.n(),
+                latency: st.lat.summary(),
                 shards: st.shards.clone(),
                 prune: st.prune,
+                rejected_tenant: st.rejected_tenant,
+                expired_dropped: st.expired_dropped,
+                degraded: st.degraded,
+                internal: st.internal,
                 cache: None,
             })
             .collect();
@@ -203,23 +327,26 @@ impl ServeStats {
         StatsSnapshot {
             completed,
             rejected: g.rejected,
+            rejected_tenant: stores.iter().map(|s| s.rejected_tenant).sum(),
             expired: g.expired,
             unsupported: g.unsupported,
-            batches,
-            mean_batch: if batches > 0 {
-                occupancy as f64 / batches as f64
+            degraded: stores.iter().map(|s| s.degraded).sum(),
+            internal: stores.iter().map(|s| s.internal).sum(),
+            batches: g.batches,
+            mean_batch: if g.batches > 0 {
+                g.batch_occupancy as f64 / g.batches as f64
             } else {
                 0.0
             },
-            max_batch: g.batch_sizes.iter().copied().max().unwrap_or(0),
+            max_batch: g.max_batch,
             qps: if elapsed > 0.0 {
                 completed as f64 / elapsed
             } else {
                 0.0
             },
-            recall: LatencySummary::of(&g.recall_lat_s),
-            topk: LatencySummary::of(&g.topk_lat_s),
-            factorize: LatencySummary::of(&g.factorize_lat_s),
+            recall: g.recall.summary(),
+            topk: g.topk.summary(),
+            factorize: g.factorize.summary(),
             shards,
             prune,
             stores,
@@ -236,12 +363,22 @@ pub struct StoreSnapshot {
     pub name: String,
     /// Requests this store completed (cache hits included).
     pub completed: u64,
-    /// End-to-end latency over this store's completed requests.
+    /// End-to-end latency over this store's completed requests (P²
+    /// streaming estimates for p50/p99 once n > 5; exact below).
     pub latency: Option<LatencySummary>,
     /// This store's shard scan counters.
     pub shards: Vec<ShardStat>,
     /// Merged bound-pruned scan telemetry for this store's kernel calls.
     pub prune: PruneStats,
+    /// Admissions refused on this store's own quota
+    /// ([`super::ServeError::TenantOverloaded`]).
+    pub rejected_tenant: u64,
+    /// Tickets answered `DeadlineExceeded` and dropped before dispatch.
+    pub expired_dropped: u64,
+    /// Requests served or shed under degraded mode.
+    pub degraded: u64,
+    /// Tickets answered `Internal` after a contained worker panic.
+    pub internal: u64,
     /// This store's response-cache counters; `None` when it runs
     /// uncached (filled by [`super::engine::ServeEngine::stats`]).
     pub cache: Option<CacheCounters>,
@@ -252,8 +389,14 @@ pub struct StoreSnapshot {
 pub struct StatsSnapshot {
     pub completed: u64,
     pub rejected: u64,
+    /// Tenant-quota rejections, summed across stores.
+    pub rejected_tenant: u64,
     pub expired: u64,
     pub unsupported: u64,
+    /// Degraded-mode requests, summed across stores.
+    pub degraded: u64,
+    /// Contained-panic (`Internal`) answers, summed across stores.
+    pub internal: u64,
     pub batches: u64,
     /// Mean requests per executed micro-batch (batch occupancy).
     pub mean_batch: f64,
@@ -291,6 +434,35 @@ mod tests {
         assert!(s.p99_s > 98.0 && s.p99_s <= 100.0);
         assert_eq!(s.max_s, 100.0);
         assert!(LatencySummary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn streaming_latency_matches_exact_for_small_n_and_tracks_large_n() {
+        let mut sl = StreamingLatency::new();
+        assert!(sl.summary().is_none());
+        for x in [3.0, 1.0, 2.0] {
+            sl.record(x);
+        }
+        let s = sl.summary().unwrap();
+        assert_eq!(s.n, 3);
+        assert!((s.mean_s - 2.0).abs() < 1e-12);
+        assert!((s.p50_s - 2.0).abs() < 1e-12, "exact below 5 samples");
+        assert_eq!(s.max_s, 3.0);
+
+        // large-n: p50/p99 of a 1..=1000 ramp estimated within a few %
+        let mut sl = StreamingLatency::new();
+        let n = 1000usize;
+        let mut i = 0usize;
+        for _ in 0..n {
+            sl.record((i + 1) as f64);
+            i = (i + 333) % n; // 333 coprime with 1000 -> full cycle
+        }
+        let s = sl.summary().unwrap();
+        assert_eq!(s.n, 1000);
+        assert!((s.mean_s - 500.5).abs() < 1e-6);
+        assert_eq!(s.max_s, 1000.0);
+        assert!((s.p50_s - 500.0).abs() < 30.0, "p50 {}", s.p50_s);
+        assert!((s.p99_s - 990.0).abs() < 30.0, "p99 {}", s.p99_s);
     }
 
     #[test]
@@ -339,7 +511,7 @@ mod tests {
             )],
         );
         st.record_rejected();
-        st.record_expired(2);
+        st.record_expired(StoreId(0), 2);
         let s = st.snapshot();
         // engine-wide aggregates merge across stores
         assert_eq!(s.prune.items, 18);
@@ -366,6 +538,7 @@ mod tests {
         assert_eq!(s.stores[0].completed, 3);
         assert_eq!(s.stores[0].prune.items, 12);
         assert_eq!(s.stores[0].latency.unwrap().n, 3);
+        assert_eq!(s.stores[0].expired_dropped, 2);
         assert_eq!(s.stores[1].name, "beta");
         assert_eq!(s.stores[1].completed, 1);
         assert_eq!(s.stores[1].prune.items, 6);
@@ -374,9 +547,33 @@ mod tests {
     }
 
     #[test]
+    fn overload_counters_attribute_per_store() {
+        let st = ServeStats::new(&[("a", 1), ("b", 1)]);
+        st.record_tenant_rejected(StoreId(0));
+        st.record_tenant_rejected(StoreId(0));
+        st.record_degraded(StoreId(1), 3);
+        st.record_internal(StoreId(1), 4);
+        st.record_expired(StoreId(1), 5);
+        // out-of-range ids must not panic (defensive, like latencies)
+        st.record_tenant_rejected(StoreId(9));
+        st.record_degraded(StoreId(9), 1);
+        st.record_internal(StoreId(9), 1);
+        let s = st.snapshot();
+        assert_eq!(s.stores[0].rejected_tenant, 2);
+        assert_eq!(s.stores[0].degraded, 0);
+        assert_eq!(s.stores[1].degraded, 3);
+        assert_eq!(s.stores[1].internal, 4);
+        assert_eq!(s.stores[1].expired_dropped, 5);
+        assert_eq!(s.rejected_tenant, 2);
+        assert_eq!(s.degraded, 3);
+        assert_eq!(s.internal, 4);
+        assert_eq!(s.expired, 5);
+    }
+
+    #[test]
     fn latencies_for_unknown_store_ids_still_count_globally() {
         // defensive: a latency tagged with an out-of-range store id must
-        // not panic and must still reach the per-class vectors
+        // not panic and must still reach the per-class estimators
         let st = ServeStats::new(&[("only", 1)]);
         st.record_batch(
             1,

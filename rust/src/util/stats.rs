@@ -46,6 +46,137 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Streaming quantile estimator — the P² (piecewise-parabolic) algorithm
+/// of Jain & Chlamtac (CACM 1985). Tracks one quantile of an unbounded
+/// observation stream in O(1) memory with five markers: exact for the
+/// first five observations, a parabolic-interpolation approximation
+/// after. This is what lets `serve`'s long-run latency accounting drop
+/// its per-request `Vec<f64>` — `record` touches only the fixed-size
+/// marker arrays, so steady-state stats recording never allocates.
+#[derive(Debug, Clone, Copy)]
+pub struct P2Quantile {
+    q: f64,
+    n: u64,
+    /// Marker heights (the first `n` observations, unsorted, until the
+    /// estimator seeds at n = 5; sorted marker heights after).
+    h: [f64; 5],
+    /// Marker positions (1-indexed ranks within the stream so far).
+    pos: [f64; 5],
+    /// Desired marker positions.
+    want: [f64; 5],
+}
+
+impl P2Quantile {
+    pub fn new(q: f64) -> P2Quantile {
+        P2Quantile {
+            q: q.clamp(0.0, 1.0),
+            n: 0,
+            h: [0.0; 5],
+            pos: [0.0; 5],
+            want: [0.0; 5],
+        }
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// The quantile this estimator tracks.
+    pub fn q(&self) -> f64 {
+        self.q
+    }
+
+    /// Record one observation. O(1), allocation-free.
+    pub fn record(&mut self, x: f64) {
+        if self.n < 5 {
+            self.h[self.n as usize] = x;
+            self.n += 1;
+            if self.n == 5 {
+                self.h.sort_by(f64::total_cmp);
+                let q = self.q;
+                self.pos = [1.0, 2.0, 3.0, 4.0, 5.0];
+                self.want = [
+                    1.0,
+                    1.0 + 2.0 * q,
+                    1.0 + 4.0 * q,
+                    3.0 + 2.0 * q,
+                    5.0,
+                ];
+            }
+            return;
+        }
+        // Locate the cell, clamping the extreme markers to the sample
+        // min/max.
+        let k = if x < self.h[0] {
+            self.h[0] = x;
+            0
+        } else if x >= self.h[4] {
+            self.h[4] = x.max(self.h[4]);
+            3
+        } else {
+            let mut cell = 0;
+            while cell < 3 && x >= self.h[cell + 1] {
+                cell += 1;
+            }
+            cell
+        };
+        for i in (k + 1)..5 {
+            self.pos[i] += 1.0;
+        }
+        let q = self.q;
+        let dw = [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0];
+        for i in 0..5 {
+            self.want[i] += dw[i];
+        }
+        // Nudge the three interior markers toward their desired ranks.
+        for i in 1..4 {
+            let d = self.want[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let s = d.signum();
+                let hp = self.parabolic(i, s);
+                self.h[i] = if self.h[i - 1] < hp && hp < self.h[i + 1] {
+                    hp
+                } else {
+                    self.linear(i, s)
+                };
+                self.pos[i] += s;
+            }
+        }
+        self.n += 1;
+    }
+
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (pm, pi, pp) = (self.pos[i - 1], self.pos[i], self.pos[i + 1]);
+        let (hm, hi, hp) = (self.h[i - 1], self.h[i], self.h[i + 1]);
+        hi + s / (pp - pm)
+            * ((pi - pm + s) * (hp - hi) / (pp - pi) + (pp - pi - s) * (hi - hm) / (pi - pm))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.h[i] + s * (self.h[j] - self.h[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate; `None` before any observation. Exact (linear
+    /// interpolation over the sorted sample) while n < 5.
+    pub fn value(&self) -> Option<f64> {
+        if self.n == 0 {
+            return None;
+        }
+        if self.n < 5 {
+            let mut head = [0.0; 5];
+            let n = self.n as usize;
+            head[..n].copy_from_slice(&self.h[..n]);
+            head[..n].sort_by(f64::total_cmp);
+            return Some(percentile(&head[..n], self.q));
+        }
+        Some(self.h[2])
+    }
+}
+
 /// Geometric mean (for speedup aggregation).
 pub fn geomean(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
@@ -114,6 +245,53 @@ mod tests {
         assert!(fmt_time(2.5e-6).contains("µs"));
         assert!(fmt_time(2.5e-3).contains("ms"));
         assert!(fmt_time(2.5).contains('s'));
+    }
+
+    #[test]
+    fn p2_exact_below_five_observations() {
+        let mut p = P2Quantile::new(0.5);
+        assert_eq!(p.value(), None);
+        p.record(3.0);
+        assert_eq!(p.value(), Some(3.0));
+        p.record(1.0);
+        assert!((p.value().unwrap() - 2.0).abs() < 1e-12, "median of {{1,3}}");
+        p.record(2.0);
+        assert!((p.value().unwrap() - 2.0).abs() < 1e-12);
+        assert_eq!(p.count(), 3);
+    }
+
+    #[test]
+    fn p2_median_of_uniform_ramp_converges() {
+        // 1..=1001 in a shuffled-ish deterministic order (stride walk):
+        // the true median is 501.
+        let n = 1001usize;
+        let mut p50 = P2Quantile::new(0.5);
+        let mut p99 = P2Quantile::new(0.99);
+        let mut i = 0usize;
+        for _ in 0..n {
+            let x = (i + 1) as f64;
+            p50.record(x);
+            p99.record(x);
+            i = (i + 617) % n; // 617 coprime with 1001 -> full cycle
+        }
+        assert_eq!(p50.count(), n as u64);
+        let m = p50.value().unwrap();
+        assert!((m - 501.0).abs() < 25.0, "p50 {m}");
+        let t = p99.value().unwrap();
+        assert!((t - 991.0).abs() < 25.0, "p99 {t}");
+    }
+
+    #[test]
+    fn p2_tracks_max_like_tail_on_skewed_stream() {
+        // Mostly-small observations with occasional large spikes: the
+        // p99 estimate must land between the bulk and the spike level.
+        let mut p = P2Quantile::new(0.99);
+        for i in 0..5_000 {
+            let x = if i % 100 == 99 { 100.0 } else { 1.0 + (i % 7) as f64 * 0.01 };
+            p.record(x);
+        }
+        let v = p.value().unwrap();
+        assert!(v > 2.0 && v <= 100.0, "p99 {v} should reflect the spike tail");
     }
 
     #[test]

@@ -131,4 +131,44 @@ fn resonator_sweeps_allocate_nothing_in_steady_state() {
         0,
         "dispatched SIMD kernels must not heap-allocate (sink {sink} {dsink})"
     );
+
+    // Serve-stats recording is on every worker's batch path and must be
+    // O(1) memory: the P² streaming quantile state replaced the old
+    // per-request latency vectors, so steady-state recording over
+    // preallocated slices stays off the heap entirely.
+    use nscog::serve::stats::{ServeStats, StoreWork};
+    use nscog::serve::{RequestKind, StoreId};
+    use std::time::Duration;
+    let stats = ServeStats::new(&[("s0", 2), ("s1", 2)]);
+    let latencies: Vec<(StoreId, RequestKind, Duration)> = (0..8)
+        .map(|i| {
+            (
+                StoreId(i % 2),
+                [RequestKind::Recall, RequestKind::RecallTopK, RequestKind::Factorize][i % 3],
+                Duration::from_micros(100 + 37 * i as u64),
+            )
+        })
+        .collect();
+    let mut work = vec![(StoreId(0), StoreWork::default()), (StoreId(1), StoreWork::default())];
+    for (si, (_, w)) in work.iter_mut().enumerate() {
+        w.timings.push((si, 0.001));
+        w.timings.push((1 - si, 0.002));
+    }
+    // warm-up: pushes every P² estimator past its 5-marker fill phase
+    stats.record_batch(latencies.len(), &latencies, &work);
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..50 {
+        stats.record_batch(latencies.len(), &latencies, &work);
+        stats.record_rejected();
+        stats.record_tenant_rejected(StoreId(1));
+        stats.record_expired(StoreId(0), 1);
+        stats.record_degraded(StoreId(1), 1);
+        stats.record_internal(StoreId(0), 1);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state stats recording must not touch the heap"
+    );
 }

@@ -10,7 +10,7 @@ use nscog::serve::loadgen::{
 };
 use nscog::serve::queue::Priority;
 use nscog::serve::{
-    EngineConfig, ServeEngine, ServeError, ServeRequest, ShardedBinaryCodebook,
+    EngineConfig, FaultConfig, ServeEngine, ServeError, ServeRequest, ShardedBinaryCodebook,
     ShardedRealCodebook, StoreId, StoreRegistry, StoreSpec,
 };
 use nscog::util::Rng;
@@ -30,6 +30,7 @@ fn base_profile() -> StoreProfile {
         weight: 1,
         repeat_frac: 0.0,
         sketch_bits: None,
+        quota: None,
     }
 }
 
@@ -48,7 +49,7 @@ fn fixture_cfg(requests: usize, seed: u64) -> FixtureConfig {
 }
 
 fn start(fixture: &Fixture, cfg: EngineConfig) -> ServeEngine {
-    ServeEngine::start_registry(fixture.registry(&cfg), cfg)
+    ServeEngine::start_registry(fixture.registry(&cfg), cfg).expect("spawn serve workers")
 }
 
 #[test]
@@ -267,7 +268,8 @@ fn cached_serving_is_bit_identical_and_never_crosses_k_or_class() {
     let mut rng = Rng::new(14);
     let cb = BinaryCodebook::random(&mut rng, 40, 1024);
     let cm = CleanupMemory::new(cb.clone());
-    let engine = ServeEngine::start(&cb, None, EngineConfig::default());
+    let engine =
+        ServeEngine::start(&cb, None, EngineConfig::default()).expect("spawn serve workers");
     let q = BinaryHV::random(&mut rng, 1024);
     for _round in 0..2 {
         // second round is served from the cache; answers must not change
@@ -312,7 +314,8 @@ fn per_store_caches_keep_tenants_isolated() {
     let mut registry = StoreRegistry::new();
     let a = registry.register("a", &cb_a, None, StoreSpec::default());
     let b = registry.register("b", &cb_b, None, StoreSpec::default());
-    let engine = ServeEngine::start_registry(registry, EngineConfig::default());
+    let engine = ServeEngine::start_registry(registry, EngineConfig::default())
+        .expect("spawn serve workers");
     let q = BinaryHV::random(&mut rng, 1024);
     for _round in 0..2 {
         // round 2 is served from each store's cache — still per-store
@@ -360,7 +363,8 @@ fn overload_rejects_instead_of_queueing_unboundedly() {
             queue_capacity: 4,
             ..EngineConfig::default()
         },
-    );
+    )
+    .expect("spawn serve workers");
     // occupy the single worker with slow factorizations
     let scene = resonator.compose(&[1, 2, 3]);
     let mut primers = Vec::new();
@@ -414,7 +418,8 @@ fn overload_rejects_instead_of_queueing_unboundedly() {
 fn expired_deadlines_are_answered_without_execution() {
     let mut rng = Rng::new(41);
     let cb = BinaryCodebook::random(&mut rng, 32, 1024);
-    let engine = ServeEngine::start(&cb, None, EngineConfig::default());
+    let engine =
+        ServeEngine::start(&cb, None, EngineConfig::default()).expect("spawn serve workers");
     for _ in 0..4 {
         let got = engine.submit_with(
             ServeRequest::recall(BinaryHV::random(&mut rng, 1024)),
@@ -435,5 +440,213 @@ fn expired_deadlines_are_answered_without_execution() {
             Duration::from_secs(10),
         )
         .is_ok());
+    engine.shutdown();
+}
+
+#[test]
+fn single_tenant_flood_sheds_its_own_traffic_and_spares_the_others() {
+    // one tenant fires far past its admission quota while two well-behaved
+    // tenants run closed-loop through the same (single-worker, artificially
+    // slowed) engine. The flood must be shed on the flooder's own lane —
+    // the victims must never see TenantOverloaded and must complete ≥90%
+    // of their traffic bit-exactly.
+    let mut rng = Rng::new(71);
+    let books: Vec<BinaryCodebook> = (0..3)
+        .map(|_| BinaryCodebook::random(&mut rng, 32, 1024))
+        .collect();
+    let mut registry = StoreRegistry::new();
+    let ids: Vec<StoreId> = books
+        .iter()
+        .enumerate()
+        .map(|(i, cb)| {
+            registry.register(
+                if i == 0 { "flood" } else { ["", "v1", "v2"][i] },
+                cb,
+                None,
+                StoreSpec {
+                    quota: Some(if i == 0 { 2 } else { 8 }),
+                    ..StoreSpec::default()
+                },
+            )
+        })
+        .collect();
+    let engine = ServeEngine::start_registry(
+        registry,
+        EngineConfig {
+            workers: 1,
+            max_batch: 4,
+            max_delay: Duration::from_micros(100),
+            queue_capacity: 64,
+            // slow every batch so the flood builds a real backlog
+            faults: Some(FaultConfig {
+                seed: 5,
+                kernel_delay_prob: 1.0,
+                kernel_delay: Duration::from_millis(2),
+                ..FaultConfig::default()
+            }),
+            ..EngineConfig::default()
+        },
+    )
+    .expect("spawn serve workers");
+    let oracles: Vec<CleanupMemory> = books.iter().map(|cb| CleanupMemory::new(cb.clone())).collect();
+    let queries: Vec<Vec<BinaryHV>> = (0..3)
+        .map(|_| (0..30).map(|_| BinaryHV::random(&mut rng, 1024)).collect())
+        .collect();
+    let (eng, ids, oracles, queries) = (&engine, &ids, &oracles, &queries);
+    let (flood_rejected, victim_ledgers) = std::thread::scope(|s| {
+        let flood = s.spawn(move || {
+            let mut rejected = 0usize;
+            let mut pending = Vec::new();
+            for q in queries[0].iter().cycle().take(80) {
+                match eng.submit_async(
+                    ServeRequest::recall_on(ids[0], q.clone()),
+                    Priority::Normal,
+                    Duration::from_secs(30),
+                ) {
+                    Ok(p) => pending.push(p),
+                    Err(ServeError::TenantOverloaded) => rejected += 1,
+                    Err(e) => panic!("flood hit a non-tenant admission error: {e}"),
+                }
+            }
+            pending
+                .into_iter()
+                .for_each(|p| drop(p.wait().expect("admitted flood ticket completes")));
+            rejected
+        });
+        let victims: Vec<_> = (1usize..3)
+            .map(|si| {
+                s.spawn(move || {
+                    let (mut completed, mut shed) = (0usize, 0usize);
+                    for q in &queries[si] {
+                        match eng.submit(ServeRequest::recall_on(ids[si], q.clone())) {
+                            Ok(resp) => {
+                                let (index, cosine) = oracles[si].recall(q);
+                                assert_eq!(
+                                    resp,
+                                    nscog::serve::ServeResponse::Recall { index, cosine },
+                                    "victim {si} got a wrong answer during the flood"
+                                );
+                                completed += 1;
+                            }
+                            Err(ServeError::TenantOverloaded) => shed += 1,
+                            Err(e) => panic!("victim {si} admission error: {e}"),
+                        }
+                    }
+                    (completed, shed)
+                })
+            })
+            .collect();
+        let rejected = flood.join().expect("flooder thread panicked");
+        let ledgers: Vec<(usize, usize)> = victims
+            .into_iter()
+            .map(|v| v.join().expect("victim thread panicked"))
+            .collect();
+        (rejected, ledgers)
+    });
+    assert!(
+        flood_rejected > 0,
+        "80 fire-and-forget submits into a quota-2 lane must trip tenant backpressure"
+    );
+    for (si, (completed, shed)) in victim_ledgers.iter().enumerate() {
+        assert_eq!(*shed, 0, "victim {si} was shed on the flooder's behalf");
+        assert!(
+            completed * 10 >= queries[si + 1].len() * 9,
+            "victim {si} completed only {completed}/{}",
+            queries[si + 1].len()
+        );
+    }
+    let snap = engine.stats();
+    assert!(snap.stores[0].rejected_tenant >= flood_rejected as u64);
+    assert_eq!(snap.stores[1].rejected_tenant, 0);
+    assert_eq!(snap.stores[2].rejected_tenant, 0);
+    assert_eq!(
+        snap.rejected, 0,
+        "quotas must shed the flood before the global capacity check trips"
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn deadline_storm_expires_per_store_without_touching_live_traffic() {
+    // two stores; a storm of already-dead requests lands on each amid live
+    // traffic. Every dead ticket is answered DeadlineExceeded and charged
+    // to its own store; every live request completes bit-exactly.
+    let mut rng = Rng::new(81);
+    let cb_a = BinaryCodebook::random(&mut rng, 32, 1024);
+    let cb_b = BinaryCodebook::random(&mut rng, 24, 512);
+    let cm_a = CleanupMemory::new(cb_a.clone());
+    let cm_b = CleanupMemory::new(cb_b.clone());
+    let mut registry = StoreRegistry::new();
+    let a = registry.register("a", &cb_a, None, StoreSpec::default());
+    let b = registry.register("b", &cb_b, None, StoreSpec::default());
+    let engine = ServeEngine::start_registry(registry, EngineConfig::default())
+        .expect("spawn serve workers");
+    let storm = [(a, 1024usize, 6usize), (b, 512, 4)];
+    for &(id, dim, n) in &storm {
+        for _ in 0..n {
+            let got = engine.submit_with(
+                ServeRequest::recall_on(id, BinaryHV::random(&mut rng, dim)),
+                Priority::Normal,
+                Duration::ZERO,
+            );
+            assert_eq!(got, Err(ServeError::DeadlineExceeded));
+        }
+        // live request on the same store, right behind the storm
+        let q = BinaryHV::random(&mut rng, dim);
+        let (index, cosine) = if id == a { cm_a.recall(&q) } else { cm_b.recall(&q) };
+        assert_eq!(
+            engine.submit(ServeRequest::recall_on(id, q)),
+            Ok(nscog::serve::ServeResponse::Recall { index, cosine })
+        );
+    }
+    let snap = engine.stats();
+    assert_eq!(snap.expired, 10);
+    assert_eq!(snap.stores[a.index()].expired_dropped, 6);
+    assert_eq!(snap.stores[b.index()].expired_dropped, 4);
+    assert_eq!(snap.completed, 2);
+    engine.shutdown();
+}
+
+#[test]
+fn contained_worker_panic_answers_internal_and_engine_recovers() {
+    let mut rng = Rng::new(91);
+    let cb = BinaryCodebook::random(&mut rng, 32, 1024);
+    let cm = CleanupMemory::new(cb.clone());
+    let engine = ServeEngine::start(
+        &cb,
+        None,
+        EngineConfig {
+            workers: 2,
+            // fault plan armed but quiescent; the test flips it live
+            faults: Some(FaultConfig {
+                seed: 9,
+                ..FaultConfig::default()
+            }),
+            ..EngineConfig::default()
+        },
+    )
+    .expect("spawn serve workers");
+    let faults = engine.faults().expect("engine carries its fault plan");
+    faults.set_probs(0.0, 1.0, 0.0); // every batch panics
+    for _ in 0..3 {
+        let got = engine.submit(ServeRequest::recall(BinaryHV::random(&mut rng, 1024)));
+        assert_eq!(
+            got,
+            Err(ServeError::Internal),
+            "poisoned batch must be answered, not hung"
+        );
+    }
+    faults.set_probs(0.0, 0.0, 0.0);
+    // same engine, same workers: bit-exact service resumes
+    let q = BinaryHV::random(&mut rng, 1024);
+    let (index, cosine) = cm.recall(&q);
+    assert_eq!(
+        engine.submit(ServeRequest::recall(q)),
+        Ok(nscog::serve::ServeResponse::Recall { index, cosine })
+    );
+    let snap = engine.stats();
+    assert_eq!(snap.internal, 3);
+    assert_eq!(snap.stores[0].internal, 3);
+    assert_eq!(snap.completed, 1);
     engine.shutdown();
 }

@@ -149,6 +149,162 @@ else
     echo "python3 unavailable; structural grep checks passed"
 fi
 
+# Traced smoke: the same fixture shape with the stage tracer on, through
+# a separate JSON pair so the untraced BENCH_serve.json above stays the
+# canonical perf artifact. Emits BENCH_serve_trace.json: ring-buffer
+# event dump with its drop ledger, per-class stage-latency
+# decompositions, queue gauges, and the measured roofline verdict per
+# request class.
+echo "== bench smoke: serve traced (--trace: stage ring + measured roofline) =="
+NSCOG_SERVE_JSON="$(pwd)/BENCH_serve_traced.json" \
+NSCOG_SERVE_TRACE_JSON="$(pwd)/BENCH_serve_trace.json" \
+    cargo run --release --quiet --bin nscog -- serve-bench --smoke --stores 3 --trace
+
+echo "== validate BENCH_serve_trace.json =="
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PYEOF'
+import json
+
+def validate(r):
+    """One trace report -> 'pass' or 'skip'; raises AssertionError on a
+    violated invariant. Untraced/older JSONs (no serve_trace tag or no
+    ring ledger) skip cleanly."""
+    if r.get('bench') != 'serve_trace' or 'ring' not in r:
+        return 'skip'
+    ring = r['ring']
+    assert 'events_dropped' in ring, 'trace JSON missing the drop ledger'
+    assert ring.get('capacity', 0) > 0, 'trace ring reports no capacity'
+    events = r.get('events')
+    assert isinstance(events, list), 'trace JSON missing its event dump'
+    assert len(events) == ring.get('events_recorded'), \
+        'event dump length disagrees with the ring ledger'
+    assert len(events) <= ring['capacity'], 'ring dump exceeds its own capacity'
+    for ev in events:
+        spans = [ev[k] for k in ('queue_s', 'batch_s', 'kernel_s', 'fill_s')]
+        assert all(s >= 0 for s in spans), \
+            f"negative stage span in event {ev.get('seq')}"
+        assert sum(spans) <= ev['total_s'] + 1e-9, \
+            f"event {ev.get('seq')}: stage sum exceeds its e2e latency"
+    trafficked = set()
+    for st in r.get('stages', []):
+        if st.get('n', 0) == 0:
+            continue
+        trafficked.add(st['kind'])
+        total = st.get('total') or {}
+        assert st['stage_mean_sum_s'] <= total.get('mean_s', 0) * 1.01 + 1e-9, \
+            f"{st['kind']}: stage means over-attribute vs the e2e mean"
+    assert trafficked, 'trace run recorded no trafficked request class'
+    verdicts = []
+    for rf in r.get('roofline', []):
+        if rf.get('calls', 0) == 0:
+            continue
+        m = rf.get('measured')
+        assert isinstance(m, dict) and isinstance(m.get('memory_bound'), bool), \
+            f"{rf['kind']}: kernel-active class missing its measured roofline verdict"
+        assert isinstance(rf.get('modelled'), dict), \
+            f"{rf['kind']}: kernel-active class missing its modelled roofline point"
+        verdicts.append((rf['kind'], m['memory_bound']))
+    assert verdicts, 'no request class carried a measured roofline verdict'
+    q = r.get('queue')
+    assert q is not None and 'depth' in q and isinstance(q.get('lanes'), list), \
+        'trace JSON missing the queue gauges'
+    return 'pass'
+
+# Self-test before gating the real artifact: the validator must pass a
+# good report, skip untraced shapes, and FAIL each mutated bad one (a
+# gate that cannot fail gates nothing).
+lat = lambda n, mean: {'n': n, 'mean_s': mean, 'p50_s': mean, 'p99_s': mean, 'max_s': mean}
+ok = {
+    'bench': 'serve_trace', 'store_count': 1, 'requests': 4,
+    'ring': {'capacity': 8, 'events_recorded': 2, 'events_dropped': 0},
+    'platform': {'name': 'serve-host', 'peak_flops': 7e11, 'dram_bw': 1.15e11,
+                 'ridge_intensity': 6.087},
+    'stages': [
+        {'kind': 'recall', 'n': 2, 'queue': lat(2, 1e-5), 'batch': lat(2, 1e-5),
+         'kernel': lat(2, 4e-5), 'fill': lat(2, 1e-5), 'total': lat(2, 9e-5),
+         'stage_mean_sum_s': 7e-5},
+        {'kind': 'recall_topk', 'n': 0, 'queue': None, 'batch': None, 'kernel': None,
+         'fill': None, 'total': None, 'stage_mean_sum_s': 0.0},
+        {'kind': 'factorize', 'n': 0, 'queue': None, 'batch': None, 'kernel': None,
+         'fill': None, 'total': None, 'stage_mean_sum_s': 0.0}],
+    'roofline': [
+        {'kind': 'recall', 'calls': 2, 'kernel_elapsed_s': 8e-5, 'flops': 3072,
+         'bytes_read': 8192, 'bytes_written': 32, 'intensity': 0.373,
+         'measured': {'intensity': 0.373, 'attained_flops': 3.84e7, 'memory_bound': True},
+         'modelled': {'intensity': 0.373, 'attained_flops': 8.3e10, 'memory_bound': True}},
+        {'kind': 'recall_topk', 'calls': 0, 'kernel_elapsed_s': 0.0, 'flops': 0,
+         'bytes_read': 0, 'bytes_written': 0, 'intensity': 0.0,
+         'measured': None, 'modelled': None},
+        {'kind': 'factorize', 'calls': 0, 'kernel_elapsed_s': 0.0, 'flops': 0,
+         'bytes_read': 0, 'bytes_written': 0, 'intensity': 0.0,
+         'measured': None, 'modelled': None}],
+    'queue': {'depth': 0, 'lanes': [{'store': 0, 'len': 0, 'high': 0, 'deficit': 0,
+                                     'weight': 1, 'quota': 512}]},
+    'stores': [{'id': 0, 'name': 's0', 'stages': [], 'roofline': []}],
+    'events': [
+        {'seq': 1, 'store': 0, 'kind': 'recall', 'queue_s': 1e-5, 'batch_s': 1e-5,
+         'kernel_s': 4e-5, 'fill_s': 1e-5, 'total_s': 9e-5,
+         'degraded': False, 'cache_hit': False},
+        {'seq': 2, 'store': 0, 'kind': 'recall', 'queue_s': 1e-5, 'batch_s': 1e-5,
+         'kernel_s': 4e-5, 'fill_s': 1e-5, 'total_s': 9e-5,
+         'degraded': False, 'cache_hit': False}],
+}
+assert validate(ok) == 'pass', 'validator rejected a passing trace report'
+assert validate({'bench': 'serve'}) == 'skip', 'untraced serve JSON must skip'
+assert validate({}) == 'skip', 'empty JSON must skip'
+for mutate, what in [
+        (lambda b: b['stages'][0].__setitem__('stage_mean_sum_s', 1.2e-4),
+         'stage means exceeding the e2e mean'),
+        (lambda b: b['ring'].__delitem__('events_dropped'), 'missing drop ledger'),
+        (lambda b: b['roofline'][0].__setitem__('measured', None),
+         'missing roofline verdict on a kernel-active class'),
+        (lambda b: b['events'][0].__setitem__('queue_s', -1e-6),
+         'negative event stage span'),
+        (lambda b: b['events'][1].__setitem__('kernel_s', 1e-3),
+         'event stage sum exceeding its e2e latency')]:
+    bad = json.loads(json.dumps(ok))
+    mutate(bad)
+    try:
+        validate(bad)
+        raise SystemExit(f'trace validator accepted a report with {what}')
+    except AssertionError:
+        pass
+
+r = json.load(open('BENCH_serve_trace.json'))
+verdict = validate(r)
+if verdict == 'skip':
+    raise SystemExit('traced smoke run wrote no trace report')
+ring = r['ring']
+bounds = ", ".join(
+    f"{rf['kind']} {'memory' if rf['measured']['memory_bound'] else 'compute'}-bound"
+    for rf in r['roofline'] if rf.get('calls', 0) > 0)
+print(f"serve trace OK (validator self-test passed): "
+      f"{ring['events_recorded']} events (capacity {ring['capacity']}, "
+      f"{ring['events_dropped']} dropped oldest); roofline: {bounds}")
+
+# Trace overhead gate: the always-on tracer must stay cheap — traced
+# closed-loop throughput >= 95% of the untraced run just above. Skips
+# cleanly when either artifact is unpopulated (FLOORS convention).
+try:
+    un = json.load(open('BENCH_serve.json'))['closed_loop']['qps']
+    tr = json.load(open('BENCH_serve_traced.json'))['closed_loop']['qps']
+except (OSError, json.JSONDecodeError, KeyError):
+    un = tr = None
+if not un or not tr:
+    print('untraced/traced qps pair unavailable; skipping trace overhead gate')
+else:
+    assert tr >= 0.95 * un, \
+        f'trace overhead: traced {tr:.0f} qps < 95% of untraced {un:.0f} qps'
+    print(f'trace overhead OK: traced {tr:.0f} qps vs untraced {un:.0f} qps '
+          f'({tr / un * 100:.1f}%)')
+PYEOF
+else
+    grep -q '"bench": "serve_trace"' BENCH_serve_trace.json
+    grep -q '"events_dropped"' BENCH_serve_trace.json
+    grep -q '"memory_bound"' BENCH_serve_trace.json
+    echo "python3 unavailable; structural grep checks passed"
+fi
+
 # Chaos smoke: one tenant floods its admission quota through a separate
 # engine (and a separate JSON — the clean BENCH_serve.json above must
 # stay chaos-free). The binary itself exits non-zero if the fairness or

@@ -93,6 +93,15 @@ fn info() {
     println!("                        chaos: --chaos flood|deadline|panic (runs after the clean");
     println!("                               passes on a fresh engine; fairness + liveness gated,");
     println!("                               verdict in the JSON's \"chaos\" block)");
+    println!("                        tracing: --trace (or NSCOG_TRACE=1) record per-request stage");
+    println!("                               marks (admit/pop/seal/kernel/fill) into a drop-oldest");
+    println!("                               event ring and emit BENCH_serve_trace.json — stage");
+    println!("                               latency breakdowns plus a measured roofline verdict");
+    println!("                               per request class (NSCOG_SERVE_TRACE_JSON overrides");
+    println!("                               the path)");
+    println!("                        --trace-capacity N (ring size, default 4096) --trace-json PATH");
+    println!("                        host roofline calibration: NSCOG_HOST_PEAK_FLOPS and");
+    println!("                               NSCOG_HOST_DRAM_BW override the Xeon 4114 defaults");
     println!("  runtime-info          check PJRT artifacts (artifacts/manifest.json)");
 }
 
@@ -358,6 +367,23 @@ fn serve_bench(flags: &[String]) {
     if let Some(p) = val("--json") {
         opts.json_path = Some(p.clone());
     }
+    // stage tracing: flags win over the NSCOG_TRACE environment toggle;
+    // either --trace-capacity or --trace-json alone also turns it on
+    let env_trace = std::env::var("NSCOG_TRACE")
+        .map(|v| {
+            let v = v.trim();
+            !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
+        })
+        .unwrap_or(false);
+    opts.trace = has("--trace") || env_trace;
+    if let Some(n) = num("--trace-capacity") {
+        opts.trace = true;
+        opts.trace_capacity = n.max(1);
+    }
+    if let Some(p) = val("--trace-json") {
+        opts.trace = true;
+        opts.trace_json_path = Some(p.clone());
+    }
     if let Some(spec) = val("--chaos") {
         match ChaosScenario::parse(spec) {
             Some(sc) => opts.chaos = Some(sc),
@@ -506,6 +532,59 @@ fn serve_bench(flags: &[String]) {
         "QPS speedup vs unbatched single-thread baseline: {:.2}x",
         report.speedup_qps()
     );
+    if let Some(log) = &report.trace {
+        use nscog::serve::RequestKind;
+        println!(
+            "trace: {} events buffered (ring capacity {}), {} dropped oldest",
+            log.events.len(),
+            log.capacity,
+            log.dropped
+        );
+        let mean = |l: &Option<nscog::serve::LatencySummary>| {
+            l.as_ref().map_or(0.0, |s| s.mean_s)
+        };
+        for st in &report.stats.stages {
+            if st.n == 0 {
+                continue;
+            }
+            println!(
+                "  stages[{}]: n={}  queue {} + batch {} + kernel {} + fill {}  (e2e {})",
+                st.kind.label(),
+                st.n,
+                fmt_time(mean(&st.queue)),
+                fmt_time(mean(&st.batch)),
+                fmt_time(mean(&st.kernel)),
+                fmt_time(mean(&st.fill)),
+                fmt_time(mean(&st.total))
+            );
+        }
+        let host = Platform::host();
+        let ridge = nscog::profiler::roofline::ridge_intensity(&host);
+        for k in RequestKind::ALL {
+            let w = &report.stats.kernel_work[k.index()];
+            if w.calls == 0 {
+                continue;
+            }
+            println!(
+                "  roofline[{}]: {:.3} FLOP/B at {:.2} GFLOP/s → {} on {} (ridge {:.2})",
+                k.label(),
+                w.intensity(),
+                w.attained_flops() / 1e9,
+                if w.intensity() < ridge {
+                    "memory-bound"
+                } else {
+                    "compute-bound"
+                },
+                host.name,
+                ridge
+            );
+        }
+        match report.write_trace_json() {
+            Ok(Some(path)) => println!("wrote {path}"),
+            Ok(None) => {}
+            Err(e) => eprintln!("could not write serve trace JSON: {e}"),
+        }
+    }
     // write the JSON even on failure so CI has the evidence, then gate
     match report.write_json() {
         Ok(path) => println!("wrote {path}"),

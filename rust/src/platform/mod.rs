@@ -93,6 +93,27 @@ impl Platform {
         }
     }
 
+    /// The live serving host for the measured-roofline bridge
+    /// (`serve-bench --trace`): Xeon 4114-class defaults, with the two
+    /// roofline-defining parameters overridable via environment when the
+    /// deploy target's calibration differs — `NSCOG_HOST_PEAK_FLOPS`
+    /// (FLOP/s) and `NSCOG_HOST_DRAM_BW` (bytes/s), both positive f64.
+    pub fn host() -> Platform {
+        fn env_f64(key: &str) -> Option<f64> {
+            let v: f64 = std::env::var(key).ok()?.trim().parse().ok()?;
+            (v > 0.0 && v.is_finite()).then_some(v)
+        }
+        let mut p = Self::xeon4114();
+        p.name = "serve-host";
+        if let Some(v) = env_f64("NSCOG_HOST_PEAK_FLOPS") {
+            p.peak_flops = v;
+        }
+        if let Some(v) = env_f64("NSCOG_HOST_DRAM_BW") {
+            p.dram_bw = v;
+        }
+        p
+    }
+
     /// The paper's Fig. 2b platform sweep.
     pub fn edge_sweep() -> Vec<Platform> {
         vec![Self::tx2(), Self::xavier_nx(), Self::rtx2080ti()]
@@ -254,6 +275,18 @@ mod tests {
         assert!(t_tx2 > 10.0 * t_gpu);
         assert!(t_nx > 5.0 * t_gpu);
         assert!(t_tx2 > t_nx, "TX2 is the slowest platform");
+    }
+
+    #[test]
+    fn host_platform_defaults_to_the_xeon_calibration() {
+        // (env overrides are not exercised here: tests run in parallel
+        // and process-global env mutation would race)
+        let h = Platform::host();
+        let x = Platform::xeon4114();
+        assert_eq!(h.name, "serve-host");
+        assert_eq!(h.peak_flops, x.peak_flops);
+        assert_eq!(h.dram_bw, x.dram_bw);
+        assert_eq!(h.power_w, x.power_w);
     }
 
     #[test]

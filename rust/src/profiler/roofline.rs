@@ -46,6 +46,36 @@ pub fn roof(p: &Platform, intensity: f64) -> f64 {
     (intensity * p.dram_bw).min(p.peak_flops)
 }
 
+/// Place one *measured* kernel aggregate on a platform's roofline: the
+/// intensity and attained FLOP/s come from live counters (FLOPs, bytes,
+/// measured wall time inside the kernel calls) instead of the
+/// analytical cost model — the serve engine's roofline bridge
+/// (`serve-bench --trace`) feeds its per-`(store, class)`
+/// [`crate::serve::KernelWork`] through here. The memory-/compute-bound
+/// verdict compares the measured intensity against the same ridge point
+/// as [`place`], so modelled and measured points share one axis system.
+pub fn place_measured(
+    workload: &str,
+    phase: PhaseKind,
+    flops: u64,
+    bytes: u64,
+    elapsed_s: f64,
+    platform: &Platform,
+) -> RooflinePoint {
+    let intensity = flops as f64 / bytes.max(1) as f64;
+    RooflinePoint {
+        workload: workload.to_string(),
+        phase,
+        intensity,
+        attained_flops: if elapsed_s > 0.0 {
+            flops as f64 / elapsed_s
+        } else {
+            0.0
+        },
+        memory_bound: intensity < ridge_intensity(platform),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,6 +106,20 @@ mod tests {
         let pt = place(&tr, PhaseKind::Symbolic, &p);
         assert!(pt.memory_bound);
         assert!(pt.intensity < 1.0);
+    }
+
+    #[test]
+    fn measured_placement_uses_live_counters_and_shared_ridge() {
+        let p = Platform::host();
+        // binary cleanup scan shape: 3 ops per u64 word streamed →
+        // intensity 3/8 FLOP/byte, far left of any CPU ridge
+        let pt = place_measured("recall", PhaseKind::Symbolic, 3_000_000, 8_000_000, 1e-3, &p);
+        assert!(pt.memory_bound);
+        assert!((pt.intensity - 0.375).abs() < 1e-12);
+        assert!((pt.attained_flops - 3.0e9).abs() < 1.0);
+        // zero elapsed (no traffic) degrades to zero attained, no panic
+        let idle = place_measured("idle", PhaseKind::Symbolic, 0, 0, 0.0, &p);
+        assert_eq!(idle.attained_flops, 0.0);
     }
 
     #[test]

@@ -76,6 +76,25 @@ impl Trace {
         self.ops.len() - 1
     }
 
+    /// One-operator trace — the shape the serve engine's measured
+    /// roofline bridge emits per `(store, request class)` kernel
+    /// aggregate before handing it to
+    /// [`crate::profiler::roofline::place`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn single(
+        workload: impl Into<String>,
+        name: impl Into<String>,
+        category: OpCategory,
+        phase: PhaseKind,
+        flops: u64,
+        bytes_read: u64,
+        bytes_written: u64,
+    ) -> Trace {
+        let mut tr = Trace::new(workload);
+        tr.add(name, category, phase, flops, bytes_read, bytes_written, &[]);
+        tr
+    }
+
     /// Set the output sparsity of op `idx`.
     pub fn set_sparsity(&mut self, idx: usize, s: f64) {
         self.ops[idx].output_sparsity = s.clamp(0.0, 1.0);
@@ -175,6 +194,23 @@ mod tests {
     fn intensity() {
         let tr = t();
         assert!((tr.ops[0].intensity() - 1000.0 / 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_op_trace_round_trips() {
+        let tr = Trace::single(
+            "serve:recall",
+            "cleanup_scan",
+            OpCategory::VectorElem,
+            PhaseKind::Symbolic,
+            30,
+            80,
+            16,
+        );
+        assert_eq!(tr.len(), 1);
+        assert_eq!(tr.flops(Some(PhaseKind::Symbolic)), 30);
+        assert_eq!(tr.bytes(None), 96);
+        assert!(tr.validate().is_ok());
     }
 
     #[test]

@@ -19,21 +19,33 @@
 //! [`super::cache`]).
 //!
 //! Graceful degradation: a store whose queue lane is backlogged past its
-//! [`super::registry::StoreSpec::degrade_depth`] threshold is served
-//! degraded for the batch — top-k requests are answered at
+//! [`super::registry::StoreSpec::degrade_depth`] *enter* threshold is
+//! served degraded for the batch — top-k requests are answered at
 //! `degrade_k` (wrapped in [`ServeResponse::Degraded`] so the truncation
 //! is explicit, and never cached), factorize requests are shed with
-//! [`ServeError::TenantOverloaded`]. Cache hits still serve full answers
-//! (they cost no kernel work). Degradation is per store: one tenant's
-//! backlog never degrades another's responses.
+//! [`ServeError::TenantOverloaded`]. The probe runs through the
+//! [`super::registry::Hysteresis`] state machine: once entered, a store
+//! stays degraded until its lane drains below the *exit* threshold
+//! (`degrade_exit`, default half of enter), so service doesn't flap
+//! when the depth hovers at the boundary. Cache hits still serve full
+//! answers (they cost no kernel work). Degradation is per store: one
+//! tenant's backlog never degrades another's responses.
+//!
+//! Observability: every ticket carries [`StageMarks`]; the batcher
+//! stamps seal at window close and the kernel bracket per `(store,
+//! class)` group call, then folds each response's [`StageSample`] and
+//! the group's measured [`KernelWork`] into [`ServeStats`] — and into
+//! the [`TraceRing`] when tracing is enabled.
 
 use super::faults::FaultPlan;
 use super::queue::{AdmissionQueue, ResponseSlot, Ticket};
 use super::registry::{StoreId, StoreRegistry};
 use super::stats::{ServeStats, StoreWork};
+use super::trace::{KernelWork, StageMarks, StageSample, TraceEvent, TraceRing};
 use super::{RequestKind, RequestOp, ServeError, ServeRequest, ServeResponse};
 use crate::vsa::{RealHV, Resonator, ResonatorScratch};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
 /// Batch formation policy.
@@ -88,6 +100,12 @@ pub fn gather(queue: &AdmissionQueue, policy: &BatchPolicy, stats: &ServeStats) 
             }
         }
     }
+    // The batch window just closed: stamp the seal mark on every
+    // gathered ticket (the pop mark was stamped by the queue).
+    let sealed = Instant::now();
+    for t in &mut batch {
+        t.marks.sealed = Some(sealed);
+    }
     Some(batch)
 }
 
@@ -134,40 +152,84 @@ pub struct ExecCtx<'a> {
     /// `None` disables depth-triggered degradation (tests that execute
     /// batches directly).
     pub queue: Option<&'a AdmissionQueue>,
+    /// Persistent per-store degraded bits (indexed by
+    /// [`StoreId::index`]), shared by every worker so the
+    /// [`super::registry::Hysteresis`] state machine has memory across
+    /// batches. `None` falls back to the stateless probe (enter
+    /// threshold only, no hysteresis).
+    pub degrade: Option<&'a [AtomicBool]>,
+    /// Trace-event ring; `None` (tracing off) costs one branch per
+    /// accounted response.
+    pub trace: Option<&'a TraceRing>,
     /// Fault-injection plan; `None` injects nothing.
     pub faults: Option<&'a FaultPlan>,
 }
 
 impl<'a> ExecCtx<'a> {
-    /// Context with no queue probe and no fault plan.
+    /// Context with no queue probe, no degrade state, no tracing, and no
+    /// fault plan.
     pub fn plain(registry: &'a StoreRegistry, stats: &'a ServeStats, scan_threads: usize) -> Self {
         ExecCtx {
             registry,
             stats,
             scan_threads,
             queue: None,
+            degrade: None,
+            trace: None,
             faults: None,
         }
     }
 }
 
-/// One store's slice of a gathered batch, split by request class.
+/// One store's slice of a gathered batch, split by request class. Slots
+/// carry their ticket's [`StageMarks`] so the kernel bracket can be
+/// stamped per `(store, class)` group call.
 #[derive(Default)]
 struct StoreGroup {
     recall_qs: Vec<crate::vsa::BinaryHV>,
-    recall_slots: Vec<(ResponseSlot, Instant)>,
+    recall_slots: Vec<(ResponseSlot, StageMarks)>,
     topk_qs: Vec<crate::vsa::BinaryHV>,
-    /// `(slot, enqueued, effective k, served degraded)` — k is already
+    /// `(slot, marks, effective k, served degraded)` — k is already
     /// capped when the store is degraded, and degraded answers are
     /// wrapped and never cached.
-    topk_slots: Vec<(ResponseSlot, Instant, usize, bool)>,
+    topk_slots: Vec<(ResponseSlot, StageMarks, usize, bool)>,
     fact_scenes: Vec<RealHV>,
-    fact_slots: Vec<(ResponseSlot, Instant)>,
+    fact_slots: Vec<(ResponseSlot, StageMarks)>,
 }
 
 impl StoreGroup {
     fn executed(&self) -> usize {
         self.recall_qs.len() + self.topk_qs.len() + self.fact_scenes.len()
+    }
+}
+
+/// Account one completed response: end-to-end latency plus its stage
+/// sample for the P² breakdowns, and a [`TraceEvent`] when the ring is
+/// on (one `Option` branch when it is not). The accounting instant
+/// stands in for the slot-fill time — stats are recorded before fills.
+fn account(
+    latencies: &mut Vec<(StoreId, RequestKind, Duration, StageSample)>,
+    trace: Option<&TraceRing>,
+    store: StoreId,
+    kind: RequestKind,
+    marks: &StageMarks,
+    degraded: bool,
+    cache_hit: bool,
+) {
+    let now = Instant::now();
+    let total = now.saturating_duration_since(marks.admit);
+    let stages = marks.sample_at(now);
+    latencies.push((store, kind, total, stages));
+    if let Some(ring) = trace {
+        ring.record(TraceEvent {
+            seq: 0, // assigned by the ring
+            store,
+            kind,
+            stages,
+            total_s: total.as_secs_f64(),
+            degraded,
+            cache_hit,
+        });
     }
 }
 
@@ -210,7 +272,8 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
     let mut expired_by: BTreeMap<StoreId, u64> = BTreeMap::new();
     let mut degraded_by: BTreeMap<StoreId, u64> = BTreeMap::new();
     let mut unsupported = 0u64;
-    let mut latencies: Vec<(StoreId, RequestKind, Duration)> = Vec::with_capacity(batch.len());
+    let mut latencies: Vec<(StoreId, RequestKind, Duration, StageSample)> =
+        Vec::with_capacity(batch.len());
     // (slot, outcome) pairs, filled only after all metrics are recorded
     let mut fills: Vec<(ResponseSlot, Result<ServeResponse, ServeError>)> =
         Vec::with_capacity(batch.len());
@@ -228,8 +291,24 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
             continue;
         };
         let degraded = *degraded_stores.entry(store_id).or_insert_with(|| {
-            match (store.spec().degrade_depth, ctx.queue) {
-                (Some(depth), Some(q)) => q.lane_len(store_id) >= depth.max(1),
+            match (store.spec().degrade_hysteresis(), ctx.queue) {
+                (Some(h), Some(q)) => {
+                    let depth = q.lane_len(store_id);
+                    match ctx.degrade.and_then(|bits| bits.get(store_id.index())) {
+                        // Persistent bit: enter at `h.enter`, leave only
+                        // once the lane drains below `h.exit` — no
+                        // flapping while the depth hovers at the
+                        // threshold.
+                        Some(bit) => {
+                            let next = h.next(bit.load(Ordering::Relaxed), depth);
+                            bit.store(next, Ordering::Relaxed);
+                            next
+                        }
+                        // Stateless fallback (direct-execution tests):
+                        // plain enter-threshold probe, as before.
+                        None => h.next(false, depth),
+                    }
+                }
                 _ => false,
             }
         });
@@ -240,12 +319,20 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                     fills.push((t.slot, Err(ServeError::InvalidDimension)));
                     unsupported += 1;
                 } else if let Some(resp) = cache.and_then(|c| c.get_recall(&query)) {
-                    latencies.push((store_id, RequestKind::Recall, t.enqueued.elapsed()));
+                    account(
+                        &mut latencies,
+                        ctx.trace,
+                        store_id,
+                        RequestKind::Recall,
+                        &t.marks,
+                        false,
+                        true,
+                    );
                     fills.push((t.slot, Ok(resp)));
                 } else {
                     let g = groups.entry(store_id).or_default();
                     g.recall_qs.push(query);
-                    g.recall_slots.push((t.slot, t.enqueued));
+                    g.recall_slots.push((t.slot, t.marks));
                 }
             }
             RequestOp::RecallTopK { query, k } => {
@@ -255,7 +342,15 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                 } else if let Some(resp) = cache.and_then(|c| c.get_topk(&query, k)) {
                     // a full-k hit costs no kernel work, so degraded
                     // stores still serve it undegraded
-                    latencies.push((store_id, RequestKind::RecallTopK, t.enqueued.elapsed()));
+                    account(
+                        &mut latencies,
+                        ctx.trace,
+                        store_id,
+                        RequestKind::RecallTopK,
+                        &t.marks,
+                        false,
+                        true,
+                    );
                     fills.push((t.slot, Ok(resp)));
                 } else {
                     let (k_eff, deg) = if degraded && k > store.spec().degrade_k.max(1) {
@@ -266,7 +361,7 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                     };
                     let g = groups.entry(store_id).or_default();
                     g.topk_qs.push(query);
-                    g.topk_slots.push((t.slot, t.enqueued, k_eff, deg));
+                    g.topk_slots.push((t.slot, t.marks, k_eff, deg));
                 }
             }
             RequestOp::Factorize { scene } => match store.resonator() {
@@ -287,7 +382,7 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                 Some(_) => {
                     let g = groups.entry(store_id).or_default();
                     g.fact_scenes.push(scene);
-                    g.fact_slots.push((t.slot, t.enqueued));
+                    g.fact_slots.push((t.slot, t.marks));
                 }
             },
         }
@@ -311,22 +406,45 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
         let mut work = StoreWork::default();
 
         if !group.recall_qs.is_empty() {
+            let n_q = group.recall_qs.len() as u64;
+            let kstart = Instant::now();
             let (results, timings, scan_prune) = store
                 .cleanup()
                 .recall_batch_stats(&group.recall_qs, ctx.scan_threads);
+            let kend = Instant::now();
             work.timings.extend(timings);
+            // Measured roofline inputs: the pruned scan streamed
+            // `words_streamed` u64 item words (XOR + popcount +
+            // accumulate ≈ 3 ops/word) plus each query row once; each
+            // answer writes an (index, cosine) pair.
+            work.measured[RequestKind::Recall.index()].merge(&KernelWork {
+                calls: 1,
+                elapsed_s: kend.saturating_duration_since(kstart).as_secs_f64(),
+                flops: 3 * scan_prune.words_streamed,
+                bytes_read: 8 * scan_prune.words_streamed + n_q * (store.dim() as u64 / 8),
+                bytes_written: n_q * 16,
+            });
             work.prune.merge(&scan_prune);
-            for (((slot, enqueued), (index, cosine)), query) in group
+            for (((slot, mut marks), (index, cosine)), query) in group
                 .recall_slots
                 .into_iter()
                 .zip(results)
                 .zip(group.recall_qs)
             {
+                marks.mark_kernel(kstart, kend);
                 let resp = ServeResponse::Recall { index, cosine };
                 if let Some(c) = cache {
                     c.insert(ServeRequest::recall_on(store_id, query), &resp);
                 }
-                latencies.push((store_id, RequestKind::Recall, enqueued.elapsed()));
+                account(
+                    &mut latencies,
+                    ctx.trace,
+                    store_id,
+                    RequestKind::Recall,
+                    &marks,
+                    false,
+                    false,
+                );
                 fills.push((slot, Ok(resp)));
             }
         }
@@ -343,18 +461,29 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                 .map(|&(_, _, k, _)| k)
                 .max()
                 .unwrap_or(0);
+            let n_q = group.topk_qs.len() as u64;
+            let kstart = Instant::now();
             let (results, timings, scan_prune) =
                 store
                     .cleanup()
                     .recall_topk_batch_stats(&group.topk_qs, k_max, ctx.scan_threads);
+            let kend = Instant::now();
             work.timings.extend(timings);
+            work.measured[RequestKind::RecallTopK.index()].merge(&KernelWork {
+                calls: 1,
+                elapsed_s: kend.saturating_duration_since(kstart).as_secs_f64(),
+                flops: 3 * scan_prune.words_streamed,
+                bytes_read: 8 * scan_prune.words_streamed + n_q * (store.dim() as u64 / 8),
+                bytes_written: n_q * k_max as u64 * 16,
+            });
             work.prune.merge(&scan_prune);
-            for (((slot, enqueued, k, deg), mut hits), query) in group
+            for (((slot, mut marks, k, deg), mut hits), query) in group
                 .topk_slots
                 .into_iter()
                 .zip(results)
                 .zip(group.topk_qs)
             {
+                marks.mark_kernel(kstart, kend);
                 hits.truncate(k);
                 let resp = ServeResponse::RecallTopK { hits };
                 let resp = if deg {
@@ -369,7 +498,15 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                     }
                     resp
                 };
-                latencies.push((store_id, RequestKind::RecallTopK, enqueued.elapsed()));
+                account(
+                    &mut latencies,
+                    ctx.trace,
+                    store_id,
+                    RequestKind::RecallTopK,
+                    &marks,
+                    deg,
+                    false,
+                );
                 fills.push((slot, Ok(resp)));
             }
         }
@@ -380,7 +517,9 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                 .expect("factorize tickets imply their store has a resonator");
             let (estimates, rscratch) = scratch.bufs(store_id, res);
             let decode_before = *rscratch.prune_stats();
+            let kstart = Instant::now();
             let results = res.factorize_batch_with(&group.fact_scenes, estimates, rscratch);
+            let kend = Instant::now();
             // attribute this batch's pruned per-factor index decodes to
             // the store's telemetry (the scratch accumulates across
             // batches; real decodes count f32 elements where the binary
@@ -388,8 +527,34 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
             // units per scan)
             work.prune
                 .merge(&rscratch.prune_stats().delta_since(&decode_before));
-            for ((slot, enqueued), r) in group.fact_slots.into_iter().zip(results) {
-                latencies.push((store_id, RequestKind::Factorize, enqueued.elapsed()));
+            // Modelled roofline inputs for the resonator sweeps: per
+            // converged iteration each factor's codebook (len × dim f32
+            // elements) is streamed for the projection and again for the
+            // reconstruction, ≈ 2 MACs per element each pass.
+            let total_iters: u64 = results.iter().map(|r| r.iterations as u64).sum();
+            let shape: u64 = res
+                .codebooks()
+                .iter()
+                .map(|c| (c.len() * c.dim()) as u64)
+                .sum();
+            work.measured[RequestKind::Factorize.index()].merge(&KernelWork {
+                calls: 1,
+                elapsed_s: kend.saturating_duration_since(kstart).as_secs_f64(),
+                flops: total_iters * 4 * shape,
+                bytes_read: total_iters * 8 * shape,
+                bytes_written: (results.len() as u64) * res.n_factors() as u64 * 8,
+            });
+            for ((slot, mut marks), r) in group.fact_slots.into_iter().zip(results) {
+                marks.mark_kernel(kstart, kend);
+                account(
+                    &mut latencies,
+                    ctx.trace,
+                    store_id,
+                    RequestKind::Factorize,
+                    &marks,
+                    false,
+                    false,
+                );
                 fills.push((
                     slot,
                     Ok(ServeResponse::Factorize {
@@ -461,6 +626,7 @@ mod tests {
                 slot: slot.clone(),
                 enqueued: now,
                 deadline: now + deadline,
+                marks: StageMarks::new(now),
             },
             slot,
         )
@@ -863,6 +1029,8 @@ mod tests {
             stats: &stats,
             scan_threads: 1,
             queue: Some(&q),
+            degrade: None,
+            trace: None,
             faults: None,
         };
         execute(vec![t_topk, t_fact], &ctx, &mut scratch);
@@ -902,6 +1070,99 @@ mod tests {
     }
 
     #[test]
+    fn trace_ring_records_stage_decomposed_events() {
+        let (_, registry) = single_registry(61);
+        let stats = stats_for(&registry);
+        let mut scratch = WorkerScratch::new();
+        let ring = TraceRing::new(8);
+        let mut rng = Rng::new(62);
+        let q1 = BinaryHV::random(&mut rng, 512);
+        let q2 = BinaryHV::random(&mut rng, 512);
+        let (t1, s1) = ticket(ServeRequest::recall(q1), Duration::from_secs(5));
+        let (t2, s2) = ticket(ServeRequest::recall_topk(q2, 3), Duration::from_secs(5));
+        let mut ctx = ExecCtx::plain(&registry, &stats, 1);
+        ctx.trace = Some(&ring);
+        execute(vec![t1, t2], &ctx, &mut scratch);
+        assert!(s1.wait().is_ok());
+        assert!(s2.wait().is_ok());
+        let (events, dropped) = ring.snapshot();
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 2, "one event per completed response");
+        for e in &events {
+            assert!(!e.cache_hit);
+            assert!(!e.degraded);
+            assert!(e.stages.kernel_s > 0.0, "kernel bracket stamped");
+            assert!(e.stages.sum() <= e.total_s + 1e-9, "stage sums bounded by e2e");
+        }
+        // the measured kernel work behind those events surfaces per class
+        let snap = stats.snapshot();
+        assert_eq!(snap.kernel_work[RequestKind::Recall.index()].calls, 1);
+        assert_eq!(snap.kernel_work[RequestKind::RecallTopK.index()].calls, 1);
+        assert!(snap.kernel_work[RequestKind::Recall.index()].flops > 0);
+        assert!(snap.stores[0].kernel_work[RequestKind::Recall.index()].bytes_read > 0);
+    }
+
+    #[test]
+    fn persistent_hysteresis_holds_degraded_until_lane_drains() {
+        let mut rng = Rng::new(71);
+        let cb = BinaryCodebook::random(&mut rng, 24, 512);
+        let registry = StoreRegistry::single(
+            &cb,
+            None,
+            StoreSpec {
+                shards: 2,
+                cache_capacity: 0,
+                degrade_depth: Some(4), // exit defaults to 2
+                degrade_k: 1,
+                ..StoreSpec::default()
+            },
+        );
+        let stats = stats_for(&registry);
+        let mut scratch = WorkerScratch::new();
+        let bits = [AtomicBool::new(false)];
+        let q = AdmissionQueue::with_lanes(16, &[LaneSpec { weight: 1, quota: 16 }]);
+        for i in 0..4 {
+            let (t, _s) = ticket(
+                ServeRequest::recall_topk(BinaryHV::zeros(512), i + 1),
+                Duration::from_secs(5),
+            );
+            q.push(t).unwrap();
+        }
+        let ctx = ExecCtx {
+            registry: &registry,
+            stats: &stats,
+            scan_threads: 1,
+            queue: Some(&q),
+            degrade: Some(&bits),
+            trace: None,
+            faults: None,
+        };
+        let query = BinaryHV::random(&mut rng, 512);
+        let mut served_degraded = |ctx: &ExecCtx<'_>, scratch: &mut WorkerScratch| {
+            let (t, s) = ticket(
+                ServeRequest::recall_topk(query.clone(), 3),
+                Duration::from_secs(5),
+            );
+            execute(vec![t], ctx, scratch);
+            matches!(s.wait(), Ok(ServeResponse::Degraded { .. }))
+        };
+        // depth 4 hits the enter threshold: degraded mode engages
+        assert!(served_degraded(&ctx, &mut scratch));
+        assert!(bits[0].load(Ordering::Relaxed));
+        // drain to depth 3 — below enter but above exit. The stateless
+        // probe would restore full service here; the persistent bit
+        // holds degraded until the backlog really drains.
+        q.pop_until(Instant::now()).unwrap();
+        assert!(served_degraded(&ctx, &mut scratch));
+        assert!(bits[0].load(Ordering::Relaxed));
+        // drain below exit (depth 1 < 2): full service resumes
+        q.pop_until(Instant::now()).unwrap();
+        q.pop_until(Instant::now()).unwrap();
+        assert!(!served_degraded(&ctx, &mut scratch));
+        assert!(!bits[0].load(Ordering::Relaxed));
+    }
+
+    #[test]
     fn injected_kernel_delay_slows_but_does_not_change_answers() {
         let (cb, registry) = single_registry(33);
         let cm = CleanupMemory::new(cb);
@@ -921,6 +1182,8 @@ mod tests {
             stats: &stats,
             scan_threads: 1,
             queue: None,
+            degrade: None,
+            trace: None,
             faults: Some(&plan),
         };
         let t0 = Instant::now();

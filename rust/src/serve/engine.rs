@@ -28,9 +28,11 @@ use super::faults::{FaultConfig, FaultPlan};
 use super::queue::{AdmissionQueue, LaneSpec, Priority, ResponseSlot, Ticket};
 use super::registry::{StoreId, StoreRegistry, StoreSpec};
 use super::stats::{ServeStats, StatsSnapshot};
+use super::trace::{StageMarks, TraceEvent, TraceRing};
 use super::{ServeError, ServeRequest, ServeResponse};
 use crate::vsa::{BinaryCodebook, Resonator};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -69,6 +71,11 @@ pub struct EngineConfig {
     /// Fault-injection plan applied at the engine's injection points;
     /// `None` (the default) injects nothing. `--faults`.
     pub faults: Option<FaultConfig>,
+    /// Capacity of the trace-event ring buffer (drop-oldest on
+    /// overflow); `None` (the default) disables event tracing — the
+    /// always-on stage-latency decomposition in [`StatsSnapshot`] is
+    /// unaffected. `--trace` / `--trace-capacity` / `NSCOG_TRACE`.
+    pub trace_capacity: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -86,6 +93,7 @@ impl Default for EngineConfig {
             cache_capacity: cache.capacity,
             cache_shards: cache.shards,
             faults: None,
+            trace_capacity: None,
         }
     }
 }
@@ -97,6 +105,11 @@ struct Shared {
     policy: BatchPolicy,
     scan_threads: usize,
     faults: Option<FaultPlan>,
+    /// Trace-event ring, when `EngineConfig::trace_capacity` asked for one.
+    trace: Option<TraceRing>,
+    /// Persistent per-store degraded-mode bits (indexed by
+    /// [`StoreId::index`]) driving the batcher's hysteresis probe.
+    degrade: Vec<AtomicBool>,
 }
 
 /// Handle to an in-flight asynchronous submission.
@@ -199,6 +212,7 @@ impl ServeEngine {
                 quota: s.spec().quota.unwrap_or(cfg.queue_capacity),
             })
             .collect();
+        let degrade = (0..lanes.len()).map(|_| AtomicBool::new(false)).collect();
         let shared = Arc::new(Shared {
             queue: AdmissionQueue::with_lanes(cfg.queue_capacity, &lanes),
             registry,
@@ -209,6 +223,8 @@ impl ServeEngine {
             },
             scan_threads: cfg.scan_threads.max(1),
             faults: cfg.faults.map(FaultPlan::new),
+            trace: cfg.trace_capacity.map(TraceRing::new),
+            degrade,
         });
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
@@ -300,6 +316,7 @@ impl ServeEngine {
             slot: slot.clone(),
             enqueued: now,
             deadline: now + deadline,
+            marks: StageMarks::new(now),
         };
         match self.shared.queue.push(ticket) {
             Ok(()) => Ok(PendingResponse {
@@ -319,7 +336,8 @@ impl ServeEngine {
     }
 
     /// Metrics snapshot, including per-store response-cache counters for
-    /// every store that runs one (and their engine-wide sum).
+    /// every store that runs one (and their engine-wide sum), plus the
+    /// live queue-depth and per-lane deficit gauges.
     pub fn stats(&self) -> StatsSnapshot {
         let mut snap = self.shared.stats.snapshot();
         let mut total = super::cache::CacheCounters::default();
@@ -332,7 +350,22 @@ impl ServeEngine {
             }
         }
         snap.cache = any_cache.then_some(total);
+        let (depth, lanes) = self.shared.queue.gauges();
+        snap.queue_depth = depth;
+        snap.lanes = lanes;
         snap
+    }
+
+    /// The trace ring's current contents (oldest first) and its exact
+    /// dropped-events count; `None` when the engine was started without
+    /// [`EngineConfig::trace_capacity`].
+    pub fn trace_snapshot(&self) -> Option<(Vec<TraceEvent>, u64)> {
+        self.shared.trace.as_ref().map(|r| r.snapshot())
+    }
+
+    /// Configured trace-ring capacity, when tracing is on.
+    pub fn trace_capacity(&self) -> Option<usize> {
+        self.shared.trace.as_ref().map(|r| r.capacity())
     }
 
     /// Stop admissions, drain already-admitted tickets, join workers.
@@ -368,6 +401,8 @@ fn worker_loop(sh: &Shared) {
             stats: &sh.stats,
             scan_threads: sh.scan_threads,
             queue: Some(&sh.queue),
+            degrade: Some(&sh.degrade),
+            trace: sh.trace.as_ref(),
             faults: sh.faults.as_ref(),
         };
         let outcome = catch_unwind(AssertUnwindSafe(|| {
@@ -521,6 +556,42 @@ mod tests {
         };
         let (index, cosine) = cm.recall(&q);
         assert_eq!(outcome, Ok(ServeResponse::Recall { index, cosine }));
+        eng.shutdown();
+    }
+
+    #[test]
+    fn traced_engine_records_events_and_layers_gauges() {
+        let (eng, _) = engine(
+            EngineConfig {
+                trace_capacity: Some(64),
+                ..EngineConfig::default()
+            },
+            25,
+        );
+        assert_eq!(eng.trace_capacity(), Some(64));
+        let mut rng = Rng::new(26);
+        for _ in 0..6 {
+            let q = BinaryHV::random(&mut rng, 1024);
+            eng.submit(ServeRequest::recall(q)).unwrap();
+        }
+        let (events, dropped) = eng.trace_snapshot().expect("tracing is on");
+        assert_eq!(dropped, 0, "capacity 64 holds 6 events");
+        assert_eq!(events.len(), 6, "one trace event per completed response");
+        for e in &events {
+            // engine-path tickets carry the full lifecycle: queue wait,
+            // batch wait, kernel bracket, fill — all bounded by e2e
+            assert!(e.stages.queue_s > 0.0, "pop mark stamped by the queue");
+            assert!(e.stages.sum() <= e.total_s + 1e-9);
+        }
+        let snap = eng.stats();
+        assert_eq!(snap.lanes.len(), 1, "one gauge per store lane");
+        assert_eq!(snap.queue_depth, 0, "drained after blocking submits");
+        let stage_n: u64 = snap.stages.iter().map(|s| s.n).sum();
+        assert_eq!(stage_n, 6, "stage breakdowns saw every response");
+        // an untraced engine answers None but still decomposes stages
+        let (untraced, _) = engine(EngineConfig::default(), 27);
+        assert!(untraced.trace_snapshot().is_none());
+        untraced.shutdown();
         eng.shutdown();
     }
 

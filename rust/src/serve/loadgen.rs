@@ -29,18 +29,36 @@
 //! fairness invariant (a misbehaving tenant's damage stays tenant-local)
 //! and a liveness invariant (the engine still answers correctly once the
 //! chaos stops), reported in the JSON's `"chaos"` block.
+//!
+//! With `--trace` the clean engine also runs its per-request stage
+//! tracer: the final ring-buffer dump, the per-class stage-latency
+//! decompositions, and the measured-roofline placement of each request
+//! class (live FLOP/byte counters from [`super::trace::KernelWork`]
+//! against the calibrated [`Platform::host`] roofline, next to the
+//! analytical [`crate::profiler::roofline::place`] point for the same
+//! op shape) are written to `BENCH_serve_trace.json` (path override:
+//! `--trace-json`, then `NSCOG_SERVE_TRACE_JSON`).
 
 use super::engine::{EngineConfig, PendingResponse, ServeEngine};
 use super::faults::FaultConfig;
-use super::queue::Priority;
+use super::queue::{LaneGauge, Priority};
 use super::registry::{StoreId, StoreRegistry, StoreSpec};
-use super::stats::{LatencySummary, StatsSnapshot};
-use super::{RequestOp, ServeError, ServeRequest, ServeResponse};
+use super::stats::{LatencySummary, StageSummary, StatsSnapshot};
+use super::trace::{KernelWork, TraceEvent};
+use super::{RequestKind, RequestOp, ServeError, ServeRequest, ServeResponse};
+use crate::platform::Platform;
+use crate::profiler::roofline::{self, RooflinePoint};
+use crate::profiler::taxonomy::{OpCategory, PhaseKind};
+use crate::profiler::trace::Trace;
 use crate::util::bench::Table;
 use crate::util::Rng;
 use crate::vsa::{BinaryCodebook, CleanupMemory, RealCodebook, Resonator};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
+
+/// Default trace-ring capacity (events) when `--trace` is on and no
+/// `--trace-capacity` is given.
+pub const DEFAULT_TRACE_CAPACITY: usize = 4096;
 
 /// Relative request-class weights.
 #[derive(Debug, Clone, Copy)]
@@ -520,6 +538,15 @@ pub struct BenchOpts {
     /// Chaos scenario to run after the clean passes, on its own engine.
     pub chaos: Option<ChaosScenario>,
     pub json_path: Option<String>,
+    /// Run the clean engine with the per-request stage tracer on
+    /// (`--trace` / `NSCOG_TRACE=1`) and emit `BENCH_serve_trace.json`.
+    pub trace: bool,
+    /// Trace-ring capacity in events (`--trace-capacity`); beyond it the
+    /// ring drops oldest and counts the drops.
+    pub trace_capacity: usize,
+    /// Trace JSON path override (`--trace-json`); then
+    /// `NSCOG_SERVE_TRACE_JSON`, then `BENCH_serve_trace.json`.
+    pub trace_json_path: Option<String>,
 }
 
 impl BenchOpts {
@@ -565,6 +592,9 @@ impl BenchOpts {
             open_loop_qps: None,
             chaos: None,
             json_path: None,
+            trace: false,
+            trace_capacity: DEFAULT_TRACE_CAPACITY,
+            trace_json_path: None,
         }
     }
 
@@ -601,6 +631,9 @@ impl BenchOpts {
             open_loop_qps: None,
             chaos: None,
             json_path: None,
+            trace: false,
+            trace_capacity: DEFAULT_TRACE_CAPACITY,
+            trace_json_path: None,
         }
     }
 
@@ -1028,6 +1061,18 @@ impl PassSummary {
     }
 }
 
+/// The trace ring's final dump: everything still buffered when the
+/// clean passes finished, plus the drop ledger.
+#[derive(Debug, Clone)]
+pub struct TraceLog {
+    /// Ring capacity the engine ran with.
+    pub capacity: usize,
+    /// Buffered events, oldest first.
+    pub events: Vec<TraceEvent>,
+    /// Events overwritten by drop-oldest before the dump.
+    pub dropped: u64,
+}
+
 /// Full serve-bench result.
 #[derive(Debug, Clone)]
 pub struct BenchReport {
@@ -1039,6 +1084,119 @@ pub struct BenchReport {
     pub stats: StatsSnapshot,
     /// Chaos scenario verdict, when one ran (`--chaos`).
     pub chaos: Option<ChaosReport>,
+    /// Ring-buffer dump from the clean engine, when `--trace` ran.
+    pub trace: Option<TraceLog>,
+}
+
+fn lat_json(l: &Option<LatencySummary>) -> String {
+    match l {
+        Some(s) => format!(
+            "{{\"n\": {}, \"mean_s\": {:e}, \"p50_s\": {:e}, \"p99_s\": {:e}, \"max_s\": {:e}}}",
+            s.n, s.mean_s, s.p50_s, s.p99_s, s.max_s
+        ),
+        None => "null".into(),
+    }
+}
+
+/// One per-class stage-latency decomposition block.
+fn stage_json(s: &StageSummary) -> String {
+    format!(
+        "{{\"kind\": \"{}\", \"n\": {}, \"queue\": {}, \"batch\": {}, \"kernel\": {}, \"fill\": {}, \"total\": {}, \"stage_mean_sum_s\": {:e}}}",
+        s.kind.label(),
+        s.n,
+        lat_json(&s.queue),
+        lat_json(&s.batch),
+        lat_json(&s.kernel),
+        lat_json(&s.fill),
+        lat_json(&s.total),
+        s.stage_mean_sum_s()
+    )
+}
+
+fn stages_json(stages: &[StageSummary]) -> String {
+    let body: Vec<String> = stages.iter().map(stage_json).collect();
+    format!("[{}]", body.join(", "))
+}
+
+/// Queue gauges: global depth plus one block per store lane.
+fn queue_json(depth: usize, lanes: &[LaneGauge]) -> String {
+    let body: Vec<String> = lanes
+        .iter()
+        .map(|l| {
+            format!(
+                "{{\"store\": {}, \"len\": {}, \"high\": {}, \"deficit\": {}, \"weight\": {}, \"quota\": {}}}",
+                l.store.index(),
+                l.len,
+                l.high,
+                l.deficit,
+                l.weight,
+                l.quota
+            )
+        })
+        .collect();
+    format!("{{\"depth\": {}, \"lanes\": [{}]}}", depth, body.join(", "))
+}
+
+fn roofline_point_json(p: &RooflinePoint) -> String {
+    format!(
+        "{{\"intensity\": {:e}, \"attained_flops\": {:e}, \"memory_bound\": {}}}",
+        p.intensity, p.attained_flops, p.memory_bound
+    )
+}
+
+/// One request class's roofline block: the raw measured counters, the
+/// live placement ([`roofline::place_measured`]), and the analytical
+/// placement of the same op shape ([`roofline::place`]) on the same
+/// host roofline. Classes with no kernel calls carry `null` verdicts.
+fn class_roofline_json(kind: RequestKind, w: &KernelWork, host: &Platform) -> String {
+    let (workload, op) = match kind {
+        RequestKind::Recall => ("serve:recall", "cleanup_scan"),
+        RequestKind::RecallTopK => ("serve:recall_topk", "cleanup_scan_topk"),
+        RequestKind::Factorize => ("serve:factorize", "resonator_iters"),
+    };
+    let (measured, modelled) = if w.calls == 0 {
+        ("null".to_string(), "null".to_string())
+    } else {
+        let m = roofline::place_measured(
+            workload,
+            PhaseKind::Symbolic,
+            w.flops,
+            w.bytes(),
+            w.elapsed_s,
+            host,
+        );
+        let tr = Trace::single(
+            workload,
+            op,
+            OpCategory::VectorElem,
+            PhaseKind::Symbolic,
+            w.flops,
+            w.bytes_read,
+            w.bytes_written,
+        );
+        let a = roofline::place(&tr, PhaseKind::Symbolic, host);
+        (roofline_point_json(&m), roofline_point_json(&a))
+    };
+    format!(
+        "{{\"kind\": \"{}\", \"calls\": {}, \"kernel_elapsed_s\": {:e}, \"flops\": {}, \"bytes_read\": {}, \"bytes_written\": {}, \"intensity\": {:e}, \"measured\": {}, \"modelled\": {}}}",
+        kind.label(),
+        w.calls,
+        w.elapsed_s,
+        w.flops,
+        w.bytes_read,
+        w.bytes_written,
+        w.intensity(),
+        measured,
+        modelled
+    )
+}
+
+fn roofline_json(work: &[KernelWork; 3], host: &Platform) -> String {
+    let body: Vec<String> = RequestKind::ALL
+        .iter()
+        .map(|&k| class_roofline_json(k, &work[k.index()], host))
+        .collect();
+    format!("[{}]", body.join(", "))
 }
 
 impl BenchReport {
@@ -1091,13 +1249,7 @@ impl BenchReport {
 
     /// Machine-readable JSON (hand-rolled like `BENCH_hotpath.json`).
     pub fn to_json(&self) -> String {
-        let lat = |l: &Option<LatencySummary>| match l {
-            Some(s) => format!(
-                "{{\"n\": {}, \"mean_s\": {:e}, \"p50_s\": {:e}, \"p99_s\": {:e}, \"max_s\": {:e}}}",
-                s.n, s.mean_s, s.p50_s, s.p99_s, s.max_s
-            ),
-            None => "null".into(),
-        };
+        let lat = lat_json;
         let pass = |p: &PassSummary| {
             format!(
                 "{{\"qps\": {:.3}, \"latency\": {}, \"ok\": {}, \"rejected\": {}, \"rejected_tenant\": {}, \"expired\": {}, \"internal\": {}, \"degraded\": {}, \"mismatches\": {}}}",
@@ -1210,6 +1362,14 @@ impl BenchReport {
         out.push_str(&format!("  \"shards\": {},\n", shards_json(&self.stats.shards)));
         out.push_str(&format!("  \"prune\": {},\n", prune_json(&self.stats.prune)));
         out.push_str(&format!("  \"cache\": {},\n", cache_json(&self.stats.cache)));
+        // engine-wide per-class stage-latency decomposition (PR 7):
+        // p99 = queue-wait + batch-wait + kernel + fill, first-class
+        out.push_str(&format!("  \"stages\": {},\n", stages_json(&self.stats.stages)));
+        // end-of-run queue gauges: global depth + per-lane DRR state
+        out.push_str(&format!(
+            "  \"queue\": {},\n",
+            queue_json(self.stats.queue_depth, &self.stats.lanes)
+        ));
         // chaos verdict (separate engine; see module docs) — null unless
         // --chaos ran
         match &self.chaos {
@@ -1289,6 +1449,88 @@ impl BenchReport {
         std::fs::write(&path, self.to_json())?;
         Ok(path)
     }
+
+    /// `BENCH_serve_trace.json`: ring dump, per-class stage-latency
+    /// decompositions (engine-wide and per store), queue gauges, and the
+    /// measured-roofline placement of each request class against the
+    /// calibrated host platform. `None` unless the run traced.
+    pub fn trace_json(&self) -> Option<String> {
+        let log = self.trace.as_ref()?;
+        let host = Platform::host();
+        let f = &self.opts.fixture;
+        let simd_tier = crate::vsa::kernels::active_tier().name();
+        let mut out = String::from("{\n  \"bench\": \"serve_trace\",\n");
+        out.push_str(&format!("  \"simd\": \"{simd_tier}\",\n"));
+        out.push_str(&format!("  \"store_count\": {},\n", f.stores.len()));
+        out.push_str(&format!("  \"requests\": {},\n", f.requests));
+        out.push_str(&format!(
+            "  \"ring\": {{\"capacity\": {}, \"events_recorded\": {}, \"events_dropped\": {}}},\n",
+            log.capacity,
+            log.events.len(),
+            log.dropped
+        ));
+        out.push_str(&format!(
+            "  \"platform\": {{\"name\": \"{}\", \"peak_flops\": {:e}, \"dram_bw\": {:e}, \"ridge_intensity\": {:e}}},\n",
+            host.name,
+            host.peak_flops,
+            host.dram_bw,
+            roofline::ridge_intensity(&host)
+        ));
+        out.push_str(&format!("  \"stages\": {},\n", stages_json(&self.stats.stages)));
+        out.push_str(&format!(
+            "  \"roofline\": {},\n",
+            roofline_json(&self.stats.kernel_work, &host)
+        ));
+        out.push_str(&format!(
+            "  \"queue\": {},\n",
+            queue_json(self.stats.queue_depth, &self.stats.lanes)
+        ));
+        out.push_str("  \"stores\": [\n");
+        for (i, section) in self.stats.stores.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"id\": {}, \"name\": \"{}\", \"stages\": {}, \"roofline\": {}}}{}\n",
+                section.id.index(),
+                section.name,
+                stages_json(&section.stages),
+                roofline_json(&section.kernel_work, &host),
+                if i + 1 < self.stats.stores.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ],\n  \"events\": [\n");
+        for (i, ev) in log.events.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"seq\": {}, \"store\": {}, \"kind\": \"{}\", \"queue_s\": {:e}, \"batch_s\": {:e}, \"kernel_s\": {:e}, \"fill_s\": {:e}, \"total_s\": {:e}, \"degraded\": {}, \"cache_hit\": {}}}{}\n",
+                ev.seq,
+                ev.store.index(),
+                ev.kind.label(),
+                ev.stages.queue_s,
+                ev.stages.batch_s,
+                ev.stages.kernel_s,
+                ev.stages.fill_s,
+                ev.total_s,
+                ev.degraded,
+                ev.cache_hit,
+                if i + 1 < log.events.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        Some(out)
+    }
+
+    /// Write the trace JSON, if this run traced. Precedence: explicit
+    /// `--trace-json` flag, then `NSCOG_SERVE_TRACE_JSON`, then
+    /// `BENCH_serve_trace.json`. Returns the written path.
+    pub fn write_trace_json(&self) -> std::io::Result<Option<String>> {
+        let Some(json) = self.trace_json() else {
+            return Ok(None);
+        };
+        let path = self.opts.trace_json_path.clone().unwrap_or_else(|| {
+            std::env::var("NSCOG_SERVE_TRACE_JSON")
+                .unwrap_or_else(|_| "BENCH_serve_trace.json".into())
+        });
+        std::fs::write(&path, json)?;
+        Ok(Some(path))
+    }
 }
 
 /// Run the full serve benchmark: baseline, closed loop, optional open
@@ -1303,7 +1545,11 @@ pub fn run_bench(opts: BenchOpts) -> BenchReport {
     } else {
         0.0
     };
-    let engine = ServeEngine::start_registry(fixture.registry(&opts.engine), opts.engine.clone())
+    let mut ecfg = opts.engine.clone();
+    if opts.trace {
+        ecfg.trace_capacity = Some(opts.trace_capacity.max(1));
+    }
+    let engine = ServeEngine::start_registry(fixture.registry(&ecfg), ecfg)
         .expect("spawn serve workers");
     let closed = run_closed_loop(&engine, &fixture, opts.clients, &oracle);
     let open = opts.open_loop_qps.map(|rate| {
@@ -1313,6 +1559,11 @@ pub fn run_bench(opts: BenchOpts) -> BenchReport {
         )
     });
     let stats = engine.stats();
+    let trace = engine.trace_snapshot().map(|(events, dropped)| TraceLog {
+        capacity: engine.trace_capacity().unwrap_or(0),
+        events,
+        dropped,
+    });
     engine.shutdown();
     // chaos runs last, on its own engine, so the clean numbers above are
     // already banked when the failure injection starts
@@ -1324,6 +1575,7 @@ pub fn run_bench(opts: BenchOpts) -> BenchReport {
         open,
         stats,
         chaos,
+        trace,
         opts,
     }
 }
@@ -1540,8 +1792,124 @@ mod tests {
         // no chaos requested: the key must still be present, and null
         let chaos = parsed.get("chaos").expect("chaos key always emitted");
         assert!(chaos.as_arr().is_none() && chaos.as_f64().is_none() && chaos.as_str().is_none());
+        // stage decomposition and end-of-run queue gauges (PR 7)
+        let stage_blocks = parsed
+            .get("stages")
+            .and_then(|s| s.as_arr())
+            .expect("per-class stage decomposition present");
+        assert_eq!(stage_blocks.len(), 3, "one stage block per request class");
+        let queue = parsed.get("queue").expect("queue gauges present");
+        assert_eq!(
+            queue.get("depth").and_then(|d| d.as_f64()),
+            Some(0.0),
+            "queue drained by end of a clean run"
+        );
+        assert_eq!(
+            queue.get("lanes").and_then(|l| l.as_arr()).map(|l| l.len()),
+            Some(2),
+            "one lane gauge per registered store"
+        );
+        // untraced run: no ring dump and no trace JSON
+        assert!(report.trace.is_none() && report.trace_json().is_none());
         // table renders without panicking
         let _ = report.table().to_string();
+    }
+
+    #[test]
+    fn traced_bench_emits_parseable_trace_json_with_exact_drop_ledger() {
+        let mut opts = BenchOpts::smoke();
+        opts.fixture.requests = 60;
+        opts.fixture.stores[0].dim = 512;
+        opts.fixture.stores[0].items = 24;
+        opts.clients = 4;
+        opts.trace = true;
+        opts.trace_capacity = 32; // < requests: the ring must wrap
+        let report = run_bench(opts);
+        assert_eq!(report.closed.mismatches, 0);
+        let log = report.trace.as_ref().expect("--trace run keeps the ring dump");
+        assert_eq!(log.capacity, 32);
+        assert_eq!(log.events.len(), 32, "wrapped ring holds exactly its capacity");
+        assert_eq!(
+            log.events.len() + log.dropped as usize,
+            report.closed.ok,
+            "every completed response traced once; overflow drops counted exactly"
+        );
+        let seqs: Vec<u64> = log.events.iter().map(|e| e.seq).collect();
+        assert!(
+            seqs.windows(2).all(|w| w[0] < w[1]),
+            "dump is oldest-first after drop-oldest: {seqs:?}"
+        );
+        for ev in &log.events {
+            let s = &ev.stages;
+            assert!(
+                s.queue_s >= 0.0 && s.batch_s >= 0.0 && s.kernel_s >= 0.0 && s.fill_s >= 0.0,
+                "stage spans are non-negative: {s:?}"
+            );
+            assert!(
+                s.sum() <= ev.total_s + 1e-9,
+                "stage decomposition exceeds e2e latency: {s:?} vs {}",
+                ev.total_s
+            );
+        }
+        let json = report.trace_json().expect("trace JSON emitted");
+        let parsed = crate::util::json::Json::parse(&json).expect("invalid trace JSON emitted");
+        assert_eq!(
+            parsed.get("bench").and_then(|b| b.as_str()),
+            Some("serve_trace")
+        );
+        let ring = parsed.get("ring").expect("ring ledger present");
+        assert_eq!(
+            ring.get("events_dropped").and_then(|d| d.as_f64()),
+            Some(log.dropped as f64)
+        );
+        assert_eq!(
+            parsed.get("events").and_then(|e| e.as_arr()).map(|e| e.len()),
+            Some(32)
+        );
+        // roofline bridge: recall dominates the smoke mix, so its class
+        // must carry a live memory-/compute-bound verdict
+        let roofline = parsed
+            .get("roofline")
+            .and_then(|r| r.as_arr())
+            .expect("roofline blocks");
+        assert_eq!(roofline.len(), 3, "one roofline block per request class");
+        let recall = roofline
+            .iter()
+            .find(|b| b.get("kind").and_then(|k| k.as_str()) == Some("recall"))
+            .expect("recall roofline block");
+        assert!(
+            recall.get("calls").and_then(|c| c.as_f64()) > Some(0.0),
+            "recall class saw kernel calls"
+        );
+        let verdict = recall
+            .get("measured")
+            .and_then(|m| m.get("memory_bound"))
+            .expect("trafficked class carries a measured bound verdict");
+        // binary cleanup scans stream 3 ops per 8 bytes: far left of any
+        // CPU ridge, so the live verdict must say memory-bound
+        assert_eq!(verdict, &crate::util::json::Json::Bool(true));
+        // per class: sum of stage means reconciles with the e2e mean
+        for st in parsed.get("stages").and_then(|s| s.as_arr()).unwrap() {
+            let n = st.get("n").and_then(|n| n.as_f64()).unwrap();
+            if n == 0.0 {
+                continue;
+            }
+            let sum = st.get("stage_mean_sum_s").and_then(|x| x.as_f64()).unwrap();
+            let total = st
+                .get("total")
+                .and_then(|t| t.get("mean_s"))
+                .and_then(|x| x.as_f64())
+                .unwrap();
+            assert!(
+                sum <= total * 1.01 + 1e-9,
+                "stage means over-attribute: {sum} > {total}"
+            );
+        }
+        // per-store blocks mirror the engine-wide shape
+        let stores = parsed.get("stores").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(stores.len(), 1);
+        assert!(stores[0].get("stages").and_then(|s| s.as_arr()).is_some());
+        assert!(stores[0].get("roofline").and_then(|r| r.as_arr()).is_some());
     }
 
     fn chaos_fixture(stores: usize) -> BenchOpts {

@@ -33,7 +33,12 @@
 //!   [`engine::ServeEngine::submit`] client API (plus the non-blocking
 //!   [`engine::PendingResponse::try_wait`] poll).
 //! - [`stats`]: per-store, per-shard, per-batch, and per-class latency /
-//!   throughput / batch-occupancy metrics.
+//!   throughput / batch-occupancy metrics, including the always-on
+//!   per-stage (queue/batch/kernel/fill) P² latency decomposition.
+//! - [`trace`]: per-request lifecycle stage marks carried on the ticket
+//!   and an optional fixed-capacity drop-oldest ring buffer of trace
+//!   events (`serve-bench --trace` → `BENCH_serve_trace.json`), plus the
+//!   measured FLOPs/bytes accounting behind the live roofline bridge.
 //! - [`cache`]: bounded, sharded per-store response caches probed at
 //!   batch-formation time — repeated queries bypass the kernels entirely,
 //!   with exact (full-equality-verified) keys over query × class × k ×
@@ -61,14 +66,16 @@ pub mod queue;
 pub mod registry;
 pub mod shard;
 pub mod stats;
+pub mod trace;
 
 pub use cache::{CacheConfig, CacheCounters, ResponseCache};
 pub use engine::{EngineConfig, PendingResponse, ServeEngine};
 pub use faults::{FaultConfig, FaultPlan};
-pub use queue::Priority;
-pub use registry::{Store, StoreId, StoreRegistry, StoreSpec};
+pub use queue::{LaneGauge, Priority};
+pub use registry::{Hysteresis, Store, StoreId, StoreRegistry, StoreSpec};
 pub use shard::{ShardedBinaryCodebook, ShardedCleanup, ShardedRealCodebook};
-pub use stats::{LatencySummary, StatsSnapshot, StoreSnapshot};
+pub use stats::{LatencySummary, StageSummary, StatsSnapshot, StoreSnapshot};
+pub use trace::{KernelWork, StageMarks, StageSample, TraceEvent, TraceRing};
 
 use crate::vsa::{BinaryHV, RealHV};
 use std::fmt;
@@ -152,11 +159,26 @@ pub enum RequestKind {
 }
 
 impl RequestKind {
+    /// Every class, in [`RequestKind::index`] order — the canonical
+    /// iteration order for per-class arrays in stats and trace reports.
+    pub const ALL: [RequestKind; 3] =
+        [RequestKind::Recall, RequestKind::RecallTopK, RequestKind::Factorize];
+
     pub fn label(&self) -> &'static str {
         match self {
             RequestKind::Recall => "recall",
             RequestKind::RecallTopK => "recall_topk",
             RequestKind::Factorize => "factorize",
+        }
+    }
+
+    /// Dense index into per-class arrays (`[T; 3]`), matching
+    /// [`RequestKind::ALL`].
+    pub fn index(&self) -> usize {
+        match self {
+            RequestKind::Recall => 0,
+            RequestKind::RecallTopK => 1,
+            RequestKind::Factorize => 2,
         }
     }
 }

@@ -24,6 +24,7 @@
 //! into every client.
 
 use super::registry::StoreId;
+use super::trace::StageMarks;
 use super::{ServeError, ServeRequest, ServeResponse};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -148,6 +149,9 @@ pub struct Ticket {
     pub enqueued: Instant,
     /// Absolute deadline; expired tickets are answered, not executed.
     pub deadline: Instant,
+    /// Lifecycle stage marks (`marks.admit == enqueued`); the queue
+    /// stamps `popped` at pop time, the batcher stamps the rest.
+    pub marks: StageMarks,
 }
 
 impl Ticket {
@@ -175,6 +179,21 @@ impl AdmitError {
             AdmitError::Closed => ServeError::ShuttingDown,
         }
     }
+}
+
+/// Point-in-time reading of one store lane's scheduling state, reported
+/// by [`AdmissionQueue::gauges`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneGauge {
+    pub store: StoreId,
+    /// Waiting tickets (both priority levels).
+    pub len: usize,
+    /// Waiting high-priority tickets (subset of `len`).
+    pub high: usize,
+    /// Pops remaining in the lane's current DRR turn.
+    pub deficit: u32,
+    pub weight: u32,
+    pub quota: usize,
 }
 
 /// Scheduling parameters of one store's lane.
@@ -313,6 +332,30 @@ impl AdmissionQueue {
         st.lanes.get(store.index()).map_or(0, |l| l.len())
     }
 
+    /// One consistent reading of the queue's scheduling state: total
+    /// depth plus per-lane depth/deficit gauges (all under one lock, so
+    /// lane lengths sum to the total). Surfaced through
+    /// [`super::stats::StatsSnapshot`] and `BENCH_serve.json` so overload
+    /// incidents are diagnosable from the bench artifact rather than
+    /// only live `lane_len` probes.
+    pub fn gauges(&self) -> (usize, Vec<LaneGauge>) {
+        let st = self.lock();
+        let lanes = st
+            .lanes
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LaneGauge {
+                store: StoreId(i),
+                len: l.len(),
+                high: l.high.len(),
+                deficit: l.deficit,
+                weight: l.weight,
+                quota: l.quota,
+            })
+            .collect();
+        (st.len, lanes)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -368,7 +411,8 @@ impl AdmissionQueue {
     pub fn pop_blocking(&self) -> Option<Ticket> {
         let mut st = self.lock();
         loop {
-            if let Some(t) = st.take() {
+            if let Some(mut t) = st.take() {
+                t.marks.popped = Some(Instant::now());
                 return Some(t);
             }
             if st.closed {
@@ -384,7 +428,8 @@ impl AdmissionQueue {
     pub fn pop_until(&self, until: Instant) -> Option<Ticket> {
         let mut st = self.lock();
         loop {
-            if let Some(t) = st.take() {
+            if let Some(mut t) = st.take() {
+                t.marks.popped = Some(Instant::now());
                 return Some(t);
             }
             if st.closed {
@@ -417,6 +462,7 @@ mod tests {
             slot: ResponseSlot::new(),
             enqueued: now,
             deadline: now + Duration::from_secs(60),
+            marks: StageMarks::new(now),
         }
     }
 
@@ -605,5 +651,54 @@ mod tests {
         assert!(t.expired(now + Duration::from_millis(1)));
         t.deadline = now + Duration::from_secs(1);
         assert!(!t.expired(now));
+    }
+
+    #[test]
+    fn pop_stamps_the_queue_pop_mark() {
+        let q = AdmissionQueue::new(4);
+        let t = ticket(0, Priority::Normal);
+        assert!(t.marks.popped.is_none());
+        q.push(t).unwrap();
+        let popped = q.pop_blocking().unwrap();
+        let mark = popped.marks.popped.expect("pop_blocking stamps popped");
+        assert!(mark >= popped.marks.admit, "pop mark is monotone vs admit");
+        // pop_until stamps too
+        q.push(ticket(1, Priority::Normal)).unwrap();
+        let popped = q
+            .pop_until(Instant::now() + Duration::from_millis(50))
+            .unwrap();
+        assert!(popped.marks.popped.is_some());
+    }
+
+    #[test]
+    fn gauges_report_depth_deficit_and_lane_config() {
+        let q = AdmissionQueue::with_lanes(
+            32,
+            &[
+                LaneSpec { weight: 2, quota: 8 },
+                LaneSpec { weight: 1, quota: 4 },
+            ],
+        );
+        for i in 0..3 {
+            q.push(ticket_on(0, i, Priority::Normal)).unwrap();
+        }
+        q.push(ticket_on(1, 100, Priority::High)).unwrap();
+        let (depth, lanes) = q.gauges();
+        assert_eq!(depth, 4);
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes.iter().map(|l| l.len).sum::<usize>(), depth);
+        assert_eq!(lanes[0].store, StoreId(0));
+        assert_eq!(lanes[0].len, 3);
+        assert_eq!(lanes[0].high, 0);
+        assert_eq!((lanes[0].weight, lanes[0].quota), (2, 8));
+        assert_eq!(lanes[1].len, 1);
+        assert_eq!(lanes[1].high, 1);
+        assert_eq!((lanes[1].weight, lanes[1].quota), (1, 4));
+        // Mid-turn, lane 0 holds unspent deficit: weight 2 replenished,
+        // one pop consumed.
+        let _ = q.pop_blocking().unwrap();
+        let (depth, lanes) = q.gauges();
+        assert_eq!(depth, 3);
+        assert_eq!(lanes[0].deficit, 1);
     }
 }

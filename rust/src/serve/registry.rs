@@ -66,12 +66,21 @@ pub struct StoreSpec {
     /// admitting. `None` = no tenant-local cap (only the global queue
     /// capacity applies, as before multi-tenant isolation).
     pub quota: Option<usize>,
-    /// Degraded-mode trigger: when this store's queue lane holds at least
-    /// this many waiting tickets at batch-formation time, the batcher
-    /// serves the store degraded — top-k capped at `degrade_k`, factorize
-    /// shed with [`super::ServeError::TenantOverloaded`] — until the lane
-    /// drains below the threshold. `None` disables degradation.
+    /// Degraded-mode *enter* threshold: when this store's queue lane
+    /// holds at least this many waiting tickets at batch-formation time,
+    /// the batcher serves the store degraded — top-k capped at
+    /// `degrade_k`, factorize shed with
+    /// [`super::ServeError::TenantOverloaded`]. The store stays degraded
+    /// until the lane drains below the *exit* threshold (`degrade_exit`,
+    /// default `(enter / 2).max(1)`) — hysteresis, so a lane hovering at
+    /// the boundary doesn't flap between degraded and full service.
+    /// `None` disables degradation.
     pub degrade_depth: Option<usize>,
+    /// Degraded-mode *exit* threshold override: the store leaves degraded
+    /// mode when its lane depth drops *below* this value. `None` derives
+    /// `(degrade_depth / 2).max(1)`; values are clamped into
+    /// `1..=degrade_depth`. See [`Hysteresis`].
+    pub degrade_exit: Option<usize>,
     /// Top-k cap while degraded (responses arrive wrapped in
     /// [`super::ServeResponse::Degraded`] so the truncation is explicit).
     pub degrade_k: usize,
@@ -88,6 +97,7 @@ impl Default for StoreSpec {
             weight: 1,
             quota: None,
             degrade_depth: None,
+            degrade_exit: None,
             degrade_k: 1,
         }
     }
@@ -104,6 +114,64 @@ impl StoreSpec {
             cache_capacity: cfg.cache_capacity,
             cache_shards: cfg.cache_shards,
             ..StoreSpec::default()
+        }
+    }
+
+    /// The degraded-mode threshold pair this spec configures, or `None`
+    /// when degradation is disabled.
+    pub fn degrade_hysteresis(&self) -> Option<Hysteresis> {
+        self.degrade_depth.map(|enter| match self.degrade_exit {
+            Some(exit) => Hysteresis::with_exit(enter, exit),
+            None => Hysteresis::new(enter),
+        })
+    }
+}
+
+/// Degraded-mode hysteresis state machine: enter at `depth >= enter`,
+/// leave only once `depth < exit` (with `exit <= enter`), so a lane
+/// oscillating around a single threshold cannot flap the store between
+/// `Degraded` and full-k responses on every batch.
+///
+/// The machine itself is pure — `next(currently_degraded, depth)`
+/// returns the successor state — so the batcher can keep the persistent
+/// bit wherever it likes (the engine holds one `AtomicBool` per store)
+/// and this type stays trivially unit-testable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hysteresis {
+    /// Enter degraded mode at lane depth ≥ `enter`.
+    pub enter: usize,
+    /// Leave degraded mode at lane depth < `exit`.
+    pub exit: usize,
+}
+
+impl Hysteresis {
+    /// Default exit threshold: half the enter depth (at least 1), per
+    /// the usual hysteresis rule of thumb — the backlog must genuinely
+    /// drain, not momentarily dip, before full service resumes.
+    pub fn new(enter: usize) -> Hysteresis {
+        let enter = enter.max(1);
+        Hysteresis {
+            enter,
+            exit: (enter / 2).max(1),
+        }
+    }
+
+    /// Explicit exit threshold, clamped into `1..=enter`.
+    pub fn with_exit(enter: usize, exit: usize) -> Hysteresis {
+        let enter = enter.max(1);
+        Hysteresis {
+            enter,
+            exit: exit.clamp(1, enter),
+        }
+    }
+
+    /// Successor state given the current state and the observed lane
+    /// depth.
+    pub fn next(&self, degraded: bool, depth: usize) -> bool {
+        if degraded {
+            depth >= self.exit
+        } else {
+            depth >= self.enter
         }
     }
 }
@@ -340,5 +408,71 @@ mod tests {
         assert_eq!(reg.by_name("default"), Some(StoreId::DEFAULT));
         let s = reg.store_by_id(StoreId::DEFAULT).unwrap();
         assert_eq!(s.fact_dim(), Some(256));
+    }
+
+    #[test]
+    fn hysteresis_thresholds_derive_and_clamp() {
+        assert_eq!(Hysteresis::new(8), Hysteresis { enter: 8, exit: 4 });
+        // exit never reaches 0: depth-1 enter still needs depth 0 to exit
+        assert_eq!(Hysteresis::new(1), Hysteresis { enter: 1, exit: 1 });
+        assert_eq!(Hysteresis::new(0), Hysteresis { enter: 1, exit: 1 });
+        // explicit exit clamps into 1..=enter
+        assert_eq!(Hysteresis::with_exit(4, 0), Hysteresis { enter: 4, exit: 1 });
+        assert_eq!(Hysteresis::with_exit(4, 9), Hysteresis { enter: 4, exit: 4 });
+        let spec = StoreSpec {
+            degrade_depth: Some(6),
+            ..StoreSpec::default()
+        };
+        assert_eq!(
+            spec.degrade_hysteresis(),
+            Some(Hysteresis { enter: 6, exit: 3 })
+        );
+        let spec = StoreSpec {
+            degrade_depth: Some(6),
+            degrade_exit: Some(2),
+            ..StoreSpec::default()
+        };
+        assert_eq!(
+            spec.degrade_hysteresis(),
+            Some(Hysteresis { enter: 6, exit: 2 })
+        );
+        assert_eq!(StoreSpec::default().degrade_hysteresis(), None);
+    }
+
+    #[test]
+    fn hysteresis_state_machine_enters_holds_and_exits() {
+        let h = Hysteresis::new(4); // enter at ≥4, exit below 2
+        let mut deg = false;
+        for (depth, expect) in [
+            (3, false), // below enter: stays healthy
+            (4, true),  // crosses enter
+            (3, true),  // dips below enter but not below exit: holds
+            (2, true),  // still ≥ exit: holds
+            (1, false), // below exit: recovers
+            (3, false), // healthy again; below enter stays healthy
+            (5, true),  // re-enters
+        ] {
+            deg = h.next(deg, depth);
+            assert_eq!(deg, expect, "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn hysteresis_does_not_flap_at_the_boundary() {
+        // A lane oscillating one ticket around the old single threshold
+        // (depth 4 ↔ 3) flips exactly once under hysteresis, never per
+        // observation.
+        let h = Hysteresis::new(4);
+        let mut deg = false;
+        let mut transitions = 0;
+        for depth in [4, 3, 4, 3, 4, 3, 4, 3] {
+            let next = h.next(deg, depth);
+            if next != deg {
+                transitions += 1;
+            }
+            deg = next;
+        }
+        assert_eq!(transitions, 1, "one enter transition, zero exits");
+        assert!(deg, "still degraded while hovering above exit");
     }
 }

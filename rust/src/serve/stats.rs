@@ -20,8 +20,10 @@
 //! down a serving path that survived its own fault.
 
 use super::cache::CacheCounters;
+use super::queue::LaneGauge;
 use super::registry::StoreId;
 use super::shard::ShardTimings;
+use super::trace::{KernelWork, StageSample};
 use super::RequestKind;
 use crate::util::stats::{percentile, P2Quantile};
 use crate::vsa::PruneStats;
@@ -111,6 +113,91 @@ impl Default for StreamingLatency {
     }
 }
 
+/// O(1)-memory per-stage latency decomposition for one request class:
+/// one [`StreamingLatency`] per lifecycle stage (queue wait, batch wait,
+/// kernel, fill) plus the end-to-end total of the same requests, so
+/// "p99 = queue + batch + kernel + fill" is directly inspectable. All
+/// five estimators see exactly the same requests — their counts agree
+/// and their means reconcile (stage means sum to ≤ the total mean, the
+/// slack being the unattributed batch-seal → kernel-start gap).
+#[derive(Debug, Clone, Copy)]
+struct StageAgg {
+    queue: StreamingLatency,
+    batch: StreamingLatency,
+    kernel: StreamingLatency,
+    fill: StreamingLatency,
+    total: StreamingLatency,
+}
+
+impl StageAgg {
+    fn new() -> StageAgg {
+        StageAgg {
+            queue: StreamingLatency::new(),
+            batch: StreamingLatency::new(),
+            kernel: StreamingLatency::new(),
+            fill: StreamingLatency::new(),
+            total: StreamingLatency::new(),
+        }
+    }
+
+    fn record(&mut self, sample: &StageSample, total_s: f64) {
+        self.queue.record(sample.queue_s);
+        self.batch.record(sample.batch_s);
+        self.kernel.record(sample.kernel_s);
+        self.fill.record(sample.fill_s);
+        self.total.record(total_s);
+    }
+
+    fn summary(&self, kind: RequestKind) -> StageSummary {
+        StageSummary {
+            kind,
+            n: self.total.n(),
+            queue: self.queue.summary(),
+            batch: self.batch.summary(),
+            kernel: self.kernel.summary(),
+            fill: self.fill.summary(),
+            total: self.total.summary(),
+        }
+    }
+}
+
+impl Default for StageAgg {
+    fn default() -> Self {
+        StageAgg::new()
+    }
+}
+
+/// Snapshot of one request class's stage-latency decomposition
+/// (seconds). Each stage is a full distribution summary over the same
+/// completed requests as `total`; empty when the class saw no traffic.
+#[derive(Debug, Clone)]
+pub struct StageSummary {
+    pub kind: RequestKind,
+    /// Completed requests this decomposition covers.
+    pub n: u64,
+    /// Admit → queue-pop.
+    pub queue: Option<LatencySummary>,
+    /// Queue-pop → batch-seal.
+    pub batch: Option<LatencySummary>,
+    /// Kernel-start → kernel-end (zero-width for cache hits).
+    pub kernel: Option<LatencySummary>,
+    /// Kernel-end → response accounting/fill.
+    pub fill: Option<LatencySummary>,
+    /// Admit → accounting (the end-to-end latency of the same requests).
+    pub total: Option<LatencySummary>,
+}
+
+impl StageSummary {
+    /// Sum of the four stage means — ≤ `total`'s mean by construction
+    /// (the decomposition never attributes more time than elapsed).
+    pub fn stage_mean_sum_s(&self) -> f64 {
+        [&self.queue, &self.batch, &self.kernel, &self.fill]
+            .iter()
+            .filter_map(|s| s.map(|x| x.mean_s))
+            .sum()
+    }
+}
+
 /// Per-shard accumulated scan work.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ShardStat {
@@ -128,6 +215,10 @@ pub struct ShardStat {
 pub struct StoreWork {
     pub timings: ShardTimings,
     pub prune: PruneStats,
+    /// Measured kernel-call work per request class ([`RequestKind::index`]
+    /// order): call counts, wall time, and the FLOP/byte tallies behind
+    /// the roofline bridge.
+    pub measured: [KernelWork; 3],
 }
 
 #[derive(Debug, Default)]
@@ -137,6 +228,11 @@ struct StoreInner {
     /// included) — `n()` is the store's completed count. Constant-size
     /// streaming state, not a sample vector.
     lat: StreamingLatency,
+    /// Per-class stage-latency decomposition ([`RequestKind::index`]
+    /// order) over this store's completed requests.
+    stages: [StageAgg; 3],
+    /// Per-class measured kernel work ([`RequestKind::index`] order).
+    work: [KernelWork; 3],
     shards: Vec<ShardStat>,
     prune: PruneStats,
     /// Admissions refused because *this store's* quota was exhausted
@@ -157,6 +253,11 @@ struct StatsInner {
     recall: StreamingLatency,
     topk: StreamingLatency,
     factorize: StreamingLatency,
+    /// Engine-wide per-class stage decomposition ([`RequestKind::index`]
+    /// order) — same samples as the per-store aggregations.
+    stages: [StageAgg; 3],
+    /// Engine-wide per-class measured kernel work.
+    work: [KernelWork; 3],
     /// Executed micro-batches and their total occupancy / max size —
     /// running aggregates (the former per-batch size vector was the
     /// other unbounded-memory path here).
@@ -202,12 +303,14 @@ impl ServeStats {
 
     /// Record one executed micro-batch: occupancy, per-request latencies
     /// (queue wait + execution — cache hits included) tagged with the
-    /// store they served, and each store's kernel-call shard timings and
-    /// merged scan [`PruneStats`]. Allocation-free in steady state.
+    /// store they served and decomposed into lifecycle stages, and each
+    /// store's kernel-call shard timings, merged scan [`PruneStats`], and
+    /// measured per-class [`KernelWork`]. Allocation-free in steady
+    /// state.
     pub fn record_batch(
         &self,
         executed: usize,
-        latencies: &[(StoreId, RequestKind, Duration)],
+        latencies: &[(StoreId, RequestKind, Duration, StageSample)],
         store_work: &[(StoreId, StoreWork)],
     ) {
         let mut g = self.lock();
@@ -216,20 +319,28 @@ impl ServeStats {
             g.batch_occupancy += executed as u64;
             g.max_batch = g.max_batch.max(executed);
         }
-        for &(store, kind, lat) in latencies {
+        for &(store, kind, lat, stages) in latencies {
             let secs = lat.as_secs_f64();
             match kind {
                 RequestKind::Recall => g.recall.record(secs),
                 RequestKind::RecallTopK => g.topk.record(secs),
                 RequestKind::Factorize => g.factorize.record(secs),
             }
+            g.stages[kind.index()].record(&stages, secs);
             if let Some(st) = g.stores.get_mut(store.index()) {
                 st.lat.record(secs);
+                st.stages[kind.index()].record(&stages, secs);
             }
         }
         for (store, work) in store_work {
+            for (i, kw) in work.measured.iter().enumerate() {
+                g.work[i].merge(kw);
+            }
             if let Some(st) = g.stores.get_mut(store.index()) {
                 st.prune.merge(&work.prune);
+                for (i, kw) in work.measured.iter().enumerate() {
+                    st.work[i].merge(kw);
+                }
                 for &(s, busy) in &work.timings {
                     if let Some(sh) = st.shards.get_mut(s) {
                         sh.scans += 1;
@@ -307,6 +418,11 @@ impl ServeStats {
                 name: st.name.clone(),
                 completed: st.lat.n(),
                 latency: st.lat.summary(),
+                stages: RequestKind::ALL
+                    .iter()
+                    .map(|&k| st.stages[k.index()].summary(k))
+                    .collect(),
+                kernel_work: st.work,
                 shards: st.shards.clone(),
                 prune: st.prune,
                 rejected_tenant: st.rejected_tenant,
@@ -347,10 +463,17 @@ impl ServeStats {
             recall: g.recall.summary(),
             topk: g.topk.summary(),
             factorize: g.factorize.summary(),
+            stages: RequestKind::ALL
+                .iter()
+                .map(|&k| g.stages[k.index()].summary(k))
+                .collect(),
+            kernel_work: g.work,
             shards,
             prune,
             stores,
             cache: None,
+            queue_depth: 0,
+            lanes: Vec::new(),
         }
     }
 }
@@ -366,6 +489,12 @@ pub struct StoreSnapshot {
     /// End-to-end latency over this store's completed requests (P²
     /// streaming estimates for p50/p99 once n > 5; exact below).
     pub latency: Option<LatencySummary>,
+    /// Per-class stage-latency decomposition
+    /// (queue/batch/kernel/fill/total), one entry per [`RequestKind`] in
+    /// [`RequestKind::ALL`] order.
+    pub stages: Vec<StageSummary>,
+    /// Per-class measured kernel work ([`RequestKind::index`] order).
+    pub kernel_work: [KernelWork; 3],
     /// This store's shard scan counters.
     pub shards: Vec<ShardStat>,
     /// Merged bound-pruned scan telemetry for this store's kernel calls.
@@ -406,6 +535,12 @@ pub struct StatsSnapshot {
     pub recall: Option<LatencySummary>,
     pub topk: Option<LatencySummary>,
     pub factorize: Option<LatencySummary>,
+    /// Engine-wide per-class stage-latency decomposition, one entry per
+    /// [`RequestKind`] in [`RequestKind::ALL`] order.
+    pub stages: Vec<StageSummary>,
+    /// Engine-wide per-class measured kernel work
+    /// ([`RequestKind::index`] order).
+    pub kernel_work: [KernelWork; 3],
     /// Every store's shard stats, concatenated in [`StoreId`] order
     /// (for single-store engines this is exactly the store's shard set).
     pub shards: Vec<ShardStat>,
@@ -419,11 +554,27 @@ pub struct StatsSnapshot {
     /// [`super::engine::ServeEngine::stats`], not by
     /// [`ServeStats::snapshot`]).
     pub cache: Option<CacheCounters>,
+    /// Total tickets waiting in the admission queue at snapshot time
+    /// (layered on by [`super::engine::ServeEngine::stats`], which owns
+    /// the queue; 0 from a bare [`ServeStats::snapshot`]).
+    pub queue_depth: usize,
+    /// Per-lane depth/deficit gauges at snapshot time (layered on by the
+    /// engine; empty from a bare snapshot).
+    pub lanes: Vec<LaneGauge>,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn sample_ms(queue: f64, batch: f64, kernel: f64, fill: f64) -> StageSample {
+        StageSample {
+            queue_s: queue * 1e-3,
+            batch_s: batch * 1e-3,
+            kernel_s: kernel * 1e-3,
+            fill_s: fill * 1e-3,
+        }
+    }
 
     #[test]
     fn latency_summary_percentiles() {
@@ -475,12 +626,38 @@ mod tests {
             words_streamed: 40,
             words_total: 96,
         };
+        let recall_work = {
+            let mut m = [KernelWork::default(); 3];
+            m[RequestKind::Recall.index()] = KernelWork {
+                calls: 1,
+                elapsed_s: 0.001,
+                flops: 120,
+                bytes_read: 320,
+                bytes_written: 16,
+            };
+            m
+        };
         st.record_batch(
             3,
             &[
-                (StoreId(0), RequestKind::Recall, Duration::from_millis(1)),
-                (StoreId(0), RequestKind::Recall, Duration::from_millis(3)),
-                (StoreId(1), RequestKind::Factorize, Duration::from_millis(9)),
+                (
+                    StoreId(0),
+                    RequestKind::Recall,
+                    Duration::from_millis(1),
+                    sample_ms(0.2, 0.3, 0.4, 0.05),
+                ),
+                (
+                    StoreId(0),
+                    RequestKind::Recall,
+                    Duration::from_millis(3),
+                    sample_ms(1.0, 0.5, 1.2, 0.1),
+                ),
+                (
+                    StoreId(1),
+                    RequestKind::Factorize,
+                    Duration::from_millis(9),
+                    sample_ms(2.0, 1.0, 5.0, 0.5),
+                ),
             ],
             &[
                 (
@@ -488,6 +665,7 @@ mod tests {
                     StoreWork {
                         timings: vec![(0, 0.001), (1, 0.002)],
                         prune,
+                        measured: recall_work,
                     },
                 ),
                 (
@@ -495,18 +673,25 @@ mod tests {
                     StoreWork {
                         timings: vec![(0, 0.004)],
                         prune,
+                        measured: recall_work,
                     },
                 ),
             ],
         );
         st.record_batch(
             1,
-            &[(StoreId(0), RequestKind::RecallTopK, Duration::from_millis(2))],
+            &[(
+                StoreId(0),
+                RequestKind::RecallTopK,
+                Duration::from_millis(2),
+                sample_ms(0.5, 0.5, 0.5, 0.1),
+            )],
             &[(
                 StoreId(0),
                 StoreWork {
                     timings: vec![(0, 0.004)],
                     prune,
+                    measured: [KernelWork::default(); 3],
                 },
             )],
         );
@@ -544,6 +729,39 @@ mod tests {
         assert_eq!(s.stores[1].prune.items, 6);
         assert_eq!(s.stores[1].shards.len(), 1);
         assert!((s.stores[1].shards[0].busy_s - 0.004).abs() < 1e-12);
+        // stage decomposition: per class, per store, and engine-wide
+        let eng_recall = &s.stages[RequestKind::Recall.index()];
+        assert_eq!(eng_recall.n, 2);
+        assert!((eng_recall.queue.unwrap().mean_s - 0.6e-3).abs() < 1e-9);
+        assert!((eng_recall.kernel.unwrap().mean_s - 0.8e-3).abs() < 1e-9);
+        assert!((eng_recall.total.unwrap().mean_s - 2.0e-3).abs() < 1e-9);
+        assert!(
+            eng_recall.stage_mean_sum_s() <= eng_recall.total.unwrap().mean_s + 1e-12,
+            "stage means must not exceed the end-to-end mean"
+        );
+        let st0_topk = &s.stores[0].stages[RequestKind::RecallTopK.index()];
+        assert_eq!(st0_topk.n, 1);
+        assert!((st0_topk.stage_mean_sum_s() - 1.6e-3).abs() < 1e-9);
+        let st1_fact = &s.stores[1].stages[RequestKind::Factorize.index()];
+        assert_eq!(st1_fact.n, 1);
+        assert!((st1_fact.kernel.unwrap().max_s - 5.0e-3).abs() < 1e-9);
+        assert_eq!(s.stores[1].stages[RequestKind::Recall.index()].n, 0);
+        // measured kernel work merges per store and engine-wide
+        let kw = s.stores[0].kernel_work[RequestKind::Recall.index()];
+        assert_eq!(kw.calls, 1);
+        assert_eq!(kw.flops, 120);
+        assert_eq!(kw.bytes(), 336);
+        let eng_kw = s.kernel_work[RequestKind::Recall.index()];
+        assert_eq!(eng_kw.calls, 2, "both stores' calls merge engine-wide");
+        assert_eq!(eng_kw.flops, 240);
+        assert_eq!(
+            s.kernel_work[RequestKind::RecallTopK.index()].calls,
+            0,
+            "no topk kernel work recorded"
+        );
+        // gauges default empty from a bare snapshot (engine layers them)
+        assert_eq!(s.queue_depth, 0);
+        assert!(s.lanes.is_empty());
     }
 
     #[test]
@@ -577,11 +795,21 @@ mod tests {
         let st = ServeStats::new(&[("only", 1)]);
         st.record_batch(
             1,
-            &[(StoreId(9), RequestKind::Recall, Duration::from_millis(1))],
+            &[(
+                StoreId(9),
+                RequestKind::Recall,
+                Duration::from_millis(1),
+                StageSample::default(),
+            )],
             &[],
         );
         let s = st.snapshot();
         assert_eq!(s.completed, 1);
         assert_eq!(s.stores[0].completed, 0);
+        assert_eq!(
+            s.stages[RequestKind::Recall.index()].n,
+            1,
+            "engine-wide stage decomposition still sees the request"
+        );
     }
 }

@@ -1,0 +1,390 @@
+//! Live serve-path observability: per-request lifecycle stage marks and
+//! a fixed-capacity ring buffer of per-response trace events.
+//!
+//! The paper's method is workload characterization — attributing time to
+//! operators and placing them on a roofline (Figs. 2–3). This module is
+//! the serve-side half of that bridge: every [`super::queue::Ticket`]
+//! carries [`StageMarks`] stamped at admit → queue-pop → batch-seal →
+//! kernel-start/end, and the moment a response is accounted the marks
+//! collapse into a [`StageSample`] ("p99 = queue-wait + batch-wait +
+//! kernel + fill") that feeds the per-store, per-class P² breakdowns in
+//! [`super::stats::ServeStats`] — always on, a handful of `Instant`
+//! reads per request.
+//!
+//! When tracing is enabled (`EngineConfig::trace_capacity`,
+//! `serve-bench --trace`, `NSCOG_TRACE`), each accounted response also
+//! lands as a [`TraceEvent`] in a [`TraceRing`]: fixed capacity,
+//! preallocated, drop-oldest on overflow with an exact dropped-events
+//! counter — steady-state recording never touches the heap (asserted in
+//! `tests/alloc_free.rs`), and the tracing-off path is a single
+//! `Option` branch in the batcher. [`KernelWork`] carries the measured
+//! FLOPs/bytes per `(store, class)` kernel call that the roofline
+//! bridge in `loadgen` feeds through `profiler::roofline::place`.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::{RequestKind, StoreId};
+
+/// Lifecycle timestamps carried on a ticket from admission to fill.
+///
+/// `admit` is stamped at submit time (it doubles as the end-to-end
+/// latency origin); the later marks are stamped as the ticket moves
+/// through the batcher. Marks are monotone by construction — each is
+/// taken strictly after the previous one on the same ticket.
+#[derive(Debug, Clone, Copy)]
+pub struct StageMarks {
+    /// Admission into the queue (`submit_async`).
+    pub admit: Instant,
+    /// Popped off the admission queue by a worker.
+    pub popped: Option<Instant>,
+    /// Batch window closed — the ticket's batch is sealed.
+    pub sealed: Option<Instant>,
+    /// Batched kernel call for the ticket's `(store, class)` group began.
+    pub kernel_start: Option<Instant>,
+    /// Batched kernel call returned.
+    pub kernel_end: Option<Instant>,
+}
+
+impl StageMarks {
+    pub fn new(admit: Instant) -> StageMarks {
+        StageMarks {
+            admit,
+            popped: None,
+            sealed: None,
+            kernel_start: None,
+            kernel_end: None,
+        }
+    }
+
+    /// Stamp the kernel bracket for the ticket's batched group call.
+    pub fn mark_kernel(&mut self, start: Instant, end: Instant) {
+        self.kernel_start = Some(start);
+        self.kernel_end = Some(end);
+    }
+
+    /// Collapse the marks into per-stage durations, with `now` standing
+    /// in for the slot-fill instant (responses are accounted immediately
+    /// before their slot fills — the "stats before fills" invariant).
+    ///
+    /// Missing marks contribute zero, and every stage uses
+    /// `saturating_duration_since`, so each stage is non-negative and
+    /// `sample.sum() <= now - admit` always holds: the only time not
+    /// attributed to a stage is the group-formation gap between
+    /// batch-seal and kernel-start.
+    pub fn sample_at(&self, now: Instant) -> StageSample {
+        let queue_s = self
+            .popped
+            .map(|p| p.saturating_duration_since(self.admit).as_secs_f64())
+            .unwrap_or(0.0);
+        let batch_s = match (self.popped, self.sealed) {
+            (Some(p), Some(s)) => s.saturating_duration_since(p).as_secs_f64(),
+            _ => 0.0,
+        };
+        let kernel_s = match (self.kernel_start, self.kernel_end) {
+            (Some(a), Some(b)) => b.saturating_duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        };
+        // The fill stage starts where the last stamped mark ends, so the
+        // decomposition stays exhaustive on kernel-free paths (cache
+        // hits carry no kernel bracket — their probe time lands in fill;
+        // error fills may carry no marks at all).
+        let fill_origin = self
+            .kernel_end
+            .or(self.sealed)
+            .or(self.popped)
+            .unwrap_or(self.admit);
+        let fill_s = now.saturating_duration_since(fill_origin).as_secs_f64();
+        StageSample {
+            queue_s,
+            batch_s,
+            kernel_s,
+            fill_s,
+        }
+    }
+}
+
+/// One request's stage-latency decomposition, in seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageSample {
+    /// Admit → queue-pop (time spent waiting in the admission queue).
+    pub queue_s: f64,
+    /// Queue-pop → batch-seal (time spent waiting for the batch window).
+    pub batch_s: f64,
+    /// Kernel-start → kernel-end (the batched kernel call itself).
+    pub kernel_s: f64,
+    /// Kernel-end → accounting/fill (response assembly, cache insert).
+    pub fill_s: f64,
+}
+
+impl StageSample {
+    /// Sum of the four stages — by construction ≤ the end-to-end
+    /// latency of the same request.
+    pub fn sum(&self) -> f64 {
+        self.queue_s + self.batch_s + self.kernel_s + self.fill_s
+    }
+}
+
+/// Measured work of the batched kernel calls behind one `(store,
+/// class)`: call count, wall time, and the FLOP/byte tallies the
+/// roofline bridge places against a host [`crate::platform::Platform`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KernelWork {
+    /// Batched kernel invocations (one per `(store, class)` group).
+    pub calls: u64,
+    /// Measured wall time inside those calls, seconds.
+    pub elapsed_s: f64,
+    /// Integer/float ALU operations performed (measured where the scan
+    /// reports streamed words, modelled from shape for the resonator).
+    pub flops: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+impl KernelWork {
+    pub fn merge(&mut self, other: &KernelWork) {
+        self.calls += other.calls;
+        self.elapsed_s += other.elapsed_s;
+        self.flops += other.flops;
+        self.bytes_read += other.bytes_read;
+        self.bytes_written += other.bytes_written;
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+
+    /// Operational intensity (FLOPs per byte) — the roofline x-axis.
+    pub fn intensity(&self) -> f64 {
+        self.flops as f64 / self.bytes().max(1) as f64
+    }
+
+    /// Measured attained throughput, FLOP/s.
+    pub fn attained_flops(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.flops as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One accounted response, as recorded into the [`TraceRing`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// 1-based global sequence number, assigned by the ring at record
+    /// time (strictly increasing across drops).
+    pub seq: u64,
+    pub store: StoreId,
+    pub kind: RequestKind,
+    pub stages: StageSample,
+    /// End-to-end latency (admit → accounting), seconds.
+    pub total_s: f64,
+    /// Served degraded (top-k capped under backlog).
+    pub degraded: bool,
+    /// Answered from the response cache (zero-width kernel stage).
+    pub cache_hit: bool,
+}
+
+struct RingState {
+    /// Preallocated to `capacity`; grows by `push` (no reallocation)
+    /// until full, then overwrites in place.
+    buf: Vec<TraceEvent>,
+    /// Index of the oldest event once the buffer has wrapped.
+    head: usize,
+    dropped: u64,
+    seq: u64,
+}
+
+/// Fixed-capacity ring buffer of [`TraceEvent`]s with drop-oldest
+/// overflow semantics and an exact dropped-events counter.
+///
+/// Recording is a short critical section writing into preallocated
+/// storage — zero heap traffic in steady state. Workers share one ring
+/// (contention is bounded by the batch rate, not the request rate:
+/// recording happens once per response during batch accounting, and the
+/// lock is uncontended in the common single-digit-worker case).
+pub struct TraceRing {
+    capacity: usize,
+    state: Mutex<RingState>,
+}
+
+impl TraceRing {
+    /// `capacity` is clamped to at least 1.
+    pub fn new(capacity: usize) -> TraceRing {
+        let capacity = capacity.max(1);
+        TraceRing {
+            capacity,
+            state: Mutex::new(RingState {
+                buf: Vec::with_capacity(capacity),
+                head: 0,
+                dropped: 0,
+                seq: 0,
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, RingState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Record one event. When the ring is full, the oldest event is
+    /// overwritten and `dropped` advances by exactly one.
+    pub fn record(&self, mut ev: TraceEvent) {
+        let mut s = self.lock();
+        s.seq += 1;
+        ev.seq = s.seq;
+        if s.buf.len() < self.capacity {
+            s.buf.push(ev);
+        } else {
+            let head = s.head;
+            s.buf[head] = ev;
+            s.head = (head + 1) % self.capacity;
+            s.dropped += 1;
+        }
+    }
+
+    /// Events currently held, oldest first, plus the dropped count.
+    pub fn snapshot(&self) -> (Vec<TraceEvent>, u64) {
+        let s = self.lock();
+        let mut out = Vec::with_capacity(s.buf.len());
+        out.extend_from_slice(&s.buf[s.head..]);
+        out.extend_from_slice(&s.buf[..s.head]);
+        (out, s.dropped)
+    }
+
+    /// Total events ever recorded (retained + dropped).
+    pub fn recorded(&self) -> u64 {
+        self.lock().seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn ev(total_ms: u64) -> TraceEvent {
+        TraceEvent {
+            seq: 0,
+            store: StoreId(0),
+            kind: RequestKind::Recall,
+            stages: StageSample::default(),
+            total_s: total_ms as f64 * 1e-3,
+            degraded: false,
+            cache_hit: false,
+        }
+    }
+
+    #[test]
+    fn stage_sample_is_monotone_and_bounded_by_total() {
+        let t0 = Instant::now();
+        let mut m = StageMarks::new(t0);
+        let t1 = t0 + Duration::from_micros(100);
+        let t2 = t1 + Duration::from_micros(50);
+        let t3 = t2 + Duration::from_micros(10);
+        let t4 = t3 + Duration::from_micros(200);
+        let now = t4 + Duration::from_micros(5);
+        m.popped = Some(t1);
+        m.sealed = Some(t2);
+        m.mark_kernel(t3, t4);
+        let s = m.sample_at(now);
+        assert!((s.queue_s - 100e-6).abs() < 1e-9);
+        assert!((s.batch_s - 50e-6).abs() < 1e-9);
+        assert!((s.kernel_s - 200e-6).abs() < 1e-9);
+        assert!((s.fill_s - 5e-6).abs() < 1e-9);
+        let total = now.saturating_duration_since(t0).as_secs_f64();
+        // The seal→kernel-start gap (10 µs) is the only unattributed time.
+        assert!(s.sum() <= total + 1e-12);
+        assert!((total - s.sum() - 10e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_marks_still_decompose_exhaustively() {
+        let t0 = Instant::now();
+        let m = StageMarks::new(t0);
+        let now = t0 + Duration::from_micros(40);
+        let s = m.sample_at(now);
+        // No marks: everything lands in fill, nothing is negative.
+        assert_eq!(s.queue_s, 0.0);
+        assert_eq!(s.batch_s, 0.0);
+        assert_eq!(s.kernel_s, 0.0);
+        assert!((s.fill_s - 40e-6).abs() < 1e-9);
+        assert!(s.sum() <= now.saturating_duration_since(t0).as_secs_f64() + 1e-12);
+    }
+
+    #[test]
+    fn ring_keeps_order_below_capacity() {
+        let ring = TraceRing::new(8);
+        for i in 0..5 {
+            ring.record(ev(i));
+        }
+        let (events, dropped) = ring.snapshot();
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 5);
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts_exactly() {
+        let ring = TraceRing::new(4);
+        for i in 0..10 {
+            ring.record(ev(i));
+        }
+        let (events, dropped) = ring.snapshot();
+        assert_eq!(dropped, 6, "10 recorded into capacity 4 drops exactly 6");
+        assert_eq!(events.len(), 4);
+        // Survivors are the newest four, oldest first.
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![7, 8, 9, 10]);
+        let totals: Vec<u64> = events
+            .iter()
+            .map(|e| (e.total_s * 1e3).round() as u64)
+            .collect();
+        assert_eq!(totals, vec![6, 7, 8, 9]);
+        assert_eq!(ring.recorded(), 10);
+    }
+
+    #[test]
+    fn ring_capacity_clamps_to_one() {
+        let ring = TraceRing::new(0);
+        assert_eq!(ring.capacity(), 1);
+        ring.record(ev(1));
+        ring.record(ev(2));
+        let (events, dropped) = ring.snapshot();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].seq, 2);
+        assert_eq!(dropped, 1);
+    }
+
+    #[test]
+    fn kernel_work_merges_and_derives() {
+        let mut a = KernelWork {
+            calls: 1,
+            elapsed_s: 0.5,
+            flops: 300,
+            bytes_read: 700,
+            bytes_written: 100,
+        };
+        let b = KernelWork {
+            calls: 2,
+            elapsed_s: 0.5,
+            flops: 100,
+            bytes_read: 200,
+            bytes_written: 0,
+        };
+        a.merge(&b);
+        assert_eq!(a.calls, 3);
+        assert_eq!(a.flops, 400);
+        assert_eq!(a.bytes(), 1000);
+        assert!((a.intensity() - 0.4).abs() < 1e-12);
+        assert!((a.attained_flops() - 400.0).abs() < 1e-9);
+        assert_eq!(KernelWork::default().attained_flops(), 0.0);
+        assert_eq!(KernelWork::default().intensity(), 0.0);
+    }
+}

@@ -134,18 +134,25 @@ fn resonator_sweeps_allocate_nothing_in_steady_state() {
 
     // Serve-stats recording is on every worker's batch path and must be
     // O(1) memory: the P² streaming quantile state replaced the old
-    // per-request latency vectors, so steady-state recording over
+    // per-request latency vectors (and the PR 7 stage decompositions use
+    // the same fixed-size estimators), so steady-state recording over
     // preallocated slices stays off the heap entirely.
     use nscog::serve::stats::{ServeStats, StoreWork};
-    use nscog::serve::{RequestKind, StoreId};
+    use nscog::serve::{KernelWork, RequestKind, StageSample, StoreId, TraceEvent, TraceRing};
     use std::time::Duration;
     let stats = ServeStats::new(&[("s0", 2), ("s1", 2)]);
-    let latencies: Vec<(StoreId, RequestKind, Duration)> = (0..8)
+    let latencies: Vec<(StoreId, RequestKind, Duration, StageSample)> = (0..8)
         .map(|i| {
             (
                 StoreId(i % 2),
                 [RequestKind::Recall, RequestKind::RecallTopK, RequestKind::Factorize][i % 3],
                 Duration::from_micros(100 + 37 * i as u64),
+                StageSample {
+                    queue_s: 20e-6,
+                    batch_s: 15e-6,
+                    kernel_s: 40e-6,
+                    fill_s: 5e-6,
+                },
             )
         })
         .collect();
@@ -153,6 +160,13 @@ fn resonator_sweeps_allocate_nothing_in_steady_state() {
     for (si, (_, w)) in work.iter_mut().enumerate() {
         w.timings.push((si, 0.001));
         w.timings.push((1 - si, 0.002));
+        w.measured[RequestKind::Recall.index()].merge(&KernelWork {
+            calls: 1,
+            elapsed_s: 40e-6,
+            flops: 3 * 1024,
+            bytes_read: 8 * 1024,
+            bytes_written: 16,
+        });
     }
     // warm-up: pushes every P² estimator past its 5-marker fill phase
     stats.record_batch(latencies.len(), &latencies, &work);
@@ -171,4 +185,39 @@ fn resonator_sweeps_allocate_nothing_in_steady_state() {
         0,
         "steady-state stats recording must not touch the heap"
     );
+
+    // The trace ring preallocates its whole buffer at construction:
+    // steady-state `record` (including drop-oldest overwrites once the
+    // ring has wrapped) is a Copy-slot write and must stay off the heap.
+    // (With tracing off the batcher holds no ring at all, so the traced
+    // path's cost is a single `Option` branch — nothing to measure.)
+    let ring = TraceRing::new(16);
+    let ev = TraceEvent {
+        seq: 0,
+        store: StoreId(0),
+        kind: RequestKind::Recall,
+        stages: StageSample {
+            queue_s: 20e-6,
+            batch_s: 15e-6,
+            kernel_s: 40e-6,
+            fill_s: 5e-6,
+        },
+        total_s: 90e-6,
+        degraded: false,
+        cache_hit: false,
+    };
+    ring.record(ev); // warm-up (and Mutex init effects, if any)
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..64 {
+        ring.record(ev); // wraps at 16: exercises the overwrite path too
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state trace recording must not touch the heap"
+    );
+    let (events, dropped) = ring.snapshot();
+    assert_eq!(events.len(), 16);
+    assert_eq!(dropped, 65 - 16, "drop-oldest counter is exact");
 }

@@ -1,0 +1,287 @@
+//! Property tests for the serve-path tracer (PR 7): per-ticket stage
+//! timestamps must decompose monotonically (no stage span negative, and
+//! the four spans can never attribute more time than the request's
+//! end-to-end latency), every completed response must surface a full
+//! lifecycle event in the ring, ring overflow must drop oldest with an
+//! exact counter, per-class stage means must reconcile with the same
+//! requests' end-to-end means in the stats snapshot, and the queue
+//! gauges must be layered into engine snapshots.
+
+use nscog::serve::loadgen::{run_closed_loop, Fixture, FixtureConfig, LoadMix, StoreProfile};
+use nscog::serve::{EngineConfig, RequestKind, ServeEngine, TraceEvent};
+use std::time::Duration;
+
+fn base_profile() -> StoreProfile {
+    StoreProfile {
+        name: "default".into(),
+        items: 24,
+        dim: 512,
+        topk_k: 3,
+        fact_factors: 3,
+        fact_items: 6,
+        fact_dim: 256,
+        fact_iters: 20,
+        weight: 1,
+        repeat_frac: 0.0,
+        sketch_bits: None,
+        quota: None,
+    }
+}
+
+fn fixture_cfg(requests: usize, seed: u64) -> FixtureConfig {
+    FixtureConfig {
+        stores: vec![base_profile()],
+        noise_frac: 0.2,
+        requests,
+        mix: LoadMix {
+            recall: 4,
+            topk: 2,
+            factorize: 1,
+        },
+        seed,
+    }
+}
+
+fn traced_engine(fixture: &Fixture, capacity: usize) -> ServeEngine {
+    let cfg = EngineConfig {
+        workers: 2,
+        shards: 3,
+        max_batch: 8,
+        max_delay: Duration::from_micros(500),
+        trace_capacity: Some(capacity),
+        ..EngineConfig::default()
+    };
+    ServeEngine::start_registry(fixture.registry(&cfg), cfg).expect("spawn serve workers")
+}
+
+/// Every stage span is non-negative and their sum never exceeds the
+/// event's end-to-end latency — the timestamp-monotonicity invariant as
+/// seen through the saturating stage decomposition.
+fn assert_decomposition(ev: &TraceEvent) {
+    let s = &ev.stages;
+    for (name, span) in [
+        ("queue", s.queue_s),
+        ("batch", s.batch_s),
+        ("kernel", s.kernel_s),
+        ("fill", s.fill_s),
+    ] {
+        assert!(span >= 0.0, "{name} span negative: {span}");
+        assert!(span.is_finite(), "{name} span not finite: {span}");
+    }
+    assert!(
+        s.sum() <= ev.total_s + 1e-9,
+        "stage sum {} exceeds e2e latency {}",
+        s.sum(),
+        ev.total_s
+    );
+}
+
+#[test]
+fn every_completed_response_carries_a_full_lifecycle_event() {
+    let fixture = Fixture::build(fixture_cfg(90, 31));
+    let engine = traced_engine(&fixture, 1024); // capacity > requests
+    let report = run_closed_loop(&engine, &fixture, 6, &fixture.oracle());
+    assert_eq!(report.ok, 90);
+    assert_eq!(report.mismatches, 0);
+    let snap = engine.stats();
+    let (events, dropped) = engine.trace_snapshot().expect("tracing was on");
+    engine.shutdown();
+    assert_eq!(dropped, 0, "capacity above load: nothing may drop");
+    assert_eq!(
+        events.len(),
+        90,
+        "one lifecycle event per completed response, exactly"
+    );
+    let mut by_kind = [0u64; 3];
+    for ev in &events {
+        assert_decomposition(ev);
+        // the engine path always crosses the admission queue, so the
+        // queue stage is a real (positive) span on every ticket
+        assert!(
+            ev.stages.queue_s > 0.0,
+            "engine-path ticket skipped the queue stage: {:?}",
+            ev.stages
+        );
+        assert!(!ev.cache_hit, "repeat_frac=0 traffic cannot hit the cache");
+        assert!(
+            ev.stages.kernel_s > 0.0,
+            "cache-miss ticket must carry a kernel bracket: {:?}",
+            ev.stages
+        );
+        assert!(ev.total_s > 0.0);
+        by_kind[ev.kind.index()] += 1;
+    }
+    // ring and stats agree class-by-class: the stage aggregates were fed
+    // by exactly the events the ring saw
+    assert_eq!(snap.stages.len(), 3);
+    for st in &snap.stages {
+        assert_eq!(
+            st.n,
+            by_kind[st.kind.index()],
+            "stage aggregate count diverges from ring events for {:?}",
+            st.kind
+        );
+    }
+    assert_eq!(by_kind.iter().sum::<u64>(), snap.completed);
+}
+
+#[test]
+fn stage_means_reconcile_with_end_to_end_latency_per_store_and_class() {
+    // two stores so the per-store decompositions are exercised too
+    let mut cfg = fixture_cfg(120, 32);
+    cfg.stores = vec![
+        StoreProfile {
+            name: "s0".into(),
+            weight: 2,
+            ..base_profile()
+        },
+        StoreProfile {
+            name: "s1".into(),
+            dim: 1024,
+            items: 32,
+            ..base_profile()
+        },
+    ];
+    let fixture = Fixture::build(cfg);
+    let engine = traced_engine(&fixture, 4096);
+    let report = run_closed_loop(&engine, &fixture, 6, &fixture.oracle());
+    assert_eq!(report.ok, 120);
+    assert_eq!(report.mismatches, 0);
+    let snap = engine.stats();
+    engine.shutdown();
+    let check = |stages: &[nscog::serve::StageSummary], scope: &str| {
+        assert_eq!(stages.len(), 3, "{scope}: one block per request class");
+        let mut n_total = 0;
+        for st in stages {
+            if st.n == 0 {
+                assert!(st.total.is_none(), "{scope}: empty class has no summary");
+                continue;
+            }
+            n_total += st.n;
+            let total = st.total.as_ref().expect("trafficked class has totals");
+            let sum = st.stage_mean_sum_s();
+            assert!(
+                sum <= total.mean_s + 1e-9,
+                "{scope}/{:?}: stage means over-attribute: {sum} > {}",
+                st.kind,
+                total.mean_s
+            );
+            assert!(sum > 0.0, "{scope}/{:?}: decomposition is empty", st.kind);
+            // each stage's sample count matches the class's
+            for part in [&st.queue, &st.batch, &st.kernel, &st.fill] {
+                assert_eq!(
+                    part.as_ref().map(|l| l.n),
+                    Some(st.n as usize),
+                    "{scope}/{:?}: stage sample count diverges",
+                    st.kind
+                );
+            }
+        }
+        n_total
+    };
+    assert_eq!(check(&snap.stages, "engine"), 120);
+    let per_store: u64 = snap
+        .stores
+        .iter()
+        .map(|s| {
+            let n = check(&s.stages, &s.name);
+            assert_eq!(n, s.completed, "store {} stage counts vs completed", s.name);
+            n
+        })
+        .sum();
+    assert_eq!(per_store, 120);
+}
+
+#[test]
+fn ring_overflow_drops_oldest_and_counts_exactly() {
+    let fixture = Fixture::build(fixture_cfg(80, 33));
+    let engine = traced_engine(&fixture, 16); // far below the load
+    let report = run_closed_loop(&engine, &fixture, 4, &fixture.oracle());
+    assert_eq!(report.ok, 80);
+    let (events, dropped) = engine.trace_snapshot().expect("tracing was on");
+    assert_eq!(engine.trace_capacity(), Some(16));
+    engine.shutdown();
+    assert_eq!(events.len(), 16, "wrapped ring retains exactly its capacity");
+    assert_eq!(
+        dropped as usize + events.len(),
+        80,
+        "drop counter accounts for every overwritten event"
+    );
+    // drop-oldest: what survives is the newest window, oldest-first
+    let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+    assert!(
+        seqs.windows(2).all(|w| w[0] < w[1]),
+        "snapshot not oldest-first: {seqs:?}"
+    );
+    assert_eq!(*seqs.last().unwrap(), 80, "newest event is the last recorded");
+    assert_eq!(*seqs.first().unwrap(), 80 - 16 + 1, "oldest survivor is capacity back");
+    for ev in &events {
+        assert_decomposition(ev);
+    }
+}
+
+#[test]
+fn cache_hits_trace_without_a_kernel_bracket() {
+    let mut cfg = fixture_cfg(100, 34);
+    cfg.stores[0].repeat_frac = 0.5;
+    cfg.stores[0].dim = 2048; // multi-chunk rows: the scans really prune
+    let fixture = Fixture::build(cfg);
+    let engine = traced_engine(&fixture, 4096);
+    let report = run_closed_loop(&engine, &fixture, 6, &fixture.oracle());
+    assert_eq!(report.ok, 100);
+    assert_eq!(report.mismatches, 0);
+    let snap = engine.stats();
+    let (events, dropped) = engine.trace_snapshot().expect("tracing was on");
+    engine.shutdown();
+    assert_eq!(dropped, 0);
+    assert_eq!(events.len(), 100);
+    let hits: Vec<&TraceEvent> = events.iter().filter(|e| e.cache_hit).collect();
+    assert!(
+        !hits.is_empty(),
+        "repeat_frac=0.5 over 100 requests must produce traced cache hits"
+    );
+    for ev in &hits {
+        assert_decomposition(ev);
+        assert_eq!(
+            ev.stages.kernel_s, 0.0,
+            "cache hits carry no kernel bracket; probe time lands in fill"
+        );
+        assert!(
+            ev.kind != RequestKind::Factorize,
+            "only recall-family responses are cacheable"
+        );
+    }
+    let cache = snap.cache.expect("default engine cache enabled");
+    assert_eq!(
+        hits.len() as u64,
+        cache.hits,
+        "traced cache-hit events must match the cache's own hit counter"
+    );
+}
+
+#[test]
+fn gauges_are_layered_and_tracing_off_means_no_ring() {
+    let fixture = Fixture::build(fixture_cfg(40, 35));
+    // tracing OFF: the engine holds no ring and snapshots say so
+    let cfg = EngineConfig {
+        workers: 2,
+        shards: 2,
+        ..EngineConfig::default()
+    };
+    let engine = ServeEngine::start_registry(fixture.registry(&cfg), cfg).expect("spawn workers");
+    let report = run_closed_loop(&engine, &fixture, 4, &fixture.oracle());
+    assert_eq!(report.ok, 40);
+    assert!(engine.trace_snapshot().is_none(), "untraced engine has no ring");
+    assert_eq!(engine.trace_capacity(), None);
+    let snap = engine.stats();
+    engine.shutdown();
+    // stage aggregation is always-on (it is O(1) P² state, not the ring)
+    assert_eq!(snap.stages.iter().map(|s| s.n).sum::<u64>(), 40);
+    // queue gauges are layered into every snapshot: drained after the
+    // run, one lane per registered store
+    assert_eq!(snap.queue_depth, 0);
+    assert_eq!(snap.lanes.len(), 1);
+    assert_eq!(snap.lanes[0].len, 0);
+    assert!(snap.lanes[0].weight >= 1);
+    assert!(snap.lanes[0].quota >= 1);
+}

@@ -392,6 +392,106 @@ else
     echo "python3 unavailable; structural grep checks passed"
 fi
 
+# Churn smoke: live item inserts/deletes and store creates/drops race
+# real traffic through the epoch-swap registry; every Ok answer is
+# verified against the per-epoch oracle window it was sealed in,
+# dropped stores must answer UnknownStore (never garbage), and each
+# surviving store gets a bit-exact post-churn probe. Overwrites
+# BENCH_serve_chaos.json — the flood verdict above has already been
+# validated, and the churn block below is what the repo keeps.
+echo "== chaos smoke: serve (3 stores, live churn) =="
+NSCOG_SERVE_JSON="$(pwd)/BENCH_serve_chaos.json" \
+    cargo run --release --quiet --bin nscog -- serve-bench --smoke --stores 3 \
+    --chaos churn --churn-rate 300 --churn-ops 60
+
+echo "== validate BENCH_serve_chaos.json (churn) =="
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PYEOF'
+import json
+
+def validate(r):
+    """One churn verdict -> 'pass' or 'skip'; raises AssertionError on a
+    violated invariant. Non-chaos JSONs and non-churn scenarios (their
+    churn block is null) skip cleanly."""
+    ch = r.get('chaos')
+    if ch is None:
+        return 'skip'
+    c = ch.get('churn')
+    if c is None:
+        return 'skip'
+    assert ch.get('scenario') == 'churn', 'churn ledger on a non-churn scenario'
+    assert ch.get('fairness_pass') is True, 'churn: fairness invariant failed'
+    assert ch.get('liveness_pass') is True, 'churn: liveness invariant failed'
+    assert c.get('wrong_epoch') == 0, \
+        f"churn: {c.get('wrong_epoch')} answers matched no oracle in their epoch window"
+    assert c.get('unknown_bad') == 0, \
+        f"churn: {c.get('unknown_bad')} live stores answered UnknownStore"
+    assert c.get('panics') == 0, f"churn: {c.get('panics')} uncontained panics"
+    assert c.get('op_failures') == 0, \
+        f"churn: engine refused {c.get('op_failures')} legal mutations"
+    assert c.get('monotonic') is True, 'churn: a store epoch went backwards'
+    assert c.get('probed', 0) >= 1 and c.get('probe_pass') is True, \
+        'churn: missing or failed post-churn bit-exact probe'
+    ops = c.get('ops', 0)
+    assert ops > 0, 'churn ran zero mutations'
+    assert (c.get('inserts', 0) + c.get('deletes', 0) + c.get('creates', 0)
+            + c.get('drops', 0) + c.get('op_failures', 0)) == ops, \
+        'churn op ledger does not reconcile with ops'
+    finals = c.get('final_epochs')
+    assert isinstance(finals, list) and finals, 'churn block lists no surviving stores'
+    for f in finals:
+        assert f.get('name') and isinstance(f.get('epoch'), int), \
+            'malformed final-epoch entry'
+    return 'pass'
+
+# Self-test before gating the real run: pass a good verdict, skip
+# chaos-free and non-churn shapes, and FAIL each mutated bad verdict
+# (a gate that cannot fail gates nothing).
+ok = {'chaos': {'scenario': 'churn', 'fairness_pass': True, 'liveness_pass': True,
+      'churn': {'ops': 60, 'inserts': 30, 'deletes': 14, 'creates': 9, 'drops': 7,
+                'op_failures': 0, 'wrong_epoch': 0, 'unknown_ok': 3, 'unknown_bad': 0,
+                'panics': 0, 'monotonic': True, 'probed': 4, 'probe_pass': True,
+                'final_epochs': [{'name': 'store0', 'epoch': 17},
+                                 {'name': 'churn0', 'epoch': 3}]},
+      'stores': []}}
+assert validate(ok) == 'pass', 'validator rejected a passing churn verdict'
+assert validate({'bench': 'serve'}) == 'skip', 'pre-chaos JSON must skip'
+assert validate({'chaos': {'scenario': 'flood', 'churn': None}}) == 'skip', \
+    'non-churn scenario must skip'
+for mutate, what in [
+        (lambda b: b['chaos']['churn'].__setitem__('wrong_epoch', 1), 'wrong-epoch answer'),
+        (lambda b: b['chaos']['churn'].__setitem__('probed', 0), 'missing post-churn probe'),
+        (lambda b: b['chaos']['churn'].__setitem__('panics', 2), 'panicking'),
+        (lambda b: b['chaos']['churn'].__setitem__('monotonic', False), 'non-monotonic epoch'),
+        (lambda b: b['chaos']['churn'].__setitem__('unknown_bad', 1), 'live-store UnknownStore'),
+        (lambda b: b['chaos']['churn'].__setitem__('op_failures', 1), 'refused-mutation'),
+        (lambda b: b['chaos']['churn'].__setitem__('probe_pass', False), 'drifted-probe')]:
+    bad = json.loads(json.dumps(ok))
+    mutate(bad)
+    try:
+        validate(bad)
+        raise SystemExit(f'churn validator accepted a {what} verdict')
+    except AssertionError:
+        pass
+
+r = json.load(open('BENCH_serve_chaos.json'))
+verdict = validate(r)
+if verdict == 'skip':
+    raise SystemExit('churn smoke run wrote no churn block')
+c = r['chaos']['churn']
+finals = ", ".join(f"{f['name']}@e{f['epoch']}" for f in c['final_epochs'])
+print(f"churn smoke OK (validator self-test passed): {c['ops']} ops "
+      f"({c['inserts']} ins/{c['deletes']} del/{c['creates']} create/{c['drops']} drop), "
+      f"{c['unknown_ok']} legal UnknownStore, {c['probed']} probes bit-exact; {finals}")
+PYEOF
+else
+    grep -q '"scenario": "churn"' BENCH_serve_chaos.json
+    grep -q '"wrong_epoch": 0' BENCH_serve_chaos.json
+    grep -q '"panics": 0' BENCH_serve_chaos.json
+    grep -q '"probe_pass": true' BENCH_serve_chaos.json
+    echo "python3 unavailable; structural grep checks passed"
+fi
+
 # Speedup regression gate: measured speedups in the bench JSONs must not
 # drop below the floors recorded in PERF.md's FLOORS table. Skips cleanly
 # when the measured numbers are unpopulated (e.g. authoring containers

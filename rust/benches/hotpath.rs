@@ -224,7 +224,7 @@ fn main() {
             &mut entries,
             "serve/multistore 2st recall_batch 100q+100q",
             || {
-                for (store, qs) in registry.stores().iter().zip([&queries, &small_queries]) {
+                for (store, qs) in registry.store_views().iter().zip([&queries, &small_queries]) {
                     black_box(store.cleanup().recall_batch_stats(qs, shard_threads));
                 }
             },

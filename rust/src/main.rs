@@ -90,9 +90,16 @@ fn info() {
     println!("                               weights double as DRR pop shares)");
     println!("                        fault injection: --faults reject=P,panic=P,delay-prob=P,");
     println!("                               delay-us=N,seed=S (deterministic; probs in [0,1])");
-    println!("                        chaos: --chaos flood|deadline|panic (runs after the clean");
-    println!("                               passes on a fresh engine; fairness + liveness gated,");
-    println!("                               verdict in the JSON's \"chaos\" block)");
+    println!("                        chaos: --chaos flood|deadline|panic|churn (runs after the");
+    println!("                               clean passes on a fresh engine; fairness + liveness");
+    println!("                               gated, verdict in the JSON's \"chaos\" block)");
+    println!("                        churn: live item insert/delete and store create/drop racing");
+    println!("                               traffic via epoch-based snapshot swap; every answer");
+    println!("                               verified against its seal-window epoch oracle, dropped");
+    println!("                               stores must answer UnknownStore, epochs must be");
+    println!("                               strictly monotonic, post-churn probe bit-exact.");
+    println!("                               knobs: --churn-rate OPS_PER_S (default 150)");
+    println!("                                      --churn-ops N (default 60)");
     println!("                        tracing: --trace (or NSCOG_TRACE=1) record per-request stage");
     println!("                               marks (admit/pop/seal/kernel/fill) into a drop-oldest");
     println!("                               event ring and emit BENCH_serve_trace.json — stage");
@@ -388,10 +395,18 @@ fn serve_bench(flags: &[String]) {
         match ChaosScenario::parse(spec) {
             Some(sc) => opts.chaos = Some(sc),
             None => {
-                eprintln!("unknown --chaos scenario '{spec}' (expected flood|deadline|panic)");
+                eprintln!("unknown --chaos scenario '{spec}' (expected flood|deadline|panic|churn)");
                 std::process::exit(2);
             }
         }
+    }
+    if let Some(r) = val("--churn-rate").and_then(|v| v.parse::<f64>().ok()) {
+        if r > 0.0 {
+            opts.churn_rate = r;
+        }
+    }
+    if let Some(n) = num("--churn-ops") {
+        opts.churn_ops = n.max(1);
     }
     if let Some(spec) = val("--faults") {
         // --faults reject=0.05,panic=0.25,delay-us=200,delay-prob=0.5,seed=7
@@ -619,6 +634,31 @@ fn serve_bench(flags: &[String]) {
                 s.internal,
                 s.mismatches
             );
+        }
+        if let Some(c) = &chaos.churn {
+            println!(
+                "  churn: {} ops ({} insert / {} delete / {} create / {} drop, {} refused), \
+                 wrong-epoch {}, unknown ok/bad {}/{}, panics {}, epochs {}, probe {}",
+                c.ops,
+                c.inserts,
+                c.deletes,
+                c.creates,
+                c.drops,
+                c.op_failures,
+                c.wrong_epoch,
+                c.unknown_ok,
+                c.unknown_bad,
+                c.panics,
+                if c.monotonic { "monotonic" } else { "NON-MONOTONIC" },
+                if c.probe_pass {
+                    format!("{} stores bit-exact", c.probed)
+                } else {
+                    "FAILED".into()
+                }
+            );
+            for (name, epoch) in &c.final_epochs {
+                println!("    store '{name}': final epoch {epoch}");
+            }
         }
         if !chaos.fairness_pass || !chaos.liveness_pass {
             eprintln!(

@@ -18,14 +18,29 @@
 //! first: repeated queries bypass the kernels entirely (see
 //! [`super::cache`]).
 //!
+//! Snapshot sealing: each distinct store id in the batch is resolved
+//! against the registry exactly ONCE ([`StoreRegistry::live`]), at
+//! classification time, into the epoch-stamped
+//! [`StoreSnapshot`](super::registry::StoreSnapshot) the whole batch
+//! scans. Concurrent mutations publish new snapshots for *later*
+//! batches; this batch keeps its sealed snapshot alive through the
+//! `Arc`, so every answer it produces is consistent with exactly one
+//! epoch. A store dropped between admission and execution fails the
+//! seal and its tickets are answered [`ServeError::UnknownStore`] —
+//! never a panic, never a read of freed state. Cache probes and inserts
+//! carry the sealed epoch, so a hit can never resurface an earlier
+//! epoch's answer (see [`super::cache`]).
+//!
 //! Graceful degradation: a store whose queue lane is backlogged past its
 //! [`super::registry::StoreSpec::degrade_depth`] *enter* threshold is
 //! served degraded for the batch — top-k requests are answered at
 //! `degrade_k` (wrapped in [`ServeResponse::Degraded`] so the truncation
 //! is explicit, and never cached), factorize requests are shed with
-//! [`ServeError::TenantOverloaded`]. The probe runs through the
-//! [`super::registry::Hysteresis`] state machine: once entered, a store
-//! stays degraded until its lane drains below the *exit* threshold
+//! [`ServeError::TenantOverloaded`]. The probe steps the
+//! [`super::registry::Hysteresis`] state machine through the persistent
+//! per-slot bit owned by the registry
+//! ([`StoreRegistry::degrade_step`]): once entered, a store stays
+//! degraded until its lane drains below the *exit* threshold
 //! (`degrade_exit`, default half of enter), so service doesn't flap
 //! when the depth hovers at the boundary. Cache hits still serve full
 //! answers (they cost no kernel work). Degradation is per store: one
@@ -37,15 +52,16 @@
 //! the group's measured [`KernelWork`] into [`ServeStats`] — and into
 //! the [`TraceRing`] when tracing is enabled.
 
+use super::cache::ResponseCache;
 use super::faults::FaultPlan;
 use super::queue::{AdmissionQueue, ResponseSlot, Ticket};
-use super::registry::{StoreId, StoreRegistry};
+use super::registry::{StoreId, StoreRegistry, StoreSnapshot};
 use super::stats::{ServeStats, StoreWork};
 use super::trace::{KernelWork, StageMarks, StageSample, TraceEvent, TraceRing};
 use super::{RequestKind, RequestOp, ServeError, ServeRequest, ServeResponse};
 use crate::vsa::{RealHV, Resonator, ResonatorScratch};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Batch formation policy.
@@ -150,14 +166,10 @@ pub struct ExecCtx<'a> {
     pub scan_threads: usize,
     /// Queue view for the degraded-mode depth probe (`lane_len`);
     /// `None` disables depth-triggered degradation (tests that execute
-    /// batches directly).
+    /// batches directly). The [`super::registry::Hysteresis`] memory
+    /// lives in the registry slot ([`StoreRegistry::degrade_step`]), so
+    /// the probe is persistent across batches and workers.
     pub queue: Option<&'a AdmissionQueue>,
-    /// Persistent per-store degraded bits (indexed by
-    /// [`StoreId::index`]), shared by every worker so the
-    /// [`super::registry::Hysteresis`] state machine has memory across
-    /// batches. `None` falls back to the stateless probe (enter
-    /// threshold only, no hysteresis).
-    pub degrade: Option<&'a [AtomicBool]>,
     /// Trace-event ring; `None` (tracing off) costs one branch per
     /// accounted response.
     pub trace: Option<&'a TraceRing>,
@@ -166,26 +178,28 @@ pub struct ExecCtx<'a> {
 }
 
 impl<'a> ExecCtx<'a> {
-    /// Context with no queue probe, no degrade state, no tracing, and no
-    /// fault plan.
+    /// Context with no queue probe, no tracing, and no fault plan.
     pub fn plain(registry: &'a StoreRegistry, stats: &'a ServeStats, scan_threads: usize) -> Self {
         ExecCtx {
             registry,
             stats,
             scan_threads,
             queue: None,
-            degrade: None,
             trace: None,
             faults: None,
         }
     }
 }
 
-/// One store's slice of a gathered batch, split by request class. Slots
+/// One store's slice of a gathered batch, split by request class. The
+/// group owns the epoch-stamped snapshot it was sealed against — every
+/// kernel call and cache insert below runs on it, so a concurrent
+/// mutation (or drop) can never change this batch's answers. Slots
 /// carry their ticket's [`StageMarks`] so the kernel bracket can be
 /// stamped per `(store, class)` group call.
-#[derive(Default)]
 struct StoreGroup {
+    snapshot: Arc<StoreSnapshot>,
+    cache: Option<Arc<ResponseCache>>,
     recall_qs: Vec<crate::vsa::BinaryHV>,
     recall_slots: Vec<(ResponseSlot, StageMarks)>,
     topk_qs: Vec<crate::vsa::BinaryHV>,
@@ -198,6 +212,19 @@ struct StoreGroup {
 }
 
 impl StoreGroup {
+    fn sealed(snapshot: Arc<StoreSnapshot>, cache: Option<Arc<ResponseCache>>) -> StoreGroup {
+        StoreGroup {
+            snapshot,
+            cache,
+            recall_qs: Vec::new(),
+            recall_slots: Vec::new(),
+            topk_qs: Vec::new(),
+            topk_slots: Vec::new(),
+            fact_scenes: Vec::new(),
+            fact_slots: Vec::new(),
+        }
+    }
+
     fn executed(&self) -> usize {
         self.recall_qs.len() + self.topk_qs.len() + self.fact_scenes.len()
     }
@@ -207,10 +234,12 @@ impl StoreGroup {
 /// sample for the P² breakdowns, and a [`TraceEvent`] when the ring is
 /// on (one `Option` branch when it is not). The accounting instant
 /// stands in for the slot-fill time — stats are recorded before fills.
+#[allow(clippy::too_many_arguments)]
 fn account(
     latencies: &mut Vec<(StoreId, RequestKind, Duration, StageSample)>,
     trace: Option<&TraceRing>,
     store: StoreId,
+    epoch: u64,
     kind: RequestKind,
     marks: &StageMarks,
     degraded: bool,
@@ -224,6 +253,7 @@ fn account(
         ring.record(TraceEvent {
             seq: 0, // assigned by the ring
             store,
+            epoch,
             kind,
             stages,
             total_s: total.as_secs_f64(),
@@ -265,6 +295,13 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
     let registry = ctx.registry;
     let stats = ctx.stats;
     let now = Instant::now();
+    // The seal: each distinct store id resolves against the registry
+    // exactly once per batch, pinning the epoch-stamped snapshot (and
+    // its cache handle) every ticket for that store will use. A store
+    // dropped since admission resolves to `None` here — its tickets are
+    // answered `UnknownStore` below, uniformly for the whole batch.
+    type Sealed = Option<(Arc<StoreSnapshot>, Option<Arc<ResponseCache>>)>;
+    let mut sealed: BTreeMap<StoreId, Sealed> = BTreeMap::new();
     let mut groups: BTreeMap<StoreId, StoreGroup> = BTreeMap::new();
     // Depth-probed once per store per batch; degradation is a
     // batch-formation decision, not a per-ticket race.
@@ -285,44 +322,40 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
             continue;
         }
         let ServeRequest { store: store_id, op } = t.request;
-        let Some(store) = registry.store_by_id(store_id) else {
-            fills.push((t.slot, Err(ServeError::UnknownStore)));
-            unsupported += 1;
-            continue;
+        let (store, cache_arc) = match sealed
+            .entry(store_id)
+            .or_insert_with(|| registry.live(store_id))
+        {
+            Some((s, c)) => (Arc::clone(s), c.clone()),
+            None => {
+                fills.push((t.slot, Err(ServeError::UnknownStore)));
+                unsupported += 1;
+                continue;
+            }
         };
+        let epoch = store.epoch();
         let degraded = *degraded_stores.entry(store_id).or_insert_with(|| {
             match (store.spec().degrade_hysteresis(), ctx.queue) {
-                (Some(h), Some(q)) => {
-                    let depth = q.lane_len(store_id);
-                    match ctx.degrade.and_then(|bits| bits.get(store_id.index())) {
-                        // Persistent bit: enter at `h.enter`, leave only
-                        // once the lane drains below `h.exit` — no
-                        // flapping while the depth hovers at the
-                        // threshold.
-                        Some(bit) => {
-                            let next = h.next(bit.load(Ordering::Relaxed), depth);
-                            bit.store(next, Ordering::Relaxed);
-                            next
-                        }
-                        // Stateless fallback (direct-execution tests):
-                        // plain enter-threshold probe, as before.
-                        None => h.next(false, depth),
-                    }
-                }
+                // Persistent per-slot bit in the registry: enter at
+                // `h.enter`, leave only once the lane drains below
+                // `h.exit` — no flapping while the depth hovers at the
+                // threshold.
+                (Some(h), Some(q)) => registry.degrade_step(store_id, h, q.lane_len(store_id)),
                 _ => false,
             }
         });
-        let cache = store.cache();
+        let cache = cache_arc.as_deref();
         match op {
             RequestOp::Recall { query } => {
                 if query.dim() != store.dim() {
                     fills.push((t.slot, Err(ServeError::InvalidDimension)));
                     unsupported += 1;
-                } else if let Some(resp) = cache.and_then(|c| c.get_recall(&query)) {
+                } else if let Some(resp) = cache.and_then(|c| c.get_recall(&query, epoch)) {
                     account(
                         &mut latencies,
                         ctx.trace,
                         store_id,
+                        epoch,
                         RequestKind::Recall,
                         &t.marks,
                         false,
@@ -330,7 +363,9 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                     );
                     fills.push((t.slot, Ok(resp)));
                 } else {
-                    let g = groups.entry(store_id).or_default();
+                    let g = groups
+                        .entry(store_id)
+                        .or_insert_with(|| StoreGroup::sealed(Arc::clone(&store), cache_arc.clone()));
                     g.recall_qs.push(query);
                     g.recall_slots.push((t.slot, t.marks));
                 }
@@ -339,13 +374,14 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                 if query.dim() != store.dim() {
                     fills.push((t.slot, Err(ServeError::InvalidDimension)));
                     unsupported += 1;
-                } else if let Some(resp) = cache.and_then(|c| c.get_topk(&query, k)) {
+                } else if let Some(resp) = cache.and_then(|c| c.get_topk(&query, k, epoch)) {
                     // a full-k hit costs no kernel work, so degraded
                     // stores still serve it undegraded
                     account(
                         &mut latencies,
                         ctx.trace,
                         store_id,
+                        epoch,
                         RequestKind::RecallTopK,
                         &t.marks,
                         false,
@@ -359,7 +395,9 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                     } else {
                         (k, false)
                     };
-                    let g = groups.entry(store_id).or_default();
+                    let g = groups
+                        .entry(store_id)
+                        .or_insert_with(|| StoreGroup::sealed(Arc::clone(&store), cache_arc.clone()));
                     g.topk_qs.push(query);
                     g.topk_slots.push((t.slot, t.marks, k_eff, deg));
                 }
@@ -380,7 +418,9 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                     fills.push((t.slot, Err(ServeError::TenantOverloaded)));
                 }
                 Some(_) => {
-                    let g = groups.entry(store_id).or_default();
+                    let g = groups
+                        .entry(store_id)
+                        .or_insert_with(|| StoreGroup::sealed(Arc::clone(&store), cache_arc.clone()));
                     g.fact_scenes.push(scene);
                     g.fact_slots.push((t.slot, t.marks));
                 }
@@ -399,18 +439,29 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
     }
 
     for (store_id, group) in groups {
-        let store = registry
-            .store_by_id(store_id)
-            .expect("grouped tickets resolved their store above");
-        let cache = store.cache();
+        // No registry re-resolution here: the group owns the snapshot it
+        // was sealed against, so a drop or mutation that landed after
+        // classification cannot change (or panic) this dispatch.
+        let StoreGroup {
+            snapshot: store,
+            cache,
+            recall_qs,
+            recall_slots,
+            topk_qs,
+            topk_slots,
+            fact_scenes,
+            fact_slots,
+        } = group;
+        let epoch = store.epoch();
+        let cache = cache.as_deref();
         let mut work = StoreWork::default();
 
-        if !group.recall_qs.is_empty() {
-            let n_q = group.recall_qs.len() as u64;
+        if !recall_qs.is_empty() {
+            let n_q = recall_qs.len() as u64;
             let kstart = Instant::now();
             let (results, timings, scan_prune) = store
                 .cleanup()
-                .recall_batch_stats(&group.recall_qs, ctx.scan_threads);
+                .recall_batch_stats(&recall_qs, ctx.scan_threads);
             let kend = Instant::now();
             work.timings.extend(timings);
             // Measured roofline inputs: the pruned scan streamed
@@ -425,21 +476,19 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                 bytes_written: n_q * 16,
             });
             work.prune.merge(&scan_prune);
-            for (((slot, mut marks), (index, cosine)), query) in group
-                .recall_slots
-                .into_iter()
-                .zip(results)
-                .zip(group.recall_qs)
+            for (((slot, mut marks), (index, cosine)), query) in
+                recall_slots.into_iter().zip(results).zip(recall_qs)
             {
                 marks.mark_kernel(kstart, kend);
                 let resp = ServeResponse::Recall { index, cosine };
                 if let Some(c) = cache {
-                    c.insert(ServeRequest::recall_on(store_id, query), &resp);
+                    c.insert(ServeRequest::recall_on(store_id, query), &resp, epoch);
                 }
                 account(
                     &mut latencies,
                     ctx.trace,
                     store_id,
+                    epoch,
                     RequestKind::Recall,
                     &marks,
                     false,
@@ -449,24 +498,23 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
             }
         }
 
-        if !group.topk_qs.is_empty() {
+        if !topk_qs.is_empty() {
             // One scan at the group's largest k; per-ticket answers are
             // prefixes of it (top-k is prefix-stable in k — see
             // `BinaryCodebook::top_k`). Cache entries are keyed at each
             // ticket's own k, so a hit can never leak a different k's
             // answer.
-            let k_max = group
-                .topk_slots
+            let k_max = topk_slots
                 .iter()
                 .map(|&(_, _, k, _)| k)
                 .max()
                 .unwrap_or(0);
-            let n_q = group.topk_qs.len() as u64;
+            let n_q = topk_qs.len() as u64;
             let kstart = Instant::now();
             let (results, timings, scan_prune) =
                 store
                     .cleanup()
-                    .recall_topk_batch_stats(&group.topk_qs, k_max, ctx.scan_threads);
+                    .recall_topk_batch_stats(&topk_qs, k_max, ctx.scan_threads);
             let kend = Instant::now();
             work.timings.extend(timings);
             work.measured[RequestKind::RecallTopK.index()].merge(&KernelWork {
@@ -477,11 +525,8 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                 bytes_written: n_q * k_max as u64 * 16,
             });
             work.prune.merge(&scan_prune);
-            for (((slot, mut marks, k, deg), mut hits), query) in group
-                .topk_slots
-                .into_iter()
-                .zip(results)
-                .zip(group.topk_qs)
+            for (((slot, mut marks, k, deg), mut hits), query) in
+                topk_slots.into_iter().zip(results).zip(topk_qs)
             {
                 marks.mark_kernel(kstart, kend);
                 hits.truncate(k);
@@ -494,7 +539,7 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                     }
                 } else {
                     if let Some(c) = cache {
-                        c.insert(ServeRequest::recall_topk_on(store_id, query, k), &resp);
+                        c.insert(ServeRequest::recall_topk_on(store_id, query, k), &resp, epoch);
                     }
                     resp
                 };
@@ -502,6 +547,7 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                     &mut latencies,
                     ctx.trace,
                     store_id,
+                    epoch,
                     RequestKind::RecallTopK,
                     &marks,
                     deg,
@@ -511,14 +557,14 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
             }
         }
 
-        if !group.fact_scenes.is_empty() {
+        if !fact_scenes.is_empty() {
             let res = store
                 .resonator()
-                .expect("factorize tickets imply their store has a resonator");
+                .expect("factorize tickets imply their sealed snapshot has a resonator");
             let (estimates, rscratch) = scratch.bufs(store_id, res);
             let decode_before = *rscratch.prune_stats();
             let kstart = Instant::now();
-            let results = res.factorize_batch_with(&group.fact_scenes, estimates, rscratch);
+            let results = res.factorize_batch_with(&fact_scenes, estimates, rscratch);
             let kend = Instant::now();
             // attribute this batch's pruned per-factor index decodes to
             // the store's telemetry (the scratch accumulates across
@@ -544,12 +590,13 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
                 bytes_read: total_iters * 8 * shape,
                 bytes_written: (results.len() as u64) * res.n_factors() as u64 * 8,
             });
-            for ((slot, mut marks), r) in group.fact_slots.into_iter().zip(results) {
+            for ((slot, mut marks), r) in fact_slots.into_iter().zip(results) {
                 marks.mark_kernel(kstart, kend);
                 account(
                     &mut latencies,
                     ctx.trace,
                     store_id,
+                    epoch,
                     RequestKind::Factorize,
                     &marks,
                     false,
@@ -608,11 +655,8 @@ mod tests {
     }
 
     fn stats_for(registry: &StoreRegistry) -> ServeStats {
-        let names: Vec<(&str, usize)> = registry
-            .stores()
-            .iter()
-            .map(|s| (s.name(), s.n_shards()))
-            .collect();
+        let views = registry.store_views();
+        let names: Vec<(&str, usize)> = views.iter().map(|s| (s.name(), s.n_shards())).collect();
         ServeStats::new(&names)
     }
 
@@ -910,7 +954,7 @@ mod tests {
         );
         assert_eq!(snap.completed, 4, "cache hits still count as completed");
         assert_eq!(snap.batches, 1, "all-hit batches don't count toward occupancy");
-        let c = registry.stores()[0].cache().unwrap().counters();
+        let c = registry.cache_of(StoreId::DEFAULT).unwrap().counters();
         assert_eq!(c.hits, 2);
         assert_eq!(c.misses, 2);
         // a different k is a miss, answered by the kernels at its own k
@@ -926,7 +970,7 @@ mod tests {
                 hits: cm.recall_topk(&q, 2)
             })
         );
-        let c = registry.stores()[0].cache().unwrap().counters();
+        let c = registry.cache_of(StoreId::DEFAULT).unwrap().counters();
         assert_eq!(c.hits, 2, "k=2 probe must not hit the k=4 entry");
     }
 
@@ -1029,7 +1073,6 @@ mod tests {
             stats: &stats,
             scan_threads: 1,
             queue: Some(&q),
-            degrade: None,
             trace: None,
             faults: None,
         };
@@ -1119,7 +1162,6 @@ mod tests {
         );
         let stats = stats_for(&registry);
         let mut scratch = WorkerScratch::new();
-        let bits = [AtomicBool::new(false)];
         let q = AdmissionQueue::with_lanes(16, &[LaneSpec { weight: 1, quota: 16 }]);
         for i in 0..4 {
             let (t, _s) = ticket(
@@ -1133,7 +1175,6 @@ mod tests {
             stats: &stats,
             scan_threads: 1,
             queue: Some(&q),
-            degrade: Some(&bits),
             trace: None,
             faults: None,
         };
@@ -1146,20 +1187,18 @@ mod tests {
             execute(vec![t], ctx, scratch);
             matches!(s.wait(), Ok(ServeResponse::Degraded { .. }))
         };
-        // depth 4 hits the enter threshold: degraded mode engages
+        // depth 4 hits the enter threshold: degraded mode engages (the
+        // persistent bit lives in the registry's store slot)
         assert!(served_degraded(&ctx, &mut scratch));
-        assert!(bits[0].load(Ordering::Relaxed));
-        // drain to depth 3 — below enter but above exit. The stateless
-        // probe would restore full service here; the persistent bit
-        // holds degraded until the backlog really drains.
+        // drain to depth 3 — below enter but above exit. A stateless
+        // probe would restore full service here; the registry's
+        // persistent bit holds degraded until the backlog really drains.
         q.pop_until(Instant::now()).unwrap();
         assert!(served_degraded(&ctx, &mut scratch));
-        assert!(bits[0].load(Ordering::Relaxed));
         // drain below exit (depth 1 < 2): full service resumes
         q.pop_until(Instant::now()).unwrap();
         q.pop_until(Instant::now()).unwrap();
         assert!(!served_degraded(&ctx, &mut scratch));
-        assert!(!bits[0].load(Ordering::Relaxed));
     }
 
     #[test]
@@ -1182,7 +1221,6 @@ mod tests {
             stats: &stats,
             scan_threads: 1,
             queue: None,
-            degrade: None,
             trace: None,
             faults: Some(&plan),
         };
@@ -1192,5 +1230,74 @@ mod tests {
         let (idx, cos) = cm.recall(&query);
         assert_eq!(s.wait(), Ok(ServeResponse::Recall { index: idx, cosine: cos }));
         assert_eq!(plan.injected().2, 1, "one delayed dispatch counted");
+    }
+
+    #[test]
+    fn store_dropped_between_admission_and_execution_is_answered_unknown() {
+        // The admit-vs-drop race: a ticket validated at submit time can
+        // outlive its store. Execution must answer `UnknownStore` from
+        // the failed seal — never panic, never scan a freed snapshot —
+        // and other stores' tickets in the same batch still serve.
+        let mut rng = Rng::new(81);
+        let cb_a = BinaryCodebook::random(&mut rng, 24, 512);
+        let cb_b = BinaryCodebook::random(&mut rng, 16, 512);
+        let cm_a = CleanupMemory::new(cb_a.clone());
+        let mut registry = StoreRegistry::new();
+        let a = registry.register("keep", &cb_a, None, uncached_spec(2));
+        let b = registry.register("doomed", &cb_b, None, uncached_spec(2));
+        let stats = stats_for(&registry);
+        let mut scratch = WorkerScratch::new();
+        let qa = BinaryHV::random(&mut rng, 512);
+        let (t_a, s_a) = ticket(ServeRequest::recall_on(a, qa.clone()), Duration::from_secs(5));
+        let (t_b, s_b) = ticket(
+            ServeRequest::recall_on(b, BinaryHV::random(&mut rng, 512)),
+            Duration::from_secs(5),
+        );
+        // the store disappears while the tickets sit in the batch window
+        registry.drop_store(b).unwrap();
+        execute(
+            vec![t_b, t_a],
+            &ExecCtx::plain(&registry, &stats, 1),
+            &mut scratch,
+        );
+        assert_eq!(s_b.wait(), Err(ServeError::UnknownStore));
+        let (idx, cos) = cm_a.recall(&qa);
+        assert_eq!(s_a.wait(), Ok(ServeResponse::Recall { index: idx, cosine: cos }));
+        assert_eq!(stats.snapshot().unsupported, 1);
+    }
+
+    #[test]
+    fn cache_entries_from_old_epochs_never_serve_after_mutation() {
+        let mut rng = Rng::new(91);
+        let cb = BinaryCodebook::random(&mut rng, 24, 512);
+        let registry = StoreRegistry::single(&cb, None, StoreSpec {
+            shards: 3,
+            ..StoreSpec::default()
+        });
+        let stats = stats_for(&registry);
+        let mut scratch = WorkerScratch::new();
+        let q = BinaryHV::random(&mut rng, 512);
+        let mut run = |scratch: &mut WorkerScratch| {
+            let (t, s) = ticket(ServeRequest::recall(q.clone()), Duration::from_secs(5));
+            execute(vec![t], &ExecCtx::plain(&registry, &stats, 1), scratch);
+            s.wait().unwrap()
+        };
+        // epoch 0: computed and cached, then served from the cache
+        let first = run(&mut scratch);
+        assert_eq!(run(&mut scratch), first);
+        let c = registry.cache_of(StoreId::DEFAULT).unwrap();
+        assert_eq!(c.counters().hits, 1);
+        // mutate: insert the query itself, which beats every original
+        registry.insert_item(StoreId::DEFAULT, q.clone()).unwrap();
+        // the epoch-0 entry is structurally unreachable at epoch 1: the
+        // kernels recompute against the new snapshot and find the item
+        let third = run(&mut scratch);
+        let snap = registry.snapshot_of(StoreId::DEFAULT).unwrap();
+        let (idx, cos) = CleanupMemory::new(snap.codebook().clone()).recall(&q);
+        assert_eq!(idx, 24, "inserted item wins the post-mutation recall");
+        assert_eq!(third, ServeResponse::Recall { index: idx, cosine: cos });
+        let counters = c.counters();
+        assert_eq!(counters.hits, 1, "epoch-0 entry must not serve epoch 1");
+        assert_eq!(counters.misses, 2);
     }
 }

@@ -2,25 +2,31 @@
 //!
 //! Production recall traffic repeats: the same noisy percept or symbol is
 //! looked up again and again (the reuse the paper's Sec. VI co-design
-//! exploits). Each registered [`super::Store`] owns one cache; it sits at
+//! exploits). Each registered store slot owns one cache that persists
+//! across the store's epochs; it sits at
 //! batch-formation time in [`super::batcher::execute`]: a hit fills the
 //! ticket's response slot immediately and the request never reaches a
 //! kernel, so repeated queries cost a hash fold instead of an item-memory
 //! scan.
 //!
 //! Keys are **exact**: shard selection and hash-bucket placement use a
-//! 64-bit fold of the query words mixed with the request class, `k`, and
-//! the target [`StoreId`], but every probe verifies full word-for-word
-//! query equality (plus class, `k`, and store) before serving — a fold
-//! collision degrades to a miss-like walk of a (nearly always
-//! single-entry) bucket, never to a wrong response. Responses are
-//! therefore bit-identical to what the kernels would have produced, and
-//! entries can never be served across differing `k`, request class, or
-//! store: even if two stores' caches were accidentally swapped, the
+//! 64-bit fold of the query words mixed with the request class, `k`,
+//! the target [`StoreId`], and the store **epoch** that computed the
+//! response, but every probe verifies full word-for-word query equality
+//! (plus class, `k`, store, and epoch) before serving — a fold collision
+//! degrades to a miss-like walk of a (nearly always single-entry)
+//! bucket, never to a wrong response. Responses are therefore
+//! bit-identical to what the kernels would have produced, and entries
+//! can never be served across differing `k`, request class, store, or
+//! epoch: even if two stores' caches were accidentally swapped, the
 //! store id baked into every key would turn each probe into a miss
-//! instead of a cross-tenant answer. `serve-bench`'s per-store oracle
-//! verification covers the whole path. Factorize requests are not cached
-//! (real-valued scenes have no exact equality story under f32 noise).
+//! instead of a cross-tenant answer, and a store mutation (which bumps
+//! the epoch — see [`super::registry`]) makes every older entry
+//! structurally unreachable, so stale hits are impossible without any
+//! invalidation walk; dead epochs' entries simply age out of the FIFO.
+//! `serve-bench`'s per-store oracle verification covers the whole path.
+//! Factorize requests are not cached (real-valued scenes have no exact
+//! equality story under f32 noise).
 //!
 //! Eviction is per-shard FIFO: each shard holds at most
 //! `capacity / shards` entries and evicts its oldest insertion when full
@@ -89,14 +95,15 @@ impl CacheCounters {
 const CLASS_RECALL: u8 = 1;
 const CLASS_TOPK: u8 = 2;
 
-/// 64-bit fold of the query words, seeded by class, `k`, and store id
-/// (splitmix-style multiply-xor mixing; deterministic across runs and
-/// platforms).
-fn fold_query(words: &[u64], class: u8, k: usize, store: StoreId) -> u64 {
+/// 64-bit fold of the query words, seeded by class, `k`, store id, and
+/// store epoch (splitmix-style multiply-xor mixing; deterministic
+/// across runs and platforms).
+fn fold_query(words: &[u64], class: u8, k: usize, store: StoreId, epoch: u64) -> u64 {
     let mut h = 0x9e37_79b9_7f4a_7c15u64
         ^ (class as u64).wrapping_mul(0xff51_afd7_ed55_8ccd)
         ^ (k as u64).wrapping_mul(0xc4ce_b9fe_1a85_ec53)
-        ^ (store.index() as u64).wrapping_mul(0x2545_f491_4f6c_dd1d);
+        ^ (store.index() as u64).wrapping_mul(0x2545_f491_4f6c_dd1d)
+        ^ epoch.wrapping_mul(0x9e6c_63d0_876a_68b5);
     for &w in words {
         h ^= w;
         h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
@@ -112,13 +119,18 @@ struct Entry {
     store: StoreId,
     class: u8,
     k: usize,
+    epoch: u64,
     query: BinaryHV,
     response: ServeResponse,
 }
 
 impl Entry {
-    fn matches(&self, store: StoreId, class: u8, k: usize, query: &BinaryHV) -> bool {
-        self.store == store && self.class == class && self.k == k && &self.query == query
+    fn matches(&self, store: StoreId, class: u8, k: usize, epoch: u64, query: &BinaryHV) -> bool {
+        self.store == store
+            && self.class == class
+            && self.k == k
+            && self.epoch == epoch
+            && &self.query == query
     }
 }
 
@@ -199,36 +211,43 @@ impl ResponseCache {
     }
 
     /// Look up a response for `request`, keyed by the request's own
-    /// store id. Counts a hit or miss for cacheable classes; factorize
-    /// requests return `None` uncounted.
-    pub fn get(&self, request: &ServeRequest) -> Option<ServeResponse> {
+    /// store id at serving epoch `epoch`. Counts a hit or miss for
+    /// cacheable classes; factorize requests return `None` uncounted.
+    pub fn get(&self, request: &ServeRequest, epoch: u64) -> Option<ServeResponse> {
         let (store, class, k, query) = key_parts(request)?;
-        self.lookup(store, class, k, query)
+        self.lookup(store, class, k, epoch, query)
     }
 
     /// Probe for a cached recall response against this cache's own store
-    /// (the batcher's hot-path entry; avoids materializing a
-    /// `ServeRequest`).
-    pub fn get_recall(&self, query: &BinaryHV) -> Option<ServeResponse> {
-        self.lookup(self.store, CLASS_RECALL, 0, query)
+    /// at the sealed `epoch` (the batcher's hot-path entry; avoids
+    /// materializing a `ServeRequest`).
+    pub fn get_recall(&self, query: &BinaryHV, epoch: u64) -> Option<ServeResponse> {
+        self.lookup(self.store, CLASS_RECALL, 0, epoch, query)
     }
 
     /// Probe for a cached top-`k` response at exactly this `k`, against
-    /// this cache's own store.
-    pub fn get_topk(&self, query: &BinaryHV, k: usize) -> Option<ServeResponse> {
-        self.lookup(self.store, CLASS_TOPK, k, query)
+    /// this cache's own store at the sealed `epoch`.
+    pub fn get_topk(&self, query: &BinaryHV, k: usize, epoch: u64) -> Option<ServeResponse> {
+        self.lookup(self.store, CLASS_TOPK, k, epoch, query)
     }
 
     // Lock poisoning: a worker that panics mid-probe must not brick the
     // shard for every later request — entries are verified on read, so a
     // recovered guard can at worst miss, never serve a wrong answer.
-    fn lookup(&self, store: StoreId, class: u8, k: usize, query: &BinaryHV) -> Option<ServeResponse> {
-        let fold = fold_query(query.words(), class, k, store);
+    fn lookup(
+        &self,
+        store: StoreId,
+        class: u8,
+        k: usize,
+        epoch: u64,
+        query: &BinaryHV,
+    ) -> Option<ServeResponse> {
+        let fold = fold_query(query.words(), class, k, store, epoch);
         let g = self.shard_of(fold).lock().unwrap_or_else(|p| p.into_inner());
         let found = g
             .map
             .get(&fold)
-            .and_then(|bucket| bucket.iter().find(|e| e.matches(store, class, k, query)))
+            .and_then(|bucket| bucket.iter().find(|e| e.matches(store, class, k, epoch, query)))
             .map(|e| e.response.clone());
         drop(g);
         match found {
@@ -243,26 +262,26 @@ impl ResponseCache {
         }
     }
 
-    /// Insert a computed response (no-op for factorize or when the exact
-    /// key is already resident). Evicts the shard's oldest insertion when
-    /// the shard is at capacity.
-    pub fn put(&self, request: &ServeRequest, response: &ServeResponse) {
+    /// Insert a response computed at `epoch` (no-op for factorize or
+    /// when the exact key is already resident). Evicts the shard's
+    /// oldest insertion when the shard is at capacity.
+    pub fn put(&self, request: &ServeRequest, response: &ServeResponse, epoch: u64) {
         let Some((store, class, k, query)) = key_parts(request) else {
             return;
         };
-        self.insert_parts(store, class, k, query.clone(), response);
+        self.insert_parts(store, class, k, epoch, query.clone(), response);
     }
 
     /// [`Self::put`] taking ownership of the request, so hot-path callers
     /// that already own the query pay no extra clone.
-    pub fn insert(&self, request: ServeRequest, response: &ServeResponse) {
+    pub fn insert(&self, request: ServeRequest, response: &ServeResponse, epoch: u64) {
         let store = request.store;
         match request.op {
             RequestOp::Recall { query } => {
-                self.insert_parts(store, CLASS_RECALL, 0, query, response)
+                self.insert_parts(store, CLASS_RECALL, 0, epoch, query, response)
             }
             RequestOp::RecallTopK { query, k } => {
-                self.insert_parts(store, CLASS_TOPK, k, query, response)
+                self.insert_parts(store, CLASS_TOPK, k, epoch, query, response)
             }
             RequestOp::Factorize { .. } => {}
         }
@@ -273,14 +292,15 @@ impl ResponseCache {
         store: StoreId,
         class: u8,
         k: usize,
+        epoch: u64,
         query: BinaryHV,
         response: &ServeResponse,
     ) {
-        let fold = fold_query(query.words(), class, k, store);
+        let fold = fold_query(query.words(), class, k, store, epoch);
         let mut g = self.shard_of(fold).lock().unwrap_or_else(|p| p.into_inner());
         let st = &mut *g;
         if let Some(bucket) = st.map.get(&fold) {
-            if bucket.iter().any(|e| e.matches(store, class, k, &query)) {
+            if bucket.iter().any(|e| e.matches(store, class, k, epoch, &query)) {
                 return;
             }
         }
@@ -302,6 +322,7 @@ impl ResponseCache {
             store,
             class,
             k,
+            epoch,
             query,
             response: response.clone(),
         });
@@ -359,17 +380,17 @@ mod tests {
         let topk2 = ServeResponse::RecallTopK {
             hits: vec![(3, 0.75), (1, 0.5)],
         };
-        assert_eq!(cache.get(&recall_req(&q)), None);
-        cache.put(&recall_req(&q), &recall_resp);
-        assert_eq!(cache.get(&recall_req(&q)), Some(recall_resp.clone()));
+        assert_eq!(cache.get(&recall_req(&q), 0), None);
+        cache.put(&recall_req(&q), &recall_resp, 0);
+        assert_eq!(cache.get(&recall_req(&q), 0), Some(recall_resp.clone()));
         // same query, different class or k: never cross-served
-        assert_eq!(cache.get(&topk_req(&q, 2)), None);
-        cache.put(&topk_req(&q, 2), &topk2);
-        assert_eq!(cache.get(&topk_req(&q, 2)), Some(topk2));
-        assert_eq!(cache.get(&topk_req(&q, 3)), None);
+        assert_eq!(cache.get(&topk_req(&q, 2), 0), None);
+        cache.put(&topk_req(&q, 2), &topk2, 0);
+        assert_eq!(cache.get(&topk_req(&q, 2), 0), Some(topk2));
+        assert_eq!(cache.get(&topk_req(&q, 3), 0), None);
         // different query, same class: miss
         let q2 = BinaryHV::random(&mut rng, 512);
-        assert_eq!(cache.get(&recall_req(&q2)), None);
+        assert_eq!(cache.get(&recall_req(&q2), 0), None);
         let c = cache.counters();
         assert_eq!(c.hits, 2);
         assert_eq!(c.misses, 4);
@@ -390,20 +411,48 @@ mod tests {
             index: 5,
             cosine: 0.9,
         };
-        cache.put(&ServeRequest::recall_on(StoreId(0), q.clone()), &resp);
+        cache.put(&ServeRequest::recall_on(StoreId(0), q.clone()), &resp, 0);
         assert_eq!(
-            cache.get(&ServeRequest::recall_on(StoreId(0), q.clone())),
+            cache.get(&ServeRequest::recall_on(StoreId(0), q.clone()), 0),
             Some(resp.clone())
         );
         assert_eq!(
-            cache.get(&ServeRequest::recall_on(StoreId(1), q.clone())),
+            cache.get(&ServeRequest::recall_on(StoreId(1), q.clone()), 0),
             None,
             "same query under a different store id must miss"
         );
         // hot-path probes are scoped to the cache's own store
-        assert_eq!(cache.get_recall(&q), Some(resp));
+        assert_eq!(cache.get_recall(&q, 0), Some(resp));
         let other = ResponseCache::for_store(CacheConfig::default(), StoreId(1));
-        assert_eq!(other.get_recall(&q), None);
+        assert_eq!(other.get_recall(&q, 0), None);
+    }
+
+    #[test]
+    fn entries_are_scoped_to_their_epoch() {
+        // a store mutation bumps the serving epoch; every entry cached
+        // under the old epoch must become structurally unreachable —
+        // that IS the invalidation mechanism (no walk, no flag)
+        let cache = ResponseCache::new(CacheConfig::default());
+        let mut rng = Rng::new(17);
+        let q = BinaryHV::random(&mut rng, 512);
+        let old = ServeResponse::Recall {
+            index: 2,
+            cosine: 0.8,
+        };
+        let new = ServeResponse::Recall {
+            index: 9,
+            cosine: 0.95,
+        };
+        cache.put(&recall_req(&q), &old, 0);
+        assert_eq!(cache.get(&recall_req(&q), 0), Some(old.clone()));
+        // epoch bumped: the old entry never hits again
+        assert_eq!(cache.get(&recall_req(&q), 1), None);
+        assert_eq!(cache.get_recall(&q, 1), None);
+        cache.put(&recall_req(&q), &new, 1);
+        assert_eq!(cache.get(&recall_req(&q), 1), Some(new));
+        // both epochs resident until FIFO ages the dead one out
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.get(&recall_req(&q), 0), Some(old));
     }
 
     #[test]
@@ -418,8 +467,8 @@ mod tests {
             index: 1,
             cosine: 0.5,
         };
-        cache.put(&recall_req(&q), &resp);
-        cache.put(&recall_req(&q), &resp);
+        cache.put(&recall_req(&q), &resp, 0);
+        cache.put(&recall_req(&q), &resp, 0);
         assert_eq!(cache.len(), 1);
         assert_eq!(cache.counters().inserts, 1);
     }
@@ -428,7 +477,7 @@ mod tests {
     fn factorize_is_never_cached() {
         let cache = ResponseCache::new(CacheConfig::default());
         let req = ServeRequest::factorize(crate::vsa::RealHV::zeros(64));
-        assert_eq!(cache.get(&req), None);
+        assert_eq!(cache.get(&req, 0), None);
         cache.put(
             &req,
             &ServeResponse::Factorize {
@@ -436,6 +485,7 @@ mod tests {
                 iterations: 1,
                 converged: true,
             },
+            0,
         );
         assert!(cache.is_empty());
         let c = cache.counters();
@@ -457,6 +507,7 @@ mod tests {
                     index: i,
                     cosine: 1.0,
                 },
+                0,
             );
         }
         let c = cache.counters();
@@ -464,11 +515,11 @@ mod tests {
         assert_eq!(c.evictions, 2);
         assert_eq!(c.entries, 4);
         // oldest two evicted, newest four resident
-        assert_eq!(cache.get(&recall_req(&qs[0])), None);
-        assert_eq!(cache.get(&recall_req(&qs[1])), None);
+        assert_eq!(cache.get(&recall_req(&qs[0]), 0), None);
+        assert_eq!(cache.get(&recall_req(&qs[1]), 0), None);
         for (i, q) in qs.iter().enumerate().skip(2) {
             assert_eq!(
-                cache.get(&recall_req(q)),
+                cache.get(&recall_req(q), 0),
                 Some(ServeResponse::Recall {
                     index: i,
                     cosine: 1.0
@@ -479,16 +530,19 @@ mod tests {
     }
 
     #[test]
-    fn fold_separates_classes_k_and_stores() {
+    fn fold_separates_classes_k_stores_and_epochs() {
         let words = [0x1234u64, 0xdeadbeefu64];
-        let a = fold_query(&words, CLASS_RECALL, 0, StoreId(0));
-        let b = fold_query(&words, CLASS_TOPK, 0, StoreId(0));
-        let c = fold_query(&words, CLASS_TOPK, 1, StoreId(0));
-        let d = fold_query(&words, CLASS_RECALL, 0, StoreId(1));
+        let a = fold_query(&words, CLASS_RECALL, 0, StoreId(0), 0);
+        let b = fold_query(&words, CLASS_TOPK, 0, StoreId(0), 0);
+        let c = fold_query(&words, CLASS_TOPK, 1, StoreId(0), 0);
+        let d = fold_query(&words, CLASS_RECALL, 0, StoreId(1), 0);
+        let e = fold_query(&words, CLASS_RECALL, 0, StoreId(0), 1);
         assert_ne!(a, b);
         assert_ne!(b, c);
         assert_ne!(a, d, "store id must perturb the fold");
+        assert_ne!(a, e, "epoch must perturb the fold");
+        assert_ne!(d, e);
         // deterministic
-        assert_eq!(a, fold_query(&words, CLASS_RECALL, 0, StoreId(0)));
+        assert_eq!(a, fold_query(&words, CLASS_RECALL, 0, StoreId(0), 0));
     }
 }

@@ -21,18 +21,28 @@
 //! [`ServeError::Internal`], the worker's scratch is rebuilt, and the
 //! loop continues — one bad batch (or one injected fault) never takes
 //! the engine down.
+//!
+//! Stores are live-mutable while the engine serves: [`ServeEngine::insert_item`],
+//! [`ServeEngine::delete_item`], [`ServeEngine::create_store`], and
+//! [`ServeEngine::drop_store`] delegate to the registry's epoch-based
+//! snapshot swap. In-flight batches finish against the snapshot they were
+//! sealed on; a ticket admitted for a store that is dropped before its
+//! batch executes is answered [`ServeError::UnknownStore`] at execute
+//! time (the admit-vs-drop race is answered, never a panic). Creating a
+//! store also grows the stats table ([`ServeStats::register_store`]) and
+//! opens its queue lane ([`AdmissionQueue::set_lane`]) so observability
+//! and fair scheduling cover it from its first request.
 
 use super::batcher::{self, BatchPolicy, ExecCtx, WorkerScratch};
 use super::cache::CacheConfig;
 use super::faults::{FaultConfig, FaultPlan};
 use super::queue::{AdmissionQueue, LaneSpec, Priority, ResponseSlot, Ticket};
-use super::registry::{StoreId, StoreRegistry, StoreSpec};
+use super::registry::{MutateError, StoreId, StoreRegistry, StoreSpec};
 use super::stats::{ServeStats, StatsSnapshot};
 use super::trace::{StageMarks, TraceEvent, TraceRing};
 use super::{ServeError, ServeRequest, ServeResponse};
-use crate::vsa::{BinaryCodebook, Resonator};
+use crate::vsa::{BinaryCodebook, BinaryHV, Resonator};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -107,9 +117,6 @@ struct Shared {
     faults: Option<FaultPlan>,
     /// Trace-event ring, when `EngineConfig::trace_capacity` asked for one.
     trace: Option<TraceRing>,
-    /// Persistent per-store degraded-mode bits (indexed by
-    /// [`StoreId::index`]) driving the batcher's hysteresis probe.
-    degrade: Vec<AtomicBool>,
 }
 
 /// Handle to an in-flight asynchronous submission.
@@ -198,21 +205,18 @@ impl ServeEngine {
             !registry.is_empty(),
             "engine needs at least one registered store"
         );
-        let store_shapes: Vec<(&str, usize)> = registry
-            .stores()
-            .iter()
-            .map(|s| (s.name(), s.n_shards()))
-            .collect();
+        let views = registry.store_views();
+        let store_shapes: Vec<(&str, usize)> =
+            views.iter().map(|s| (s.name(), s.n_shards())).collect();
         let stats = ServeStats::new(&store_shapes);
-        let lanes: Vec<LaneSpec> = registry
-            .stores()
+        let lanes: Vec<LaneSpec> = views
             .iter()
             .map(|s| LaneSpec {
                 weight: s.spec().weight.max(1),
                 quota: s.spec().quota.unwrap_or(cfg.queue_capacity),
             })
             .collect();
-        let degrade = (0..lanes.len()).map(|_| AtomicBool::new(false)).collect();
+        drop(views);
         let shared = Arc::new(Shared {
             queue: AdmissionQueue::with_lanes(cfg.queue_capacity, &lanes),
             registry,
@@ -224,7 +228,6 @@ impl ServeEngine {
             scan_threads: cfg.scan_threads.max(1),
             faults: cfg.faults.map(FaultPlan::new),
             trace: cfg.trace_capacity.map(TraceRing::new),
-            degrade,
         });
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
@@ -254,12 +257,78 @@ impl ServeEngine {
         &self.cfg
     }
 
-    /// The engine's store table: `registry().stores()` for all stores,
-    /// `registry().store_by_id(id)` for one. (The old single-store
-    /// `store()` accessor is gone — with several stores behind the
-    /// engine it had no honest meaning.)
+    /// The engine's store table: `registry().store_views()` for every
+    /// live store's current snapshot, `registry().snapshot_of(id)` for
+    /// one. (The old single-store `store()` accessor is gone — with
+    /// several stores behind the engine it had no honest meaning.)
     pub fn registry(&self) -> &StoreRegistry {
         &self.shared.registry
+    }
+
+    /// Hot-create a store while serving: a fresh never-reused id at
+    /// epoch 0, with its own stats section and queue lane, admittable
+    /// the moment this returns. Refuses names owned by a live store.
+    pub fn create_store(
+        &self,
+        name: &str,
+        codebook: &BinaryCodebook,
+        resonator: Option<Resonator>,
+        spec: StoreSpec,
+    ) -> Result<StoreId, MutateError> {
+        let id = self
+            .shared
+            .registry
+            .create_store(name, codebook, resonator, spec)?;
+        let shards = self
+            .shared
+            .registry
+            .snapshot_of(id)
+            .map(|s| s.n_shards())
+            .unwrap_or(1);
+        // Grow the stats table and the lane config to cover the new
+        // slot. Stats sections and registry slots are both append-only
+        // and id-ordered, so the new section lands at `id.index()`.
+        self.shared.stats.register_store(name, shards);
+        self.shared.queue.set_lane(
+            id,
+            LaneSpec {
+                weight: spec.weight.max(1),
+                quota: spec.quota.unwrap_or(self.cfg.queue_capacity),
+            },
+        );
+        Ok(id)
+    }
+
+    /// Hot-drop a store: tombstones its registry slot. Already-admitted
+    /// tickets are answered [`ServeError::UnknownStore`] when their
+    /// batch executes; in-flight batches sealed before the drop finish
+    /// against the snapshot they hold. The id is never reused, so the
+    /// store's final stats/cache counters stay readable (its section
+    /// reports `live: false`).
+    pub fn drop_store(&self, id: StoreId) -> Result<(), MutateError> {
+        self.shared.registry.drop_store(id)
+    }
+
+    /// Live item insert: publishes the store's next epoch with `item`
+    /// appended (its index is the pre-insert `len()`). Returns the new
+    /// epoch. Batches already sealed keep their old snapshot; the
+    /// epoch-keyed cache makes stale hits structurally impossible.
+    pub fn insert_item(&self, id: StoreId, item: BinaryHV) -> Result<u64, MutateError> {
+        self.shared.registry.insert_item(id, item)
+    }
+
+    /// Live item delete by index (`Vec::remove` semantics — later
+    /// indices shift down). Returns the new epoch. Refuses to empty the
+    /// store; [`Self::drop_store`] is the way to retire one.
+    pub fn delete_item(&self, id: StoreId, index: usize) -> Result<u64, MutateError> {
+        self.shared.registry.delete_item(id, index)
+    }
+
+    /// The store's current epoch (`Some(0)` until its first mutation;
+    /// also `Some` for dropped stores — the tombstone keeps the final
+    /// epoch); `None` only for never-issued ids.
+    pub fn store_epoch(&self, id: StoreId) -> Option<u64> {
+        self.shared.registry.epoch_of(id)
     }
 
     /// The live fault-injection plan, when the config carried one. Chaos
@@ -295,7 +364,7 @@ impl ServeEngine {
         priority: Priority,
         deadline: Duration,
     ) -> Result<PendingResponse, ServeError> {
-        if self.shared.registry.store_by_id(request.store).is_none() {
+        if !self.shared.registry.is_live(request.store) {
             self.shared.stats.record_unsupported(1);
             return Err(ServeError::UnknownStore);
         }
@@ -336,14 +405,19 @@ impl ServeEngine {
     }
 
     /// Metrics snapshot, including per-store response-cache counters for
-    /// every store that runs one (and their engine-wide sum), plus the
-    /// live queue-depth and per-lane deficit gauges.
+    /// every store that runs one (and their engine-wide sum), each
+    /// store's current epoch and liveness, plus the live queue-depth and
+    /// per-lane deficit gauges. Dropped stores keep their section —
+    /// final counters stay readable — marked `live: false`.
     pub fn stats(&self) -> StatsSnapshot {
         let mut snap = self.shared.stats.snapshot();
         let mut total = super::cache::CacheCounters::default();
         let mut any_cache = false;
-        for (section, store) in snap.stores.iter_mut().zip(self.shared.registry.stores()) {
-            section.cache = store.cache().map(|c| c.counters());
+        for (i, section) in snap.stores.iter_mut().enumerate() {
+            let id = StoreId(i);
+            section.cache = self.shared.registry.cache_of(id).map(|c| c.counters());
+            section.epoch = self.shared.registry.epoch_of(id).unwrap_or(0);
+            section.live = self.shared.registry.is_live(id);
             if let Some(c) = &section.cache {
                 total.merge(c);
                 any_cache = true;
@@ -401,7 +475,6 @@ fn worker_loop(sh: &Shared) {
             stats: &sh.stats,
             scan_threads: sh.scan_threads,
             queue: Some(&sh.queue),
-            degrade: Some(&sh.degrade),
             trace: sh.trace.as_ref(),
             faults: sh.faults.as_ref(),
         };
@@ -760,6 +833,175 @@ mod tests {
         assert_eq!(snap.stores[b.index()].rejected_tenant, 7);
         assert_eq!(snap.stores[a.index()].rejected_tenant, 0);
         assert_eq!(snap.rejected, 0, "no global-capacity rejections here");
+        eng.shutdown();
+    }
+
+    #[test]
+    fn stores_created_at_runtime_serve_and_drop_answers_unknown() {
+        let mut rng = Rng::new(31);
+        let cb = BinaryCodebook::random(&mut rng, 32, 1024);
+        let eng = ServeEngine::start(&cb, None, EngineConfig::default()).unwrap();
+        // hot-create a second store with a different shape
+        let cb2 = BinaryCodebook::random(&mut rng, 12, 256);
+        let cm2 = CleanupMemory::new(cb2.clone());
+        let hot = eng
+            .create_store("hot", &cb2, None, StoreSpec {
+                shards: 2,
+                cache_capacity: 0,
+                ..StoreSpec::default()
+            })
+            .unwrap();
+        assert_eq!(hot, StoreId(1));
+        let q = BinaryHV::random(&mut rng, 256);
+        let got = eng.submit(ServeRequest::recall_on(hot, q.clone())).unwrap();
+        let (index, cosine) = cm2.recall(&q);
+        assert_eq!(got, ServeResponse::Recall { index, cosine });
+        // duplicate live names are refused; mutations bump the epoch
+        assert_eq!(
+            eng.create_store("hot", &cb2, None, StoreSpec::default()),
+            Err(MutateError::DuplicateName)
+        );
+        assert_eq!(
+            eng.insert_item(hot, BinaryHV::random(&mut rng, 256)).unwrap(),
+            1
+        );
+        assert_eq!(eng.store_epoch(hot), Some(1));
+        let snap = eng.stats();
+        assert_eq!(snap.stores.len(), 2, "runtime store got its own section");
+        assert_eq!(snap.stores[1].name, "hot");
+        assert_eq!(snap.stores[1].epoch, 1);
+        assert!(snap.stores[1].live);
+        assert_eq!(snap.stores[1].completed, 1);
+        assert_eq!(snap.lanes.len(), 2, "runtime store got its own lane gauge");
+        // drop: admission refuses the id, the boot store is unaffected
+        eng.drop_store(hot).unwrap();
+        assert_eq!(
+            eng.submit(ServeRequest::recall_on(hot, BinaryHV::zeros(256))),
+            Err(ServeError::UnknownStore)
+        );
+        assert!(eng.submit(ServeRequest::recall(BinaryHV::zeros(1024))).is_ok());
+        let snap = eng.stats();
+        assert!(!snap.stores[1].live, "tombstoned section keeps final counters");
+        assert_eq!(snap.stores[1].completed, 1);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn store_dropped_after_admission_is_answered_at_execute_time() {
+        // The admit-vs-drop race, end to end: a ticket validated while
+        // its store was live executes after the drop. It must resolve to
+        // `UnknownStore` — not a panic, not an answer from freed state.
+        let mut rng = Rng::new(35);
+        let cb = BinaryCodebook::random(&mut rng, 16, 512);
+        let mut registry = StoreRegistry::new();
+        let a = registry.register("keep", &cb, None, StoreSpec {
+            shards: 1,
+            cache_capacity: 0,
+            ..StoreSpec::default()
+        });
+        let b = registry.register("doomed", &cb, None, StoreSpec {
+            shards: 1,
+            cache_capacity: 0,
+            ..StoreSpec::default()
+        });
+        let eng = ServeEngine::start_registry(
+            registry,
+            EngineConfig {
+                workers: 1,
+                max_delay: Duration::from_micros(100),
+                cache_capacity: 0,
+                faults: Some(FaultConfig {
+                    seed: 1,
+                    kernel_delay_prob: 1.0,
+                    kernel_delay: Duration::from_millis(200),
+                    ..FaultConfig::default()
+                }),
+                ..EngineConfig::default()
+            },
+        )
+        .expect("spawn serve workers");
+        // pin the single worker inside the injected kernel delay
+        let busy = eng
+            .submit_async(
+                ServeRequest::recall_on(a, BinaryHV::zeros(512)),
+                Priority::Normal,
+                Duration::from_secs(5),
+            )
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        // admitted while b is live...
+        let doomed = eng
+            .submit_async(
+                ServeRequest::recall_on(b, BinaryHV::zeros(512)),
+                Priority::Normal,
+                Duration::from_secs(5),
+            )
+            .expect("b is live at admission");
+        // ...but gone before the worker's next batch seals
+        eng.drop_store(b).unwrap();
+        eng.faults().unwrap().set_probs(0.0, 0.0, 0.0);
+        assert!(busy.wait().is_ok());
+        assert_eq!(doomed.wait(), Err(ServeError::UnknownStore));
+        // the engine keeps serving the surviving store
+        assert!(eng
+            .submit(ServeRequest::recall_on(a, BinaryHV::zeros(512)))
+            .is_ok());
+        eng.shutdown();
+    }
+
+    #[test]
+    fn in_flight_batches_keep_their_sealed_epoch_under_mutation() {
+        let mut rng = Rng::new(37);
+        let cb = BinaryCodebook::random(&mut rng, 32, 1024);
+        let cm_old = CleanupMemory::new(cb.clone());
+        let eng = ServeEngine::start(
+            &cb,
+            None,
+            EngineConfig {
+                workers: 1,
+                cache_capacity: 0,
+                max_delay: Duration::from_micros(100),
+                trace_capacity: Some(16),
+                faults: Some(FaultConfig {
+                    seed: 1,
+                    kernel_delay_prob: 1.0,
+                    kernel_delay: Duration::from_millis(250),
+                    ..FaultConfig::default()
+                }),
+                ..EngineConfig::default()
+            },
+        )
+        .expect("spawn serve workers");
+        let q = BinaryHV::random(&mut rng, 1024);
+        let pending = eng
+            .submit_async(
+                ServeRequest::recall(q.clone()),
+                Priority::Normal,
+                Duration::from_secs(5),
+            )
+            .unwrap();
+        // the worker seals the batch at epoch 0, then sleeps in the
+        // injected delay; this mutation publishes epoch 1 mid-flight
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(eng.insert_item(StoreId::DEFAULT, q.clone()).unwrap(), 1);
+        let got = pending.wait();
+        // the in-flight batch answered from its sealed epoch-0 snapshot:
+        // the exact-match item inserted mid-flight is not in its answer
+        let (index, cosine) = cm_old.recall(&q);
+        assert!(cosine < 1.0, "setup: the epoch-0 answer is no exact match");
+        assert_eq!(got, Ok(ServeResponse::Recall { index, cosine }));
+        eng.faults().unwrap().set_probs(0.0, 0.0, 0.0);
+        // a request admitted after the swap sees epoch 1 and the item
+        let got2 = eng.submit(ServeRequest::recall(q.clone())).unwrap();
+        assert_eq!(got2, ServeResponse::Recall { index: 32, cosine: 1.0 });
+        // epochs surface in stats and in the trace events, which carry
+        // the epoch their batch was sealed on
+        let snap = eng.stats();
+        assert_eq!(snap.stores[0].epoch, 1);
+        let (events, _) = eng.trace_snapshot().expect("tracing is on");
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].epoch, 0, "in-flight answer tagged its sealed epoch");
+        assert_eq!(events[1].epoch, 1, "post-swap answer tagged the new epoch");
         eng.shutdown();
     }
 }

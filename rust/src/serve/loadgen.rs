@@ -23,12 +23,17 @@
 //! and emits `BENCH_serve.json` (path override: `NSCOG_SERVE_JSON`) with
 //! one per-store block per registered store.
 //!
-//! Chaos scenarios (`--chaos flood|deadline|panic`) run on a **separate**
-//! engine instance after the clean passes, so the bit-exactness numbers
-//! above are never polluted by injected failures. Each scenario checks a
-//! fairness invariant (a misbehaving tenant's damage stays tenant-local)
-//! and a liveness invariant (the engine still answers correctly once the
-//! chaos stops), reported in the JSON's `"chaos"` block.
+//! Chaos scenarios (`--chaos flood|deadline|panic|churn`) run on a
+//! **separate** engine instance after the clean passes, so the
+//! bit-exactness numbers above are never polluted by injected failures.
+//! Each scenario checks a fairness invariant (a misbehaving tenant's
+//! damage stays tenant-local) and a liveness invariant (the engine still
+//! answers correctly once the chaos stops), reported in the JSON's
+//! `"chaos"` block. The churn scenario additionally keeps a per-epoch
+//! oracle ledger: while live item inserts/deletes and store create/drops
+//! race the traffic, every `Ok` answer must be bit-exact for *some*
+//! snapshot epoch the request could have been sealed against — a
+//! wrong-epoch answer (e.g. a stale cache hit) fails the run.
 //!
 //! With `--trace` the clean engine also runs its per-request stage
 //! tracer: the final ring-buffer dump, the per-class stage-latency
@@ -52,8 +57,10 @@ use crate::profiler::taxonomy::{OpCategory, PhaseKind};
 use crate::profiler::trace::Trace;
 use crate::util::bench::Table;
 use crate::util::Rng;
-use crate::vsa::{BinaryCodebook, CleanupMemory, RealCodebook, Resonator};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::vsa::{BinaryCodebook, BinaryHV, CleanupMemory, RealCodebook, Resonator};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Default trace-ring capacity (events) when `--trace` is on and no
@@ -537,6 +544,10 @@ pub struct BenchOpts {
     pub open_loop_qps: Option<f64>,
     /// Chaos scenario to run after the clean passes, on its own engine.
     pub chaos: Option<ChaosScenario>,
+    /// Churn scenario mutation rate, ops/second (`--churn-rate`).
+    pub churn_rate: f64,
+    /// Churn scenario mutation count (`--churn-ops`).
+    pub churn_ops: usize,
     pub json_path: Option<String>,
     /// Run the clean engine with the per-request stage tracer on
     /// (`--trace` / `NSCOG_TRACE=1`) and emit `BENCH_serve_trace.json`.
@@ -591,6 +602,8 @@ impl BenchOpts {
             clients: 8,
             open_loop_qps: None,
             chaos: None,
+            churn_rate: 150.0,
+            churn_ops: 60,
             json_path: None,
             trace: false,
             trace_capacity: DEFAULT_TRACE_CAPACITY,
@@ -630,6 +643,8 @@ impl BenchOpts {
             clients: 16,
             open_loop_qps: None,
             chaos: None,
+            churn_rate: 150.0,
+            churn_ops: 60,
             json_path: None,
             trace: false,
             trace_capacity: DEFAULT_TRACE_CAPACITY,
@@ -672,6 +687,13 @@ pub enum ChaosScenario {
     /// is answered `Internal`, nothing hangs, and the engine serves
     /// bit-exactly once the fault is switched off.
     PanicStorm,
+    /// Live item inserts/deletes and store creates/drops race the
+    /// traffic: every answer must be bit-exact for an epoch its request
+    /// could have been sealed against, dropped stores must answer
+    /// `UnknownStore` (never garbage), epochs must grow strictly
+    /// monotonically, and surviving stores must probe bit-exactly after
+    /// the churn stops.
+    Churn,
 }
 
 impl ChaosScenario {
@@ -680,6 +702,7 @@ impl ChaosScenario {
             "flood" => Some(ChaosScenario::Flood),
             "deadline" => Some(ChaosScenario::DeadlineStorm),
             "panic" => Some(ChaosScenario::PanicStorm),
+            "churn" => Some(ChaosScenario::Churn),
             _ => None,
         }
     }
@@ -689,6 +712,7 @@ impl ChaosScenario {
             ChaosScenario::Flood => "flood",
             ChaosScenario::DeadlineStorm => "deadline",
             ChaosScenario::PanicStorm => "panic",
+            ChaosScenario::Churn => "churn",
         }
     }
 }
@@ -722,6 +746,47 @@ pub struct ChaosReport {
     /// With the chaos switched off, every store answered a fresh request
     /// bit-exactly on the same (never restarted) engine.
     pub liveness_pass: bool,
+    /// The churn scenario's mutation/epoch ledger; `None` for every
+    /// other scenario.
+    pub churn: Option<ChurnReport>,
+}
+
+/// The churn scenario's ledger: what was mutated, how every response
+/// verified against its epoch window, and the post-churn probe verdict.
+#[derive(Debug, Clone, Default)]
+pub struct ChurnReport {
+    /// Mutations applied (`--churn-ops`).
+    pub ops: usize,
+    pub inserts: usize,
+    pub deletes: usize,
+    pub creates: usize,
+    pub drops: usize,
+    /// Mutations the engine refused. The driver is the only mutator and
+    /// checks its own mirror first, so any refusal is an engine bug —
+    /// must be 0.
+    pub op_failures: usize,
+    /// `Ok` responses that were bit-exact for *no* epoch in the
+    /// request's seal window — the tentpole invariant; must be 0. A
+    /// stale (pre-mutation) cache hit would land here.
+    pub wrong_epoch: usize,
+    /// `UnknownStore` answers for stores that really were dropped (the
+    /// legal admit-vs-drop race outcome).
+    pub unknown_ok: usize,
+    /// `UnknownStore` (or other refusals) for live stores — must be 0.
+    pub unknown_bad: usize,
+    /// `Internal` answers. Churn injects no faults, so a contained
+    /// worker panic here is a mutation race bug — must be 0.
+    pub panics: usize,
+    /// Every observed per-store epoch sequence was strictly monotonic
+    /// (driver-returned epochs and client-observed before/after reads).
+    pub monotonic: bool,
+    /// Surviving stores probed after the churn stopped.
+    pub probed: usize,
+    /// Every surviving store answered its probe bit-exactly on its final
+    /// epoch, and every dropped store answered `UnknownStore`.
+    pub probe_pass: bool,
+    /// `(name, final epoch)` per issued store slot, dropped included.
+    pub final_epochs: Vec<(String, u64)>,
 }
 
 /// Classify one outcome into a store's chaos ledger. `oracle == None`
@@ -801,6 +866,7 @@ pub fn run_chaos(fixture: &Fixture, opts: &BenchOpts, scenario: ChaosScenario) -
         ChaosScenario::Flood => chaos_flood(fixture, opts),
         ChaosScenario::DeadlineStorm => chaos_deadline(fixture, opts),
         ChaosScenario::PanicStorm => chaos_panic(fixture, opts),
+        ChaosScenario::Churn => chaos_churn(fixture, opts),
     }
 }
 
@@ -928,6 +994,7 @@ fn chaos_flood(fixture: &Fixture, opts: &BenchOpts) -> ChaosReport {
         stores,
         fairness_pass,
         liveness_pass,
+        churn: None,
     }
 }
 
@@ -981,6 +1048,7 @@ fn chaos_deadline(fixture: &Fixture, opts: &BenchOpts) -> ChaosReport {
         stores,
         fairness_pass,
         liveness_pass,
+        churn: None,
     }
 }
 
@@ -1028,6 +1096,368 @@ fn chaos_panic(fixture: &Fixture, opts: &BenchOpts) -> ChaosReport {
         stores,
         fairness_pass,
         liveness_pass,
+        churn: None,
+    }
+}
+
+/// Per-epoch oracle ledger shared between the churn driver and the
+/// traffic threads. Insert/delete oracles are recorded *before* the new
+/// snapshot publishes, so a client that observes a fresh epoch always
+/// finds its oracle; created slots are appended *after* registration, so
+/// no client targets a store the engine does not know yet; `dropped` is
+/// tombstoned *before* the registry drop, so an `UnknownStore` answer
+/// can always be classified as legal or not.
+struct ChurnLedger {
+    /// `(slot index, epoch)` → that snapshot's sequential oracle.
+    oracles: HashMap<(usize, u64), Arc<CleanupMemory>>,
+    /// Query dimension per issued slot (slots are append-only — ids are
+    /// never reused — and a slot's dimension is immutable).
+    dims: Vec<usize>,
+    /// Registration name per issued slot.
+    names: Vec<String>,
+    /// Whether the slot was ever dropped (tombstones stay dropped).
+    dropped: Vec<bool>,
+}
+
+/// Store churn: one serialized mutation driver applies `--churn-ops`
+/// live mutations — item inserts (~40%), item deletes (~30%), store
+/// creates (~15%), store drops (~15%; store 0 is the anchor tenant and
+/// is never dropped) — at `--churn-rate` ops/s through the engine's
+/// mutation API, while `clients` traffic threads hammer the same engine
+/// with recall queries against every slot ever issued, dropped ones
+/// included.
+///
+/// Each client reads the target's epoch before submitting (`e0`) and
+/// after the response (`e1`); snapshot sealing plus epoch monotonicity
+/// guarantee the serving epoch lies in `[e0, e1]`, so an `Ok` answer
+/// must be bit-exact for at least one ledger oracle in that window —
+/// otherwise it is a wrong-epoch answer and the scenario fails. Fairness
+/// = zero wrong-epoch answers, zero `UnknownStore` refusals on live
+/// stores, zero contained panics, zero refused mutations, strictly
+/// monotonic epochs. Liveness = after the churn stops, every surviving
+/// store answers a fresh exact-item probe bit-exactly on its final
+/// epoch and every dropped store still answers `UnknownStore`.
+fn chaos_churn(fixture: &Fixture, opts: &BenchOpts) -> ChaosReport {
+    let ecfg = opts.engine.clone();
+    let engine = ServeEngine::start_registry(fixture.registry(&ecfg), ecfg)
+        .expect("spawn chaos engine workers");
+    let n = fixture.stores.len();
+    let ledger = Mutex::new(ChurnLedger {
+        oracles: fixture
+            .stores
+            .iter()
+            .enumerate()
+            .map(|(si, sf)| ((si, 0u64), Arc::new(sf.cleanup.clone())))
+            .collect(),
+        dims: fixture.stores.iter().map(|sf| sf.profile.dim).collect(),
+        names: fixture.stores.iter().map(|sf| sf.profile.name.clone()).collect(),
+        dropped: vec![false; n],
+    });
+    let done = AtomicBool::new(false);
+    let epochs_monotonic = AtomicBool::new(true);
+    let churn_ops = opts.churn_ops.max(1);
+    let op_gap = Duration::from_secs_f64(1.0 / opts.churn_rate.max(1.0));
+    let seed = fixture.cfg.seed;
+    let eng = &engine;
+    let ledger_ref = &ledger;
+    let done_ref = &done;
+    let mono_ref = &epochs_monotonic;
+    let (mut report, outcomes) = std::thread::scope(|s| {
+        let driver = s.spawn(move || {
+            let mut rng = Rng::new(seed ^ 0x5eed_c0de);
+            // the driver's private mirror of every slot's item list —
+            // it is the only mutator, so the mirror is authoritative
+            let mut items: Vec<Vec<BinaryHV>> = fixture
+                .stores
+                .iter()
+                .map(|sf| sf.codebook.items().to_vec())
+                .collect();
+            let mut dims: Vec<usize> = fixture.stores.iter().map(|sf| sf.profile.dim).collect();
+            let mut live = vec![true; n];
+            let mut epochs = vec![0u64; n];
+            let mut r = ChurnReport {
+                monotonic: true,
+                ..ChurnReport::default()
+            };
+            for _ in 0..churn_ops {
+                std::thread::sleep(op_gap);
+                let roll = rng.below(100);
+                // store 0 is the anchor tenant: never dropped, so the
+                // post-churn probe always has a survivor
+                let droppable: Vec<usize> = (1..live.len()).filter(|&i| live[i]).collect();
+                if roll < 15 && !droppable.is_empty() {
+                    // tombstone the ledger first: by the time the engine
+                    // can answer UnknownStore, `dropped` is already true
+                    let t = droppable[rng.below(droppable.len())];
+                    ledger_ref.lock().unwrap().dropped[t] = true;
+                    match eng.drop_store(StoreId(t)) {
+                        Ok(()) => {
+                            live[t] = false;
+                            r.drops += 1;
+                        }
+                        Err(_) => r.op_failures += 1,
+                    }
+                } else if (15..30).contains(&roll) {
+                    // register first, issue the ledger slot after: no
+                    // client targets a slot the ledger has not issued
+                    let name = format!("churn{}", r.creates);
+                    let dim = dims[0];
+                    let fresh: Vec<BinaryHV> =
+                        (0..16).map(|_| BinaryHV::random(&mut rng, dim)).collect();
+                    let codebook = BinaryCodebook::from_items(dim, fresh.clone());
+                    let spec = StoreSpec {
+                        shards: eng.config().shards,
+                        cache_capacity: eng.config().cache_capacity,
+                        cache_shards: eng.config().cache_shards,
+                        ..StoreSpec::default()
+                    };
+                    match eng.create_store(&name, &codebook, None, spec) {
+                        Ok(id) => {
+                            let mut led = ledger_ref.lock().unwrap();
+                            debug_assert_eq!(id.index(), led.dims.len());
+                            led.oracles
+                                .insert((id.index(), 0), Arc::new(CleanupMemory::new(codebook)));
+                            led.dims.push(dim);
+                            led.names.push(name);
+                            led.dropped.push(false);
+                            drop(led);
+                            items.push(fresh);
+                            dims.push(dim);
+                            live.push(true);
+                            epochs.push(0);
+                            r.creates += 1;
+                        }
+                        Err(_) => r.op_failures += 1,
+                    }
+                } else {
+                    // insert / delete on a live store: the next epoch's
+                    // oracle is in the ledger *before* the swap publishes
+                    let targets: Vec<usize> = (0..live.len()).filter(|&i| live[i]).collect();
+                    let t = targets[rng.below(targets.len())];
+                    let id = StoreId(t);
+                    let delete = roll >= 70 && items[t].len() > 1;
+                    let expected = epochs[t] + 1;
+                    let (next, res) = if delete {
+                        let idx = rng.below(items[t].len());
+                        let mut next = items[t].clone();
+                        next.remove(idx);
+                        ledger_ref.lock().unwrap().oracles.insert(
+                            (t, expected),
+                            Arc::new(CleanupMemory::new(BinaryCodebook::from_items(
+                                dims[t],
+                                next.clone(),
+                            ))),
+                        );
+                        (next, eng.delete_item(id, idx))
+                    } else {
+                        let item = BinaryHV::random(&mut rng, dims[t]);
+                        let mut next = items[t].clone();
+                        next.push(item.clone());
+                        ledger_ref.lock().unwrap().oracles.insert(
+                            (t, expected),
+                            Arc::new(CleanupMemory::new(BinaryCodebook::from_items(
+                                dims[t],
+                                next.clone(),
+                            ))),
+                        );
+                        (next, eng.insert_item(id, item))
+                    };
+                    match res {
+                        Ok(e) => {
+                            if e != expected {
+                                r.monotonic = false;
+                            }
+                            epochs[t] = e;
+                            items[t] = next;
+                            if delete {
+                                r.deletes += 1;
+                            } else {
+                                r.inserts += 1;
+                            }
+                        }
+                        Err(_) => {
+                            r.op_failures += 1;
+                            ledger_ref.lock().unwrap().oracles.remove(&(t, expected));
+                        }
+                    }
+                }
+                r.ops += 1;
+            }
+            done_ref.store(true, Ordering::SeqCst);
+            r
+        });
+        let traffic: Vec<_> = (0..opts.clients.max(1))
+            .map(|ti| {
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed ^ (0xACCE55 + ti as u64 * 0x9e37));
+                    let mut outs: Vec<ChaosStoreOutcome> = Vec::new();
+                    let mut last: Vec<Option<BinaryHV>> = Vec::new();
+                    let (mut wrong_epoch, mut unknown_ok, mut unknown_bad, mut panics) =
+                        (0usize, 0usize, 0usize, 0usize);
+                    loop {
+                        // read the stop flag *before* the request so the
+                        // final iteration still races the last mutations
+                        let finishing = done_ref.load(Ordering::SeqCst);
+                        let (si, dim) = {
+                            let led = ledger_ref.lock().unwrap();
+                            let si = rng.below(led.dims.len());
+                            (si, led.dims[si])
+                        };
+                        while outs.len() <= si {
+                            outs.push(ChaosStoreOutcome::default());
+                            last.push(None);
+                        }
+                        // a quarter of the traffic repeats its previous
+                        // query per store: under mutation those repeats
+                        // are exactly what a stale (epoch-less) cache
+                        // would answer wrongly
+                        let query = match &last[si] {
+                            Some(q) if rng.below(4) == 0 => q.clone(),
+                            _ => BinaryHV::random(&mut rng, dim),
+                        };
+                        last[si] = Some(query.clone());
+                        let id = StoreId(si);
+                        let e0 = eng.store_epoch(id).unwrap_or(0);
+                        outs[si].offered += 1;
+                        match eng.submit(ServeRequest::recall_on(id, query.clone())) {
+                            Ok(ServeResponse::Recall { index, cosine }) => {
+                                outs[si].completed += 1;
+                                let e1 = eng.store_epoch(id).unwrap_or(e0);
+                                if e1 < e0 {
+                                    mono_ref.store(false, Ordering::SeqCst);
+                                }
+                                let e1 = e1.max(e0);
+                                let led = ledger_ref.lock().unwrap();
+                                let exact = (e0..=e1).any(|e| {
+                                    led.oracles.get(&(si, e)).is_some_and(|o| {
+                                        let (oi, oc) = o.recall(&query);
+                                        oi == index && oc == cosine
+                                    })
+                                });
+                                drop(led);
+                                if !exact {
+                                    wrong_epoch += 1;
+                                    outs[si].mismatches += 1;
+                                }
+                            }
+                            Ok(_) => {
+                                // a recall request answered with anything
+                                // but a Recall response is garbage
+                                outs[si].completed += 1;
+                                wrong_epoch += 1;
+                                outs[si].mismatches += 1;
+                            }
+                            Err(ServeError::UnknownStore) => {
+                                if ledger_ref.lock().unwrap().dropped[si] {
+                                    unknown_ok += 1;
+                                } else {
+                                    unknown_bad += 1;
+                                    outs[si].mismatches += 1;
+                                }
+                            }
+                            Err(ServeError::Overloaded) | Err(ServeError::ShuttingDown) => {
+                                outs[si].rejected += 1;
+                            }
+                            Err(ServeError::TenantOverloaded) => outs[si].rejected_tenant += 1,
+                            Err(ServeError::DeadlineExceeded) => outs[si].expired += 1,
+                            Err(ServeError::Internal) => {
+                                outs[si].internal += 1;
+                                panics += 1;
+                            }
+                            Err(ServeError::Unsupported) | Err(ServeError::InvalidDimension) => {
+                                unknown_bad += 1;
+                                outs[si].mismatches += 1;
+                            }
+                        }
+                        if finishing {
+                            break;
+                        }
+                    }
+                    (outs, wrong_epoch, unknown_ok, unknown_bad, panics)
+                })
+            })
+            .collect();
+        let mut r = driver.join().expect("churn driver panicked");
+        let mut merged: Vec<ChaosStoreOutcome> = Vec::new();
+        for t in traffic {
+            let (outs, we, uo, ub, pa) = t.join().expect("churn traffic thread panicked");
+            r.wrong_epoch += we;
+            r.unknown_ok += uo;
+            r.unknown_bad += ub;
+            r.panics += pa;
+            for (si, o) in outs.into_iter().enumerate() {
+                while merged.len() <= si {
+                    merged.push(ChaosStoreOutcome::default());
+                }
+                let m = &mut merged[si];
+                m.offered += o.offered;
+                m.completed += o.completed;
+                m.rejected += o.rejected;
+                m.rejected_tenant += o.rejected_tenant;
+                m.expired += o.expired;
+                m.internal += o.internal;
+                m.degraded += o.degraded;
+                m.mismatches += o.mismatches;
+            }
+        }
+        (r, merged)
+    });
+    // post-churn probes on the same (never restarted) engine
+    let led = ledger.into_inner().unwrap();
+    let mut prng = Rng::new(seed ^ 0x0b5e_55ed);
+    let mut probe_pass = true;
+    let mut probed = 0usize;
+    let mut final_epochs = Vec::with_capacity(led.dims.len());
+    let mut stores = outcomes;
+    while stores.len() < led.dims.len() {
+        stores.push(ChaosStoreOutcome::default());
+    }
+    for si in 0..led.dims.len() {
+        stores[si].name = led.names[si].clone();
+        let id = StoreId(si);
+        let final_epoch = engine.store_epoch(id).unwrap_or(0);
+        final_epochs.push((led.names[si].clone(), final_epoch));
+        if led.dropped[si] {
+            // a dropped store keeps answering UnknownStore — not garbage
+            let q = BinaryHV::random(&mut prng, led.dims[si]);
+            probe_pass &= matches!(
+                engine.submit(ServeRequest::recall_on(id, q)),
+                Err(ServeError::UnknownStore)
+            );
+            continue;
+        }
+        probed += 1;
+        match led.oracles.get(&(si, final_epoch)) {
+            Some(oracle) => {
+                let q = oracle.codebook().item(prng.below(oracle.len())).clone();
+                let (index, cosine) = oracle.recall(&q);
+                probe_pass &= matches!(
+                    engine.submit(ServeRequest::recall_on(id, q)),
+                    Ok(ServeResponse::Recall { index: i, cosine: c }) if i == index && c == cosine
+                );
+            }
+            // a live store whose final epoch has no recorded oracle means
+            // the engine returned an epoch the driver never issued
+            None => probe_pass = false,
+        }
+    }
+    report.monotonic = report.monotonic && epochs_monotonic.load(Ordering::SeqCst);
+    report.probed = probed;
+    report.probe_pass = probe_pass;
+    report.final_epochs = final_epochs;
+    let fairness_pass = report.wrong_epoch == 0
+        && report.unknown_bad == 0
+        && report.panics == 0
+        && report.op_failures == 0
+        && report.monotonic;
+    let liveness_pass = probe_pass && probed >= 1;
+    engine.shutdown();
+    ChaosReport {
+        scenario: ChaosScenario::Churn,
+        stores,
+        fairness_pass,
+        liveness_pass,
+        churn: Some(report),
     }
 }
 
@@ -1372,13 +1802,41 @@ impl BenchReport {
         ));
         // chaos verdict (separate engine; see module docs) — null unless
         // --chaos ran
+        let churn_json = |c: &Option<ChurnReport>| match c {
+            Some(c) => {
+                let finals: Vec<String> = c
+                    .final_epochs
+                    .iter()
+                    .map(|(name, e)| format!("{{\"name\": \"{name}\", \"epoch\": {e}}}"))
+                    .collect();
+                format!(
+                    "{{\"ops\": {}, \"inserts\": {}, \"deletes\": {}, \"creates\": {}, \"drops\": {}, \"op_failures\": {}, \"wrong_epoch\": {}, \"unknown_ok\": {}, \"unknown_bad\": {}, \"panics\": {}, \"monotonic\": {}, \"probed\": {}, \"probe_pass\": {}, \"final_epochs\": [{}]}}",
+                    c.ops,
+                    c.inserts,
+                    c.deletes,
+                    c.creates,
+                    c.drops,
+                    c.op_failures,
+                    c.wrong_epoch,
+                    c.unknown_ok,
+                    c.unknown_bad,
+                    c.panics,
+                    c.monotonic,
+                    c.probed,
+                    c.probe_pass,
+                    finals.join(", ")
+                )
+            }
+            None => "null".into(),
+        };
         match &self.chaos {
             Some(c) => {
                 out.push_str(&format!(
-                    "  \"chaos\": {{\"scenario\": \"{}\", \"fairness_pass\": {}, \"liveness_pass\": {}, \"stores\": [",
+                    "  \"chaos\": {{\"scenario\": \"{}\", \"fairness_pass\": {}, \"liveness_pass\": {}, \"churn\": {}, \"stores\": [",
                     c.scenario.name(),
                     c.fairness_pass,
-                    c.liveness_pass
+                    c.liveness_pass,
+                    churn_json(&c.churn)
                 ));
                 for (i, o) in c.stores.iter().enumerate() {
                     if i > 0 {
@@ -1409,9 +1867,11 @@ impl BenchReport {
         for (i, section) in self.stats.stores.iter().enumerate() {
             let profile = f.stores.get(i);
             out.push_str(&format!(
-                "    {{\"id\": {}, \"name\": \"{}\", \"simd\": \"{simd_tier}\", \"store_count\": {}, \"dim\": {}, \"items\": {}, \"weight\": {}, \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"quota\": {}, \"completed\": {}, \"rejected_tenant\": {}, \"expired_dropped\": {}, \"degraded\": {}, \"internal\": {}, \"latency\": {}, \"shards\": {}, \"prune\": {}, \"cache\": {}}}{}\n",
+                "    {{\"id\": {}, \"name\": \"{}\", \"epoch\": {}, \"live\": {}, \"simd\": \"{simd_tier}\", \"store_count\": {}, \"dim\": {}, \"items\": {}, \"weight\": {}, \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"quota\": {}, \"completed\": {}, \"rejected_tenant\": {}, \"expired_dropped\": {}, \"degraded\": {}, \"internal\": {}, \"latency\": {}, \"shards\": {}, \"prune\": {}, \"cache\": {}}}{}\n",
                 section.id.index(),
                 section.name,
+                section.epoch,
+                section.live,
                 f.stores.len(),
                 profile.map_or(0, |p| p.dim),
                 profile.map_or(0, |p| p.items),
@@ -1499,9 +1959,10 @@ impl BenchReport {
         out.push_str("  ],\n  \"events\": [\n");
         for (i, ev) in log.events.iter().enumerate() {
             out.push_str(&format!(
-                "    {{\"seq\": {}, \"store\": {}, \"kind\": \"{}\", \"queue_s\": {:e}, \"batch_s\": {:e}, \"kernel_s\": {:e}, \"fill_s\": {:e}, \"total_s\": {:e}, \"degraded\": {}, \"cache_hit\": {}}}{}\n",
+                "    {{\"seq\": {}, \"store\": {}, \"epoch\": {}, \"kind\": \"{}\", \"queue_s\": {:e}, \"batch_s\": {:e}, \"kernel_s\": {:e}, \"fill_s\": {:e}, \"total_s\": {:e}, \"degraded\": {}, \"cache_hit\": {}}}{}\n",
                 ev.seq,
                 ev.store.index(),
+                ev.epoch,
                 ev.kind.label(),
                 ev.stages.queue_s,
                 ev.stages.batch_s,
@@ -1967,6 +2428,42 @@ mod tests {
         assert!(report.liveness_pass);
         let expired: usize = report.stores.iter().map(|s| s.expired).sum();
         assert!(expired > 0, "the storm half must actually expire");
+    }
+
+    #[test]
+    fn chaos_churn_verifies_every_answer_against_its_epoch_window() {
+        let mut opts = chaos_fixture(2);
+        opts.clients = 4;
+        opts.churn_ops = 30;
+        opts.churn_rate = 600.0;
+        let fixture = Fixture::build(opts.fixture.clone());
+        let report = run_chaos(&fixture, &opts, ChaosScenario::Churn);
+        assert_eq!(report.scenario.name(), "churn");
+        let churn = report.churn.as_ref().expect("churn scenario carries its ledger");
+        assert_eq!(churn.ops, 30);
+        assert_eq!(
+            churn.inserts + churn.deletes + churn.creates + churn.drops + churn.op_failures,
+            churn.ops,
+            "every op accounted: {churn:?}"
+        );
+        assert_eq!(churn.op_failures, 0, "driver-issued mutations never refused");
+        assert_eq!(churn.wrong_epoch, 0, "answer outside its seal window: {churn:?}");
+        assert_eq!(churn.unknown_bad, 0, "live store answered UnknownStore: {churn:?}");
+        assert_eq!(churn.panics, 0, "mutation raced a worker into a panic");
+        assert!(churn.monotonic, "epochs must grow strictly monotonically");
+        assert!(churn.probed >= 1, "anchor store survives and is probed");
+        assert!(churn.probe_pass, "post-churn probe must be bit-exact: {churn:?}");
+        assert!(report.fairness_pass && report.liveness_pass);
+        assert_eq!(report.stores.len(), churn.final_epochs.len());
+        // the anchor tenant keeps its name and was mutated at least once
+        // in expectation (30 ops over ≤ a handful of stores); don't
+        // assert per-op distribution, only that mutation really happened
+        assert!(
+            churn.inserts + churn.deletes > 0,
+            "churn must actually mutate items: {churn:?}"
+        );
+        let traffic: usize = report.stores.iter().map(|s| s.offered).sum();
+        assert!(traffic > 0, "traffic threads must have raced the churn");
     }
 
     #[test]

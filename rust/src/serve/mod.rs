@@ -12,7 +12,12 @@
 //!
 //! - [`registry`]: N named stores behind one queue — each its own sharded
 //!   codebook, resonator shape, response cache, and prune/latency
-//!   accounting; requests route on a [`StoreId`].
+//!   accounting; requests route on a [`StoreId`]. Stores are live-mutable
+//!   via epoch-based snapshot swap: item inserts/deletes and store
+//!   create/drop publish immutable [`registry::StoreSnapshot`]s at
+//!   monotonically increasing epochs while traffic flows; in-flight
+//!   batches finish on the snapshot they sealed, and the response cache
+//!   keys on `(store, epoch)` so a stale hit is structurally impossible.
 //! - [`shard`]: codebooks partitioned into contiguous shards, scanned on
 //!   worker threads via [`crate::util::parallel`], per-shard top-k merged
 //!   under the same (score desc, index asc) order as the unsharded scan.
@@ -72,7 +77,7 @@ pub use cache::{CacheConfig, CacheCounters, ResponseCache};
 pub use engine::{EngineConfig, PendingResponse, ServeEngine};
 pub use faults::{FaultConfig, FaultPlan};
 pub use queue::{LaneGauge, Priority};
-pub use registry::{Hysteresis, Store, StoreId, StoreRegistry, StoreSpec};
+pub use registry::{Hysteresis, MutateError, StoreId, StoreRegistry, StoreSpec};
 pub use shard::{ShardedBinaryCodebook, ShardedCleanup, ShardedRealCodebook};
 pub use stats::{LatencySummary, StageSummary, StatsSnapshot, StoreSnapshot};
 pub use trace::{KernelWork, StageMarks, StageSample, TraceEvent, TraceRing};
@@ -224,8 +229,11 @@ pub enum ServeError {
     /// refused up front so a malformed request can never panic (and kill)
     /// a worker thread.
     InvalidDimension,
-    /// The request names a [`StoreId`] the engine's registry never issued
-    /// — refused at admission, never routed.
+    /// The request names a [`StoreId`] that is not live: never issued
+    /// (refused at admission) or dropped. A store dropped *after* this
+    /// request was admitted surfaces the same error at execute time —
+    /// the admit-vs-drop race is answered, never served from a retired
+    /// snapshot.
     UnknownStore,
     /// The *target store's* admission quota is exhausted (or the store is
     /// degraded and shedding its expensive request class). Unlike

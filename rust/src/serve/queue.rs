@@ -10,9 +10,15 @@
 //! store sheds its own traffic instead of starving the queue for
 //! everyone. Pop ordering is deficit round robin across store lanes:
 //! each scheduler round, lane `i` pops up to `weight_i` tickets before
-//! the rotation advances, so service share under contention follows the
-//! configured weights and idle stores cost nothing. Deadlines are checked
-//! by the worker at pop time; an expired ticket is answered with
+//! the rotation advances — or `weight_i × 2` ([`HIGH_BOOST`]) while the
+//! lane holds high-priority tickets at refill time, so priority buys
+//! *cross-tenant* share, not just intra-lane ordering. The boost is a
+//! bounded multiplier, never preemption: every backlogged lane still
+//! replenishes to at least its weight each rotation, so no mix of
+//! priorities can starve a competing store (property-tested below).
+//! Service share under contention follows the configured weights and
+//! idle stores cost nothing. Deadlines are checked by the worker at pop
+//! time; an expired ticket is answered with
 //! [`ServeError::DeadlineExceeded`] without touching the kernels.
 //!
 //! Lock-poisoning policy: every `Mutex`/`Condvar` acquisition recovers a
@@ -32,14 +38,22 @@ use std::time::{Duration, Instant};
 
 /// Two-level priority: within a store's lane, `High` tickets always pop
 /// before `Normal` ones; within a level, strictly FIFO. Across lanes,
-/// ordering is the deficit-round-robin rotation (fairness outranks
-/// priority between tenants — one store's `High` traffic must not starve
-/// another store).
+/// a high-priority backlog boosts the lane's DRR refill by
+/// [`HIGH_BOOST`] — extra share, never preemption, so one store's
+/// `High` traffic can lean on but not starve another store (fairness
+/// still bounds priority between tenants).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Priority {
     High,
     Normal,
 }
+
+/// Multiplier on a lane's DRR refill while the lane holds high-priority
+/// tickets at replenish time: priority buys up to `HIGH_BOOST × weight`
+/// pops per rotation instead of `weight`. Bounded (not absolute
+/// preemption) so every competing backlogged lane keeps ≥ `weight` pops
+/// per rotation — the starvation-freedom invariant.
+pub const HIGH_BOOST: u32 = 2;
 
 /// One-shot response slot a client blocks on and a worker fills once.
 #[derive(Debug, Clone)]
@@ -251,7 +265,9 @@ struct QueueState {
 impl QueueState {
     /// Deficit-round-robin pop: serve the cursor lane until its deficit
     /// runs out or it empties, then advance. With unit ticket cost this
-    /// gives each backlogged lane `weight` consecutive pops per round.
+    /// gives each backlogged lane `weight` consecutive pops per round —
+    /// boosted to `weight × HIGH_BOOST` while the lane holds
+    /// high-priority tickets at refill time.
     fn take(&mut self) -> Option<Ticket> {
         if self.len == 0 {
             return None;
@@ -267,7 +283,11 @@ impl QueueState {
                 continue;
             }
             if lane.deficit == 0 {
-                lane.deficit = lane.weight;
+                lane.deficit = if lane.high.is_empty() {
+                    lane.weight
+                } else {
+                    lane.weight.saturating_mul(HIGH_BOOST)
+                };
             }
             lane.deficit -= 1;
             let t = lane.take();
@@ -315,6 +335,29 @@ impl AdmissionQueue {
 
     fn lock(&self) -> std::sync::MutexGuard<'_, QueueState> {
         self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Configure (or reconfigure) `store`'s lane at runtime — the
+    /// serve-time store-creation path, so a hot-swapped store gets its
+    /// spec'd weight and quota instead of the lazy defaults. Queued
+    /// tickets and any unspent deficit are preserved; missing lanes up
+    /// to `store` are created with defaults (weight 1, quota =
+    /// capacity).
+    pub fn set_lane(&self, store: StoreId, spec: LaneSpec) {
+        let mut st = self.lock();
+        let idx = store.index();
+        if idx >= st.lanes.len() {
+            let cap = self.capacity;
+            st.lanes.resize_with(idx + 1, || {
+                Lane::new(LaneSpec {
+                    weight: 1,
+                    quota: cap,
+                })
+            });
+        }
+        let lane = &mut st.lanes[idx];
+        lane.weight = spec.weight.max(1);
+        lane.quota = spec.quota.max(1);
     }
 
     pub fn capacity(&self) -> usize {
@@ -603,6 +646,148 @@ mod tests {
             .map(|_| tag_of(&q.pop_blocking().unwrap()))
             .collect();
         assert_eq!(order, [0, 1, 2]);
+    }
+
+    #[test]
+    fn high_priority_backlog_buys_cross_tenant_share() {
+        // equal weights; lane 0 all High, lane 1 all Normal: lane 0's
+        // refill doubles (HIGH_BOOST = 2), so the contended share is
+        // 2:1 — priority bought cross-tenant throughput, not just
+        // intra-lane ordering.
+        let q = AdmissionQueue::with_lanes(
+            32,
+            &[
+                LaneSpec { weight: 1, quota: 32 },
+                LaneSpec { weight: 1, quota: 32 },
+            ],
+        );
+        for i in 0..6 {
+            q.push(ticket_on(0, i, Priority::High)).unwrap();
+        }
+        for i in 0..3 {
+            q.push(ticket_on(1, 100 + i, Priority::Normal)).unwrap();
+        }
+        let order: Vec<usize> = (0..9)
+            .map(|_| tag_of(&q.pop_blocking().unwrap()))
+            .collect();
+        assert_eq!(order, [0, 1, 100, 2, 3, 101, 4, 5, 102]);
+    }
+
+    #[test]
+    fn priority_boost_decays_when_the_high_backlog_drains() {
+        // lane 0 starts with 2 High then Normal-only; once the High
+        // tickets are gone its refill drops back to its weight and the
+        // rotation returns to 1:1.
+        let q = AdmissionQueue::with_lanes(
+            32,
+            &[
+                LaneSpec { weight: 1, quota: 32 },
+                LaneSpec { weight: 1, quota: 32 },
+            ],
+        );
+        q.push(ticket_on(0, 0, Priority::High)).unwrap();
+        q.push(ticket_on(0, 1, Priority::High)).unwrap();
+        for i in 2..5 {
+            q.push(ticket_on(0, i, Priority::Normal)).unwrap();
+        }
+        for i in 0..4 {
+            q.push(ticket_on(1, 100 + i, Priority::Normal)).unwrap();
+        }
+        let order: Vec<usize> = (0..9)
+            .map(|_| tag_of(&q.pop_blocking().unwrap()))
+            .collect();
+        // boosted round: 0,1 then lane 1; after the High drain, 1:1
+        assert_eq!(order, [0, 1, 100, 2, 101, 3, 102, 4, 103]);
+    }
+
+    #[test]
+    fn no_priority_mix_starves_a_backlogged_lane() {
+        // Property: under any weights (1..=3) and any priority mix,
+        // while a lane still has waiting tickets it goes at most
+        // Σ_{other lanes} (HIGH_BOOST × weight) consecutive pops
+        // without service — the DRR rotation bounds priority's reach.
+        crate::util::prop::forall(
+            0xD1,
+            40,
+            |rng| {
+                let n_lanes = 2 + rng.below(3);
+                let weights: Vec<u32> = (0..n_lanes).map(|_| 1 + rng.below(3) as u32).collect();
+                let backlogs: Vec<Vec<Priority>> = (0..n_lanes)
+                    .map(|_| {
+                        (0..4 + rng.below(12))
+                            .map(|_| {
+                                if rng.chance(0.5) {
+                                    Priority::High
+                                } else {
+                                    Priority::Normal
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                (weights, backlogs)
+            },
+            |(weights, backlogs)| {
+                let specs: Vec<LaneSpec> = weights
+                    .iter()
+                    .map(|&w| LaneSpec { weight: w, quota: 256 })
+                    .collect();
+                let q = AdmissionQueue::with_lanes(256, &specs);
+                let mut remaining = vec![0usize; specs.len()];
+                for (lane, prios) in backlogs.iter().enumerate() {
+                    for &p in prios {
+                        q.push(ticket_on(lane, lane, p)).unwrap();
+                        remaining[lane] += 1;
+                    }
+                }
+                let total: usize = remaining.iter().sum();
+                let mut since_served = vec![0usize; specs.len()];
+                for _ in 0..total {
+                    let lane = tag_of(&q.pop_blocking().unwrap());
+                    remaining[lane] -= 1;
+                    since_served[lane] = 0;
+                    for other in 0..specs.len() {
+                        if other == lane {
+                            continue;
+                        }
+                        if remaining[other] > 0 {
+                            since_served[other] += 1;
+                            let bound: usize = weights
+                                .iter()
+                                .enumerate()
+                                .filter(|&(j, _)| j != other)
+                                .map(|(_, &w)| (w * HIGH_BOOST) as usize)
+                                .sum();
+                            assert!(
+                                since_served[other] <= bound,
+                                "lane {other} starved: {since_served:?} > bound {bound} \
+                                 (weights {weights:?})"
+                            );
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn set_lane_reconfigures_at_runtime_preserving_tickets() {
+        let q = AdmissionQueue::new(16);
+        q.push(ticket_on(0, 0, Priority::Normal)).unwrap();
+        // lazily created lane has quota = capacity; tighten it live
+        q.set_lane(StoreId(0), LaneSpec { weight: 3, quota: 1 });
+        let (_, why) = q.push(ticket_on(0, 1, Priority::Normal)).unwrap_err();
+        assert_eq!(why, AdmitError::TenantFull, "new quota applies immediately");
+        // the queued ticket survived the reconfigure
+        assert_eq!(q.lane_len(StoreId(0)), 1);
+        assert_eq!(tag_of(&q.pop_blocking().unwrap()), 0);
+        // set_lane creates missing lanes (a hot-swapped store's id)
+        q.set_lane(StoreId(2), LaneSpec { weight: 2, quota: 4 });
+        let (_, lanes) = q.gauges();
+        assert_eq!(lanes.len(), 3);
+        assert_eq!((lanes[2].weight, lanes[2].quota), (2, 4));
+        assert_eq!((lanes[1].weight, lanes[1].quota), (1, 16), "gap lane gets defaults");
     }
 
     #[test]

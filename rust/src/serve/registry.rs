@@ -1,28 +1,60 @@
-//! Store registry: N named stores behind one serving engine.
+//! Store registry: N named, **live-mutable** stores behind one engine.
 //!
 //! The paper's system-level findings (Sec. V–VI) are about *heterogeneous*
 //! symbolic workloads: different codebook shapes, resonator
 //! configurations, and sparsity profiles whose memory-bound scans only
 //! amortize when batching is workload-aware. A single engine therefore
-//! serves several [`Store`]s — each its own sharded cleanup codebook,
+//! serves several stores — each its own sharded cleanup codebook,
 //! optional resonator, response cache, and sketch/prune configuration —
 //! and every [`super::ServeRequest`] names the store it targets with a
 //! [`StoreId`]. Batch formation groups by `(store, request class)` so one
 //! batched kernel call never mixes stores (and hence never mixes
 //! dimensions), and stats/caches stay attributable per store.
 //!
-//! [`StoreRegistry`] is immutable once the engine starts: registration
-//! happens up front, the engine takes ownership, and workers read it
-//! lock-free through the shared `Arc`.
+//! # Epoch-based snapshot swap
+//!
+//! Stores mutate *under live traffic* — item insert/delete, store
+//! create/drop — without ever breaking the bit-exactness contract. The
+//! mechanism is RCU-style snapshot swapping:
+//!
+//! - Every store version is an immutable [`StoreSnapshot`] (master
+//!   codebook + sharded cleanup with sketch sidecars + resonator +
+//!   spec) tagged with a monotonically increasing per-store **epoch**.
+//! - A mutation rebuilds the full snapshot from the mutated item list
+//!   and publishes it atomically by swapping the slot's `Arc` under the
+//!   registry write lock; the epoch increments with every publish.
+//! - Readers ([`StoreRegistry::live`]) clone the `Arc` under the read
+//!   lock and then scan lock-free: an in-flight batch keeps the snapshot
+//!   it was sealed against even if the store mutates or drops mid-batch,
+//!   so its answers are exactly the sealed epoch's sequential oracle.
+//! - Dropping a store tombstones its slot (`snapshot = None`). Ids are
+//!   **never reused**; a dropped id answers
+//!   [`super::ServeError::UnknownStore`] forever. Names of dropped
+//!   stores may be reused by later [`StoreRegistry::create_store`]
+//!   calls (the new store gets a fresh id and epoch 0).
+//! - The response cache folds the serving epoch into every key
+//!   (see [`super::cache`]), so a stale-epoch hit is structurally
+//!   impossible — no explicit invalidation walk is needed.
+//!
+//! Mutations hold the write lock while they rebuild (cost is one
+//! re-partition of the store's items — O(items·dim/64) — which is the
+//! price of never publishing a half-built snapshot); the serve hot path
+//! only ever takes the read lock for an `Arc` clone.
 
 use super::cache::{CacheConfig, ResponseCache};
 use super::engine::EngineConfig;
 use super::shard::ShardedCleanup;
 use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock, RwLockReadGuard};
 
-use crate::vsa::{BinaryCodebook, Resonator};
+use crate::vsa::{BinaryCodebook, BinaryHV, Resonator};
 
-/// Identifier of a registered store: its index in registration order.
+/// Identifier of a registered store: its slot index in creation order.
+/// Slots are never reused, so a `StoreId` names the same store for the
+/// engine's whole lifetime — after [`StoreRegistry::drop_store`] it
+/// names a tombstone and is refused with
+/// [`super::ServeError::UnknownStore`].
 /// `StoreId::DEFAULT` (store 0) is what the single-store convenience
 /// constructors route to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -59,6 +91,9 @@ pub struct StoreSpec {
     /// Deficit-round-robin scheduling weight: per scheduler round, this
     /// store pops up to `weight` tickets before the rotation advances
     /// (relative share under contention; idle stores cost nothing).
+    /// When the lane holds high-priority tickets at refill time the
+    /// effective refill is boosted (see [`super::queue`]), so priority
+    /// buys cross-tenant share, not just intra-lane ordering.
     pub weight: u32,
     /// Per-store admission quota: at most this many of this store's
     /// tickets may occupy the queue at once; the overflow is refused with
@@ -133,9 +168,10 @@ impl StoreSpec {
 /// `Degraded` and full-k responses on every batch.
 ///
 /// The machine itself is pure — `next(currently_degraded, depth)`
-/// returns the successor state — so the batcher can keep the persistent
-/// bit wherever it likes (the engine holds one `AtomicBool` per store)
-/// and this type stays trivially unit-testable.
+/// returns the successor state — so the persistent bit can live wherever
+/// the caller likes (the registry holds one `AtomicBool` per store slot,
+/// stepped via [`StoreRegistry::degrade_step`]) and this type stays
+/// trivially unit-testable.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Hysteresis {
     /// Enter degraded mode at lane depth ≥ `enter`.
@@ -176,24 +212,95 @@ impl Hysteresis {
     }
 }
 
-/// One registered store: a sharded cleanup codebook, an optional
-/// resonator for factorize requests, and its own response cache.
-pub struct Store {
+/// Why a serve-time registry mutation was refused. Mutations never
+/// panic the engine: every refusal is a typed error the management
+/// caller handles, while serve traffic keeps flowing against the
+/// still-published snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MutateError {
+    /// The id was never issued or names a dropped store.
+    UnknownStore,
+    /// A live store already owns this name.
+    DuplicateName,
+    /// The inserted item's dimension differs from the store's.
+    DimensionMismatch,
+    /// Delete index is out of range for the current snapshot.
+    BadIndex,
+    /// Deleting this item would leave the store empty (empty codebooks
+    /// cannot be sharded or scanned; drop the store instead).
+    WouldEmpty,
+}
+
+impl fmt::Display for MutateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MutateError::UnknownStore => write!(f, "unknown or dropped store"),
+            MutateError::DuplicateName => write!(f, "a live store already owns this name"),
+            MutateError::DimensionMismatch => write!(f, "item dimension differs from the store's"),
+            MutateError::BadIndex => write!(f, "item index out of range"),
+            MutateError::WouldEmpty => write!(f, "delete would leave the store empty"),
+        }
+    }
+}
+
+impl std::error::Error for MutateError {}
+
+/// One immutable published version of a store: the master item list,
+/// the sharded cleanup memory (with sketch sidecars) built from it, the
+/// resonator, and the spec — all frozen at publish time and tagged with
+/// the epoch that published them. Workers hold these behind `Arc`: a
+/// batch sealed against epoch `e` scans exactly epoch `e`'s items no
+/// matter what mutates concurrently.
+pub struct StoreSnapshot {
     id: StoreId,
+    epoch: u64,
     name: String,
+    codebook: BinaryCodebook,
     cleanup: ShardedCleanup,
     resonator: Option<Resonator>,
-    cache: Option<ResponseCache>,
     spec: StoreSpec,
 }
 
-impl Store {
+impl StoreSnapshot {
+    fn build(
+        id: StoreId,
+        epoch: u64,
+        name: String,
+        codebook: BinaryCodebook,
+        resonator: Option<Resonator>,
+        spec: StoreSpec,
+    ) -> StoreSnapshot {
+        let cleanup =
+            ShardedCleanup::partition_sketched(&codebook, spec.shards.max(1), spec.sketch_bits);
+        StoreSnapshot {
+            id,
+            epoch,
+            name,
+            codebook,
+            cleanup,
+            resonator,
+            spec,
+        }
+    }
+
     pub fn id(&self) -> StoreId {
         self.id
     }
 
+    /// The epoch that published this snapshot: 0 at store creation,
+    /// +1 per mutation, strictly monotonic per store.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// The master (unsharded) item list this snapshot was built from —
+    /// what mutations rebuild from, and what per-epoch oracles replay.
+    pub fn codebook(&self) -> &BinaryCodebook {
+        &self.codebook
     }
 
     pub fn cleanup(&self) -> &ShardedCleanup {
@@ -202,10 +309,6 @@ impl Store {
 
     pub fn resonator(&self) -> Option<&Resonator> {
         self.resonator.as_ref()
-    }
-
-    pub fn cache(&self) -> Option<&ResponseCache> {
-        self.cache.as_ref()
     }
 
     pub fn spec(&self) -> &StoreSpec {
@@ -237,30 +340,54 @@ impl Store {
     }
 }
 
-impl fmt::Debug for Store {
+impl fmt::Debug for StoreSnapshot {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.debug_struct("Store")
+        f.debug_struct("StoreSnapshot")
             .field("id", &self.id)
+            .field("epoch", &self.epoch)
             .field("name", &self.name)
             .field("dim", &self.dim())
             .field("items", &self.len())
             .field("shards", &self.n_shards())
             .field("resonator", &self.resonator.is_some())
-            .field("cache", &self.cache.is_some())
             .finish()
     }
 }
 
-/// The engine's store table. Built up front via [`StoreRegistry::register`],
-/// then owned (immutably) by the running engine.
+/// One store slot: the currently published snapshot (or `None` once
+/// dropped — the tombstone that keeps ids from ever being reused), the
+/// response cache that persists across the store's epochs (epoch-keyed
+/// entries from old snapshots structurally never hit and age out FIFO),
+/// and the persistent degraded-mode bit.
+#[derive(Debug)]
+struct StoreSlot {
+    name: String,
+    spec: StoreSpec,
+    cache: Option<Arc<ResponseCache>>,
+    snapshot: Option<Arc<StoreSnapshot>>,
+    /// Epoch of the latest snapshot ever published in this slot —
+    /// survives the tombstone so [`StoreRegistry::epoch_of`] stays
+    /// answerable (and monotonicity checkable) after a drop.
+    epoch: u64,
+    degraded: AtomicBool,
+}
+
+/// The engine's store table: slots behind one `RwLock`. Reads (the
+/// serve hot path) take the read lock just long enough to clone an
+/// `Arc`; mutations rebuild and swap snapshots under the write lock.
+/// Construction-time registration still happens through `&mut self`
+/// ([`StoreRegistry::register`]); everything after engine start goes
+/// through the `&self` mutation API.
 #[derive(Debug, Default)]
 pub struct StoreRegistry {
-    stores: Vec<Store>,
+    slots: RwLock<Vec<StoreSlot>>,
 }
 
 impl StoreRegistry {
     pub fn new() -> StoreRegistry {
-        StoreRegistry { stores: Vec::new() }
+        StoreRegistry {
+            slots: RwLock::new(Vec::new()),
+        }
     }
 
     /// Registry with exactly one store named `"default"` — the
@@ -275,9 +402,49 @@ impl StoreRegistry {
         r
     }
 
-    /// Shard `codebook` per `spec`, build its cache, and assign the next
-    /// [`StoreId`]. Store names must be unique (routing and reporting key
-    /// on them).
+    fn read(&self) -> RwLockReadGuard<'_, Vec<StoreSlot>> {
+        self.slots.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn make_slot(
+        id: StoreId,
+        name: &str,
+        codebook: &BinaryCodebook,
+        resonator: Option<Resonator>,
+        spec: StoreSpec,
+    ) -> StoreSlot {
+        let snapshot = Arc::new(StoreSnapshot::build(
+            id,
+            0,
+            name.to_string(),
+            codebook.clone(),
+            resonator,
+            spec,
+        ));
+        let cache = (spec.cache_capacity > 0).then(|| {
+            Arc::new(ResponseCache::for_store(
+                CacheConfig {
+                    capacity: spec.cache_capacity,
+                    shards: spec.cache_shards.max(1),
+                },
+                id,
+            ))
+        });
+        StoreSlot {
+            name: name.to_string(),
+            spec,
+            cache,
+            snapshot: Some(snapshot),
+            epoch: 0,
+            degraded: AtomicBool::new(false),
+        }
+    }
+
+    /// Construction-time registration: shard `codebook` per `spec`,
+    /// build its cache, and assign the next [`StoreId`] at epoch 0.
+    /// Live store names must be unique (routing and reporting key on
+    /// them); a duplicate panics — use [`Self::create_store`] for the
+    /// fallible serve-time path.
     pub fn register(
         &mut self,
         name: &str,
@@ -289,58 +456,198 @@ impl StoreRegistry {
             self.by_name(name).is_none(),
             "store name '{name}' already registered"
         );
-        let id = StoreId(self.stores.len());
-        let cleanup =
-            ShardedCleanup::partition_sketched(codebook, spec.shards.max(1), spec.sketch_bits);
-        let cache = (spec.cache_capacity > 0).then(|| {
-            ResponseCache::for_store(
-                CacheConfig {
-                    capacity: spec.cache_capacity,
-                    shards: spec.cache_shards.max(1),
-                },
-                id,
-            )
-        });
-        self.stores.push(Store {
-            id,
-            name: name.to_string(),
-            cleanup,
-            resonator,
-            cache,
-            spec,
-        });
+        let slots = self.slots.get_mut().unwrap_or_else(|p| p.into_inner());
+        let id = StoreId(slots.len());
+        slots.push(Self::make_slot(id, name, codebook, resonator, spec));
         id
     }
 
-    /// Number of registered stores.
+    /// Serve-time store creation (hot-swap): a brand-new slot at epoch 0
+    /// with a fresh never-reused id, published atomically. Refuses names
+    /// owned by a *live* store; dropped stores' names are reusable.
+    pub fn create_store(
+        &self,
+        name: &str,
+        codebook: &BinaryCodebook,
+        resonator: Option<Resonator>,
+        spec: StoreSpec,
+    ) -> Result<StoreId, MutateError> {
+        let mut slots = self.slots.write().unwrap_or_else(|p| p.into_inner());
+        if slots
+            .iter()
+            .any(|s| s.snapshot.is_some() && s.name == name)
+        {
+            return Err(MutateError::DuplicateName);
+        }
+        let id = StoreId(slots.len());
+        slots.push(Self::make_slot(id, name, codebook, resonator, spec));
+        Ok(id)
+    }
+
+    /// Serve-time store drop: tombstones the slot. In-flight batches
+    /// sealed against the last snapshot finish against it (they hold the
+    /// `Arc`); everything admitted or executed afterwards answers
+    /// [`super::ServeError::UnknownStore`]. The id is never reused.
+    pub fn drop_store(&self, id: StoreId) -> Result<(), MutateError> {
+        let mut slots = self.slots.write().unwrap_or_else(|p| p.into_inner());
+        let slot = slots.get_mut(id.0).ok_or(MutateError::UnknownStore)?;
+        if slot.snapshot.take().is_none() {
+            return Err(MutateError::UnknownStore);
+        }
+        Ok(())
+    }
+
+    /// Serve-time item insert: rebuilds the snapshot with the item
+    /// appended (its index is the old `len()`) and publishes it at
+    /// `epoch + 1`. Returns the new epoch.
+    pub fn insert_item(&self, id: StoreId, item: BinaryHV) -> Result<u64, MutateError> {
+        self.mutate_items(id, |items, dim| {
+            if item.dim() != dim {
+                return Err(MutateError::DimensionMismatch);
+            }
+            items.push(item);
+            Ok(())
+        })
+    }
+
+    /// Serve-time item delete by index (indices shift down past the
+    /// hole, exactly like `Vec::remove`). Refuses to empty the store —
+    /// an empty codebook cannot be sharded or scanned; [`Self::drop_store`]
+    /// is the way to retire a store. Returns the new epoch.
+    pub fn delete_item(&self, id: StoreId, index: usize) -> Result<u64, MutateError> {
+        self.mutate_items(id, |items, _dim| {
+            if index >= items.len() {
+                return Err(MutateError::BadIndex);
+            }
+            if items.len() == 1 {
+                return Err(MutateError::WouldEmpty);
+            }
+            items.remove(index);
+            Ok(())
+        })
+    }
+
+    /// Shared mutation path: clone the live snapshot's items, apply the
+    /// edit, rebuild, and publish at `epoch + 1` — all under the write
+    /// lock, so two racing mutations serialize and each publishes a
+    /// distinct epoch.
+    fn mutate_items(
+        &self,
+        id: StoreId,
+        edit: impl FnOnce(&mut Vec<BinaryHV>, usize) -> Result<(), MutateError>,
+    ) -> Result<u64, MutateError> {
+        let mut slots = self.slots.write().unwrap_or_else(|p| p.into_inner());
+        let slot = slots.get_mut(id.0).ok_or(MutateError::UnknownStore)?;
+        let current = slot.snapshot.as_ref().ok_or(MutateError::UnknownStore)?;
+        let dim = current.dim();
+        let mut items = current.codebook().items().to_vec();
+        edit(&mut items, dim)?;
+        let epoch = slot.epoch + 1;
+        let codebook = BinaryCodebook::from_items_sketched(dim, items, None);
+        let resonator = current.resonator.clone();
+        let next = StoreSnapshot::build(id, epoch, slot.name.clone(), codebook, resonator, slot.spec);
+        slot.snapshot = Some(Arc::new(next));
+        slot.epoch = epoch;
+        Ok(epoch)
+    }
+
+    /// Slots ever issued (live + tombstoned) — the upper bound on
+    /// `StoreId` indices.
     pub fn len(&self) -> usize {
-        self.stores.len()
+        self.read().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.stores.is_empty()
+        self.read().is_empty()
     }
 
-    /// All stores, in [`StoreId`] order.
-    pub fn stores(&self) -> &[Store] {
-        &self.stores
-    }
-
-    /// Look a store up by id; `None` for ids this registry never issued
-    /// (the engine answers those requests with
+    /// The serve hot path's seal: atomically resolve a store id to its
+    /// currently published snapshot and cache. `None` for ids never
+    /// issued or dropped (the engine answers those with
     /// [`super::ServeError::UnknownStore`] instead of panicking).
-    pub fn store_by_id(&self, id: StoreId) -> Option<&Store> {
-        self.stores.get(id.0)
+    #[allow(clippy::type_complexity)]
+    pub fn live(
+        &self,
+        id: StoreId,
+    ) -> Option<(Arc<StoreSnapshot>, Option<Arc<ResponseCache>>)> {
+        let slots = self.read();
+        let slot = slots.get(id.0)?;
+        let snap = slot.snapshot.as_ref()?.clone();
+        Some((snap, slot.cache.clone()))
     }
 
-    /// Look a store's id up by its registration name.
+    /// The currently published snapshot for `id`, if live.
+    pub fn snapshot_of(&self, id: StoreId) -> Option<Arc<StoreSnapshot>> {
+        self.read().get(id.0)?.snapshot.clone()
+    }
+
+    /// The response cache for `id`'s slot (present even after a drop, so
+    /// late counter reads don't race the tombstone).
+    pub fn cache_of(&self, id: StoreId) -> Option<Arc<ResponseCache>> {
+        self.read().get(id.0)?.cache.clone()
+    }
+
+    /// The latest epoch ever published in `id`'s slot — `Some` even for
+    /// tombstones (the epoch the store died at); `None` only for ids
+    /// never issued.
+    pub fn epoch_of(&self, id: StoreId) -> Option<u64> {
+        self.read().get(id.0).map(|s| s.epoch)
+    }
+
+    /// Whether `id` currently has a published snapshot.
+    pub fn is_live(&self, id: StoreId) -> bool {
+        self.read()
+            .get(id.0)
+            .is_some_and(|s| s.snapshot.is_some())
+    }
+
+    /// All live snapshots, in [`StoreId`] order.
+    pub fn store_views(&self) -> Vec<Arc<StoreSnapshot>> {
+        self.read()
+            .iter()
+            .filter_map(|s| s.snapshot.clone())
+            .collect()
+    }
+
+    /// Look a **live** store's id up by name (dropped stores release
+    /// their names).
     pub fn by_name(&self, name: &str) -> Option<StoreId> {
-        self.stores.iter().find(|s| s.name == name).map(|s| s.id)
+        self.read()
+            .iter()
+            .position(|s| s.snapshot.is_some() && s.name == name)
+            .map(StoreId)
     }
 
-    /// Registered ids, in order.
-    pub fn ids(&self) -> impl Iterator<Item = StoreId> + '_ {
-        (0..self.stores.len()).map(StoreId)
+    /// Every id ever issued, in order (including tombstones).
+    pub fn ids(&self) -> Vec<StoreId> {
+        (0..self.len()).map(StoreId).collect()
+    }
+
+    /// Ids with a currently published snapshot, in order.
+    pub fn live_ids(&self) -> Vec<StoreId> {
+        self.read()
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.snapshot.is_some())
+            .map(|(i, _)| StoreId(i))
+            .collect()
+    }
+
+    /// Step `id`'s persistent degraded-mode bit through `h` at the
+    /// observed lane `depth`; returns the successor state. Tombstoned or
+    /// unknown ids report healthy (their tickets answer `UnknownStore`
+    /// before degradation matters).
+    pub fn degrade_step(&self, id: StoreId, h: Hysteresis, depth: usize) -> bool {
+        let slots = self.read();
+        let Some(slot) = slots.get(id.0) else {
+            return false;
+        };
+        if slot.snapshot.is_none() {
+            return false;
+        }
+        let next = h.next(slot.degraded.load(Ordering::Relaxed), depth);
+        slot.degraded.store(next, Ordering::Relaxed);
+        next
     }
 }
 
@@ -348,7 +655,7 @@ impl StoreRegistry {
 mod tests {
     use super::*;
     use crate::util::Rng;
-    use crate::vsa::RealCodebook;
+    use crate::vsa::{CleanupMemory, RealCodebook};
 
     fn codebook(seed: u64, items: usize, dim: usize) -> BinaryCodebook {
         let mut rng = Rng::new(seed);
@@ -374,15 +681,18 @@ mod tests {
         assert_eq!(reg.len(), 2);
         assert_eq!(reg.by_name("beta"), Some(b));
         assert_eq!(reg.by_name("gamma"), None);
-        let beta = reg.store_by_id(b).unwrap();
+        let beta = reg.snapshot_of(b).unwrap();
         assert_eq!(beta.name(), "beta");
+        assert_eq!(beta.epoch(), 0);
         assert_eq!(beta.dim(), 1024);
         assert_eq!(beta.len(), 24);
         assert_eq!(beta.n_shards(), 2);
-        assert!(beta.cache().is_none(), "capacity 0 disables the cache");
-        assert!(reg.store_by_id(StoreId(0)).unwrap().cache().is_some());
-        assert!(reg.store_by_id(StoreId(7)).is_none(), "unknown ids are None");
-        assert_eq!(reg.ids().collect::<Vec<_>>(), vec![a, b]);
+        assert!(reg.cache_of(b).is_none(), "capacity 0 disables the cache");
+        assert!(reg.cache_of(a).is_some());
+        assert!(reg.snapshot_of(StoreId(7)).is_none(), "unknown ids are None");
+        assert!(reg.live(StoreId(7)).is_none());
+        assert_eq!(reg.ids(), vec![a, b]);
+        assert_eq!(reg.live_ids(), vec![a, b]);
     }
 
     #[test]
@@ -406,8 +716,144 @@ mod tests {
         let reg = StoreRegistry::single(&cb, Some(res), StoreSpec::default());
         assert_eq!(reg.len(), 1);
         assert_eq!(reg.by_name("default"), Some(StoreId::DEFAULT));
-        let s = reg.store_by_id(StoreId::DEFAULT).unwrap();
+        let s = reg.snapshot_of(StoreId::DEFAULT).unwrap();
         assert_eq!(s.fact_dim(), Some(256));
+    }
+
+    #[test]
+    fn mutations_publish_monotonic_epochs_and_bit_exact_snapshots() {
+        let mut rng = Rng::new(9);
+        let cb = codebook(9, 8, 512);
+        let mut reg = StoreRegistry::new();
+        let id = reg.register("m", &cb, None, StoreSpec { shards: 3, ..StoreSpec::default() });
+        assert_eq!(reg.epoch_of(id), Some(0));
+
+        // insert: epoch 1, the new item lands at the old len
+        let item = BinaryHV::random(&mut rng, 512);
+        assert_eq!(reg.insert_item(id, item.clone()), Ok(1));
+        let snap = reg.snapshot_of(id).unwrap();
+        assert_eq!(snap.epoch(), 1);
+        assert_eq!(snap.len(), 9);
+        assert_eq!(snap.codebook().item(8), &item);
+
+        // the rebuilt sharded scan is bit-identical to a sequential
+        // oracle over the same mutated item list
+        let oracle = CleanupMemory::new(snap.codebook().clone());
+        let queries: Vec<BinaryHV> = (0..12).map(|_| BinaryHV::random(&mut rng, 512)).collect();
+        let sharded = snap.cleanup();
+        let (got, _, _) = sharded.recall_batch_stats(&queries, 2);
+        for (q, query) in queries.iter().enumerate() {
+            assert_eq!(got[q], oracle.recall(query), "query {q}");
+        }
+
+        // delete: epoch 2, indices shift down
+        let survivor = snap.codebook().item(1).clone();
+        assert_eq!(reg.delete_item(id, 0), Ok(2));
+        let snap2 = reg.snapshot_of(id).unwrap();
+        assert_eq!(snap2.epoch(), 2);
+        assert_eq!(snap2.len(), 8);
+        assert_eq!(snap2.codebook().item(0), &survivor);
+
+        // the epoch-1 snapshot is untouched — what an in-flight batch
+        // sealed against it keeps scanning
+        assert_eq!(snap.len(), 9);
+        assert_eq!(snap.epoch(), 1);
+
+        // refusals leave the epoch alone
+        assert_eq!(
+            reg.insert_item(id, BinaryHV::zeros(256)),
+            Err(MutateError::DimensionMismatch)
+        );
+        assert_eq!(reg.delete_item(id, 99), Err(MutateError::BadIndex));
+        assert_eq!(reg.epoch_of(id), Some(2));
+    }
+
+    #[test]
+    fn delete_refuses_to_empty_a_store() {
+        let mut reg = StoreRegistry::new();
+        let id = reg.register("solo", &codebook(11, 1, 256), None, StoreSpec::default());
+        assert_eq!(reg.delete_item(id, 0), Err(MutateError::WouldEmpty));
+        assert!(reg.is_live(id));
+        assert_eq!(reg.epoch_of(id), Some(0));
+    }
+
+    #[test]
+    fn drop_tombstones_and_ids_are_never_reused() {
+        let mut reg = StoreRegistry::new();
+        let a = reg.register("a", &codebook(21, 8, 256), None, StoreSpec::default());
+        let b = reg.register("b", &codebook(22, 8, 256), None, StoreSpec::default());
+        reg.insert_item(b, BinaryHV::zeros(256)).unwrap();
+        // a batch already holding b's snapshot keeps it across the drop
+        let sealed = reg.snapshot_of(b).unwrap();
+        assert_eq!(reg.drop_store(b), Ok(()));
+        assert!(!reg.is_live(b));
+        assert!(reg.live(b).is_none());
+        assert!(reg.snapshot_of(b).is_none());
+        assert_eq!(reg.epoch_of(b), Some(1), "death epoch stays readable");
+        assert_eq!(reg.drop_store(b), Err(MutateError::UnknownStore));
+        assert_eq!(
+            reg.insert_item(b, BinaryHV::zeros(256)),
+            Err(MutateError::UnknownStore)
+        );
+        assert_eq!(sealed.len(), 9, "sealed snapshot outlives the drop");
+
+        // name is reusable, id is not: the replacement gets a fresh slot
+        let b2 = reg.create_store("b", &codebook(23, 4, 256), None, StoreSpec::default());
+        let b2 = b2.unwrap();
+        assert_eq!(b2, StoreId(2), "tombstoned slot is never recycled");
+        assert_eq!(reg.by_name("b"), Some(b2));
+        assert_eq!(reg.snapshot_of(b2).unwrap().epoch(), 0);
+        assert_eq!(reg.live_ids(), vec![a, b2]);
+        assert_eq!(reg.ids().len(), 3);
+
+        // live duplicate names are still refused at serve time
+        assert_eq!(
+            reg.create_store("a", &codebook(24, 4, 256), None, StoreSpec::default())
+                .unwrap_err(),
+            MutateError::DuplicateName
+        );
+    }
+
+    #[test]
+    fn concurrent_mutations_serialize_into_distinct_epochs() {
+        let mut reg = StoreRegistry::new();
+        let id = reg.register("c", &codebook(31, 4, 256), None, StoreSpec::default());
+        let reg = std::sync::Arc::new(reg);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let reg = reg.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                let mut epochs = Vec::new();
+                for _ in 0..8 {
+                    let e = reg.insert_item(id, BinaryHV::random(&mut rng, 256)).unwrap();
+                    epochs.push(e);
+                }
+                epochs
+            }));
+        }
+        let mut all: Vec<u64> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (1..=32).collect::<Vec<u64>>(), "every publish got a distinct epoch");
+        assert_eq!(reg.epoch_of(id), Some(32));
+        assert_eq!(reg.snapshot_of(id).unwrap().len(), 4 + 32);
+    }
+
+    #[test]
+    fn degrade_step_is_persistent_per_slot() {
+        let mut reg = StoreRegistry::new();
+        let id = reg.register("d", &codebook(41, 4, 256), None, StoreSpec::default());
+        let h = Hysteresis::new(4); // enter ≥4, exit <2
+        assert!(!reg.degrade_step(id, h, 3));
+        assert!(reg.degrade_step(id, h, 4), "crosses enter");
+        assert!(reg.degrade_step(id, h, 3), "holds between exit and enter");
+        assert!(!reg.degrade_step(id, h, 1), "drains below exit");
+        assert!(!reg.degrade_step(StoreId(9), h, 100), "unknown ids report healthy");
+        reg.drop_store(id).unwrap();
+        assert!(!reg.degrade_step(id, h, 100), "tombstones report healthy");
     }
 
     #[test]

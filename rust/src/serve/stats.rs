@@ -301,6 +301,20 @@ impl ServeStats {
         self.inner.lock().unwrap_or_else(|p| p.into_inner())
     }
 
+    /// Append a store section at runtime — the serve-time store-creation
+    /// path ([`super::engine::ServeEngine::create_store`]), so a
+    /// hot-swapped store's traffic is attributed from its first batch.
+    /// Returns the new section's index (== the new store's id).
+    pub fn register_store(&self, name: &str, n_shards: usize) -> usize {
+        let mut g = self.lock();
+        g.stores.push(StoreInner {
+            name: name.to_string(),
+            shards: vec![ShardStat::default(); n_shards],
+            ..StoreInner::default()
+        });
+        g.stores.len() - 1
+    }
+
     /// Record one executed micro-batch: occupancy, per-request latencies
     /// (queue wait + execution — cache hits included) tagged with the
     /// store they served and decomposed into lifecycle stages, and each
@@ -430,6 +444,8 @@ impl ServeStats {
                 degraded: st.degraded,
                 internal: st.internal,
                 cache: None,
+                epoch: 0,
+                live: true,
             })
             .collect();
         // engine-wide aggregates: shard stats concatenated in store
@@ -511,6 +527,15 @@ pub struct StoreSnapshot {
     /// This store's response-cache counters; `None` when it runs
     /// uncached (filled by [`super::engine::ServeEngine::stats`]).
     pub cache: Option<CacheCounters>,
+    /// Latest published snapshot epoch (0 at creation, +1 per serve-time
+    /// mutation; for dropped stores, the epoch the store died at).
+    /// Layered on by [`super::engine::ServeEngine::stats`], which owns
+    /// the registry; 0 from a bare [`ServeStats::snapshot`].
+    pub epoch: u64,
+    /// Whether the store currently has a published snapshot (`false`
+    /// once dropped — its counters stay readable for post-mortems).
+    /// Layered on by the engine; `true` from a bare snapshot.
+    pub live: bool,
 }
 
 /// Point-in-time view of an engine's metrics.
@@ -762,6 +787,37 @@ mod tests {
         // gauges default empty from a bare snapshot (engine layers them)
         assert_eq!(s.queue_depth, 0);
         assert!(s.lanes.is_empty());
+    }
+
+    #[test]
+    fn register_store_appends_a_section_at_runtime() {
+        let st = ServeStats::new(&[("boot", 2)]);
+        assert_eq!(st.register_store("hot", 3), 1);
+        st.record_batch(
+            1,
+            &[(
+                StoreId(1),
+                RequestKind::Recall,
+                Duration::from_millis(1),
+                StageSample::default(),
+            )],
+            &[(
+                StoreId(1),
+                StoreWork {
+                    timings: vec![(0, 0.001), (2, 0.002)],
+                    prune: PruneStats::default(),
+                    measured: [KernelWork::default(); 3],
+                },
+            )],
+        );
+        let s = st.snapshot();
+        assert_eq!(s.stores.len(), 2);
+        assert_eq!(s.stores[1].name, "hot");
+        assert_eq!(s.stores[1].completed, 1);
+        assert_eq!(s.stores[1].shards.len(), 3);
+        assert_eq!(s.stores[1].shards[2].scans, 1);
+        // engine-wide shard concatenation includes the late section
+        assert_eq!(s.shards.len(), 5);
     }
 
     #[test]

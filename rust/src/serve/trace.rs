@@ -176,6 +176,11 @@ pub struct TraceEvent {
     /// time (strictly increasing across drops).
     pub seq: u64,
     pub store: StoreId,
+    /// Epoch of the store snapshot this response was sealed against —
+    /// which exact item set the answer reflects (see
+    /// [`super::registry`]; 0 for error fills that never resolved a
+    /// snapshot).
+    pub epoch: u64,
     pub kind: RequestKind,
     pub stages: StageSample,
     /// End-to-end latency (admit → accounting), seconds.
@@ -272,6 +277,7 @@ mod tests {
         TraceEvent {
             seq: 0,
             store: StoreId(0),
+            epoch: 0,
             kind: RequestKind::Recall,
             stages: StageSample::default(),
             total_s: total_ms as f64 * 1e-3,

@@ -22,6 +22,14 @@
 //! **bit-identical** to the reference — an item is skipped only when at
 //! least `k` already-scored items provably precede it. See
 //! `rust/tests/pruned_equivalence.rs`.
+//!
+//! Sketches are immutable once built — there is no in-place item update.
+//! The serving layer's live mutations (item insert/delete, see
+//! `serve::registry`) rebuild the whole codebook **and** its sketch
+//! sidecar through `BinaryCodebook::from_items_sketched` and publish the
+//! pair as one new immutable snapshot, so a sketch can never disagree
+//! with the rows it summarizes: readers either see the old
+//! codebook+sketch pair or the new one, never a mix.
 
 use super::ca90;
 use super::hypervector::{BinaryHV, RealHV, FOLD_BITS};

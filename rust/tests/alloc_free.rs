@@ -195,6 +195,7 @@ fn resonator_sweeps_allocate_nothing_in_steady_state() {
     let ev = TraceEvent {
         seq: 0,
         store: StoreId(0),
+        epoch: 0,
         kind: RequestKind::Recall,
         stages: StageSample {
             queue_s: 20e-6,

@@ -492,6 +492,188 @@ else
     echo "python3 unavailable; structural grep checks passed"
 fi
 
+# Wire smoke: the smoke schedule once more, but through real TCP
+# sockets — the framed length-prefixed protocol, one connection per
+# client thread, every socket response bit-exact vs the sequential
+# oracle. Separate JSON so the in-process BENCH_serve.json above stays
+# the canonical perf artifact; the wire-vs-in-process delta is the
+# front-end's measured overhead.
+echo "== bench smoke: serve wire (--wire: framed TCP socket pass) =="
+NSCOG_SERVE_JSON="$(pwd)/BENCH_serve_wire.json" \
+    cargo run --release --quiet --bin nscog -- serve-bench --smoke --stores 2 --wire
+
+echo "== validate BENCH_serve_wire.json =="
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PYEOF'
+import json
+
+def validate(r):
+    """One wire verdict -> 'pass' or 'skip'; raises AssertionError on a
+    violated invariant. JSONs without a wire pass skip cleanly."""
+    w = r.get('wire')
+    if w is None:
+        return 'skip'
+    p = w.get('pass') or {}
+    c = w.get('counters') or {}
+    assert p.get('ok', 0) > 0, 'wire pass served nothing'
+    assert p.get('mismatches') == 0, \
+        f"wire: {p.get('mismatches')} socket responses diverged from the oracle"
+    assert w.get('net_errors') == 0, \
+        f"wire: {w.get('net_errors')} transport errors on a clean loopback"
+    assert c.get('protocol_errors') == 0, \
+        'wire: protocol errors from a well-formed client'
+    assert c.get('accepted', 0) >= 1, 'wire: no connections accepted'
+    assert c.get('frames_out', 0) >= p.get('ok', 0), \
+        'wire: fewer response frames than answers'
+    assert c.get('bytes_in', 0) > 0 and c.get('bytes_out', 0) > 0, \
+        'wire: no bytes moved'
+    return 'pass'
+
+# Self-test before gating the real run: pass a good verdict, skip
+# wireless shapes, and FAIL each mutated bad verdict (a gate that
+# cannot fail gates nothing).
+ok = {'wire': {'pass': {'ok': 64, 'mismatches': 0}, 'net_errors': 0,
+      'counters': {'accepted': 4, 'frames_in': 64, 'frames_out': 64,
+                   'bytes_in': 70000, 'bytes_out': 9000, 'protocol_errors': 0}}}
+assert validate(ok) == 'pass', 'validator rejected a passing wire verdict'
+assert validate({'bench': 'serve'}) == 'skip', 'wireless JSON must skip'
+assert validate({'wire': None}) == 'skip', 'null wire block must skip'
+for mutate, what in [
+        (lambda b: b['wire']['pass'].__setitem__('mismatches', 1), 'oracle-diverging'),
+        (lambda b: b['wire']['pass'].__setitem__('ok', 0), 'nothing-served'),
+        (lambda b: b['wire'].__setitem__('net_errors', 2), 'transport-erroring'),
+        (lambda b: b['wire']['counters'].__setitem__('protocol_errors', 1),
+         'protocol-erroring'),
+        (lambda b: b['wire']['counters'].__setitem__('frames_out', 3), 'frame-dropping'),
+        (lambda b: b['wire']['counters'].__setitem__('bytes_out', 0), 'byteless')]:
+    bad = json.loads(json.dumps(ok))
+    mutate(bad)
+    try:
+        validate(bad)
+        raise SystemExit(f'wire validator accepted a {what} verdict')
+    except AssertionError:
+        pass
+
+r = json.load(open('BENCH_serve_wire.json'))
+if validate(r) == 'skip':
+    raise SystemExit('wire smoke run wrote no wire block')
+w = r['wire']
+print(f"wire smoke OK (validator self-test passed): {w['pass']['ok']} answers over "
+      f"{w['counters']['accepted']} conns, {w['counters']['bytes_in']} B in / "
+      f"{w['counters']['bytes_out']} B out, 0 mismatches")
+PYEOF
+else
+    grep -q '"net_errors": 0' BENCH_serve_wire.json
+    grep -q '"protocol_errors": 0' BENCH_serve_wire.json
+    grep -q '"mismatches": 0' BENCH_serve_wire.json
+    echo "python3 unavailable; structural grep checks passed"
+fi
+
+# Network chaos matrix: four hostile peers against a real TCP listener —
+# a mid-frame staller (slow-loris), a silent half-open socket, a
+# mid-stream disconnector, and a garbage-byte speaker — while victim
+# clients drive the schedule over their own connections. Gates: the
+# attacker is reaped/refused per the wire contract, every victim answer
+# stays bit-exact, and completed + refused + expired == offered holds
+# exactly. Overwrites BENCH_serve_chaos.json per scenario; each verdict
+# is validated before the next run, and the last (garbage) is what the
+# repo keeps.
+for sc in slowloris halfopen disconnect garbage; do
+    echo "== chaos smoke: serve wire ($sc) =="
+    NSCOG_SERVE_JSON="$(pwd)/BENCH_serve_chaos.json" \
+        cargo run --release --quiet --bin nscog -- serve-bench --smoke --stores 2 \
+        --chaos "$sc"
+
+    echo "== validate BENCH_serve_chaos.json ($sc) =="
+    if command -v python3 >/dev/null 2>&1; then
+        python3 - "$sc" <<'PYEOF'
+import json, sys
+
+expected = sys.argv[1]
+
+def validate(r, scenario=None):
+    """One net-chaos verdict -> 'pass' or 'skip'; raises AssertionError
+    on a violated invariant. Non-chaos JSONs and non-network scenarios
+    (their net block is null) skip cleanly."""
+    ch = r.get('chaos')
+    if ch is None:
+        return 'skip'
+    n = ch.get('net')
+    if n is None:
+        return 'skip'
+    assert ch.get('scenario') in ('slowloris', 'halfopen', 'disconnect', 'garbage'), \
+        'net ledger on a non-network scenario'
+    if scenario is not None:
+        assert ch.get('scenario') == scenario, \
+            f"expected scenario {scenario}, found {ch.get('scenario')}"
+    assert ch.get('fairness_pass') is True, 'net chaos: fairness invariant failed'
+    assert ch.get('liveness_pass') is True, 'net chaos: liveness invariant failed'
+    assert n.get('offered', 0) > 0, 'net chaos: victims offered zero requests'
+    assert n.get('accounting_exact') is True, 'net chaos: inexact accounting flag'
+    assert n.get('completed', 0) + n.get('refused', 0) + n.get('expired', 0) \
+        == n.get('offered', -1), \
+        'net chaos: completed + refused + expired != offered'
+    assert n.get('mismatches') == 0, \
+        f"net chaos: {n.get('mismatches')} victim answers diverged from the oracle"
+    assert n.get('net_errors') == 0, \
+        f"net chaos: {n.get('net_errors')} victim transport errors"
+    assert n.get('victim_clean') is True, 'net chaos: victims damaged'
+    assert n.get('reap_within_deadline') is True, \
+        'net chaos: hostile peer not reaped/refused within its deadline'
+    assert n.get('probe_pass') is True, 'net chaos: post-attack probe not bit-exact'
+    return 'pass'
+
+# Self-test before gating the real run (PR 6/8 pattern): pass a good
+# verdict, skip chaos-free and non-network shapes, FAIL each mutation.
+ok = {'chaos': {'scenario': 'slowloris', 'fairness_pass': True, 'liveness_pass': True,
+      'net': {'offered': 90, 'completed': 88, 'refused': 2, 'expired': 0,
+              'mismatches': 0, 'net_errors': 0, 'accounting_exact': True,
+              'reaped': 1, 'reap_within_deadline': True, 'protocol_errors': 0,
+              'disconnects': 0, 'victim_clean': True, 'probe_pass': True},
+      'stores': []}}
+assert validate(ok) == 'pass', 'validator rejected a passing net verdict'
+assert validate({'bench': 'serve'}) == 'skip', 'pre-chaos JSON must skip'
+assert validate({'chaos': {'scenario': 'flood', 'net': None}}) == 'skip', \
+    'non-network scenario must skip'
+for mutate, what in [
+        (lambda b: b['chaos']['net'].__setitem__('mismatches', 1), 'oracle-diverging'),
+        (lambda b: b['chaos']['net'].__setitem__('net_errors', 3), 'victim-io-error'),
+        (lambda b: b['chaos']['net'].__setitem__('completed', 87), 'leaky-ledger'),
+        (lambda b: b['chaos']['net'].__setitem__('accounting_exact', False),
+         'inexact-accounting'),
+        (lambda b: b['chaos']['net'].__setitem__('reap_within_deadline', False),
+         'unreaped-staller'),
+        (lambda b: b['chaos']['net'].__setitem__('victim_clean', False), 'damaged-victim'),
+        (lambda b: b['chaos']['net'].__setitem__('probe_pass', False), 'failed-probe'),
+        (lambda b: b['chaos'].__setitem__('fairness_pass', False), 'fairness-failing'),
+        (lambda b: b['chaos'].__setitem__('liveness_pass', False), 'liveness-failing')]:
+    bad = json.loads(json.dumps(ok))
+    mutate(bad)
+    try:
+        validate(bad)
+        raise SystemExit(f'net chaos validator accepted a {what} verdict')
+    except AssertionError:
+        pass
+
+r = json.load(open('BENCH_serve_chaos.json'))
+if validate(r, expected) == 'skip':
+    raise SystemExit(f'net chaos run wrote no net block for {expected}')
+n = r['chaos']['net']
+print(f"net chaos {expected} OK (validator self-test passed): "
+      f"{n['completed']}+{n['refused']}+{n['expired']} == {n['offered']} exact, "
+      f"reaped {n['reaped']}, {n['protocol_errors']} protocol errors, "
+      f"{n['disconnects']} disconnects, probe bit-exact")
+PYEOF
+    else
+        grep -q "\"scenario\": \"$sc\"" BENCH_serve_chaos.json
+        grep -q '"fairness_pass": true' BENCH_serve_chaos.json
+        grep -q '"liveness_pass": true' BENCH_serve_chaos.json
+        grep -q '"accounting_exact": true' BENCH_serve_chaos.json
+        grep -q '"victim_clean": true' BENCH_serve_chaos.json
+        echo "python3 unavailable; structural grep checks passed"
+    fi
+done
+
 # Speedup regression gate: measured speedups in the bench JSONs must not
 # drop below the floors recorded in PERF.md's FLOORS table. Skips cleanly
 # when the measured numbers are unpopulated (e.g. authoring containers

@@ -7,6 +7,7 @@
 //!   accel [CFG] [WORKLOAD] run a suite workload on the simulator
 //!   solve [--grid G]       solve synthetic RPM instances with NVSA+PrAE
 //!   serve-bench [FLAGS]    load-test the batched serving engine
+//!   serve [--listen ADDR]  expose the engine on a TCP socket (framed wire)
 //!   runtime-info           check PJRT artifacts
 //!   info                   print system inventory
 
@@ -36,6 +37,7 @@ fn main() {
                 .unwrap_or(3),
         ),
         "serve-bench" => serve_bench(&args[1..]),
+        "serve" => serve(&args[1..]),
         "runtime-info" => runtime_info(),
         "info" | "--help" | "-h" => info(),
         other => {
@@ -90,9 +92,17 @@ fn info() {
     println!("                               weights double as DRR pop shares)");
     println!("                        fault injection: --faults reject=P,panic=P,delay-prob=P,");
     println!("                               delay-us=N,seed=S (deterministic; probs in [0,1])");
-    println!("                        chaos: --chaos flood|deadline|panic|churn (runs after the");
-    println!("                               clean passes on a fresh engine; fairness + liveness");
-    println!("                               gated, verdict in the JSON's \"chaos\" block)");
+    println!("                        chaos: --chaos flood|deadline|panic|churn|slowloris|halfopen|");
+    println!("                               disconnect|garbage (runs after the clean passes on a");
+    println!("                               fresh engine; fairness + liveness gated, verdict in");
+    println!("                               the JSON's \"chaos\" block; the four network scenarios");
+    println!("                               attack a real TCP listener while victim clients must");
+    println!("                               stay bit-exact, with a \"net\" ledger proving");
+    println!("                               completed + refused + expired == offered)");
+    println!("                        wire: --wire adds a TCP socket pass after the in-process");
+    println!("                               passes — the whole schedule through the framed");
+    println!("                               protocol via real connections, bit-exact gated,");
+    println!("                               socket counters folded into the JSON's \"wire\" block");
     println!("                        churn: live item insert/delete and store create/drop racing");
     println!("                               traffic via epoch-based snapshot swap; every answer");
     println!("                               verified against its seal-window epoch oracle, dropped");
@@ -109,6 +119,12 @@ fn info() {
     println!("                        --trace-capacity N (ring size, default 4096) --trace-json PATH");
     println!("                        host roofline calibration: NSCOG_HOST_PEAK_FLOPS and");
     println!("                               NSCOG_HOST_DRAM_BW override the Xeon 4114 defaults");
+    println!("  serve --listen ADDR   expose the serving engine on a TCP socket (framed, length-");
+    println!("                        prefixed wire protocol v1; see PERF.md 'Network front-end').");
+    println!("                        knobs: --stores N (tenants, default 1)");
+    println!("                               --duration-s S (0 = serve until killed, default)");
+    println!("                        per-connection read/write deadlines, slow-loris and");
+    println!("                        half-open reaping, overload answered with error frames");
     println!("  runtime-info          check PJRT artifacts (artifacts/manifest.json)");
 }
 
@@ -313,6 +329,7 @@ fn serve_bench(flags: &[String]) {
             opts.open_loop_qps = Some(rate);
         }
     }
+    opts.wire = has("--wire");
     if let Some(n) = num("--sketch-bits") {
         opts.engine.sketch_bits = Some(n);
     }
@@ -395,7 +412,10 @@ fn serve_bench(flags: &[String]) {
         match ChaosScenario::parse(spec) {
             Some(sc) => opts.chaos = Some(sc),
             None => {
-                eprintln!("unknown --chaos scenario '{spec}' (expected flood|deadline|panic|churn)");
+                eprintln!(
+                    "unknown --chaos scenario '{spec}' \
+                     (expected flood|deadline|panic|churn|slowloris|halfopen|disconnect|garbage)"
+                );
                 std::process::exit(2);
             }
         }
@@ -547,6 +567,28 @@ fn serve_bench(flags: &[String]) {
         "QPS speedup vs unbatched single-thread baseline: {:.2}x",
         report.speedup_qps()
     );
+    if let Some(w) = &report.wire {
+        let c = &w.counters;
+        println!(
+            "wire (tcp): {} ok / {} rejected / {} expired, {} mismatches, {} io errors",
+            w.pass.ok,
+            w.pass.rejected + w.pass.rejected_tenant,
+            w.pass.expired,
+            w.pass.mismatches,
+            w.net_errors
+        );
+        println!(
+            "  sockets: {} conns, {} frames in / {} out, {} B in / {} B out, \
+             {} protocol errors, {} reaped",
+            c.accepted,
+            c.frames_in,
+            c.frames_out,
+            c.bytes_in,
+            c.bytes_out,
+            c.protocol_errors,
+            c.slowloris_reaped + c.halfopen_reaped
+        );
+    }
     if let Some(log) = &report.trace {
         use nscog::serve::RequestKind;
         println!(
@@ -606,12 +648,22 @@ fn serve_bench(flags: &[String]) {
         Err(e) => eprintln!("could not write serve bench JSON: {e}"),
     }
     let mismatches = report.closed.mismatches
-        + report.open.as_ref().map_or(0, |(_, p)| p.mismatches);
+        + report.open.as_ref().map_or(0, |(_, p)| p.mismatches)
+        + report.wire.as_ref().map_or(0, |w| w.pass.mismatches);
     if mismatches > 0 {
         eprintln!(
             "ERROR: {mismatches} batched responses diverged from the sequential oracle"
         );
         std::process::exit(1);
+    }
+    if let Some(w) = &report.wire {
+        if w.net_errors > 0 {
+            eprintln!(
+                "ERROR: {} transport errors during the wire pass",
+                w.net_errors
+            );
+            std::process::exit(1);
+        }
     }
     if let Some(chaos) = &report.chaos {
         println!(
@@ -660,6 +712,32 @@ fn serve_bench(flags: &[String]) {
                 println!("    store '{name}': final epoch {epoch}");
             }
         }
+        if let Some(n) = &chaos.net {
+            println!(
+                "  net: {} offered = {} completed + {} refused + {} expired ({}), \
+                 {} mismatches, {} io errors",
+                n.offered,
+                n.completed,
+                n.refused,
+                n.expired,
+                if n.accounting_exact { "exact" } else { "INEXACT" },
+                n.mismatches,
+                n.net_errors
+            );
+            println!(
+                "       reaped {} ({}), {} protocol errors, {} disconnects, victims {}, probe {}",
+                n.reaped,
+                if n.reap_within_deadline {
+                    "within deadline"
+                } else {
+                    "LATE/NONE"
+                },
+                n.protocol_errors,
+                n.disconnects,
+                if n.victim_clean { "clean" } else { "DAMAGED" },
+                if n.probe_pass { "bit-exact" } else { "FAILED" }
+            );
+        }
         if !chaos.fairness_pass || !chaos.liveness_pass {
             eprintln!(
                 "ERROR: chaos scenario '{}' violated its fairness/liveness invariants",
@@ -667,6 +745,78 @@ fn serve_bench(flags: &[String]) {
             );
             std::process::exit(1);
         }
+    }
+}
+
+/// Expose the serving engine on a real TCP socket: a deterministic
+/// multi-store fixture behind the framed wire protocol, with the
+/// connection-robustness defaults (read/write deadlines, slow-loris and
+/// half-open reaping, overload answered as error frames).
+fn serve(flags: &[String]) {
+    use nscog::serve::loadgen::{BenchOpts, Fixture};
+    use nscog::serve::{net, NetConfig, NetServer, ServeEngine};
+    use std::sync::Arc;
+
+    let val = |name: &str| {
+        flags
+            .iter()
+            .position(|a| a == name)
+            .and_then(|i| flags.get(i + 1))
+    };
+    let num = |name: &str| val(name).and_then(|v| v.parse::<usize>().ok());
+    let addr = val("--listen").cloned().unwrap_or_else(|| {
+        eprintln!("serve: --listen ADDR is required (e.g. --listen 127.0.0.1:7070)");
+        std::process::exit(2);
+    });
+    let stores = num("--stores").unwrap_or(1).max(1);
+    let duration_s = num("--duration-s").unwrap_or(0) as u64;
+
+    // the smoke fixture gives small, deterministic stores to serve
+    let mut opts = BenchOpts::smoke();
+    opts.with_stores(stores);
+    let fixture = Fixture::build(opts.fixture.clone());
+    let engine = Arc::new(
+        ServeEngine::start_registry(fixture.registry(&opts.engine), opts.engine.clone())
+            .expect("spawn serve workers"),
+    );
+    let server = match NetServer::start(Arc::clone(&engine), &addr, NetConfig::default()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: could not bind {addr}: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "serving {} store(s) on {} (framed wire protocol v{})",
+        stores,
+        server.addr(),
+        net::frame::VERSION
+    );
+    for p in &opts.fixture.stores {
+        println!("  store '{}': {}x{}b cleanup", p.name, p.items, p.dim);
+    }
+    if duration_s == 0 {
+        println!("serving until killed (--duration-s S bounds the run)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration_s));
+    let c = server.counters();
+    println!(
+        "served {} response frames over {} connection(s): {} frames in, \
+         {} protocol errors, {} refused, {} reaped, {} disconnects",
+        c.frames_out,
+        c.accepted,
+        c.frames_in,
+        c.protocol_errors,
+        c.refused,
+        c.slowloris_reaped + c.halfopen_reaped,
+        c.disconnects
+    );
+    server.shutdown();
+    if let Ok(e) = Arc::try_unwrap(engine) {
+        e.shutdown();
     }
 }
 

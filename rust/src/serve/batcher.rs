@@ -106,8 +106,16 @@ pub fn gather(queue: &AdmissionQueue, policy: &BatchPolicy, stats: &ServeStats) 
         break t;
     };
     batch.push(first);
+    // Fast drain during shutdown: once the queue is closed no new
+    // tickets can arrive, so holding the window open for `max_delay`
+    // only delays the remaining backlog. Sweep what is already queued
+    // (pop_until with an elapsed deadline) and execute immediately.
     if max_batch > 1 {
-        let window_end = Instant::now() + policy.max_delay;
+        let window_end = if queue.is_closed() {
+            Instant::now()
+        } else {
+            Instant::now() + policy.max_delay
+        };
         while batch.len() < max_batch {
             match queue.pop_until(window_end) {
                 Some(t) if t.expired(Instant::now()) => drop_expired(t, stats),

@@ -11,10 +11,23 @@
 //! target store's own lane quota ([`ServeError::TenantOverloaded`]) — a
 //! flooding tenant sheds its *own* traffic while other stores' lanes stay
 //! admittable, and the queue's deficit-round-robin pop keeps service
-//! shares proportional to store weights. Shutdown closes the queue,
-//! drains every already-admitted ticket (no waiter is ever left hanging),
-//! and joins the workers; `Drop` does the same if `shutdown()` was never
-//! called.
+//! shares proportional to store weights.
+//!
+//! Shutdown comes in two grades, and both answer every admitted ticket —
+//! no waiter is ever left to spin out its own timeout:
+//! [`ServeEngine::shutdown`] is graceful (close the queue, let the
+//! workers *execute* the backlog, join), while `Drop` and
+//! [`ServeEngine::shutdown_now`] abort (close the queue, drain the
+//! backlog, fill each drained ticket with [`ServeError::ShuttingDown`],
+//! join — counted in [`StatsSnapshot::shed_shutdown`]).
+//!
+//! Async completion has two shapes: per-ticket polling via
+//! [`PendingResponse::try_wait`], and the completion-queue path
+//! ([`ServeEngine::submit_with_completion`]) where finished outcomes are
+//! delivered to a caller-owned [`CompletionQueue`] tagged with a
+//! caller-chosen id — one blocking consumer harvests any number of
+//! in-flight requests without polling. The TCP front-end's connection
+//! writer threads ([`super::net`]) are built on it.
 //!
 //! Worker panics are contained: `execute` runs under `catch_unwind`, a
 //! poisoned batch's still-unanswered tickets are filled with
@@ -36,7 +49,7 @@
 use super::batcher::{self, BatchPolicy, ExecCtx, WorkerScratch};
 use super::cache::CacheConfig;
 use super::faults::{FaultConfig, FaultPlan};
-use super::queue::{AdmissionQueue, LaneSpec, Priority, ResponseSlot, Ticket};
+use super::queue::{AdmissionQueue, CompletionQueue, LaneSpec, Priority, ResponseSlot, Ticket};
 use super::registry::{MutateError, StoreId, StoreRegistry, StoreSpec};
 use super::stats::{ServeStats, StatsSnapshot};
 use super::trace::{StageMarks, TraceEvent, TraceRing};
@@ -404,6 +417,58 @@ impl ServeEngine {
         }
     }
 
+    /// Completion-queue submit — the polling-free half of the async API.
+    /// Admission control runs synchronously (refusals come back as
+    /// `Err`, exactly like [`ServeEngine::submit_async`], and push
+    /// *nothing* to the queue — the caller answers those itself); an
+    /// admitted request's outcome is later delivered to `cq` as a
+    /// [`super::queue::Completion`] tagged `tag`, whatever terminates it
+    /// (worker fill, deadline expiry, contained panic, abort shutdown).
+    /// One consumer blocking on `cq.pop_blocking()` therefore harvests
+    /// any number of in-flight requests — the connection writer threads
+    /// in [`super::net`] run exactly this loop.
+    pub fn submit_with_completion(
+        &self,
+        request: ServeRequest,
+        priority: Priority,
+        deadline: Duration,
+        cq: &CompletionQueue,
+        tag: u64,
+    ) -> Result<(), ServeError> {
+        if !self.shared.registry.is_live(request.store) {
+            self.shared.stats.record_unsupported(1);
+            return Err(ServeError::UnknownStore);
+        }
+        if let Some(f) = &self.shared.faults {
+            if f.should_reject_admission() {
+                self.shared.stats.record_rejected();
+                return Err(ServeError::Overloaded);
+            }
+        }
+        let store = request.store;
+        let now = Instant::now();
+        let ticket = Ticket {
+            request,
+            priority,
+            slot: ResponseSlot::with_completion(cq.clone(), tag),
+            enqueued: now,
+            deadline: now + deadline,
+            marks: StageMarks::new(now),
+        };
+        match self.shared.queue.push(ticket) {
+            Ok(()) => Ok(()),
+            Err((_, why)) => {
+                let err = why.to_serve_error();
+                if err == ServeError::TenantOverloaded {
+                    self.shared.stats.record_tenant_rejected(store);
+                } else {
+                    self.shared.stats.record_rejected();
+                }
+                Err(err)
+            }
+        }
+    }
+
     /// Metrics snapshot, including per-store response-cache counters for
     /// every store that runs one (and their engine-wide sum), each
     /// store's current epoch and liveness, plus the live queue-depth and
@@ -442,9 +507,23 @@ impl ServeEngine {
         self.shared.trace.as_ref().map(|r| r.capacity())
     }
 
-    /// Stop admissions, drain already-admitted tickets, join workers.
+    /// Graceful shutdown: stop admissions, let the workers *execute*
+    /// every already-admitted ticket, join. Every waiter gets a real
+    /// outcome.
     pub fn shutdown(mut self) {
         self.shutdown_in_place();
+    }
+
+    /// Abort shutdown: stop admissions, drain the backlog without
+    /// executing it — each drained ticket is answered
+    /// [`ServeError::ShuttingDown`] immediately (counted in
+    /// [`StatsSnapshot::shed_shutdown`]) — then join the workers.
+    /// Tickets a worker had already popped still finish and keep their
+    /// real outcome (slot fills are first-write-wins). This is also
+    /// what `Drop` runs, so leaking an engine mid-chaos can never leave
+    /// a `wait_timeout` caller spinning against an unfilled slot.
+    pub fn shutdown_now(mut self) {
+        self.abort_in_place();
     }
 
     fn shutdown_in_place(&mut self) {
@@ -453,11 +532,27 @@ impl ServeEngine {
             let _ = h.join();
         }
     }
+
+    fn abort_in_place(&mut self) {
+        self.shared.queue.close();
+        let mut shed = 0u64;
+        for t in self.shared.queue.drain_all() {
+            if t.slot.fill(Err(ServeError::ShuttingDown)) {
+                shed += 1;
+            }
+        }
+        if shed > 0 {
+            self.shared.stats.record_shed_shutdown(shed);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 impl Drop for ServeEngine {
     fn drop(&mut self) {
-        self.shutdown_in_place();
+        self.abort_in_place();
     }
 }
 
@@ -692,6 +787,99 @@ mod tests {
     fn drop_joins_workers() {
         let (eng, _) = engine(EngineConfig::default(), 6);
         drop(eng); // must not hang
+    }
+
+    #[test]
+    fn completion_queue_harvests_every_submission_without_polling() {
+        let (eng, cm) = engine(EngineConfig::default(), 41);
+        let mut rng = Rng::new(42);
+        let cq = CompletionQueue::new();
+        let queries: Vec<BinaryHV> = (0..12).map(|_| BinaryHV::random(&mut rng, 1024)).collect();
+        for (i, q) in queries.iter().enumerate() {
+            eng.submit_with_completion(
+                ServeRequest::recall(q.clone()),
+                Priority::Normal,
+                Duration::from_secs(5),
+                &cq,
+                i as u64,
+            )
+            .unwrap();
+        }
+        // one consumer, zero polling: exactly 12 completions arrive,
+        // each tagged, each bit-exact for its own query
+        let mut seen = vec![false; queries.len()];
+        for _ in 0..queries.len() {
+            let c = cq.pop_blocking().expect("completion for every admitted ticket");
+            let tag = c.tag as usize;
+            assert!(!std::mem::replace(&mut seen[tag], true), "tag {tag} delivered twice");
+            let (index, cosine) = cm.recall(&queries[tag]);
+            assert_eq!(c.outcome, Ok(ServeResponse::Recall { index, cosine }));
+            assert!(c.completed >= c.enqueued);
+        }
+        assert!(cq.is_empty(), "no phantom completions");
+        // admission refusals surface synchronously and push nothing
+        let err = eng.submit_with_completion(
+            ServeRequest::recall_on(StoreId(9), BinaryHV::zeros(1024)),
+            Priority::Normal,
+            Duration::from_secs(5),
+            &cq,
+            99,
+        );
+        assert_eq!(err, Err(ServeError::UnknownStore));
+        assert!(cq.is_empty());
+        eng.shutdown();
+    }
+
+    #[test]
+    fn abort_shutdown_terminates_the_backlog_with_shutting_down() {
+        // one worker pinned in an injected 300ms kernel delay while a
+        // backlog queues behind it: shutdown_now must answer the whole
+        // backlog with ShuttingDown immediately instead of executing it
+        // (or leaving the waiters to spin out their own timeouts)
+        let (eng, _) = engine(
+            EngineConfig {
+                workers: 1,
+                max_batch: 1,
+                max_delay: Duration::from_micros(50),
+                cache_capacity: 0,
+                faults: Some(FaultConfig {
+                    seed: 3,
+                    kernel_delay_prob: 1.0,
+                    kernel_delay: Duration::from_millis(300),
+                    ..FaultConfig::default()
+                }),
+                ..EngineConfig::default()
+            },
+            43,
+        );
+        let mut rng = Rng::new(44);
+        let mut pending = Vec::new();
+        for _ in 0..6 {
+            let q = BinaryHV::random(&mut rng, 1024);
+            pending.push(
+                eng.submit_async(ServeRequest::recall(q), Priority::Normal, Duration::from_secs(30))
+                    .unwrap(),
+            );
+        }
+        std::thread::sleep(Duration::from_millis(40));
+        let t0 = Instant::now();
+        eng.shutdown_now();
+        // every handle resolves: the popped head ticket(s) finished for
+        // real, the drained rest got ShuttingDown — nothing hangs for
+        // its 30s deadline
+        let mut shed = 0;
+        for p in pending {
+            match p.wait() {
+                Err(ServeError::ShuttingDown) => shed += 1,
+                Ok(_) => {}
+                other => panic!("unexpected abort outcome {other:?}"),
+            }
+        }
+        assert!(shed >= 1, "abort must shed the queued backlog");
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "abort shutdown answers waiters promptly"
+        );
     }
 
     #[test]

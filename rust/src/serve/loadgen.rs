@@ -21,10 +21,17 @@
 //!
 //! `run_bench` compares both against the unbatched single-thread baseline
 //! and emits `BENCH_serve.json` (path override: `NSCOG_SERVE_JSON`) with
-//! one per-store block per registered store.
+//! one per-store block per registered store. With `--wire` the same
+//! engine additionally serves a closed-loop pass over real TCP sockets
+//! ([`super::net`]): `clients` [`NetClient`] threads against a
+//! [`NetServer`] on an ephemeral loopback port, every framed response
+//! oracle-checked bit-exactly, socket counters folded into the JSON's
+//! `"wire"` block — the wire-vs-in-process delta is the front-end's
+//! measured overhead.
 //!
-//! Chaos scenarios (`--chaos flood|deadline|panic|churn`) run on a
-//! **separate** engine instance after the clean passes, so the
+//! Chaos scenarios (`--chaos
+//! flood|deadline|panic|churn|slowloris|halfopen|disconnect|garbage`)
+//! run on a **separate** engine instance after the clean passes, so the
 //! bit-exactness numbers above are never polluted by injected failures.
 //! Each scenario checks a fairness invariant (a misbehaving tenant's
 //! damage stays tenant-local) and a liveness invariant (the engine still
@@ -33,7 +40,14 @@
 //! oracle ledger: while live item inserts/deletes and store create/drops
 //! race the traffic, every `Ok` answer must be bit-exact for *some*
 //! snapshot epoch the request could have been sealed against — a
-//! wrong-epoch answer (e.g. a stale cache hit) fails the run.
+//! wrong-epoch answer (e.g. a stale cache hit) fails the run. The four
+//! network scenarios put a misbehaving *peer* in front of the TCP
+//! front-end — a mid-frame staller, a silent half-open carcass, a
+//! mid-stream disconnector, a garbage-byte speaker — while victim
+//! clients run the schedule over real sockets: the peer must be reaped
+//! or refused per the wire contract, every victim answer must stay
+//! bit-exact, and the `completed + refused + expired == offered`
+//! accounting must hold exactly (the `"chaos"` block's `"net"` ledger).
 //!
 //! With `--trace` the clean engine also runs its per-request stage
 //! tracer: the final ring-buffer dump, the per-class stage-latency
@@ -46,6 +60,7 @@
 
 use super::engine::{EngineConfig, PendingResponse, ServeEngine};
 use super::faults::FaultConfig;
+use super::net::{frame, NetClient, NetConfig, NetCounters, NetServer};
 use super::queue::{LaneGauge, Priority};
 use super::registry::{StoreId, StoreRegistry, StoreSpec};
 use super::stats::{LatencySummary, StageSummary, StatsSnapshot};
@@ -59,6 +74,8 @@ use crate::util::bench::Table;
 use crate::util::Rng;
 use crate::vsa::{BinaryCodebook, BinaryHV, CleanupMemory, RealCodebook, Resonator};
 use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -542,6 +559,11 @@ pub struct BenchOpts {
     pub clients: usize,
     /// Open-loop offered rate; `None` skips the open-loop pass.
     pub open_loop_qps: Option<f64>,
+    /// Run an extra closed-loop pass over real TCP sockets (`--wire`):
+    /// the same engine behind a [`NetServer`] on an ephemeral loopback
+    /// port, `clients` [`NetClient`] threads, every framed response
+    /// verified bit-exactly against the oracle.
+    pub wire: bool,
     /// Chaos scenario to run after the clean passes, on its own engine.
     pub chaos: Option<ChaosScenario>,
     /// Churn scenario mutation rate, ops/second (`--churn-rate`).
@@ -601,6 +623,7 @@ impl BenchOpts {
             },
             clients: 8,
             open_loop_qps: None,
+            wire: false,
             chaos: None,
             churn_rate: 150.0,
             churn_ops: 60,
@@ -642,6 +665,7 @@ impl BenchOpts {
             engine: EngineConfig::default(),
             clients: 16,
             open_loop_qps: None,
+            wire: false,
             chaos: None,
             churn_rate: 150.0,
             churn_ops: 60,
@@ -694,6 +718,22 @@ pub enum ChaosScenario {
     /// monotonically, and surviving stores must probe bit-exactly after
     /// the churn stops.
     Churn,
+    /// A peer stalls mid-frame (valid header, payload never finishes)
+    /// while victim clients run the schedule over real sockets: the
+    /// staller must be reaped within the read deadline and the victims
+    /// must complete bit-exactly.
+    Slowloris,
+    /// A peer connects and then goes silent forever (no FIN): it must be
+    /// reaped within the idle deadline without touching the victims.
+    HalfOpen,
+    /// A peer repeatedly sends whole or partial request frames and drops
+    /// the connection without reading answers: stranded completions must
+    /// be discarded harmlessly, victims unaffected.
+    Disconnect,
+    /// A peer speaks non-protocol bytes: each attempt must be answered
+    /// with exactly one protocol error frame and closed — never a panic,
+    /// never a partial decode — while victims keep serving.
+    Garbage,
 }
 
 impl ChaosScenario {
@@ -703,6 +743,10 @@ impl ChaosScenario {
             "deadline" => Some(ChaosScenario::DeadlineStorm),
             "panic" => Some(ChaosScenario::PanicStorm),
             "churn" => Some(ChaosScenario::Churn),
+            "slowloris" => Some(ChaosScenario::Slowloris),
+            "halfopen" => Some(ChaosScenario::HalfOpen),
+            "disconnect" => Some(ChaosScenario::Disconnect),
+            "garbage" => Some(ChaosScenario::Garbage),
             _ => None,
         }
     }
@@ -713,6 +757,10 @@ impl ChaosScenario {
             ChaosScenario::DeadlineStorm => "deadline",
             ChaosScenario::PanicStorm => "panic",
             ChaosScenario::Churn => "churn",
+            ChaosScenario::Slowloris => "slowloris",
+            ChaosScenario::HalfOpen => "halfopen",
+            ChaosScenario::Disconnect => "disconnect",
+            ChaosScenario::Garbage => "garbage",
         }
     }
 }
@@ -749,6 +797,8 @@ pub struct ChaosReport {
     /// The churn scenario's mutation/epoch ledger; `None` for every
     /// other scenario.
     pub churn: Option<ChurnReport>,
+    /// The network scenarios' wire ledger; `None` for in-process chaos.
+    pub net: Option<NetChaosReport>,
 }
 
 /// The churn scenario's ledger: what was mutated, how every response
@@ -787,6 +837,44 @@ pub struct ChurnReport {
     pub probe_pass: bool,
     /// `(name, final epoch)` per issued store slot, dropped included.
     pub final_epochs: Vec<(String, u64)>,
+}
+
+/// The network scenarios' wire ledger: victim-side accounting plus the
+/// server's reap/refusal counters, and the invariant verdicts.
+#[derive(Debug, Clone, Default)]
+pub struct NetChaosReport {
+    /// Requests the victim clients attempted over the wire.
+    pub offered: usize,
+    /// Requests answered with a response frame (`Ok`), degraded included.
+    pub completed: usize,
+    /// Engine/wire refusals (`Overloaded`/`TenantOverloaded`/
+    /// `ShuttingDown` error frames).
+    pub refused: usize,
+    /// `DeadlineExceeded` error frames.
+    pub expired: usize,
+    /// Victim answers that diverged from the sequential oracle (or
+    /// illegal refusals like `UnknownStore`) — must be 0.
+    pub mismatches: usize,
+    /// Victim calls that failed at the transport after retries — must be
+    /// 0: the attacker's damage must never reach another connection.
+    pub net_errors: usize,
+    /// `completed + refused + expired == offered` held exactly.
+    pub accounting_exact: bool,
+    /// Server-side reaps (slow-loris + half-open) during the scenario.
+    pub reaped: u64,
+    /// The scenario's misbehaving peer was caught within the wait bound:
+    /// reaped (slowloris/halfopen) or refused with protocol error frames
+    /// (garbage); vacuously true for disconnect.
+    pub reap_within_deadline: bool,
+    /// Undecodable frames answered with a protocol error frame.
+    pub protocol_errors: u64,
+    /// Connections that died without a clean EOF.
+    pub disconnects: u64,
+    /// `net_errors == 0 && mismatches == 0`.
+    pub victim_clean: bool,
+    /// After the attacker stopped, a fresh wire client got a bit-exact
+    /// answer from every store with traffic.
+    pub probe_pass: bool,
 }
 
 /// Classify one outcome into a store's chaos ledger. `oracle == None`
@@ -867,6 +955,10 @@ pub fn run_chaos(fixture: &Fixture, opts: &BenchOpts, scenario: ChaosScenario) -
         ChaosScenario::DeadlineStorm => chaos_deadline(fixture, opts),
         ChaosScenario::PanicStorm => chaos_panic(fixture, opts),
         ChaosScenario::Churn => chaos_churn(fixture, opts),
+        ChaosScenario::Slowloris
+        | ChaosScenario::HalfOpen
+        | ChaosScenario::Disconnect
+        | ChaosScenario::Garbage => chaos_net(fixture, opts, scenario),
     }
 }
 
@@ -995,6 +1087,7 @@ fn chaos_flood(fixture: &Fixture, opts: &BenchOpts) -> ChaosReport {
         fairness_pass,
         liveness_pass,
         churn: None,
+        net: None,
     }
 }
 
@@ -1049,6 +1142,7 @@ fn chaos_deadline(fixture: &Fixture, opts: &BenchOpts) -> ChaosReport {
         fairness_pass,
         liveness_pass,
         churn: None,
+        net: None,
     }
 }
 
@@ -1097,6 +1191,7 @@ fn chaos_panic(fixture: &Fixture, opts: &BenchOpts) -> ChaosReport {
         fairness_pass,
         liveness_pass,
         churn: None,
+        net: None,
     }
 }
 
@@ -1458,6 +1553,257 @@ fn chaos_churn(fixture: &Fixture, opts: &BenchOpts) -> ChaosReport {
         fairness_pass,
         liveness_pass,
         churn: Some(report),
+        net: None,
+    }
+}
+
+/// How long the network-chaos attackers hold their sockets waiting for
+/// the server's reap verdict before giving up (generous against CI
+/// scheduler noise; the reap itself lands within one deadline + poll
+/// quantum on an idle host).
+const NET_CHAOS_WAIT: Duration = Duration::from_secs(5);
+
+/// Hold a valid header plus a few payload bytes on the wire, then stall
+/// until the server reaps the connection as slow-loris (or the wait
+/// bound passes). The socket must stay open through the stall: dropping
+/// it early would read as a clean EOF, not a stalled writer.
+fn attack_slowloris(addr: SocketAddr, server: &NetServer) {
+    let Ok(mut s) = TcpStream::connect(addr) else {
+        return;
+    };
+    let mut partial = frame::encode_request(
+        1,
+        0,
+        Priority::Normal,
+        &ServeRequest::recall(BinaryHV::zeros(64)),
+    );
+    partial.truncate(frame::HEADER_LEN + 3);
+    if s.write_all(&partial).is_err() {
+        return;
+    }
+    let deadline = Instant::now() + NET_CHAOS_WAIT;
+    while server.counters().slowloris_reaped == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Connect, send nothing, and hold the socket silently until the server
+/// reaps it as half-open (or the wait bound passes).
+fn attack_halfopen(addr: SocketAddr, server: &NetServer) {
+    let Ok(_s) = TcpStream::connect(addr) else {
+        return;
+    };
+    let deadline = Instant::now() + NET_CHAOS_WAIT;
+    while server.counters().halfopen_reaped == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Repeatedly send a whole request frame (even rounds — the stranded
+/// completion's response write must fail harmlessly) or a partial one
+/// (odd rounds — stranded bytes, no ticket) and vanish without reading.
+fn attack_disconnect(addr: SocketAddr, req: &ServeRequest) {
+    for round in 0..12u64 {
+        let Ok(mut s) = TcpStream::connect(addr) else {
+            continue;
+        };
+        let bytes = frame::encode_request(round + 1, 0, Priority::Normal, req);
+        let cut = if round % 2 == 0 {
+            bytes.len()
+        } else {
+            frame::HEADER_LEN + 5
+        };
+        let _ = s.write_all(&bytes[..cut]);
+        drop(s);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Speak non-protocol bytes on a few connections; each must be answered
+/// with one protocol error frame and closed (the drained read observes
+/// the close — the bytes themselves are checked by the frame codec's
+/// property tests and the server's own garbage test).
+fn attack_garbage(addr: SocketAddr, seed: u64) {
+    let mut rng = Rng::new(seed ^ 0x0bad_bead);
+    for _ in 0..4 {
+        let Ok(mut s) = TcpStream::connect(addr) else {
+            continue;
+        };
+        let mut junk = vec![0u8; 128];
+        for b in junk.iter_mut() {
+            *b = rng.next_u64() as u8;
+        }
+        junk[0] = 0xFF; // never the frame magic: refused on the first header
+        if s.write_all(&junk).is_err() {
+            continue;
+        }
+        let _ = s.set_read_timeout(Some(NET_CHAOS_WAIT));
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    }
+}
+
+/// Network chaos (`slowloris` / `halfopen` / `disconnect` / `garbage`):
+/// a fresh engine behind a [`NetServer`] on an ephemeral loopback port
+/// with aggressive reap deadlines, one misbehaving peer thread per
+/// scenario, and `clients` victim [`NetClient`] threads running the
+/// whole fixture schedule concurrently over real sockets.
+///
+/// Fairness = the victims never noticed: zero transport errors after
+/// retries, zero oracle mismatches, `completed + refused + expired ==
+/// offered` exactly, and the attacker was caught (reaped within the
+/// wait bound, or refused with protocol error frames). Liveness = after
+/// the attacker stopped, a *fresh* wire connection got a bit-exact
+/// answer from every store with traffic.
+fn chaos_net(fixture: &Fixture, opts: &BenchOpts, scenario: ChaosScenario) -> ChaosReport {
+    let ecfg = opts.engine.clone();
+    let engine = Arc::new(
+        ServeEngine::start_registry(fixture.registry(&ecfg), ecfg)
+            .expect("spawn chaos engine workers"),
+    );
+    // aggressive deadlines so the reap happens inside the scenario; the
+    // victims are safe from them: whole frames in one write (never a
+    // mid-frame stall) and back-to-back calls with in-flight gating on
+    // the idle reap (a connection awaiting responses is never half-open)
+    let ncfg = NetConfig {
+        read_timeout: Duration::from_millis(150),
+        idle_timeout: Duration::from_millis(400),
+        ..NetConfig::default()
+    };
+    let server = NetServer::start(Arc::clone(&engine), "127.0.0.1:0", ncfg)
+        .expect("bind chaos net server");
+    let addr = server.addr();
+    let clients = opts.clients.max(1);
+    let seed = fixture.cfg.seed;
+    let server_ref = &server;
+    let (mut stores, net_errors) = std::thread::scope(|s| {
+        let attacker = s.spawn(move || match scenario {
+            ChaosScenario::Slowloris => attack_slowloris(addr, server_ref),
+            ChaosScenario::HalfOpen => attack_halfopen(addr, server_ref),
+            ChaosScenario::Disconnect => attack_disconnect(addr, &fixture.requests[0]),
+            ChaosScenario::Garbage => attack_garbage(addr, seed),
+            _ => unreachable!("chaos_net only handles the network scenarios"),
+        });
+        let victims: Vec<_> = (0..clients)
+            .map(|ti| {
+                s.spawn(move || {
+                    let mut outs: Vec<ChaosStoreOutcome> =
+                        vec![ChaosStoreOutcome::default(); fixture.stores.len()];
+                    let mut errs = 0usize;
+                    let mut client = match NetClient::connect(addr) {
+                        Ok(c) => c,
+                        // an unreachable server fails the whole share
+                        Err(_) => {
+                            errs = fixture.requests.len().div_ceil(clients);
+                            return (outs, errs);
+                        }
+                    };
+                    for (i, req) in fixture.requests.iter().enumerate() {
+                        if i % clients != ti {
+                            continue;
+                        }
+                        let si = req.store.index();
+                        outs[si].offered += 1;
+                        match client.call(req) {
+                            Ok(outcome) => chaos_tally(
+                                &mut outs[si],
+                                &outcome,
+                                Some(&fixture.oracle_answer(req)),
+                            ),
+                            Err(_) => errs += 1,
+                        }
+                    }
+                    (outs, errs)
+                })
+            })
+            .collect();
+        let mut merged = chaos_outcomes(fixture);
+        let mut errs = 0usize;
+        for v in victims {
+            let (outs, e) = v.join().expect("victim thread panicked");
+            errs += e;
+            for (si, o) in outs.into_iter().enumerate() {
+                let m = &mut merged[si];
+                m.offered += o.offered;
+                m.completed += o.completed;
+                m.rejected += o.rejected;
+                m.rejected_tenant += o.rejected_tenant;
+                m.expired += o.expired;
+                m.internal += o.internal;
+                m.degraded += o.degraded;
+                m.mismatches += o.mismatches;
+            }
+        }
+        attacker.join().expect("attacker thread panicked");
+        (merged, errs)
+    });
+    for (si, out) in stores.iter_mut().enumerate() {
+        out.name = fixture.stores[si].profile.name.clone();
+    }
+    let counters = server.counters();
+    let offered: usize = stores.iter().map(|s| s.offered).sum();
+    let completed: usize = stores.iter().map(|s| s.completed).sum();
+    let refused: usize = stores.iter().map(|s| s.rejected + s.rejected_tenant).sum();
+    let expired: usize = stores.iter().map(|s| s.expired).sum();
+    let mismatches: usize = stores.iter().map(|s| s.mismatches).sum();
+    // exact accounting: a net error or contained panic is neither
+    // completed nor refused nor expired, so either breaks the equation
+    let accounting_exact = completed + refused + expired == offered;
+    let victim_clean = net_errors == 0 && mismatches == 0;
+    let reap_within_deadline = match scenario {
+        ChaosScenario::Slowloris => counters.slowloris_reaped >= 1,
+        ChaosScenario::HalfOpen => counters.halfopen_reaped >= 1,
+        ChaosScenario::Garbage => counters.protocol_errors >= 1,
+        _ => true, // disconnect: vanishing is legal, nothing to reap
+    };
+    // liveness over the wire: a fresh connection, one request per store
+    // with traffic, each bit-exact
+    let mut probe_pass = match NetClient::connect(addr) {
+        Ok(mut probe) => {
+            let mut first: Vec<Option<&ServeRequest>> = vec![None; fixture.stores.len()];
+            for r in &fixture.requests {
+                let si = r.store.index();
+                if first[si].is_none() {
+                    first[si] = Some(r);
+                }
+            }
+            first.into_iter().flatten().all(|req| {
+                matches!(
+                    probe.call(req),
+                    Ok(Ok(resp)) if resp == fixture.oracle_answer(req)
+                )
+            })
+        }
+        Err(_) => false,
+    };
+    probe_pass &= offered > 0;
+    server.shutdown();
+    match Arc::try_unwrap(engine) {
+        Ok(e) => e.shutdown(),
+        Err(_) => {} // a straggler clone's drop aborts the engine
+    }
+    let net = NetChaosReport {
+        offered,
+        completed,
+        refused,
+        expired,
+        mismatches,
+        net_errors,
+        accounting_exact,
+        reaped: counters.slowloris_reaped + counters.halfopen_reaped,
+        reap_within_deadline,
+        protocol_errors: counters.protocol_errors,
+        disconnects: counters.disconnects,
+        victim_clean,
+        probe_pass,
+    };
+    ChaosReport {
+        scenario,
+        stores,
+        fairness_pass: victim_clean && accounting_exact && reap_within_deadline,
+        liveness_pass: probe_pass,
+        churn: None,
+        net: Some(net),
     }
 }
 
@@ -1491,6 +1837,85 @@ impl PassSummary {
     }
 }
 
+/// The `--wire` socket pass: the closed-loop summary measured through
+/// real TCP framing, plus the server's wire counters. The delta between
+/// this pass and the in-process closed loop is the front-end's measured
+/// overhead (framing, syscalls, loopback RTT).
+#[derive(Debug, Clone)]
+pub struct WireSummary {
+    pub pass: PassSummary,
+    /// Calls that failed at the transport after retries — 0 on a clean
+    /// run; these requests are *not* in the pass buckets.
+    pub net_errors: usize,
+    pub counters: NetCounters,
+}
+
+/// Closed-loop pass over real sockets: a [`NetServer`] on an ephemeral
+/// loopback port, `clients` [`NetClient`] threads splitting the fixture
+/// schedule round-robin, every framed response oracle-checked
+/// bit-exactly by the same [`LoadReport`] machinery as the in-process
+/// passes.
+fn run_wire_pass(
+    engine: &Arc<ServeEngine>,
+    fixture: &Fixture,
+    clients: usize,
+    oracle: &[ServeResponse],
+) -> WireSummary {
+    let server = NetServer::start(Arc::clone(engine), "127.0.0.1:0", NetConfig::default())
+        .expect("bind wire bench server");
+    let addr = server.addr();
+    let clients = clients.clamp(1, fixture.requests.len().max(1));
+    let t0 = Instant::now();
+    let (tagged, net_errors) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|ti| {
+                s.spawn(move || {
+                    let mut done: Vec<(usize, Result<ServeResponse, ServeError>, f64)> =
+                        Vec::new();
+                    let mut errs = 0usize;
+                    let mut client = match NetClient::connect(addr) {
+                        Ok(c) => c,
+                        Err(_) => {
+                            errs = fixture.requests.len().div_ceil(clients);
+                            return (done, errs);
+                        }
+                    };
+                    for (i, req) in fixture.requests.iter().enumerate() {
+                        if i % clients != ti {
+                            continue;
+                        }
+                        let t = Instant::now();
+                        match client.call(req) {
+                            Ok(outcome) => {
+                                done.push((i, outcome, t.elapsed().as_secs_f64()));
+                            }
+                            Err(_) => errs += 1,
+                        }
+                    }
+                    (done, errs)
+                })
+            })
+            .collect();
+        let mut tagged = Vec::new();
+        let mut errs = 0usize;
+        for h in handles {
+            let (d, e) = h.join().expect("wire client thread panicked");
+            tagged.extend(d);
+            errs += e;
+        }
+        (tagged, errs)
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let counters = server.counters();
+    server.shutdown();
+    let report = LoadReport::assemble(wall, tagged, oracle);
+    WireSummary {
+        pass: PassSummary::of(&report),
+        net_errors,
+        counters,
+    }
+}
+
 /// The trace ring's final dump: everything still buffered when the
 /// clean passes finished, plus the drop ledger.
 #[derive(Debug, Clone)]
@@ -1511,6 +1936,8 @@ pub struct BenchReport {
     pub baseline_latency: Option<LatencySummary>,
     pub closed: PassSummary,
     pub open: Option<(f64, PassSummary)>,
+    /// The socket pass, when one ran (`--wire`).
+    pub wire: Option<WireSummary>,
     pub stats: StatsSnapshot,
     /// Chaos scenario verdict, when one ran (`--chaos`).
     pub chaos: Option<ChaosReport>,
@@ -1674,6 +2101,9 @@ impl BenchReport {
         if let Some((rate, p)) = &self.open {
             pass_row(format!("open-loop @{rate:.0}qps"), p);
         }
+        if let Some(w) = &self.wire {
+            pass_row("wire (tcp)".into(), &w.pass);
+        }
         t
     }
 
@@ -1782,6 +2212,25 @@ impl BenchReport {
             )),
             None => out.push_str("  \"open_loop\": null,\n"),
         }
+        // the socket pass (PR 9) — null unless --wire ran
+        match &self.wire {
+            Some(w) => out.push_str(&format!(
+                "  \"wire\": {{\"pass\": {}, \"net_errors\": {}, \"counters\": {{\"accepted\": {}, \"frames_in\": {}, \"frames_out\": {}, \"bytes_in\": {}, \"bytes_out\": {}, \"protocol_errors\": {}, \"refused\": {}, \"slowloris_reaped\": {}, \"halfopen_reaped\": {}, \"disconnects\": {}}}}},\n",
+                pass(&w.pass),
+                w.net_errors,
+                w.counters.accepted,
+                w.counters.frames_in,
+                w.counters.frames_out,
+                w.counters.bytes_in,
+                w.counters.bytes_out,
+                w.counters.protocol_errors,
+                w.counters.refused,
+                w.counters.slowloris_reaped,
+                w.counters.halfopen_reaped,
+                w.counters.disconnects
+            )),
+            None => out.push_str("  \"wire\": null,\n"),
+        }
         out.push_str(&format!("  \"speedup_qps\": {:.3},\n", self.speedup_qps()));
         out.push_str(&format!(
             "  \"batching\": {{\"batches\": {}, \"mean_batch\": {:.3}, \"max_batch\": {}}},\n",
@@ -1829,14 +2278,34 @@ impl BenchReport {
             }
             None => "null".into(),
         };
+        let net_json = |n: &Option<NetChaosReport>| match n {
+            Some(n) => format!(
+                "{{\"offered\": {}, \"completed\": {}, \"refused\": {}, \"expired\": {}, \"mismatches\": {}, \"net_errors\": {}, \"accounting_exact\": {}, \"reaped\": {}, \"reap_within_deadline\": {}, \"protocol_errors\": {}, \"disconnects\": {}, \"victim_clean\": {}, \"probe_pass\": {}}}",
+                n.offered,
+                n.completed,
+                n.refused,
+                n.expired,
+                n.mismatches,
+                n.net_errors,
+                n.accounting_exact,
+                n.reaped,
+                n.reap_within_deadline,
+                n.protocol_errors,
+                n.disconnects,
+                n.victim_clean,
+                n.probe_pass
+            ),
+            None => "null".into(),
+        };
         match &self.chaos {
             Some(c) => {
                 out.push_str(&format!(
-                    "  \"chaos\": {{\"scenario\": \"{}\", \"fairness_pass\": {}, \"liveness_pass\": {}, \"churn\": {}, \"stores\": [",
+                    "  \"chaos\": {{\"scenario\": \"{}\", \"fairness_pass\": {}, \"liveness_pass\": {}, \"churn\": {}, \"net\": {}, \"stores\": [",
                     c.scenario.name(),
                     c.fairness_pass,
                     c.liveness_pass,
-                    churn_json(&c.churn)
+                    churn_json(&c.churn),
+                    net_json(&c.net)
                 ));
                 for (i, o) in c.stores.iter().enumerate() {
                     if i > 0 {
@@ -2019,13 +2488,22 @@ pub fn run_bench(opts: BenchOpts) -> BenchReport {
             PassSummary::of(&run_open_loop(&engine, &fixture, rate, opts.clients, &oracle)),
         )
     });
+    // the socket pass runs on the same engine, after the in-process
+    // passes, so the wire-vs-in-process delta is apples-to-apples
+    let engine = Arc::new(engine);
+    let wire = opts
+        .wire
+        .then(|| run_wire_pass(&engine, &fixture, opts.clients, &oracle));
     let stats = engine.stats();
     let trace = engine.trace_snapshot().map(|(events, dropped)| TraceLog {
         capacity: engine.trace_capacity().unwrap_or(0),
         events,
         dropped,
     });
-    engine.shutdown();
+    match Arc::try_unwrap(engine) {
+        Ok(e) => e.shutdown(),
+        Err(_) => {} // a straggler clone's drop aborts the engine
+    }
     // chaos runs last, on its own engine, so the clean numbers above are
     // already banked when the failure injection starts
     let chaos = opts.chaos.map(|sc| run_chaos(&fixture, &opts, sc));
@@ -2034,6 +2512,7 @@ pub fn run_bench(opts: BenchOpts) -> BenchReport {
         baseline_latency: LatencySummary::of(&base_lat),
         closed: PassSummary::of(&closed),
         open,
+        wire,
         stats,
         chaos,
         trace,
@@ -2253,6 +2732,9 @@ mod tests {
         // no chaos requested: the key must still be present, and null
         let chaos = parsed.get("chaos").expect("chaos key always emitted");
         assert!(chaos.as_arr().is_none() && chaos.as_f64().is_none() && chaos.as_str().is_none());
+        // no --wire: same contract, key present and null
+        let wire = parsed.get("wire").expect("wire key always emitted");
+        assert!(wire.as_arr().is_none() && wire.as_f64().is_none() && wire.as_str().is_none());
         // stage decomposition and end-of-run queue gauges (PR 7)
         let stage_blocks = parsed
             .get("stages")
@@ -2464,6 +2946,75 @@ mod tests {
         );
         let traffic: usize = report.stores.iter().map(|s| s.offered).sum();
         assert!(traffic > 0, "traffic threads must have raced the churn");
+    }
+
+    #[test]
+    fn wire_pass_serves_the_whole_schedule_bit_exactly_over_sockets() {
+        let mut opts = BenchOpts::smoke();
+        opts.fixture.requests = 60;
+        opts.fixture.stores[0].dim = 512;
+        opts.fixture.stores[0].items = 24;
+        opts.with_stores(2);
+        opts.clients = 4;
+        opts.wire = true;
+        let report = run_bench(opts);
+        let w = report.wire.as_ref().expect("--wire run keeps the socket pass");
+        assert_eq!(w.net_errors, 0, "clean loopback run must not drop calls");
+        assert_eq!(w.pass.ok, 60);
+        assert_eq!(w.pass.mismatches, 0, "socket responses diverged from oracle");
+        assert_eq!(w.pass.rejected + w.pass.rejected_tenant + w.pass.expired, 0);
+        // one connection per client thread; retries may reconnect, so >=
+        assert!(w.counters.accepted >= 4, "{:?}", w.counters);
+        assert!(w.counters.frames_in >= 60 && w.counters.frames_out >= 60);
+        assert_eq!(w.counters.protocol_errors, 0);
+        let json = report.to_json();
+        let parsed = crate::util::json::Json::parse(&json).expect("invalid JSON emitted");
+        let wire = parsed.get("wire").expect("wire block emitted");
+        assert_eq!(wire.get("net_errors").and_then(|n| n.as_f64()), Some(0.0));
+        assert_eq!(
+            wire.get("pass").and_then(|p| p.get("ok")).and_then(|n| n.as_f64()),
+            Some(60.0)
+        );
+        assert!(
+            wire.get("counters")
+                .and_then(|c| c.get("frames_in"))
+                .and_then(|n| n.as_f64())
+                >= Some(60.0)
+        );
+    }
+
+    #[test]
+    fn chaos_garbage_answers_protocol_errors_and_keeps_victims_bit_exact() {
+        let opts = chaos_fixture(2);
+        let fixture = Fixture::build(opts.fixture.clone());
+        let report = run_chaos(&fixture, &opts, ChaosScenario::Garbage);
+        assert_eq!(report.scenario.name(), "garbage");
+        let net = report.net.as_ref().expect("network scenario carries its wire ledger");
+        assert!(
+            net.protocol_errors >= 1,
+            "garbage must draw protocol error frames: {net:?}"
+        );
+        assert!(net.victim_clean, "victims noticed the attacker: {net:?}");
+        assert!(net.accounting_exact, "{net:?}");
+        assert_eq!(net.completed + net.refused + net.expired, net.offered);
+        assert!(report.fairness_pass && report.liveness_pass, "{net:?}");
+        assert!(report.churn.is_none());
+    }
+
+    #[test]
+    fn chaos_slowloris_reaps_the_staller_and_victims_keep_serving() {
+        let opts = chaos_fixture(2);
+        let fixture = Fixture::build(opts.fixture.clone());
+        let report = run_chaos(&fixture, &opts, ChaosScenario::Slowloris);
+        assert_eq!(report.scenario.name(), "slowloris");
+        let net = report.net.as_ref().expect("network scenario carries its wire ledger");
+        assert!(
+            net.reaped >= 1 && net.reap_within_deadline,
+            "stalled writer must be reaped: {net:?}"
+        );
+        assert_eq!(net.mismatches, 0, "victims must stay bit-exact: {net:?}");
+        assert_eq!(net.net_errors, 0, "the stall must never reach other connections: {net:?}");
+        assert!(report.fairness_pass && report.liveness_pass, "{net:?}");
     }
 
     #[test]

@@ -51,6 +51,14 @@
 //! - [`loadgen`]: open- and closed-loop synthetic multi-tenant load
 //!   generators (skewed store popularity, per-store repeat fractions) and
 //!   the `nscog serve-bench` report (`BENCH_serve.json`).
+//! - [`net`]: the std-only TCP front-end — length-prefixed binary frame
+//!   codec decoding straight into [`ServeRequest`], per-connection
+//!   reader/writer threads fed by the engine's
+//!   [`queue::CompletionQueue`], slow-loris / half-open reaping,
+//!   admission-coupled backpressure (a full lane answers an error frame,
+//!   never buffers unboundedly), graceful drain shutdown, and a
+//!   retry/backoff client with idempotent request ids
+//!   (`nscog serve --listen`, `serve-bench --wire`, network chaos).
 //!
 //! The per-shard scans themselves run through the bound-pruned kernel
 //! paths (see [`crate::vsa::sketch`]), whose [`crate::vsa::PruneStats`]
@@ -67,6 +75,7 @@ pub mod cache;
 pub mod engine;
 pub mod faults;
 pub mod loadgen;
+pub mod net;
 pub mod queue;
 pub mod registry;
 pub mod shard;
@@ -76,7 +85,8 @@ pub mod trace;
 pub use cache::{CacheConfig, CacheCounters, ResponseCache};
 pub use engine::{EngineConfig, PendingResponse, ServeEngine};
 pub use faults::{FaultConfig, FaultPlan};
-pub use queue::{LaneGauge, Priority};
+pub use net::{NetClient, NetConfig, NetCounters, NetServer};
+pub use queue::{Completion, CompletionQueue, LaneGauge, Priority};
 pub use registry::{Hysteresis, MutateError, StoreId, StoreRegistry, StoreSpec};
 pub use shard::{ShardedBinaryCodebook, ShardedCleanup, ShardedRealCodebook};
 pub use stats::{LatencySummary, StageSummary, StatsSnapshot, StoreSnapshot};

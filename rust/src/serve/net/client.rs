@@ -1,0 +1,324 @@
+//! Blocking TCP client for the serving wire, with a retry/backoff
+//! `call` wrapper and pipelined `send`/`recv` halves.
+//!
+//! Request ids are allocated once per logical request and **reused
+//! verbatim across retries**: every serve operation is a pure read
+//! against an epoch-stamped snapshot, so re-submitting the same id after
+//! a reconnect is idempotent by construction — the worst case is the
+//! engine computing the same bit-exact answer twice, never a duplicated
+//! side effect. A response frame carrying a protocol-level error code
+//! (or an undecodable frame) surfaces as `io::ErrorKind::InvalidData`;
+//! engine-level refusals ([`ServeError`]) are a normal `Ok(Err(e))`
+//! return — the connection stays healthy.
+//!
+//! The read deadline (`read_timeout`) bounds every `recv`, so a dead or
+//! wedged server can never hang the caller; `call` then tears the
+//! connection down, sleeps an exponentially growing backoff, reconnects,
+//! and retries up to `retries` times.
+
+use super::super::queue::Priority;
+use super::super::{ServeError, ServeRequest, ServeResponse};
+use super::frame::{self, Frame};
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Blocking wire client. Not thread-safe by design (one connection, one
+/// in-order byte stream); spawn one per client thread.
+#[derive(Debug)]
+pub struct NetClient {
+    addr: SocketAddr,
+    stream: Option<TcpStream>,
+    buf: Vec<u8>,
+    next_id: u64,
+    /// Per-`recv` deadline; a server that stops answering yields
+    /// `TimedOut` instead of a hang.
+    pub read_timeout: Duration,
+    /// Extra attempts `call` makes after the first failure.
+    pub retries: u32,
+    /// Base backoff slept before the first retry; doubles per attempt,
+    /// capped at 500ms.
+    pub backoff: Duration,
+}
+
+impl NetClient {
+    /// Resolve and connect. `addr` may be anything `ToSocketAddrs`
+    /// accepts (a `SocketAddr`, `"127.0.0.1:7070"`, ...).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<NetClient> {
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "no address resolved"))?;
+        let mut c = NetClient {
+            addr,
+            stream: None,
+            buf: Vec::new(),
+            next_id: 1,
+            read_timeout: Duration::from_secs(5),
+            retries: 3,
+            backoff: Duration::from_millis(10),
+        };
+        c.ensure()?;
+        Ok(c)
+    }
+
+    fn ensure(&mut self) -> io::Result<&mut TcpStream> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect(self.addr)?;
+            let _ = s.set_nodelay(true);
+            s.set_read_timeout(Some(self.read_timeout))?;
+            s.set_write_timeout(Some(self.read_timeout))?;
+            self.buf.clear(); // stale bytes belong to the dead stream
+            self.stream = Some(s);
+        }
+        Ok(self.stream.as_mut().expect("just ensured"))
+    }
+
+    /// Drop the connection; the next operation reconnects.
+    pub fn disconnect(&mut self) {
+        self.stream = None;
+        self.buf.clear();
+    }
+
+    /// Pipelined send: write one request frame, return its id. Pair
+    /// with [`NetClient::recv`]; responses may arrive out of order.
+    pub fn send(
+        &mut self,
+        request: &ServeRequest,
+        priority: Priority,
+        deadline_us: u64,
+    ) -> io::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send_with_id(id, request, priority, deadline_us)?;
+        Ok(id)
+    }
+
+    fn send_with_id(
+        &mut self,
+        id: u64,
+        request: &ServeRequest,
+        priority: Priority,
+        deadline_us: u64,
+    ) -> io::Result<()> {
+        let bytes = frame::encode_request(id, deadline_us, priority, request);
+        let s = self.ensure()?;
+        s.write_all(&bytes)
+    }
+
+    /// Receive the next response or error frame: `(id, outcome)`.
+    /// Protocol-level failures (undecodable frame, protocol error code,
+    /// unexpected frame type, EOF mid-stream) are `io::Error`s and drop
+    /// the connection; engine refusals are `Ok((id, Err(serve_error)))`.
+    pub fn recv(&mut self) -> io::Result<(u64, Result<ServeResponse, ServeError>)> {
+        let mut tmp = [0u8; 4096];
+        loop {
+            match frame::decode_from(&self.buf) {
+                Ok(Some((f, used))) => {
+                    self.buf.drain(..used);
+                    match f {
+                        Frame::Response { id, response } => return Ok((id, Ok(response))),
+                        Frame::Error { id, code } => match frame::code_to_error(code) {
+                            Some(e) => return Ok((id, Err(e))),
+                            None => {
+                                self.disconnect();
+                                return Err(io::Error::new(
+                                    io::ErrorKind::InvalidData,
+                                    format!("server closed the connection: protocol error code {code}"),
+                                ));
+                            }
+                        },
+                        Frame::Request(_) => {
+                            self.disconnect();
+                            return Err(io::Error::new(
+                                io::ErrorKind::InvalidData,
+                                "server sent a request frame",
+                            ));
+                        }
+                    }
+                }
+                Ok(None) => {
+                    let s = self.ensure()?;
+                    match s.read(&mut tmp) {
+                        Ok(0) => {
+                            self.disconnect();
+                            return Err(io::Error::new(
+                                io::ErrorKind::UnexpectedEof,
+                                "server closed the connection",
+                            ));
+                        }
+                        Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                        Err(e)
+                            if matches!(
+                                e.kind(),
+                                io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                            ) =>
+                        {
+                            self.disconnect();
+                            return Err(io::Error::new(
+                                io::ErrorKind::TimedOut,
+                                "no response within the read deadline",
+                            ));
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                        Err(e) => {
+                            self.disconnect();
+                            return Err(e);
+                        }
+                    }
+                }
+                Err(we) => {
+                    self.disconnect();
+                    return Err(io::Error::new(io::ErrorKind::InvalidData, we.to_string()));
+                }
+            }
+        }
+    }
+
+    /// Blocking round trip at normal priority with the server-default
+    /// deadline. See [`NetClient::call_with`].
+    pub fn call(
+        &mut self,
+        request: &ServeRequest,
+    ) -> io::Result<Result<ServeResponse, ServeError>> {
+        self.call_with(request, Priority::Normal, 0)
+    }
+
+    /// Blocking round trip with retry/backoff: send, await the matching
+    /// id, and on transport failure reconnect and re-send the SAME id
+    /// (idempotent — serve ops are pure reads) up to `retries` extra
+    /// attempts with exponential backoff. `deadline_us = 0` asks for the
+    /// server's default admission deadline.
+    pub fn call_with(
+        &mut self,
+        request: &ServeRequest,
+        priority: Priority,
+        deadline_us: u64,
+    ) -> io::Result<Result<ServeResponse, ServeError>> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut last_err: Option<io::Error> = None;
+        for attempt in 0..=self.retries {
+            if attempt > 0 {
+                let exp = attempt.saturating_sub(1).min(16);
+                let delay = self
+                    .backoff
+                    .saturating_mul(1u32 << exp)
+                    .min(Duration::from_millis(500));
+                std::thread::sleep(delay);
+            }
+            match self.attempt(id, request, priority, deadline_us) {
+                Ok(outcome) => return Ok(outcome),
+                Err(e) => {
+                    self.disconnect();
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.expect("at least one attempt ran"))
+    }
+
+    fn attempt(
+        &mut self,
+        id: u64,
+        request: &ServeRequest,
+        priority: Priority,
+        deadline_us: u64,
+    ) -> io::Result<Result<ServeResponse, ServeError>> {
+        self.send_with_id(id, request, priority, deadline_us)?;
+        loop {
+            let (rid, outcome) = self.recv()?;
+            if rid == id {
+                return Ok(outcome);
+            }
+            // a stale response from an earlier pipelined send on this
+            // stream; drop it and keep waiting for ours
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::engine::{EngineConfig, ServeEngine};
+    use super::super::super::ServeRequest;
+    use super::super::server::{NetConfig, NetServer};
+    use super::*;
+    use crate::util::Rng;
+    use crate::vsa::{BinaryCodebook, BinaryHV, CleanupMemory};
+    use std::sync::Arc;
+
+    fn start_pair(seed: u64) -> (Arc<ServeEngine>, CleanupMemory, NetServer) {
+        let mut rng = Rng::new(seed);
+        let cb = BinaryCodebook::random(&mut rng, 32, 1024);
+        let cm = CleanupMemory::new(cb.clone());
+        let eng =
+            Arc::new(ServeEngine::start(&cb, None, EngineConfig::default()).expect("workers"));
+        let srv =
+            NetServer::start(Arc::clone(&eng), "127.0.0.1:0", NetConfig::default()).unwrap();
+        (eng, cm, srv)
+    }
+
+    #[test]
+    fn pipelined_sends_harvest_by_id() {
+        let (eng, cm, srv) = start_pair(201);
+        let mut client = NetClient::connect(srv.addr()).unwrap();
+        let mut rng = Rng::new(202);
+        let queries: Vec<BinaryHV> = (0..8).map(|_| BinaryHV::random(&mut rng, 1024)).collect();
+        let ids: Vec<u64> = queries
+            .iter()
+            .map(|q| {
+                client
+                    .send(&ServeRequest::recall(q.clone()), Priority::Normal, 0)
+                    .unwrap()
+            })
+            .collect();
+        let mut got = std::collections::BTreeMap::new();
+        for _ in 0..queries.len() {
+            let (id, outcome) = client.recv().unwrap();
+            got.insert(id, outcome.unwrap());
+        }
+        for (id, q) in ids.iter().zip(&queries) {
+            let (index, cosine) = cm.recall(q);
+            assert_eq!(
+                got[id],
+                super::super::super::ServeResponse::Recall { index, cosine }
+            );
+        }
+        srv.shutdown();
+        if let Ok(e) = Arc::try_unwrap(eng) {
+            e.shutdown();
+        }
+    }
+
+    #[test]
+    fn call_against_a_dead_server_fails_after_bounded_retries() {
+        // bind and immediately shut a server to learn a dead port
+        let (eng, _, srv) = start_pair(203);
+        let addr = srv.addr();
+        srv.shutdown();
+        if let Ok(e) = Arc::try_unwrap(eng) {
+            e.shutdown();
+        }
+        let mut client = match NetClient::connect(addr) {
+            Ok(c) => c,      // raced a TIME_WAIT accept; calls still fail
+            Err(_) => return, // refused outright — the property held
+        };
+        client.retries = 1;
+        client.backoff = Duration::from_millis(1);
+        client.read_timeout = Duration::from_millis(200);
+        let err = client
+            .call(&ServeRequest::recall(BinaryHV::zeros(1024)))
+            .expect_err("no server behind the port");
+        assert!(
+            matches!(
+                err.kind(),
+                io::ErrorKind::ConnectionRefused
+                    | io::ErrorKind::ConnectionReset
+                    | io::ErrorKind::UnexpectedEof
+                    | io::ErrorKind::TimedOut
+                    | io::ErrorKind::BrokenPipe
+            ),
+            "unexpected error kind: {err:?}"
+        );
+    }
+}

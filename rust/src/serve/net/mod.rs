@@ -1,0 +1,45 @@
+//! `serve/net/` — the std-only TCP front-end over the serving engine.
+//!
+//! The paper's system-level critique (complex flow control, limited
+//! scalability) applies doubly once requests cross a network: the wire
+//! must preserve the engine's correctness contract (every response
+//! bit-identical to the sequential oracle) *and* its backpressure
+//! discipline (a full admission lane refuses with an error frame instead
+//! of buffering unboundedly), while surviving the network's own failure
+//! modes — slow writers, half-open peers, mid-frame disconnects, and
+//! garbage bytes.
+//!
+//! - [`frame`]: the length-prefixed binary codec. An 8-byte header
+//!   (magic `"NS"`, version, frame type, payload length capped at
+//!   [`frame::MAX_FRAME_LEN`]) fronts request / response / error
+//!   payloads that decode straight into [`super::ServeRequest`] /
+//!   [`super::ServeResponse`]. Decoding is total: truncated, oversized,
+//!   or garbage input is refused with a typed [`frame::WireError`] —
+//!   never a panic, never a partial decode (property-tested).
+//! - [`server`]: [`NetServer`] — an accept loop plus one reader and one
+//!   writer thread per connection. The reader decodes frames and submits
+//!   through [`super::engine::ServeEngine::submit_with_completion`]; the
+//!   writer harvests the connection's [`super::queue::CompletionQueue`]
+//!   and writes response/error frames. Per-connection robustness: a
+//!   mid-frame stall beyond `read_timeout` is a slow-loris peer, an
+//!   idle gap beyond `idle_timeout` is a half-open peer — both are
+//!   reaped (socket shut, completion queue closed, counted). Admission
+//!   refusals and the per-connection in-flight cap answer error frames
+//!   immediately — connection backpressure is the lane's backpressure.
+//!   Shutdown drains: in-flight tickets are answered before the socket
+//!   closes (bounded by `drain_timeout`).
+//! - [`client`]: [`NetClient`] — a blocking client with pipelined
+//!   `send`/`recv` halves and a retrying `call` wrapper (exponential
+//!   backoff, reconnect, and the *same* request id across attempts:
+//!   every serve op is a pure read, so retries are idempotent by
+//!   construction).
+//!
+//! Everything here is `std::net` + threads — no external dependencies,
+//! matching the repo's vendored-only rule.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::NetClient;
+pub use server::{NetConfig, NetCounters, NetServer};

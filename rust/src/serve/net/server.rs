@@ -1,0 +1,614 @@
+//! TCP server: accept loop + per-connection reader/writer thread pairs
+//! over the serving engine's completion-queue async path.
+//!
+//! Per connection, the reader thread accumulates bytes, decodes frames
+//! incrementally ([`frame::decode_from`]), and submits each request via
+//! [`ServeEngine::submit_with_completion`] tagged with its wire id; the
+//! writer thread blocks on the connection's own [`CompletionQueue`] and
+//! writes response/error frames as the engine finishes them — responses
+//! may leave out of request order, ids are the correlation.
+//!
+//! Robustness contract (the tentpole):
+//!
+//! - **Backpressure, not buffering.** An admission refusal
+//!   (`Overloaded`/`TenantOverloaded`) or the per-connection
+//!   `max_inflight` cap answers an error frame immediately. The server
+//!   never queues requests itself — the bounded admission queue is the
+//!   only queue, so a flooding connection is shed by the same lane
+//!   discipline as an in-process flooder.
+//! - **Slow-loris reaping.** A peer stalled *mid-frame* longer than
+//!   `read_timeout` is reaped (counted in `slowloris_reaped`); a peer
+//!   idle *between* frames longer than `idle_timeout` is a half-open
+//!   carcass and reaped too (`halfopen_reaped`). Reaping shuts the
+//!   socket and closes the completion queue; completions for tickets
+//!   still in flight are dropped harmlessly
+//!   ([`CompletionQueue::push`] on a closed queue returns `false`).
+//! - **Protocol errors answer then close.** Undecodable input (bad
+//!   magic/version/type, oversized length, malformed payload) gets one
+//!   error frame with the protocol code ([`WireError::code`]) and the
+//!   connection closes — after a framing error the stream cannot be
+//!   resynchronized. Write-side stalls are bounded by `write_timeout`.
+//! - **Drain, don't wedge.** A clean EOF (and server shutdown) waits up
+//!   to `drain_timeout` for in-flight tickets to finish and their
+//!   responses to flush before closing, so a well-behaved client that
+//!   half-closes after its last request still gets every answer.
+
+use super::super::engine::ServeEngine;
+use super::super::queue::CompletionQueue;
+use super::super::ServeError;
+use super::frame::{self, Frame, RequestFrame};
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Read-poll quantum: reader threads wake at this cadence to check the
+/// stall clocks and the server stop flag, so reap latency is bounded by
+/// the configured deadline plus one quantum.
+const POLL: Duration = Duration::from_millis(25);
+
+/// Connection-level policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// Max mid-frame stall before a connection is reaped as slow-loris.
+    pub read_timeout: Duration,
+    /// Max between-frames idle before a connection is reaped as
+    /// half-open (a peer that vanished without FIN never trips TCP's
+    /// own timers at this timescale — this deadline is the bound).
+    pub idle_timeout: Duration,
+    /// Per-write-call stall cap (slow *reader* peers).
+    pub write_timeout: Duration,
+    /// Per-connection in-flight request cap; excess requests are
+    /// refused with an `Overloaded` error frame (backpressure).
+    pub max_inflight: usize,
+    /// How long a closing connection waits for in-flight tickets to
+    /// finish and flush before giving up.
+    pub drain_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            read_timeout: Duration::from_secs(2),
+            idle_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(2),
+            max_inflight: 256,
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Wire-level counters (all monotonic), snapshot into [`NetCounters`].
+#[derive(Debug, Default)]
+pub struct NetStats {
+    accepted: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    protocol_errors: AtomicU64,
+    refused: AtomicU64,
+    slowloris_reaped: AtomicU64,
+    halfopen_reaped: AtomicU64,
+    disconnects: AtomicU64,
+}
+
+/// A point-in-time copy of [`NetStats`], for reports and invariants.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetCounters {
+    pub accepted: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Undecodable frames answered with a protocol error frame.
+    pub protocol_errors: u64,
+    /// Requests refused at the wire (`max_inflight` cap) or by
+    /// admission (`Overloaded`/`TenantOverloaded`) — each got its
+    /// error frame.
+    pub refused: u64,
+    pub slowloris_reaped: u64,
+    pub halfopen_reaped: u64,
+    /// Connections that died mid-write/mid-read without a clean EOF.
+    pub disconnects: u64,
+}
+
+impl NetStats {
+    fn snapshot(&self) -> NetCounters {
+        NetCounters {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            refused: self.refused.load(Ordering::Relaxed),
+            slowloris_reaped: self.slowloris_reaped.load(Ordering::Relaxed),
+            halfopen_reaped: self.halfopen_reaped.load(Ordering::Relaxed),
+            disconnects: self.disconnects.load(Ordering::Relaxed),
+        }
+    }
+
+    fn bump(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// A running TCP front-end. Holds the engine alive through its `Arc`;
+/// shut the server down before shutting the engine down.
+pub struct NetServer {
+    addr: SocketAddr,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port)
+    /// and start accepting. Each accepted connection gets a reader
+    /// thread (this function's spawned accept loop spawns them) and a
+    /// writer thread consuming that connection's completion queue.
+    pub fn start(engine: Arc<ServeEngine>, addr: &str, cfg: NetConfig) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stats = Arc::new(NetStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stats = Arc::clone(&stats);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("nscog-net-accept".into())
+                .spawn(move || accept_loop(listener, engine, cfg, stats, stop))?
+        };
+        Ok(NetServer {
+            addr: local,
+            stats,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn counters(&self) -> NetCounters {
+        self.stats.snapshot()
+    }
+
+    /// Stop accepting, drain and join every connection, join the accept
+    /// loop. Connections get their in-flight responses flushed (bounded
+    /// by their `drain_timeout`).
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    engine: Arc<ServeEngine>,
+    cfg: NetConfig,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            break; // the shutdown wake-up connection, or a race with it
+        }
+        NetStats::bump(&stats.accepted, 1);
+        let spawned = {
+            let engine = Arc::clone(&engine);
+            let stats = Arc::clone(&stats);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("nscog-net-conn".into())
+                .spawn(move || serve_conn(stream, engine, cfg, stats, stop))
+        };
+        match spawned {
+            Ok(h) => conns.push(h),
+            Err(_) => {} // stream dropped: refused by closing
+        }
+        // join connections that already finished so a long-lived server
+        // doesn't accumulate handles
+        let mut i = 0;
+        while i < conns.len() {
+            if conns[i].is_finished() {
+                let _ = conns.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// How the reader decided the connection should end.
+enum Teardown {
+    /// Clean EOF or server stop: wait for in-flight tickets, flush, close.
+    Drain,
+    /// Reaped or errored: close now; undelivered completions drop.
+    Abort,
+}
+
+fn serve_conn(
+    stream: TcpStream,
+    engine: Arc<ServeEngine>,
+    cfg: NetConfig,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(POLL));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            NetStats::bump(&stats.disconnects, 1);
+            return;
+        }
+    };
+    let _ = write_half.set_write_timeout(Some(cfg.write_timeout));
+    let wr = Arc::new(Mutex::new(write_half));
+    let cq = CompletionQueue::new();
+    let inflight = Arc::new(AtomicUsize::new(0));
+
+    let writer = {
+        let cq = cq.clone();
+        let wr = Arc::clone(&wr);
+        let stats = Arc::clone(&stats);
+        let inflight = Arc::clone(&inflight);
+        std::thread::Builder::new()
+            .name("nscog-net-writer".into())
+            .spawn(move || writer_loop(cq, wr, stats, inflight))
+    };
+    let writer = match writer {
+        Ok(h) => h,
+        Err(_) => {
+            NetStats::bump(&stats.disconnects, 1);
+            return;
+        }
+    };
+
+    let teardown = reader_loop(&stream, &engine, &cfg, &stats, &stop, &wr, &cq, &inflight);
+    match teardown {
+        Teardown::Drain => {
+            // bounded wait for the engine to finish what this connection
+            // still has in flight; the writer is flushing as they land
+            let deadline = Instant::now() + cfg.drain_timeout;
+            while inflight.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            cq.close();
+            let _ = writer.join();
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        Teardown::Abort => {
+            cq.close();
+            let _ = stream.shutdown(Shutdown::Both);
+            let _ = writer.join();
+        }
+    }
+}
+
+fn writer_loop(
+    cq: CompletionQueue,
+    wr: Arc<Mutex<TcpStream>>,
+    stats: Arc<NetStats>,
+    inflight: Arc<AtomicUsize>,
+) {
+    while let Some(c) = cq.pop_blocking() {
+        inflight.fetch_sub(1, Ordering::SeqCst);
+        let bytes = match &c.outcome {
+            Ok(resp) => frame::encode_response(c.tag, resp),
+            Err(e) => frame::encode_error(c.tag, frame::error_code(*e)),
+        };
+        if !write_frame(&wr, &bytes, &stats) {
+            // peer unwritable: stop flushing; the reader will observe
+            // the dead socket and abort the connection
+            break;
+        }
+    }
+}
+
+/// Write one whole frame under the connection's write lock (frames from
+/// the writer thread and the reader's refusal path never interleave).
+fn write_frame(wr: &Mutex<TcpStream>, bytes: &[u8], stats: &NetStats) -> bool {
+    let mut w = wr.lock().unwrap_or_else(|p| p.into_inner());
+    match w.write_all(bytes) {
+        Ok(()) => {
+            NetStats::bump(&stats.frames_out, 1);
+            NetStats::bump(&stats.bytes_out, bytes.len() as u64);
+            true
+        }
+        Err(_) => {
+            NetStats::bump(&stats.disconnects, 1);
+            false
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn reader_loop(
+    stream: &TcpStream,
+    engine: &ServeEngine,
+    cfg: &NetConfig,
+    stats: &NetStats,
+    stop: &AtomicBool,
+    wr: &Mutex<TcpStream>,
+    cq: &CompletionQueue,
+    inflight: &AtomicUsize,
+) -> Teardown {
+    let mut stream = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let mut last_progress = Instant::now();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Teardown::Drain;
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return Teardown::Drain, // clean EOF / half-close
+            Ok(n) => {
+                NetStats::bump(&stats.bytes_in, n as u64);
+                last_progress = Instant::now();
+                buf.extend_from_slice(&tmp[..n]);
+                loop {
+                    match frame::decode_from(&buf) {
+                        Ok(None) => break, // need more bytes
+                        Ok(Some((f, used))) => {
+                            buf.drain(..used);
+                            NetStats::bump(&stats.frames_in, 1);
+                            if !handle_frame(f, engine, cfg, stats, wr, cq, inflight) {
+                                return Teardown::Abort;
+                            }
+                        }
+                        Err(we) => {
+                            // the stream cannot be re-framed after this:
+                            // answer the protocol error and close
+                            NetStats::bump(&stats.protocol_errors, 1);
+                            let _ = write_frame(wr, &frame::encode_error(0, we.code()), stats);
+                            return Teardown::Abort;
+                        }
+                    }
+                }
+            }
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                let stalled = last_progress.elapsed();
+                if !buf.is_empty() && stalled >= cfg.read_timeout {
+                    NetStats::bump(&stats.slowloris_reaped, 1);
+                    return Teardown::Abort;
+                }
+                // a connection awaiting responses is not half-open: the
+                // peer is quiet because it is blocked on *us*
+                if buf.is_empty()
+                    && inflight.load(Ordering::SeqCst) == 0
+                    && stalled >= cfg.idle_timeout
+                {
+                    NetStats::bump(&stats.halfopen_reaped, 1);
+                    return Teardown::Abort;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                NetStats::bump(&stats.disconnects, 1);
+                return Teardown::Abort;
+            }
+        }
+    }
+}
+
+/// Handle one decoded frame; `false` aborts the connection.
+fn handle_frame(
+    f: Frame,
+    engine: &ServeEngine,
+    cfg: &NetConfig,
+    stats: &NetStats,
+    wr: &Mutex<TcpStream>,
+    cq: &CompletionQueue,
+    inflight: &AtomicUsize,
+) -> bool {
+    let req = match f {
+        Frame::Request(r) => r,
+        // a client has no business sending response/error frames; the
+        // stream is suspect, treat like any other protocol violation
+        Frame::Response { .. } | Frame::Error { .. } => {
+            NetStats::bump(&stats.protocol_errors, 1);
+            let _ = write_frame(wr, &frame::encode_error(0, frame::CODE_MALFORMED), stats);
+            return false;
+        }
+    };
+    let RequestFrame {
+        id,
+        deadline_us,
+        priority,
+        request,
+    } = req;
+    // connection backpressure: the wire cap refuses before admission
+    // ever sees the request, exactly like a full lane would
+    if inflight.load(Ordering::SeqCst) >= cfg.max_inflight {
+        NetStats::bump(&stats.refused, 1);
+        return write_frame(
+            wr,
+            &frame::encode_error(id, frame::error_code(ServeError::Overloaded)),
+            stats,
+        );
+    }
+    // satellite: the client's deadline rides the wire; 0 means "server
+    // default" (the engine config's submit deadline)
+    let deadline = if deadline_us == 0 {
+        engine.config().default_deadline
+    } else {
+        Duration::from_micros(deadline_us)
+    };
+    inflight.fetch_add(1, Ordering::SeqCst);
+    match engine.submit_with_completion(request, priority, deadline, cq, id) {
+        Ok(()) => true,
+        Err(e) => {
+            inflight.fetch_sub(1, Ordering::SeqCst);
+            if matches!(e, ServeError::Overloaded | ServeError::TenantOverloaded) {
+                NetStats::bump(&stats.refused, 1);
+            }
+            write_frame(wr, &frame::encode_error(id, frame::error_code(e)), stats)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::engine::{EngineConfig, ServeEngine};
+    use super::super::super::{ServeRequest, ServeResponse};
+    use super::super::client::NetClient;
+    use super::*;
+    use crate::util::Rng;
+    use crate::vsa::{BinaryCodebook, BinaryHV, CleanupMemory};
+
+    fn start_engine(seed: u64) -> (Arc<ServeEngine>, CleanupMemory) {
+        let mut rng = Rng::new(seed);
+        let cb = BinaryCodebook::random(&mut rng, 32, 1024);
+        let cm = CleanupMemory::new(cb.clone());
+        let eng = ServeEngine::start(&cb, None, EngineConfig::default()).expect("spawn workers");
+        (Arc::new(eng), cm)
+    }
+
+    fn quick_cfg() -> NetConfig {
+        NetConfig {
+            read_timeout: Duration::from_millis(120),
+            idle_timeout: Duration::from_millis(200),
+            ..NetConfig::default()
+        }
+    }
+
+    #[test]
+    fn networked_responses_are_bit_exact() {
+        let (eng, cm) = start_engine(101);
+        let srv = NetServer::start(Arc::clone(&eng), "127.0.0.1:0", NetConfig::default()).unwrap();
+        let mut client = NetClient::connect(srv.addr()).unwrap();
+        let mut rng = Rng::new(102);
+        for _ in 0..16 {
+            let q = BinaryHV::random(&mut rng, 1024);
+            let got = client
+                .call(&ServeRequest::recall(q.clone()))
+                .expect("wire call")
+                .expect("served");
+            let (index, cosine) = cm.recall(&q);
+            assert_eq!(got, ServeResponse::Recall { index, cosine });
+        }
+        let c = srv.counters();
+        assert_eq!(c.accepted, 1);
+        assert_eq!(c.frames_in, 16);
+        assert_eq!(c.frames_out, 16);
+        assert_eq!(c.protocol_errors, 0);
+        srv.shutdown();
+        if let Ok(e) = Arc::try_unwrap(eng) {
+            e.shutdown();
+        }
+    }
+
+    #[test]
+    fn garbage_is_answered_with_a_protocol_error_then_closed() {
+        let (eng, _) = start_engine(103);
+        let srv = NetServer::start(Arc::clone(&eng), "127.0.0.1:0", quick_cfg()).unwrap();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        let mut resp = Vec::new();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let _ = s.read_to_end(&mut resp); // server closes after the error frame
+        let (f, used) = frame::decode_from(&resp).unwrap().expect("one error frame");
+        assert_eq!(used, resp.len());
+        match f {
+            Frame::Error { id, code } => {
+                assert_eq!(id, 0);
+                assert_eq!(code, frame::CODE_MALFORMED);
+            }
+            other => panic!("expected protocol error frame, got {other:?}"),
+        }
+        assert_eq!(srv.counters().protocol_errors, 1);
+        srv.shutdown();
+        if let Ok(e) = Arc::try_unwrap(eng) {
+            e.shutdown();
+        }
+    }
+
+    #[test]
+    fn half_open_connections_are_reaped_within_the_idle_deadline() {
+        let (eng, _) = start_engine(105);
+        let cfg = quick_cfg();
+        let srv = NetServer::start(Arc::clone(&eng), "127.0.0.1:0", cfg).unwrap();
+        // connect, send nothing: a half-open carcass
+        let s = TcpStream::connect(srv.addr()).unwrap();
+        let t0 = Instant::now();
+        let deadline = t0 + Duration::from_secs(5);
+        while srv.counters().halfopen_reaped == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(srv.counters().halfopen_reaped, 1, "idle peer must be reaped");
+        drop(s);
+        srv.shutdown();
+        if let Ok(e) = Arc::try_unwrap(eng) {
+            e.shutdown();
+        }
+    }
+
+    #[test]
+    fn slow_loris_mid_frame_stall_is_reaped_and_victims_keep_serving() {
+        let (eng, cm) = start_engine(107);
+        let srv = NetServer::start(Arc::clone(&eng), "127.0.0.1:0", quick_cfg()).unwrap();
+        // attacker: a valid header promising 64 bytes, then silence
+        let mut attacker = TcpStream::connect(srv.addr()).unwrap();
+        let mut partial = frame::encode_request(
+            1,
+            0,
+            super::super::super::queue::Priority::Normal,
+            &ServeRequest::recall(BinaryHV::zeros(1024)),
+        );
+        partial.truncate(frame::HEADER_LEN + 3);
+        attacker.write_all(&partial).unwrap();
+        // victim on its own connection: full service while the attacker
+        // stalls
+        let mut victim = NetClient::connect(srv.addr()).unwrap();
+        let mut rng = Rng::new(108);
+        let q = BinaryHV::random(&mut rng, 1024);
+        let got = victim.call(&ServeRequest::recall(q.clone())).unwrap().unwrap();
+        let (index, cosine) = cm.recall(&q);
+        assert_eq!(got, ServeResponse::Recall { index, cosine });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while srv.counters().slowloris_reaped == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(srv.counters().slowloris_reaped, 1, "stalled writer must be reaped");
+        drop(attacker);
+        srv.shutdown();
+        if let Ok(e) = Arc::try_unwrap(eng) {
+            e.shutdown();
+        }
+    }
+}

@@ -55,6 +55,156 @@ pub enum Priority {
 /// per rotation — the starvation-freedom invariant.
 pub const HIGH_BOOST: u32 = 2;
 
+/// One finished request, as delivered through a [`CompletionQueue`]:
+/// the caller-chosen tag (e.g. a wire request id), the outcome, and the
+/// enqueue/fill instants for latency accounting.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub tag: u64,
+    pub outcome: Result<ServeResponse, ServeError>,
+    pub enqueued: Instant,
+    pub completed: Instant,
+}
+
+impl Completion {
+    /// End-to-end latency (enqueue → worker fill).
+    pub fn latency(&self) -> Duration {
+        self.completed.duration_since(self.enqueued)
+    }
+}
+
+#[derive(Debug, Default)]
+struct CqState {
+    done: VecDeque<Completion>,
+    closed: bool,
+}
+
+#[derive(Debug)]
+struct CqInner {
+    state: Mutex<CqState>,
+    ready: Condvar,
+}
+
+/// MPMC completion queue — the push half of the async API. Slots built
+/// with [`ResponseSlot::with_completion`] deliver their outcome here the
+/// moment a worker fills them, so a consumer (e.g. a connection writer
+/// thread) harvests finished responses with one blocking pop instead of
+/// polling every in-flight ticket via `try_wait`. Completions arrive in
+/// fill order, which is NOT submit order — the `tag` is how a consumer
+/// matches a completion back to its request.
+#[derive(Debug, Clone, Default)]
+pub struct CompletionQueue {
+    inner: Arc<CqInner>,
+}
+
+impl Default for CqInner {
+    fn default() -> CqInner {
+        CqInner {
+            state: Mutex::new(CqState::default()),
+            ready: Condvar::new(),
+        }
+    }
+}
+
+impl CompletionQueue {
+    pub fn new() -> CompletionQueue {
+        CompletionQueue::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, CqState> {
+        self.inner.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Deliver one completion. Returns `false` (and drops it) if the
+    /// queue is closed — a worker filling a slot after its connection
+    /// died must not panic or grow an unread queue forever.
+    pub fn push(&self, c: Completion) -> bool {
+        let mut st = self.lock();
+        if st.closed {
+            return false;
+        }
+        st.done.push_back(c);
+        drop(st);
+        self.inner.ready.notify_one();
+        true
+    }
+
+    /// Pop the next completion, blocking while the queue is empty and
+    /// open; `None` once the queue is closed and drained.
+    pub fn pop_blocking(&self) -> Option<Completion> {
+        let mut st = self.lock();
+        loop {
+            if let Some(c) = st.done.pop_front() {
+                return Some(c);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.ready.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Pop the next completion if one arrives before `until`; `None` on
+    /// timeout or when closed-and-drained (disambiguate via
+    /// [`CompletionQueue::is_closed`]).
+    pub fn pop_until(&self, until: Instant) -> Option<Completion> {
+        let mut st = self.lock();
+        loop {
+            if let Some(c) = st.done.pop_front() {
+                return Some(c);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= until {
+                return None;
+            }
+            let (g, _timeout) = self
+                .inner
+                .ready
+                .wait_timeout(st, until - now)
+                .unwrap_or_else(|p| p.into_inner());
+            st = g;
+        }
+    }
+
+    /// Take everything already completed, without blocking.
+    pub fn drain_ready(&self) -> Vec<Completion> {
+        self.lock().done.drain(..).collect()
+    }
+
+    /// Close the queue: further pushes are dropped, blocked poppers
+    /// drain what remains and then observe `None`.
+    pub fn close(&self) {
+        let mut st = self.lock();
+        st.closed = true;
+        drop(st);
+        self.inner.ready.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().done.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Where a slot reports its completion (set at construction, delivered
+/// on first fill only).
+#[derive(Debug)]
+struct CompletionHook {
+    cq: CompletionQueue,
+    tag: u64,
+    enqueued: Instant,
+}
+
 /// One-shot response slot a client blocks on and a worker fills once.
 #[derive(Debug, Clone)]
 pub struct ResponseSlot {
@@ -66,6 +216,9 @@ struct SlotInner {
     /// `(outcome, completion time)`, set exactly once.
     done: Mutex<Option<(Result<ServeResponse, ServeError>, Instant)>>,
     ready: Condvar,
+    /// Completion-queue delivery, when the slot was built with
+    /// [`ResponseSlot::with_completion`].
+    hook: Option<CompletionHook>,
 }
 
 impl ResponseSlot {
@@ -74,6 +227,25 @@ impl ResponseSlot {
             inner: Arc::new(SlotInner {
                 done: Mutex::new(None),
                 ready: Condvar::new(),
+                hook: None,
+            }),
+        }
+    }
+
+    /// A slot that additionally delivers its outcome to `cq` as a
+    /// [`Completion`] tagged `tag` when first filled. The blocking /
+    /// polling waiters keep working; the completion is a second copy of
+    /// the outcome, pushed exactly once (first fill only).
+    pub fn with_completion(cq: CompletionQueue, tag: u64) -> ResponseSlot {
+        ResponseSlot {
+            inner: Arc::new(SlotInner {
+                done: Mutex::new(None),
+                ready: Condvar::new(),
+                hook: Some(CompletionHook {
+                    cq,
+                    tag,
+                    enqueued: Instant::now(),
+                }),
             }),
         }
     }
@@ -84,11 +256,21 @@ impl ResponseSlot {
     /// [`ServeError::Internal`], and any slot the batch had already
     /// answered keeps its real outcome. Returns whether THIS call
     /// answered the slot (containment counts only tickets it actually
-    /// poisoned).
+    /// poisoned). Slots built with [`ResponseSlot::with_completion`]
+    /// also push a [`Completion`] — on the winning fill only.
     pub fn fill(&self, outcome: Result<ServeResponse, ServeError>) -> bool {
         let mut g = self.inner.done.lock().unwrap_or_else(|p| p.into_inner());
         if g.is_none() {
-            *g = Some((outcome, Instant::now()));
+            let completed = Instant::now();
+            if let Some(h) = &self.inner.hook {
+                h.cq.push(Completion {
+                    tag: h.tag,
+                    outcome: outcome.clone(),
+                    enqueued: h.enqueued,
+                    completed,
+                });
+            }
+            *g = Some((outcome, completed));
             self.inner.ready.notify_all();
             true
         } else {
@@ -447,6 +629,30 @@ impl AdmissionQueue {
         st.closed = true;
         drop(st);
         self.available.notify_all();
+    }
+
+    /// Whether [`AdmissionQueue::close`] has been called. The batcher
+    /// probes this to skip holding a batch window open during shutdown.
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    /// Remove and return every queued ticket in one locked sweep — the
+    /// abort-shutdown path ([`super::engine::ServeEngine`]'s `Drop` /
+    /// `shutdown_now`), which answers each drained ticket
+    /// [`ServeError::ShuttingDown`] instead of executing it. Tickets a
+    /// worker popped before the sweep are unaffected (it answers them
+    /// itself); the queue is left empty.
+    pub fn drain_all(&self) -> Vec<Ticket> {
+        let mut st = self.lock();
+        let mut out = Vec::with_capacity(st.len);
+        for lane in &mut st.lanes {
+            out.extend(lane.high.drain(..));
+            out.extend(lane.normal.drain(..));
+            lane.deficit = 0;
+        }
+        st.len = 0;
+        out
     }
 
     /// Pop the next ticket (DRR order), blocking while the queue is empty
@@ -885,5 +1091,71 @@ mod tests {
         let (depth, lanes) = q.gauges();
         assert_eq!(depth, 3);
         assert_eq!(lanes[0].deficit, 1);
+    }
+
+    #[test]
+    fn completion_slot_delivers_exactly_once_in_fill_order() {
+        let cq = CompletionQueue::new();
+        let a = ResponseSlot::with_completion(cq.clone(), 7);
+        let b = ResponseSlot::with_completion(cq.clone(), 9);
+        assert!(b.fill(Err(ServeError::Overloaded)));
+        assert!(a.fill(Err(ServeError::Internal)));
+        // second fill loses the race: no duplicate completion
+        assert!(!a.fill(Err(ServeError::Overloaded)));
+        let tags: Vec<u64> = cq.drain_ready().iter().map(|c| c.tag).collect();
+        assert_eq!(tags, [9, 7], "completions arrive in fill order, tagged");
+        // the slot's own waiters still work alongside the hook
+        assert_eq!(a.wait(), Err(ServeError::Internal));
+        // a plain slot pushes nothing
+        ResponseSlot::new().fill(Err(ServeError::Overloaded));
+        assert!(cq.is_empty());
+    }
+
+    #[test]
+    fn completion_queue_close_drains_then_drops() {
+        let cq = CompletionQueue::new();
+        let slot = ResponseSlot::with_completion(cq.clone(), 1);
+        slot.fill(Err(ServeError::DeadlineExceeded));
+        cq.close();
+        // already-delivered completions drain...
+        let c = cq.pop_blocking().expect("pre-close completion survives");
+        assert_eq!(c.tag, 1);
+        assert_eq!(c.outcome, Err(ServeError::DeadlineExceeded));
+        assert!(c.completed >= c.enqueued);
+        // ...then closed-and-empty pops return None without blocking
+        assert!(cq.pop_blocking().is_none());
+        // fills after close are dropped, not buffered and not a panic
+        let late = ResponseSlot::with_completion(cq.clone(), 2);
+        assert!(late.fill(Err(ServeError::Internal)));
+        assert!(cq.is_empty());
+        assert_eq!(late.wait(), Err(ServeError::Internal), "slot waiters unaffected");
+        // timed pop times out cleanly on an open empty queue
+        let open = CompletionQueue::new();
+        assert!(open.pop_until(Instant::now() + Duration::from_millis(5)).is_none());
+        assert!(!open.is_closed());
+    }
+
+    #[test]
+    fn drain_all_empties_every_lane_and_reports_closed() {
+        let q = AdmissionQueue::with_lanes(
+            16,
+            &[
+                LaneSpec { weight: 1, quota: 8 },
+                LaneSpec { weight: 1, quota: 8 },
+            ],
+        );
+        for i in 0..3 {
+            q.push(ticket_on(0, i, Priority::Normal)).unwrap();
+        }
+        q.push(ticket_on(1, 10, Priority::High)).unwrap();
+        assert!(!q.is_closed());
+        q.close();
+        assert!(q.is_closed());
+        let drained = q.drain_all();
+        assert_eq!(drained.len(), 4, "every queued ticket handed back");
+        assert_eq!(q.len(), 0);
+        assert!(q.drain_all().is_empty(), "second sweep finds nothing");
+        // closed-and-drained: poppers observe None immediately
+        assert!(q.pop_blocking().is_none());
     }
 }

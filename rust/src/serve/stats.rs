@@ -267,6 +267,10 @@ struct StatsInner {
     rejected: u64,
     expired: u64,
     unsupported: u64,
+    /// Already-admitted tickets terminated with
+    /// [`super::ServeError::ShuttingDown`] by an abort shutdown
+    /// (engine drop / `shutdown_now`) instead of being executed.
+    shed_shutdown: u64,
     stores: Vec<StoreInner>,
 }
 
@@ -415,6 +419,14 @@ impl ServeStats {
         self.lock().unsupported += n;
     }
 
+    /// `n` already-admitted tickets were answered
+    /// [`super::ServeError::ShuttingDown`] by an abort shutdown — the
+    /// teardown path's proof that no waiter was left to spin out its own
+    /// timeout.
+    pub fn record_shed_shutdown(&self, n: u64) {
+        self.lock().shed_shutdown += n;
+    }
+
     /// Snapshot every metric (cheap; constant-size streaming state, no
     /// latency vectors to clone). Per-store cache counters are layered
     /// on by [`super::engine::ServeEngine::stats`], which owns the
@@ -462,6 +474,7 @@ impl ServeStats {
             rejected_tenant: stores.iter().map(|s| s.rejected_tenant).sum(),
             expired: g.expired,
             unsupported: g.unsupported,
+            shed_shutdown: g.shed_shutdown,
             degraded: stores.iter().map(|s| s.degraded).sum(),
             internal: stores.iter().map(|s| s.internal).sum(),
             batches: g.batches,
@@ -547,6 +560,9 @@ pub struct StatsSnapshot {
     pub rejected_tenant: u64,
     pub expired: u64,
     pub unsupported: u64,
+    /// Already-admitted tickets answered `ShuttingDown` by an abort
+    /// shutdown (engine drop / `shutdown_now`) instead of executing.
+    pub shed_shutdown: u64,
     /// Degraded-mode requests, summed across stores.
     pub degraded: u64,
     /// Contained-panic (`Internal`) answers, summed across stores.

@@ -3,19 +3,24 @@
 //! must match unsharded scans on both codebook families, interleaved
 //! multi-store traffic must never cross-contaminate, and admission
 //! control must reject (not queue) under overload, answer expired
-//! deadlines, and refuse unknown store ids without panicking.
+//! deadlines, and refuse unknown store ids without panicking. The TCP
+//! front-end rides the same contract: framed responses bit-exact over
+//! real sockets, client deadlines propagated from the wire header, and
+//! half-open peers reaped without touching live connections.
 
 use nscog::serve::loadgen::{
     run_closed_loop, run_open_loop, Fixture, FixtureConfig, LoadMix, StoreProfile,
 };
 use nscog::serve::queue::Priority;
 use nscog::serve::{
-    EngineConfig, FaultConfig, ServeEngine, ServeError, ServeRequest, ShardedBinaryCodebook,
-    ShardedRealCodebook, StoreId, StoreRegistry, StoreSpec,
+    EngineConfig, FaultConfig, NetClient, NetConfig, NetServer, ServeEngine, ServeError,
+    ServeRequest, ShardedBinaryCodebook, ShardedRealCodebook, StoreId, StoreRegistry, StoreSpec,
 };
 use nscog::util::Rng;
 use nscog::vsa::{BinaryCodebook, BinaryHV, CleanupMemory, RealCodebook, RealHV};
-use std::time::Duration;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn base_profile() -> StoreProfile {
     StoreProfile {
@@ -605,6 +610,139 @@ fn deadline_storm_expires_per_store_without_touching_live_traffic() {
     assert_eq!(snap.stores[b.index()].expired_dropped, 4);
     assert_eq!(snap.completed, 2);
     engine.shutdown();
+}
+
+#[test]
+fn wire_serving_is_bit_exact_and_the_client_deadline_rides_the_header() {
+    // the whole mixed schedule (recall / top-k / factorize) through real
+    // TCP framing: every response must equal its in-process oracle
+    let fixture = Fixture::build(fixture_cfg(40, 51));
+    let engine = Arc::new(start(
+        &fixture,
+        EngineConfig {
+            workers: 2,
+            shards: 3,
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            ..EngineConfig::default()
+        },
+    ));
+    let server = NetServer::start(Arc::clone(&engine), "127.0.0.1:0", NetConfig::default())
+        .expect("bind wire server");
+    let mut client = NetClient::connect(server.addr()).expect("connect wire client");
+    for req in &fixture.requests {
+        assert_eq!(
+            client.call(req).expect("wire call"),
+            Ok(fixture.oracle_answer(req)),
+            "wire response diverged from its oracle"
+        );
+    }
+    server.shutdown();
+    if let Ok(e) = Arc::try_unwrap(engine) {
+        e.shutdown();
+    }
+
+    // deadline propagation: behind a single artificially slowed worker,
+    // a request carrying a 1ms deadline in its wire header must expire
+    // in queue, while the zero-deadline (= server default) request ahead
+    // of it completes
+    let mut rng = Rng::new(53);
+    let cb = BinaryCodebook::random(&mut rng, 32, 1024);
+    let engine = Arc::new(
+        ServeEngine::start(
+            &cb,
+            None,
+            EngineConfig {
+                workers: 1,
+                max_batch: 1,
+                cache_capacity: 0,
+                faults: Some(FaultConfig {
+                    seed: 3,
+                    kernel_delay_prob: 1.0,
+                    kernel_delay: Duration::from_millis(25),
+                    ..FaultConfig::default()
+                }),
+                ..EngineConfig::default()
+            },
+        )
+        .expect("spawn serve workers"),
+    );
+    let server = NetServer::start(Arc::clone(&engine), "127.0.0.1:0", NetConfig::default())
+        .expect("bind wire server");
+    let mut client = NetClient::connect(server.addr()).expect("connect wire client");
+    let q1 = BinaryHV::random(&mut rng, 1024);
+    let q2 = BinaryHV::random(&mut rng, 1024);
+    let first = client
+        .send(&ServeRequest::recall(q1), Priority::Normal, 0)
+        .unwrap();
+    let doomed = client
+        .send(&ServeRequest::recall(q2), Priority::Normal, 1_000)
+        .unwrap();
+    let mut got = std::collections::HashMap::new();
+    for _ in 0..2 {
+        let (id, outcome) = client.recv().expect("response frame");
+        got.insert(id, outcome);
+    }
+    assert!(
+        got[&first].is_ok(),
+        "server-default deadline must serve: {:?}",
+        got[&first]
+    );
+    assert_eq!(
+        got[&doomed],
+        Err(ServeError::DeadlineExceeded),
+        "the 1ms wire deadline must expire behind the 25ms kernel"
+    );
+    server.shutdown();
+    if let Ok(e) = Arc::try_unwrap(engine) {
+        e.shutdown();
+    }
+}
+
+#[test]
+fn half_open_wire_connections_are_reaped_while_live_traffic_flows() {
+    let fixture = Fixture::build(fixture_cfg(20, 52));
+    let engine = Arc::new(start(&fixture, EngineConfig::default()));
+    let server = NetServer::start(
+        Arc::clone(&engine),
+        "127.0.0.1:0",
+        NetConfig {
+            idle_timeout: Duration::from_millis(150),
+            ..NetConfig::default()
+        },
+    )
+    .expect("bind wire server");
+    // two half-open carcasses: connect, say nothing, never FIN
+    let carcass_a = TcpStream::connect(server.addr()).unwrap();
+    let carcass_b = TcpStream::connect(server.addr()).unwrap();
+    // live traffic keeps flowing on its own connection the whole time
+    let mut client = NetClient::connect(server.addr()).expect("connect wire client");
+    let req = &fixture.requests[0];
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.counters().halfopen_reaped < 2 && Instant::now() < deadline {
+        assert_eq!(
+            client.call(req).expect("live call"),
+            Ok(fixture.oracle_answer(req)),
+            "live connection must serve bit-exactly while carcasses are reaped"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(
+        server.counters().halfopen_reaped,
+        2,
+        "both idle carcasses reaped within the idle deadline"
+    );
+    drop((carcass_a, carcass_b));
+    // the reaps never touched the live connection
+    let req = &fixture.requests[1];
+    assert_eq!(
+        client.call(req).expect("live call after reaps"),
+        Ok(fixture.oracle_answer(req))
+    );
+    server.shutdown();
+    if let Ok(e) = Arc::try_unwrap(engine) {
+        e.shutdown();
+    }
 }
 
 #[test]

@@ -73,6 +73,107 @@ if tier == 'scalar':
 PYEOF
 fi
 
+# Large-store gate: the hotpath bench's 200k-item section records one
+# prune ledger per scan mode (single-level sketch, 128-bit cascade, ca90
+# rematerialized) plus a bit-equality verdict across all of them. The
+# validator asserts the cascade actually used its coarse level, that the
+# rejection levels nest (each level rejects from the previous level's
+# survivors), and that both new modes streamed strictly fewer words than
+# the single-level baseline. NSCOG_LARGE=0 runs skip cleanly.
+echo "== validate BENCH_hotpath.json large-store block =="
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PYEOF'
+import json
+
+def validate(r):
+    """One hotpath report -> 'pass' or 'skip'; raises AssertionError on a
+    violated invariant. Runs without the large-store section (NSCOG_LARGE=0
+    or pre-cascade JSONs) skip cleanly."""
+    ls = r.get('large_store')
+    if ls is None:
+        return 'skip'
+    assert ls.get('items', 0) >= 200_000, \
+        f"large-store section ran below the 200k-item shape: {ls.get('items')}"
+    assert ls.get('remat_equal') is True, \
+        'large-store scan modes were not bit-identical to exhaustive'
+    single, casc, remat = ls['single'], ls['cascade'], ls['remat']
+    for name, st in (('single', single), ('cascade', casc), ('remat', remat)):
+        assert st['items'] > 0, f'{name}: empty prune ledger'
+        assert st['words_streamed'] <= st['words_total'], \
+            f'{name}: streamed beyond the exhaustive word count'
+        # rejection classes are disjoint item outcomes: coarse rejects
+        # first, the sketch rejects from coarse survivors, incremental
+        # bounds terminate from sketch survivors
+        assert st['coarse_rejected'] + st['sketch_rejected'] + st['early_terminated'] \
+            <= st['items'], f'{name}: rejection levels do not nest: {st}'
+        assert st['coarse_rejected'] <= st['items'], f'{name}: coarse over-rejects'
+    assert single['coarse_rejected'] == 0, \
+        'single-level ledger claims coarse rejects with no coarse level'
+    assert casc['coarse_rejected'] > 0, \
+        'cascade run never used its coarse level (vacuous two-level sketch)'
+    assert remat['coarse_rejected'] > 0, \
+        'remat run never used its coarse level'
+    assert casc['words_streamed'] < single['words_streamed'], \
+        'cascade streamed no fewer words than the single-level baseline'
+    assert remat['words_streamed'] < single['words_streamed'], \
+        'remat streamed no fewer words than the single-level baseline'
+    return 'pass'
+
+# Self-test before gating the real artifact: the validator must pass a
+# good report, skip sectionless shapes, and FAIL each mutated bad one (a
+# gate that cannot fail gates nothing).
+st = lambda c, s, e, w: {'items': 1_600_000, 'coarse_rejected': c,
+                         'sketch_rejected': s, 'early_terminated': e,
+                         'words_streamed': w, 'words_total': 51_200_000,
+                         'coarse_reject_rate': c / 1_600_000,
+                         'sketch_reject_rate': s / 1_600_000,
+                         'words_frac': w / 51_200_000}
+ok = {'bench': 'hotpath',
+      'large_store': {'items': 200_000, 'dim': 2048, 'remat_equal': True,
+                      'single': st(0, 1_500_000, 60_000, 18_000_000),
+                      'cascade': st(1_550_000, 30_000, 9_000, 5_200_000),
+                      'remat': st(1_550_000, 30_000, 9_000, 6_100_000)}}
+assert validate(ok) == 'pass', 'validator rejected a passing large-store block'
+assert validate({'bench': 'hotpath', 'large_store': None}) == 'skip', \
+    'NSCOG_LARGE=0 run must skip'
+assert validate({}) == 'skip', 'pre-cascade JSON must skip'
+for mutate, what in [
+        (lambda b: b['large_store'].__setitem__('remat_equal', False),
+         'a remat/ram divergence'),
+        (lambda b: b['large_store'].__setitem__('items', 50_000),
+         'a sub-200k shape'),
+        (lambda b: b['large_store']['cascade'].__setitem__('coarse_rejected', 0),
+         'a cascade that never coarse-rejects'),
+        (lambda b: b['large_store']['single'].__setitem__('coarse_rejected', 7),
+         'coarse rejects on the single-level ledger'),
+        (lambda b: b['large_store']['cascade'].__setitem__('words_streamed', 18_000_000),
+         'a cascade streaming no fewer words than single-level'),
+        (lambda b: b['large_store']['remat'].__setitem__('words_streamed', 99_000_000),
+         'a remat ledger streaming beyond exhaustive'),
+        (lambda b: b['large_store']['cascade'].__setitem__('sketch_rejected', 200_000),
+         'rejection levels that do not nest')]:
+    bad = json.loads(json.dumps(ok))
+    mutate(bad)
+    try:
+        validate(bad)
+        raise SystemExit(f'large-store validator accepted a report with {what}')
+    except AssertionError:
+        pass
+
+r = json.load(open('BENCH_hotpath.json'))
+verdict = validate(r)
+if verdict == 'skip':
+    print('large-store section absent (NSCOG_LARGE=0?); skipped')
+else:
+    ls = r['large_store']
+    print(f"large-store OK (validator self-test passed): {ls['items']}x{ls['dim']}b, "
+          f"words streamed single {ls['single']['words_frac']*100:.1f}% / "
+          f"cascade {ls['cascade']['words_frac']*100:.1f}% "
+          f"(coarse reject {ls['cascade']['coarse_reject_rate']*100:.1f}%) / "
+          f"remat {ls['remat']['words_frac']*100:.1f}%")
+PYEOF
+fi
+
 echo "== bench smoke: serve (3 stores, skewed mix, bounded requests, deterministic seed) =="
 NSCOG_SERVE_JSON="$(pwd)/BENCH_serve.json" \
     cargo run --release --quiet --bin nscog -- serve-bench --smoke --stores 3
@@ -146,6 +247,129 @@ else
     grep -q '"bench": "serve"' BENCH_serve.json
     grep -q '"mismatches": 0' BENCH_serve.json
     grep -q '"stores": \[' BENCH_serve.json
+    echo "python3 unavailable; structural grep checks passed"
+fi
+
+# Large-store serve smoke: the same serving engine over a 200k-item,
+# 2048-bit store, once per row backing (ram rows vs ca90 seeds-only
+# rematerialization), both with the two-level sketch cascade on and
+# near-duplicate queries (2% noise — the high-score regime where the
+# coarse level bulk-rejects). Each run is oracle-verified by the binary;
+# the cross-backing validator then asserts the ca90 run really held
+# dim/512 = 4x less resident row memory at the same shape, and that both
+# runs' coarse levels actually fired.
+echo "== bench smoke: serve large store (200k x 2048b, ram backing, cascade 128) =="
+cargo run --release --quiet --bin nscog -- serve-bench --smoke --requests 120 \
+    --store-items 200000 --store-dims 2048 --sketch-bits 512 --sketch-cascade 128 \
+    --noise 0.02 --json "$(pwd)/BENCH_serve_large_ram.json"
+
+echo "== bench smoke: serve large store (200k x 2048b, ca90 backing, cascade 128) =="
+cargo run --release --quiet --bin nscog -- serve-bench --smoke --requests 120 \
+    --store-items 200000 --store-dims 2048 --sketch-bits 512 --sketch-cascade 128 \
+    --noise 0.02 --store-backing ca90 --json "$(pwd)/BENCH_serve_large_ca90.json"
+
+echo "== validate BENCH_serve_large_{ram,ca90}.json (cross-backing) =="
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PYEOF'
+import json
+
+def validate(ram, ca):
+    """A (ram, ca90) pair of large-store serve reports -> 'pass' or
+    'skip'; raises AssertionError on a violated invariant. Pairs without
+    per-store memory blocks (pre-backing JSONs) skip cleanly."""
+    for tag, r in (('ram', ram), ('ca90', ca)):
+        assert r.get('bench') == 'serve', f'{tag}: wrong bench tag'
+        cl = r['closed_loop']
+        assert cl['mismatches'] == 0, f'{tag}: responses diverged from the oracle'
+        assert cl['qps'] > 0, f'{tag}: degenerate throughput'
+    stores = lambda r: r.get('stores') or []
+    if not stores(ram) or not stores(ca):
+        return 'skip'
+    rs, cs = stores(ram)[0], stores(ca)[0]
+    rm, cm = rs.get('memory'), cs.get('memory')
+    if rm is None or cm is None:
+        return 'skip'
+    assert rm['backing'] == 'ram', f"ram run reports backing '{rm['backing']}'"
+    assert cm['backing'] == 'ca90', f"ca90 run reports backing '{cm['backing']}'"
+    # seeds-only rows: exactly dim/512 = 4x smaller at 2048b, identical
+    # sketch sidecars (the sidecar is always materialized)
+    assert cm['row_bytes'] * 4 == rm['row_bytes'], \
+        f"ca90 rows not 4x smaller: {cm['row_bytes']} vs {rm['row_bytes']}"
+    assert cm['sketch_bytes'] == rm['sketch_bytes'] > 0, \
+        'sketch sidecar bytes diverge across backings'
+    for tag, m in (('ram', rm), ('ca90', cm)):
+        assert m['total_bytes'] == m['row_bytes'] + m['sketch_bytes'] + m['master_bytes'], \
+            f'{tag}: memory block does not sum to total_bytes'
+    for tag, s in (('ram', rs), ('ca90', cs)):
+        pr = s.get('prune') or {}
+        assert pr.get('words_total', 0) > 0, f'{tag}: store never scanned'
+        assert pr['words_streamed'] < pr['words_total'], \
+            f'{tag}: scans streamed no fewer words than exhaustive'
+        assert pr.get('coarse_rejected', 0) > 0, \
+            f'{tag}: cascade coarse level never fired at 2% noise'
+        assert pr['coarse_rejected'] + pr.get('sketch_rejected', 0) \
+            + pr.get('early_terminated', 0) <= pr['items'], \
+            f'{tag}: rejection levels do not nest: {pr}'
+    return 'pass'
+
+# Self-test before gating the real artifacts: pass a good pair, skip
+# memoryless shapes, FAIL each mutated bad pair (a gate that cannot fail
+# gates nothing).
+def report(backing, row_bytes):
+    return {'bench': 'serve',
+            'closed_loop': {'mismatches': 0, 'qps': 900.0},
+            'stores': [{'name': 'default', 'backing': backing,
+                        'memory': {'backing': backing, 'row_bytes': row_bytes,
+                                   'sketch_bytes': 12_800_000, 'master_bytes': 256,
+                                   'total_bytes': row_bytes + 12_800_000 + 256},
+                        'prune': {'items': 900_000, 'coarse_rejected': 870_000,
+                                  'sketch_rejected': 18_000, 'early_terminated': 4_000,
+                                  'words_streamed': 4_000_000,
+                                  'words_total': 28_800_000}}]}
+good = (report('ram', 51_200_000), report('ca90', 12_800_000))
+assert validate(*good) == 'pass', 'validator rejected a passing pair'
+nomem = json.loads(json.dumps(good))
+nomem[1]['stores'][0]['memory'] = None
+assert validate(*nomem) == 'skip', 'memoryless pair must skip'
+for which, mutate, what in [
+        (0, lambda r: r['closed_loop'].__setitem__('mismatches', 3),
+         'oracle mismatches'),
+        (1, lambda r: r['stores'][0]['memory'].__setitem__('backing', 'ram'),
+         'a ca90 run that kept ram rows'),
+        (1, lambda r: r['stores'][0]['memory'].__setitem__('row_bytes', 51_200_000),
+         'uncompressed ca90 rows'),
+        (1, lambda r: r['stores'][0]['memory'].__setitem__('total_bytes', 1),
+         'an inconsistent memory total'),
+        (1, lambda r: r['stores'][0]['prune'].__setitem__('coarse_rejected', 0),
+         'a coarse level that never fired'),
+        (0, lambda r: r['stores'][0]['prune'].__setitem__('words_streamed', 28_800_000),
+         'scans streaming no fewer words than exhaustive')]:
+    bad = json.loads(json.dumps(good))
+    mutate(bad[which])
+    try:
+        validate(*bad)
+        raise SystemExit(f'large-serve validator accepted a pair with {what}')
+    except AssertionError:
+        pass
+
+ram = json.load(open('BENCH_serve_large_ram.json'))
+ca = json.load(open('BENCH_serve_large_ca90.json'))
+verdict = validate(ram, ca)
+if verdict == 'skip':
+    raise SystemExit('large-store serve runs wrote no per-store memory blocks')
+rm = ram['stores'][0]['memory']; cm = ca['stores'][0]['memory']
+mib = lambda b: b / (1024 * 1024)
+print(f"large-store serve OK (validator self-test passed): "
+      f"ram {ram['closed_loop']['qps']:.0f} qps / ca90 {ca['closed_loop']['qps']:.0f} qps, "
+      f"resident rows {mib(rm['row_bytes']):.1f} MiB -> {mib(cm['row_bytes']):.1f} MiB "
+      f"(coarse reject ram {ram['stores'][0]['prune']['coarse_rejected']}, "
+      f"ca90 {ca['stores'][0]['prune']['coarse_rejected']})")
+PYEOF
+else
+    grep -q '"backing": "ram"' BENCH_serve_large_ram.json
+    grep -q '"backing": "ca90"' BENCH_serve_large_ca90.json
+    grep -q '"mismatches": 0' BENCH_serve_large_ram.json
+    grep -q '"mismatches": 0' BENCH_serve_large_ca90.json
     echo "python3 unavailable; structural grep checks passed"
 fi
 
@@ -707,9 +931,15 @@ if not speedups:
     sys.exit(0)
 simd_tier = hp.get('simd')
 simd_speedups = {s['kernel']: s['speedup'] for s in hp.get('simd_speedups', [])}
-failures, checked, simd_skipped = [], 0, 0
+failures, checked, simd_skipped, large_skipped = [], 0, 0, 0
 for kernel, floor in floors.items():
     if kernel == 'serve closed-loop qps':
+        continue
+    if kernel.startswith('large ') and hp.get('large_store') is None:
+        # large-store floors only bind when the 200k-item section ran
+        # (NSCOG_LARGE=0 skips it on tiny hosts). When it did run, a
+        # missing/renamed entry is a hard failure like every other floor.
+        large_skipped += 1
         continue
     if kernel.startswith('simd '):
         # simd-vs-scalar floors only bind when the host actually resolved
@@ -736,6 +966,8 @@ for kernel, floor in floors.items():
         failures.append(f"{kernel}: measured {speedups[kernel]:.2f}x < floor {floor:.2f}x")
 if simd_skipped:
     print(f"({simd_skipped} simd floors skipped: tier '{simd_tier}' has no SIMD datapath)")
+if large_skipped:
+    print(f"({large_skipped} large-store floors skipped: no large_store section in this run)")
 try:
     sv = json.load(open('BENCH_serve.json'))
 except (OSError, json.JSONDecodeError):

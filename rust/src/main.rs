@@ -15,7 +15,7 @@ use nscog::accel::isa::ControlMethod;
 use nscog::accel::AccelConfig;
 use nscog::platform::Platform;
 use nscog::profiler::report::WorkloadReport;
-use nscog::util::stats::fmt_time;
+use nscog::util::stats::{fmt_bytes, fmt_time};
 use nscog::workloads::suite::{CompiledSuite, SuiteKind};
 use nscog::workloads::{all_workloads, raven};
 
@@ -79,9 +79,21 @@ fn info() {
     println!("                        scan fan-out per worker: NSCOG_THREADS / --scan-threads N");
     println!("                        pruned scans: --sketch-bits N (prefilter sidecar width;");
     println!("                               0 = incremental bounds only; default 512 for dim>=2048)");
+    println!("                        sketch cascade: --sketch-cascade BITS (coarse first-level");
+    println!("                               prefix, e.g. 128; orders + bulk-rejects the tail before");
+    println!("                               the full sketch refines survivors; exactness unchanged,");
+    println!("                               per-level rejects in the JSON prune blocks)");
+    println!("                        row storage: --store-backing ram|ca90 (ca90 keeps per-item");
+    println!("                               512-bit seeds only and rematerializes rows inside the");
+    println!("                               scan loop — ~dim/512 less resident row memory, same");
+    println!("                               bit-exact answers; requires dim % 512 == 0; resident");
+    println!("                               bytes per store in the JSON \"memory\" blocks)");
     println!("                        response cache (per store): --cache N (entry budget,");
     println!("                               0 disables; default 4096) --cache-shards N (default 8)");
     println!("                        workload reuse: --repeat F (fraction of repeated queries)");
+    println!("                        query noise: --noise F (fraction of bits flipped on recall");
+    println!("                               queries; low noise = high-score regime where the");
+    println!("                               coarse cascade level bulk-rejects)");
     println!("                        multi-store: --stores N (N tenants behind one queue;");
     println!("                               skewed popularity, dims alternate base/2x base);");
     println!("                               per-store overrides (comma lists, cycled):");
@@ -333,6 +345,19 @@ fn serve_bench(flags: &[String]) {
     if let Some(n) = num("--sketch-bits") {
         opts.engine.sketch_bits = Some(n);
     }
+    // two-level sketch cascade (coarse prefix width; applies to every
+    // store — per-store sketch widths still come from --store-sketch)
+    let sketch_cascade = num("--sketch-cascade");
+    // row-storage mode for every store's master codebook
+    let backing = val("--store-backing").map(|v| {
+        match nscog::serve::loadgen::StoreBacking::parse(v) {
+            Some(b) => b,
+            None => {
+                eprintln!("unknown --store-backing '{v}' (expected ram|ca90)");
+                std::process::exit(2);
+            }
+        }
+    });
     if let Some(n) = num("--cache") {
         opts.engine.cache_capacity = n;
     }
@@ -343,6 +368,12 @@ fn serve_bench(flags: &[String]) {
         for p in &mut opts.fixture.stores {
             p.repeat_frac = frac.clamp(0.0, 1.0);
         }
+    }
+    // recall-query noise (fraction of bits flipped on the member item);
+    // low noise is the high-score regime where the coarse cascade level
+    // can actually bulk-reject the tail
+    if let Some(frac) = val("--noise").and_then(|v| v.parse::<f64>().ok()) {
+        opts.fixture.noise_frac = frac.clamp(0.0, 1.0);
     }
     // multi-store expansion first, per-store overrides layered on top
     // (comma lists cycle over the stores, so one value applies to all)
@@ -386,6 +417,27 @@ fn serve_bench(flags: &[String]) {
         if let Some(q) = pick(&quotas).and_then(|v| v.parse::<usize>().ok()) {
             // 0 = unbounded lane (global capacity only)
             p.quota = if q == 0 { None } else { Some(q) };
+        }
+        if let Some(b) = backing {
+            p.backing = b;
+        }
+        if let Some(bits) = sketch_cascade {
+            // 0 = explicit single-level sketch
+            p.sketch_cascade = if bits == 0 { None } else { Some(bits) };
+        }
+    }
+    // ca90 rematerialization derives rows from 512-bit seeds: reject
+    // unaligned dims here instead of panicking mid-fixture
+    for p in &opts.fixture.stores {
+        if p.backing == nscog::serve::loadgen::StoreBacking::Ca90
+            && (p.dim == 0 || p.dim % 512 != 0)
+        {
+            eprintln!(
+                "--store-backing ca90 requires every store dim to be a positive multiple of 512 \
+                 (store '{}' has dim {})",
+                p.name, p.dim
+            );
+            std::process::exit(2);
         }
     }
     if let Some(p) = val("--json") {
@@ -528,13 +580,25 @@ fn serve_bench(flags: &[String]) {
             ),
             None => "cache disabled".into(),
         };
+        let mem_line = match &store.memory {
+            Some(m) => format!(
+                "{} resident: rows {} + sketch {} + master {}",
+                m.backing,
+                fmt_bytes(m.row_bytes),
+                fmt_bytes(m.sketch_bytes),
+                fmt_bytes(m.master_bytes)
+            ),
+            None => "memory: n/a (dropped)".into(),
+        };
         println!(
-            "  store '{}': {} completed, {:.1}% words streamed (sketch reject {:.1}%), {}",
+            "  store '{}': {} completed, {:.1}% words streamed (coarse reject {:.1}%, sketch reject {:.1}%), {}, {}",
             store.name,
             store.completed,
             p.words_frac() * 100.0,
+            p.coarse_reject_rate() * 100.0,
             p.sketch_reject_rate() * 100.0,
-            cache_line
+            cache_line,
+            mem_line
         );
         for (s, sh) in store.shards.iter().enumerate() {
             println!(
@@ -546,9 +610,10 @@ fn serve_bench(flags: &[String]) {
     }
     let p = &report.stats.prune;
     println!(
-        "pruned scans (all stores): {:.1}% of item words streamed ({} items; sketch reject {:.1}%, {} early-terminated)",
+        "pruned scans (all stores): {:.1}% of item words streamed ({} items; coarse reject {:.1}%, sketch reject {:.1}%, {} early-terminated)",
         p.words_frac() * 100.0,
         p.items,
+        p.coarse_reject_rate() * 100.0,
         p.sketch_reject_rate() * 100.0,
         p.early_terminated
     );
@@ -604,15 +669,25 @@ fn serve_bench(flags: &[String]) {
             if st.n == 0 {
                 continue;
             }
+            // wire spans only exist for socket-borne requests (--wire)
+            let net = match (&st.net_in, &st.net_out) {
+                (None, None) => String::new(),
+                (i, o) => format!(
+                    "  [net in {} / out {}]",
+                    fmt_time(mean(i)),
+                    fmt_time(mean(o))
+                ),
+            };
             println!(
-                "  stages[{}]: n={}  queue {} + batch {} + kernel {} + fill {}  (e2e {})",
+                "  stages[{}]: n={}  queue {} + batch {} + kernel {} + fill {}  (e2e {}){}",
                 st.kind.label(),
                 st.n,
                 fmt_time(mean(&st.queue)),
                 fmt_time(mean(&st.batch)),
                 fmt_time(mean(&st.kernel)),
                 fmt_time(mean(&st.fill)),
-                fmt_time(mean(&st.total))
+                fmt_time(mean(&st.total)),
+                net
             );
         }
         let host = Platform::host();

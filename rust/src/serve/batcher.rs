@@ -305,15 +305,19 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
     let now = Instant::now();
     // The seal: each distinct store id resolves against the registry
     // exactly once per batch, pinning the epoch-stamped snapshot (and
-    // its cache handle) every ticket for that store will use. A store
-    // dropped since admission resolves to `None` here — its tickets are
-    // answered `UnknownStore` below, uniformly for the whole batch.
-    type Sealed = Option<(Arc<StoreSnapshot>, Option<Arc<ResponseCache>>)>;
+    // its cache handle) every ticket for that store will use. The
+    // degraded-mode depth probe (`lane_len` → `degrade_step`) runs
+    // inside the same seal closure, so the degrade decision and the
+    // snapshot it gates are taken at one point in time — a mutation
+    // landing mid-batch can't pair a fresh snapshot's epoch (and its
+    // cascade prune tallies, which count the sealed epoch's items)
+    // with a depth probe taken against the previous item set, or vice
+    // versa. A store dropped since admission resolves to `None` here —
+    // its tickets are answered `UnknownStore` below, uniformly for the
+    // whole batch.
+    type Sealed = Option<(Arc<StoreSnapshot>, Option<Arc<ResponseCache>>, bool)>;
     let mut sealed: BTreeMap<StoreId, Sealed> = BTreeMap::new();
     let mut groups: BTreeMap<StoreId, StoreGroup> = BTreeMap::new();
-    // Depth-probed once per store per batch; degradation is a
-    // batch-formation decision, not a per-ticket race.
-    let mut degraded_stores: BTreeMap<StoreId, bool> = BTreeMap::new();
     let mut expired_by: BTreeMap<StoreId, u64> = BTreeMap::new();
     let mut degraded_by: BTreeMap<StoreId, u64> = BTreeMap::new();
     let mut unsupported = 0u64;
@@ -330,11 +334,24 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
             continue;
         }
         let ServeRequest { store: store_id, op } = t.request;
-        let (store, cache_arc) = match sealed
-            .entry(store_id)
-            .or_insert_with(|| registry.live(store_id))
-        {
-            Some((s, c)) => (Arc::clone(s), c.clone()),
+        let (store, cache_arc, degraded) = match sealed.entry(store_id).or_insert_with(|| {
+            registry.live(store_id).map(|(s, c)| {
+                // Depth-probed once per store per batch, under the same
+                // seal as the snapshot: degradation is a batch-formation
+                // decision, not a per-ticket race. Persistent per-slot
+                // bit in the registry: enter at `h.enter`, leave only
+                // once the lane drains below `h.exit` — no flapping
+                // while the depth hovers at the threshold.
+                let degraded = match (s.spec().degrade_hysteresis(), ctx.queue) {
+                    (Some(h), Some(q)) => {
+                        registry.degrade_step(store_id, h, q.lane_len(store_id))
+                    }
+                    _ => false,
+                };
+                (s, c, degraded)
+            })
+        }) {
+            Some((s, c, d)) => (Arc::clone(s), c.clone(), *d),
             None => {
                 fills.push((t.slot, Err(ServeError::UnknownStore)));
                 unsupported += 1;
@@ -342,16 +359,6 @@ pub fn execute(batch: Vec<Ticket>, ctx: &ExecCtx<'_>, scratch: &mut WorkerScratc
             }
         };
         let epoch = store.epoch();
-        let degraded = *degraded_stores.entry(store_id).or_insert_with(|| {
-            match (store.spec().degrade_hysteresis(), ctx.queue) {
-                // Persistent per-slot bit in the registry: enter at
-                // `h.enter`, leave only once the lane drains below
-                // `h.exit` — no flapping while the depth hovers at the
-                // threshold.
-                (Some(h), Some(q)) => registry.degrade_step(store_id, h, q.lane_len(store_id)),
-                _ => false,
-            }
-        });
         let cache = cache_arc.as_deref();
         match op {
             RequestOp::Recall { query } => {

@@ -51,9 +51,9 @@ use super::cache::CacheConfig;
 use super::faults::{FaultConfig, FaultPlan};
 use super::queue::{AdmissionQueue, CompletionQueue, LaneSpec, Priority, ResponseSlot, Ticket};
 use super::registry::{MutateError, StoreId, StoreRegistry, StoreSpec};
-use super::stats::{ServeStats, StatsSnapshot};
+use super::stats::{ServeStats, StatsSnapshot, StoreMemory};
 use super::trace::{StageMarks, TraceEvent, TraceRing};
-use super::{ServeError, ServeRequest, ServeResponse};
+use super::{RequestKind, ServeError, ServeRequest, ServeResponse};
 use crate::vsa::{BinaryCodebook, BinaryHV, Resonator};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
@@ -435,6 +435,25 @@ impl ServeEngine {
         cq: &CompletionQueue,
         tag: u64,
     ) -> Result<(), ServeError> {
+        self.submit_with_completion_wire(request, priority, deadline, cq, tag, Duration::ZERO)
+    }
+
+    /// [`ServeEngine::submit_with_completion`] for wire-borne requests:
+    /// `net_in` is the socket read + frame decode span the network
+    /// front-end measured *before* this call. It rides the ticket's
+    /// [`StageMarks`] into the per-class `net_in` stage lane, so the
+    /// inbound wire hop shows up in the stage decomposition next to
+    /// queue/batch/kernel/fill (in-process callers pass zero and are
+    /// skipped by the lane).
+    pub fn submit_with_completion_wire(
+        &self,
+        request: ServeRequest,
+        priority: Priority,
+        deadline: Duration,
+        cq: &CompletionQueue,
+        tag: u64,
+        net_in: Duration,
+    ) -> Result<(), ServeError> {
         if !self.shared.registry.is_live(request.store) {
             self.shared.stats.record_unsupported(1);
             return Err(ServeError::UnknownStore);
@@ -447,13 +466,17 @@ impl ServeEngine {
         }
         let store = request.store;
         let now = Instant::now();
+        let mut marks = StageMarks::new(now);
+        if !net_in.is_zero() {
+            marks.mark_net_in(net_in.as_secs_f64());
+        }
         let ticket = Ticket {
             request,
             priority,
             slot: ResponseSlot::with_completion(cq.clone(), tag),
             enqueued: now,
             deadline: now + deadline,
-            marks: StageMarks::new(now),
+            marks,
         };
         match self.shared.queue.push(ticket) {
             Ok(()) => Ok(()),
@@ -469,11 +492,23 @@ impl ServeEngine {
         }
     }
 
+    /// Record the encode + socket-write span of one wire response into
+    /// the per-class / per-store `net_out` stage lane (the network
+    /// front-end's connection writers call this after each framed write
+    /// completes — responses are accounted before they are written, so
+    /// the outbound hop cannot ride the batch accounting).
+    pub fn record_net_out(&self, store: StoreId, kind: RequestKind, dur: Duration) {
+        self.shared.stats.record_net_out(store, kind, dur.as_secs_f64());
+    }
+
     /// Metrics snapshot, including per-store response-cache counters for
     /// every store that runs one (and their engine-wide sum), each
-    /// store's current epoch and liveness, plus the live queue-depth and
-    /// per-lane deficit gauges. Dropped stores keep their section —
-    /// final counters stay readable — marked `live: false`.
+    /// store's current epoch and liveness, resident-memory telemetry of
+    /// each live store's snapshot (row payload, sketch sidecars, master
+    /// codebook, and the `ram`/`ca90` backing), plus the live
+    /// queue-depth and per-lane deficit gauges. Dropped stores keep
+    /// their section — final counters stay readable — marked
+    /// `live: false` (their `memory` is `None`: the snapshot is gone).
     pub fn stats(&self) -> StatsSnapshot {
         let mut snap = self.shared.stats.snapshot();
         let mut total = super::cache::CacheCounters::default();
@@ -483,6 +518,12 @@ impl ServeEngine {
             section.cache = self.shared.registry.cache_of(id).map(|c| c.counters());
             section.epoch = self.shared.registry.epoch_of(id).unwrap_or(0);
             section.live = self.shared.registry.is_live(id);
+            section.memory = self.shared.registry.snapshot_of(id).map(|s| StoreMemory {
+                backing: s.backing_name(),
+                row_bytes: s.row_resident_bytes(),
+                sketch_bytes: s.sketch_resident_bytes(),
+                master_bytes: s.master_resident_bytes(),
+            });
             if let Some(c) = &section.cache {
                 total.merge(c);
                 any_cache = true;
@@ -621,6 +662,15 @@ mod tests {
         assert_eq!(snap.rejected, 0);
         assert_eq!(snap.stores.len(), 1, "single-store wrapper registers store 0");
         assert_eq!(snap.stores[0].completed, 8);
+        // live stores carry resident-memory telemetry from the registry
+        let mem = snap.stores[0].memory.expect("live store reports memory");
+        assert_eq!(mem.backing, "ram");
+        assert_eq!(mem.row_bytes, 32 * 1024 / 8, "sharded rows: 32 items x 1024 bits");
+        assert!(mem.master_bytes >= 32 * 1024 / 8, "master codebook holds the rows too");
+        assert_eq!(
+            mem.total_bytes(),
+            mem.row_bytes + mem.sketch_bytes + mem.master_bytes
+        );
         eng.shutdown();
     }
 
@@ -1071,6 +1121,10 @@ mod tests {
         let snap = eng.stats();
         assert!(!snap.stores[1].live, "tombstoned section keeps final counters");
         assert_eq!(snap.stores[1].completed, 1);
+        assert!(
+            snap.stores[1].memory.is_none(),
+            "dropped store's snapshot is gone, so no resident bytes"
+        );
         eng.shutdown();
     }
 

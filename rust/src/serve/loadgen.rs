@@ -63,7 +63,7 @@ use super::faults::FaultConfig;
 use super::net::{frame, NetClient, NetConfig, NetCounters, NetServer};
 use super::queue::{LaneGauge, Priority};
 use super::registry::{StoreId, StoreRegistry, StoreSpec};
-use super::stats::{LatencySummary, StageSummary, StatsSnapshot};
+use super::stats::{LatencySummary, StageSummary, StatsSnapshot, StoreMemory};
 use super::trace::{KernelWork, TraceEvent};
 use super::{RequestKind, RequestOp, ServeError, ServeRequest, ServeResponse};
 use crate::platform::Platform;
@@ -98,6 +98,38 @@ impl LoadMix {
     }
 }
 
+/// Row-storage mode for a bench store's master codebook.
+///
+/// `Ram` keeps every row materialized (the default, bandwidth-bound
+/// scans); `Ca90` keeps only per-item CA-90 seeds and regenerates rows
+/// chunk-by-chunk inside the scan loop (capacity-bound stores, ~dim/512
+/// less resident row memory). `--store-backing`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StoreBacking {
+    #[default]
+    Ram,
+    Ca90,
+}
+
+impl StoreBacking {
+    /// Stable lowercase label, matching `BinaryCodebook::backing_name`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreBacking::Ram => "ram",
+            StoreBacking::Ca90 => "ca90",
+        }
+    }
+
+    /// Parse a `--store-backing` flag value.
+    pub fn parse(s: &str) -> Option<StoreBacking> {
+        match s {
+            "ram" => Some(StoreBacking::Ram),
+            "ca90" => Some(StoreBacking::Ca90),
+            _ => None,
+        }
+    }
+}
+
 /// One tenant store's shape and traffic profile.
 #[derive(Debug, Clone)]
 pub struct StoreProfile {
@@ -126,6 +158,12 @@ pub struct StoreProfile {
     /// lane); `None` bounds the lane only by global queue capacity.
     /// `--store-quotas`.
     pub quota: Option<usize>,
+    /// Row-storage mode for the master codebook (`--store-backing`).
+    /// `Ca90` requires `dim` to be a positive multiple of 512.
+    pub backing: StoreBacking,
+    /// Coarse cascade prefix width in bits for sketched scans
+    /// (`--sketch-cascade`); `None` keeps the single-level sketch.
+    pub sketch_cascade: Option<usize>,
 }
 
 /// Fixture sizing (per-store problem shapes + shared request schedule).
@@ -169,7 +207,17 @@ impl Fixture {
             .stores
             .iter()
             .map(|p| {
-                let codebook = BinaryCodebook::random(&mut rng, p.items, p.dim);
+                let codebook = match p.backing {
+                    StoreBacking::Ram => BinaryCodebook::random(&mut rng, p.items, p.dim),
+                    // seeds-only rows: draw one FOLD_BITS seed per item and
+                    // let the scan loop rematerialize rows on demand
+                    StoreBacking::Ca90 => {
+                        let seeds: Vec<Vec<u64>> = (0..p.items)
+                            .map(|_| (0..crate::vsa::hypervector::FOLD_WORDS).map(|_| rng.next_u64()).collect())
+                            .collect();
+                        BinaryCodebook::ca90_from_seeds(&seeds, p.dim, None)
+                    }
+                };
                 let resonator = Resonator::new(
                     (0..p.fact_factors)
                         .map(|_| RealCodebook::random_bipolar(&mut rng, p.fact_items, p.fact_dim))
@@ -220,7 +268,8 @@ impl Fixture {
             if roll < cfg.mix.recall + cfg.mix.topk {
                 repeatable[si].push(requests.len());
                 let flips = (p.dim as f64 * cfg.noise_frac) as usize;
-                let mut query = sf.codebook.item(rng.below(p.items)).clone();
+                // materialize (not `.item()`): ca90 stores hold seeds only
+                let mut query = sf.codebook.materialize_item(rng.below(p.items));
                 for i in rng.sample_indices(p.dim, flips) {
                     query.set(i, !query.get(i));
                 }
@@ -261,6 +310,7 @@ impl Fixture {
                 // tenants earn proportionally more pops under backlog
                 weight: sf.profile.weight.max(1),
                 quota: sf.profile.quota,
+                sketch_cascade: sf.profile.sketch_cascade,
                 ..StoreSpec::default()
             };
             reg.register(
@@ -601,6 +651,8 @@ impl BenchOpts {
                     repeat_frac: 0.25,
                     sketch_bits: None,
                     quota: None,
+                    backing: StoreBacking::Ram,
+                    sketch_cascade: None,
                 }],
                 noise_frac: 0.2,
                 requests: 400,
@@ -652,6 +704,8 @@ impl BenchOpts {
                     repeat_frac: 0.25,
                     sketch_bits: None,
                     quota: None,
+                    backing: StoreBacking::Ram,
+                    sketch_cascade: None,
                 }],
                 noise_frac: 0.2,
                 requests: 2000,
@@ -994,6 +1048,7 @@ fn chaos_flood(fixture: &Fixture, opts: &BenchOpts) -> ChaosReport {
                     .quota
                     .unwrap_or_else(|| (capacity / (2 * n)).max(1)),
             ),
+            sketch_cascade: sf.profile.sketch_cascade,
             ..StoreSpec::default()
         };
         reg.register(
@@ -1955,16 +2010,20 @@ fn lat_json(l: &Option<LatencySummary>) -> String {
     }
 }
 
-/// One per-class stage-latency decomposition block.
+/// One per-class stage-latency decomposition block. The `net_in` /
+/// `net_out` lanes cover only wire-borne requests (PR 10): `null` when
+/// every request of the class arrived in-process.
 fn stage_json(s: &StageSummary) -> String {
     format!(
-        "{{\"kind\": \"{}\", \"n\": {}, \"queue\": {}, \"batch\": {}, \"kernel\": {}, \"fill\": {}, \"total\": {}, \"stage_mean_sum_s\": {:e}}}",
+        "{{\"kind\": \"{}\", \"n\": {}, \"queue\": {}, \"batch\": {}, \"kernel\": {}, \"fill\": {}, \"net_in\": {}, \"net_out\": {}, \"total\": {}, \"stage_mean_sum_s\": {:e}}}",
         s.kind.label(),
         s.n,
         lat_json(&s.queue),
         lat_json(&s.batch),
         lat_json(&s.kernel),
         lat_json(&s.fill),
+        lat_json(&s.net_in),
+        lat_json(&s.net_out),
         lat_json(&s.total),
         s.stage_mean_sum_s()
     )
@@ -1973,6 +2032,23 @@ fn stage_json(s: &StageSummary) -> String {
 fn stages_json(stages: &[StageSummary]) -> String {
     let body: Vec<String> = stages.iter().map(stage_json).collect();
     format!("[{}]", body.join(", "))
+}
+
+/// Per-store resident-memory block (PR 10): what the live snapshot
+/// actually holds — materialized rows or CA-90 seeds, sketch levels,
+/// and the master copy. `null` for stores dropped before the snapshot.
+fn memory_json(m: &Option<StoreMemory>) -> String {
+    match m {
+        Some(m) => format!(
+            "{{\"backing\": \"{}\", \"row_bytes\": {}, \"sketch_bytes\": {}, \"master_bytes\": {}, \"total_bytes\": {}}}",
+            m.backing,
+            m.row_bytes,
+            m.sketch_bytes,
+            m.master_bytes,
+            m.total_bytes()
+        ),
+        None => "null".into(),
+    }
 }
 
 /// Queue gauges: global depth plus one block per store lane.
@@ -2126,12 +2202,14 @@ impl BenchReport {
         };
         let prune_json = |p: &crate::vsa::PruneStats| {
             format!(
-                "{{\"items\": {}, \"sketch_rejected\": {}, \"early_terminated\": {}, \"words_streamed\": {}, \"words_total\": {}, \"sketch_reject_rate\": {:.4}, \"words_frac\": {:.4}}}",
+                "{{\"items\": {}, \"coarse_rejected\": {}, \"sketch_rejected\": {}, \"early_terminated\": {}, \"words_streamed\": {}, \"words_total\": {}, \"coarse_reject_rate\": {:.4}, \"sketch_reject_rate\": {:.4}, \"words_frac\": {:.4}}}",
                 p.items,
+                p.coarse_rejected,
                 p.sketch_rejected,
                 p.early_terminated,
                 p.words_streamed,
                 p.words_total,
+                p.coarse_reject_rate(),
                 p.sketch_reject_rate(),
                 p.words_frac()
             )
@@ -2174,7 +2252,7 @@ impl BenchReport {
         // legacy single-store config fields report store 0 (the hottest
         // tenant); the per-store truth is in the "stores" array below
         out.push_str(&format!(
-            "  \"config\": {{\"requests\": {}, \"clients\": {}, \"workers\": {}, \"shards\": {}, \"scan_threads\": {}, \"max_batch\": {}, \"max_delay_us\": {}, \"queue_capacity\": {}, \"items\": {}, \"dim\": {}, \"mix\": \"{}:{}:{}\", \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"cache_capacity\": {}, \"cache_shards\": {}, \"stores\": {}, \"seed\": {}}},\n",
+            "  \"config\": {{\"requests\": {}, \"clients\": {}, \"workers\": {}, \"shards\": {}, \"scan_threads\": {}, \"max_batch\": {}, \"max_delay_us\": {}, \"queue_capacity\": {}, \"items\": {}, \"dim\": {}, \"mix\": \"{}:{}:{}\", \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"backing\": \"{}\", \"sketch_cascade\": {}, \"cache_capacity\": {}, \"cache_shards\": {}, \"stores\": {}, \"seed\": {}}},\n",
             f.requests,
             self.opts.clients,
             e.workers,
@@ -2190,6 +2268,11 @@ impl BenchReport {
             f.mix.factorize,
             base.repeat_frac,
             match e.sketch_bits {
+                Some(b) => b.to_string(),
+                None => "null".into(),
+            },
+            base.backing.name(),
+            match base.sketch_cascade {
                 Some(b) => b.to_string(),
                 None => "null".into(),
             },
@@ -2336,7 +2419,7 @@ impl BenchReport {
         for (i, section) in self.stats.stores.iter().enumerate() {
             let profile = f.stores.get(i);
             out.push_str(&format!(
-                "    {{\"id\": {}, \"name\": \"{}\", \"epoch\": {}, \"live\": {}, \"simd\": \"{simd_tier}\", \"store_count\": {}, \"dim\": {}, \"items\": {}, \"weight\": {}, \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"quota\": {}, \"completed\": {}, \"rejected_tenant\": {}, \"expired_dropped\": {}, \"degraded\": {}, \"internal\": {}, \"latency\": {}, \"shards\": {}, \"prune\": {}, \"cache\": {}}}{}\n",
+                "    {{\"id\": {}, \"name\": \"{}\", \"epoch\": {}, \"live\": {}, \"simd\": \"{simd_tier}\", \"store_count\": {}, \"dim\": {}, \"items\": {}, \"weight\": {}, \"repeat_frac\": {:.3}, \"sketch_bits\": {}, \"sketch_cascade\": {}, \"backing\": \"{}\", \"memory\": {}, \"quota\": {}, \"completed\": {}, \"rejected_tenant\": {}, \"expired_dropped\": {}, \"degraded\": {}, \"internal\": {}, \"latency\": {}, \"shards\": {}, \"prune\": {}, \"cache\": {}}}{}\n",
                 section.id.index(),
                 section.name,
                 section.epoch,
@@ -2349,6 +2432,16 @@ impl BenchReport {
                 profile
                     .and_then(|p| p.sketch_bits)
                     .map_or("null".into(), |b| b.to_string()),
+                profile
+                    .and_then(|p| p.sketch_cascade)
+                    .map_or("null".into(), |b| b.to_string()),
+                // backing as the live snapshot reports it; fall back to
+                // the profile for stores dropped before the snapshot
+                section
+                    .memory
+                    .map(|m| m.backing)
+                    .unwrap_or_else(|| profile.map_or("ram", |p| p.backing.name())),
+                memory_json(&section.memory),
                 profile
                     .and_then(|p| p.quota)
                     .map_or("null".into(), |q| q.to_string()),
@@ -2538,6 +2631,8 @@ mod tests {
             repeat_frac: 0.0,
             sketch_bits: None,
             quota: None,
+            backing: StoreBacking::Ram,
+            sketch_cascade: None,
         }
     }
 
@@ -2582,6 +2677,45 @@ mod tests {
         assert_eq!(report.rejected, 0);
         assert_eq!(report.expired, 0);
         assert_eq!(report.mismatches, 0, "batched responses diverged from oracle");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn ca90_backed_store_with_cascade_matches_oracle_bit_exactly() {
+        // the full serve path on a seeds-only store with the two-level
+        // sketch cascade enabled: answers stay bit-exact against the
+        // sequential oracle, and the stats snapshot shows the compressed
+        // row footprint (seeds, not materialized rows)
+        let mut cfg = tiny_fixture();
+        cfg.stores[0].dim = 1024;
+        cfg.stores[0].backing = StoreBacking::Ca90;
+        cfg.stores[0].sketch_bits = Some(256);
+        cfg.stores[0].sketch_cascade = Some(128);
+        let fixture = Fixture::build(cfg);
+        assert!(fixture.stores[0].codebook.is_ca90());
+        let ecfg = EngineConfig {
+            workers: 2,
+            shards: 2,
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            ..EngineConfig::default()
+        };
+        let engine = ServeEngine::start_registry(fixture.registry(&ecfg), ecfg)
+            .expect("spawn serve workers");
+        let report = run_closed_loop(&engine, &fixture, 4, &fixture.oracle());
+        assert_eq!(report.ok, 60);
+        assert_eq!(report.mismatches, 0, "ca90 + cascade diverged from oracle");
+        let stats = engine.stats();
+        let mem = stats.stores[0].memory.expect("live store reports memory");
+        assert_eq!(mem.backing, "ca90");
+        // 24 seeds × 64 B each, vs 24 × 128 B materialized rows
+        assert!(
+            mem.row_bytes < 24 * 1024 / 8,
+            "seeds-only rows not compressed: {} bytes",
+            mem.row_bytes
+        );
+        assert!(mem.sketch_bytes > 0, "cascade sketch levels resident");
+        assert!(stats.stores[0].prune.items > 0, "sketched scans ran");
         engine.shutdown();
     }
 

@@ -35,14 +35,23 @@
 
 use super::super::engine::ServeEngine;
 use super::super::queue::CompletionQueue;
-use super::super::ServeError;
+use super::super::registry::StoreId;
+use super::super::{RequestKind, ServeError};
 use super::frame::{self, Frame, RequestFrame};
+use std::collections::HashMap;
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Per-connection routing of in-flight wire ids to the `(store, class)`
+/// their request targeted. The reader inserts before submit, the writer
+/// removes at completion — so the encode + write span of each response
+/// can be attributed to the right `net_out` stage lane even for error
+/// outcomes (which carry no response payload to infer the class from).
+type TagRoutes = Mutex<HashMap<u64, (StoreId, RequestKind)>>;
 
 /// Read-poll quantum: reader threads wake at this cadence to check the
 /// stall clocks and the server stop flag, so reap latency is bounded by
@@ -280,15 +289,18 @@ fn serve_conn(
     let wr = Arc::new(Mutex::new(write_half));
     let cq = CompletionQueue::new();
     let inflight = Arc::new(AtomicUsize::new(0));
+    let tags: Arc<TagRoutes> = Arc::new(Mutex::new(HashMap::new()));
 
     let writer = {
         let cq = cq.clone();
         let wr = Arc::clone(&wr);
         let stats = Arc::clone(&stats);
         let inflight = Arc::clone(&inflight);
+        let engine = Arc::clone(&engine);
+        let tags = Arc::clone(&tags);
         std::thread::Builder::new()
             .name("nscog-net-writer".into())
-            .spawn(move || writer_loop(cq, wr, stats, inflight))
+            .spawn(move || writer_loop(cq, wr, stats, inflight, engine, tags))
     };
     let writer = match writer {
         Ok(h) => h,
@@ -298,7 +310,7 @@ fn serve_conn(
         }
     };
 
-    let teardown = reader_loop(&stream, &engine, &cfg, &stats, &stop, &wr, &cq, &inflight);
+    let teardown = reader_loop(&stream, &engine, &cfg, &stats, &stop, &wr, &cq, &inflight, &tags);
     match teardown {
         Teardown::Drain => {
             // bounded wait for the engine to finish what this connection
@@ -324,14 +336,27 @@ fn writer_loop(
     wr: Arc<Mutex<TcpStream>>,
     stats: Arc<NetStats>,
     inflight: Arc<AtomicUsize>,
+    engine: Arc<ServeEngine>,
+    tags: Arc<TagRoutes>,
 ) {
     while let Some(c) = cq.pop_blocking() {
         inflight.fetch_sub(1, Ordering::SeqCst);
+        let routed = tags
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .remove(&c.tag);
+        // bracket the outbound hop: response encode + socket write
+        let t0 = Instant::now();
         let bytes = match &c.outcome {
             Ok(resp) => frame::encode_response(c.tag, resp),
             Err(e) => frame::encode_error(c.tag, frame::error_code(*e)),
         };
-        if !write_frame(&wr, &bytes, &stats) {
+        let wrote = write_frame(&wr, &bytes, &stats);
+        if wrote {
+            if let Some((store, kind)) = routed {
+                engine.record_net_out(store, kind, t0.elapsed());
+            }
+        } else {
             // peer unwritable: stop flushing; the reader will observe
             // the dead socket and abort the connection
             break;
@@ -366,11 +391,17 @@ fn reader_loop(
     wr: &Mutex<TcpStream>,
     cq: &CompletionQueue,
     inflight: &AtomicUsize,
+    tags: &TagRoutes,
 ) -> Teardown {
     let mut stream = stream;
     let mut buf: Vec<u8> = Vec::new();
     let mut tmp = [0u8; 4096];
     let mut last_progress = Instant::now();
+    // When the first bytes of the frame currently being accumulated
+    // arrived — origin of the inbound wire span (socket accumulation +
+    // decode) attributed to that frame's request. `None` while the
+    // buffer sits empty between frames.
+    let mut frame_t0: Option<Instant> = None;
     loop {
         if stop.load(Ordering::SeqCst) {
             return Teardown::Drain;
@@ -380,6 +411,9 @@ fn reader_loop(
             Ok(n) => {
                 NetStats::bump(&stats.bytes_in, n as u64);
                 last_progress = Instant::now();
+                if buf.is_empty() {
+                    frame_t0 = Some(last_progress);
+                }
                 buf.extend_from_slice(&tmp[..n]);
                 loop {
                     match frame::decode_from(&buf) {
@@ -387,7 +421,14 @@ fn reader_loop(
                         Ok(Some((f, used))) => {
                             buf.drain(..used);
                             NetStats::bump(&stats.frames_in, 1);
-                            if !handle_frame(f, engine, cfg, stats, wr, cq, inflight) {
+                            let net_in = frame_t0
+                                .map(|t| t.elapsed())
+                                .unwrap_or(Duration::ZERO);
+                            // pipelined frames left in the buffer start
+                            // their span at this decode boundary
+                            frame_t0 = (!buf.is_empty()).then(Instant::now);
+                            if !handle_frame(f, engine, cfg, stats, wr, cq, inflight, tags, net_in)
+                            {
                                 return Teardown::Abort;
                             }
                         }
@@ -427,6 +468,7 @@ fn reader_loop(
 }
 
 /// Handle one decoded frame; `false` aborts the connection.
+#[allow(clippy::too_many_arguments)]
 fn handle_frame(
     f: Frame,
     engine: &ServeEngine,
@@ -435,6 +477,8 @@ fn handle_frame(
     wr: &Mutex<TcpStream>,
     cq: &CompletionQueue,
     inflight: &AtomicUsize,
+    tags: &TagRoutes,
+    net_in: Duration,
 ) -> bool {
     let req = match f {
         Frame::Request(r) => r,
@@ -470,9 +514,14 @@ fn handle_frame(
         Duration::from_micros(deadline_us)
     };
     inflight.fetch_add(1, Ordering::SeqCst);
-    match engine.submit_with_completion(request, priority, deadline, cq, id) {
+    let route = (request.store, request.kind());
+    tags.lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .insert(id, route);
+    match engine.submit_with_completion_wire(request, priority, deadline, cq, id, net_in) {
         Ok(()) => true,
         Err(e) => {
+            tags.lock().unwrap_or_else(|p| p.into_inner()).remove(&id);
             inflight.fetch_sub(1, Ordering::SeqCst);
             if matches!(e, ServeError::Overloaded | ServeError::TenantOverloaded) {
                 NetStats::bump(&stats.refused, 1);
@@ -528,6 +577,21 @@ mod tests {
         assert_eq!(c.frames_out, 16);
         assert_eq!(c.protocol_errors, 0);
         srv.shutdown();
+        // after the writer joined, every wire request shows up in the
+        // net stage lanes: 16 inbound read+decode spans, 16 outbound
+        // encode+write spans, attributed to the recall class
+        let snap = eng.stats();
+        let recall = &snap.stages[RequestKind::Recall.index()];
+        let net_in = recall.net_in.expect("wire requests record net_in");
+        assert_eq!(net_in.n, 16);
+        assert!(net_in.mean_s > 0.0);
+        let net_out = recall.net_out.expect("flushed responses record net_out");
+        assert_eq!(net_out.n, 16);
+        assert!(net_out.mean_s > 0.0);
+        // the per-store mirror saw the same wire traffic
+        let st = &snap.stores[0].stages[RequestKind::Recall.index()];
+        assert_eq!(st.net_in.unwrap().n, 16);
+        assert_eq!(st.net_out.unwrap().n, 16);
         if let Ok(e) = Arc::try_unwrap(eng) {
             e.shutdown();
         }

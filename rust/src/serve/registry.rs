@@ -48,6 +48,8 @@ use std::fmt;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock, RwLockReadGuard};
 
+use crate::vsa::ca90;
+use crate::vsa::hypervector::{FOLD_BITS, FOLD_WORDS};
 use crate::vsa::{BinaryCodebook, BinaryHV, Resonator};
 
 /// Identifier of a registered store: its slot index in creation order.
@@ -84,6 +86,13 @@ pub struct StoreSpec {
     /// Sketch sidecar width for this store's shards (`None` = per-dim
     /// default, `Some(0)` disables the sidecars).
     pub sketch_bits: Option<usize>,
+    /// Hierarchical sketch-cascade coarse level width in bits for this
+    /// store's shards (`--sketch-cascade` serve knob). The coarse level
+    /// orders and bulk-rejects the scan tail before the full sketch
+    /// runs; rejections land in `PruneStats::coarse_rejected`. `None`
+    /// disables the cascade; ignored when the sketch itself is disabled
+    /// or no wider than the coarse level.
+    pub sketch_cascade: Option<usize>,
     /// This store's response-cache entry budget; 0 disables its cache.
     pub cache_capacity: usize,
     /// This store's response-cache lock shards.
@@ -127,6 +136,7 @@ impl Default for StoreSpec {
         StoreSpec {
             shards: 4,
             sketch_bits: None,
+            sketch_cascade: None,
             cache_capacity: cache.capacity,
             cache_shards: cache.shards,
             weight: 1,
@@ -229,6 +239,11 @@ pub enum MutateError {
     /// Deleting this item would leave the store empty (empty codebooks
     /// cannot be sharded or scanned; drop the store instead).
     WouldEmpty,
+    /// The store is CA-90 (seeds-only) backed and the inserted item is
+    /// not a CA-90 expansion of its own first fold — it cannot be
+    /// stored as a seed without changing its bits, which would break
+    /// the bit-exactness contract.
+    IncompressibleItem,
 }
 
 impl fmt::Display for MutateError {
@@ -239,6 +254,10 @@ impl fmt::Display for MutateError {
             MutateError::DimensionMismatch => write!(f, "item dimension differs from the store's"),
             MutateError::BadIndex => write!(f, "item index out of range"),
             MutateError::WouldEmpty => write!(f, "delete would leave the store empty"),
+            MutateError::IncompressibleItem => write!(
+                f,
+                "item is not a CA-90 expansion of its first fold (seeds-only store)"
+            ),
         }
     }
 }
@@ -270,8 +289,11 @@ impl StoreSnapshot {
         resonator: Option<Resonator>,
         spec: StoreSpec,
     ) -> StoreSnapshot {
-        let cleanup =
+        let mut cleanup =
             ShardedCleanup::partition_sketched(&codebook, spec.shards.max(1), spec.sketch_bits);
+        if let Some(bits) = spec.sketch_cascade {
+            cleanup.enable_cascade(bits);
+        }
         StoreSnapshot {
             id,
             epoch,
@@ -337,6 +359,35 @@ impl StoreSnapshot {
     /// (`None` when the store has no resonator).
     pub fn fact_dim(&self) -> Option<usize> {
         self.resonator.as_ref().map(|r| r.codebooks()[0].dim())
+    }
+
+    /// Row-storage backing of the serving shards (`"ram"` or `"ca90"`).
+    pub fn backing_name(&self) -> &'static str {
+        self.cleanup.backing_name()
+    }
+
+    /// Resident bytes of the serving rows across all shards: full rows
+    /// (ram) or 512-bit seed folds only (ca90).
+    pub fn row_resident_bytes(&self) -> usize {
+        self.cleanup.row_resident_bytes()
+    }
+
+    /// Resident bytes of the shards' sketch sidecars, cascade coarse
+    /// levels included.
+    pub fn sketch_resident_bytes(&self) -> usize {
+        self.cleanup.sketch_resident_bytes()
+    }
+
+    /// Resident bytes of the master (unsharded) codebook — the copy
+    /// mutations rebuild from and per-epoch oracles replay.
+    pub fn master_resident_bytes(&self) -> usize {
+        self.codebook.resident_bytes()
+    }
+
+    /// Total resident bytes for this snapshot: serving shards (rows +
+    /// sketch sidecars) plus the master copy.
+    pub fn resident_bytes(&self) -> usize {
+        self.row_resident_bytes() + self.sketch_resident_bytes() + self.master_resident_bytes()
     }
 }
 
@@ -531,6 +582,13 @@ impl StoreRegistry {
     /// edit, rebuild, and publish at `epoch + 1` — all under the write
     /// lock, so two racing mutations serialize and each publishes a
     /// distinct epoch.
+    ///
+    /// Seeds-only (ca90) stores materialize their rows for the edit and
+    /// re-compress afterwards — every row (including the edit's inserts)
+    /// must regenerate exactly from its first fold or the mutation is
+    /// refused with [`MutateError::IncompressibleItem`], keeping the
+    /// backing lossless. The transient materialization costs one full
+    /// row set, the same order as the snapshot rebuild itself.
     fn mutate_items(
         &self,
         id: StoreId,
@@ -540,10 +598,29 @@ impl StoreRegistry {
         let slot = slots.get_mut(id.0).ok_or(MutateError::UnknownStore)?;
         let current = slot.snapshot.as_ref().ok_or(MutateError::UnknownStore)?;
         let dim = current.dim();
-        let mut items = current.codebook().items().to_vec();
+        let ca90_backed = current.codebook().is_ca90();
+        let mut items = if ca90_backed {
+            (0..current.codebook().len())
+                .map(|i| current.codebook().materialize_item(i))
+                .collect()
+        } else {
+            current.codebook().items().to_vec()
+        };
         edit(&mut items, dim)?;
+        let codebook = if ca90_backed {
+            let mut seeds = Vec::with_capacity(items.len());
+            for it in &items {
+                let seed = it.words()[..FOLD_WORDS].to_vec();
+                if ca90::expand_vector(&seed, FOLD_BITS, dim) != *it {
+                    return Err(MutateError::IncompressibleItem);
+                }
+                seeds.push(seed);
+            }
+            BinaryCodebook::ca90_from_seeds(&seeds, dim, None)
+        } else {
+            BinaryCodebook::from_items_sketched(dim, items, None)
+        };
         let epoch = slot.epoch + 1;
-        let codebook = BinaryCodebook::from_items_sketched(dim, items, None);
         let resonator = current.resonator.clone();
         let next = StoreSnapshot::build(id, epoch, slot.name.clone(), codebook, resonator, slot.spec);
         slot.snapshot = Some(Arc::new(next));
@@ -840,6 +917,89 @@ mod tests {
         assert_eq!(all, (1..=32).collect::<Vec<u64>>(), "every publish got a distinct epoch");
         assert_eq!(reg.epoch_of(id), Some(32));
         assert_eq!(reg.snapshot_of(id).unwrap().len(), 4 + 32);
+    }
+
+    #[test]
+    fn ca90_store_mutations_stay_seeds_only() {
+        let mut rng = Rng::new(51);
+        let seeds: Vec<Vec<u64>> = (0..10)
+            .map(|_| (0..8).map(|_| rng.next_u64()).collect())
+            .collect();
+        let cb = BinaryCodebook::ca90_from_seeds(&seeds, 1024, None);
+        let mut reg = StoreRegistry::new();
+        let id = reg.register(
+            "compressed",
+            &cb,
+            None,
+            StoreSpec { shards: 2, ..StoreSpec::default() },
+        );
+        let snap = reg.snapshot_of(id).unwrap();
+        assert_eq!(snap.backing_name(), "ca90");
+        assert!(
+            snap.row_resident_bytes() < 10 * 1024 / 8,
+            "shards must hold seeds, not rows"
+        );
+        // an expansion of a fresh seed is compressible and admitted
+        let seed: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+        let item = crate::vsa::ca90::expand_vector(&seed, 512, 1024);
+        assert_eq!(reg.insert_item(id, item.clone()), Ok(1));
+        let snap = reg.snapshot_of(id).unwrap();
+        assert_eq!(snap.len(), 11);
+        assert!(snap.codebook().is_ca90(), "backing survives the rebuild");
+        assert_eq!(snap.codebook().materialize_item(10), item);
+        // an arbitrary vector cannot be stored as a seed losslessly
+        assert_eq!(
+            reg.insert_item(id, BinaryHV::random(&mut rng, 1024)),
+            Err(MutateError::IncompressibleItem)
+        );
+        assert_eq!(reg.epoch_of(id), Some(1), "refusal leaves the epoch alone");
+        // delete keeps the backing too
+        assert_eq!(reg.delete_item(id, 0), Ok(2));
+        assert!(reg.snapshot_of(id).unwrap().codebook().is_ca90());
+    }
+
+    #[test]
+    fn spec_cascade_applies_to_snapshot_shards_and_survives_mutation() {
+        let cb = codebook(52, 40, 8192);
+        let mut reg = StoreRegistry::new();
+        let id = reg.register(
+            "cascaded",
+            &cb,
+            None,
+            StoreSpec {
+                shards: 2,
+                sketch_cascade: Some(128),
+                ..StoreSpec::default()
+            },
+        );
+        let snap = reg.snapshot_of(id).unwrap();
+        for s in 0..snap.cleanup().n_shards() {
+            assert_eq!(
+                snap.cleanup().store().shard(s).sketch().unwrap().coarse_bits(),
+                128,
+                "shard {s}"
+            );
+        }
+        let no_casc = StoreSnapshot::build(
+            StoreId(9),
+            0,
+            "plain".into(),
+            cb.clone(),
+            None,
+            StoreSpec { shards: 2, ..StoreSpec::default() },
+        );
+        assert!(
+            snap.sketch_resident_bytes() > no_casc.sketch_resident_bytes(),
+            "coarse level adds resident sidecar bytes"
+        );
+        // cascade config rides the spec through mutation rebuilds
+        let mut rng = Rng::new(53);
+        reg.insert_item(id, BinaryHV::random(&mut rng, 8192)).unwrap();
+        let snap = reg.snapshot_of(id).unwrap();
+        assert_eq!(
+            snap.cleanup().store().shard(0).sketch().unwrap().coarse_bits(),
+            128
+        );
     }
 
     #[test]

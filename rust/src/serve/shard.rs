@@ -65,13 +65,19 @@ impl ShardedBinaryCodebook {
         let ranges = parallel::split_ranges(cb.len(), n_shards.max(1));
         let mut shards = Vec::with_capacity(ranges.len());
         let mut offsets = Vec::with_capacity(ranges.len());
+        // seeds-only sources stay seeds-only: each shard carries its seed
+        // sub-slice, never a materialized copy of the rows
+        let seeds = if cb.is_ca90() { Some(cb.seeds()) } else { None };
         for r in ranges {
             offsets.push(r.start);
-            shards.push(BinaryCodebook::from_items_sketched(
-                cb.dim(),
-                r.map(|i| cb.item(i).clone()).collect(),
-                sketch_bits,
-            ));
+            shards.push(match &seeds {
+                Some(sd) => BinaryCodebook::ca90_from_seeds(&sd[r], cb.dim(), sketch_bits),
+                None => BinaryCodebook::from_items_sketched(
+                    cb.dim(),
+                    r.map(|i| cb.item(i).clone()).collect(),
+                    sketch_bits,
+                ),
+            });
         }
         ShardedBinaryCodebook {
             shards,
@@ -79,6 +85,42 @@ impl ShardedBinaryCodebook {
             dim: cb.dim(),
             len: cb.len(),
         }
+    }
+
+    /// Whether every shard is CA-90 (seeds-only) backed.
+    pub fn is_ca90(&self) -> bool {
+        self.shards.iter().all(|s| s.is_ca90())
+    }
+
+    /// Stable backing name for telemetry (shards share one backing).
+    pub fn backing_name(&self) -> &'static str {
+        self.shards[0].backing_name()
+    }
+
+    /// Enable the hierarchical sketch cascade on every shard; true iff a
+    /// coarse level is now active on all shards with a sketch.
+    pub fn enable_cascade(&mut self, coarse_bits: usize) -> bool {
+        let mut any = false;
+        for shard in &mut self.shards {
+            any |= shard.enable_cascade(coarse_bits);
+        }
+        any
+    }
+
+    /// Resident bytes across all shards' rows (full rows or seed folds).
+    pub fn row_resident_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.row_resident_bytes()).sum()
+    }
+
+    /// Resident bytes across all shards' sketch sidecars (cascade
+    /// levels included).
+    pub fn sketch_resident_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.sketch_resident_bytes()).sum()
+    }
+
+    /// Total resident bytes (rows + sidecars) across all shards.
+    pub fn resident_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.resident_bytes()).sum()
     }
 
     pub fn n_shards(&self) -> usize {
@@ -413,6 +455,36 @@ impl ShardedCleanup {
         self.store.set_sketch_bits(sketch_bits);
     }
 
+    /// Enable the hierarchical sketch cascade on every shard.
+    pub fn enable_cascade(&mut self, coarse_bits: usize) -> bool {
+        self.store.enable_cascade(coarse_bits)
+    }
+
+    /// Whether the item store is CA-90 (seeds-only) backed.
+    pub fn is_ca90(&self) -> bool {
+        self.store.is_ca90()
+    }
+
+    /// Stable backing name for telemetry.
+    pub fn backing_name(&self) -> &'static str {
+        self.store.backing_name()
+    }
+
+    /// Resident bytes of the rows (full rows or seed folds).
+    pub fn row_resident_bytes(&self) -> usize {
+        self.store.row_resident_bytes()
+    }
+
+    /// Resident bytes of the sketch sidecars (cascade levels included).
+    pub fn sketch_resident_bytes(&self) -> usize {
+        self.store.sketch_resident_bytes()
+    }
+
+    /// Total resident bytes (rows + sidecars).
+    pub fn resident_bytes(&self) -> usize {
+        self.store.resident_bytes()
+    }
+
     /// Batched recall; result `q` is bit-identical to
     /// `CleanupMemory::recall(&queries[q])` on the unsharded codebook.
     pub fn recall_batch_timed(
@@ -596,6 +668,69 @@ mod tests {
                 assert_eq!(recalls[q], cm.recall(query), "bits={bits} q={q}");
             }
         }
+    }
+
+    #[test]
+    fn ca90_sharding_matches_ram_sharding_bit_for_bit() {
+        let mut rng = Rng::new(7);
+        let seeds: Vec<Vec<u64>> = (0..41)
+            .map(|_| (0..8).map(|_| rng.next_u64()).collect())
+            .collect();
+        let ca = BinaryCodebook::ca90_from_seeds(&seeds, 4096, Some(512));
+        let ram = ca.materialized();
+        let queries: Vec<BinaryHV> =
+            (0..9).map(|_| BinaryHV::random(&mut rng, 4096)).collect();
+        for n_shards in [1usize, 3, 6] {
+            let sc = ShardedBinaryCodebook::partition_sketched(&ca, n_shards, Some(512));
+            let sr = ShardedBinaryCodebook::partition_sketched(&ram, n_shards, Some(512));
+            assert!(sc.is_ca90());
+            assert_eq!(sc.backing_name(), "ca90");
+            assert!(!sr.is_ca90());
+            // shards hold seeds, not rows: 8x smaller at 4096/512
+            assert_eq!(sc.row_resident_bytes() * 8, sr.row_resident_bytes());
+            assert_eq!(sc.sketch_resident_bytes(), sr.sketch_resident_bytes());
+            for threads in [1usize, 2] {
+                let (na, _, _) = sc.nearest_batch_stats(&queries, threads);
+                let (nr, _, _) = sr.nearest_batch_stats(&queries, threads);
+                assert_eq!(na, nr, "shards={n_shards} threads={threads}");
+                let (ta, _, _) = sc.top_k_batch_stats(&queries, 4, threads);
+                let (tr, _, _) = sr.top_k_batch_stats(&queries, 4, threads);
+                assert_eq!(ta, tr, "shards={n_shards} threads={threads}");
+                for (q, query) in queries.iter().enumerate() {
+                    assert_eq!(na[q], ram.nearest(query), "q={q}");
+                    assert_eq!(ta[q], ram.top_k(query, 4), "q={q}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cascade_sharding_stays_bit_identical_and_tallies_coarse_rejects() {
+        let mut rng = Rng::new(8);
+        let cb = BinaryCodebook::random(&mut rng, 64, 8192);
+        let cm = CleanupMemory::new(cb.clone());
+        let mut sharded = ShardedCleanup::partition_sketched(&cb, 4, Some(512));
+        assert!(sharded.enable_cascade(128));
+        // noisy member queries: the distribution bulk rejection pays on
+        let queries: Vec<BinaryHV> = (0..8)
+            .map(|i| {
+                let mut q = cb.item(i * 7).clone();
+                for j in rng.sample_indices(8192, 800) {
+                    q.set(j, !q.get(j));
+                }
+                q
+            })
+            .collect();
+        let (recalls, _, prune) = sharded.recall_batch_stats(&queries, 2);
+        let (tops, _, _) = sharded.recall_topk_batch_stats(&queries, 3, 2);
+        for (q, query) in queries.iter().enumerate() {
+            assert_eq!(recalls[q], cm.recall(query), "q={q}");
+            assert_eq!(tops[q], cm.recall_topk(query, 3), "q={q}");
+        }
+        assert!(
+            prune.coarse_rejected > 0,
+            "cascade must bulk-reject on the coarse level: {prune:?}"
+        );
     }
 
     #[test]

@@ -127,6 +127,15 @@ struct StageAgg {
     kernel: StreamingLatency,
     fill: StreamingLatency,
     total: StreamingLatency,
+    /// Socket read + decode span preceding admission. Wire-borne
+    /// requests only — in-process submissions carry a 0.0 span and are
+    /// skipped, so this lane's count is the number of requests that
+    /// actually crossed the wire (≤ `total`'s count).
+    net_in: StreamingLatency,
+    /// Response encode + socket-write span, recorded *after* accounting
+    /// by [`ServeStats::record_net_out`] (responses are accounted before
+    /// they are written, so this cannot ride the per-batch sample).
+    net_out: StreamingLatency,
 }
 
 impl StageAgg {
@@ -137,6 +146,8 @@ impl StageAgg {
             kernel: StreamingLatency::new(),
             fill: StreamingLatency::new(),
             total: StreamingLatency::new(),
+            net_in: StreamingLatency::new(),
+            net_out: StreamingLatency::new(),
         }
     }
 
@@ -146,6 +157,9 @@ impl StageAgg {
         self.kernel.record(sample.kernel_s);
         self.fill.record(sample.fill_s);
         self.total.record(total_s);
+        if sample.net_in_s > 0.0 {
+            self.net_in.record(sample.net_in_s);
+        }
     }
 
     fn summary(&self, kind: RequestKind) -> StageSummary {
@@ -157,6 +171,8 @@ impl StageAgg {
             kernel: self.kernel.summary(),
             fill: self.fill.summary(),
             total: self.total.summary(),
+            net_in: self.net_in.summary(),
+            net_out: self.net_out.summary(),
         }
     }
 }
@@ -185,16 +201,60 @@ pub struct StageSummary {
     pub fill: Option<LatencySummary>,
     /// Admit → accounting (the end-to-end latency of the same requests).
     pub total: Option<LatencySummary>,
+    /// Socket read + frame decode span preceding admission. Counts only
+    /// wire-borne requests (its `n` ≤ this summary's `n`; `None` for a
+    /// purely in-process engine), and sits *outside* the admit-origin
+    /// window the other stages decompose — the wire hop the roofline
+    /// decomposition was blind to before.
+    pub net_in: Option<LatencySummary>,
+    /// Response encode + socket-write span following accounting. Counts
+    /// only responses actually written back over a connection.
+    pub net_out: Option<LatencySummary>,
 }
 
 impl StageSummary {
-    /// Sum of the four stage means — ≤ `total`'s mean by construction
-    /// (the decomposition never attributes more time than elapsed).
+    /// Sum of the four *in-process* stage means — ≤ `total`'s mean by
+    /// construction (the decomposition never attributes more time than
+    /// elapsed). Wire spans (`net_in`/`net_out`) are deliberately
+    /// excluded: they fall outside the admit → accounting window.
     pub fn stage_mean_sum_s(&self) -> f64 {
         [&self.queue, &self.batch, &self.kernel, &self.fill]
             .iter()
             .filter_map(|s| s.map(|x| x.mean_s))
             .sum()
+    }
+}
+
+/// Resident-memory telemetry for one store's live snapshot: what the
+/// row payload, pruning sidecars, and master codebook actually hold in
+/// memory. This is the bytes-resident side of the bytes-streamed story
+/// the scan [`PruneStats`] tell — a CA-90 seeds-only store shows a
+/// `row_bytes` that is `dim / FOLD_BITS` times smaller than its RAM
+/// twin while serving bit-identical answers. Layered on by
+/// [`super::engine::ServeEngine::stats`] from the registry's live
+/// snapshot; `None` in a bare [`ServeStats::snapshot`] or once the
+/// store is dropped.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StoreMemory {
+    /// Row-payload storage mode of the sharded scan codebooks:
+    /// `"ram"` (materialized rows) or `"ca90"` (per-item seed folds,
+    /// rows rematerialized inside the scan loop).
+    pub backing: &'static str,
+    /// Bytes held by the sharded row payload (all shards): materialized
+    /// rows for `"ram"`, seed folds for `"ca90"`.
+    pub row_bytes: usize,
+    /// Bytes held by the pruning sidecars across shards: full sketch
+    /// prefix blocks plus the coarse cascade level when enabled.
+    pub sketch_bytes: usize,
+    /// Bytes held by the store's unsharded master codebook (the mutation
+    /// / rebuild source; seeds-only when the backing is `"ca90"`).
+    pub master_bytes: usize,
+}
+
+impl StoreMemory {
+    /// Total resident bytes attributable to this store's item storage.
+    pub fn total_bytes(&self) -> usize {
+        self.row_bytes + self.sketch_bytes + self.master_bytes
     }
 }
 
@@ -413,6 +473,21 @@ impl ServeStats {
         }
     }
 
+    /// Response encode + socket-write span for one wire response,
+    /// stamped by `net::server` after the write completes. Responses are
+    /// accounted (and their slots filled) *before* the writer drains
+    /// them, so the outbound hop cannot ride [`ServeStats::record_batch`]
+    /// — it lands here, in the `net_out` lane of the same per-class /
+    /// per-store stage decomposition.
+    pub fn record_net_out(&self, store: StoreId, kind: RequestKind, secs: f64) {
+        let secs = secs.max(0.0);
+        let mut g = self.lock();
+        g.stages[kind.index()].net_out.record(secs);
+        if let Some(st) = g.stores.get_mut(store.index()) {
+            st.stages[kind.index()].net_out.record(secs);
+        }
+    }
+
     /// Requests refused without execution: unsupported kind, dimension
     /// mismatch, or an unknown store id.
     pub fn record_unsupported(&self, n: u64) {
@@ -458,6 +533,7 @@ impl ServeStats {
                 cache: None,
                 epoch: 0,
                 live: true,
+                memory: None,
             })
             .collect();
         // engine-wide aggregates: shard stats concatenated in store
@@ -549,6 +625,11 @@ pub struct StoreSnapshot {
     /// once dropped — its counters stay readable for post-mortems).
     /// Layered on by the engine; `true` from a bare snapshot.
     pub live: bool,
+    /// Resident-memory telemetry of the live snapshot (row payload,
+    /// sketch sidecars, master codebook) and its storage backing.
+    /// Layered on by the engine; `None` from a bare snapshot or once
+    /// the store is dropped.
+    pub memory: Option<StoreMemory>,
 }
 
 /// Point-in-time view of an engine's metrics.
@@ -614,6 +695,7 @@ mod tests {
             batch_s: batch * 1e-3,
             kernel_s: kernel * 1e-3,
             fill_s: fill * 1e-3,
+            net_in_s: 0.0,
         }
     }
 
@@ -662,6 +744,7 @@ mod tests {
         let st = ServeStats::new(&[("alpha", 2), ("beta", 1)]);
         let prune = PruneStats {
             items: 6,
+            coarse_rejected: 0,
             sketch_rejected: 1,
             early_terminated: 2,
             words_streamed: 40,
@@ -803,6 +886,67 @@ mod tests {
         // gauges default empty from a bare snapshot (engine layers them)
         assert_eq!(s.queue_depth, 0);
         assert!(s.lanes.is_empty());
+    }
+
+    #[test]
+    fn net_lanes_count_only_wire_borne_requests() {
+        let st = ServeStats::new(&[("wire", 1)]);
+        // one wire-borne request (pre-admit read span), one in-process
+        let wire_sample = StageSample {
+            net_in_s: 0.4e-3,
+            ..sample_ms(0.2, 0.1, 0.3, 0.05)
+        };
+        st.record_batch(
+            2,
+            &[
+                (
+                    StoreId(0),
+                    RequestKind::Recall,
+                    Duration::from_millis(2),
+                    wire_sample,
+                ),
+                (
+                    StoreId(0),
+                    RequestKind::Recall,
+                    Duration::from_millis(1),
+                    sample_ms(0.2, 0.1, 0.3, 0.05),
+                ),
+            ],
+            &[],
+        );
+        st.record_net_out(StoreId(0), RequestKind::Recall, 0.7e-3);
+        // defensive: out-of-range store still lands engine-wide,
+        // negative spans clamp to zero rather than corrupting the mean
+        st.record_net_out(StoreId(9), RequestKind::Recall, -1.0);
+        let s = st.snapshot();
+        let recall = &s.stages[RequestKind::Recall.index()];
+        assert_eq!(recall.n, 2);
+        let net_in = recall.net_in.unwrap();
+        assert_eq!(net_in.n, 1, "only the wire-borne request counts");
+        assert!((net_in.mean_s - 0.4e-3).abs() < 1e-9);
+        let net_out = recall.net_out.unwrap();
+        assert_eq!(net_out.n, 2);
+        assert!((net_out.max_s - 0.7e-3).abs() < 1e-9);
+        // wire spans stay out of the in-process decomposition sum
+        assert!(
+            recall.stage_mean_sum_s() <= recall.total.unwrap().mean_s + 1e-12,
+            "net lanes must not leak into the stage decomposition"
+        );
+        // per-store mirror: net_out for the known store counted once
+        let st0 = &s.stores[0].stages[RequestKind::Recall.index()];
+        assert_eq!(st0.net_in.unwrap().n, 1);
+        assert_eq!(st0.net_out.unwrap().n, 1);
+        // classes with no wire traffic stay None
+        assert!(s.stages[RequestKind::Factorize.index()].net_in.is_none());
+        // memory telemetry is engine-layered: bare snapshots carry None
+        assert!(s.stores[0].memory.is_none());
+        let mem = StoreMemory {
+            backing: "ca90",
+            row_bytes: 64,
+            sketch_bytes: 32,
+            master_bytes: 64,
+        };
+        assert_eq!(mem.total_bytes(), 160);
     }
 
     #[test]

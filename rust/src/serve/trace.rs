@@ -44,6 +44,12 @@ pub struct StageMarks {
     pub kernel_start: Option<Instant>,
     /// Batched kernel call returned.
     pub kernel_end: Option<Instant>,
+    /// Wire read + frame decode span, seconds, measured by the network
+    /// front-end *before* submit (0.0 for in-process callers). Stored as
+    /// a duration rather than an `Instant` pair because it ends where
+    /// `admit` begins — it sits outside the admit-origin window that the
+    /// other marks decompose.
+    pub net_in_s: f64,
 }
 
 impl StageMarks {
@@ -54,6 +60,7 @@ impl StageMarks {
             sealed: None,
             kernel_start: None,
             kernel_end: None,
+            net_in_s: 0.0,
         }
     }
 
@@ -61,6 +68,12 @@ impl StageMarks {
     pub fn mark_kernel(&mut self, start: Instant, end: Instant) {
         self.kernel_start = Some(start);
         self.kernel_end = Some(end);
+    }
+
+    /// Attribute the socket read + decode span that produced this
+    /// request (stamped by `net::server` before submit).
+    pub fn mark_net_in(&mut self, secs: f64) {
+        self.net_in_s = secs.max(0.0);
     }
 
     /// Collapse the marks into per-stage durations, with `now` standing
@@ -100,6 +113,7 @@ impl StageMarks {
             batch_s,
             kernel_s,
             fill_s,
+            net_in_s: self.net_in_s,
         }
     }
 }
@@ -115,11 +129,19 @@ pub struct StageSample {
     pub kernel_s: f64,
     /// Kernel-end → accounting/fill (response assembly, cache insert).
     pub fill_s: f64,
+    /// Socket read + decode span preceding admission (0.0 in-process).
+    /// Pre-admit wire time: part of what the *client* observes, but
+    /// outside the admit-origin window — see [`StageSample::sum`].
+    pub net_in_s: f64,
 }
 
 impl StageSample {
-    /// Sum of the four stages — by construction ≤ the end-to-end
-    /// latency of the same request.
+    /// Sum of the four in-process stages — by construction ≤ the
+    /// end-to-end latency (admit → accounting) of the same request.
+    /// Deliberately excludes [`StageSample::net_in_s`], which is spent
+    /// on the wire *before* the admit origin; the network front-end's
+    /// hop is aggregated separately (`StageAgg::net_in` /
+    /// `StageAgg::net_out` in [`super::stats`]).
     pub fn sum(&self) -> f64 {
         self.queue_s + self.batch_s + self.kernel_s + self.fill_s
     }
@@ -321,6 +343,24 @@ mod tests {
         assert_eq!(s.kernel_s, 0.0);
         assert!((s.fill_s - 40e-6).abs() < 1e-9);
         assert!(s.sum() <= now.saturating_duration_since(t0).as_secs_f64() + 1e-12);
+    }
+
+    #[test]
+    fn net_in_span_rides_marks_but_stays_out_of_sum() {
+        let t0 = Instant::now();
+        let mut m = StageMarks::new(t0);
+        assert_eq!(m.net_in_s, 0.0);
+        m.mark_net_in(250e-6);
+        m.popped = Some(t0 + Duration::from_micros(30));
+        let now = t0 + Duration::from_micros(100);
+        let s = m.sample_at(now);
+        assert!((s.net_in_s - 250e-6).abs() < 1e-12);
+        // The in-process invariant is unchanged: sum() is bounded by the
+        // admit-origin window even though the wire span exceeds it.
+        assert!(s.sum() <= now.saturating_duration_since(t0).as_secs_f64() + 1e-12);
+        // Negative wire spans (clock weirdness) clamp to zero.
+        m.mark_net_in(-1.0);
+        assert_eq!(m.net_in_s, 0.0);
     }
 
     #[test]

@@ -196,6 +196,20 @@ pub fn fmt_time(secs: f64) -> String {
     }
 }
 
+/// Format a byte count human-readably (B/KiB/MiB/GiB).
+pub fn fmt_bytes(bytes: usize) -> String {
+    let b = bytes as f64;
+    if b < 1024.0 {
+        format!("{bytes} B")
+    } else if b < 1024.0 * 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else if b < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.1} MiB", b / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
 /// Format an energy in joules (pJ/nJ/µJ/mJ/J).
 pub fn fmt_energy(j: f64) -> String {
     if j < 1e-9 {
@@ -245,6 +259,14 @@ mod tests {
         assert!(fmt_time(2.5e-6).contains("µs"));
         assert!(fmt_time(2.5e-3).contains("ms"));
         assert!(fmt_time(2.5).contains('s'));
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert!(fmt_bytes(8 * 1024).contains("KiB"));
+        assert!(fmt_bytes(3 * 1024 * 1024).contains("MiB"));
+        assert!(fmt_bytes(2 * 1024 * 1024 * 1024).contains("GiB"));
     }
 
     #[test]

@@ -56,18 +56,27 @@ pub fn expand_fold(seed: &[u64], fold_bits: usize, k: usize) -> Vec<u64> {
 /// the next in place, with **zero** intermediate allocations (the fused
 /// codebook-build path; see [`crate::vsa::BinaryCodebook::from_seeds`]).
 pub fn expand_vector(seed: &[u64], fold_bits: usize, dim: usize) -> BinaryHV {
+    let mut words = vec![0u64; dim / 64];
+    expand_into(seed, fold_bits, &mut words);
+    BinaryHV::from_words(dim, words)
+}
+
+/// [`expand_vector`] into a caller-held word buffer (`out.len() · 64`
+/// bits), so a scan loop can rematerialize rows one at a time through a
+/// single reused scratch row with zero per-item allocation — the
+/// seeds-only storage mode's exhaustive-scan core.
+pub fn expand_into(seed: &[u64], fold_bits: usize, out: &mut [u64]) {
+    let dim = out.len() * 64;
     assert_eq!(dim % fold_bits, 0);
     assert_eq!(fold_bits % 64, 0);
     let fw = fold_bits / 64;
     assert_eq!(seed.len(), fw);
     let n_folds = dim / fold_bits;
-    let mut words = vec![0u64; dim / 64];
-    words[..fw].copy_from_slice(seed);
+    out[..fw].copy_from_slice(seed);
     for k in 1..n_folds {
-        let (prev, rest) = words.split_at_mut(k * fw);
+        let (prev, rest) = out.split_at_mut(k * fw);
         ca90_step_into(&prev[(k - 1) * fw..], &mut rest[..fw], fold_bits);
     }
-    BinaryHV::from_words(dim, words)
 }
 
 #[cfg(test)]
@@ -134,6 +143,20 @@ mod tests {
         let hv = expand_vector(&seed, 512, 2048);
         let f2 = expand_fold(&seed, 512, 2);
         assert_eq!(&hv.words()[16..24], &f2[..]);
+    }
+
+    #[test]
+    fn expand_into_matches_expand_vector() {
+        let mut rng = Rng::new(4);
+        let seed: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+        let hv = expand_vector(&seed, 512, 4096);
+        let mut buf = vec![0u64; 4096 / 64];
+        expand_into(&seed, 512, &mut buf);
+        assert_eq!(hv.words(), &buf[..]);
+        // reuse the same buffer for a second item: fully overwritten
+        let seed2: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+        expand_into(&seed2, 512, &mut buf);
+        assert_eq!(expand_vector(&seed2, 512, 4096).words(), &buf[..]);
     }
 
     #[test]

@@ -27,10 +27,24 @@ fn insert_ranked<S: PartialOrd + Copy>(top: &mut Vec<(usize, S)>, i: usize, s: S
 
 /// A codebook of binary item vectors, carrying an optional
 /// [`BinarySketch`] prefilter sidecar for the bound-pruned scans.
+///
+/// Two storage backings share one scan contract:
+/// - **ram** (default): every row fully materialized in `items`;
+/// - **ca90** ([`Self::ca90_from_seeds`]): only the per-item 512-bit
+///   seed folds are resident (`seeds_flat`, item-major) and rows are
+///   regenerated fold-by-fold *inside* the bounded scan loops via
+///   [`ca90::ca90_step_into`] — compute traded for DRAM streaming, the
+///   paper's CA-90 co-design. Results are bit-identical across backings
+///   (same (score desc, index asc) total order, same `dim - 2·hamming`
+///   scores; see `rust/tests/remat_equivalence.rs`).
 #[derive(Debug, Clone)]
 pub struct BinaryCodebook {
     dim: usize,
     items: Vec<BinaryHV>,
+    /// `Some` = CA-90 seeds-only backing: `n_items · FOLD_WORDS` words,
+    /// item-major; `items` is empty then.
+    seeds_flat: Option<Vec<u64>>,
+    n_items: usize,
     sketch: Option<BinarySketch>,
 }
 
@@ -40,7 +54,8 @@ impl BinaryCodebook {
     /// stale).
     fn assemble(dim: usize, items: Vec<BinaryHV>) -> Self {
         let sketch = BinarySketch::build(&items, default_sketch_bits(dim));
-        BinaryCodebook { dim, items, sketch }
+        let n_items = items.len();
+        BinaryCodebook { dim, items, seeds_flat: None, n_items, sketch }
     }
 
     /// Generate `n` random item vectors of dimension `dim`.
@@ -63,11 +78,84 @@ impl BinaryCodebook {
     pub fn from_seeds(seeds: &[Vec<u64>], dim: usize) -> Self {
         let sketch =
             BinarySketch::build_from_seeds(seeds, FOLD_BITS, dim / 64, default_sketch_bits(dim));
-        let items = seeds
+        let items: Vec<BinaryHV> = seeds
             .iter()
             .map(|s| ca90::expand_vector(s, FOLD_BITS, dim))
             .collect();
-        BinaryCodebook { dim, items, sketch }
+        let n_items = items.len();
+        BinaryCodebook { dim, items, seeds_flat: None, n_items, sketch }
+    }
+
+    /// Seeds-only (CA-90 rematerialization) backing: keep just the
+    /// per-item seed folds resident and regenerate rows on demand inside
+    /// the scan loops. `dim` must be a positive multiple of
+    /// [`FOLD_BITS`] (the CA-90 expansion constraint). The sketch
+    /// sidecar is built straight from the seeds
+    /// ([`BinarySketch::build_from_seeds`]) at `sketch_bits` (`None` =
+    /// the per-dimension default), so nothing wider than the sidecar is
+    /// ever materialized at build time.
+    pub fn ca90_from_seeds(seeds: &[Vec<u64>], dim: usize, sketch_bits: Option<usize>) -> Self {
+        assert!(
+            dim >= FOLD_BITS && dim % FOLD_BITS == 0,
+            "ca90 backing requires dim to be a positive multiple of {FOLD_BITS} (got {dim})"
+        );
+        let bits = sketch_bits.unwrap_or_else(|| default_sketch_bits(dim));
+        let sketch = BinarySketch::build_from_seeds(seeds, FOLD_BITS, dim / 64, bits);
+        let mut flat = Vec::with_capacity(seeds.len() * FOLD_WORDS);
+        for s in seeds {
+            assert_eq!(s.len(), FOLD_WORDS);
+            flat.extend_from_slice(s);
+        }
+        BinaryCodebook {
+            dim,
+            items: Vec::new(),
+            seeds_flat: Some(flat),
+            n_items: seeds.len(),
+            sketch,
+        }
+    }
+
+    /// Whether this codebook is CA-90 (seeds-only) backed.
+    pub fn is_ca90(&self) -> bool {
+        self.seeds_flat.is_some()
+    }
+
+    /// Stable backing name for telemetry and the bench JSONs.
+    pub fn backing_name(&self) -> &'static str {
+        if self.is_ca90() { "ca90" } else { "ram" }
+    }
+
+    /// Materialize item `i`'s full row regardless of backing (allocates;
+    /// oracles and mutation paths only — scans never call this).
+    pub fn materialize_item(&self, i: usize) -> BinaryHV {
+        match &self.seeds_flat {
+            Some(flat) => ca90::expand_vector(
+                &flat[i * FOLD_WORDS..(i + 1) * FOLD_WORDS],
+                FOLD_BITS,
+                self.dim,
+            ),
+            None => self.items[i].clone(),
+        }
+    }
+
+    /// A fully materialized (ram-backed) twin with the same rows and
+    /// sketch width — the reference the remat property tests scan.
+    pub fn materialized(&self) -> BinaryCodebook {
+        match &self.seeds_flat {
+            Some(_) => {
+                let items: Vec<BinaryHV> =
+                    (0..self.n_items).map(|i| self.materialize_item(i)).collect();
+                let bits = self.sketch.as_ref().map(|s| s.bits()).unwrap_or(0);
+                let mut cb = Self::from_items_sketched(self.dim, items, Some(bits));
+                if let (Some(dst), Some(src)) = (cb.sketch.as_mut(), self.sketch.as_ref()) {
+                    if src.coarse_words() > 0 {
+                        dst.enable_cascade(src.coarse_bits());
+                    }
+                }
+                cb
+            }
+            None => self.clone(),
+        }
     }
 
     /// Build a codebook from pre-generated items, all of dimension `dim`
@@ -92,16 +180,35 @@ impl BinaryCodebook {
             None => Self::assemble(dim, items),
             Some(bits) => {
                 let sketch = BinarySketch::build(&items, bits);
-                BinaryCodebook { dim, items, sketch }
+                let n_items = items.len();
+                BinaryCodebook { dim, items, seeds_flat: None, n_items, sketch }
             }
         }
     }
 
     /// Rebuild the sketch sidecar at an explicit width (`--sketch-bits`
     /// serving knob); 0 or a width ≥ the row drops the sidecar, leaving
-    /// the pruned scans on incremental bounds alone.
+    /// the pruned scans on incremental bounds alone. Cascade state is
+    /// reset (re-enable via [`Self::enable_cascade`]).
     pub fn rebuild_sketch(&mut self, sketch_bits: usize) {
-        self.sketch = BinarySketch::build(&self.items, sketch_bits);
+        self.sketch = match &self.seeds_flat {
+            Some(flat) => {
+                let seeds: Vec<Vec<u64>> = flat.chunks(FOLD_WORDS).map(|s| s.to_vec()).collect();
+                BinarySketch::build_from_seeds(&seeds, FOLD_BITS, self.dim / 64, sketch_bits)
+            }
+            None => BinarySketch::build(&self.items, sketch_bits),
+        };
+    }
+
+    /// Enable the hierarchical sketch cascade at `coarse_bits` (see
+    /// [`BinarySketch::enable_cascade`]); returns whether a coarse level
+    /// is now active (requires an active sketch strictly wider than the
+    /// coarse level).
+    pub fn enable_cascade(&mut self, coarse_bits: usize) -> bool {
+        match self.sketch.as_mut() {
+            Some(sk) => sk.enable_cascade(coarse_bits),
+            None => false,
+        }
     }
 
     /// The prefilter sidecar, if one is active.
@@ -111,18 +218,22 @@ impl BinaryCodebook {
 
     /// Extract seed folds (fold 0 of each item) for compressed storage.
     pub fn seeds(&self) -> Vec<Vec<u64>> {
-        self.items
-            .iter()
-            .map(|hv| hv.words()[..FOLD_WORDS.min(hv.words().len())].to_vec())
-            .collect()
+        match &self.seeds_flat {
+            Some(flat) => flat.chunks(FOLD_WORDS).map(|s| s.to_vec()).collect(),
+            None => self
+                .items
+                .iter()
+                .map(|hv| hv.words()[..FOLD_WORDS.min(hv.words().len())].to_vec())
+                .collect(),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.n_items
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.n_items == 0
     }
 
     pub fn dim(&self) -> usize {
@@ -130,11 +241,45 @@ impl BinaryCodebook {
     }
 
     pub fn item(&self, i: usize) -> &BinaryHV {
+        assert!(
+            self.seeds_flat.is_none(),
+            "item(): ca90-backed codebook holds seeds only — use materialize_item()"
+        );
         &self.items[i]
     }
 
     pub fn items(&self) -> &[BinaryHV] {
+        assert!(
+            self.seeds_flat.is_none(),
+            "items(): ca90-backed codebook holds seeds only — use materialized()/seeds()"
+        );
         &self.items
+    }
+
+    /// Visit every row in index order as a word slice. The ram backing
+    /// borrows rows in place; the ca90 backing rematerializes each row
+    /// into one reused scratch buffer (a single allocation per call,
+    /// never per item). The exhaustive scans and batch paths funnel
+    /// through this so both backings share one loop body.
+    fn for_each_row<F: FnMut(usize, &[u64])>(&self, mut f: F) {
+        match &self.seeds_flat {
+            Some(flat) => {
+                let mut row = vec![0u64; self.dim / 64];
+                for i in 0..self.n_items {
+                    ca90::expand_into(
+                        &flat[i * FOLD_WORDS..(i + 1) * FOLD_WORDS],
+                        FOLD_BITS,
+                        &mut row,
+                    );
+                    f(i, &row);
+                }
+            }
+            None => {
+                for (i, it) in self.items.iter().enumerate() {
+                    f(i, it.words());
+                }
+            }
+        }
     }
 
     /// Dot-product scores of `query` against every item (allocating
@@ -147,13 +292,15 @@ impl BinaryCodebook {
 
     /// Nearest item index and its score (paper's e(y) = argmax d).
     pub fn nearest(&self, query: &BinaryHV) -> (usize, i64) {
+        let dim = self.dim as i64;
+        let qw = query.words();
         let mut best = (0usize, i64::MIN);
-        for (i, it) in self.items.iter().enumerate() {
-            let s = it.dot(query);
+        self.for_each_row(|i, row| {
+            let s = dim - 2 * xor_hamming(row, qw) as i64;
             if s > best.1 {
                 best = (i, s);
             }
-        }
+        });
         best
     }
 
@@ -167,17 +314,19 @@ impl BinaryCodebook {
         if k == 0 {
             return top;
         }
-        for (i, it) in self.items.iter().enumerate() {
-            let s = it.dot_bulk(query);
+        let dim = self.dim as i64;
+        let qw = query.words();
+        self.for_each_row(|i, row| {
+            let s = dim - 2 * xor_hamming(row, qw) as i64;
             // equal scores keep the earlier (smaller) index, matching
             // `nearest`'s first-wins tie rule
             if top.len() == k && s <= top[k - 1].1 {
-                continue;
+                return;
             }
             let pos = top.partition_point(|&(_, ts)| ts >= s);
             top.insert(pos, (i, s));
             top.truncate(k);
-        }
+        });
         top
     }
 
@@ -197,6 +346,9 @@ impl BinaryCodebook {
         top: &[(usize, i64)],
         stats: &mut PruneStats,
     ) -> Option<i64> {
+        if self.seeds_flat.is_some() {
+            return self.scan_item_bounded_ca90(i, qw, start_w, ham0, k, top, stats);
+        }
         let words = self.items[i].words();
         let n_words = words.len();
         let dim = self.dim as i64;
@@ -219,6 +371,58 @@ impl BinaryCodebook {
         Some(dim - 2 * ham as i64)
     }
 
+    /// [`Self::scan_item_bounded`] for the CA-90 backing: the row is never
+    /// resident, so each 512-bit fold is regenerated into a stack
+    /// ping-pong pair with [`ca90::ca90_step_into`] and consumed
+    /// immediately. The bound check runs between folds (the same
+    /// `PRUNE_CHUNK_WORDS = FOLD_WORDS` cadence as the ram path), so an
+    /// early-terminated item also stops *generating* — pruning saves
+    /// CA-90 steps here the way it saves DRAM reads on the ram backing.
+    /// `words_streamed` counts regenerated-and-consumed words, keeping
+    /// the `words_frac ≤ 1` roofline invariant comparable across
+    /// backings.
+    fn scan_item_bounded_ca90(
+        &self,
+        i: usize,
+        qw: &[u64],
+        start_w: usize,
+        ham0: u32,
+        k: usize,
+        top: &[(usize, i64)],
+        stats: &mut PruneStats,
+    ) -> Option<i64> {
+        let flat = self.seeds_flat.as_ref().expect("ca90 backing");
+        let n_words = self.dim / 64;
+        let n_folds = n_words / FOLD_WORDS;
+        let dim = self.dim as i64;
+        let mut state = [0u64; FOLD_WORDS];
+        let mut next = [0u64; FOLD_WORDS];
+        state.copy_from_slice(&flat[i * FOLD_WORDS..(i + 1) * FOLD_WORDS]);
+        let mut ham = ham0;
+        for f in 0..n_folds {
+            let w0 = f * FOLD_WORDS;
+            let w1 = w0 + FOLD_WORDS;
+            if w1 > start_w {
+                let lo = w0.max(start_w);
+                ham += xor_hamming(&state[lo - w0..], &qw[lo..w1]);
+                stats.words_streamed += (w1 - lo) as u64;
+                if w1 < n_words && top.len() == k {
+                    let ub = dim - 2 * ham as i64;
+                    let (kj, ks) = top[k - 1];
+                    if !(ub > ks || (ub == ks && i < kj)) {
+                        stats.early_terminated += 1;
+                        return None;
+                    }
+                }
+            }
+            if f + 1 < n_folds {
+                ca90::ca90_step_into(&state, &mut next, FOLD_BITS);
+                std::mem::swap(&mut state, &mut next);
+            }
+        }
+        Some(dim - 2 * ham as i64)
+    }
+
     /// Bound-pruned top-`k`: bit-identical to [`Self::top_k`] (same
     /// (score desc, index asc) order, same ties) while streaming fewer
     /// item words. Cascade: sketch pass over the contiguous sidecar →
@@ -234,10 +438,10 @@ impl BinaryCodebook {
     ) -> Vec<(usize, i64)> {
         assert_eq!(query.dim(), self.dim);
         let mut top: Vec<(usize, i64)> = Vec::with_capacity(k + 1);
-        if k == 0 || self.items.is_empty() {
+        if k == 0 || self.is_empty() {
             return top;
         }
-        let n = self.items.len();
+        let n = self.len();
         let n_words = self.dim / 64;
         let dim = self.dim as i64;
         let qw = query.words();
@@ -245,11 +449,22 @@ impl BinaryCodebook {
         stats.words_total += (n * n_words) as u64;
         if let Some(sk) = &self.sketch {
             let sw = sk.words_per_item();
+            // cascade: when a coarse level exists, order and bulk-reject
+            // on it (n·cw words instead of n·sw); survivors refine the
+            // coarse Hamming to the full sketch prefix one item at a time
+            let cw = sk.coarse_words();
             order.clear();
-            for i in 0..n {
-                order.push((xor_hamming(sk.row(i), &qw[..sw]), i as u32));
+            if cw > 0 {
+                for i in 0..n {
+                    order.push((xor_hamming(sk.coarse_row(i), &qw[..cw]), i as u32));
+                }
+                stats.words_streamed += (n * cw) as u64;
+            } else {
+                for i in 0..n {
+                    order.push((xor_hamming(sk.row(i), &qw[..sw]), i as u32));
+                }
+                stats.words_streamed += (n * sw) as u64;
             }
-            stats.words_streamed += (n * sw) as u64;
             // ascending prefix Hamming = descending upper bound; index
             // breaks ties deterministically
             order.sort_unstable();
@@ -261,14 +476,40 @@ impl BinaryCodebook {
                     let (kj, ks) = top[k - 1];
                     if ub < ks {
                         // sorted order: every later item bounds ≤ ub < ks
-                        stats.sketch_rejected += (order.len() - pos) as u64;
+                        let tail = (order.len() - pos) as u64;
+                        if cw > 0 {
+                            stats.coarse_rejected += tail;
+                        } else {
+                            stats.sketch_rejected += tail;
+                        }
                         break;
                     }
                     if !(ub > ks || i < kj) {
-                        stats.sketch_rejected += 1;
+                        if cw > 0 {
+                            stats.coarse_rejected += 1;
+                        } else {
+                            stats.sketch_rejected += 1;
+                        }
                         continue;
                     }
                 }
+                let hp = if cw > 0 {
+                    // coarse survivor: extend to the full sketch prefix
+                    // and re-check before streaming the row
+                    let h = hp + xor_hamming(&sk.row(i)[cw..], &qw[cw..sw]);
+                    stats.words_streamed += (sw - cw) as u64;
+                    if top.len() == k {
+                        let ub = dim - 2 * h as i64;
+                        let (kj, ks) = top[k - 1];
+                        if !(ub > ks || (ub == ks && i < kj)) {
+                            stats.sketch_rejected += 1;
+                            continue;
+                        }
+                    }
+                    h
+                } else {
+                    hp
+                };
                 if let Some(s) = self.scan_item_bounded(i, qw, sw, hp, k, &top, stats) {
                     if top.len() == k {
                         let (kj, ks) = top[k - 1];
@@ -318,10 +559,10 @@ impl BinaryCodebook {
         order: &mut Vec<(u32, u32)>,
     ) -> (usize, i64) {
         assert_eq!(query.dim(), self.dim);
-        if self.items.is_empty() {
+        if self.is_empty() {
             return (0, i64::MIN);
         }
-        let n = self.items.len();
+        let n = self.len();
         let n_words = self.dim / 64;
         let dim = self.dim as i64;
         let qw = query.words();
@@ -333,11 +574,19 @@ impl BinaryCodebook {
         let mut filled = 0usize;
         if let Some(sk) = &self.sketch {
             let sw = sk.words_per_item();
+            let cw = sk.coarse_words();
             order.clear();
-            for i in 0..n {
-                order.push((xor_hamming(sk.row(i), &qw[..sw]), i as u32));
+            if cw > 0 {
+                for i in 0..n {
+                    order.push((xor_hamming(sk.coarse_row(i), &qw[..cw]), i as u32));
+                }
+                stats.words_streamed += (n * cw) as u64;
+            } else {
+                for i in 0..n {
+                    order.push((xor_hamming(sk.row(i), &qw[..sw]), i as u32));
+                }
+                stats.words_streamed += (n * sw) as u64;
             }
-            stats.words_streamed += (n * sw) as u64;
             order.sort_unstable();
             for pos in 0..order.len() {
                 let (hp, iu) = order[pos];
@@ -346,14 +595,38 @@ impl BinaryCodebook {
                     let ub = dim - 2 * hp as i64;
                     let (bj, bs) = top1[0];
                     if ub < bs {
-                        stats.sketch_rejected += (order.len() - pos) as u64;
+                        let tail = (order.len() - pos) as u64;
+                        if cw > 0 {
+                            stats.coarse_rejected += tail;
+                        } else {
+                            stats.sketch_rejected += tail;
+                        }
                         break;
                     }
                     if !(ub > bs || i < bj) {
-                        stats.sketch_rejected += 1;
+                        if cw > 0 {
+                            stats.coarse_rejected += 1;
+                        } else {
+                            stats.sketch_rejected += 1;
+                        }
                         continue;
                     }
                 }
+                let hp = if cw > 0 {
+                    let h = hp + xor_hamming(&sk.row(i)[cw..], &qw[cw..sw]);
+                    stats.words_streamed += (sw - cw) as u64;
+                    if filled == 1 {
+                        let ub = dim - 2 * h as i64;
+                        let (bj, bs) = top1[0];
+                        if !(ub > bs || (ub == bs && i < bj)) {
+                            stats.sketch_rejected += 1;
+                            continue;
+                        }
+                    }
+                    h
+                } else {
+                    hp
+                };
                 if let Some(s) = self.scan_item_bounded(i, qw, sw, hp, 1, &top1[..filled], stats)
                 {
                     let (bj, bs) = top1[0];
@@ -447,7 +720,10 @@ impl BinaryCodebook {
     pub fn scores_into(&self, query: &BinaryHV, out: &mut Vec<i64>) {
         assert_eq!(query.dim(), self.dim);
         out.clear();
-        out.extend(self.items.iter().map(|it| it.dot_bulk(query)));
+        out.reserve(self.len());
+        let dim = self.dim as i64;
+        let qw = query.words();
+        self.for_each_row(|_, row| out.push(dim - 2 * xor_hamming(row, qw) as i64));
     }
 
     /// [`Self::scores_batch_with`] into caller-held buffers: once `out`'s
@@ -466,19 +742,29 @@ impl BinaryCodebook {
         }
         out.truncate(queries.len());
         while out.len() < queries.len() {
-            out.push(Vec::with_capacity(self.items.len()));
+            out.push(Vec::with_capacity(self.len()));
         }
         for o in out.iter_mut() {
             o.clear();
         }
+        let dim = self.dim as i64;
         let mut base = 0;
         while base < queries.len() {
             let end = (base + QUERY_BLOCK).min(queries.len());
-            for it in &self.items {
-                for b in base..end {
-                    out[b].push(it.dot_bulk(&queries[b]));
-                }
+            let nb = end - base;
+            // fixed-size query-pointer block: one row load feeds all
+            // `nb` accumulators in the SIMD kernel, zero heap churn
+            let mut qws: [&[u64]; QUERY_BLOCK] = [&[]; QUERY_BLOCK];
+            for (b, q) in queries[base..end].iter().enumerate() {
+                qws[b] = q.words();
             }
+            let mut hams = [0u32; QUERY_BLOCK];
+            self.for_each_row(|_, row| {
+                kernels::xor_hamming_block(row, &qws[..nb], &mut hams[..nb]);
+                for b in 0..nb {
+                    out[base + b].push(dim - 2 * hams[b] as i64);
+                }
+            });
             base = end;
         }
     }
@@ -495,16 +781,24 @@ impl BinaryCodebook {
         for q in queries {
             assert_eq!(q.dim(), self.dim);
         }
+        let dim = self.dim as i64;
         let parts = parallel::map_ranges(queries.len(), threads, |r| {
             let mut out: Vec<Vec<i64>> = Vec::with_capacity(r.len());
             for block in queries[r].chunks(QUERY_BLOCK) {
                 let base = out.len();
-                out.extend(block.iter().map(|_| Vec::with_capacity(self.items.len())));
-                for it in &self.items {
-                    for (b, q) in block.iter().enumerate() {
-                        out[base + b].push(it.dot_bulk(q));
-                    }
+                out.extend(block.iter().map(|_| Vec::with_capacity(self.len())));
+                let nb = block.len();
+                let mut qws: [&[u64]; QUERY_BLOCK] = [&[]; QUERY_BLOCK];
+                for (b, q) in block.iter().enumerate() {
+                    qws[b] = q.words();
                 }
+                let mut hams = [0u32; QUERY_BLOCK];
+                self.for_each_row(|_, row| {
+                    kernels::xor_hamming_block(row, &qws[..nb], &mut hams[..nb]);
+                    for b in 0..nb {
+                        out[base + b].push(dim - 2 * hams[b] as i64);
+                    }
+                });
             }
             out
         });
@@ -524,18 +818,26 @@ impl BinaryCodebook {
         for q in queries {
             assert_eq!(q.dim(), self.dim);
         }
+        let dim = self.dim as i64;
         let parts = parallel::map_ranges(queries.len(), threads, |r| {
             let mut out = Vec::with_capacity(r.len());
             for block in queries[r].chunks(QUERY_BLOCK) {
                 let mut best = vec![(0usize, i64::MIN); block.len()];
-                for (i, it) in self.items.iter().enumerate() {
-                    for (b, q) in block.iter().enumerate() {
-                        let s = it.dot_bulk(q);
+                let nb = block.len();
+                let mut qws: [&[u64]; QUERY_BLOCK] = [&[]; QUERY_BLOCK];
+                for (b, q) in block.iter().enumerate() {
+                    qws[b] = q.words();
+                }
+                let mut hams = [0u32; QUERY_BLOCK];
+                self.for_each_row(|i, row| {
+                    kernels::xor_hamming_block(row, &qws[..nb], &mut hams[..nb]);
+                    for b in 0..nb {
+                        let s = dim - 2 * hams[b] as i64;
                         if s > best[b].1 {
                             best[b] = (i, s);
                         }
                     }
-                }
+                });
                 out.extend(best);
             }
             out
@@ -551,6 +853,27 @@ impl BinaryCodebook {
     /// Memory footprint (bytes) when stored as CA-90 seeds only.
     pub fn compressed_bytes(&self) -> usize {
         self.len() * FOLD_BITS / 8
+    }
+
+    /// Bytes actually resident for this codebook's rows: full rows (ram)
+    /// or seed folds only (ca90). Excludes sketch sidecars — see
+    /// [`Self::sketch_resident_bytes`].
+    pub fn row_resident_bytes(&self) -> usize {
+        match &self.seeds_flat {
+            Some(flat) => flat.len() * 8,
+            None => self.items.len() * self.dim / 8,
+        }
+    }
+
+    /// Bytes resident for the sketch sidecar(s), cascade level included.
+    pub fn sketch_resident_bytes(&self) -> usize {
+        self.sketch.as_ref().map_or(0, |s| s.storage_bytes())
+    }
+
+    /// Total resident bytes (rows + sketch sidecars): the memory-axis
+    /// half of the CA-90 trade-off the serve bench reports.
+    pub fn resident_bytes(&self) -> usize {
+        self.row_resident_bytes() + self.sketch_resident_bytes()
     }
 }
 
@@ -1617,6 +1940,167 @@ mod tests {
         let qs = vec![RealHV::random_bipolar(&mut rng, 256)];
         let (batch, _) = small.to_pmf_batch_pruned_with(&qs, 1);
         assert_eq!(batch[0], small.to_pmf(&qs[0]));
+    }
+
+    #[test]
+    fn ca90_backing_matches_ram_twin_bit_for_bit() {
+        let mut rng = Rng::new(40);
+        let seeds: Vec<Vec<u64>> = (0..21)
+            .map(|_| (0..8).map(|_| rng.next_u64()).collect())
+            .collect();
+        let ca = BinaryCodebook::ca90_from_seeds(&seeds, 4096, Some(512));
+        assert!(ca.is_ca90());
+        assert_eq!(ca.backing_name(), "ca90");
+        assert_eq!(ca.len(), 21);
+        let ram = ca.materialized();
+        assert!(!ram.is_ca90());
+        assert_eq!(ram.len(), 21);
+        // seeds survive the round trip in both directions
+        assert_eq!(ca.seeds(), ram.seeds());
+        for i in 0..21 {
+            assert_eq!(ca.materialize_item(i), *ram.item(i), "item {i}");
+        }
+        // rows only resident as seeds: 8x smaller at 4096/512
+        assert_eq!(ca.row_resident_bytes() * 8, ram.row_resident_bytes());
+        // every scan entry point agrees bit-for-bit across backings
+        let mut queries: Vec<BinaryHV> =
+            (0..5).map(|_| BinaryHV::random(&mut rng, 4096)).collect();
+        queries.push(ram.item(13).clone()); // member query exercises pruning
+        let mut st_ca = PruneStats::default();
+        let mut st_ram = PruneStats::default();
+        for q in &queries {
+            assert_eq!(ca.nearest(q), ram.nearest(q));
+            assert_eq!(ca.scores(q), ram.scores(q));
+            for k in [1usize, 4, 21, 30] {
+                assert_eq!(ca.top_k(q, k), ram.top_k(q, k), "k={k}");
+                assert_eq!(
+                    ca.top_k_pruned(q, k, &mut st_ca),
+                    ram.top_k_pruned(q, k, &mut st_ram),
+                    "k={k}"
+                );
+            }
+            assert_eq!(ca.nearest_pruned(q, &mut st_ca), ram.nearest_pruned(q, &mut st_ram));
+        }
+        assert_eq!(st_ca.items, st_ram.items);
+        for threads in [1usize, 3] {
+            assert_eq!(
+                ca.nearest_batch_with(&queries, threads),
+                ram.nearest_batch_with(&queries, threads)
+            );
+            assert_eq!(
+                ca.scores_batch_with(&queries, threads),
+                ram.scores_batch_with(&queries, threads)
+            );
+            let (na, _) = ca.nearest_batch_pruned_with(&queries, threads);
+            let (nr, _) = ram.nearest_batch_pruned_with(&queries, threads);
+            assert_eq!(na, nr);
+        }
+        // no-sketch ca90 codebooks run the exhaustive-equivalent path
+        let bare = BinaryCodebook::ca90_from_seeds(&seeds, 1024, None);
+        assert!(bare.sketch().is_none());
+        let q = BinaryHV::random(&mut rng, 1024);
+        let mut st = PruneStats::default();
+        let twin = bare.materialized();
+        assert_eq!(bare.top_k_pruned(&q, 5, &mut st), twin.top_k(&q, 5));
+    }
+
+    #[test]
+    #[should_panic(expected = "ca90 backing requires dim")]
+    fn ca90_backing_rejects_unaligned_dim() {
+        let seeds = vec![vec![1u64; 8]];
+        BinaryCodebook::ca90_from_seeds(&seeds, 576, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "seeds only")]
+    fn ca90_backing_item_access_panics() {
+        let seeds = vec![vec![1u64; 8]];
+        let cb = BinaryCodebook::ca90_from_seeds(&seeds, 1024, None);
+        let _ = cb.item(0);
+    }
+
+    #[test]
+    fn cascade_pruned_matches_exhaustive_and_bulk_rejects() {
+        let mut rng = Rng::new(41);
+        // duplicates + member queries: ties and heavy pruning together
+        let a = BinaryHV::random(&mut rng, 8192);
+        let mut items = vec![a.clone(), a.clone()];
+        items.extend((0..62).map(|_| BinaryHV::random(&mut rng, 8192)));
+        let mut cb = BinaryCodebook::from_items(8192, items);
+        assert!(cb.enable_cascade(128));
+        assert_eq!(cb.sketch().unwrap().coarse_bits(), 128);
+        let mut stats = PruneStats::default();
+        let queries = [a.clone(), BinaryHV::random(&mut rng, 8192)];
+        for q in &queries {
+            assert_eq!(cb.nearest_pruned(q, &mut stats), cb.nearest(q));
+            let scores = cb.scores(q);
+            for k in [1usize, 2, 7, 64, 80] {
+                assert_eq!(
+                    cb.top_k_pruned(q, k, &mut stats),
+                    top_k_oracle(&scores, k),
+                    "k={k}"
+                );
+            }
+        }
+        assert!(
+            stats.coarse_rejected > 0,
+            "member queries must bulk-reject on the coarse level: {stats:?}"
+        );
+        assert!(stats.words_streamed <= stats.words_total);
+        // ca90 backing composes with the cascade
+        let mut ca = BinaryCodebook::ca90_from_seeds(&cb.seeds(), 8192, Some(512));
+        assert!(ca.enable_cascade(128));
+        let twin = ca.materialized();
+        assert_eq!(twin.sketch().unwrap().coarse_bits(), 128);
+        let mut st = PruneStats::default();
+        for q in &queries {
+            // note: seeds() of the duplicate-item book regenerates
+            // different rows (fold 0 only survives), so oracle against
+            // the ca90 book's own materialized twin
+            assert_eq!(
+                ca.top_k_pruned(q, 5, &mut st),
+                top_k_oracle(&twin.scores(q), 5)
+            );
+        }
+    }
+
+    #[test]
+    fn cascade_strictly_reduces_prefilter_words_on_easy_queries() {
+        let mut rng = Rng::new(42);
+        let cb_plain = BinaryCodebook::random(&mut rng, 96, 8192);
+        let mut cb_casc = BinaryCodebook::from_items(8192, cb_plain.items().to_vec());
+        assert!(cb_casc.enable_cascade(128));
+        let mut near = cb_plain.item(11).clone();
+        for j in rng.sample_indices(8192, 400) {
+            near.set(j, !near.get(j));
+        }
+        let mut st_plain = PruneStats::default();
+        let mut st_casc = PruneStats::default();
+        assert_eq!(
+            cb_casc.top_k_pruned(&near, 3, &mut st_casc),
+            cb_plain.top_k_pruned(&near, 3, &mut st_plain)
+        );
+        assert!(
+            st_casc.words_streamed < st_plain.words_streamed,
+            "cascade must stream fewer words than single-level sketch: \
+             cascade {} vs plain {}",
+            st_casc.words_streamed,
+            st_plain.words_streamed
+        );
+    }
+
+    #[test]
+    fn resident_bytes_accounts_rows_and_sidecars() {
+        let mut rng = Rng::new(43);
+        let mut cb = BinaryCodebook::random(&mut rng, 10, 4096);
+        let rows = 10 * 4096 / 8;
+        let sketch = 10 * 512 / 8;
+        assert_eq!(cb.resident_bytes(), rows + sketch);
+        assert!(cb.enable_cascade(128));
+        assert_eq!(cb.resident_bytes(), rows + sketch + 10 * 128 / 8);
+        let ca = BinaryCodebook::ca90_from_seeds(&cb.seeds(), 4096, Some(512));
+        assert_eq!(ca.row_resident_bytes(), 10 * 512 / 8);
+        assert_eq!(ca.resident_bytes(), 10 * 512 / 8 + sketch);
     }
 
     #[test]

@@ -229,6 +229,24 @@ mod scalar {
         a.iter().map(|w| w.count_ones()).sum()
     }
 
+    /// Query-blocked Hamming: one pass over `row`, accumulating the XOR
+    /// popcount against every query in the block (`out[j] +=` style
+    /// overwrite). The row word is loaded once per word position and
+    /// feeds all accumulators — the memory-bound scan's row fetch is
+    /// amortized across the batch. Integer partial sums, so the result
+    /// equals per-query [`xor_hamming`] exactly.
+    pub fn xor_hamming_block(row: &[u64], queries: &[&[u64]], out: &mut [u32]) {
+        debug_assert_eq!(queries.len(), out.len());
+        for o in out.iter_mut() {
+            *o = 0;
+        }
+        for (w, &rw) in row.iter().enumerate() {
+            for (j, q) in queries.iter().enumerate() {
+                out[j] += (rw ^ q[w]).count_ones();
+            }
+        }
+    }
+
     pub fn xor_into(dst: &mut [u64], src: &[u64]) {
         debug_assert_eq!(dst.len(), src.len());
         for (d, s) in dst.iter_mut().zip(src) {
@@ -354,6 +372,32 @@ mod x86 {
             total += a[k].count_ones();
         }
         total
+    }
+
+    /// Query-blocked Hamming (see the scalar tier): each 256-bit row
+    /// chunk is loaded once and XOR-popcounted against up to 8 block
+    /// queries whose accumulators stay in registers.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_hamming_block(row: &[u64], queries: &[&[u64]], out: &mut [u32]) {
+        let m = queries.len();
+        debug_assert!(m <= 8);
+        let n = row.len();
+        let chunks = n / 4;
+        let mut accs = [_mm256_setzero_si256(); 8];
+        for c in 0..chunks {
+            let vr = _mm256_loadu_si256(row.as_ptr().add(c * 4) as *const __m256i);
+            for (j, q) in queries.iter().enumerate() {
+                let vq = _mm256_loadu_si256(q.as_ptr().add(c * 4) as *const __m256i);
+                accs[j] = _mm256_add_epi64(accs[j], popcnt256(_mm256_xor_si256(vr, vq)));
+            }
+        }
+        for (j, q) in queries.iter().enumerate() {
+            let mut total = hsum_epi64(accs[j]);
+            for k in chunks * 4..n {
+                total += (row[k] ^ q[k]).count_ones();
+            }
+            out[j] = total;
+        }
     }
 
     #[target_feature(enable = "avx2")]
@@ -505,6 +549,32 @@ mod neon {
             total += a[k].count_ones();
         }
         total
+    }
+
+    /// Query-blocked Hamming (see the scalar tier): each 128-bit row
+    /// chunk is loaded once and popcounted against the whole block.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn xor_hamming_block(row: &[u64], queries: &[&[u64]], out: &mut [u32]) {
+        let m = queries.len();
+        debug_assert!(m <= 8);
+        let n = row.len();
+        let chunks = n / 2;
+        let mut accs = [0u32; 8];
+        for c in 0..chunks {
+            let vr = vld1q_u64(row.as_ptr().add(c * 2));
+            for (j, q) in queries.iter().enumerate() {
+                let vq = vld1q_u64(q.as_ptr().add(c * 2));
+                let cnt = vcntq_u8(vreinterpretq_u8_u64(veorq_u64(vr, vq)));
+                accs[j] += vaddlvq_u8(cnt) as u32;
+            }
+        }
+        for (j, q) in queries.iter().enumerate() {
+            let mut total = accs[j];
+            for k in chunks * 2..n {
+                total += (row[k] ^ q[k]).count_ones();
+            }
+            out[j] = total;
+        }
     }
 
     #[target_feature(enable = "neon")]
@@ -666,6 +736,40 @@ pub fn xor_hamming_tier(t: SimdTier, a: &[u64], b: &[u64]) -> u32 {
         scalar::xor_hamming(a, b),
         x86::xor_hamming(a, b),
         neon::xor_hamming(a, b)
+    )
+}
+
+/// Maximum block width [`xor_hamming_block`] accepts — matches the
+/// codebook scans' `QUERY_BLOCK` so one item-row load feeds a whole
+/// block of query accumulators held in registers.
+pub const HAMMING_BLOCK: usize = 8;
+
+/// Query-blocked Hamming: `out[j] = popcount(row XOR queries[j])` in one
+/// pass over `row`, so the (memory-bound) row fetch is amortized across
+/// the block. At most [`HAMMING_BLOCK`] queries per call; every query
+/// must be at least `row.len()` words. Integer partial sums → results
+/// are bit-identical to per-query [`xor_hamming`] on every tier.
+pub fn xor_hamming_block(row: &[u64], queries: &[&[u64]], out: &mut [u32]) {
+    assert!(queries.len() <= HAMMING_BLOCK);
+    assert_eq!(queries.len(), out.len());
+    dispatch!(
+        active_tier(),
+        scalar::xor_hamming_block(row, queries, out),
+        x86::xor_hamming_block(row, queries, out),
+        neon::xor_hamming_block(row, queries, out)
+    )
+}
+
+/// [`xor_hamming_block`] forced onto one tier (tests / A-B benches).
+pub fn xor_hamming_block_tier(t: SimdTier, row: &[u64], queries: &[&[u64]], out: &mut [u32]) {
+    assert!(queries.len() <= HAMMING_BLOCK);
+    assert_eq!(queries.len(), out.len());
+    let t = if t.is_supported() { t } else { SimdTier::Scalar };
+    dispatch!(
+        t,
+        scalar::xor_hamming_block(row, queries, out),
+        x86::xor_hamming_block(row, queries, out),
+        neon::xor_hamming_block(row, queries, out)
     )
 }
 
@@ -930,6 +1034,45 @@ mod tests {
                     if xor_hamming_tier(t, a, a) != 0 {
                         return Err(format!("xor_hamming(a,a) != 0 on {}", t.name()));
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn every_supported_tier_matches_per_query_on_blocked_hamming() {
+        forall_res(
+            9005,
+            40,
+            |r| {
+                // row lengths straddle the vector widths; block sizes
+                // cover 1..=HAMMING_BLOCK including ragged last blocks
+                let n = r.below(70);
+                let m = 1 + r.below(HAMMING_BLOCK);
+                let row: Vec<u64> = (0..n).map(|_| r.next_u64()).collect();
+                let queries: Vec<Vec<u64>> = (0..m)
+                    .map(|_| (0..n).map(|_| r.next_u64()).collect())
+                    .collect();
+                (row, queries)
+            },
+            |(row, queries)| {
+                let qrefs: Vec<&[u64]> = queries.iter().map(|q| q.as_slice()).collect();
+                let want: Vec<u32> = queries
+                    .iter()
+                    .map(|q| row.iter().zip(q).map(|(x, y)| (x ^ y).count_ones()).sum())
+                    .collect();
+                for t in available_tiers() {
+                    let mut out = vec![0u32; queries.len()];
+                    xor_hamming_block_tier(t, row, &qrefs, &mut out);
+                    if out != want {
+                        return Err(format!("xor_hamming_block diverged on {}", t.name()));
+                    }
+                }
+                let mut out = vec![0u32; queries.len()];
+                xor_hamming_block(row, &qrefs, &mut out);
+                if out != want {
+                    return Err("dispatched xor_hamming_block diverged".into());
                 }
                 Ok(())
             },

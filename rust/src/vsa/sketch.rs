@@ -56,6 +56,11 @@ pub fn default_sketch_bits(dim: usize) -> usize {
     }
 }
 
+/// Default cascade coarse-level width: two words (128 bits). At million-
+/// item scale the ordering pass then streams 2 words/item instead of 8,
+/// with the fine sketch consulted only for coarse survivors.
+pub const DEFAULT_CASCADE_BITS: usize = 128;
+
 /// Per-scan pruning telemetry: how much of the item memory a scan
 /// actually streamed versus what an exhaustive scan would have read.
 /// Units are `u64` words for binary scans and `f32` elements for real
@@ -64,6 +69,10 @@ pub fn default_sketch_bits(dim: usize) -> usize {
 pub struct PruneStats {
     /// Items considered across all scans.
     pub items: u64,
+    /// Items rejected on the cascade's coarse-level bound alone (neither
+    /// the fine sketch remainder nor the full row ever touched). Zero
+    /// when no cascade level is configured.
+    pub coarse_rejected: u64,
     /// Items rejected on the sketch bound alone (full row never touched).
     pub sketch_rejected: u64,
     /// Full-row scans abandoned mid-row by the incremental bound.
@@ -78,6 +87,7 @@ impl PruneStats {
     /// Fold another scan's counters into this one.
     pub fn merge(&mut self, other: &PruneStats) {
         self.items += other.items;
+        self.coarse_rejected += other.coarse_rejected;
         self.sketch_rejected += other.sketch_rejected;
         self.early_terminated += other.early_terminated;
         self.words_streamed += other.words_streamed;
@@ -88,6 +98,15 @@ impl PruneStats {
     pub fn sketch_reject_rate(&self) -> f64 {
         if self.items > 0 {
             self.sketch_rejected as f64 / self.items as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of items rejected by the cascade's coarse level alone.
+    pub fn coarse_reject_rate(&self) -> f64 {
+        if self.items > 0 {
+            self.coarse_rejected as f64 / self.items as f64
         } else {
             0.0
         }
@@ -113,6 +132,7 @@ impl PruneStats {
     pub fn delta_since(&self, earlier: &PruneStats) -> PruneStats {
         PruneStats {
             items: self.items.saturating_sub(earlier.items),
+            coarse_rejected: self.coarse_rejected.saturating_sub(earlier.coarse_rejected),
             sketch_rejected: self.sketch_rejected.saturating_sub(earlier.sketch_rejected),
             early_terminated: self.early_terminated.saturating_sub(earlier.early_terminated),
             words_streamed: self.words_streamed.saturating_sub(earlier.words_streamed),
@@ -129,6 +149,12 @@ impl PruneStats {
 pub struct BinarySketch {
     words_per_item: usize,
     block: Vec<u64>,
+    /// Cascade coarse level: the first `coarse_words` of each item
+    /// duplicated into their own contiguous block, so the ordering pass
+    /// streams `items · coarse_words` words instead of
+    /// `items · words_per_item`. 0 = no cascade (single-level sketch).
+    coarse_words: usize,
+    coarse_block: Vec<u64>,
 }
 
 impl BinarySketch {
@@ -148,6 +174,8 @@ impl BinarySketch {
         Some(BinarySketch {
             words_per_item,
             block,
+            coarse_words: 0,
+            coarse_block: Vec::new(),
         })
     }
 
@@ -193,7 +221,50 @@ impl BinarySketch {
         Some(BinarySketch {
             words_per_item,
             block,
+            coarse_words: 0,
+            coarse_block: Vec::new(),
         })
+    }
+
+    /// Enable the hierarchical cascade: duplicate each item's first
+    /// `coarse_bits` (rounded down to whole words) into a contiguous
+    /// coarse block that the scans' ordering/bulk-reject pass streams
+    /// instead of the full sketch. Returns `false` (cascade left off)
+    /// when the width is zero or not strictly narrower than the sketch —
+    /// a level as wide as the sketch would stream the same words twice
+    /// for nothing. Idempotent: re-enabling rebuilds the block.
+    pub fn enable_cascade(&mut self, coarse_bits: usize) -> bool {
+        let cw = coarse_bits / 64;
+        if cw == 0 || cw >= self.words_per_item {
+            self.coarse_words = 0;
+            self.coarse_block = Vec::new();
+            return false;
+        }
+        let n = self.block.len() / self.words_per_item;
+        let mut coarse = Vec::with_capacity(n * cw);
+        for i in 0..n {
+            let row = &self.block[i * self.words_per_item..i * self.words_per_item + cw];
+            coarse.extend_from_slice(row);
+        }
+        self.coarse_words = cw;
+        self.coarse_block = coarse;
+        true
+    }
+
+    /// Coarse-level words per item (0 = cascade off).
+    pub fn coarse_words(&self) -> usize {
+        self.coarse_words
+    }
+
+    /// Coarse-level bits per item (0 = cascade off).
+    pub fn coarse_bits(&self) -> usize {
+        self.coarse_words * 64
+    }
+
+    /// Item `i`'s coarse-level words. Panics when the cascade is off.
+    #[inline]
+    pub fn coarse_row(&self, i: usize) -> &[u64] {
+        &self.coarse_block[i * self.coarse_words..(i + 1) * self.coarse_words]
     }
 
     pub fn words_per_item(&self) -> usize {
@@ -211,9 +282,9 @@ impl BinarySketch {
         &self.block[i * self.words_per_item..(i + 1) * self.words_per_item]
     }
 
-    /// Sidecar memory footprint (bytes).
+    /// Sidecar memory footprint (bytes), cascade level included.
     pub fn storage_bytes(&self) -> usize {
-        self.block.len() * 8
+        (self.block.len() + self.coarse_block.len()) * 8
     }
 }
 
@@ -368,6 +439,32 @@ mod tests {
     }
 
     #[test]
+    fn cascade_rows_mirror_sketch_prefixes() {
+        let mut rng = Rng::new(11);
+        let items: Vec<BinaryHV> = (0..9).map(|_| BinaryHV::random(&mut rng, 4096)).collect();
+        let mut sk = BinarySketch::build(&items, 512).unwrap();
+        let flat_bytes = sk.storage_bytes();
+        assert!(sk.enable_cascade(DEFAULT_CASCADE_BITS));
+        assert_eq!(sk.coarse_words(), 2);
+        assert_eq!(sk.coarse_bits(), 128);
+        for (i, it) in items.iter().enumerate() {
+            assert_eq!(sk.coarse_row(i), &it.words()[..2]);
+            assert_eq!(sk.coarse_row(i), &sk.row(i)[..2]);
+        }
+        // duplicate coarse block accounted in the sidecar footprint
+        assert_eq!(sk.storage_bytes(), flat_bytes + 9 * 2 * 8);
+        // degenerate widths leave the cascade off: zero, sub-word, and
+        // a level not strictly narrower than the sketch
+        for bad in [0usize, 63, 512, 1024] {
+            assert!(!sk.enable_cascade(bad), "bits={bad}");
+            assert_eq!(sk.coarse_words(), 0);
+        }
+        // idempotent re-enable after a disable
+        assert!(sk.enable_cascade(128));
+        assert_eq!(sk.coarse_row(3), &items[3].words()[..2]);
+    }
+
+    #[test]
     fn real_sketch_norms_bound_the_suffix() {
         let mut rng = Rng::new(2);
         let items: Vec<RealHV> = (0..5)
@@ -409,6 +506,7 @@ mod tests {
     fn prune_stats_rates() {
         let mut a = PruneStats {
             items: 10,
+            coarse_rejected: 3,
             sketch_rejected: 4,
             early_terminated: 2,
             words_streamed: 50,
@@ -417,7 +515,9 @@ mod tests {
         let b = a;
         a.merge(&b);
         assert_eq!(a.items, 20);
+        assert_eq!(a.coarse_rejected, 6);
         assert!((a.sketch_reject_rate() - 0.4).abs() < 1e-12);
+        assert!((a.coarse_reject_rate() - 0.3).abs() < 1e-12);
         assert!((a.words_frac() - 0.5).abs() < 1e-12);
         assert_eq!(PruneStats::default().words_frac(), 0.0);
         // delta vs an earlier snapshot recovers the later contribution

@@ -107,6 +107,121 @@ fn binary_pruned_scans_equal_exhaustive_everywhere() {
     );
 }
 
+#[test]
+fn cascaded_pruned_scans_equal_exhaustive_everywhere() {
+    // the coarse level is a looser upper bound than the sketch, never a
+    // different order: enabling the cascade at any width — including
+    // widths that do not divide the sketch or the dim, widths as wide as
+    // the sketch (refused), and widths with no sidecar to hang off of —
+    // must leave every pruned result bit-identical to exhaustive across
+    // all four adversarial item distributions
+    forall_res(7006, 50, gen_binary, |(cb, queries, _mode)| {
+        let mut stats = PruneStats::default();
+        for (sketch_bits, coarse_bits) in [
+            (None, 128usize),     // default sidecar width per dim
+            (Some(256usize), 64), // narrowest coarse level
+            (Some(256), 128),
+            (Some(512), 192), // coarse not a power-of-two fraction
+            (Some(256), 256), // as wide as the sketch: must refuse
+            (Some(0), 128),   // no sidecar: cascade cannot engage
+        ] {
+            let mut cb = cb.clone();
+            if let Some(bits) = sketch_bits {
+                cb.rebuild_sketch(bits);
+            }
+            let engaged = cb.enable_cascade(coarse_bits);
+            // the codebook must forward the sketch's own engage predicate
+            let want = cb.sketch().is_some_and(|sk| {
+                coarse_bits / 64 > 0 && coarse_bits / 64 < sk.words_per_item()
+            });
+            if engaged != want {
+                return Err(format!(
+                    "cascade engage mismatch: got {engaged}, want {want} \
+                     (sketch {sketch_bits:?}, coarse {coarse_bits})"
+                ));
+            }
+            if engaged {
+                let sk = cb.sketch().unwrap();
+                if sk.coarse_bits() != (coarse_bits / 64) * 64 {
+                    return Err(format!(
+                        "coarse width not word-truncated: {} from {coarse_bits}",
+                        sk.coarse_bits()
+                    ));
+                }
+            }
+            for query in queries {
+                let scores = cb.scores(query);
+                if cb.nearest_pruned(query, &mut stats) != cb.nearest(query) {
+                    return Err(format!(
+                        "nearest diverged (sketch {sketch_bits:?}, coarse {coarse_bits})"
+                    ));
+                }
+                for k in [1usize, 2, 5, cb.len(), cb.len() + 4] {
+                    let want = top_k_oracle(&scores, k);
+                    let got = cb.top_k_pruned(query, k, &mut stats);
+                    if got != want {
+                        return Err(format!(
+                            "top_k diverged at k={k} (sketch {sketch_bits:?}, \
+                             coarse {coarse_bits}): {got:?} != {want:?}"
+                        ));
+                    }
+                }
+            }
+        }
+        // per-level ledger sanity: the three rejection classes are
+        // disjoint item outcomes, and streaming never exceeds exhaustive
+        if stats.coarse_rejected + stats.sketch_rejected + stats.early_terminated > stats.items {
+            return Err(format!("rejection classes overlap: {stats:?}"));
+        }
+        if stats.words_streamed > stats.words_total {
+            return Err(format!("streamed beyond exhaustive: {stats:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cascade_bulk_rejects_and_streams_fewer_words_on_near_duplicates() {
+    // near-duplicate member queries (2% noise) are the regime the coarse
+    // level targets: the best score sits close to dim, so the 128-bit
+    // prefix bound rejects nearly the whole tail and the cascade streams
+    // strictly fewer words than the single-level sketch at bit-identical
+    // results. (At heavy noise the coarse bound dim - 2·prefix_ham is
+    // vacuous — that regime is covered by the equivalence test above.)
+    let mut rng = Rng::new(7007);
+    let mut single = BinaryCodebook::random(&mut rng, 240, 8192);
+    single.rebuild_sketch(512);
+    let queries: Vec<BinaryHV> = (0..24)
+        .map(|i| flip_bits(single.item((i * 11) % 240), 0.02, &mut rng))
+        .collect();
+    let (base_res, base_stats) = single.nearest_batch_pruned_with(&queries, 1);
+    let mut casc = single.clone();
+    assert!(casc.enable_cascade(128), "cascade must engage under a 512b sketch");
+    let (casc_res, casc_stats) = casc.nearest_batch_pruned_with(&queries, 1);
+    assert_eq!(base_res, casc_res, "cascade changed answers");
+    for (q, query) in queries.iter().enumerate() {
+        assert_eq!(casc_res[q], single.nearest(query), "q={q}");
+    }
+    assert!(
+        casc_stats.coarse_rejected > 0,
+        "near-duplicate queries must coarse-reject: {casc_stats:?}"
+    );
+    assert!(
+        casc_stats.words_streamed < base_stats.words_streamed,
+        "cascade must stream strictly fewer words: cascade {} vs single {}",
+        casc_stats.words_streamed,
+        base_stats.words_streamed
+    );
+    assert!(casc_stats.coarse_rejected <= casc_stats.items);
+    assert!(
+        casc_stats.coarse_rejected + casc_stats.sketch_rejected + casc_stats.early_terminated
+            <= casc_stats.items,
+        "rejection classes overlap: {casc_stats:?}"
+    );
+    assert!(casc_stats.coarse_reject_rate() > 0.5, "{casc_stats:?}");
+    assert!(casc_stats.words_frac() < base_stats.words_frac());
+}
+
 fn gen_real(rng: &mut Rng) -> (RealCodebook, Vec<RealHV>) {
     let dims = [256usize, 512, 640, 1024, 1100, 1536];
     let dim = dims[rng.below(dims.len())];

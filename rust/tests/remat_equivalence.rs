@@ -1,0 +1,199 @@
+//! Property tests for the CA-90 rematerialized (seeds-only) store
+//! backing: every scan over a ca90 codebook must be bit-identical to the
+//! same scan over its fully materialized ram twin — across sketch
+//! widths, cascade on/off, duplicate seeds (exact ties), all-tie
+//! codebooks, k ≥ items, thread counts, and the sharded serve path —
+//! while holding ~dim/512 less resident row memory and never streaming
+//! more words than an exhaustive scan reads.
+
+use nscog::serve::ShardedCleanup;
+use nscog::util::prop::forall_res;
+use nscog::util::Rng;
+use nscog::vsa::hypervector::{FOLD_BITS, FOLD_WORDS};
+use nscog::vsa::{BinaryCodebook, BinaryHV, CleanupMemory, PruneStats};
+
+fn flip_bits(hv: &BinaryHV, frac: f64, rng: &mut Rng) -> BinaryHV {
+    let mut out = hv.clone();
+    let n = (hv.dim() as f64 * frac) as usize;
+    for i in rng.sample_indices(hv.dim(), n) {
+        out.set(i, !out.get(i));
+    }
+    out
+}
+
+/// CA-90 codebook plus its ram twin, in one of three seed distributions:
+/// 0 = independent random seeds, 1 = duplicate seeds (exact row ties —
+/// CA-90 expansion is deterministic, so equal seeds mean equal rows),
+/// 2 = all-tie (every seed identical). Sketch width and cascade state
+/// are sampled too, including the no-sidecar and refused-cascade shapes.
+fn gen_ca90(rng: &mut Rng) -> (BinaryCodebook, BinaryCodebook, Vec<BinaryHV>) {
+    // ca90 dims must be positive multiples of the 512-bit fold; include
+    // multi-fold dims so rematerialization really steps the CA
+    let dims = [512usize, 1024, 1536, 2048, 2560];
+    let dim = dims[rng.below(dims.len())];
+    let n = 1 + rng.below(24);
+    let mode = rng.below(3);
+    let fresh = |rng: &mut Rng| -> Vec<u64> { (0..FOLD_WORDS).map(|_| rng.next_u64()).collect() };
+    let seeds: Vec<Vec<u64>> = match mode {
+        0 => (0..n).map(|_| fresh(rng)).collect(),
+        1 => {
+            let base: Vec<Vec<u64>> = (0..(n / 3 + 1)).map(|_| fresh(rng)).collect();
+            (0..n).map(|_| base[rng.below(base.len())].clone()).collect()
+        }
+        _ => {
+            let s = fresh(rng);
+            vec![s; n]
+        }
+    };
+    let sketch_bits = [None, Some(128usize), Some(256), Some(0)][rng.below(4)];
+    let mut ca = BinaryCodebook::ca90_from_seeds(&seeds, dim, sketch_bits);
+    if rng.below(2) == 1 {
+        // 64 or 128-bit coarse level; silently refused when the sidecar
+        // is absent or not strictly wider — both shapes must stay exact
+        ca.enable_cascade(64 * (1 + rng.below(2)));
+    }
+    let ram = ca.materialized();
+    let queries: Vec<BinaryHV> = (0..4)
+        .map(|q| match q % 3 {
+            0 => BinaryHV::random(rng, dim),
+            1 => flip_bits(&ca.materialize_item(rng.below(n)), 0.2, rng),
+            // near-duplicate member: the coarse bulk-reject regime
+            _ => flip_bits(&ca.materialize_item(rng.below(n)), 0.02, rng),
+        })
+        .collect();
+    (ca, ram, queries)
+}
+
+#[test]
+fn remat_scans_equal_materialized_twin_everywhere() {
+    forall_res(7101, 50, gen_ca90, |(ca, ram, queries)| {
+        if !ca.is_ca90() || ram.is_ca90() {
+            return Err("backing flags inverted".into());
+        }
+        // the twin must preserve sketch width and cascade state, else the
+        // comparison below would exercise different prune paths
+        match (ca.sketch(), ram.sketch()) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                if a.bits() != b.bits() || a.coarse_bits() != b.coarse_bits() {
+                    return Err(format!(
+                        "twin sidecar drift: {}x{} vs {}x{}",
+                        a.bits(),
+                        a.coarse_bits(),
+                        b.bits(),
+                        b.coarse_bits()
+                    ));
+                }
+            }
+            _ => return Err("twin sidecar presence drift".into()),
+        }
+        let mut ca_stats = PruneStats::default();
+        let mut ram_stats = PruneStats::default();
+        for query in queries {
+            let want_nearest = ram.nearest(query);
+            if ca.nearest(query) != want_nearest {
+                return Err("exhaustive nearest diverged across backings".into());
+            }
+            if ca.nearest_pruned(query, &mut ca_stats) != want_nearest {
+                return Err("remat nearest_pruned diverged".into());
+            }
+            if ram.nearest_pruned(query, &mut ram_stats) != want_nearest {
+                return Err("ram nearest_pruned diverged".into());
+            }
+            for k in [1usize, 3, ca.len(), ca.len() + 2] {
+                let want = ram.top_k(query, k);
+                if ca.top_k(query, k) != want {
+                    return Err(format!("exhaustive top_k diverged at k={k}"));
+                }
+                if ca.top_k_pruned(query, k, &mut ca_stats) != want {
+                    return Err(format!("remat top_k_pruned diverged at k={k}"));
+                }
+            }
+        }
+        // regenerated words count as streamed words: the roofline
+        // accounting invariant holds on both backings
+        for (name, st) in [("ca90", &ca_stats), ("ram", &ram_stats)] {
+            if st.words_streamed > st.words_total {
+                return Err(format!("{name} streamed beyond exhaustive: {st:?}"));
+            }
+            if st.coarse_rejected + st.sketch_rejected + st.early_terminated > st.items {
+                return Err(format!("{name} rejection classes overlap: {st:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn remat_batch_and_sharded_paths_match_the_twin() {
+    forall_res(7102, 30, gen_ca90, |(ca, ram, queries)| {
+        for threads in [1usize, 2] {
+            let (n_ca, st_ca) = ca.nearest_batch_pruned_with(queries, threads);
+            let (n_ram, _) = ram.nearest_batch_pruned_with(queries, threads);
+            if n_ca != n_ram {
+                return Err(format!("batch nearest diverged (threads={threads})"));
+            }
+            let (k_ca, _) = ca.top_k_batch_pruned_with(queries, 3, threads);
+            let (k_ram, _) = ram.top_k_batch_pruned_with(queries, 3, threads);
+            if k_ca != k_ram {
+                return Err(format!("batch top_k diverged (threads={threads})"));
+            }
+            if st_ca.words_frac() > 1.0 + 1e-12 {
+                return Err(format!("remat words_frac above roofline: {st_ca:?}"));
+            }
+        }
+        // sharded serve path: seeds-only shards against the ram oracle
+        let cm = CleanupMemory::new(ram.clone());
+        for shards in [2usize, 3] {
+            let sharded = ShardedCleanup::partition(ca, shards);
+            if !sharded.is_ca90() {
+                return Err("sharding dropped the seeds-only backing".into());
+            }
+            let (recalls, _, _) = sharded.recall_batch_stats(queries, 2);
+            let (tops, _, _) = sharded.recall_topk_batch_stats(queries, 3, 2);
+            for (q, query) in queries.iter().enumerate() {
+                if recalls[q] != cm.recall(query) {
+                    return Err(format!("sharded recall diverged (shards={shards} q={q})"));
+                }
+                if tops[q] != cm.recall_topk(query, 3) {
+                    return Err(format!("sharded topk diverged (shards={shards} q={q})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn seeds_round_trip_and_memory_compression() {
+    let mut rng = Rng::new(7103);
+    for dim in [1024usize, 2048, 4096] {
+        let seeds: Vec<Vec<u64>> = (0..60)
+            .map(|_| (0..FOLD_WORDS).map(|_| rng.next_u64()).collect())
+            .collect();
+        let ca = BinaryCodebook::ca90_from_seeds(&seeds, dim, Some(256));
+        let ram = ca.materialized();
+        // seeds() must round-trip into an identical codebook
+        let again = BinaryCodebook::ca90_from_seeds(&ca.seeds(), dim, Some(256));
+        for i in 0..ca.len() {
+            assert_eq!(ca.materialize_item(i), again.materialize_item(i), "i={i}");
+            assert_eq!(ca.materialize_item(i), ram.item(i).clone(), "i={i}");
+        }
+        // resident row memory shrinks by exactly dim / FOLD_BITS; the
+        // sidecar is byte-identical (it is always materialized)
+        assert_eq!(
+            ram.row_resident_bytes(),
+            ca.row_resident_bytes() * (dim / FOLD_BITS),
+            "dim={dim}"
+        );
+        assert_eq!(ram.sketch_resident_bytes(), ca.sketch_resident_bytes());
+        assert_eq!(ca.backing_name(), "ca90");
+        assert_eq!(ram.backing_name(), "ram");
+        // item() must refuse on the seeds-only backing (loud failure
+        // beats silently handing out a seed prefix as a row)
+        let probe = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = ca.item(0);
+        }));
+        assert!(probe.is_err(), "item() must panic on ca90 backing");
+    }
+}

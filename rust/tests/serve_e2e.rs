@@ -9,7 +9,7 @@
 //! half-open peers reaped without touching live connections.
 
 use nscog::serve::loadgen::{
-    run_closed_loop, run_open_loop, Fixture, FixtureConfig, LoadMix, StoreProfile,
+    run_closed_loop, run_open_loop, Fixture, FixtureConfig, LoadMix, StoreBacking, StoreProfile,
 };
 use nscog::serve::queue::Priority;
 use nscog::serve::{
@@ -36,6 +36,8 @@ fn base_profile() -> StoreProfile {
         repeat_frac: 0.0,
         sketch_bits: None,
         quota: None,
+        backing: StoreBacking::Ram,
+        sketch_cascade: None,
     }
 }
 

@@ -7,7 +7,9 @@
 //! requests' end-to-end means in the stats snapshot, and the queue
 //! gauges must be layered into engine snapshots.
 
-use nscog::serve::loadgen::{run_closed_loop, Fixture, FixtureConfig, LoadMix, StoreProfile};
+use nscog::serve::loadgen::{
+    run_closed_loop, Fixture, FixtureConfig, LoadMix, StoreBacking, StoreProfile,
+};
 use nscog::serve::{EngineConfig, RequestKind, ServeEngine, TraceEvent};
 use std::time::Duration;
 
@@ -25,6 +27,8 @@ fn base_profile() -> StoreProfile {
         repeat_frac: 0.0,
         sketch_bits: None,
         quota: None,
+        backing: StoreBacking::Ram,
+        sketch_cascade: None,
     }
 }
 
